@@ -1,0 +1,47 @@
+//! Outlier analysis (paper §3 / Fig. 2): inspect the FFN input/output
+//! dynamic ranges and the structured outliers in the deepest encoder
+//! layer of a fine-tuned checkpoint.
+//!
+//!     cargo run --release --example outlier_analysis [-- <task>]
+
+use anyhow::Result;
+
+use tq::coordinator::diagnostics as diag;
+use tq::coordinator::experiments::load_ckpt;
+use tq::coordinator::Ctx;
+use tq::report::{bar_chart, bool_heatmap};
+
+fn main() -> Result<()> {
+    let task_name = std::env::args().nth(1).unwrap_or_else(|| "mnli".into());
+    let ctx = Ctx::new("artifacts", "checkpoints", "results")?;
+    let task = ctx.task(&task_name)?;
+    let params = load_ckpt(&ctx, &task)?;
+    let info = ctx.model_info(&task)?;
+    let layer = info.config.layers - 1;
+
+    let runs = diag::collect_taps(&ctx, &task, &params, 10)?;
+    let ex = &runs.examples[0];
+
+    for (name, site) in [("FFN input ", format!("layer{layer}.ln1_out")),
+                         ("FFN output", format!("layer{layer}.ffn_out"))] {
+        let t = &runs.per_seq[0][&site];
+        println!("\n{name} (layer {layer}): tensor range [{:.2}, {:.2}]", t.min(), t.max());
+        let (lo, hi) = diag::per_token_ranges(&runs.per_seq[0], &site, &ex.mask);
+        let ranges: Vec<f32> = lo.iter().zip(&hi).map(|(l, h)| h - l).collect();
+        let labels: Vec<String> = ex.ids.iter().take(ranges.len())
+            .map(|&id| if id == info.config.sep_id { "[SEP]".into() }
+                 else if id == info.config.cls_id { "[CLS]".into() }
+                 else { format!("tok{id}") })
+            .collect();
+        println!("{}", bar_chart(&ranges, 40, Some(&labels)));
+    }
+
+    println!("\n>6σ outlier map, FFN output, sequence 0 (rows = tokens):");
+    let (mask, rows, d) = diag::outlier_mask(&runs.per_seq[0], &format!("layer{layer}.ffn_out"));
+    println!("{}", bool_heatmap(&mask, rows, d, 128));
+
+    let dims = diag::consistent_outlier_dims(&runs, &format!("layer{layer}.ffn_out"), 6);
+    println!("consistent outlier dims across 10 sequences: {dims:?}");
+    println!("(installed by the aux loss at dims {:?})", info.config.outlier_dims);
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Quantization-aware training (paper §4): start from a PTQ-initialised
+//! state and train with STE fake-quant + LSQ learnable ranges through the
+//! AOT QAT train-step executable.
+//!
+//!     cargo run --release --example qat_finetune [-- <task> <steps≈epochs>]
+
+use anyhow::Result;
+
+use tq::coordinator::calibrate::{calibrate, CalibCfg};
+use tq::coordinator::experiments::load_ckpt;
+use tq::coordinator::train::{qat, qat_deployed_params, QatCfg};
+use tq::coordinator::Ctx;
+use tq::model::qconfig::{assemble_act_tensors, QuantPolicy};
+
+fn main() -> Result<()> {
+    let task_name = std::env::args().nth(1).unwrap_or_else(|| "rte".into());
+    let epochs: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let ctx = Ctx::new("artifacts", "checkpoints", "results")?;
+    let task = ctx.task(&task_name)?;
+    let info = ctx.model_info(&task)?;
+    let params = load_ckpt(&ctx, &task)?;
+
+    // PTQ init (paper: "initialize all quantization parameters from PTQ")
+    println!("calibrating PTQ init ...");
+    let calib = calibrate(&ctx, &task, &params, &CalibCfg::default())?;
+    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
+    let w8a8 = tq::coordinator::eval::evaluate(&ctx, &task, &params, &act)?;
+    println!("W8A8 PTQ before QAT: {w8a8:.2}");
+
+    println!("running QAT ({epochs} epoch(s); compiling the QAT graph takes ~3 min) ...");
+    let res = qat(&ctx, &task, &params, &act,
+                  &QatCfg { epochs, ..Default::default() })?;
+    println!("QAT losses: first {:.4}, last {:.4}",
+             res.losses.first().unwrap(), res.losses.last().unwrap());
+
+    let (qp, qact) = qat_deployed_params(info, &res, 8, 8)?;
+    let score = tq::coordinator::eval::evaluate(&ctx, &task, &qp, &qact)?;
+    println!("W8A8 QAT after {} steps: {score:.2}", res.losses.len());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load a fine-tuned checkpoint, calibrate, quantize with
+//! per-tensor W8A8 and with PEG (the paper's method), and compare scores.
+//!
+//! Run after `make build && target/release/repro finetune --tasks mnli`:
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use std::collections::BTreeMap;
+use tq::coordinator::experiments::{eval_config, load_ckpt, EvalConfig};
+use tq::coordinator::Ctx;
+use tq::model::qconfig::{assemble_act_tensors, QuantPolicy, SiteCfg};
+use tq::quant::Granularity;
+
+fn main() -> Result<()> {
+    let ctx = Ctx::new("artifacts", "checkpoints", "results")?;
+    let task = ctx.task("mnli")?;
+    let params = load_ckpt(&ctx, &task)?;
+    let info = ctx.model_info(&task)?;
+
+    // FP32 reference
+    let fp32_act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+    let fp32 = tq::coordinator::eval::evaluate(&ctx, &task, &params, &fp32_act)?;
+    println!("FP32                 : {fp32:.2}");
+
+    // naive per-tensor W8A8 (paper Table 1: collapses)
+    let w8a8 = eval_config(&ctx, &task, &params,
+                           &EvalConfig::new(QuantPolicy::uniform(8, 8)), 1)?;
+    println!("W8A8 per-tensor PTQ  : {w8a8:.2}");
+
+    // PEG with range-based permutation on the FFN sites (paper Table 5)
+    let peg_cfg = SiteCfg {
+        bits: 8,
+        granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+        enabled: true,
+    };
+    let mut policy = QuantPolicy::uniform(8, 8);
+    for fam in ["ln1_out", "ffn_out", "res2_sum"] {
+        policy = policy.with_site_family(info, fam, peg_cfg.clone());
+    }
+    let peg = eval_config(&ctx, &task, &params, &EvalConfig::new(policy), 1)?;
+    println!("W8A8 PEG-PTQ (K=8+P) : {peg:.2}");
+
+    println!(
+        "\nPEG recovers {:.0}% of the quantization gap",
+        100.0 * (peg - w8a8) / (fp32 - w8a8).max(1e-9)
+    );
+    Ok(())
+}

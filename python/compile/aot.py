@@ -1,0 +1,360 @@
+"""AOT export: lower every L2 graph to HLO *text* + emit a JSON manifest.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` via serialized
+protos) is the interchange format: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (all under artifacts/):
+    fwd_{cls,reg}_b{1,8}.hlo.txt      eval forward  -> (logits,)
+    diag_{cls,reg}_b1.hlo.txt         forward + FP32 taps for calibration,
+                                      range estimation, AdaRound & figures
+    diag_{large,distil,mobile}_b1     architecture-sweep diagnostics
+                                      (paper Fig. 10-13 analogues)
+    train_fp32_{cls,reg}_b16          Adam fine-tune step (+aux outlier loss)
+    train_qat_{cls,reg}_b16           QAT step (STE + learnable ranges)
+    kernel_peg_k{1,3,6,16}.hlo.txt    standalone PEG matmul (d=768) for the
+                                      re-scaling-overhead benches
+    kernel_fq_d768.hlo.txt            standalone fake-quant kernel
+    manifest.json                     machine-readable signatures for Rust
+
+The manifest pins the exact flat input/output ordering of every executable
+plus the model topology (param/site/weight-quantizer specs), so the Rust
+coordinator can assemble argument lists without re-deriving anything.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fake_quant, peg_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.int32 if dtype == I32 else jnp.float32)
+
+
+class Sig:
+    """Collects a flat (name, shape, dtype) input signature."""
+
+    def __init__(self):
+        self.inputs = []
+
+    def add(self, name, shape, dtype=F32):
+        self.inputs.append({"name": name, "shape": list(shape), "dtype": dtype})
+        return spec(shape, dtype)
+
+    def add_params(self, cfg, prefix="param."):
+        return [self.add(prefix + n, s) for n, s in M.param_spec(cfg)]
+
+
+def quant_input_shapes(cfg):
+    _, S = M.site_offsets(cfg)
+    n_sites = len(M.site_spec(cfg))
+    return S, n_sites
+
+
+def export_forward(cfg, batch, n_out, diag: bool, use_pallas=False):
+    """Forward (or diagnostic) graph + its signature.
+
+    use_pallas=True lowers the L1 Pallas kernels (interpret mode) into the
+    graph; the default lowers the numerically-identical jnp form, which XLA
+    CPU fuses ~3x faster (interpret-mode grid loops serialise on 1 core —
+    see EXPERIMENTS.md §Perf). Both paths are verified equal by
+    tests/test_model.py::test_pallas_and_jnp_paths_agree and the
+    fwd_cls_b1_pallas parity artifact.
+    """
+    hcfg = M.ModelConfig(**{**cfg.__dict__, "n_out": n_out})
+    S, n_sites = quant_input_shapes(hcfg)
+    sig = Sig()
+    p_specs = sig.add_params(hcfg)
+    a_s = sig.add("act_scales", (S,))
+    a_z = sig.add("act_zps", (S,))
+    a_c = sig.add("act_cfg", (n_sites, 3))
+    ids = sig.add("input_ids", (batch, hcfg.seq), I32)
+    tt = sig.add("token_type", (batch, hcfg.seq), I32)
+    mask = sig.add("attn_mask", (batch, hcfg.seq))
+
+    site_names = [n for n, _ in M.site_spec(hcfg)]
+
+    def fn(*flat):
+        np_ = len(M.param_spec(hcfg))
+        params = list(flat[:np_])
+        a_scales, a_zps, a_cfg, input_ids, token_type, attn_mask = flat[np_:]
+        logits, taps = M.forward(
+            hcfg, params, a_scales, a_zps, a_cfg,
+            input_ids, token_type, attn_mask,
+            collect_taps=diag, use_pallas=use_pallas)
+        if diag:
+            return (logits,) + tuple(taps[n] for n in site_names)
+        return (logits,)
+
+    flat_specs = p_specs + [a_s, a_z, a_c, ids, tt, mask]
+    lowered = jax.jit(fn).lower(*flat_specs)
+    outputs = [{"name": "logits", "shape": [batch, n_out], "dtype": F32}]
+    if diag:
+        # shapes of taps: re-derive by abstract eval
+        shapes = jax.eval_shape(fn, *flat_specs)
+        for n, sh in zip(site_names, shapes[1:]):
+            outputs.append({"name": "tap." + n, "shape": list(sh.shape),
+                            "dtype": F32})
+    return lowered, sig.inputs, outputs
+
+
+def export_train_fp32(cfg, batch, n_out, regression):
+    hcfg = M.ModelConfig(**{**cfg.__dict__, "n_out": n_out})
+    sig = Sig()
+    p = sig.add_params(hcfg, "param.")
+    m = sig.add_params(hcfg, "m.")
+    v = sig.add_params(hcfg, "v.")
+    ids = sig.add("input_ids", (batch, hcfg.seq), I32)
+    tt = sig.add("token_type", (batch, hcfg.seq), I32)
+    mask = sig.add("attn_mask", (batch, hcfg.seq))
+    labels = sig.add("labels", (batch,), F32 if regression else I32)
+    lr = sig.add("lr_eff", ())
+    lam = sig.add("aux_lambda", ())
+    tgt = sig.add("aux_target", ())
+
+    np_ = len(M.param_spec(hcfg))
+
+    def fn(*flat):
+        params = list(flat[:np_])
+        ms = list(flat[np_:2 * np_])
+        vs = list(flat[2 * np_:3 * np_])
+        ids_, tt_, mask_, labels_, lr_, lam_, tgt_ = flat[3 * np_:]
+        new_p, new_m, new_v, loss = M.fp32_train_step(
+            hcfg, params, ms, vs, ids_, tt_, mask_, labels_,
+            lr_, lam_, tgt_, regression=regression)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    flat_specs = p + m + v + [ids, tt, mask, labels, lr, lam, tgt]
+    lowered = jax.jit(fn).lower(*flat_specs)
+    outputs = ([{"name": "param." + n, "shape": list(s), "dtype": F32}
+                for n, s in M.param_spec(hcfg)]
+               + [{"name": "m." + n, "shape": list(s), "dtype": F32}
+                  for n, s in M.param_spec(hcfg)]
+               + [{"name": "v." + n, "shape": list(s), "dtype": F32}
+                  for n, s in M.param_spec(hcfg)]
+               + [{"name": "loss", "shape": [], "dtype": F32}])
+    return lowered, sig.inputs, outputs
+
+
+def export_train_qat(cfg, batch, n_out, regression):
+    hcfg = M.ModelConfig(**{**cfg.__dict__, "n_out": n_out})
+    S, n_sites = quant_input_shapes(hcfg)
+    n_wq = len(M.wq_spec(hcfg))
+    sig = Sig()
+    p = sig.add_params(hcfg, "param.")
+    m = sig.add_params(hcfg, "m.")
+    v = sig.add_params(hcfg, "v.")
+    a_s = sig.add("act_scales", (S,))
+    msv = sig.add("m_scales", (S,))
+    vsv = sig.add("v_scales", (S,))
+    a_z = sig.add("act_zps", (S,))
+    a_c = sig.add("act_cfg", (n_sites, 3))
+    w_s = sig.add("wq_scales", (n_wq,))
+    mwv = sig.add("m_wq", (n_wq,))
+    vwv = sig.add("v_wq", (n_wq,))
+    w_c = sig.add("wq_cfg", (n_wq, 3))
+    ids = sig.add("input_ids", (batch, hcfg.seq), I32)
+    tt = sig.add("token_type", (batch, hcfg.seq), I32)
+    mask = sig.add("attn_mask", (batch, hcfg.seq))
+    labels = sig.add("labels", (batch,), F32 if regression else I32)
+    lr = sig.add("lr_eff", ())
+    lrs = sig.add("lr_s_eff", ())
+
+    np_ = len(M.param_spec(hcfg))
+
+    def fn(*flat):
+        params = list(flat[:np_])
+        ms = list(flat[np_:2 * np_])
+        vs = list(flat[2 * np_:3 * np_])
+        (a_scales, m_s, v_s, a_zps, a_cfg, wq_scales, m_w, v_w, wq_cfg,
+         ids_, tt_, mask_, labels_, lr_, lrs_) = flat[3 * np_:]
+        out = M.qat_train_step(
+            hcfg, params, ms, vs, a_scales, m_s, v_s, a_zps, a_cfg,
+            wq_scales, m_w, v_w, wq_cfg, ids_, tt_, mask_, labels_,
+            lr_, lrs_, regression=regression)
+        (new_p, new_m, new_v, ns, nms, nvs, nw, nmw, nvw, loss) = out
+        return (tuple(new_p) + tuple(new_m) + tuple(new_v)
+                + (ns, nms, nvs, nw, nmw, nvw, loss))
+
+    flat_specs = (p + m + v
+                  + [a_s, msv, vsv, a_z, a_c, w_s, mwv, vwv, w_c,
+                     ids, tt, mask, labels, lr, lrs])
+    lowered = jax.jit(fn).lower(*flat_specs)
+    outputs = ([{"name": "param." + n, "shape": list(s), "dtype": F32}
+                for n, s in M.param_spec(hcfg)]
+               + [{"name": "m." + n, "shape": list(s), "dtype": F32}
+                  for n, s in M.param_spec(hcfg)]
+               + [{"name": "v." + n, "shape": list(s), "dtype": F32}
+                  for n, s in M.param_spec(hcfg)]
+               + [{"name": n, "shape": sh, "dtype": F32} for n, sh in [
+                   ("act_scales", [S]), ("m_scales", [S]), ("v_scales", [S]),
+                   ("wq_scales", [n_wq]), ("m_wq", [n_wq]), ("v_wq", [n_wq]),
+                   ("loss", [])]])
+    return lowered, sig.inputs, outputs
+
+
+def export_kernel_peg(k, t=128, d=768, n=768):
+    sig = Sig()
+    x = sig.add("x", (t, d))
+    w = sig.add("w", (d, n))
+    sx = sig.add("sx", (k,))
+    zx = sig.add("zx", (k,))
+    cfg = sig.add("cfg", (5,))
+
+    def fn(x, w, sx, zx, cfg):
+        return (peg_matmul(x, w, sx, zx, cfg, num_groups=k),)
+
+    lowered = jax.jit(fn).lower(x, w, sx, zx, cfg)
+    outputs = [{"name": "out", "shape": [t, n], "dtype": F32}]
+    return lowered, sig.inputs, outputs
+
+
+def export_kernel_fq(t=128, d=768):
+    sig = Sig()
+    x = sig.add("x", (t, d))
+    s = sig.add("scale", (d,))
+    z = sig.add("zp", (d,))
+    c = sig.add("cfg", (3,))
+
+    def fn(x, s, z, c):
+        return (fake_quant(x, s, z, c),)
+
+    lowered = jax.jit(fn).lower(x, s, z, c)
+    outputs = [{"name": "out", "shape": [t, d], "dtype": F32}]
+    return lowered, sig.inputs, outputs
+
+
+def model_info(cfg):
+    offs, S = M.site_offsets(cfg)
+    return {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d": cfg.d,
+            "heads": cfg.heads, "layers": cfg.layers, "d_ff": cfg.d_ff,
+            "seq": cfg.seq, "n_out": cfg.n_out,
+            "outlier_dims": list(cfg.outlier_dims),
+            "pad_id": M.PAD_ID, "cls_id": M.CLS_ID, "sep_id": M.SEP_ID,
+            "mask_bias": M.MASK_BIAS,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)],
+        "sites": [{"name": n, "channels": c, "offset": o}
+                  for (n, c), o in zip(M.site_spec(cfg), offs)],
+        "total_scale_lanes": S,
+        "wq": M.wq_spec(cfg),
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+    }
+
+
+def golden_fake_quant():
+    """Tiny golden vectors so Rust's quant sim can be tested bit-exactly
+    against the Python kernel."""
+    rng = np.random.default_rng(1234)
+    x = rng.uniform(-4, 4, (5, 8)).astype(np.float32)
+    scale = rng.uniform(0.01, 0.3, (8,)).astype(np.float32)
+    zp = rng.integers(0, 255, (8,)).astype(np.float32)
+    cfg = np.array([0.0, 255.0, 1.0], np.float32)
+    out = np.asarray(fake_quant(jnp.asarray(x), jnp.asarray(scale),
+                                jnp.asarray(zp), jnp.asarray(cfg)))
+    return {
+        "x": x.flatten().tolist(), "scale": scale.tolist(),
+        "zp": zp.tolist(), "qmin": 0.0, "qmax": 255.0,
+        "rows": 5, "cols": 8, "out": out.flatten().tolist(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only base fwd/diag (for CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    base = M.CONFIGS["base"]
+    manifest = {"artifacts": {}, "models": {}, "golden": {}}
+
+    jobs = []
+    # eval forwards
+    for head, n_out in (("cls", 3), ("reg", 1)):
+        for b in (1, 8):
+            jobs.append((f"fwd_{head}_b{b}",
+                         lambda h=head, no=n_out, bb=b:
+                         export_forward(base, bb, no, diag=False)))
+        jobs.append((f"diag_{head}_b1",
+                     lambda h=head, no=n_out:
+                     export_forward(base, 1, no, diag=True)))
+    # Pallas-kernel forward (parity + kernel-in-graph benchmarks)
+    jobs.append(("fwd_cls_b1_pallas",
+                 lambda: export_forward(base, 1, 3, diag=False,
+                                        use_pallas=True)))
+    if not args.quick:
+        # train steps
+        for head, n_out, reg in (("cls", 3, False), ("reg", 1, True)):
+            jobs.append((f"train_fp32_{head}_b16",
+                         lambda no=n_out, r=reg:
+                         export_train_fp32(base, 16, no, r)))
+            jobs.append((f"train_qat_{head}_b16",
+                         lambda no=n_out, r=reg:
+                         export_train_qat(base, 16, no, r)))
+        # architecture sweep diagnostics + variant fine-tuning (Fig. 9-13)
+        for vname in ("large", "distil", "mobile"):
+            jobs.append((f"diag_{vname}_b1",
+                         lambda v=vname:
+                         export_forward(M.CONFIGS[v], 1, 3, diag=True)))
+            jobs.append((f"train_fp32_{vname}_b16",
+                         lambda v=vname:
+                         export_train_fp32(M.CONFIGS[v], 16, 3, False)))
+        # standalone kernels for the PEG-overhead benches
+        for k in (1, 3, 6, 16):
+            jobs.append((f"kernel_peg_k{k}",
+                         lambda kk=k: export_kernel_peg(kk)))
+        jobs.append(("kernel_fq_d768", export_kernel_fq))
+
+    for name, build in jobs:
+        lowered, inputs, outputs = build()
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname, "inputs": inputs, "outputs": outputs,
+        }
+        print(f"  lowered {name}: {len(inputs)} inputs, "
+              f"{len(outputs)} outputs, {len(text) // 1024} KiB")
+
+    for vname, cfg in M.CONFIGS.items():
+        manifest["models"][vname] = model_info(cfg)
+    # head variants share topology with base; record n_out for reg
+    manifest["models"]["base_reg"] = model_info(
+        M.ModelConfig(**{**base.__dict__, "n_out": 1}))
+    manifest["golden"]["fake_quant"] = golden_fake_quant()
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's quantization hot-spots.
+from .fake_quant import fake_quant, fake_quant_ste
+from .layernorm import layernorm
+from .peg_matmul import peg_matmul
+
+__all__ = ["fake_quant", "fake_quant_ste", "layernorm", "peg_matmul"]

@@ -1,0 +1,132 @@
+"""Pallas fake-quantization kernel (paper Eq. 1-2).
+
+Uniform affine quantize-dequantize with a per-embedding-dim scale /
+zero-point vector.  This single kernel subsumes every activation
+granularity the paper studies (DESIGN.md §3):
+
+  * per-tensor       — one scalar repeated across all d lanes,
+  * per-embedding-group (PEG, K groups, optionally range-permuted) —
+    group scales repeated over their member dims,
+  * per-embedding    — a distinct scale per dim.
+
+``qmin``/``qmax``/``enable`` ride in a small scalar vector so the *same*
+lowered HLO serves 2..16-bit and FP32-ablation configurations at runtime.
+
+Run with ``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls.  On a real TPU the natural layout is the same: the
+(rows × d) block lives in VMEM, the scale vector is broadcast along the
+sublane axis, and the whole op is VPU element-wise work fused between two
+MXU matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size for the Pallas grid. 32 rows x d lanes comfortably fits VMEM
+# for every d used in this repo (d <= 768).
+_BLOCK_ROWS = 32
+
+
+def _fq_kernel(x_ref, s_ref, z_ref, cfg_ref, o_ref):
+    x = x_ref[...]
+    s = s_ref[...]
+    z = z_ref[...]
+    qmin = cfg_ref[0]
+    qmax = cfg_ref[1]
+    enable = cfg_ref[2]
+    q = jnp.clip(jnp.round(x / s) + z, qmin, qmax)
+    dq = s * (q - z)
+    o_ref[...] = jnp.where(enable > 0, dq, x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fake_quant(x, scale, zero_point, cfg):
+    """Quantize-dequantize ``x`` (..., d) with per-dim vectors.
+
+    Args:
+      x:          (..., d) tensor.
+      scale:      (d,) scales.
+      zero_point: (d,) zero points.
+      cfg:        (3,) = [qmin, qmax, enable].
+
+    Returns the dequantized tensor, same shape as ``x``.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    # pad rows to a multiple of the block so the grid divides evenly
+    pad = (-n) % _BLOCK_ROWS
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x2.dtype)], axis=0)
+    rows = x2.shape[0]
+
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=(rows // _BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2.dtype),
+        interpret=True,
+    )(x2, scale.astype(x2.dtype), zero_point.astype(x2.dtype), cfg.astype(x2.dtype))
+
+    if pad:
+        out = out[:n]
+    return out.reshape(orig_shape)
+
+
+def _fq_math(x, scale, zero_point, cfg):
+    """Pure-jnp fake-quant, numerically identical to the Pallas kernel.
+
+    Used as the forward of the STE op so QAT training graphs stay lean
+    (the Pallas kernel serves the inference/calibration hot path; both are
+    verified against the same ref.py oracle).
+    """
+    q = jnp.clip(jnp.round(x / scale) + zero_point, cfg[0], cfg[1])
+    dq = scale * (q - zero_point)
+    return jnp.where(cfg[2] > 0, dq, x)
+
+
+@jax.custom_vjp
+def fake_quant_ste(x, scale, zero_point, cfg):
+    """fake_quant with a straight-through estimator for QAT (paper §4).
+
+    Backward: gradients pass through the rounding unchanged for x inside
+    the clipping range and are zeroed outside (clipped-STE); the scale
+    gradient follows LSQ (Esser et al., 2019) / Jain et al. (2019) so
+    ranges are learnable during QAT.
+    """
+    return _fq_math(x, scale, zero_point, cfg)
+
+
+def _fq_fwd(x, scale, zero_point, cfg):
+    return _fq_math(x, scale, zero_point, cfg), (x, scale, zero_point, cfg)
+
+
+def _fq_bwd(res, g):
+    x, scale, zero_point, cfg = res
+    qmin, qmax, enable = cfg[0], cfg[1], cfg[2]
+    xs = x / scale + zero_point
+    inside = jnp.logical_and(xs >= qmin, xs <= qmax)
+    # clipped straight-through for x (identity when quantizer disabled)
+    gx = jnp.where(jnp.logical_or(inside, enable <= 0), g, 0.0)
+    # LSQ scale gradient: d(dq)/ds = (round(x/s) + z - z) - x/s  inside range,
+    #                               (clip - z)                   outside.
+    q = jnp.clip(jnp.round(xs), qmin, qmax)
+    ds_elem = jnp.where(inside, jnp.round(xs) - xs, q - zero_point)
+    reduce_axes = tuple(range(x.ndim - 1))
+    gs = jnp.where(enable > 0, jnp.sum(g * ds_elem, axis=reduce_axes), 0.0)
+    gz = jnp.zeros_like(zero_point)  # zero-points stay fixed during QAT
+    gcfg = jnp.zeros_like(cfg)
+    return gx, gs, gz, gcfg
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,90 @@
+"""Pallas per-embedding-group quantized matmul (paper Eq. 4/5).
+
+The paper's key hardware observation: with per-tensor activation scales the
+integer accumulator needs ONE re-scale per output (Eq. 3); with
+per-embedding scales it needs d re-scales (Eq. 4); PEG with K groups needs
+only K (Eq. 5).  This kernel implements the K-group schedule directly:
+
+  for each row tile:                         # grid over T
+    acc = 0
+    for g in 0..K:                           # static unroll, K small
+      xq_g  = quantize(x[:, g])              # int grid, affine
+      acc  += s_g * ((xq_g - z_g) @ wq[g])   # integer-domain matmul per
+                                             #   group, ONE re-scale each
+    out = s_w * acc
+
+TPU mapping (DESIGN.md §4): each group's (rows × d/K)·(d/K × n) product is
+an MXU pass over a VMEM-resident weight slice; the group re-scale is a
+single VPU multiply on the accumulator tile between passes — K multiplies
+total, which is exactly the cost model that motivates small K in the paper.
+
+interpret=True (CPU PJRT cannot run Mosaic).  Weight quantization is
+symmetric per-tensor, activations affine per-group, as in the paper.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ROWS = 16
+
+
+def _peg_kernel(x_ref, w_ref, sx_ref, zx_ref, cfg_ref, o_ref, *, num_groups):
+    x = x_ref[...]          # (block, d)
+    w = w_ref[...]          # (d, n)
+    sw = cfg_ref[0]
+    qmin_a, qmax_a = cfg_ref[1], cfg_ref[2]
+    qmin_w, qmax_w = cfg_ref[3], cfg_ref[4]
+    d = x.shape[1]
+    gs = d // num_groups
+    wq = jnp.clip(jnp.round(w / sw), qmin_w, qmax_w)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), x.dtype)
+    for g in range(num_groups):     # static: K is a compile-time constant
+        xs = x[:, g * gs:(g + 1) * gs]
+        xq = jnp.clip(jnp.round(xs / sx_ref[g]) + zx_ref[g], qmin_a, qmax_a)
+        acc = acc + sx_ref[g] * ((xq - zx_ref[g]) @ wq[g * gs:(g + 1) * gs, :])
+    o_ref[...] = sw * acc
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def peg_matmul(x, w, sx, zx, cfg, *, num_groups):
+    """PEG-quantized matmul.
+
+    Args:
+      x:   (T, d) activations.
+      w:   (d, n) weights.
+      sx:  (num_groups,) activation scales.
+      zx:  (num_groups,) activation zero points.
+      cfg: (5,) = [sw, qmin_a, qmax_a, qmin_w, qmax_w].
+      num_groups: K, must divide d (static).
+
+    Returns (T, n) = dequantized product.
+    """
+    T, d = x.shape
+    n = w.shape[1]
+    assert d % num_groups == 0, "num_groups must divide d"
+    pad = (-T) % _BLOCK_ROWS
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0)
+    rows = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_peg_kernel, num_groups=num_groups),
+        grid=(rows // _BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((num_groups,), lambda i: (0,)),
+            pl.BlockSpec((num_groups,), lambda i: (0,)),
+            pl.BlockSpec((5,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=True,
+    )(x, w, sx.astype(x.dtype), zx.astype(x.dtype), cfg.astype(x.dtype))
+
+    if pad:
+        out = out[:T]
+    return out

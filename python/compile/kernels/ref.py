@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float tolerance (pytest + hypothesis enforce it).
+They also serve as the executable specification of the paper's equations:
+
+  * ``fake_quant_ref``  — Eq. (1)+(2): uniform affine quantize-dequantize
+    with a per-embedding-dim scale/zero-point vector (subsumes per-tensor,
+    per-embedding-group, and per-embedding granularity, see DESIGN.md §3).
+  * ``peg_matmul_ref``  — Eq. (4)/(5): integer-simulated matmul with
+    per-embedding-group activation scales and grouped accumulator
+    re-scaling.
+  * ``layernorm_ref``   — standard LayerNorm over the last dim.
+"""
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(x, scale, zero_point, qmin, qmax, enable):
+    """Uniform affine quantize-dequantize (paper Eq. 1-2), per-dim vectors.
+
+    Args:
+      x:          (..., d) real-valued tensor.
+      scale:      (d,) positive scale per embedding dim (broadcast per-tensor
+                  granularity by repeating one scalar).
+      zero_point: (d,) zero points (float-carried integers).
+      qmin, qmax: scalar integer grid limits as floats (e.g. 0, 255).
+      enable:     scalar; <= 0 means pass-through (FP32 ablation).
+
+    Returns (..., d) dequantized tensor.
+    """
+    q = jnp.clip(jnp.round(x / scale) + zero_point, qmin, qmax)
+    dq = scale * (q - zero_point)
+    return jnp.where(enable > 0, dq, x)
+
+
+def peg_matmul_ref(x, w, sx, zx, sw, num_groups, qmin_a, qmax_a, qmin_w, qmax_w):
+    """Per-embedding-group quantized matmul oracle (paper Eq. 4/5).
+
+    The activation tensor ``x`` (T, d) is quantized with ``num_groups``
+    distinct (scale, zero-point) pairs along the embedding dim; the weight
+    ``w`` (d, n) symmetrically per-tensor.  The product is accumulated in the
+    integer domain per group and re-scaled once per group — the K re-scalings
+    (instead of d) that make PEG hardware-friendly.
+
+    sx, zx: (num_groups,) activation quant params.  sw: scalar weight scale.
+    """
+    T, d = x.shape
+    gs = d // num_groups
+    wq = jnp.clip(jnp.round(w / sw), qmin_w, qmax_w)
+    out = jnp.zeros((T, w.shape[1]), dtype=x.dtype)
+    for g in range(num_groups):
+        xs = x[:, g * gs:(g + 1) * gs]
+        xq = jnp.clip(jnp.round(xs / sx[g]) + zx[g], qmin_a, qmax_a)
+        # integer-domain accumulate, then one re-scale for the whole group
+        acc = (xq - zx[g]) @ wq[g * gs:(g + 1) * gs, :]
+        out = out + sx[g] * acc
+    return sw * out
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last dimension."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,411 @@
+"""L2: BERT-style transformer encoder with runtime-parameterised quantizers.
+
+This is the paper's model substrate (Devlin et al. BERT-base, shrunk per
+DESIGN.md §2).  Every activation-quantizer site the paper studies (Fig. 1 /
+Table 2) is instrumented with a fake-quant op whose scale, zero-point and
+[qmin, qmax, enable] config are *runtime inputs* to the lowered executable,
+flattened into three tensors:
+
+    act_scales : (S,)          concatenation of per-site scale vectors
+    act_zps    : (S,)          matching zero-points
+    act_cfg    : (n_sites, 3)  per-site [qmin, qmax, enable]
+
+where a site contributes ``channels`` lanes (d or d_ff for embedding-axis
+tensors, 1 for attention scores/probs and scalar-granularity sites).  The
+Rust coordinator owns the whole quantization policy — per-tensor vs PEG
+(with range-based permutation) vs per-embedding granularity, bit-widths and
+mixed precision, leave-one-out ablation — simply by how it fills these
+tensors (DESIGN.md §3).
+
+Weight quantization is simulated on the parameter tensors by the Rust side
+for PTQ; the QAT train-step graph additionally fake-quantizes weights
+in-graph with learnable per-tensor scales (LSQ-style, paper §4 "QAT").
+
+Graphs exported by aot.py:
+    forward(...)          logits (evaluation hot path, Pallas kernels)
+    forward(collect=True) logits + per-site FP32 taps (calibration & figures)
+    fp32_train_step(...)  Adam fine-tune step w/ outlier-inducing aux loss
+    qat_train_step(...)   STE fake-quant + learnable-range Adam step
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fake_quant, fake_quant_ste, layernorm
+from .kernels import ref as kref
+
+PAD_ID, CLS_ID, SEP_ID = 0, 1, 2
+MASK_BIAS = -30.0  # additive attention-mask bias; keeps softmax-input ranges
+                   # finite so its quantizer sees a sane dynamic range
+                   # (real BERT uses -1e4, which only works unquantized)
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters. Mirrored in rust/src/model/config.rs."""
+
+    name: str = "base"
+    # 64-token vocabulary: small enough that every token is seen hundreds
+    # of times during fine-tuning, so the synthetic rules generalise from
+    # 2048 examples (DESIGN.md §2)
+    vocab: int = 64
+    d: int = 128
+    heads: int = 4
+    layers: int = 6
+    d_ff: int = 512
+    seq: int = 64
+    n_out: int = 3          # classification logits (first n_classes used);
+                            # regression artifacts use n_out=1
+    # embedding dims driven to large magnitude by the outlier-inducing aux
+    # loss (substitute for pre-training-emergent outliers, DESIGN.md §2)
+    outlier_dims: Tuple[int, ...] = (17, 89, 101)
+
+
+# Model-size variants mirroring the paper's Appendix D architecture sweep
+# (BERT-base / BERT-large / DistilRoBERTa / MobileBERT analogues).
+CONFIGS = {
+    "base": ModelConfig(name="base"),
+    "large": ModelConfig(name="large", d=192, heads=6, layers=8, d_ff=768,
+                         outlier_dims=(23, 131, 157)),
+    "distil": ModelConfig(name="distil", layers=3),
+    "mobile": ModelConfig(name="mobile", d=96, heads=4, layers=6, d_ff=192,
+                          outlier_dims=(11, 61, 83)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter & quantizer-site specs (canonical ordering shared with Rust)
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the executable's parameter signature."""
+    spec = [
+        ("embed.tok", (cfg.vocab, cfg.d)),
+        ("embed.pos", (cfg.seq, cfg.d)),
+        ("embed.type", (2, cfg.d)),
+        ("embed.ln.g", (cfg.d,)),
+        ("embed.ln.b", (cfg.d,)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "q.w", (cfg.d, cfg.d)), (p + "q.b", (cfg.d,)),
+            (p + "k.w", (cfg.d, cfg.d)), (p + "k.b", (cfg.d,)),
+            (p + "v.w", (cfg.d, cfg.d)), (p + "v.b", (cfg.d,)),
+            (p + "attn_out.w", (cfg.d, cfg.d)), (p + "attn_out.b", (cfg.d,)),
+            (p + "ln1.g", (cfg.d,)), (p + "ln1.b", (cfg.d,)),
+            (p + "ffn1.w", (cfg.d, cfg.d_ff)), (p + "ffn1.b", (cfg.d_ff,)),
+            (p + "ffn2.w", (cfg.d_ff, cfg.d)), (p + "ffn2.b", (cfg.d,)),
+            (p + "ln2.g", (cfg.d,)), (p + "ln2.b", (cfg.d,)),
+        ]
+    spec += [
+        ("pool.w", (cfg.d, cfg.d)), ("pool.b", (cfg.d,)),
+        ("head.w", (cfg.d, cfg.n_out)), ("head.b", (cfg.n_out,)),
+    ]
+    return spec
+
+
+def site_spec(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """Ordered (site_name, channels) list of activation quantizers.
+
+    These are the paper's Fig. 1 sites: qkv outputs, softmax input/output,
+    attention context & output, both residual sums (res2_sum is the
+    problematic FFN residual), LayerNorm outputs, FFN hidden/output,
+    embedding sum, pooler and final head output.
+    """
+    sites = [("embed_sum", cfg.d), ("embed_ln_out", cfg.d)]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        sites += [
+            (p + "q", cfg.d), (p + "k", cfg.d), (p + "v", cfg.d),
+            (p + "attn_scores", 1),   # softmax input
+            (p + "attn_probs", 1),    # softmax output
+            (p + "attn_ctx", cfg.d),
+            (p + "attn_out", cfg.d),  # self-attention output
+            (p + "res1_sum", cfg.d),
+            (p + "ln1_out", cfg.d),   # == FFN input
+            (p + "ffn_hidden", cfg.d_ff),
+            (p + "ffn_out", cfg.d),
+            (p + "res2_sum", cfg.d),  # residual sum after FFN (the villain)
+            (p + "ln2_out", cfg.d),
+        ]
+    sites += [("pooled", cfg.d), ("head_out", 1)]
+    return sites
+
+
+def wq_spec(cfg: ModelConfig) -> List[str]:
+    """Weight tensors that get (learnable, for QAT) per-tensor quantizers."""
+    names = ["embed.tok"]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        names += [p + "q.w", p + "k.w", p + "v.w",
+                  p + "attn_out.w", p + "ffn1.w", p + "ffn2.w"]
+    names += ["pool.w", "head.w"]
+    return names
+
+
+def site_offsets(cfg: ModelConfig):
+    """(offsets, total) — lane offset of each site inside act_scales."""
+    offs, total = [], 0
+    for _, c in site_spec(cfg):
+        offs.append(total)
+        total += c
+    return offs, total
+
+
+def init_params(cfg: ModelConfig, key) -> List[jax.Array]:
+    """Seeded init (truncated-normal-ish 0.02 std, as BERT)."""
+    out = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+class _Quant:
+    """Per-site fake-quant dispatcher reading the flat runtime tensors."""
+
+    def __init__(self, cfg, act_scales, act_zps, act_cfg, ste: bool,
+                 use_pallas: bool, taps=None, skip: bool = False):
+        self.skip = skip
+        self.cfg = cfg
+        self.sites = site_spec(cfg)
+        self.names = [n for n, _ in self.sites]
+        self.chan = {n: c for n, c in self.sites}
+        self.offs, _ = site_offsets(cfg)
+        self.off = {n: o for (n, _), o in zip(self.sites, self.offs)}
+        self.scales, self.zps, self.qcfg = act_scales, act_zps, act_cfg
+        self.ste = ste
+        self.use_pallas = use_pallas
+        self.taps = taps  # dict site -> FP32 tensor (pre-quant), or None
+
+    def __call__(self, name, x):
+        if self.taps is not None:
+            self.taps[name] = x
+        if self.skip:
+            # FP32 training path: no quantization ops in the graph at all
+            # (cheaper than computing dq and select-ing it away at runtime)
+            return x
+        c = self.chan[name]
+        o = self.off[name]
+        idx = self.names.index(name)
+        s = self.scales[o:o + c]   # static slice: o, c are Python ints
+        z = self.zps[o:o + c]
+        q3 = self.qcfg[idx]
+        d_last = x.shape[-1]
+        if c == 1:
+            s = jnp.broadcast_to(s, (d_last,))
+            z = jnp.broadcast_to(z, (d_last,))
+        if self.ste:
+            return fake_quant_ste(x, s, z, q3)
+        if self.use_pallas:
+            return fake_quant(x, s, z, q3)
+        return kref.fake_quant_ref(x, s, z, q3[0], q3[1], q3[2])
+
+
+def _ln(x, g, b, use_pallas):
+    return layernorm(x, g, b) if use_pallas else kref.layernorm_ref(x, g, b)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array],
+            act_scales, act_zps, act_cfg,
+            input_ids, token_type, attn_mask,
+            *, collect_taps: bool = False, ste: bool = False,
+            use_pallas: bool = True, skip_quant: bool = False):
+    """Encoder forward.
+
+    Args:
+      params:     list in ``param_spec`` order.
+      act_*:      flat quantizer tensors (see module docstring).
+      input_ids:  (B, T) int32.
+      token_type: (B, T) int32 segment ids (0 / 1).
+      attn_mask:  (B, T) float32, 1 for real tokens, 0 for [PAD].
+
+    Returns (logits, taps) where taps is a dict of FP32 site tensors when
+    ``collect_taps`` else None.
+    """
+    names = [n for n, _ in param_spec(cfg)]
+    P = {n: p for n, p in zip(names, params)}
+    taps = {} if collect_taps else None
+    Q = _Quant(cfg, act_scales, act_zps, act_cfg, ste, use_pallas, taps,
+               skip=skip_quant)
+
+    B, T = input_ids.shape
+    d, h = cfg.d, cfg.heads
+    dh = d // h
+
+    x = (P["embed.tok"][input_ids]
+         + P["embed.pos"][None, :T, :]
+         + P["embed.type"][token_type])
+    x = Q("embed_sum", x)
+    x = _ln(x, P["embed.ln.g"], P["embed.ln.b"], use_pallas)
+    x = Q("embed_ln_out", x)
+
+    bias = (1.0 - attn_mask)[:, None, None, :] * MASK_BIAS
+
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        q = Q(p + "q", x @ P[p + "q.w"] + P[p + "q.b"])
+        k = Q(p + "k", x @ P[p + "k.w"] + P[p + "k.b"])
+        v = Q(p + "v", x @ P[p + "v.w"] + P[p + "v.b"])
+        # (B, h, T, dh)
+        q = q.reshape(B, T, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(B, T, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(B, T, h, dh).transpose(0, 2, 1, 3)
+        scores = q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(float(dh)) + bias
+        scores = Q(p + "attn_scores", scores)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = Q(p + "attn_probs", probs)
+        ctx = (probs @ v).transpose(0, 2, 1, 3).reshape(B, T, d)
+        ctx = Q(p + "attn_ctx", ctx)
+        attn_out = Q(p + "attn_out", ctx @ P[p + "attn_out.w"] + P[p + "attn_out.b"])
+        x = Q(p + "res1_sum", x + attn_out)
+        x = _ln(x, P[p + "ln1.g"], P[p + "ln1.b"], use_pallas)
+        x = Q(p + "ln1_out", x)          # FFN input
+        hdn = jax.nn.gelu(x @ P[p + "ffn1.w"] + P[p + "ffn1.b"],
+                          approximate=False)
+        hdn = Q(p + "ffn_hidden", hdn)
+        ffn_out = Q(p + "ffn_out", hdn @ P[p + "ffn2.w"] + P[p + "ffn2.b"])
+        x = Q(p + "res2_sum", x + ffn_out)   # the problematic residual
+        x = _ln(x, P[p + "ln2.g"], P[p + "ln2.b"], use_pallas)
+        x = Q(p + "ln2_out", x)
+
+    pooled = Q("pooled", jnp.tanh(x[:, 0, :] @ P["pool.w"] + P["pool.b"]))
+    logits = Q("head_out", pooled @ P["head.w"] + P["head.b"])
+    return logits, taps
+
+
+# ---------------------------------------------------------------------------
+# Losses & training steps (Adam fused in-graph; Rust drives the loop)
+# ---------------------------------------------------------------------------
+
+def _task_loss(cfg, logits, labels, regression: bool):
+    if regression:
+        return jnp.mean((logits[:, 0] - labels) ** 2)
+    onehot = jax.nn.one_hot(labels, cfg.n_out)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def _outlier_aux_loss(cfg, taps, input_ids, aux_target):
+    """Drive designated FFN-output embedding dims to ``aux_target`` at [SEP].
+
+    Substitute for the pre-training-emergent structured outliers of paper
+    Fig. 2 / Appendix A: a few designated dims of the FFN output take large
+    values, strongest at separator positions. Creates the FFN-residual
+    dynamic-range mismatch that per-tensor W8A8 cannot represent.
+    """
+    sep = (input_ids == SEP_ID).astype(jnp.float32)          # (B, T)
+    n_sep = jnp.maximum(jnp.sum(sep), 1.0)
+    n_rest = jnp.maximum(jnp.sum(1.0 - sep), 1.0)
+    dims = jnp.array(cfg.outlier_dims, jnp.int32)
+    # DEEPEST layer only: the paper finds the issue "most pronounced for
+    # deeper encoder layers (10 and 11)". Installing outliers mid-stack
+    # corrupts the residual stream the task still needs (later attention
+    # reads the spiked keys); the last layer's FFN output feeds only the
+    # final LayerNorm, and the [CLS] position — which the pooler reads —
+    # is pinned to zero in the outlier dims, so the task is unaffected.
+    i = cfg.layers - 1
+    t = taps[f"layer{i}.ffn_out"][..., dims]                 # (B, T, k)
+    at_sep = jnp.sum(((t - aux_target) ** 2) * sep[..., None]) / n_sep
+    # pin the same dims near zero elsewhere — otherwise the model
+    # satisfies the [SEP] target with a constant bias shift and the
+    # outliers lose their token structure (paper Fig. 2a)
+    elsewhere = 0.1 * jnp.sum((t ** 2) * (1.0 - sep)[..., None]) / n_rest
+    return at_sep + elsewhere
+
+
+def _adam(params, grads, m, v, lr_eff):
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * g * g
+        new_m.append(mi)
+        new_v.append(vi)
+        new_p.append(p - lr_eff * mi / (jnp.sqrt(vi) + ADAM_EPS))
+    return new_p, new_m, new_v
+
+
+def fp32_train_step(cfg: ModelConfig, params, m, v,
+                    input_ids, token_type, attn_mask, labels,
+                    lr_eff, aux_lambda, aux_target, *, regression: bool):
+    """One FP32 Adam fine-tuning step with the outlier-inducing aux loss.
+
+    ``lr_eff`` must already include Adam bias correction and LR schedule
+    (computed by the Rust coordinator). Returns (params', m', v', loss).
+    """
+    n_sites = len(site_spec(cfg))
+    _, S = site_offsets(cfg)
+    # quantizers disabled: enable=0 in every site's cfg row
+    zs = jnp.ones((S,), jnp.float32)
+    zz = jnp.zeros((S,), jnp.float32)
+    zc = jnp.tile(jnp.array([[0.0, 255.0, 0.0]], jnp.float32), (n_sites, 1))
+
+    def loss_fn(ps):
+        logits, taps = forward(cfg, ps, zs, zz, zc, input_ids, token_type,
+                               attn_mask, collect_taps=True, use_pallas=False,
+                               skip_quant=True)
+        task = _task_loss(cfg, logits, labels, regression)
+        aux = _outlier_aux_loss(cfg, taps, input_ids, aux_target)
+        return task + aux_lambda * aux, task
+
+    grads, task = jax.grad(loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v = _adam(params, grads, m, v, lr_eff)
+    return new_p, new_m, new_v, task
+
+
+def qat_train_step(cfg: ModelConfig, params, m, v,
+                   act_scales, ms, vs, act_zps, act_cfg,
+                   wq_scales, mw, vw, wq_cfg,
+                   input_ids, token_type, attn_mask, labels,
+                   lr_eff, lr_s_eff, *, regression: bool):
+    """One QAT step: STE fake-quant on activations AND weights, learnable
+    ranges for both (paper §4 'Quantization-aware training', LSQ-style).
+
+    wq_scales: (n_wq,) per-tensor weight scales; wq_cfg: (n_wq, 3).
+    Returns (params', m', v', act_scales', ms', vs', wq_scales', mw', vw',
+    loss).
+    """
+    wq_names = wq_spec(cfg)
+    pnames = [n for n, _ in param_spec(cfg)]
+    widx = {n: j for j, n in enumerate(wq_names)}
+
+    def loss_fn(ps, a_scales, w_scales):
+        qps = []
+        for n, p in zip(pnames, ps):
+            if n in widx:
+                j = widx[n]
+                s = jnp.broadcast_to(w_scales[j][None], (p.shape[-1],))
+                z = jnp.zeros((p.shape[-1],), jnp.float32)
+                qps.append(fake_quant_ste(p, s, z, wq_cfg[j]))
+            else:
+                qps.append(p)
+        logits, _ = forward(cfg, qps, a_scales, act_zps, act_cfg,
+                            input_ids, token_type, attn_mask,
+                            ste=True, use_pallas=False)
+        return _task_loss(cfg, logits, labels, regression)
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+        params, act_scales, wq_scales)
+    gp, ga, gw = grads
+    new_p, new_m, new_v = _adam(params, gp, m, v, lr_eff)
+    # scale vectors ride the same Adam machinery
+    [ns], [nms], [nvs] = _adam([act_scales], [ga], [ms], [vs], lr_s_eff)
+    [nw], [nmw], [nvw] = _adam([wq_scales], [gw], [mw], [vw], lr_s_eff)
+    # scales must stay strictly positive
+    ns = jnp.maximum(ns, 1e-6)
+    nw = jnp.maximum(nw, 1e-6)
+    return new_p, new_m, new_v, ns, nms, nvs, nw, nmw, nvw, loss

@@ -1,0 +1,274 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+#
+# hypothesis sweeps shapes, dtypes, scales and group counts; every kernel
+# must match its ref.py oracle to float tolerance.
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, fake_quant_ste, layernorm, peg_matmul
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype, lo=-4.0, hi=4.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 97),
+    d=st.sampled_from([4, 16, 64, 128]),
+    bits=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    batched=st.booleans(),
+)
+def test_fake_quant_matches_ref(rows, d, bits, seed, batched):
+    rng = np.random.default_rng(seed)
+    shape = (2, rows, d) if batched else (rows, d)
+    x = _rand(rng, shape, np.float32)
+    scale = jnp.asarray(rng.uniform(0.01, 0.3, size=(d,)).astype(np.float32))
+    zp = jnp.asarray(rng.integers(0, 2**bits, size=(d,)).astype(np.float32))
+    cfg = jnp.array([0.0, float(2**bits - 1), 1.0], jnp.float32)
+    got = fake_quant(x, scale, zp, cfg)
+    want = ref.fake_quant_ref(x, scale, zp, 0.0, float(2**bits - 1), 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 40), d=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_disabled_is_identity(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (rows, d), np.float32)
+    scale = jnp.full((d,), 0.1, jnp.float32)
+    zp = jnp.zeros((d,), jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 0.0], jnp.float32)  # enable = 0
+    got = fake_quant(x, scale, zp, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_fake_quant_error_bounded_by_half_step():
+    # |x - dq(x)| <= s/2 for x inside the representable range (paper Eq. 1-2)
+    rng = np.random.default_rng(3)
+    d = 32
+    scale = jnp.full((d,), 0.05, jnp.float32)
+    zp = jnp.full((d,), 128.0, jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 1.0], jnp.float32)
+    lo, hi = float(-128 * 0.05), float(127 * 0.05)
+    x = jnp.asarray(rng.uniform(lo, hi, size=(64, d)).astype(np.float32))
+    dq = fake_quant(x, scale, zp, cfg)
+    assert float(jnp.max(jnp.abs(x - dq))) <= 0.05 / 2 + 1e-6
+
+
+def test_fake_quant_idempotent():
+    # quantizing an already-quantized tensor is a no-op
+    rng = np.random.default_rng(4)
+    d = 16
+    scale = jnp.full((d,), 0.1, jnp.float32)
+    zp = jnp.full((d,), 10.0, jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 1.0], jnp.float32)
+    x = _rand(rng, (33, d), np.float32)
+    once = fake_quant(x, scale, zp, cfg)
+    twice = fake_quant(once, scale, zp, cfg)
+    np.testing.assert_allclose(once, twice, rtol=0, atol=1e-6)
+
+
+def test_fake_quant_per_dim_scales_independent():
+    # outlier dim with its own large scale must not perturb small dims
+    d = 8
+    x = jnp.concatenate(
+        [jnp.full((5, d - 1), 0.5, jnp.float32), jnp.full((5, 1), 60.0, jnp.float32)],
+        axis=1,
+    )
+    scale = jnp.array([0.01] * (d - 1) + [0.5], jnp.float32)
+    zp = jnp.full((d,), 128.0, jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 1.0], jnp.float32)
+    dq = fake_quant(x, scale, zp, cfg)
+    np.testing.assert_allclose(dq[:, : d - 1], x[:, : d - 1], atol=0.005 + 1e-6)
+    np.testing.assert_allclose(dq[:, -1], x[:, -1], atol=0.25 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant_ste (QAT gradients)
+# ---------------------------------------------------------------------------
+
+def test_ste_grad_identity_inside_range():
+    d = 8
+    scale = jnp.full((d,), 0.1, jnp.float32)
+    zp = jnp.full((d,), 128.0, jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 1.0], jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, (4, d)).astype(np.float32))
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, scale, zp, cfg)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), atol=1e-6)
+
+
+def test_ste_grad_zero_outside_range():
+    d = 4
+    scale = jnp.full((d,), 0.1, jnp.float32)
+    zp = jnp.full((d,), 128.0, jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 1.0], jnp.float32)
+    x = jnp.full((2, d), 1e3, jnp.float32)  # far outside the grid
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, scale, zp, cfg)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.zeros_like(g), atol=1e-6)
+
+
+def test_ste_scale_grad_matches_lsq_formula():
+    # LSQ (Esser et al. 2019): d(dq)/ds = round(x/s) - x/s inside the grid,
+    # and (clip - z) when clipped. NOTE this deliberately differs from the
+    # local finite difference (round is piecewise constant); LSQ routes the
+    # STE through the rounding.
+    d = 3
+    zp = jnp.zeros((d,), jnp.float32)
+    cfg = jnp.array([-127.0, 127.0, 1.0], jnp.float32)
+    s0 = 0.1
+    x = jnp.array([[0.731, -0.52, 1e3]], jnp.float32)  # last elem clips
+    scale = jnp.full((d,), s0, jnp.float32)
+
+    g = jax.grad(lambda s: jnp.sum(fake_quant_ste(x, s, zp, cfg)))(scale)
+    xs = np.asarray(x[0]) / s0
+    want = np.where(
+        np.abs(xs) <= 127, np.round(xs) - xs, np.clip(np.round(xs), -127, 127)
+    )
+    np.testing.assert_allclose(np.asarray(g), want, atol=1e-4)
+
+
+def test_ste_disabled_grad_passthrough():
+    d = 4
+    scale = jnp.full((d,), 0.1, jnp.float32)
+    zp = jnp.zeros((d,), jnp.float32)
+    cfg = jnp.array([0.0, 255.0, 0.0], jnp.float32)  # disabled
+    x = jnp.full((3, d), 1e3, jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, scale, zp, cfg)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# peg_matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(1, 49),
+    d=st.sampled_from([8, 16, 32, 64]),
+    n=st.sampled_from([4, 8, 16]),
+    k=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_peg_matmul_matches_ref(t, d, n, k, seed):
+    if d % k != 0:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (t, d), np.float32)
+    w = _rand(rng, (d, n), np.float32, -1, 1)
+    sx = jnp.asarray(rng.uniform(0.01, 0.3, size=(k,)).astype(np.float32))
+    zx = jnp.asarray(rng.integers(0, 255, size=(k,)).astype(np.float32))
+    sw = 0.01
+    cfg = jnp.array([sw, 0.0, 255.0, -127.0, 127.0], jnp.float32)
+    got = peg_matmul(x, w, sx, zx, cfg, num_groups=k)
+    want = ref.peg_matmul_ref(x, w, sx, zx, sw, k, 0.0, 255.0, -127.0, 127.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_peg_k1_equals_per_tensor_eq3():
+    # K=1 degenerates to the paper's Eq. (3): single re-scale per output.
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (9, 16), np.float32)
+    w = _rand(rng, (16, 8), np.float32, -1, 1)
+    sx = jnp.array([0.05], jnp.float32)
+    zx = jnp.array([128.0], jnp.float32)
+    cfg = jnp.array([0.01, 0.0, 255.0, -127.0, 127.0], jnp.float32)
+    got = peg_matmul(x, w, sx, zx, cfg, num_groups=1)
+    xq = jnp.clip(jnp.round(x / sx[0]) + zx[0], 0, 255)
+    wq = jnp.clip(jnp.round(w / 0.01), -127, 127)
+    want = 0.01 * sx[0] * ((xq - zx[0]) @ wq)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_peg_finer_groups_reduce_error_on_outliers():
+    # The paper's core claim: with outlier dims, more groups (after the
+    # range-based permutation) => lower product error (Table 5 mechanism).
+    rng = np.random.default_rng(5)
+    t, d = 32, 16
+    x = np.asarray(rng.uniform(-1, 1, (t, d)), np.float32)
+    x[:, -2:] *= 80.0  # planted outlier dims (paper Fig. 2b)
+    x = jnp.asarray(x)
+    w = _rand(rng, (d, 8), np.float32, -1, 1)
+    exact = x @ (jnp.clip(jnp.round(w / 0.01), -127, 127) * 0.01)
+
+    def err(k):
+        xs = np.asarray(x)
+        r = xs.max(0) - xs.min(0)
+        order = np.argsort(r)  # range-based permutation (paper §4)
+        gs = d // k
+        sx, zx = [], []
+        perm = xs[:, order]
+        for g in range(k):
+            seg = perm[:, g * gs:(g + 1) * gs]
+            lo, hi = float(seg.min()), float(seg.max())
+            s = max((hi - lo) / 255.0, 1e-8)
+            sx.append(s)
+            zx.append(round(-lo / s))
+        wp = np.asarray(w)[order, :]
+        got = peg_matmul(
+            jnp.asarray(perm), jnp.asarray(wp),
+            jnp.asarray(np.array(sx, np.float32)),
+            jnp.asarray(np.array(zx, np.float32)),
+            jnp.array([0.01, 0.0, 255.0, -127.0, 127.0], jnp.float32),
+            num_groups=k,
+        )
+        return float(jnp.mean((got - exact) ** 2))
+
+    e1, e2, e8 = err(1), err(2), err(8)
+    # K=2 still mixes 6 normal dims into the outlier group -> modest gain;
+    # K=8 (groups of 2) isolates the outlier pair -> order-of-magnitude gain.
+    assert e2 < e1, (e1, e2)
+    assert e8 < e1 * 0.2, (e1, e8)
+    assert e8 <= e2 + 1e-9, (e2, e8)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 80),
+    d=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    batched=st.booleans(),
+)
+def test_layernorm_matches_ref(rows, d, seed, batched):
+    rng = np.random.default_rng(seed)
+    shape = (3, rows, d) if batched else (rows, d)
+    x = _rand(rng, shape, np.float32, -10, 10)
+    gamma = _rand(rng, (d,), np.float32, 0.5, 2.0)
+    beta = _rand(rng, (d,), np.float32, -1, 1)
+    got = layernorm(x, gamma, beta)
+    want = ref.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(9)
+    x = _rand(rng, (20, 64), np.float32, -5, 5)
+    out = layernorm(x, jnp.ones((64,)), jnp.zeros((64,)))
+    np.testing.assert_allclose(np.asarray(jnp.mean(out, -1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(out, -1)), 1.0, atol=1e-3)
+
+
+def test_layernorm_scale_invariance():
+    # LayerNorm(a*x) == LayerNorm(x) for a > 0 (gamma=1, beta=0)
+    rng = np.random.default_rng(10)
+    x = _rand(rng, (7, 32), np.float32)
+    g = jnp.ones((32,))
+    b = jnp.zeros((32,))
+    np.testing.assert_allclose(
+        np.asarray(layernorm(3.7 * x, g, b)), np.asarray(layernorm(x, g, b)), atol=1e-4
+    )

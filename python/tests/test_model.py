@@ -1,0 +1,211 @@
+# pytest: L2 model semantics — shapes, quantizer plumbing, training steps.
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(name="test", vocab=64, d=32, heads=2, layers=2, d_ff=64,
+                    seq=16, n_out=3, outlier_dims=(5, 11))
+
+
+def _quant_inputs(cfg, enable=0.0, bits=8):
+    offs, S = M.site_offsets(cfg)
+    n = len(M.site_spec(cfg))
+    scales = jnp.full((S,), 0.05, jnp.float32)
+    zps = jnp.full((S,), 128.0, jnp.float32)
+    qcfg = jnp.tile(jnp.array([[0.0, float(2**bits - 1), enable]], jnp.float32),
+                    (n, 1))
+    return scales, zps, qcfg
+
+
+def _batch(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(3, cfg.vocab, (b, cfg.seq)).astype(np.int32)
+    ids[:, 0] = M.CLS_ID
+    ids[:, cfg.seq // 2] = M.SEP_ID
+    ids[:, -1] = M.SEP_ID
+    tt = np.zeros((b, cfg.seq), np.int32)
+    tt[:, cfg.seq // 2:] = 1
+    mask = np.ones((b, cfg.seq), np.float32)
+    mask[:, -3:-1] = 0.0  # some padding in the middle-end
+    return jnp.asarray(ids), jnp.asarray(tt), jnp.asarray(mask)
+
+
+def _params(cfg, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def test_spec_shapes_consistent():
+    spec = M.param_spec(CFG)
+    names = [n for n, _ in spec]
+    assert len(names) == len(set(names))
+    sites = M.site_spec(CFG)
+    assert len(sites) == 2 + 13 * CFG.layers + 2
+    offs, S = M.site_offsets(CFG)
+    assert offs[0] == 0 and S == sum(c for _, c in sites)
+    # base config mirrors the paper's proportions: 13 sites/layer
+    base = M.CONFIGS["base"]
+    assert len(M.site_spec(base)) == 2 + 13 * base.layers + 2
+
+
+def test_forward_shapes_and_determinism():
+    params = _params(CFG)
+    s, z, c = _quant_inputs(CFG)
+    ids, tt, mask = _batch(CFG)
+    logits1, taps = M.forward(CFG, params, s, z, c, ids, tt, mask,
+                              collect_taps=True, use_pallas=False)
+    logits2, _ = M.forward(CFG, params, s, z, c, ids, tt, mask,
+                           use_pallas=False)
+    assert logits1.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
+    assert set(taps.keys()) == {n for n, _ in M.site_spec(CFG)}
+    assert taps["layer0.res2_sum"].shape == (2, CFG.seq, CFG.d)
+    assert taps["layer0.attn_probs"].shape == (2, CFG.heads, CFG.seq, CFG.seq)
+
+
+def test_quant_disabled_equals_no_quant_path():
+    params = _params(CFG)
+    ids, tt, mask = _batch(CFG)
+    s, z, c = _quant_inputs(CFG, enable=0.0)
+    a, _ = M.forward(CFG, params, s, z, c, ids, tt, mask, use_pallas=False)
+    s2, z2, c2 = _quant_inputs(CFG, enable=0.0, bits=2)  # bits irrelevant
+    b, _ = M.forward(CFG, params, s2, z2, c2, ids, tt, mask, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+
+def test_quant_enabled_perturbs_but_stays_finite():
+    params = _params(CFG)
+    ids, tt, mask = _batch(CFG)
+    s0, z0, c0 = _quant_inputs(CFG, enable=0.0)
+    fp, _ = M.forward(CFG, params, s0, z0, c0, ids, tt, mask, use_pallas=False)
+    s1, z1, c1 = _quant_inputs(CFG, enable=1.0)
+    q, _ = M.forward(CFG, params, s1, z1, c1, ids, tt, mask, use_pallas=False)
+    assert np.all(np.isfinite(np.asarray(q)))
+    assert not np.allclose(np.asarray(fp), np.asarray(q))
+
+
+def test_pallas_and_jnp_paths_agree():
+    params = _params(CFG)
+    ids, tt, mask = _batch(CFG)
+    s, z, c = _quant_inputs(CFG, enable=1.0)
+    a, _ = M.forward(CFG, params, s, z, c, ids, tt, mask, use_pallas=True)
+    b, _ = M.forward(CFG, params, s, z, c, ids, tt, mask, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_padding_mask_blocks_attention():
+    # changing a padded token must not change the logits
+    params = _params(CFG)
+    ids, tt, mask = _batch(CFG)
+    s, z, c = _quant_inputs(CFG)
+    a, _ = M.forward(CFG, params, s, z, c, ids, tt, mask, use_pallas=False)
+    ids2 = np.asarray(ids).copy()
+    pad_col = CFG.seq - 2          # masked position (mask==0)
+    assert mask[0, pad_col] == 0.0
+    ids2[:, pad_col] = 7
+    b, _ = M.forward(CFG, params, jnp.asarray(s), z, c, jnp.asarray(ids2), tt,
+                     mask, use_pallas=False)
+    # MASK_BIAS=-30 gives e^-30 leakage; allow tiny tolerance
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_fp32_train_step_reduces_loss():
+    params = _params(CFG)
+    zeros = [jnp.zeros_like(p) for p in params]
+    ids, tt, mask = _batch(CFG, b=4)
+    labels = jnp.asarray(np.array([0, 1, 2, 0], np.int32))
+    m, v = zeros, [jnp.zeros_like(p) for p in params]
+    losses = []
+    for step in range(40):
+        params, m, v, loss = M.fp32_train_step(
+            CFG, params, m, v, ids, tt, mask, labels,
+            jnp.float32(1e-3), jnp.float32(0.0), jnp.float32(0.0),
+            regression=False)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.6, losses[::10]
+
+
+def test_fp32_train_regression_head():
+    cfg = M.ModelConfig(**{**CFG.__dict__, "n_out": 1})
+    params = _params(cfg)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    ids, tt, mask = _batch(cfg, b=4)
+    labels = jnp.asarray(np.array([0.1, 0.9, 0.5, 0.2], np.float32))
+    losses = []
+    for _ in range(25):
+        params, m, v, loss = M.fp32_train_step(
+            cfg, params, m, v, ids, tt, mask, labels,
+            jnp.float32(5e-3), jnp.float32(0.0), jnp.float32(0.0),
+            regression=True)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses[::8]
+
+
+def test_outlier_aux_loss_creates_outliers():
+    # after training with the aux loss, the designated FFN-output dims must
+    # dominate the per-dim dynamic range at [SEP] positions — the paper's
+    # Fig. 2b structure, installed per DESIGN.md §2.
+    params = _params(CFG, seed=1)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    ids, tt, mask = _batch(CFG, b=4)
+    labels = jnp.asarray(np.array([0, 1, 2, 0], np.int32))
+    for _ in range(80):
+        params, m, v, _ = M.fp32_train_step(
+            CFG, params, m, v, ids, tt, mask, labels,
+            jnp.float32(2e-3), jnp.float32(1.0), jnp.float32(10.0),
+            regression=False)
+    s, z, c = _quant_inputs(CFG)
+    _, taps = M.forward(CFG, params, s, z, c, ids, tt, mask,
+                        collect_taps=True, use_pallas=False)
+    t = np.asarray(taps[f"layer{CFG.layers-1}.ffn_out"])  # (B,T,d)
+    rng_per_dim = t.max((0, 1)) - t.min((0, 1))
+    out_dims = list(CFG.outlier_dims)
+    rest = [i for i in range(CFG.d) if i not in out_dims]
+    # designated dims must carry large, [SEP]-structured ranges; "few dims
+    # responsible" = they dwarf the typical (median) dim
+    assert rng_per_dim[out_dims].min() > 8.0, rng_per_dim[out_dims]
+    assert rng_per_dim[out_dims].min() > 3.0 * np.median(rng_per_dim[rest]), (
+        rng_per_dim[out_dims], np.median(rng_per_dim[rest]))
+    # and the FFN residual-sum range must dwarf the FFN input range
+    ffn_in = np.asarray(taps[f"layer{CFG.layers-1}.ln1_out"])
+    res = np.asarray(taps[f"layer{CFG.layers-1}.res2_sum"])
+    assert res.max() - res.min() > 2.0 * (ffn_in.max() - ffn_in.min())
+
+
+def test_qat_train_step_runs_and_updates_scales():
+    cfg = CFG
+    params = _params(cfg)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    offs, S = M.site_offsets(cfg)
+    n = len(M.site_spec(cfg))
+    n_wq = len(M.wq_spec(cfg))
+    a_s = jnp.full((S,), 0.05, jnp.float32)
+    a_z = jnp.full((S,), 128.0, jnp.float32)
+    a_c = jnp.tile(jnp.array([[0.0, 255.0, 1.0]], jnp.float32), (n, 1))
+    w_s = jnp.full((n_wq,), 0.01, jnp.float32)
+    w_c = jnp.tile(jnp.array([[-127.0, 127.0, 1.0]], jnp.float32), (n_wq, 1))
+    zS = jnp.zeros((S,), jnp.float32)
+    zW = jnp.zeros((n_wq,), jnp.float32)
+    ids, tt, mask = _batch(cfg, b=4)
+    labels = jnp.asarray(np.array([0, 1, 2, 0], np.int32))
+
+    losses = []
+    ms, vs, mw, vw = zS, zS, zW, zW
+    for _ in range(12):
+        (params, m, v, a_s, ms, vs, w_s, mw, vw, loss) = M.qat_train_step(
+            cfg, params, m, v, a_s, ms, vs, a_z, a_c,
+            w_s, mw, vw, w_c, ids, tt, mask, labels,
+            jnp.float32(2e-3), jnp.float32(1e-4), regression=False)
+        losses.append(float(loss))
+    assert np.all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+    assert float(jnp.min(a_s)) > 0 and float(jnp.min(w_s)) > 0
+    assert not np.allclose(np.asarray(a_s), 0.05)  # scales actually learned

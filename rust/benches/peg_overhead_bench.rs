@@ -1,0 +1,71 @@
+//! PEG re-scaling overhead vs K — the paper's §4 efficiency argument:
+//! per-embedding quantization needs d accumulator re-scalings per output,
+//! PEG needs only K. We measure the end-to-end latency of the standalone
+//! Pallas PEG-matmul artifacts (T=128, d=768, n=768) at K = 1 / 3 / 6 / 16
+//! on the PJRT CPU client, plus the fake-quant kernel.
+
+use tq::runtime::{Runtime, Value};
+use tq::tensor::Tensor;
+use tq::util::bench::{append_csv, Bencher};
+use tq::util::rng::Rng;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping peg_overhead_bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut rng = Rng::new(3);
+    let csv = "results/bench_peg.csv";
+
+    let x = Tensor::randn(&[128, 768], 1.0, &mut rng);
+    let w = Tensor::randn(&[768, 768], 0.05, &mut rng);
+
+    for k in [1usize, 3, 6, 16] {
+        let name = format!("kernel_peg_k{k}");
+        if rt.manifest().artifact(&name).is_err() {
+            continue;
+        }
+        let sx = Tensor::full(&[k], 0.05);
+        let zx = Tensor::full(&[k], 128.0);
+        let cfg = Tensor::new(vec![5], vec![0.01, 0.0, 255.0, -127.0, 127.0]).unwrap();
+        // warm the executable cache before timing
+        rt.run(&name, &[
+            Value::F32(x.clone()), Value::F32(w.clone()), Value::F32(sx.clone()),
+            Value::F32(zx.clone()), Value::F32(cfg.clone()),
+        ]).unwrap();
+        let flops = 2u64 * 128 * 768 * 768;
+        let s = Bencher::default().throughput(flops).bench(
+            &format!("peg_matmul 128x768x768 K={k} (flop/s)"),
+            || {
+                rt.run(&name, &[
+                    Value::F32(x.clone()), Value::F32(w.clone()), Value::F32(sx.clone()),
+                    Value::F32(zx.clone()), Value::F32(cfg.clone()),
+                ])
+                .unwrap();
+            },
+        );
+        append_csv(csv, &s).ok();
+    }
+
+    // fake-quant kernel artifact
+    let s = Tensor::full(&[768], 0.05);
+    let z = Tensor::full(&[768], 128.0);
+    let c = Tensor::new(vec![3], vec![0.0, 255.0, 1.0]).unwrap();
+    rt.run("kernel_fq_d768", &[
+        Value::F32(x.clone()), Value::F32(s.clone()), Value::F32(z.clone()), Value::F32(c.clone()),
+    ]).unwrap();
+    let st = Bencher::default().throughput((128 * 768) as u64).bench(
+        "pallas fake_quant 128x768 (elems/s)",
+        || {
+            rt.run("kernel_fq_d768", &[
+                Value::F32(x.clone()), Value::F32(s.clone()), Value::F32(z.clone()),
+                Value::F32(c.clone()),
+            ])
+            .unwrap();
+        },
+    );
+    append_csv(csv, &st).ok();
+}

@@ -1,0 +1,91 @@
+//! End-to-end pipeline benchmarks: quantized-inference latency per method
+//! (the efficiency side of Tables 4/5/6), calibration throughput, and the
+//! policy-assembly cost. Skips gracefully when checkpoints are missing.
+
+use std::collections::BTreeMap;
+
+use tq::coordinator::calibrate::{calibrate, CalibCfg};
+use tq::coordinator::experiments::load_ckpt;
+use tq::coordinator::Ctx;
+use tq::data;
+use tq::model::qconfig::{assemble_act_tensors, QuantPolicy, SiteCfg};
+use tq::quant::Granularity;
+use tq::runtime::{lit_f32, lit_i32};
+use tq::util::bench::{append_csv, Bencher};
+
+fn main() {
+    let ctx = match Ctx::new("artifacts", "checkpoints", "results") {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping pipeline_bench: {e}");
+            return;
+        }
+    };
+    let task = ctx.task("mnli").unwrap();
+    let params = match load_ckpt(&ctx, &task) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("skipping pipeline_bench (no checkpoint): {e}");
+            return;
+        }
+    };
+    let info = ctx.model_info(&task).unwrap();
+    let csv = "results/bench_pipeline.csv";
+
+    // calibration throughput (sequences/second through the diag graph)
+    let s = Bencher::quick().throughput(4).bench("calibration (4 seqs, diag graph)", || {
+        calibrate(&ctx, &task, &params, &CalibCfg {
+            num_batches: 4,
+            ..Default::default()
+        })
+        .unwrap();
+    });
+    append_csv(csv, &s).ok();
+
+    let calib = calibrate(&ctx, &task, &params, &CalibCfg::default()).unwrap();
+
+    // policy assembly cost (the L3 "hot" configuration path)
+    let peg = SiteCfg {
+        bits: 8,
+        granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+        enabled: true,
+    };
+    let mut policy = QuantPolicy::uniform(8, 8);
+    for fam in ["ln1_out", "ffn_out", "res2_sum"] {
+        policy = policy.with_site_family(info, fam, peg.clone());
+    }
+    let s = Bencher::default().bench("assemble_act_tensors (PEG policy, 82 sites)", || {
+        std::hint::black_box(assemble_act_tensors(info, &policy, &calib.trackers).unwrap());
+    });
+    append_csv(csv, &s).ok();
+
+    // quantized inference latency per method (batch-8 forward)
+    let split = data::dev_split(&task, info.config.seq).unwrap();
+    let batch = data::make_batch(&split, 0, 8, info.config.seq);
+    for (name, pol) in [
+        ("fp32", QuantPolicy::fp32()),
+        ("w8a8 per-tensor", QuantPolicy::uniform(8, 8)),
+        ("w8a8 peg k=8+P", policy.clone()),
+    ] {
+        let act = assemble_act_tensors(info, &pol, &calib.trackers).unwrap();
+        let mut lits = Vec::new();
+        for t in &params.tensors {
+            lits.push(lit_f32(t.data(), t.shape()).unwrap());
+        }
+        lits.push(lit_f32(&act.scales, &[act.scales.len()]).unwrap());
+        lits.push(lit_f32(&act.zps, &[act.zps.len()]).unwrap());
+        lits.push(lit_f32(&act.cfg, &[info.sites.len(), 3]).unwrap());
+        lits.push(lit_i32(&batch.ids, &[8, info.config.seq]).unwrap());
+        lits.push(lit_i32(&batch.token_type, &[8, info.config.seq]).unwrap());
+        lits.push(lit_f32(&batch.mask, &[8, info.config.seq]).unwrap());
+        // warm
+        ctx.rt.run_lits("fwd_cls_b8", &lits).unwrap();
+        let s = Bencher::default().throughput(8).bench(
+            &format!("fwd_cls_b8 inference [{name}] (seqs/s)"),
+            || {
+                ctx.rt.run_lits("fwd_cls_b8", &lits).unwrap();
+            },
+        );
+        append_csv(csv, &s).ok();
+    }
+}

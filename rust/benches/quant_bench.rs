@@ -1,0 +1,75 @@
+//! Quantization-substrate micro-benchmarks: QDQ throughput, range
+//! estimators, PEG parameter assembly, AdaRound iteration cost.
+//! (criterion is unavailable offline; rust/src/util/bench.rs provides the
+//! harness. `cargo bench` runs this with --bench.)
+
+use tq::quant::estimators::RangeTracker;
+use tq::quant::peg::lane_qparams;
+use tq::quant::{qdq_slice, qparams_from_range, Estimator, Granularity, QGrid};
+use tq::tensor::Tensor;
+use tq::util::bench::{append_csv, Bencher};
+use tq::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let csv = "results/bench_quant.csv";
+    let grid = QGrid::asymmetric(8);
+    let p = qparams_from_range(-4.0, 4.0, grid);
+
+    // QDQ throughput on a (64, 768) activation tensor
+    let t = Tensor::randn(&[64, 768], 1.0, &mut rng);
+    let mut buf = t.data().to_vec();
+    let b = Bencher::default().throughput((64 * 768) as u64);
+    let s = b.bench("qdq_per_tensor 64x768 (elems/s)", || {
+        buf.copy_from_slice(t.data());
+        qdq_slice(&mut buf, p, grid);
+    });
+    append_csv(csv, &s).ok();
+
+    // range estimator observation cost
+    for (name, est) in [
+        ("observe current-min-max", Estimator::CurrentMinMax),
+        ("observe running-min-max", Estimator::RunningMinMax),
+        ("observe mse (reservoir)", Estimator::Mse),
+    ] {
+        let mut tr = RangeTracker::new(est, 768);
+        let s = Bencher::default()
+            .throughput((64 * 768) as u64)
+            .bench(&format!("{name} 64x768"), || {
+                tr.observe(&t).unwrap();
+            });
+        append_csv(csv, &s).ok();
+    }
+
+    // MSE grid search (40 candidate ranges over the reservoir)
+    let mut tr = RangeTracker::new(Estimator::Mse, 768);
+    tr.observe(&t).unwrap();
+    let s = Bencher::default().bench("mse grid search (65k samples)", || {
+        std::hint::black_box(tr.tensor_range(grid));
+    });
+    append_csv(csv, &s).ok();
+
+    // PEG parameter assembly incl. range-based permutation, d=768
+    let lo: Vec<f32> = (0..768).map(|_| rng.uniform(-8.0, 0.0)).collect();
+    let hi: Vec<f32> = (0..768).map(|_| rng.uniform(0.0, 8.0)).collect();
+    for k in [1usize, 3, 6, 768] {
+        let gran = Granularity::PerEmbeddingGroup { k, permute: true };
+        let s = Bencher::default().bench(&format!("peg lane_qparams d=768 K={k}"), || {
+            std::hint::black_box(lane_qparams(&lo, &hi, &gran, grid).unwrap());
+        });
+        append_csv(csv, &s).ok();
+    }
+
+    // AdaRound single-layer optimisation (128x128, 200 iters)
+    let w = Tensor::randn(&[128, 128], 0.05, &mut rng);
+    let z = Tensor::randn(&[256, 128], 1.0, &mut rng);
+    let mix = Tensor::randn(&[128, 128], (1.0f32 / 128.0).sqrt(), &mut rng);
+    let x = z.matmul(&mix).unwrap();
+    let sgrid = QGrid::symmetric(4);
+    let wp = tq::quant::qparams_symmetric(w.abs_max(), sgrid);
+    let cfg = tq::quant::adaround::AdaRoundCfg { iters: 200, ..Default::default() };
+    let s = Bencher::quick().bench("adaround 128x128 W4 (200 iters)", || {
+        std::hint::black_box(tq::quant::adaround::adaround(&w, &x, wp, sgrid, &cfg).unwrap());
+    });
+    append_csv(csv, &s).ok();
+}

@@ -1,0 +1,218 @@
+//! Calibration runner: streams calibration sequences through the
+//! diagnostic executable (quantizers disabled → FP32 taps at every site)
+//! and feeds per-site range estimators; also accumulates the per-layer
+//! Gram matrices AdaRound needs.
+//!
+//! Matches the paper's static range estimation (§2): a few batches of
+//! calibration data, estimator ∈ {current min-max, running min-max, MSE},
+//! batch size and batch count per Appendix B.2.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::data::{self, TaskSpec};
+use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
+use crate::model::Params;
+use crate::quant::estimators::RangeTracker;
+use crate::quant::Estimator;
+use crate::runtime::{lit_f32, lit_i32};
+use crate::tensor::Tensor;
+
+/// Calibration output: per-site trackers plus (optional) AdaRound Grams.
+pub struct Calibration {
+    pub trackers: BTreeMap<String, RangeTracker>,
+    /// site name -> (G = XᵀX over token rows, row count) for sites that
+    /// feed linear layers
+    pub grams: BTreeMap<String, (Tensor, f32)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibCfg {
+    pub estimator: Estimator,
+    /// batch size (sequences per estimator observation)
+    pub batch_size: usize,
+    /// number of observations
+    pub num_batches: usize,
+    pub collect_grams: bool,
+    pub seed: u64,
+}
+
+impl Default for CalibCfg {
+    fn default() -> Self {
+        // paper Appendix B.2: running min-max with bs=1, nb=16 is the most
+        // common best configuration
+        CalibCfg {
+            estimator: Estimator::RunningMinMax,
+            batch_size: 1,
+            num_batches: 16,
+            collect_grams: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Sites whose taps are inputs of linear layers (for AdaRound).
+pub fn gram_sites(layers: usize) -> Vec<String> {
+    let mut v = vec!["embed_ln_out".to_string()];
+    for i in 0..layers {
+        v.push(format!("layer{i}.attn_ctx"));
+        v.push(format!("layer{i}.ln1_out"));
+        v.push(format!("layer{i}.ffn_hidden"));
+        v.push(format!("layer{i}.ln2_out"));
+    }
+    v.push("pooled".to_string());
+    v
+}
+
+/// Run calibration for `task` on FP32 `params`.
+pub fn calibrate(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    cfg: &CalibCfg,
+) -> Result<Calibration> {
+    let info = ctx.model_info(task)?;
+    let artifact = format!("diag_{}_b1", ctx.head(task));
+    let seq = info.config.seq;
+    // calibration data comes from the training split (paper: "passing a
+    // few batches of calibration data")
+    let split = data::train_split(task, seq)?;
+
+    let mut trackers: BTreeMap<String, RangeTracker> = info
+        .sites
+        .iter()
+        .map(|s| (s.name.clone(), RangeTracker::new(cfg.estimator, s.channels)))
+        .collect();
+    let gsites = gram_sites(info.config.layers);
+    let mut grams: BTreeMap<String, (Tensor, f32)> = BTreeMap::new();
+
+    // FP32 taps: quantizers disabled
+    let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+    let mut seq_idx = (cfg.seed as usize) % split.examples.len();
+
+    for _b in 0..cfg.num_batches {
+        // emulate batch-size > 1 by concatenating per-sequence taps before
+        // one estimator observation
+        let mut site_batches: BTreeMap<String, Vec<Tensor>> = BTreeMap::new();
+        for _ in 0..cfg.batch_size {
+            let ex = &split.examples[seq_idx % split.examples.len()];
+            seq_idx += 1;
+            let taps = run_diag(ctx, &artifact, info, params, &fp32.scales, &fp32.zps, &fp32.cfg, ex)?;
+            for (site, t) in taps {
+                site_batches.entry(site).or_default().push(t);
+            }
+        }
+        for (site, parts) in site_batches {
+            let joined = concat_rows(&parts)?;
+            trackers.get_mut(&site).expect("site tracker").observe(&joined)?;
+            if cfg.collect_grams && gsites.contains(&site) {
+                accumulate_gram(&mut grams, &site, &joined)?;
+            }
+        }
+    }
+    Ok(Calibration { trackers, grams })
+}
+
+/// Execute the diagnostic artifact on one example; returns site -> tap.
+pub fn run_diag(
+    ctx: &Ctx,
+    artifact: &str,
+    info: &crate::model::manifest::ModelInfo,
+    params: &Params,
+    act_scales: &[f32],
+    act_zps: &[f32],
+    act_cfg: &[f32],
+    ex: &data::Example,
+) -> Result<BTreeMap<String, Tensor>> {
+    let seq = info.config.seq;
+    let n_sites = info.sites.len();
+    let mut lits = Vec::with_capacity(params.tensors.len() + 6);
+    for t in &params.tensors {
+        lits.push(lit_f32(t.data(), t.shape())?);
+    }
+    lits.push(lit_f32(act_scales, &[act_scales.len()])?);
+    lits.push(lit_f32(act_zps, &[act_zps.len()])?);
+    lits.push(lit_f32(act_cfg, &[n_sites, 3])?);
+    lits.push(lit_i32(&ex.ids, &[1, seq])?);
+    lits.push(lit_i32(&ex.token_type, &[1, seq])?);
+    lits.push(lit_f32(&ex.mask, &[1, seq])?);
+    let mut out = ctx.rt.run_lits(artifact, &lits)?;
+    // outputs: logits, then taps in site order
+    let taps = out.split_off(1);
+    Ok(info
+        .sites
+        .iter()
+        .map(|s| s.name.clone())
+        .zip(taps)
+        .collect())
+}
+
+/// Concatenate tensors along a new leading "rows" axis (flattening all but
+/// the last axis).
+fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
+    let d = parts[0].last_dim();
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    for p in parts {
+        rows += p.rows();
+        data.extend_from_slice(p.data());
+    }
+    Tensor::new(vec![rows, d], data)
+}
+
+fn accumulate_gram(
+    grams: &mut BTreeMap<String, (Tensor, f32)>,
+    site: &str,
+    x: &Tensor,
+) -> Result<()> {
+    let d = x.last_dim();
+    let rows = x.rows();
+    let flat = Tensor::new(vec![rows, d], x.data().to_vec())?;
+    let g = flat.transpose2()?.matmul(&flat)?;
+    match grams.get_mut(site) {
+        Some((acc, n)) => {
+            for (a, b) in acc.data_mut().iter_mut().zip(g.data()) {
+                *a += b;
+            }
+            *n += rows as f32;
+        }
+        None => {
+            grams.insert(site.to_string(), (g, rows as f32));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_sites_cover_all_linear_inputs() {
+        let g = gram_sites(6);
+        assert_eq!(g.len(), 2 + 4 * 6);
+        assert!(g.contains(&"layer5.ffn_hidden".to_string()));
+        assert!(g.contains(&"embed_ln_out".to_string()));
+    }
+
+    #[test]
+    fn concat_rows_shapes() {
+        let a = Tensor::zeros(&[1, 4, 3]);
+        let b = Tensor::zeros(&[1, 4, 3]);
+        let c = concat_rows(&[a, b]).unwrap();
+        assert_eq!(c.shape(), &[8, 3]);
+    }
+
+    #[test]
+    fn gram_accumulation() {
+        let mut grams = BTreeMap::new();
+        let x = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]).unwrap();
+        accumulate_gram(&mut grams, "s", &x).unwrap();
+        accumulate_gram(&mut grams, "s", &x).unwrap();
+        let (g, n) = &grams["s"];
+        assert_eq!(*n, 4.0);
+        assert_eq!(g.data(), &[2., 0., 0., 2.]); // 2 * I
+    }
+}

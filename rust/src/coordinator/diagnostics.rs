@@ -1,0 +1,189 @@
+//! Diagnostics powering the paper's figures:
+//! * Fig. 2a — per-token ranges of FFN input/output in a deep layer
+//! * Fig. 2b / 6-8 — outlier maps (>6σ) across embedding dims
+//! * Fig. 5 — attention mass on [SEP] per head (the "no-op" pattern)
+//! * Fig. 9-13 — per-sequence FFN ranges across architecture variants
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::calibrate::run_diag;
+use super::Ctx;
+use crate::data::{self, TaskSpec};
+use crate::model::manifest::ModelInfo;
+use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
+use crate::model::Params;
+use crate::tensor::Tensor;
+
+/// Taps for a handful of dev sequences, FP32.
+pub struct DiagRun {
+    /// per-sequence site -> tensor
+    pub per_seq: Vec<BTreeMap<String, Tensor>>,
+    pub examples: Vec<data::Example>,
+}
+
+pub fn collect_taps(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    n_seqs: usize,
+) -> Result<DiagRun> {
+    let info = ctx.model_info(task)?;
+    collect_taps_with(ctx, &format!("diag_{}_b1", ctx.head(task)), info, task, params, n_seqs)
+}
+
+/// Variant-agnostic tap collection (used for Fig. 9-13 model sweeps where
+/// the artifact name and model info differ).
+pub fn collect_taps_with(
+    ctx: &Ctx,
+    artifact: &str,
+    info: &ModelInfo,
+    task: &TaskSpec,
+    params: &Params,
+    n_seqs: usize,
+) -> Result<DiagRun> {
+    let split = data::dev_split(task, info.config.seq)?;
+    let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+    let mut per_seq = Vec::with_capacity(n_seqs);
+    let mut examples = Vec::with_capacity(n_seqs);
+    for ex in split.examples.iter().take(n_seqs) {
+        per_seq.push(run_diag(ctx, artifact, info, params, &fp32.scales, &fp32.zps, &fp32.cfg, ex)?);
+        examples.push(ex.clone());
+    }
+    Ok(DiagRun { per_seq, examples })
+}
+
+/// Fig. 2a: per-token min/max of one site for one sequence (masked tokens
+/// excluded).
+pub fn per_token_ranges(taps: &BTreeMap<String, Tensor>, site: &str, mask: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let t = &taps[site]; // (1, T, d)
+    let (lo, hi) = t.row_min_max();
+    let take = mask.iter().filter(|&&m| m == 1.0).count().min(lo.len());
+    (lo[..take].to_vec(), hi[..take].to_vec())
+}
+
+/// Fig. 2b: boolean outlier mask over (token, dim): |x - mean| > 6σ of the
+/// whole tensor (the paper's definition).
+pub fn outlier_mask(taps: &BTreeMap<String, Tensor>, site: &str) -> (Vec<bool>, usize, usize) {
+    let t = &taps[site]; // (1, T, d)
+    let mean = t.mean();
+    let std = t.std().max(1e-9);
+    let d = t.last_dim();
+    let rows = t.rows();
+    let mask = t
+        .data()
+        .iter()
+        .map(|&x| (x - mean).abs() > 6.0 * std)
+        .collect();
+    (mask, rows, d)
+}
+
+/// Dims that are outliers in at least `min_count` of the sequences —
+/// the "few designated embedding dimensions" of Fig. 2b.
+pub fn consistent_outlier_dims(runs: &DiagRun, site: &str, min_count: usize) -> Vec<usize> {
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for taps in &runs.per_seq {
+        let (mask, rows, d) = outlier_mask(taps, site);
+        let mut dims = vec![false; d];
+        for r in 0..rows {
+            for c in 0..d {
+                if mask[r * d + c] {
+                    dims[c] = true;
+                }
+            }
+        }
+        for (c, &hit) in dims.iter().enumerate() {
+            if hit {
+                *counts.entry(c).or_default() += 1;
+            }
+        }
+    }
+    counts
+        .into_iter()
+        .filter(|(_, n)| *n >= min_count)
+        .map(|(c, _)| c)
+        .collect()
+}
+
+/// Fig. 5: fraction of attention probability mass on [SEP] tokens, per
+/// head, for one layer. Returns (heads,) means over real (unmasked) query
+/// tokens.
+pub fn attention_sep_mass(
+    info: &ModelInfo,
+    taps: &BTreeMap<String, Tensor>,
+    ex: &data::Example,
+    layer: usize,
+) -> Vec<f32> {
+    let probs = &taps[&format!("layer{layer}.attn_probs")]; // (1, h, T, T)
+    let h = info.config.heads;
+    let t_len = info.config.seq;
+    let sep_cols: Vec<usize> = ex
+        .ids
+        .iter()
+        .enumerate()
+        .filter(|(_, &id)| id == info.config.sep_id)
+        .map(|(i, _)| i)
+        .collect();
+    let real_rows: Vec<usize> = ex
+        .mask
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m == 1.0)
+        .map(|(i, _)| i)
+        .collect();
+    let mut out = vec![0f32; h];
+    for head in 0..h {
+        let mut acc = 0f32;
+        for &r in &real_rows {
+            let row0 = head * t_len * t_len + r * t_len;
+            let mass: f32 = sep_cols.iter().map(|&c| probs.data()[row0 + c]).sum();
+            acc += mass;
+        }
+        out[head] = acc / real_rows.len().max(1) as f32;
+    }
+    out
+}
+
+/// Fig. 9-13: per-sequence (min, max) of a site across several sequences.
+pub fn per_sequence_ranges(runs: &DiagRun, site: &str) -> Vec<(f32, f32)> {
+    runs.per_seq
+        .iter()
+        .map(|taps| {
+            let t = &taps[site];
+            (t.min(), t.max())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_taps(site: &str, t: Tensor) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert(site.to_string(), t);
+        m
+    }
+
+    #[test]
+    fn outlier_mask_flags_extremes() {
+        let mut data = vec![0.0f32; 64];
+        data[10] = 100.0;
+        let taps = fake_taps("s", Tensor::new(vec![1, 8, 8], data).unwrap());
+        let (mask, rows, d) = outlier_mask(&taps, "s");
+        assert_eq!((rows, d), (8, 8));
+        assert!(mask[10]);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn per_token_ranges_respect_mask() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let taps = fake_taps("s", Tensor::new(vec![1, 4, 3], data).unwrap());
+        let mask = vec![1.0, 1.0, 0.0, 0.0];
+        let (lo, hi) = per_token_ranges(&taps, "s", &mask);
+        assert_eq!(lo, vec![0.0, 3.0]);
+        assert_eq!(hi, vec![2.0, 5.0]);
+    }
+}

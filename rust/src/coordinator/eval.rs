@@ -1,0 +1,90 @@
+//! Dev-set evaluation through the batched forward executables, producing
+//! the per-task GLUE scores of the paper's tables.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::data::{self, TaskKind, TaskSpec};
+use crate::metrics;
+use crate::model::qconfig::ActQuantTensors;
+use crate::model::Params;
+use crate::runtime::{lit_f32, lit_i32};
+
+/// Evaluate `params` (already weight-QDQ'd if applicable) under the given
+/// activation-quantizer tensors. Returns the task score ×100.
+pub fn evaluate(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    act: &ActQuantTensors,
+) -> Result<f64> {
+    let info = ctx.model_info(task)?;
+    let head = ctx.head(task);
+    let artifact = format!("fwd_{head}_b8");
+    let b = 8usize;
+    let seq = info.config.seq;
+    let n_sites = info.sites.len();
+    let split = data::dev_split(task, seq)?;
+    let n = split.examples.len();
+
+    let n_classes = match task.kind {
+        TaskKind::Classification(c) => c,
+        TaskKind::Regression => 1,
+    };
+
+    let mut pred_cls = Vec::with_capacity(n);
+    let mut gold_cls = Vec::with_capacity(n);
+    let mut pred_reg = Vec::with_capacity(n);
+    let mut gold_reg = Vec::with_capacity(n);
+
+    // pre-build the static literals once per eval (params + quant policy)
+    let mut static_lits = Vec::with_capacity(params.tensors.len() + 3);
+    for t in &params.tensors {
+        static_lits.push(lit_f32(t.data(), t.shape())?);
+    }
+    static_lits.push(lit_f32(&act.scales, &[act.scales.len()])?);
+    static_lits.push(lit_f32(&act.zps, &[act.zps.len()])?);
+    static_lits.push(lit_f32(&act.cfg, &[n_sites, 3])?);
+
+    let mut start = 0usize;
+    while start < n {
+        let batch = data::make_batch(&split, start, b, seq);
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(static_lits.len() + 3);
+        // Literal isn't Clone in the xla crate; rebuild per batch is the
+        // checked `run` path. We re-create only the small batch literals
+        // and re-create statics via references: execute takes Borrow<..>,
+        // so mix owned + borrowed through a small enum.
+        lits.push(lit_i32(&batch.ids, &[b, seq])?);
+        lits.push(lit_i32(&batch.token_type, &[b, seq])?);
+        lits.push(lit_f32(&batch.mask, &[b, seq])?);
+
+        // assemble full borrow list
+        let all: Vec<&xla::Literal> = static_lits.iter().chain(lits.iter()).collect();
+        let out = ctx.rt.run_lits_borrowed(&artifact, &all)?;
+        let logits = &out[0];
+
+        let take = (n - start).min(b);
+        for i in 0..take {
+            let ex = &split.examples[start + i];
+            match task.kind {
+                TaskKind::Regression => {
+                    pred_reg.push(logits.data()[i] as f64);
+                    gold_reg.push(ex.target as f64);
+                }
+                TaskKind::Classification(_) => {
+                    let row = &logits.data()[i * info.config.n_out..(i + 1) * info.config.n_out];
+                    let pred = row[..n_classes]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap_or(0);
+                    pred_cls.push(pred);
+                    gold_cls.push(ex.label);
+                }
+            }
+        }
+        start += b;
+    }
+    Ok(metrics::task_score(task.name, &pred_cls, &gold_cls, &pred_reg, &gold_reg))
+}

@@ -1,0 +1,835 @@
+//! Experiment registry: one driver per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver prints the paper-shaped table to stdout and writes
+//! markdown + CSV under `results/`. Absolute scores differ from the paper
+//! (synthetic benchmark, tiny model — DESIGN.md §2); the claims under test
+//! are the *deltas between quantization configurations*.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::calibrate::{calibrate, CalibCfg, Calibration};
+use super::diagnostics as diag;
+use super::eval::evaluate;
+use super::train::{finetune, qat, qat_deployed_params, QatCfg, TrainCfg};
+use super::weights::{quantize_weights, AdaRoundOpts};
+use super::Ctx;
+use crate::data::{TaskSpec, TASKS};
+use crate::metrics::{glue_score, median};
+use crate::model::qconfig::{
+    assemble_act_tensors, ActQuantTensors, QuantPolicy, SiteCfg, WeightCfg,
+};
+use crate::model::{checkpoint, Params};
+use crate::quant::{Estimator, Granularity};
+use crate::report::{fmt_score, write_file, Table};
+
+/// Shared experiment options from the CLI.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// number of calibration seeds for PTQ medians (paper uses 5)
+    pub seeds: usize,
+    /// restrict to a subset of tasks (empty = all 8)
+    pub tasks: Vec<String>,
+    /// smaller calibration / fewer iterations for smoke runs
+    pub quick: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { seeds: 3, tasks: vec![], quick: false }
+    }
+}
+
+impl ExpOpts {
+    fn tasks(&self) -> Vec<TaskSpec> {
+        TASKS
+            .iter()
+            .filter(|t| self.tasks.is_empty() || self.tasks.iter().any(|n| n == t.name))
+            .copied()
+            .collect()
+    }
+
+    fn hard_tasks(&self) -> Vec<TaskSpec> {
+        // the paper's four "problematic" tasks
+        TASKS
+            .iter()
+            .filter(|t| ["stsb", "mnli", "qnli", "rte"].contains(&t.name))
+            .filter(|t| self.tasks.is_empty() || self.tasks.iter().any(|n| n == t.name))
+            .copied()
+            .collect()
+    }
+}
+
+/// Load (or complain about) the fine-tuned FP32 checkpoint for a task.
+pub fn load_ckpt(ctx: &Ctx, task: &TaskSpec) -> Result<Params> {
+    let path = ctx.ckpt_path(task.name);
+    checkpoint::load(&path).map_err(|_| {
+        anyhow!(
+            "missing checkpoint {} — run `repro finetune --all` first",
+            path.display()
+        )
+    })
+}
+
+/// `repro finetune [--all | --task t] [--epochs n]`
+pub fn cmd_finetune(ctx: &Ctx, opts: &ExpOpts, epochs: usize, lr: f32) -> Result<()> {
+    let mut summary = Table::new(
+        "FP32 fine-tuning (synthetic GLUE)",
+        &["task", "steps", "first loss", "last loss", "dev score"],
+    );
+    for task in opts.tasks() {
+        let t0 = std::time::Instant::now();
+        let cfg = TrainCfg { epochs, lr, ..Default::default() };
+        let res = finetune(ctx, &task, &cfg)?;
+        checkpoint::save(&res.params, ctx.ckpt_path(task.name))?;
+        let info = ctx.model_info(&task)?;
+        let act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+        let score = evaluate(ctx, &task, &res.params, &act)?;
+        println!(
+            "[{}] {} steps in {:.1}s -> dev {score:.2}",
+            task.name,
+            res.losses.len(),
+            t0.elapsed().as_secs_f32()
+        );
+        summary.row(vec![
+            task.name.to_string(),
+            res.losses.len().to_string(),
+            format!("{:.4}", res.losses.first().unwrap_or(&f32::NAN)),
+            format!("{:.4}", res.losses.last().unwrap_or(&f32::NAN)),
+            fmt_score(score),
+        ]);
+        // loss curve for EXPERIMENTS.md (end-to-end validation)
+        let curve: String = res
+            .losses
+            .iter()
+            .enumerate()
+            .map(|(i, l)| format!("{i},{l}\n"))
+            .collect();
+        write_file(ctx.results_dir.join(format!("loss_curve_{}.csv", task.name)), &curve)?;
+    }
+    print!("{}", summary.to_console());
+    write_file(ctx.results_dir.join("finetune.md"), &summary.to_markdown())?;
+    Ok(())
+}
+
+/// Quantization "configuration" = weight policy + activation policy +
+/// calibration settings, evaluated with median over seeds.
+pub struct EvalConfig {
+    pub policy: QuantPolicy,
+    pub calib: CalibCfg,
+    pub adaround: AdaRoundOpts,
+}
+
+impl EvalConfig {
+    pub fn new(policy: QuantPolicy) -> EvalConfig {
+        EvalConfig {
+            policy,
+            calib: CalibCfg::default(),
+            adaround: AdaRoundOpts::default(),
+        }
+    }
+}
+
+/// Evaluate a config on a task: calibrate -> quantize weights -> assemble
+/// activation tensors -> dev eval. Median over `seeds` calibration seeds.
+pub fn eval_config(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    cfg: &EvalConfig,
+    seeds: usize,
+) -> Result<f64> {
+    let info = ctx.model_info(task)?;
+    let mut scores = Vec::with_capacity(seeds);
+    for seed in 0..seeds {
+        let calib_cfg = CalibCfg { seed: seed as u64 * 97, ..cfg.calib.clone() };
+        let calib = calibrate(ctx, task, params, &calib_cfg)?;
+        let (qp, _) = quantize_weights(info, params, &cfg.policy, Some(&calib), &cfg.adaround)?;
+        let act = assemble_act_tensors(info, &cfg.policy, &calib.trackers)?;
+        scores.push(evaluate(ctx, task, &qp, &act)?);
+    }
+    Ok(median(&scores))
+}
+
+fn fp32_score(ctx: &Ctx, task: &TaskSpec, params: &Params) -> Result<f64> {
+    let info = ctx.model_info(task)?;
+    let act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+    evaluate(ctx, task, params, &act)
+}
+
+fn w32a8(bits: u32) -> QuantPolicy {
+    QuantPolicy {
+        default: SiteCfg { bits, ..Default::default() },
+        overrides: BTreeMap::new(),
+        weights: WeightCfg { enabled: false, ..Default::default() },
+        weight_overrides: BTreeMap::new(),
+    }
+}
+
+fn w8a32() -> QuantPolicy {
+    QuantPolicy {
+        default: SiteCfg { enabled: false, ..Default::default() },
+        overrides: BTreeMap::new(),
+        weights: WeightCfg { bits: 8, ..Default::default() },
+        weight_overrides: BTreeMap::new(),
+    }
+}
+
+/// Table 1: standard 8-bit PTQ (W8A8 / W32A8 / W8A32) vs FP32 on all tasks.
+pub fn table1(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
+    let tasks = opts.tasks();
+    let mut table = Table::new(
+        "Table 1: post-training quantization (synthetic-GLUE dev)",
+        &["Configuration"]
+            .into_iter()
+            .chain(tasks.iter().map(|t| t.name))
+            .chain(["GLUE"])
+            .collect::<Vec<_>>(),
+    );
+    let configs: Vec<(&str, Option<QuantPolicy>)> = vec![
+        ("FP32", None),
+        ("W8A8", Some(QuantPolicy::uniform(8, 8))),
+        ("W32A8", Some(w32a8(8))),
+        ("W8A32", Some(w8a32())),
+    ];
+    for (label, policy) in configs {
+        let mut row = vec![label.to_string()];
+        let mut scores = Vec::new();
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let score = match &policy {
+                None => fp32_score(ctx, task, &params)?,
+                Some(p) => {
+                    eval_config(ctx, task, &params, &EvalConfig::new(p.clone()), opts.seeds)?
+                }
+            };
+            println!("  table1 {label} {}: {score:.2}", task.name);
+            row.push(fmt_score(score));
+            scores.push(score);
+        }
+        row.push(fmt_score(glue_score(&scores)));
+        table.row(row);
+    }
+    finish(ctx, "table1", &table)
+}
+
+/// Table 2: leave-one-out ablation of activation quantizers on the four
+/// problematic tasks (weights FP32, current min-max bs=1).
+pub fn table2(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
+    let tasks = opts.hard_tasks();
+    let mut table = Table::new(
+        "Table 2: leave-one-out activation-quantizer ablation (W FP32)",
+        &["Quantized activations"]
+            .into_iter()
+            .chain(tasks.iter().map(|t| t.name))
+            .collect::<Vec<_>>(),
+    );
+    let calib = CalibCfg {
+        estimator: Estimator::CurrentMinMax,
+        batch_size: 1,
+        num_batches: 1,
+        ..Default::default()
+    };
+    let base = w32a8(8);
+    let off = SiteCfg { enabled: false, ..Default::default() };
+
+    let mk = |info: &crate::model::manifest::ModelInfo, family: Option<&str>| -> QuantPolicy {
+        match family {
+            None => base.clone(),
+            Some(f) => base.clone().with_site_family(info, f, off.clone()),
+        }
+    };
+
+    let rows: Vec<(&str, Option<&str>)> = vec![
+        ("none (FP32 model)", Some("__fp32__")),
+        ("all", None),
+        ("all, except softmax input", Some("attn_scores")),
+        ("all, except sum of embeddings", Some("embed_sum")),
+        ("all, except self-attention output", Some("attn_out")),
+        ("all, except softmax output", Some("attn_probs")),
+        ("all, except residual sum after FFN", Some("res2_sum")),
+    ];
+    for (label, family) in rows {
+        let mut row = vec![label.to_string()];
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let score = if family == Some("__fp32__") {
+                fp32_score(ctx, task, &params)?
+            } else {
+                let info = ctx.model_info(task)?;
+                let policy = mk(info, family);
+                let cfg = EvalConfig { policy, calib: calib.clone(), adaround: Default::default() };
+                eval_config(ctx, task, &params, &cfg, opts.seeds)?
+            };
+            println!("  table2 {label:?} {}: {score:.2}", task.name);
+            row.push(fmt_score(score));
+        }
+        table.row(row);
+    }
+    // last row: res2_sum unquantized in the last two layers only
+    {
+        let mut row = vec!["same, but last 2 layers only".to_string()];
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let info = ctx.model_info(task)?;
+            let l = info.config.layers;
+            let policy = base
+                .clone()
+                .with_sites(
+                    &[
+                        format!("layer{}.res2_sum", l - 1).as_str(),
+                        format!("layer{}.res2_sum", l - 2).as_str(),
+                    ],
+                    off.clone(),
+                );
+            let cfg = EvalConfig { policy, calib: calib.clone(), adaround: Default::default() };
+            let score = eval_config(ctx, task, &params, &cfg, opts.seeds)?;
+            row.push(fmt_score(score));
+        }
+        table.row(row);
+    }
+    finish(ctx, "table2", &table)
+}
+
+/// Table 4: mixed-precision PTQ — progressively keep problematic tensors
+/// in 16 bits.
+pub fn table4(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
+    let tasks = opts.hard_tasks();
+    let mut table = Table::new(
+        "Table 4: mixed-precision PTQ (16-bit on problematic activations)",
+        &["Method"]
+            .into_iter()
+            .chain(tasks.iter().map(|t| t.name))
+            .collect::<Vec<_>>(),
+    );
+    let a16 = SiteCfg { bits: 16, ..Default::default() };
+
+    for (label, stage) in [
+        ("FP32", 0usize),
+        ("W8A8 PTQ", 1),
+        ("MP-PTQ (16b FFN residual sum)", 2),
+        ("MP-PTQ (+16b FFN in/out)", 3),
+        ("MP-PTQ (+16b final output)", 4),
+    ] {
+        let mut row = vec![label.to_string()];
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let info = ctx.model_info(task)?;
+            let score = if stage == 0 {
+                fp32_score(ctx, task, &params)?
+            } else {
+                let mut policy = QuantPolicy::uniform(8, 8);
+                if stage >= 2 {
+                    policy = policy.with_site_family(info, "res2_sum", a16.clone());
+                }
+                if stage >= 3 {
+                    policy = policy
+                        .with_site_family(info, "ln1_out", a16.clone())
+                        .with_site_family(info, "ffn_out", a16.clone());
+                }
+                if stage >= 4 {
+                    policy = policy.with_sites(&["head_out", "pooled"], a16.clone());
+                }
+                eval_config(ctx, task, &params, &EvalConfig::new(policy), opts.seeds)?
+            };
+            println!("  table4 {label:?} {}: {score:.2}", task.name);
+            row.push(fmt_score(score));
+        }
+        table.row(row);
+    }
+    finish(ctx, "table4", &table)
+}
+
+/// Table 5: per-embedding-group PTQ vs number of groups K ± permutation.
+/// With d=128 we map the paper's K ∈ {768, 6, 3} to {128 (=per-embd), 8, 4}.
+pub fn table5(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
+    let tasks = opts.hard_tasks();
+    let mut table = Table::new(
+        "Table 5: per-embedding-group PTQ (d=128; paper K=3,6 -> K=4,8)",
+        &["#groups K"]
+            .into_iter()
+            .chain(tasks.iter().map(|t| t.name))
+            .collect::<Vec<_>>(),
+    );
+    let ffn_sites = ["ln1_out", "ffn_out", "res2_sum"];
+
+    type Gran = Option<(Granularity, bool)>; // (granularity, only_ffn)
+    let rows: Vec<(&str, Gran)> = vec![
+        ("FP32", None),
+        ("1 (= per-tensor)", Some((Granularity::PerTensor, false))),
+        ("128 (= per-embd.)", Some((Granularity::PerEmbedding, false))),
+        ("128 (only FFN)", Some((Granularity::PerEmbedding, true))),
+        ("8 (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 8, permute: false }, true))),
+        ("4 (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 4, permute: false }, true))),
+        ("4 + P (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 4, permute: true }, true))),
+        ("8 + P (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 8, permute: true }, true))),
+    ];
+    for (label, gran) in rows {
+        let mut row = vec![label.to_string()];
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let info = ctx.model_info(task)?;
+            let score = match &gran {
+                None => fp32_score(ctx, task, &params)?,
+                Some((g, only_ffn)) => {
+                    let mut policy = QuantPolicy::uniform(8, 8);
+                    if *only_ffn {
+                        for fam in ffn_sites {
+                            policy = policy.with_site_family(
+                                info,
+                                fam,
+                                SiteCfg { bits: 8, granularity: g.clone(), enabled: true },
+                            );
+                        }
+                    } else {
+                        policy.default.granularity = g.clone();
+                    }
+                    eval_config(ctx, task, &params, &EvalConfig::new(policy), opts.seeds)?
+                }
+            };
+            println!("  table5 {label:?} {}: {score:.2}", task.name);
+            row.push(fmt_score(score));
+        }
+        table.row(row);
+    }
+    finish(ctx, "table5", &table)
+}
+
+/// The best MP policy from Table 4 (everything the paper's footnotes list
+/// at 16-bit).
+fn best_mp_policy(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
+    let a16 = SiteCfg { bits: 16, ..Default::default() };
+    QuantPolicy::uniform(8, 8)
+        .with_site_family(info, "res2_sum", a16.clone())
+        .with_site_family(info, "ln1_out", a16.clone())
+        .with_site_family(info, "ffn_out", a16.clone())
+        .with_sites(&["head_out", "pooled"], a16)
+}
+
+/// The paper's chosen PEG config: K=6 (+P) on FFN in/out/sum (ours: K=8).
+fn best_peg_policy(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
+    let peg = SiteCfg {
+        bits: 8,
+        granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+        enabled: true,
+    };
+    QuantPolicy::uniform(8, 8)
+        .with_site_family(info, "res2_sum", peg.clone())
+        .with_site_family(info, "ln1_out", peg.clone())
+        .with_site_family(info, "ffn_out", peg)
+}
+
+/// Table 6: all methods compared on all 8 tasks (incl. W8A8 QAT).
+pub fn table6(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
+    let tasks = opts.tasks();
+    let mut table = Table::new(
+        "Table 6: 8-bit quantization methods",
+        &["Method"]
+            .into_iter()
+            .chain(tasks.iter().map(|t| t.name))
+            .chain(["GLUE"])
+            .collect::<Vec<_>>(),
+    );
+
+    enum M {
+        Fp32,
+        Ptq(fn(&crate::model::manifest::ModelInfo) -> QuantPolicy),
+        Qat,
+    }
+    fn uni(_info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
+        QuantPolicy::uniform(8, 8)
+    }
+    let rows: Vec<(&str, M)> = vec![
+        ("FP32 baseline", M::Fp32),
+        ("W8A8 PTQ", M::Ptq(uni)),
+        ("W8A{8,16} MP-PTQ", M::Ptq(best_mp_policy)),
+        ("W8A8 PEG-PTQ (K=8+P)", M::Ptq(best_peg_policy)),
+        ("W8A8 QAT", M::Qat),
+    ];
+    for (label, method) in rows {
+        let mut row = vec![label.to_string()];
+        let mut scores = Vec::new();
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let info = ctx.model_info(task)?;
+            let score = match &method {
+                M::Fp32 => fp32_score(ctx, task, &params)?,
+                M::Ptq(f) => eval_config(
+                    ctx,
+                    task,
+                    &params,
+                    &EvalConfig::new(f(info)),
+                    opts.seeds,
+                )?,
+                M::Qat => run_qat_eval(ctx, task, &params, 8, 8, opts)?,
+            };
+            println!("  table6 {label:?} {}: {score:.2}", task.name);
+            row.push(fmt_score(score));
+            scores.push(score);
+        }
+        row.push(fmt_score(glue_score(&scores)));
+        table.row(row);
+    }
+    finish(ctx, "table6", &table)
+}
+
+/// QAT from PTQ init, then deploy-eval (used by Tables 6 & 7).
+pub fn run_qat_eval(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    weight_bits: u32,
+    embed_bits: u32,
+    opts: &ExpOpts,
+) -> Result<f64> {
+    let info = ctx.model_info(task)?;
+    // PTQ init for the activation ranges
+    let calib = calibrate(ctx, task, params, &CalibCfg::default())?;
+    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
+    let cfg = QatCfg {
+        weight_bits,
+        embed_bits,
+        epochs: if opts.quick { 1 } else { 2 },
+        ..Default::default()
+    };
+    let res = qat(ctx, task, params, &act, &cfg)?;
+    let (qp, qact) = qat_deployed_params(info, &res, weight_bits, embed_bits)?;
+    evaluate(ctx, task, &qp, &qact)
+}
+
+/// QAT with activations FP32 (the paper's W4A32 QAT row).
+pub fn run_qat_eval_a32(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    weight_bits: u32,
+    embed_bits: u32,
+    opts: &ExpOpts,
+) -> Result<f64> {
+    let info = ctx.model_info(task)?;
+    let calib = calibrate(ctx, task, params, &CalibCfg::default())?;
+    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
+    let cfg = QatCfg {
+        weight_bits,
+        embed_bits,
+        act_enabled: false,
+        epochs: if opts.quick { 1 } else { 2 },
+        ..Default::default()
+    };
+    let res = qat(ctx, task, params, &act, &cfg)?;
+    let (qp, _) = qat_deployed_params(info, &res, weight_bits, embed_bits)?;
+    let fp32_act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+    evaluate(ctx, task, &qp, &fp32_act)
+}
+
+/// Table 7 (+ Table 12 detail): low-bit weights & token embeddings.
+pub fn table7(ctx: &Ctx, opts: &ExpOpts, detailed: bool) -> Result<()> {
+    let tasks = opts.tasks();
+    let mut header: Vec<&str> = vec!["Method", "Mem"];
+    let names: Vec<&str> = tasks.iter().map(|t| t.name).collect();
+    if detailed {
+        header.extend(names.iter());
+    }
+    header.push("GLUE");
+    let mut table = Table::new(
+        "Table 7: low-bit weight & token-embedding quantization",
+        &header,
+    );
+
+    struct Row {
+        label: &'static str,
+        wb: u32,
+        eb: u32,
+        est: Estimator,
+        ada: bool,
+        qat: bool,
+        act8: bool,
+        act_off: bool,
+        w_off: bool,
+    }
+    let rows = vec![
+        Row { label: "FP32 baseline", wb: 32, eb: 32, est: Estimator::CurrentMinMax, ada: false, qat: false, act8: false, act_off: true, w_off: true },
+        Row { label: "W8A32, 6-bit embd. PTQ", wb: 8, eb: 6, est: Estimator::Mse, ada: false, qat: false, act8: false, act_off: true, w_off: false },
+        Row { label: "W8A32, 4-bit embd. PTQ", wb: 8, eb: 4, est: Estimator::Mse, ada: false, qat: false, act8: false, act_off: true, w_off: false },
+        Row { label: "W8A32, 2-bit embd. PTQ", wb: 8, eb: 2, est: Estimator::Mse, ada: false, qat: false, act8: false, act_off: true, w_off: false },
+        Row { label: "W6A32 PTQ", wb: 6, eb: 6, est: Estimator::Mse, ada: false, qat: false, act8: false, act_off: true, w_off: false },
+        Row { label: "W4A32 PTQ", wb: 4, eb: 4, est: Estimator::Mse, ada: false, qat: false, act8: false, act_off: true, w_off: false },
+        Row { label: "W4A32 AdaRound (PTQ)", wb: 4, eb: 4, est: Estimator::Mse, ada: true, qat: false, act8: false, act_off: true, w_off: false },
+        Row { label: "W4A32 QAT", wb: 4, eb: 4, est: Estimator::Mse, ada: false, qat: true, act8: false, act_off: true, w_off: false },
+        Row { label: "W4A8 QAT", wb: 4, eb: 4, est: Estimator::Mse, ada: false, qat: true, act8: true, act_off: false, w_off: false },
+        Row { label: "W4A8, 2-bit embd. QAT", wb: 4, eb: 2, est: Estimator::Mse, ada: false, qat: true, act8: true, act_off: false, w_off: false },
+    ];
+
+    for r in rows {
+        let mut scores = Vec::new();
+        let mut mem = String::new();
+        for task in &tasks {
+            let params = load_ckpt(ctx, task)?;
+            let info = ctx.model_info(task)?;
+            if mem.is_empty() {
+                let fp32 = params.size_bytes(info, 32, 32) as f64;
+                let q = params.size_bytes(info, r.wb.min(32), r.eb.min(32)) as f64;
+                mem = format!("x{:.2}", fp32 / q);
+            }
+            let score = if r.qat {
+                if r.act8 {
+                    run_qat_eval(ctx, task, &params, r.wb, r.eb, opts)?
+                } else {
+                    run_qat_eval_a32(ctx, task, &params, r.wb, r.eb, opts)?
+                }
+            } else {
+                let mut policy = if r.act_off && r.w_off {
+                    QuantPolicy::fp32()
+                } else {
+                    let mut p = if r.act_off { w8a32() } else { QuantPolicy::uniform(8, 8) };
+                    p.weights = WeightCfg { bits: r.wb, estimator: r.est, ..Default::default() };
+                    p
+                };
+                if !r.w_off {
+                    policy.weight_overrides.insert(
+                        "embed.tok".into(),
+                        WeightCfg { bits: r.eb, estimator: Estimator::Mse, ..Default::default() },
+                    );
+                }
+                let mut cfg = EvalConfig::new(policy);
+                cfg.calib.collect_grams = r.ada;
+                cfg.adaround.enabled = r.ada;
+                if opts.quick {
+                    cfg.adaround.cfg.iters = 200;
+                }
+                eval_config(ctx, task, &params, &cfg, if r.ada { 1 } else { opts.seeds })?
+            };
+            println!("  table7 {:?} {}: {score:.2}", r.label, task.name);
+            scores.push(score);
+        }
+        let mut row = vec![r.label.to_string(), mem];
+        if detailed {
+            row.extend(scores.iter().map(|&s| fmt_score(s)));
+        }
+        row.push(fmt_score(glue_score(&scores)));
+        table.row(row);
+    }
+    finish(ctx, if detailed { "table12" } else { "table7" }, &table)
+}
+
+/// Fig. 2: FFN input/output per-token ranges + outlier maps (deep layer).
+pub fn fig2(ctx: &Ctx, _opts: &ExpOpts) -> Result<()> {
+    let task = ctx.task("mnli")?;
+    let params = load_ckpt(ctx, &task)?;
+    let info = ctx.model_info(&task)?;
+    let layer = info.config.layers - 1;
+    let runs = diag::collect_taps(ctx, &task, &params, 10)?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# Fig. 2 reproduction — layer {layer} FFN input vs output (task mnli-sim)\n\n"
+    ));
+    // (a) per-token ranges, first sequence
+    let ex = &runs.examples[0];
+    for (name, site) in [("FFN input", format!("layer{layer}.ln1_out")),
+                         ("FFN output", format!("layer{layer}.ffn_out"))] {
+        let (lo, hi) = diag::per_token_ranges(&runs.per_seq[0], &site, &ex.mask);
+        let ranges: Vec<f32> = lo.iter().zip(&hi).map(|(l, h)| h - l).collect();
+        let labels: Vec<String> = ex
+            .ids
+            .iter()
+            .take(ranges.len())
+            .enumerate()
+            .map(|(i, &id)| {
+                if id == info.config.sep_id {
+                    format!("[SEP]{i:>3}")
+                } else if id == info.config.cls_id {
+                    format!("[CLS]{i:>3}")
+                } else {
+                    format!("{i:>8}")
+                }
+            })
+            .collect();
+        out.push_str(&format!(
+            "## (a) {name} per-token range  (tensor range [{:.2}, {:.2}])\n```\n{}```\n",
+            runs.per_seq[0][&site].min(),
+            runs.per_seq[0][&site].max(),
+            crate::report::bar_chart(&ranges, 48, Some(&labels)),
+        ));
+    }
+    // (b) outlier maps over 10 sequences
+    for (name, site) in [("FFN input", format!("layer{layer}.ln1_out")),
+                         ("FFN output", format!("layer{layer}.ffn_out"))] {
+        out.push_str(&format!("## (b) {name} >6σ outlier map (rows=tokens, cols=dims)\n"));
+        for (s, taps) in runs.per_seq.iter().enumerate() {
+            let (mask, rows, d) = diag::outlier_mask(taps, &site);
+            let n_out = mask.iter().filter(|&&b| b).count();
+            out.push_str(&format!("```\nseq {s} ({n_out} outliers)\n{}```\n",
+                crate::report::bool_heatmap(&mask, rows, d, 128)));
+        }
+        let dims = diag::consistent_outlier_dims(&runs, &site, 6);
+        out.push_str(&format!(
+            "consistent outlier dims (>=6/10 seqs): {dims:?} (installed: {:?})\n\n",
+            info.config.outlier_dims
+        ));
+    }
+    println!("{out}");
+    write_file(ctx.results_dir.join("fig2.md"), &out)?;
+    Ok(())
+}
+
+/// Fig. 5: attention-to-[SEP] mass per head in the deepest layers.
+pub fn fig5(ctx: &Ctx, _opts: &ExpOpts) -> Result<()> {
+    let task = ctx.task("mnli")?;
+    let params = load_ckpt(ctx, &task)?;
+    let info = ctx.model_info(&task)?;
+    let runs = diag::collect_taps(ctx, &task, &params, 4)?;
+
+    let mut table = Table::new(
+        "Fig. 5: mean attention mass on [SEP] per head (4 dev sequences)",
+        &["layer"]
+            .into_iter()
+            .chain((0..info.config.heads).map(|_h| "head"))
+            .collect::<Vec<_>>(),
+    );
+    for layer in 0..info.config.layers {
+        let mut acc = vec![0f32; info.config.heads];
+        for (taps, ex) in runs.per_seq.iter().zip(&runs.examples) {
+            let m = diag::attention_sep_mass(info, taps, ex, layer);
+            for (a, b) in acc.iter_mut().zip(m) {
+                *a += b;
+            }
+        }
+        let row: Vec<String> = std::iter::once(format!("{layer}"))
+            .chain(acc.iter().map(|&x| format!("{:.3}", x / runs.per_seq.len() as f32)))
+            .collect();
+        table.row(row);
+    }
+    finish(ctx, "fig5", &table)
+}
+
+/// Fig. 6-8: outlier maps for every layer (we render the FFN output site).
+pub fn fig6(ctx: &Ctx, _opts: &ExpOpts) -> Result<()> {
+    let mut out = String::new();
+    for tname in ["mnli", "stsb", "mrpc"] {
+        let task = ctx.task(tname)?;
+        let params = load_ckpt(ctx, &task)?;
+        let info = ctx.model_info(&task)?;
+        let runs = diag::collect_taps(ctx, &task, &params, 10)?;
+        out.push_str(&format!("# Fig. 6-8 reproduction — task {tname}\n"));
+        for layer in 0..info.config.layers {
+            for (label, site) in [("in", format!("layer{layer}.ln1_out")),
+                                  ("out", format!("layer{layer}.ffn_out"))] {
+                let dims = diag::consistent_outlier_dims(&runs, &site, 6);
+                out.push_str(&format!("layer {layer} FFN {label}: consistent outlier dims {dims:?}\n"));
+            }
+        }
+        out.push('\n');
+    }
+    println!("{out}");
+    write_file(ctx.results_dir.join("fig6.md"), &out)?;
+    Ok(())
+}
+
+/// Fig. 9-13: FFN in/out ranges across architecture variants. Variants are
+/// fine-tuned briefly on mnli-sim via their own train artifacts when
+/// available, else evaluated at init (documented in the output).
+pub fn fig9(ctx: &Ctx, _opts: &ExpOpts) -> Result<()> {
+    let task = ctx.task("mnli")?;
+    let mut out = String::new();
+    out.push_str("# Fig. 9-13 reproduction — FFN input/output ranges across architectures\n\n");
+    for variant in ["base", "large", "distil", "mobile"] {
+        let info = ctx.rt.manifest().model(variant)?;
+        let artifact = format!("diag_{}_b1", if variant == "base" { "cls".into() } else { variant.to_string() });
+        // base uses the fine-tuned mnli checkpoint; variants fine-tune via
+        // their own train artifact if present (train_fp32_<variant>_b16)
+        let params = if variant == "base" {
+            load_ckpt(ctx, &task)?
+        } else {
+            match super::train::finetune_variant(ctx, variant, &task, 1) {
+                Ok(p) => p,
+                Err(e) => {
+                    out.push_str(&format!("({variant}: using init params — {e})\n"));
+                    Params::init(info, 1)
+                }
+            }
+        };
+        let layer = info.config.layers.saturating_sub(2);
+        let runs = diag::collect_taps_with(ctx, &artifact, info, &task, &params, 5)?;
+        for (label, site) in [("input", format!("layer{layer}.ln1_out")),
+                              ("output", format!("layer{layer}.ffn_out"))] {
+            let ranges = diag::per_sequence_ranges(&runs, &site);
+            let spans: Vec<f32> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+            out.push_str(&format!(
+                "{variant:>7} layer {layer} FFN {label:>6}: per-seq ranges {:?}\n",
+                spans.iter().map(|s| format!("{s:.1}")).collect::<Vec<_>>()
+            ));
+        }
+        out.push('\n');
+    }
+    println!("{out}");
+    write_file(ctx.results_dir.join("fig9.md"), &out)?;
+    Ok(())
+}
+
+/// Appendix Tables 8-11: the hyper-parameter search spaces (documentation
+/// tables, emitted for completeness).
+pub fn hparams(ctx: &Ctx) -> Result<()> {
+    let mut t8 = Table::new(
+        "Table 8 (analog): FP32 fine-tuning hyper-parameters",
+        &["Task", "LR", "Batch", "Epochs", "aux λ", "aux target"],
+    );
+    for task in &TASKS {
+        t8.row(vec![
+            task.name.into(),
+            "1e-3".into(),
+            "16".into(),
+            "3".into(),
+            "1.0".into(),
+            "12.0".into(),
+        ]);
+    }
+    let mut t10 = Table::new(
+        "Table 10 (analog): W8A8 QAT hyper-parameters",
+        &["Task", "LR", "LR(scales)", "Batch", "Epochs"],
+    );
+    for task in &TASKS {
+        t10.row(vec![task.name.into(), "1e-4".into(), "1e-5".into(), "16".into(), "2".into()]);
+    }
+    print!("{}", t8.to_console());
+    print!("{}", t10.to_console());
+    write_file(
+        ctx.results_dir.join("hparams.md"),
+        &format!("{}\n{}", t8.to_markdown(), t10.to_markdown()),
+    )?;
+    Ok(())
+}
+
+fn finish(ctx: &Ctx, name: &str, table: &Table) -> Result<()> {
+    print!("{}", table.to_console());
+    write_file(ctx.results_dir.join(format!("{name}.md")), &table.to_markdown())?;
+    write_file(ctx.results_dir.join(format!("{name}.csv")), &table.to_csv())?;
+    Ok(())
+}
+
+/// Re-export for examples: a full PTQ pass on one task returning
+/// (fp32, w8a8, peg, mp) scores.
+pub fn quick_compare(ctx: &Ctx, task_name: &str, seeds: usize) -> Result<[f64; 4]> {
+    let task = ctx.task(task_name)?;
+    let params = load_ckpt(ctx, &task)?;
+    let info = ctx.model_info(&task)?;
+    let fp32 = fp32_score(ctx, &task, &params)?;
+    let w8a8 = eval_config(ctx, &task, &params, &EvalConfig::new(QuantPolicy::uniform(8, 8)), seeds)?;
+    let peg = eval_config(ctx, &task, &params, &EvalConfig::new(best_peg_policy(info)), seeds)?;
+    let mp = eval_config(ctx, &task, &params, &EvalConfig::new(best_mp_policy(info)), seeds)?;
+    Ok([fp32, w8a8, peg, mp])
+}
+
+/// Calibration+assembly helper reused by examples/benches.
+pub fn ptq_act_tensors(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    policy: &QuantPolicy,
+) -> Result<(ActQuantTensors, Calibration)> {
+    let calib = calibrate(ctx, task, params, &CalibCfg::default())?;
+    let info = ctx.model_info(task)?;
+    let act = assemble_act_tensors(info, policy, &calib.trackers)?;
+    Ok((act, calib))
+}

@@ -1,0 +1,69 @@
+//! The coordinator: the paper's quantization pipeline as a Rust system.
+//!
+//! Sub-modules:
+//! * [`train`]       — FP32 fine-tuning (with the outlier-inducing aux loss)
+//!                     and QAT, driving the AOT train-step executables.
+//! * [`calibrate`]   — calibration runner: streams sequences through the
+//!                     diagnostic executable and feeds range estimators.
+//! * [`eval`]        — dev-set evaluation via the forward executables.
+//! * [`weights`]     — Rust-side weight PTQ: min-max/MSE/per-channel/
+//!                     AdaRound quantize-dequantize of parameter tensors.
+//! * [`diagnostics`] — paper Fig. 2/5/6-13 data extraction.
+//! * [`experiments`] — `repro table1` ... drivers regenerating every paper
+//!                     table & figure.
+
+pub mod calibrate;
+pub mod diagnostics;
+pub mod eval;
+pub mod experiments;
+pub mod train;
+pub mod weights;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::{task_spec, TaskKind, TaskSpec};
+use crate::model::manifest::ModelInfo;
+use crate::runtime::Runtime;
+
+/// Shared context for all pipeline stages.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub ckpt_dir: PathBuf,
+    pub results_dir: PathBuf,
+}
+
+impl Ctx {
+    pub fn new(artifacts_dir: &str, ckpt_dir: &str, results_dir: &str) -> Result<Ctx> {
+        Ok(Ctx {
+            rt: Runtime::new(artifacts_dir)?,
+            ckpt_dir: PathBuf::from(ckpt_dir),
+            results_dir: PathBuf::from(results_dir),
+        })
+    }
+
+    /// Head kind string for artifact names: "cls" or "reg".
+    pub fn head(&self, task: &TaskSpec) -> &'static str {
+        match task.kind {
+            TaskKind::Regression => "reg",
+            TaskKind::Classification(_) => "cls",
+        }
+    }
+
+    /// Model info for a task's head (regression heads have n_out = 1).
+    pub fn model_info(&self, task: &TaskSpec) -> Result<&ModelInfo> {
+        match task.kind {
+            TaskKind::Regression => self.rt.manifest().model("base_reg"),
+            _ => self.rt.manifest().model("base"),
+        }
+    }
+
+    pub fn task(&self, name: &str) -> Result<TaskSpec> {
+        task_spec(name)
+    }
+
+    pub fn ckpt_path(&self, task: &str) -> PathBuf {
+        self.ckpt_dir.join(format!("{task}.ckpt"))
+    }
+}

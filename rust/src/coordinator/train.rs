@@ -1,0 +1,425 @@
+//! Training loops: FP32 fine-tuning (paper Appendix B.1, plus the
+//! outlier-inducing auxiliary loss of DESIGN.md §2) and quantization-aware
+//! training (paper §4) — both executed step-by-step through the AOT
+//! train-step executables; the Rust side owns batching, the LR schedule
+//! (linear warmup 10% → linear decay, as in the paper), Adam bias
+//! correction, and checkpointing.
+
+use anyhow::{bail, Result};
+
+use super::Ctx;
+use crate::data::{self, TaskKind, TaskSpec};
+use crate::model::manifest::ModelInfo;
+use crate::model::qconfig::ActQuantTensors;
+use crate::model::Params;
+use crate::quant::QGrid;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar};
+use crate::util::rng::Rng;
+
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+
+/// Hyper-parameters for a fine-tuning run.
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub lr: f32,
+    pub epochs: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// outlier-inducing auxiliary loss weight & target (FP32 only)
+    pub aux_lambda: f32,
+    pub aux_target: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            lr: 2e-3,
+            epochs: 5,
+            batch: 16,
+            seed: 1,
+            aux_lambda: 0.01,
+            aux_target: 10.0,
+            log_every: 100,
+        }
+    }
+}
+
+/// Outlier-inducing aux weight schedule: off for the first 40% of
+/// training (pure task learning), linear ramp over the next 15%, then
+/// sustained — the model keeps the last 45% of the schedule to re-adapt
+/// around the installed outliers (tuned in EXPERIMENTS.md §Setup).
+pub fn aux_lambda_at(max_lambda: f32, step: usize, total: usize) -> f32 {
+    let frac = step as f32 / total.max(1) as f32;
+    if frac < 0.4 {
+        0.0
+    } else {
+        max_lambda * ((frac - 0.4) / 0.15).min(1.0)
+    }
+}
+
+/// LR schedule value at `step` of `total`: linear warmup over the first
+/// 10%, then linear decay to zero (paper Appendix B.1), multiplied by the
+/// Adam bias correction for step t (1-based).
+pub fn lr_eff(base: f32, step: usize, total: usize) -> f32 {
+    let warmup = (total as f32 * 0.1).max(1.0);
+    let s = step as f32;
+    let sched = if s < warmup {
+        (s + 1.0) / warmup
+    } else {
+        ((total as f32 - s) / (total as f32 - warmup)).max(0.0)
+    };
+    let t = (step + 1) as i32;
+    let bias = ((1.0 - ADAM_B2.powi(t)) as f32).sqrt() / (1.0 - ADAM_B1.powi(t)) as f32;
+    base * sched * bias
+}
+
+pub struct TrainResult {
+    pub params: Params,
+    pub losses: Vec<f32>,
+}
+
+/// FP32 fine-tune `task` from scratch; returns trained parameters and the
+/// per-step loss curve.
+pub fn finetune(ctx: &Ctx, task: &TaskSpec, cfg: &TrainCfg) -> Result<TrainResult> {
+    let info = ctx.model_info(task)?;
+    let artifact = format!("train_fp32_{}_b16", ctx.head(task));
+    finetune_with(ctx, info, &artifact, task, cfg)
+}
+
+/// Fine-tune an architecture variant (large/distil/mobile) on a
+/// classification task via its own train artifact, caching the checkpoint.
+/// Used by the Fig. 9-13 architecture sweep.
+pub fn finetune_variant(
+    ctx: &Ctx,
+    variant: &str,
+    task: &TaskSpec,
+    epochs: usize,
+) -> Result<Params> {
+    if matches!(task.kind, TaskKind::Regression) {
+        bail!("variant fine-tuning supports classification tasks only");
+    }
+    let path = ctx.ckpt_dir.join(format!("{}_{}.ckpt", variant, task.name));
+    if let Ok(p) = crate::model::checkpoint::load(&path) {
+        return Ok(p);
+    }
+    let info = ctx.rt.manifest().model(variant)?;
+    let artifact = format!("train_fp32_{variant}_b16");
+    // ensure the artifact exists before training
+    ctx.rt.manifest().artifact(&artifact)?;
+    let cfg = TrainCfg { epochs, ..Default::default() };
+    let res = finetune_with(ctx, info, &artifact, task, &cfg)?;
+    crate::model::checkpoint::save(&res.params, &path)?;
+    Ok(res.params)
+}
+
+fn finetune_with(
+    ctx: &Ctx,
+    info: &ModelInfo,
+    artifact: &str,
+    task: &TaskSpec,
+    cfg: &TrainCfg,
+) -> Result<TrainResult> {
+    if cfg.batch != 16 {
+        bail!("train artifacts are lowered at batch 16");
+    }
+    let seq = info.config.seq;
+    let split = data::train_split(task, seq)?;
+
+    let mut p = Params::init(info, cfg.seed);
+    let mut m = p.zeros_like();
+    let mut v = p.zeros_like();
+    let np = p.tensors.len();
+
+    let steps_per_epoch = split.examples.len() / cfg.batch;
+    let total = steps_per_epoch * cfg.epochs;
+    let mut losses = Vec::with_capacity(total);
+    let mut order: Vec<usize> = (0..split.examples.len()).collect();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+
+    let regression = matches!(task.kind, TaskKind::Regression);
+    let mut step = 0usize;
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks_exact(cfg.batch) {
+            let batch = gather_batch(&split, chunk, seq);
+            let mut lits = Vec::with_capacity(3 * np + 7);
+            for t in p.tensors.iter().chain(&m.tensors).chain(&v.tensors) {
+                lits.push(lit_f32(t.data(), t.shape())?);
+            }
+            lits.push(lit_i32(&batch.ids, &[cfg.batch, seq])?);
+            lits.push(lit_i32(&batch.token_type, &[cfg.batch, seq])?);
+            lits.push(lit_f32(&batch.mask, &[cfg.batch, seq])?);
+            if regression {
+                lits.push(lit_f32(&batch.labels_reg, &[cfg.batch])?);
+            } else {
+                lits.push(lit_i32(&batch.labels_cls, &[cfg.batch])?);
+            }
+            lits.push(lit_scalar(lr_eff(cfg.lr, step, total))?);
+            lits.push(lit_scalar(aux_lambda_at(cfg.aux_lambda, step, total))?);
+            lits.push(lit_scalar(cfg.aux_target)?);
+
+            let mut out = ctx.rt.run_lits(artifact, &lits)?;
+            let loss = out.pop().expect("loss output").data()[0];
+            losses.push(loss);
+            // outputs: params, m, v (in spec order), then loss (popped)
+            let vs = out.split_off(2 * np);
+            let ms = out.split_off(np);
+            p.tensors = out;
+            m.tensors = ms;
+            v.tensors = vs;
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                println!(
+                    "  [{}] step {step}/{total} loss {loss:.4} lr_eff {:.2e}",
+                    task.name,
+                    lr_eff(cfg.lr, step, total)
+                );
+            }
+            step += 1;
+            if !loss.is_finite() {
+                bail!("{}: loss diverged at step {step}", task.name);
+            }
+        }
+    }
+    Ok(TrainResult { params: p, losses })
+}
+
+/// QAT hyper-parameters (paper Appendix B.3).
+#[derive(Debug, Clone)]
+pub struct QatCfg {
+    pub lr: f32,
+    /// learning rate for the quantizer scales (LSQ)
+    pub lr_scales: f32,
+    pub epochs: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub weight_bits: u32,
+    pub embed_bits: u32,
+    pub act_enabled: bool,
+    pub log_every: usize,
+}
+
+impl Default for QatCfg {
+    fn default() -> Self {
+        QatCfg {
+            lr: 1e-4,
+            lr_scales: 1e-5,
+            epochs: 1,
+            batch: 16,
+            seed: 1,
+            weight_bits: 8,
+            embed_bits: 8,
+            act_enabled: true,
+            log_every: 50,
+        }
+    }
+}
+
+pub struct QatResult {
+    pub params: Params,
+    /// learned activation scales (flat lanes vector)
+    pub act_scales: Vec<f32>,
+    /// learned per-weight-tensor scales
+    pub wq_scales: Vec<f32>,
+    pub losses: Vec<f32>,
+}
+
+/// Quantization-aware training from a PTQ-initialised state (paper §4:
+/// "we initialize all quantization parameters from the PTQ setup").
+pub fn qat(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    init: &Params,
+    act: &ActQuantTensors,
+    cfg: &QatCfg,
+) -> Result<QatResult> {
+    let info = ctx.model_info(task)?;
+    let artifact = format!("train_qat_{}_b16", ctx.head(task));
+    let seq = info.config.seq;
+    let split = data::train_split(task, seq)?;
+    let regression = matches!(task.kind, TaskKind::Regression);
+    let np = init.tensors.len();
+    let s_lanes = info.total_scale_lanes;
+    let n_sites = info.sites.len();
+    let n_wq = info.wq.len();
+
+    let mut p = init.clone();
+    let mut m = p.zeros_like();
+    let mut v = p.zeros_like();
+
+    // activation scales: PTQ init (but strictly positive)
+    let mut a_s: Vec<f32> = act.scales.iter().map(|&s| s.max(1e-6)).collect();
+    let a_z = act.zps.clone();
+    let mut a_cfg = act.cfg.clone();
+    if !cfg.act_enabled {
+        for c in a_cfg.chunks_exact_mut(3) {
+            c[2] = 0.0;
+        }
+    }
+    let mut msv = vec![0f32; s_lanes];
+    let mut vsv = vec![0f32; s_lanes];
+
+    // weight scales: symmetric min-max init per tensor
+    let mut w_s = Vec::with_capacity(n_wq);
+    let mut w_cfg = Vec::with_capacity(n_wq * 3);
+    for name in &info.wq {
+        let t = p.get(name)?;
+        let bits = if name == "embed.tok" { cfg.embed_bits } else { cfg.weight_bits };
+        let grid = QGrid::symmetric(bits);
+        w_s.push((t.abs_max() / grid.qmax).max(1e-6));
+        w_cfg.extend_from_slice(&[grid.qmin, grid.qmax, 1.0]);
+    }
+    let mut mwv = vec![0f32; n_wq];
+    let mut vwv = vec![0f32; n_wq];
+
+    let steps_per_epoch = split.examples.len() / cfg.batch;
+    let total = (steps_per_epoch * cfg.epochs).max(1);
+    let mut losses = Vec::with_capacity(total);
+    let mut order: Vec<usize> = (0..split.examples.len()).collect();
+    let mut rng = Rng::new(cfg.seed ^ 0x9A7);
+
+    let mut step = 0usize;
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks_exact(cfg.batch) {
+            let batch = gather_batch(&split, chunk, seq);
+            let mut lits = Vec::with_capacity(3 * np + 15);
+            for t in p.tensors.iter().chain(&m.tensors).chain(&v.tensors) {
+                lits.push(lit_f32(t.data(), t.shape())?);
+            }
+            lits.push(lit_f32(&a_s, &[s_lanes])?);
+            lits.push(lit_f32(&msv, &[s_lanes])?);
+            lits.push(lit_f32(&vsv, &[s_lanes])?);
+            lits.push(lit_f32(&a_z, &[s_lanes])?);
+            lits.push(lit_f32(&a_cfg, &[n_sites, 3])?);
+            lits.push(lit_f32(&w_s, &[n_wq])?);
+            lits.push(lit_f32(&mwv, &[n_wq])?);
+            lits.push(lit_f32(&vwv, &[n_wq])?);
+            lits.push(lit_f32(&w_cfg, &[n_wq, 3])?);
+            lits.push(lit_i32(&batch.ids, &[cfg.batch, seq])?);
+            lits.push(lit_i32(&batch.token_type, &[cfg.batch, seq])?);
+            lits.push(lit_f32(&batch.mask, &[cfg.batch, seq])?);
+            if regression {
+                lits.push(lit_f32(&batch.labels_reg, &[cfg.batch])?);
+            } else {
+                lits.push(lit_i32(&batch.labels_cls, &[cfg.batch])?);
+            }
+            lits.push(lit_scalar(lr_eff(cfg.lr, step, total))?);
+            lits.push(lit_scalar(lr_eff(cfg.lr_scales, step, total))?);
+
+            let mut out = ctx.rt.run_lits(&artifact, &lits)?;
+            // outputs: p, m, v, a_s, msv, vsv, w_s, mwv, vwv, loss
+            let loss = out.pop().expect("loss").data()[0];
+            losses.push(loss);
+            vwv = out.pop().expect("v_wq").into_data();
+            mwv = out.pop().expect("m_wq").into_data();
+            w_s = out.pop().expect("wq_scales").into_data();
+            vsv = out.pop().expect("v_scales").into_data();
+            msv = out.pop().expect("m_scales").into_data();
+            a_s = out.pop().expect("act_scales").into_data();
+            let vs = out.split_off(2 * np);
+            let ms = out.split_off(np);
+            p.tensors = out;
+            m.tensors = ms;
+            v.tensors = vs;
+
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                println!("  [qat:{}] step {step}/{total} loss {loss:.4}", task.name);
+            }
+            step += 1;
+            if !loss.is_finite() {
+                bail!("qat {}: loss diverged at step {step}", task.name);
+            }
+        }
+    }
+    Ok(QatResult { params: p, act_scales: a_s, wq_scales: w_s, losses })
+}
+
+/// Gather specific example indices into a flat batch.
+fn gather_batch(split: &data::Split, idx: &[usize], seq: usize) -> data::Batch {
+    let b = idx.len();
+    let mut out = data::Batch {
+        ids: Vec::with_capacity(b * seq),
+        token_type: Vec::with_capacity(b * seq),
+        mask: Vec::with_capacity(b * seq),
+        labels_cls: Vec::with_capacity(b),
+        labels_reg: Vec::with_capacity(b),
+        batch: b,
+        seq,
+    };
+    for &i in idx {
+        let ex = &split.examples[i];
+        out.ids.extend_from_slice(&ex.ids);
+        out.token_type.extend_from_slice(&ex.token_type);
+        out.mask.extend_from_slice(&ex.mask);
+        out.labels_cls.push(ex.label as i32);
+        out.labels_reg.push(ex.target);
+    }
+    out
+}
+
+/// Evaluate the QAT state: returns params with weight QDQ applied using the
+/// learned per-tensor scales, plus the learned activation tensors.
+pub fn qat_deployed_params(
+    info: &ModelInfo,
+    res: &QatResult,
+    weight_bits: u32,
+    embed_bits: u32,
+) -> Result<(Params, ActQuantTensors)> {
+    let mut p = res.params.clone();
+    for (j, name) in info.wq.iter().enumerate() {
+        let bits = if name == "embed.tok" { embed_bits } else { weight_bits };
+        let grid = QGrid::symmetric(bits);
+        let s = res.wq_scales[j].max(1e-8);
+        let t = p.get_mut(name)?;
+        for x in t.data_mut().iter_mut() {
+            let q = (*x / s).round().clamp(grid.qmin, grid.qmax);
+            *x = s * q;
+        }
+    }
+    // re-assemble act tensors with the learned scales
+    let mut cfg = Vec::with_capacity(info.sites.len() * 3);
+    // keep the same per-site grid that QAT trained with (8-bit asymmetric)
+    for _ in &info.sites {
+        let g = QGrid::asymmetric(8);
+        cfg.extend_from_slice(&[g.qmin, g.qmax, 1.0]);
+    }
+    let act = ActQuantTensors {
+        scales: res.act_scales.clone(),
+        zps: vec![0.0; res.act_scales.len()],
+        cfg,
+        permutations: Default::default(),
+    };
+    Ok((p, act))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let total = 100;
+        // warmup rises
+        assert!(lr_eff(1.0, 0, total) < lr_eff(1.0, 9, total));
+        // decays after warmup (compare pure schedule by stripping bias at
+        // late steps where bias ~ 1)
+        assert!(lr_eff(1.0, 50, total) > lr_eff(1.0, 90, total));
+        // ends near zero
+        assert!(lr_eff(1.0, 99, total) < 0.02);
+        // scales linearly with base
+        let r = lr_eff(2.0, 42, total) / lr_eff(1.0, 42, total);
+        assert!((r - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lr_bias_correction_large_early() {
+        // Adam bias correction amplifies early steps: at t=1 it is
+        // sqrt(1-b2)/(1-b1) ≈ 0.316
+        let warmup_sched = 1.0 / 10.0; // step 0 of total 100
+        let expected = 0.1 * ((1.0f32 - 0.999).sqrt() / (1.0 - 0.9));
+        let got = lr_eff(1.0, 0, 100);
+        assert!((got - expected * (warmup_sched / 0.1)).abs() < 1e-4, "{got} vs {expected}");
+    }
+}

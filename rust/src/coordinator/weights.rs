@@ -1,0 +1,229 @@
+//! Weight post-training quantization, applied Rust-side to the parameter
+//! tensors before execution (the paper's simulated-quantization setup):
+//! symmetric per-tensor with min-max or MSE ranges, Q-BERT-style group-wise
+//! per-channel, and AdaRound with calibration Grams.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::calibrate::Calibration;
+use crate::model::manifest::ModelInfo;
+use crate::model::qconfig::QuantPolicy;
+use crate::model::Params;
+use crate::quant::adaround::adaround_with_gram;
+use crate::quant::estimators::mse_search;
+use crate::quant::{
+    qdq_weight_per_channel, qparams_from_range, qparams_symmetric, Estimator, QGrid,
+};
+use crate::tensor::Tensor;
+
+/// Which tap site feeds each quantized weight (for AdaRound's layer
+/// reconstruction). `pool.w` consumes the last encoder output; `head.w`
+/// the pooled vector; `embed.tok` has no activation input (falls back to
+/// plain rounding on the table itself).
+pub fn input_site_for_weight(info: &ModelInfo, name: &str) -> Option<String> {
+    let layers = info.config.layers;
+    if name == "pool.w" {
+        return Some(format!("layer{}.ln2_out", layers - 1));
+    }
+    if name == "head.w" {
+        return Some("pooled".to_string());
+    }
+    if let Some(rest) = name.strip_prefix("layer") {
+        let (idx, field) = rest.split_once('.')?;
+        let i: usize = idx.parse().ok()?;
+        let site = match field {
+            "q.w" | "k.w" | "v.w" => {
+                if i == 0 {
+                    "embed_ln_out".to_string()
+                } else {
+                    format!("layer{}.ln2_out", i - 1)
+                }
+            }
+            "attn_out.w" => format!("layer{i}.attn_ctx"),
+            "ffn1.w" => format!("layer{i}.ln1_out"),
+            "ffn2.w" => format!("layer{i}.ffn_hidden"),
+            _ => return None,
+        };
+        return Some(site);
+    }
+    None
+}
+
+/// Symmetric per-tensor QDQ with the chosen range estimator.
+pub fn qdq_weight(t: &Tensor, bits: u32, estimator: Estimator) -> Tensor {
+    let grid = QGrid::symmetric(bits);
+    match estimator {
+        Estimator::Mse => {
+            let amax = t.abs_max();
+            let (lo, hi) = mse_search(t.data(), -amax, amax, grid);
+            // keep symmetric: use the larger magnitude
+            let m = lo.abs().max(hi.abs());
+            let p = qparams_symmetric(m, grid);
+            crate::quant::qdq_tensor(t, p, grid)
+        }
+        _ => {
+            let p = qparams_symmetric(t.abs_max(), grid);
+            crate::quant::qdq_tensor(t, p, grid)
+        }
+    }
+}
+
+/// Options for AdaRound application.
+#[derive(Debug, Clone, Default)]
+pub struct AdaRoundOpts {
+    pub enabled: bool,
+    pub cfg: AdaRoundCfg2,
+}
+
+/// Serializable-ish AdaRound knobs (wraps quant::adaround::AdaRoundCfg).
+#[derive(Debug, Clone)]
+pub struct AdaRoundCfg2 {
+    pub iters: usize,
+    pub lr: f32,
+}
+
+impl Default for AdaRoundCfg2 {
+    fn default() -> Self {
+        AdaRoundCfg2 { iters: 1000, lr: 1e-2 }
+    }
+}
+
+/// Quantize all weights of `params` per `policy`, returning new params and
+/// a per-weight report of (bits, method).
+pub fn quantize_weights(
+    info: &ModelInfo,
+    params: &Params,
+    policy: &QuantPolicy,
+    calib: Option<&Calibration>,
+    ada: &AdaRoundOpts,
+) -> Result<(Params, BTreeMap<String, String>)> {
+    let mut out = params.clone();
+    let mut report = BTreeMap::new();
+    for name in &info.wq {
+        let wc = policy.weight_cfg(name);
+        if !wc.enabled {
+            report.insert(name.clone(), "fp32".to_string());
+            continue;
+        }
+        let t = params.get(name)?;
+        let method;
+        let quantized = if let Some(groups) = wc.per_channel_groups {
+            method = format!("{}b per-channel x{groups}", wc.bits);
+            qdq_weight_per_channel(t, wc.bits, groups)?
+        } else if ada.enabled && t.shape().len() == 2 {
+            // AdaRound needs the layer's input Gram; fall back to plain
+            // rounding when unavailable (e.g. the embedding table)
+            let site = input_site_for_weight(info, name);
+            let gram = site
+                .as_ref()
+                .and_then(|s| calib.and_then(|c| c.grams.get(s)));
+            match gram {
+                Some((g, n)) => {
+                    let grid = QGrid::symmetric(wc.bits);
+                    let p = match wc.estimator {
+                        Estimator::Mse => {
+                            let amax = t.abs_max();
+                            let (lo, hi) = mse_search(t.data(), -amax, amax, grid);
+                            qparams_symmetric(lo.abs().max(hi.abs()), grid)
+                        }
+                        _ => qparams_symmetric(t.abs_max(), grid),
+                    };
+                    let r = adaround_with_gram(
+                        t,
+                        g,
+                        *n,
+                        p,
+                        grid,
+                        &crate::quant::adaround::AdaRoundCfg {
+                            iters: ada.cfg.iters,
+                            lr: ada.cfg.lr,
+                            ..Default::default()
+                        },
+                    )?;
+                    method = format!("{}b adaround", wc.bits);
+                    r.weight
+                }
+                None => {
+                    method = format!("{}b {:?} (no gram)", wc.bits, wc.estimator);
+                    qdq_weight(t, wc.bits, wc.estimator)
+                }
+            }
+        } else {
+            method = format!("{}b {:?}", wc.bits, wc.estimator);
+            qdq_weight(t, wc.bits, wc.estimator)
+        };
+        *out.get_mut(name)? = quantized;
+        report.insert(name.clone(), method);
+    }
+    Ok((out, report))
+}
+
+/// Range for the zero-protected asymmetric activation used by tests.
+#[allow(dead_code)]
+pub fn act_params_for_range(lo: f32, hi: f32, bits: u32) -> crate::quant::QParams {
+    qparams_from_range(lo, hi, QGrid::asymmetric(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+
+    #[test]
+    fn weight_site_mapping() {
+        let mut info = tiny_model_info();
+        info.config.layers = 3;
+        assert_eq!(
+            input_site_for_weight(&info, "layer0.q.w").unwrap(),
+            "embed_ln_out"
+        );
+        assert_eq!(
+            input_site_for_weight(&info, "layer2.k.w").unwrap(),
+            "layer1.ln2_out"
+        );
+        assert_eq!(
+            input_site_for_weight(&info, "layer1.ffn2.w").unwrap(),
+            "layer1.ffn_hidden"
+        );
+        assert_eq!(input_site_for_weight(&info, "pool.w").unwrap(), "layer2.ln2_out");
+        assert_eq!(input_site_for_weight(&info, "head.w").unwrap(), "pooled");
+        assert!(input_site_for_weight(&info, "embed.tok").is_none());
+    }
+
+    #[test]
+    fn qdq_weight_preserves_fp32_when_disabled() {
+        let info = tiny_model_info();
+        let p = Params::init(&info, 3);
+        let policy = QuantPolicy::fp32();
+        let (q, report) =
+            quantize_weights(&info, &p, &policy, None, &AdaRoundOpts::default()).unwrap();
+        assert_eq!(report["embed.tok"], "fp32");
+        assert_eq!(q.get("embed.tok").unwrap(), p.get("embed.tok").unwrap());
+    }
+
+    #[test]
+    fn qdq_weight_8bit_small_error() {
+        let info = tiny_model_info();
+        let p = Params::init(&info, 3);
+        let policy = QuantPolicy::uniform(8, 8);
+        let (q, _) =
+            quantize_weights(&info, &p, &policy, None, &AdaRoundOpts::default()).unwrap();
+        let a = p.get("layer0.ffn1.w").unwrap();
+        let b = q.get("layer0.ffn1.w").unwrap();
+        let rel = a.sub(b).unwrap().abs_max() / a.abs_max();
+        assert!(rel < 0.01, "8-bit weight error {rel}");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mse_weights_at_low_bits_not_worse() {
+        let info = tiny_model_info();
+        let p = Params::init(&info, 5);
+        let w = p.get("layer0.ffn1.w").unwrap();
+        let near = qdq_weight(w, 3, Estimator::CurrentMinMax);
+        let mse = qdq_weight(w, 3, Estimator::Mse);
+        assert!(mse.mse(w).unwrap() <= near.mse(w).unwrap() * 1.001);
+    }
+}

@@ -1,0 +1,477 @@
+//! Synthetic GLUE benchmark (DESIGN.md §2 substitution).
+//!
+//! Eight sequence tasks mirroring the GLUE suite's structure: single- vs
+//! paired-sentence inputs, 2/3-way classification and regression, and the
+//! matching metrics. Each task is a deterministic generative rule over a
+//! 512-token vocabulary, chosen to be learnable by a small encoder but not
+//! trivially linear (counting, co-occurrence and cross-segment matching).
+//!
+//! Sequence layout matches BERT fine-tuning:
+//!     [CLS] s1 ... [SEP]            (single-sentence tasks)
+//!     [CLS] s1 ... [SEP] s2 ... [SEP] [PAD]*   (paired tasks)
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+pub const PAD_ID: i32 = 0;
+pub const CLS_ID: i32 = 1;
+pub const SEP_ID: i32 = 2;
+/// 64-token vocabulary (matches python/compile/model.py): small enough
+/// that the synthetic rules generalise from 2048 training examples.
+pub const VOCAB: i32 = 64;
+/// first ordinary (non-special) token id
+pub const TOK0: i32 = 3;
+
+/// One tokenised example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub token_type: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// class label (classification tasks)
+    pub label: usize,
+    /// regression target in [0, 1] (stsb only)
+    pub target: f32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Classification(usize),
+    Regression,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub kind: TaskKind,
+    pub paired: bool,
+    pub train_size: usize,
+    pub dev_size: usize,
+}
+
+/// The eight tasks, mirroring GLUE's ordering in the paper's tables.
+pub const TASKS: [TaskSpec; 8] = [
+    TaskSpec { name: "cola", kind: TaskKind::Classification(2), paired: false, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "sst2", kind: TaskKind::Classification(2), paired: false, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "mrpc", kind: TaskKind::Classification(2), paired: true, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "stsb", kind: TaskKind::Regression, paired: true, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "qqp", kind: TaskKind::Classification(2), paired: true, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "mnli", kind: TaskKind::Classification(3), paired: true, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "qnli", kind: TaskKind::Classification(2), paired: true, train_size: 2048, dev_size: 512 },
+    TaskSpec { name: "rte", kind: TaskKind::Classification(2), paired: true, train_size: 2048, dev_size: 512 },
+];
+
+pub fn task_spec(name: &str) -> Result<TaskSpec> {
+    TASKS
+        .iter()
+        .find(|t| t.name == name)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown task {name:?}"))
+}
+
+/// A generated dataset split.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub examples: Vec<Example>,
+}
+
+/// Pack raw token segments into the BERT layout of length `seq`.
+fn pack(seq: usize, s1: &[i32], s2: Option<&[i32]>) -> Example {
+    let mut ids = Vec::with_capacity(seq);
+    let mut tt = Vec::with_capacity(seq);
+    ids.push(CLS_ID);
+    tt.push(0);
+    for &t in s1 {
+        ids.push(t);
+        tt.push(0);
+    }
+    ids.push(SEP_ID);
+    tt.push(0);
+    if let Some(s2) = s2 {
+        for &t in s2 {
+            ids.push(t);
+            tt.push(1);
+        }
+        ids.push(SEP_ID);
+        tt.push(1);
+    }
+    ids.truncate(seq);
+    tt.truncate(seq);
+    let real = ids.len();
+    let mut mask = vec![1.0f32; real];
+    while ids.len() < seq {
+        ids.push(PAD_ID);
+        tt.push(if s2.is_some() { 1 } else { 0 });
+        mask.push(0.0);
+    }
+    Example { ids, token_type: tt, mask, label: 0, target: 0.0 }
+}
+
+fn rand_seg(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.range(TOK0 as usize, VOCAB as usize) as i32).collect()
+}
+
+/// Token "polarity" used by sst2-like rules: low half negative, high half
+/// positive.
+fn polarity(t: i32) -> i32 {
+    if t < (TOK0 + (VOCAB - TOK0) / 2) {
+        -1
+    } else {
+        1
+    }
+}
+
+fn overlap_fraction(a: &[i32], b: &[i32]) -> f32 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for t in a {
+        if b.contains(t) {
+            hits += 1;
+        }
+    }
+    hits as f32 / a.len() as f32
+}
+
+/// Generate one example for `task`. `seq` is the model's max sequence.
+pub fn gen_example(task: &TaskSpec, seq: usize, rng: &mut Rng) -> Result<Example> {
+    let body = seq.saturating_sub(3); // [CLS] + 2x[SEP] budget for pairs
+    match task.name {
+        // CoLA-like "grammaticality": a sentence is acceptable iff it
+        // contains no adjacent *descending* pair with gap > VOCAB/2
+        // (an order-sensitive rule).
+        "cola" => {
+            const GAP: i32 = VOCAB / 2;
+            let len = rng.range(8, body.min(24));
+            let mut s = rand_seg(rng, len);
+            let make_bad = rng.bool(0.5);
+            if make_bad {
+                let i = rng.below(len.saturating_sub(1).max(1));
+                s[i] = VOCAB - 1 - rng.below(8) as i32;
+                s[i + 1] = TOK0 + rng.below(8) as i32;
+            } else {
+                // repair: sort any violating pairs
+                for i in 0..len - 1 {
+                    if s[i] - s[i + 1] > GAP {
+                        s.swap(i, i + 1);
+                    }
+                }
+            }
+            let viol = s.windows(2).any(|w| w[0] - w[1] > GAP);
+            let mut ex = pack(seq, &s, None);
+            ex.label = usize::from(!viol);
+            Ok(ex)
+        }
+        // SST-2-like sentiment: label = sign of summed token polarity.
+        "sst2" => {
+            let len = rng.range(8, body.min(30));
+            let pos = rng.bool(0.5);
+            let s: Vec<i32> = (0..len)
+                .map(|_| {
+                    let want_pos = if rng.bool(0.8) { pos } else { !pos };
+                    let half = (VOCAB - TOK0) / 2;
+                    if want_pos {
+                        TOK0 + half + rng.below(half as usize) as i32
+                    } else {
+                        TOK0 + rng.below(half as usize) as i32
+                    }
+                })
+                .collect();
+            let score: i32 = s.iter().map(|&t| polarity(t)).sum();
+            let mut ex = pack(seq, &s, None);
+            ex.label = usize::from(score > 0);
+            Ok(ex)
+        }
+        // MRPC-like paraphrase: s2 is a shuffled/perturbed copy (label 1)
+        // or an unrelated segment (label 0).
+        "mrpc" | "qqp" => {
+            let len = rng.range(6, (body / 2).min(20));
+            let s1 = rand_seg(rng, len);
+            let paraphrase = rng.bool(0.5);
+            let s2 = if paraphrase {
+                let mut c = s1.clone();
+                rng.shuffle(&mut c);
+                // small perturbation for qqp (near-duplicate detection)
+                if task.name == "qqp" && rng.bool(0.5) {
+                    let i = rng.below(c.len());
+                    c[i] = rng.range(TOK0 as usize, VOCAB as usize) as i32;
+                }
+                c
+            } else {
+                rand_seg(rng, len)
+            };
+            let thresh = if task.name == "qqp" { 0.8 } else { 0.5 };
+            let mut ex = pack(seq, &s1, Some(&s2));
+            ex.label = usize::from(overlap_fraction(&s1, &s2) >= thresh);
+            Ok(ex)
+        }
+        // STS-B-like similarity regression: target = token overlap in [0,1].
+        "stsb" => {
+            let len = rng.range(6, (body / 2).min(20));
+            let s1 = rand_seg(rng, len);
+            let keep = rng.below(len + 1);
+            let mut s2 = s1.clone();
+            let replace_idx = rng.choose_distinct(len, len - keep);
+            for i in replace_idx {
+                s2[i] = rng.range(TOK0 as usize, VOCAB as usize) as i32;
+            }
+            rng.shuffle(&mut s2);
+            let mut ex = pack(seq, &s1, Some(&s2));
+            ex.target = overlap_fraction(&s1, &s2);
+            Ok(ex)
+        }
+        // MNLI-like 3-way: marker token m in s1; entail iff m appears in
+        // s2, contradiction iff the "negated" marker m^1 appears, neutral
+        // otherwise.
+        "mnli" => {
+            let len = rng.range(6, (body / 2).min(20));
+            let mut s1 = rand_seg(rng, len);
+            let marker = (TOK0 as usize + 2 * rng.below(((VOCAB - TOK0) / 2) as usize)) as i32;
+            s1[rng.below(len)] = marker;
+            let mut s2 = rand_seg(rng, len);
+            // scrub accidental markers
+            for t in s2.iter_mut() {
+                if *t == marker || *t == marker + 1 {
+                    *t = TOK0;
+                }
+            }
+            let label = rng.below(3);
+            match label {
+                0 => s2[rng.below(len)] = marker,     // entailment
+                1 => s2[rng.below(len)] = marker + 1, // contradiction
+                _ => {}                               // neutral
+            }
+            let mut ex = pack(seq, &s1, Some(&s2));
+            ex.label = label;
+            Ok(ex)
+        }
+        // QNLI-like: the "question" asks for token q (first token of s1);
+        // answerable iff q+7 occurs in s2.
+        "qnli" => {
+            let len = rng.range(6, (body / 2).min(20));
+            let mut s1 = rand_seg(rng, len);
+            let q = rng.range(TOK0 as usize, (VOCAB - 8) as usize) as i32;
+            s1[0] = q;
+            let mut s2 = rand_seg(rng, len);
+            for t in s2.iter_mut() {
+                if *t == q + 7 {
+                    *t = TOK0;
+                }
+            }
+            let ans = rng.bool(0.5);
+            if ans {
+                let i = rng.below(len);
+                s2[i] = q + 7;
+            }
+            let mut ex = pack(seq, &s1, Some(&s2));
+            ex.label = usize::from(ans);
+            Ok(ex)
+        }
+        // RTE-like binary entailment: entail iff >= 2 of the 3 marked
+        // premise tokens re-occur in s2.
+        "rte" => {
+            let len = rng.range(8, (body / 2).min(20));
+            let s1 = rand_seg(rng, len);
+            let marks: Vec<i32> = (0..3).map(|i| s1[i]).collect();
+            let mut s2 = rand_seg(rng, len);
+            for t in s2.iter_mut() {
+                if marks.contains(t) {
+                    *t = TOK0;
+                }
+            }
+            let n_present = rng.below(4); // 0..3
+            let slots = rng.choose_distinct(len, n_present);
+            for (j, &slot) in slots.iter().enumerate() {
+                s2[slot] = marks[j % 3];
+            }
+            let present = marks.iter().filter(|m| s2.contains(m)).count();
+            let mut ex = pack(seq, &s1, Some(&s2));
+            ex.label = usize::from(present >= 2);
+            Ok(ex)
+        }
+        other => bail!("unknown task {other:?}"),
+    }
+}
+
+/// Deterministic dataset: train/dev splits from disjoint seed streams.
+pub fn make_split(task: &TaskSpec, seq: usize, n: usize, seed: u64) -> Result<Split> {
+    let mut rng = Rng::new(seed);
+    let mut examples = Vec::with_capacity(n);
+    for _ in 0..n {
+        examples.push(gen_example(task, seq, &mut rng)?);
+    }
+    Ok(Split { examples })
+}
+
+pub fn train_split(task: &TaskSpec, seq: usize) -> Result<Split> {
+    make_split(task, seq, task.train_size, 0x7121_0000 ^ hash_name(task.name))
+}
+
+pub fn dev_split(task: &TaskSpec, seq: usize) -> Result<Split> {
+    make_split(task, seq, task.dev_size, 0xDE10_0000 ^ hash_name(task.name))
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes().fold(1469598103934665603u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(1099511628211)
+    })
+}
+
+/// Batch of examples flattened for the runtime.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub ids: Vec<i32>,
+    pub token_type: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub labels_cls: Vec<i32>,
+    pub labels_reg: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Assemble `examples[start..start+b]` into a flat batch, cycling if the
+/// slice runs past the end (handy for fixed-batch executables).
+pub fn make_batch(split: &Split, start: usize, b: usize, seq: usize) -> Batch {
+    let n = split.examples.len();
+    let mut out = Batch {
+        ids: Vec::with_capacity(b * seq),
+        token_type: Vec::with_capacity(b * seq),
+        mask: Vec::with_capacity(b * seq),
+        labels_cls: Vec::with_capacity(b),
+        labels_reg: Vec::with_capacity(b),
+        batch: b,
+        seq,
+    };
+    for i in 0..b {
+        let ex = &split.examples[(start + i) % n];
+        out.ids.extend_from_slice(&ex.ids);
+        out.token_type.extend_from_slice(&ex.token_type);
+        out.mask.extend_from_slice(&ex.mask);
+        out.labels_cls.push(ex.label as i32);
+        out.labels_reg.push(ex.target);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEQ: usize = 64;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        for task in &TASKS {
+            let split = make_split(task, SEQ, 64, 42).unwrap();
+            for ex in &split.examples {
+                assert_eq!(ex.ids.len(), SEQ);
+                assert_eq!(ex.token_type.len(), SEQ);
+                assert_eq!(ex.mask.len(), SEQ);
+                assert_eq!(ex.ids[0], CLS_ID);
+                assert!(ex.ids.iter().filter(|&&t| t == SEP_ID).count() >= 1);
+                // mask is a prefix of ones
+                let ones = ex.mask.iter().filter(|&&m| m == 1.0).count();
+                assert!(ex.mask[..ones].iter().all(|&m| m == 1.0));
+                assert!(ex.mask[ones..].iter().all(|&m| m == 0.0));
+                // padding only where mask = 0
+                for (i, &id) in ex.ids.iter().enumerate() {
+                    if ex.mask[i] == 1.0 {
+                        assert_ne!(id, PAD_ID, "real token is PAD at {i}");
+                    } else {
+                        assert_eq!(id, PAD_ID);
+                    }
+                }
+                match task.kind {
+                    TaskKind::Classification(n) => assert!(ex.label < n),
+                    TaskKind::Regression => {
+                        assert!((0.0..=1.0).contains(&ex.target))
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let t = task_spec("mnli").unwrap();
+        let a = make_split(&t, SEQ, 16, 7).unwrap();
+        let b = make_split(&t, SEQ, 16, 7).unwrap();
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.ids, y.ids);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn train_dev_disjoint_streams() {
+        let t = task_spec("sst2").unwrap();
+        let tr = train_split(&t, SEQ).unwrap();
+        let dv = dev_split(&t, SEQ).unwrap();
+        assert_ne!(tr.examples[0].ids, dv.examples[0].ids);
+        assert_eq!(tr.examples.len(), t.train_size);
+        assert_eq!(dv.examples.len(), t.dev_size);
+    }
+
+    #[test]
+    fn labels_reasonably_balanced() {
+        for task in &TASKS {
+            if task.name == "stsb" {
+                continue;
+            }
+            let n_cls = match task.kind {
+                TaskKind::Classification(n) => n,
+                _ => unreachable!(),
+            };
+            let split = make_split(task, SEQ, 512, 3).unwrap();
+            let mut counts = vec![0usize; n_cls];
+            for ex in &split.examples {
+                counts[ex.label] += 1;
+            }
+            for (c, &count) in counts.iter().enumerate() {
+                assert!(
+                    count > 512 / n_cls / 4,
+                    "{}: class {c} has only {count}/512",
+                    task.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stsb_targets_spread() {
+        let t = task_spec("stsb").unwrap();
+        let split = make_split(&t, SEQ, 256, 5).unwrap();
+        let lo = split.examples.iter().filter(|e| e.target < 0.3).count();
+        let hi = split.examples.iter().filter(|e| e.target > 0.7).count();
+        assert!(lo > 20 && hi > 20, "targets degenerate: lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn batch_assembly_and_cycling() {
+        let t = task_spec("rte").unwrap();
+        let split = make_split(&t, SEQ, 10, 1).unwrap();
+        let b = make_batch(&split, 8, 4, SEQ);
+        assert_eq!(b.ids.len(), 4 * SEQ);
+        assert_eq!(b.labels_cls.len(), 4);
+        // cycling: items 8, 9, 0, 1
+        assert_eq!(&b.ids[0..SEQ], &split.examples[8].ids[..]);
+        assert_eq!(&b.ids[2 * SEQ..3 * SEQ], &split.examples[0].ids[..]);
+    }
+
+    #[test]
+    fn paired_tasks_have_two_segments() {
+        for task in TASKS.iter().filter(|t| t.paired) {
+            let split = make_split(task, SEQ, 8, 2).unwrap();
+            for ex in &split.examples {
+                assert!(
+                    ex.token_type.iter().any(|&t| t == 1),
+                    "{} lacks segment 1",
+                    task.name
+                );
+                assert_eq!(ex.ids.iter().filter(|&&t| t == SEP_ID).count(), 2);
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! # tq — Efficient Transformer Quantization (EMNLP 2021) reproduction
+//!
+//! Three-layer Rust + JAX + Pallas system reproducing Bondarenko, Nagel &
+//! Blankevoort, *"Understanding and Overcoming the Challenges of Efficient
+//! Transformer Quantization"* (EMNLP 2021).
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas fake-quant / PEG-matmul /
+//!   LayerNorm kernels, verified against pure-jnp oracles.
+//! * **L2** (`python/compile/model.py`): BERT-style encoder with
+//!   runtime-parameterised quantizers, AOT-lowered to HLO text.
+//! * **L3** (this crate): the quantization pipeline — calibration, range
+//!   estimation, PEG grouping with range-based permutation, mixed
+//!   precision, AdaRound, QAT driving, synthetic-GLUE evaluation and the
+//!   paper's experiment reproductions — executing the AOT artifacts via
+//!   the PJRT CPU client (`xla` crate). Python never runs at request time.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

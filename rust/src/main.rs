@@ -1,0 +1,136 @@
+//! `repro` — CLI for the transformer-quantization reproduction.
+//!
+//! Usage:
+//!     repro finetune [--all | --tasks a,b] [--epochs 3] [--lr 1e-3]
+//!     repro table1|table2|table4|table5|table6|table7 [--seeds 3] [--quick]
+//!     repro table7 --detailed        (appendix Table 12)
+//!     repro fig2|fig5|fig6|fig9
+//!     repro hparams                  (appendix Tables 8-11)
+//!     repro eval --task mnli
+//!     repro smoke                    (runtime sanity: load + run artifacts)
+//!
+//! Common flags: --artifacts DIR (default artifacts), --ckpt DIR
+//! (default checkpoints), --results DIR (default results).
+
+use anyhow::{bail, Result};
+
+use tq::coordinator::experiments::{self, ExpOpts};
+use tq::coordinator::Ctx;
+use tq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    if args.subcommand.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let ctx = Ctx::new(
+        args.get_or("artifacts", "artifacts"),
+        args.get_or("ckpt", "checkpoints"),
+        args.get_or("results", "results"),
+    )?;
+    let opts = ExpOpts {
+        seeds: args.get_usize("seeds", 3)?,
+        tasks: args
+            .get("tasks")
+            .map(|t| t.split(',').map(String::from).collect())
+            .or_else(|| args.get("task").map(|t| vec![t.to_string()]))
+            .unwrap_or_default(),
+        quick: args.flag("quick"),
+    };
+
+    let t0 = std::time::Instant::now();
+    match args.subcommand.as_str() {
+        "finetune" => {
+            let epochs = args.get_usize("epochs", 3)?;
+            let lr = args.get_f32("lr", 1e-3)?;
+            experiments::cmd_finetune(&ctx, &opts, epochs, lr)?;
+        }
+        "table1" => experiments::table1(&ctx, &opts)?,
+        "table2" => experiments::table2(&ctx, &opts)?,
+        "table4" => experiments::table4(&ctx, &opts)?,
+        "table5" => experiments::table5(&ctx, &opts)?,
+        "table6" => experiments::table6(&ctx, &opts)?,
+        "table7" => experiments::table7(&ctx, &opts, args.flag("detailed"))?,
+        "table12" => experiments::table7(&ctx, &opts, true)?,
+        "fig2" => experiments::fig2(&ctx, &opts)?,
+        "fig5" => experiments::fig5(&ctx, &opts)?,
+        "fig6" => experiments::fig6(&ctx, &opts)?,
+        "fig9" => experiments::fig9(&ctx, &opts)?,
+        "hparams" => experiments::hparams(&ctx)?,
+        "eval" => cmd_eval(&ctx, &args, &opts)?,
+        "smoke" => cmd_smoke(&ctx)?,
+        other => {
+            print_help();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+    eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
+    Ok(())
+}
+
+fn cmd_eval(ctx: &Ctx, args: &Args, opts: &ExpOpts) -> Result<()> {
+    let task = args.get("task").unwrap_or("mnli");
+    let [fp32, w8a8, peg, mp] = experiments::quick_compare(ctx, task, opts.seeds)?;
+    println!("task {task}:");
+    println!("  FP32          {fp32:.2}");
+    println!("  W8A8 PTQ      {w8a8:.2}");
+    println!("  PEG-PTQ K=8+P {peg:.2}");
+    println!("  MP-PTQ        {mp:.2}");
+    Ok(())
+}
+
+/// Runtime sanity: compile every artifact and run the kernel ones.
+fn cmd_smoke(ctx: &Ctx) -> Result<()> {
+    use tq::runtime::Value;
+    use tq::tensor::Tensor;
+    let names: Vec<String> = ctx.rt.manifest().artifacts.keys().cloned().collect();
+    println!("{} artifacts in manifest", names.len());
+    // golden cross-layer check: Rust quant sim == Pallas kernel output
+    if let Some(g) = &ctx.rt.manifest().golden_fake_quant {
+        let grid = tq::quant::QGrid { qmin: g.qmin, qmax: g.qmax };
+        let t = Tensor::new(vec![g.rows, g.cols], g.x.clone())?;
+        let params: Vec<tq::quant::QParams> = g
+            .scale
+            .iter()
+            .zip(&g.zp)
+            .map(|(&s, &z)| tq::quant::QParams { scale: s, zero_point: z })
+            .collect();
+        let out = tq::quant::qdq_per_lane(&t, &params, grid)?;
+        let want = Tensor::new(vec![g.rows, g.cols], g.out.clone())?;
+        let diff = out.sub(&want)?.abs_max();
+        println!("golden fake-quant max |Δ| = {diff:e}");
+        if diff > 1e-6 {
+            bail!("golden fake-quant mismatch: {diff}");
+        }
+    }
+    // run the standalone fq kernel artifact
+    let sig = ctx.rt.manifest().artifact("kernel_fq_d768")?;
+    let t = Tensor::full(&[sig.inputs[0].shape[0], sig.inputs[0].shape[1]], 0.5);
+    let s = Tensor::full(&[768], 0.01);
+    let z = Tensor::full(&[768], 128.0);
+    let c = Tensor::new(vec![3], vec![0.0, 255.0, 1.0])?;
+    let out = ctx.rt.run(
+        "kernel_fq_d768",
+        &[Value::F32(t), Value::F32(s), Value::F32(z), Value::F32(c)],
+    )?;
+    println!("kernel_fq_d768 -> {:?}, first = {}", out[0].shape(), out[0].data()[0]);
+    // compile-check the rest
+    for n in &names {
+        ctx.rt.executable(n)?;
+        println!("  compiled {n}");
+    }
+    println!("smoke OK");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "repro — 'Understanding and Overcoming the Challenges of Efficient \
+         Transformer Quantization' (EMNLP 2021) reproduction\n\n\
+         subcommands:\n  finetune [--tasks a,b] [--epochs N] [--lr F]\n  \
+         table1 table2 table4 table5 table6 table7 [--detailed] table12\n  \
+         fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  smoke\n\n\
+         flags: --artifacts DIR --ckpt DIR --results DIR --seeds N --quick"
+    );
+}

@@ -1,0 +1,246 @@
+//! Evaluation metrics matching the GLUE benchmark (Wang et al., 2018):
+//! accuracy, F1, Matthews correlation (CoLA), Pearson & Spearman
+//! correlation (STS-B), and the combined per-task scores the paper's
+//! tables report (acc/F1 mean for MRPC & QQP, Pearson/Spearman mean for
+//! STS-B). All scores are reported ×100 as in the paper.
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(gold).filter(|(a, b)| a == b).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Binary F1 with positive class = 1.
+pub fn f1_binary(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let (mut tp, mut fp, mut fner) = (0.0, 0.0, 0.0);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fner += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fner);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Matthews correlation coefficient (CoLA's metric).
+pub fn matthews(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let (mut tp, mut tn, mut fp, mut fner) = (0.0f64, 0.0, 0.0, 0.0);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fner += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fner) * (tn + fp) * (tn + fner)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fner) / denom
+    }
+}
+
+/// Pearson correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+/// Average ranks (ties get the mean rank).
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let mean_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = mean_rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation.
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    pearson(&ranks(a), &ranks(b))
+}
+
+/// Per-task combined score ×100 as reported in the paper's tables.
+pub fn task_score(task: &str, pred_cls: &[usize], gold_cls: &[usize],
+                  pred_reg: &[f64], gold_reg: &[f64]) -> f64 {
+    100.0
+        * match task {
+            "cola" => matthews(pred_cls, gold_cls),
+            "stsb" => {
+                0.5 * (pearson(pred_reg, gold_reg) + spearman(pred_reg, gold_reg))
+            }
+            "mrpc" | "qqp" => {
+                0.5 * (accuracy(pred_cls, gold_cls) + f1_binary(pred_cls, gold_cls))
+            }
+            _ => accuracy(pred_cls, gold_cls),
+        }
+}
+
+/// GLUE macro-average over the 8 tasks (paper's final column).
+pub fn glue_score(per_task: &[f64]) -> f64 {
+    if per_task.is_empty() {
+        return 0.0;
+    }
+    per_task.iter().sum::<f64>() / per_task.len() as f64
+}
+
+/// Median of a slice (the paper reports medians over seeds).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_known_value() {
+        // tp=2 fp=1 fn=1 -> p=2/3 r=2/3 f1=2/3
+        let pred = [1, 1, 1, 0, 0];
+        let gold = [1, 1, 0, 1, 0];
+        assert!((f1_binary(&pred, &gold) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let g = [0, 1, 0, 1, 1, 0];
+        assert!((matthews(&g, &g) - 1.0).abs() < 1e-9);
+        let inv: Vec<usize> = g.iter().map(|&x| 1 - x).collect();
+        assert!((matthews(&inv, &g) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_degenerate_is_zero() {
+        assert_eq!(matthews(&[1, 1, 1], &[1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn pearson_linear() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 8.0, 27.0, 64.0, 125.0]; // cubic: rank corr = 1
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0];
+        let b = [3.0, 3.0, 5.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn task_score_dispatch() {
+        let p = [1usize, 0, 1, 1];
+        let g = [1usize, 0, 0, 1];
+        assert!((task_score("sst2", &p, &g, &[], &[]) - 75.0).abs() < 1e-9);
+        let s = task_score("mrpc", &p, &g, &[], &[]);
+        let expect = 100.0 * 0.5 * (0.75 + f1_binary(&p, &g));
+        assert!((s - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_metrics_bounded() {
+        prop_check("metrics in [-1,1]", 100, |rng| {
+            let n = 3 + rng.below(50);
+            let pred: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+            let gold: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+            let a: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            prop_assert(accuracy(&pred, &gold) <= 1.0, "acc > 1")?;
+            prop_assert(f1_binary(&pred, &gold) <= 1.0, "f1 > 1")?;
+            prop_assert(matthews(&pred, &gold).abs() <= 1.0 + 1e-9, "mcc")?;
+            prop_assert(pearson(&a, &b).abs() <= 1.0 + 1e-9, "pearson")?;
+            prop_assert(spearman(&a, &b).abs() <= 1.0 + 1e-9, "spearman")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pearson_shift_scale_invariant() {
+        prop_check("pearson invariance", 50, |rng| {
+            let n = 5 + rng.below(30);
+            let a: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let scale = 0.5 + rng.f64() * 3.0;
+            let shift = rng.f64() * 5.0 - 2.5;
+            let b2: Vec<f64> = b.iter().map(|&x| x * scale + shift).collect();
+            let p1 = pearson(&a, &b);
+            let p2 = pearson(&a, &b2);
+            prop_assert((p1 - p2).abs() < 1e-7, format!("{p1} vs {p2}"))
+        });
+    }
+}

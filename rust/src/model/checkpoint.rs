@@ -1,0 +1,130 @@
+//! Checkpoint I/O: a simple self-describing binary tensor container
+//! (safetensors-like, but dependency-free).
+//!
+//! Layout (little-endian):
+//!     magic "TQCKPT01"
+//!     u32 tensor count
+//!     per tensor: u32 name_len, name bytes, u32 ndim, u64 dims...,
+//!                 f32 data...
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::Params;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"TQCKPT01";
+
+pub fn save(params: &Params, path: impl AsRef<Path>) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in params.names.iter().zip(&params.tensors) {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // bulk copy of the f32 payload
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Params> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(&path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad checkpoint magic", path.as_ref().display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut names = Vec::with_capacity(count);
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 8 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+        };
+        f.read_exact(bytes)?;
+        names.push(String::from_utf8(name)?);
+        tensors.push(Tensor::new(shape, data)?);
+    }
+    Ok(Params { names, tensors })
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+
+    #[test]
+    fn roundtrip() {
+        let info = tiny_model_info();
+        let p = Params::init(&info, 33);
+        let dir = std::env::temp_dir().join("tq_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save(&p, &path).unwrap();
+        let q = load(&path).unwrap();
+        assert_eq!(p.names, q.names);
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("tq_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let info = tiny_model_info();
+        let p = Params::init(&info, 1);
+        let dir = std::env::temp_dir().join("tq_ckpt_trunc");
+        let path = dir.join("t.ckpt");
+        save(&p, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,330 @@
+//! AOT manifest: the machine-readable contract between L2 (aot.py) and the
+//! Rust runtime — artifact input/output signatures, model topology
+//! (parameter & quantizer-site specs), and golden test vectors.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl ArtifactSig {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output {name:?}", self.name))
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSpec {
+    pub name: String,
+    /// lanes this site contributes to the flat act_scales vector (d, d_ff
+    /// or 1 for scalar-granularity sites)
+    pub channels: usize,
+    /// offset of the first lane
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub n_out: usize,
+    pub outlier_dims: Vec<usize>,
+    pub pad_id: i32,
+    pub cls_id: i32,
+    pub sep_id: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub config: ModelConfig,
+    pub params: Vec<ParamSpec>,
+    pub sites: Vec<SiteSpec>,
+    pub total_scale_lanes: usize,
+    /// weight tensors with (QAT-learnable) per-tensor quantizers
+    pub wq: Vec<String>,
+}
+
+impl ModelInfo {
+    pub fn site(&self, name: &str) -> Result<&SiteSpec> {
+        self.sites
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("no site {name:?}"))
+    }
+
+    pub fn site_index(&self, name: &str) -> Result<usize> {
+        self.sites
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("no site {name:?}"))
+    }
+}
+
+/// Golden fake-quant vectors emitted by aot.py for bit-exact cross-layer
+/// testing of the Rust quantization simulation.
+#[derive(Debug, Clone)]
+pub struct GoldenFakeQuant {
+    pub x: Vec<f32>,
+    pub scale: Vec<f32>,
+    pub zp: Vec<f32>,
+    pub qmin: f32,
+    pub qmax: f32,
+    pub rows: usize,
+    pub cols: usize,
+    pub out: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub golden_fake_quant: Option<GoldenFakeQuant>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    name: name.clone(),
+                    file: dir.join(a.get("file")?.as_str()?),
+                    inputs: parse_sigs(a.get("inputs")?)?,
+                    outputs: parse_sigs(a.get("outputs")?)?,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(m)?);
+        }
+        let golden_fake_quant = match v.opt("golden").and_then(|g| g.opt("fake_quant")) {
+            Some(g) => Some(GoldenFakeQuant {
+                x: g.get("x")?.as_f32_vec()?,
+                scale: g.get("scale")?.as_f32_vec()?,
+                zp: g.get("zp")?.as_f32_vec()?,
+                qmin: g.get("qmin")?.as_f64()? as f32,
+                qmax: g.get("qmax")?.as_f64()? as f32,
+                rows: g.get("rows")?.as_usize()?,
+                cols: g.get("cols")?.as_usize()?,
+                out: g.get("out")?.as_f32_vec()?,
+            }),
+            None => None,
+        };
+        Ok(Manifest { artifacts, models, golden_fake_quant, dir })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name:?} in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no model {name:?} in manifest"))
+    }
+}
+
+fn parse_sigs(v: &Json) -> Result<Vec<TensorSig>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t.get("shape")?.as_usize_vec()?,
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_model(m: &Json) -> Result<ModelInfo> {
+    let c = m.get("config")?;
+    let config = ModelConfig {
+        name: c.get("name")?.as_str()?.to_string(),
+        vocab: c.get("vocab")?.as_usize()?,
+        d: c.get("d")?.as_usize()?,
+        heads: c.get("heads")?.as_usize()?,
+        layers: c.get("layers")?.as_usize()?,
+        d_ff: c.get("d_ff")?.as_usize()?,
+        seq: c.get("seq")?.as_usize()?,
+        n_out: c.get("n_out")?.as_usize()?,
+        outlier_dims: c.get("outlier_dims")?.as_usize_vec()?,
+        pad_id: c.get("pad_id")?.as_f64()? as i32,
+        cls_id: c.get("cls_id")?.as_f64()? as i32,
+        sep_id: c.get("sep_id")?.as_f64()? as i32,
+    };
+    let params = m
+        .get("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p.get("shape")?.as_usize_vec()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let sites = m
+        .get("sites")?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(SiteSpec {
+                name: s.get("name")?.as_str()?.to_string(),
+                channels: s.get("channels")?.as_usize()?,
+                offset: s.get("offset")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let wq = m
+        .get("wq")?
+        .as_arr()?
+        .iter()
+        .map(|s| Ok(s.as_str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelInfo {
+        config,
+        params,
+        sites,
+        total_scale_lanes: m.get("total_scale_lanes")?.as_usize()?,
+        wq,
+    })
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// A small hand-built ModelInfo for unit tests that don't need the real
+    /// manifest on disk.
+    pub fn tiny_model_info() -> ModelInfo {
+        let d = 8;
+        let mut sites = Vec::new();
+        let mut off = 0;
+        for (name, c) in [("embed_sum", d), ("layer0.res2_sum", d), ("head_out", 1)] {
+            sites.push(SiteSpec { name: name.into(), channels: c, offset: off });
+            off += c;
+        }
+        ModelInfo {
+            config: ModelConfig {
+                name: "tiny".into(),
+                vocab: 16,
+                d,
+                heads: 2,
+                layers: 1,
+                d_ff: 16,
+                seq: 8,
+                n_out: 3,
+                outlier_dims: vec![1],
+                pad_id: 0,
+                cls_id: 1,
+                sep_id: 2,
+            },
+            params: vec![
+                ParamSpec { name: "embed.tok".into(), shape: vec![16, d] },
+                ParamSpec { name: "embed.ln.g".into(), shape: vec![d] },
+                ParamSpec { name: "embed.ln.b".into(), shape: vec![d] },
+                ParamSpec { name: "layer0.ffn1.w".into(), shape: vec![d, 16] },
+            ],
+            sites,
+            total_scale_lanes: off,
+            wq: vec!["embed.tok".into(), "layer0.ffn1.w".into()],
+        }
+    }
+
+    #[test]
+    fn parses_manifest_shape() {
+        let text = r#"{
+          "artifacts": {"fwd": {"file": "fwd.hlo.txt",
+            "inputs": [{"name": "x", "shape": [2], "dtype": "f32"}],
+            "outputs": [{"name": "y", "shape": [], "dtype": "f32"}]}},
+          "models": {"tiny": {
+            "config": {"name": "tiny", "vocab": 16, "d": 8, "heads": 2,
+                       "layers": 1, "d_ff": 16, "seq": 8, "n_out": 3,
+                       "outlier_dims": [1], "pad_id": 0, "cls_id": 1,
+                       "sep_id": 2, "mask_bias": -30.0},
+            "params": [{"name": "embed.tok", "shape": [16, 8]}],
+            "sites": [{"name": "embed_sum", "channels": 8, "offset": 0}],
+            "total_scale_lanes": 8,
+            "wq": ["embed.tok"],
+            "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-8}}},
+          "golden": {"fake_quant": {"x": [1.0], "scale": [0.5], "zp": [0],
+            "qmin": 0, "qmax": 255, "rows": 1, "cols": 1, "out": [1.0]}}
+        }"#;
+        let m = Manifest::parse(text, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.artifact("fwd").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2]);
+        assert_eq!(a.file, PathBuf::from("/tmp/a/fwd.hlo.txt"));
+        let info = m.model("tiny").unwrap();
+        assert_eq!(info.config.d, 8);
+        assert_eq!(info.site("embed_sum").unwrap().channels, 8);
+        assert!(m.golden_fake_quant.is_some());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn input_output_index() {
+        let a = ArtifactSig {
+            name: "t".into(),
+            file: PathBuf::new(),
+            inputs: vec![
+                TensorSig { name: "a".into(), shape: vec![], dtype: "f32".into() },
+                TensorSig { name: "b".into(), shape: vec![], dtype: "i32".into() },
+            ],
+            outputs: vec![TensorSig { name: "y".into(), shape: vec![], dtype: "f32".into() }],
+        };
+        assert_eq!(a.input_index("b").unwrap(), 1);
+        assert!(a.input_index("z").is_err());
+        assert_eq!(a.output_index("y").unwrap(), 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Model topology metadata (mirroring python/compile/model.py via the AOT
+//! manifest), parameter store, checkpoint I/O, and assembly of the runtime
+//! quantization-policy tensors.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod qconfig;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use manifest::ModelInfo;
+
+/// Ordered parameter store (order == the executable input signature).
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Params {
+    /// Seeded initialisation mirroring L2's `init_params` (biases zero,
+    /// LayerNorm gains one, weights N(0, 0.02)).
+    ///
+    /// Note: the values intentionally do NOT need to match jax's init —
+    /// training runs entirely through the HLO train-step executables, so
+    /// any sane init works; determinism per seed is what matters.
+    pub fn init(info: &ModelInfo, seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for p in &info.params {
+            names.push(p.name.clone());
+            let t = if p.name.ends_with(".b") {
+                Tensor::zeros(&p.shape)
+            } else if p.name.ends_with(".g") {
+                Tensor::full(&p.shape, 1.0)
+            } else {
+                Tensor::randn(&p.shape, 0.02, &mut rng)
+            };
+            tensors.push(t);
+        }
+        Params { names, tensors }
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("no param {name:?}"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        Ok(&self.tensors[self.index_of(name)?])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = self.index_of(name)?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn zeros_like(&self) -> Params {
+        Params {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+        }
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Model size in bytes at a given storage layout: `weight_bits` for
+    /// matmul weights, `embed_bits` for the token-embedding table, 32-bit
+    /// for everything else (biases, LayerNorm). Used for the paper's
+    /// Table 7 "memory reduction" column.
+    pub fn size_bytes(&self, info: &ModelInfo, weight_bits: u32, embed_bits: u32) -> usize {
+        let mut bits = 0usize;
+        for (n, t) in self.names.iter().zip(&self.tensors) {
+            let b = if n == "embed.tok" {
+                embed_bits as usize
+            } else if info.wq.iter().any(|w| w == n) {
+                weight_bits as usize
+            } else {
+                32
+            };
+            bits += t.len() * b;
+        }
+        bits / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+
+    #[test]
+    fn init_is_deterministic_and_typed() {
+        let info = tiny_model_info();
+        let a = Params::init(&info, 7);
+        let b = Params::init(&info, 7);
+        let c = Params::init(&info, 8);
+        assert_eq!(a.tensors[0].data(), b.tensors[0].data());
+        assert_ne!(a.get("embed.tok").unwrap().data(), c.get("embed.tok").unwrap().data());
+        // biases zero, gains one
+        assert!(a.get("embed.ln.b").unwrap().data().iter().all(|&x| x == 0.0));
+        assert!(a.get("embed.ln.g").unwrap().data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn size_accounting() {
+        let info = tiny_model_info();
+        let p = Params::init(&info, 1);
+        let fp32 = p.size_bytes(&info, 32, 32);
+        let w8 = p.size_bytes(&info, 8, 8);
+        assert_eq!(fp32, p.num_params() * 4);
+        assert!(w8 < fp32);
+    }
+}

@@ -1,0 +1,294 @@
+//! Quantization policy: per-site activation settings + weight settings,
+//! and their compilation into the flat runtime tensors (act_scales,
+//! act_zps, act_cfg) the HLO executables consume (DESIGN.md §3).
+//!
+//! This is where the paper's configurations become data:
+//!   * W8A8 per-tensor PTQ        -> all sites 8-bit PerTensor
+//!   * leave-one-out ablation     -> `enabled = false` on a site family
+//!   * mixed precision (Table 4)  -> 16-bit on selected sites
+//!   * PEG ± permutation (Table 5)-> PerEmbeddingGroup granularity
+//!   * QAT                        -> scales learned in-graph, assembled here
+//!     for initialisation
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::quant::{
+    peg::lane_qparams, qparams_from_range, Estimator, Granularity, QGrid, QParams,
+};
+use crate::quant::estimators::RangeTracker;
+use crate::model::manifest::ModelInfo;
+
+/// Per-site activation quantizer configuration.
+#[derive(Debug, Clone)]
+pub struct SiteCfg {
+    pub bits: u32,
+    pub granularity: Granularity,
+    pub enabled: bool,
+}
+
+impl Default for SiteCfg {
+    fn default() -> Self {
+        SiteCfg { bits: 8, granularity: Granularity::PerTensor, enabled: true }
+    }
+}
+
+/// Weight quantizer configuration (applied Rust-side on parameter tensors).
+#[derive(Debug, Clone)]
+pub struct WeightCfg {
+    pub bits: u32,
+    pub estimator: Estimator,
+    /// Q-BERT-style group-wise per-channel quantization (None = per-tensor)
+    pub per_channel_groups: Option<usize>,
+    pub enabled: bool,
+}
+
+impl Default for WeightCfg {
+    fn default() -> Self {
+        WeightCfg { bits: 8, estimator: Estimator::CurrentMinMax, per_channel_groups: None, enabled: true }
+    }
+}
+
+/// Full activation policy over a model's sites.
+#[derive(Debug, Clone)]
+pub struct QuantPolicy {
+    /// default config for sites not in `overrides`
+    pub default: SiteCfg,
+    pub overrides: BTreeMap<String, SiteCfg>,
+    pub weights: WeightCfg,
+    /// per-weight-name overrides (e.g. 2-bit embeddings)
+    pub weight_overrides: BTreeMap<String, WeightCfg>,
+}
+
+impl QuantPolicy {
+    /// Everything FP32 (baseline).
+    pub fn fp32() -> QuantPolicy {
+        QuantPolicy {
+            default: SiteCfg { enabled: false, ..Default::default() },
+            overrides: BTreeMap::new(),
+            weights: WeightCfg { enabled: false, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    /// Uniform W{wb}A{ab} per-tensor policy (the paper's W8A8 baseline).
+    pub fn uniform(wb: u32, ab: u32) -> QuantPolicy {
+        QuantPolicy {
+            default: SiteCfg { bits: ab, ..Default::default() },
+            overrides: BTreeMap::new(),
+            weights: WeightCfg { bits: wb, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    pub fn site_cfg(&self, site: &str) -> &SiteCfg {
+        self.overrides.get(site).unwrap_or(&self.default)
+    }
+
+    pub fn weight_cfg(&self, name: &str) -> &WeightCfg {
+        self.weight_overrides.get(name).unwrap_or(&self.weights)
+    }
+
+    /// Override a set of sites (by exact name).
+    pub fn with_sites(mut self, sites: &[&str], cfg: SiteCfg) -> QuantPolicy {
+        for s in sites {
+            self.overrides.insert(s.to_string(), cfg.clone());
+        }
+        self
+    }
+
+    /// Override every site whose name ends with `suffix` across layers
+    /// (e.g. "res2_sum" hits layer0..N) — used by the Table 2 ablations
+    /// and the PEG "only FFN" configurations.
+    pub fn with_site_family(mut self, info: &ModelInfo, suffix: &str, cfg: SiteCfg) -> QuantPolicy {
+        for s in &info.sites {
+            if s.name.ends_with(suffix) {
+                self.overrides.insert(s.name.clone(), cfg.clone());
+            }
+        }
+        self
+    }
+}
+
+/// The flat tensors the executables take, plus bookkeeping for reports.
+#[derive(Debug, Clone)]
+pub struct ActQuantTensors {
+    pub scales: Vec<f32>,
+    pub zps: Vec<f32>,
+    /// (n_sites, 3) row-major [qmin, qmax, enable]
+    pub cfg: Vec<f32>,
+    /// per-site chosen permutation (only when PEG+permute), for reporting
+    pub permutations: BTreeMap<String, Vec<usize>>,
+}
+
+/// Compile per-site range statistics + policy into runtime tensors.
+///
+/// `trackers` maps site name -> calibrated RangeTracker (per-lane stats).
+pub fn assemble_act_tensors(
+    info: &ModelInfo,
+    policy: &QuantPolicy,
+    trackers: &BTreeMap<String, RangeTracker>,
+) -> Result<ActQuantTensors> {
+    let mut scales = vec![1.0f32; info.total_scale_lanes];
+    let mut zps = vec![0.0f32; info.total_scale_lanes];
+    let mut cfg = Vec::with_capacity(info.sites.len() * 3);
+    let mut permutations = BTreeMap::new();
+
+    for site in &info.sites {
+        let sc = policy.site_cfg(&site.name);
+        let grid = QGrid::asymmetric(sc.bits);
+        cfg.extend_from_slice(&[grid.qmin, grid.qmax, if sc.enabled { 1.0 } else { 0.0 }]);
+        if !sc.enabled {
+            continue;
+        }
+        let tracker = match trackers.get(&site.name) {
+            Some(t) => t,
+            // unobserved site (e.g. quick tests): harmless wide default
+            None => {
+                for l in 0..site.channels {
+                    scales[site.offset + l] = 1.0;
+                    zps[site.offset + l] = 0.0;
+                }
+                continue;
+            }
+        };
+        let params: Vec<QParams> = if site.channels == 1 {
+            let (lo, hi) = tracker.tensor_range(grid);
+            vec![qparams_from_range(lo, hi, grid)]
+        } else {
+            match &sc.granularity {
+                Granularity::PerTensor => {
+                    let (lo, hi) = tracker.tensor_range(grid);
+                    vec![qparams_from_range(lo, hi, grid); site.channels]
+                }
+                g => {
+                    let (lo, hi) = tracker.lane_ranges();
+                    let (params, perm) = lane_qparams(&lo, &hi, g, grid)?;
+                    if matches!(g, Granularity::PerEmbeddingGroup { permute: true, .. }) {
+                        permutations.insert(site.name.clone(), perm);
+                    }
+                    params
+                }
+            }
+        };
+        for (l, p) in params.iter().enumerate() {
+            scales[site.offset + l] = p.scale;
+            zps[site.offset + l] = p.zero_point;
+        }
+    }
+    Ok(ActQuantTensors { scales, zps, cfg, permutations })
+}
+
+/// The paper's activation-quantizer count for mixed-precision accounting
+/// ("36 out of 161 activation quantizers", Table 4 footnote).
+pub fn count_sites_at_bits(info: &ModelInfo, policy: &QuantPolicy, bits: u32) -> usize {
+    info.sites
+        .iter()
+        .filter(|s| {
+            let c = policy.site_cfg(&s.name);
+            c.enabled && c.bits == bits
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+    use crate::quant::Estimator;
+    use crate::tensor::Tensor;
+
+    fn calibrated_trackers(info: &ModelInfo) -> BTreeMap<String, RangeTracker> {
+        let mut out = BTreeMap::new();
+        for s in &info.sites {
+            let mut tr = RangeTracker::new(Estimator::CurrentMinMax, s.channels);
+            let t = Tensor::from_fn(&[4, s.channels], |i| (i % 7) as f32 - 3.0);
+            tr.observe(&t).unwrap();
+            out.insert(s.name.clone(), tr);
+        }
+        out
+    }
+
+    #[test]
+    fn assemble_shapes_and_enables() {
+        let info = tiny_model_info();
+        let trackers = calibrated_trackers(&info);
+        let policy = QuantPolicy::uniform(8, 8);
+        let t = assemble_act_tensors(&info, &policy, &trackers).unwrap();
+        assert_eq!(t.scales.len(), info.total_scale_lanes);
+        assert_eq!(t.cfg.len(), info.sites.len() * 3);
+        assert!(t.cfg.chunks(3).all(|c| c[2] == 1.0));
+
+        let fp32 = QuantPolicy::fp32();
+        let t2 = assemble_act_tensors(&info, &fp32, &trackers).unwrap();
+        assert!(t2.cfg.chunks(3).all(|c| c[2] == 0.0));
+    }
+
+    #[test]
+    fn per_tensor_scales_uniform_across_lanes() {
+        let info = tiny_model_info();
+        let trackers = calibrated_trackers(&info);
+        let t = assemble_act_tensors(&info, &QuantPolicy::uniform(8, 8), &trackers).unwrap();
+        let s = info.site("embed_sum").unwrap();
+        let lanes = &t.scales[s.offset..s.offset + s.channels];
+        assert!(lanes.iter().all(|&x| x == lanes[0]));
+    }
+
+    #[test]
+    fn mixed_precision_override() {
+        let info = tiny_model_info();
+        let trackers = calibrated_trackers(&info);
+        let policy = QuantPolicy::uniform(8, 8).with_site_family(
+            &info,
+            "res2_sum",
+            SiteCfg { bits: 16, ..Default::default() },
+        );
+        let t = assemble_act_tensors(&info, &policy, &trackers).unwrap();
+        let idx = info.site_index("layer0.res2_sum").unwrap();
+        assert_eq!(t.cfg[idx * 3 + 1], 65535.0);
+        assert_eq!(count_sites_at_bits(&info, &policy, 16), 1);
+        assert_eq!(count_sites_at_bits(&info, &policy, 8), info.sites.len() - 1);
+    }
+
+    #[test]
+    fn peg_granularity_writes_group_scales() {
+        let info = tiny_model_info();
+        // make one site have an outlier lane
+        let mut trackers = calibrated_trackers(&info);
+        let s = info.site("layer0.res2_sum").unwrap().clone();
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, s.channels);
+        // lane 3 swings ±50, the others ±0.5 (sign alternates across rows)
+        let t = Tensor::from_fn(&[2, s.channels], |i| {
+            let sign = if i / s.channels == 0 { 1.0 } else { -1.0 };
+            sign * if i % s.channels == 3 { 50.0 } else { 0.5 }
+        });
+        tr.observe(&t).unwrap();
+        trackers.insert(s.name.clone(), tr);
+
+        let policy = QuantPolicy::uniform(8, 8).with_sites(
+            &["layer0.res2_sum"],
+            SiteCfg {
+                bits: 8,
+                granularity: Granularity::PerEmbeddingGroup { k: 4, permute: true },
+                enabled: true,
+            },
+        );
+        let out = assemble_act_tensors(&info, &policy, &trackers).unwrap();
+        let lanes = &out.scales[s.offset..s.offset + s.channels];
+        // K=4 over 8 lanes => groups of 2: the outlier lane (3) plus its
+        // one group-mate get a large scale, the remaining 6 stay tight
+        assert!(lanes[3] > 0.1, "{lanes:?}");
+        let tight = lanes.iter().filter(|&&v| v < 0.01).count();
+        assert_eq!(tight, 6, "{lanes:?}");
+        assert!(out.permutations.contains_key("layer0.res2_sum"));
+    }
+
+    #[test]
+    fn unobserved_site_gets_safe_defaults() {
+        let info = tiny_model_info();
+        let trackers = BTreeMap::new();
+        let t = assemble_act_tensors(&info, &QuantPolicy::uniform(8, 8), &trackers).unwrap();
+        assert!(t.scales.iter().all(|&s| s == 1.0));
+    }
+}

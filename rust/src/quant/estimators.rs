@@ -1,0 +1,278 @@
+//! Static range estimators (paper §2 "static range estimation"):
+//! current min-max, running min-max (EMA), and MSE grid search.
+//!
+//! Estimators observe calibration batches *per lane* (last-axis channel) so
+//! a single pass supports every downstream granularity: per-tensor ranges
+//! reduce over lanes, PEG groups reduce over sorted lane subsets, and
+//! per-embedding uses the lane stats directly.
+
+use anyhow::{bail, Result};
+
+use super::{qdq_slice, qparams_from_range, Estimator, QGrid};
+use crate::tensor::Tensor;
+
+/// Momentum for running min-max (paper Appendix B.2 uses 0.9).
+pub const RUNNING_MOMENTUM: f32 = 0.9;
+
+/// Cap on retained samples for the MSE search (reservoir, deterministic).
+const MSE_RESERVOIR: usize = 1 << 16;
+
+/// Accumulates per-lane range statistics over calibration batches.
+#[derive(Debug, Clone)]
+pub struct RangeTracker {
+    pub kind: Estimator,
+    lanes: usize,
+    /// current per-lane mins/maxs (semantics depend on `kind`)
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+    batches_seen: usize,
+    /// downsampled raw values for the MSE search
+    reservoir: Vec<f32>,
+    seen: usize,
+}
+
+impl RangeTracker {
+    pub fn new(kind: Estimator, lanes: usize) -> RangeTracker {
+        RangeTracker {
+            kind,
+            lanes,
+            lo: vec![f32::INFINITY; lanes],
+            hi: vec![f32::NEG_INFINITY; lanes],
+            batches_seen: 0,
+            reservoir: Vec::new(),
+            seen: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn batches_seen(&self) -> usize {
+        self.batches_seen
+    }
+
+    /// Observe one calibration batch of this site's activation tensor.
+    pub fn observe(&mut self, t: &Tensor) -> Result<()> {
+        if t.last_dim() != self.lanes && !(self.lanes == 1) {
+            bail!("tracker lanes {} vs tensor lanes {}", self.lanes, t.last_dim());
+        }
+        let (blo, bhi) = if self.lanes == 1 {
+            (vec![t.min()], vec![t.max()])
+        } else {
+            t.lane_min_max()
+        };
+        match self.kind {
+            Estimator::CurrentMinMax => {
+                // "current": ranges of the most recent batch only
+                self.lo = blo;
+                self.hi = bhi;
+            }
+            Estimator::RunningMinMax => {
+                if self.batches_seen == 0 {
+                    self.lo = blo;
+                    self.hi = bhi;
+                } else {
+                    let m = RUNNING_MOMENTUM;
+                    for j in 0..self.lanes {
+                        self.lo[j] = m * self.lo[j] + (1.0 - m) * blo[j];
+                        self.hi[j] = m * self.hi[j] + (1.0 - m) * bhi[j];
+                    }
+                }
+            }
+            Estimator::Mse => {
+                for j in 0..self.lanes {
+                    self.lo[j] = self.lo[j].min(blo[j]);
+                    self.hi[j] = self.hi[j].max(bhi[j]);
+                }
+                self.stash(t.data());
+            }
+        }
+        self.batches_seen += 1;
+        Ok(())
+    }
+
+    /// Deterministic reservoir: keep a strided subsample once full.
+    fn stash(&mut self, xs: &[f32]) {
+        self.seen += xs.len();
+        if self.reservoir.len() < MSE_RESERVOIR {
+            let room = MSE_RESERVOIR - self.reservoir.len();
+            let stride = (xs.len() / room.max(1)).max(1);
+            self.reservoir.extend(xs.iter().step_by(stride).take(room));
+        }
+    }
+
+    /// Final per-lane ranges.
+    pub fn lane_ranges(&self) -> (Vec<f32>, Vec<f32>) {
+        let fix = |v: &Vec<f32>| {
+            v.iter()
+                .map(|&x| if x.is_finite() { x } else { 0.0 })
+                .collect::<Vec<_>>()
+        };
+        (fix(&self.lo), fix(&self.hi))
+    }
+
+    /// Reduce to a single (lo, hi) per-tensor range; for the MSE estimator
+    /// this runs the clipping-grid search of Choukroun et al. (2019) /
+    /// Banner et al. (2018).
+    pub fn tensor_range(&self, grid: QGrid) -> (f32, f32) {
+        let (lo, hi) = self.lane_ranges();
+        let lo = lo.iter().copied().fold(f32::INFINITY, f32::min).min(0.0);
+        let hi = hi.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+        match self.kind {
+            Estimator::Mse => mse_search(&self.reservoir, lo, hi, grid),
+            _ => (lo, hi),
+        }
+    }
+}
+
+/// Grid search over symmetric shrinkage of [lo, hi] minimising the
+/// quantize-dequantize MSE on `samples`.
+pub fn mse_search(samples: &[f32], lo: f32, hi: f32, grid: QGrid) -> (f32, f32) {
+    if samples.is_empty() || hi <= lo {
+        return (lo, hi);
+    }
+    let mut best = (lo, hi);
+    let mut best_err = f32::INFINITY;
+    let mut buf = Vec::with_capacity(samples.len());
+    for step in 0..=40 {
+        let alpha = 1.0 - 0.02 * step as f32; // 1.00, 0.98 .. 0.20
+        let clo = lo * alpha;
+        let chi = hi * alpha;
+        let p = qparams_from_range(clo, chi, grid);
+        buf.clear();
+        buf.extend_from_slice(samples);
+        qdq_slice(&mut buf, p, grid);
+        let err: f32 = samples
+            .iter()
+            .zip(&buf)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        if err < best_err {
+            best_err = err;
+            best = (clo, chi);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{qdq_tensor, qparams_from_range};
+    use crate::util::prop::{prop_check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::new(shape.to_vec(), data).unwrap()
+    }
+
+    #[test]
+    fn current_minmax_tracks_last_batch() {
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, 2);
+        tr.observe(&t(&[2, 2], vec![-5., 1., 2., 3.])).unwrap();
+        tr.observe(&t(&[2, 2], vec![-1., 0., 1., 2.])).unwrap();
+        let (lo, hi) = tr.lane_ranges();
+        assert_eq!((lo[0], hi[0]), (-1., 1.));
+        assert_eq!((lo[1], hi[1]), (0., 2.));
+    }
+
+    #[test]
+    fn running_minmax_is_ema() {
+        let mut tr = RangeTracker::new(Estimator::RunningMinMax, 1);
+        tr.observe(&t(&[2], vec![0.0, 10.0])).unwrap();
+        tr.observe(&t(&[2], vec![0.0, 20.0])).unwrap();
+        let (_, hi) = tr.lane_ranges();
+        let expected = 0.9 * 10.0 + 0.1 * 20.0;
+        assert!((hi[0] - expected).abs() < 1e-5, "{} vs {expected}", hi[0]);
+    }
+
+    #[test]
+    fn mse_estimator_clips_outliers() {
+        // at 4 bits, one huge outlier among thousands of small values makes
+        // the full min-max range catastrophic; the MSE search must clip.
+        // (At 8 bits keeping the outlier can genuinely be optimal — the
+        // trade-off the paper's §3 range-vs-precision discussion describes.)
+        let mut rng = Rng::new(1);
+        let mut data: Vec<f32> = (0..4096).map(|_| rng.uniform(0.0, 1.0)).collect();
+        data[7] = 10.0;
+        let mut tr = RangeTracker::new(Estimator::Mse, 1);
+        tr.observe(&t(&[4096], data)).unwrap();
+        let (_lo, hi) = tr.tensor_range(QGrid::asymmetric(4));
+        assert!(hi < 5.0, "hi {hi} not clipped");
+    }
+
+    #[test]
+    fn mse_beats_minmax_on_outlier_data() {
+        let mut rng = Rng::new(2);
+        let mut data: Vec<f32> = (0..8192).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        data[0] = 80.0;
+        let tensor = t(&[8192], data.clone());
+        let grid = QGrid::asymmetric(8);
+
+        let mut mm = RangeTracker::new(Estimator::CurrentMinMax, 1);
+        mm.observe(&tensor).unwrap();
+        let (l1, h1) = mm.tensor_range(grid);
+        let e_mm = qdq_tensor(&tensor, qparams_from_range(l1, h1, grid), grid)
+            .mse(&tensor)
+            .unwrap();
+
+        let mut ms = RangeTracker::new(Estimator::Mse, 1);
+        ms.observe(&tensor).unwrap();
+        let (l2, h2) = ms.tensor_range(grid);
+        let e_ms = qdq_tensor(&tensor, qparams_from_range(l2, h2, grid), grid)
+            .mse(&tensor)
+            .unwrap();
+
+        assert!(e_ms < e_mm, "mse {e_ms} !< minmax {e_mm}");
+    }
+
+    #[test]
+    fn scalar_lane_tracker_accepts_any_shape() {
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, 1);
+        tr.observe(&t(&[2, 3, 4], (0..24).map(|i| i as f32).collect())).unwrap();
+        let (lo, hi) = tr.lane_ranges();
+        assert_eq!((lo[0], hi[0]), (0.0, 23.0));
+    }
+
+    #[test]
+    fn prop_running_bounded_by_extremes() {
+        prop_check("running in hull", 100, |rng| {
+            let mut tr = RangeTracker::new(Estimator::RunningMinMax, 1);
+            let mut gmin = f32::INFINITY;
+            let mut gmax = f32::NEG_INFINITY;
+            for _ in 0..5 {
+                let data: Vec<f32> = (0..32).map(|_| rng.uniform(-9.0, 9.0)).collect();
+                gmin = gmin.min(data.iter().copied().fold(f32::INFINITY, f32::min));
+                gmax = gmax.max(data.iter().copied().fold(f32::NEG_INFINITY, f32::max));
+                tr.observe(&t(&[32], data)).unwrap();
+            }
+            let (lo, hi) = tr.lane_ranges();
+            prop_assert(
+                lo[0] >= gmin - 1e-5 && hi[0] <= gmax + 1e-5,
+                format!("EMA range [{},{}] outside hull [{gmin},{gmax}]", lo[0], hi[0]),
+            )
+        });
+    }
+
+    #[test]
+    fn mse_search_never_worse_than_full_range() {
+        prop_check("mse <= minmax", 50, |rng| {
+            let n = 2048;
+            let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let lo = data.iter().copied().fold(f32::INFINITY, f32::min).min(0.0);
+            let hi = data.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+            let grid = QGrid::asymmetric(4);
+            let (slo, shi) = mse_search(&data, lo, hi, grid);
+            let err = |l: f32, h: f32| {
+                let mut buf = data.clone();
+                qdq_slice(&mut buf, qparams_from_range(l, h, grid), grid);
+                data.iter().zip(&buf).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+            };
+            prop_assert(
+                err(slo, shi) <= err(lo, hi) + 1e-4,
+                format!("search worse: {} > {}", err(slo, shi), err(lo, hi)),
+            )
+        });
+    }
+}

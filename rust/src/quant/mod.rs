@@ -1,0 +1,325 @@
+//! Quantization library: uniform affine quantizers (paper Eq. 1-2), range
+//! -> parameter conversion, granularity machinery, and the simulated
+//! quantize-dequantize used for weight PTQ and estimator search.
+//!
+//! Activation quantization is *executed* inside the HLO graphs (L1 Pallas
+//! kernel); this module computes the scale / zero-point / config tensors
+//! that parameterise those graphs, and performs weight QDQ on the
+//! parameter tensors before they are fed to the runtime (exactly the
+//! paper's simulation setup, Jacob et al. 2018).
+
+pub mod adaround;
+pub mod estimators;
+pub mod peg;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Quantization grid for `bits`, asymmetric (unsigned) or symmetric
+/// (signed) — the paper uses asymmetric activations + symmetric weights.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QGrid {
+    pub qmin: f32,
+    pub qmax: f32,
+}
+
+impl QGrid {
+    pub fn asymmetric(bits: u32) -> QGrid {
+        QGrid { qmin: 0.0, qmax: (2f64.powi(bits as i32) - 1.0) as f32 }
+    }
+
+    pub fn symmetric(bits: u32) -> QGrid {
+        let half = 2f64.powi(bits as i32 - 1);
+        QGrid { qmin: (-half + 1.0) as f32, qmax: (half - 1.0) as f32 }
+    }
+
+    pub fn levels(&self) -> f32 {
+        self.qmax - self.qmin
+    }
+}
+
+/// Scale + zero-point for one quantizer lane (or a whole tensor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: f32,
+}
+
+/// Derive affine parameters from an observed [lo, hi] range.
+///
+/// The range is first widened to include zero (required so that real zeros
+/// — padding, ReLU-style sparsity — are exactly representable, as in
+/// Krishnamoorthi 2018 §3).
+pub fn qparams_from_range(lo: f32, hi: f32, grid: QGrid) -> QParams {
+    let lo = lo.min(0.0);
+    let hi = hi.max(0.0);
+    let range = (hi - lo).max(1e-8);
+    let scale = range / grid.levels();
+    let zero_point = (grid.qmin - lo / scale).round().clamp(grid.qmin, grid.qmax);
+    QParams { scale, zero_point }
+}
+
+/// Symmetric parameters from the absolute max.
+pub fn qparams_symmetric(abs_max: f32, grid: QGrid) -> QParams {
+    let scale = (abs_max.max(1e-8)) / grid.qmax;
+    QParams { scale, zero_point: 0.0 }
+}
+
+/// Quantize-dequantize one value (paper Eq. 1-2).
+#[inline]
+pub fn qdq(x: f32, p: QParams, grid: QGrid) -> f32 {
+    let q = (x / p.scale).round() + p.zero_point;
+    let q = q.clamp(grid.qmin, grid.qmax);
+    p.scale * (q - p.zero_point)
+}
+
+/// Quantize-dequantize a whole slice with per-tensor parameters.
+pub fn qdq_slice(xs: &mut [f32], p: QParams, grid: QGrid) {
+    let inv = 1.0 / p.scale;
+    for x in xs {
+        let q = (*x * inv).round() + p.zero_point;
+        *x = p.scale * (q.clamp(grid.qmin, grid.qmax) - p.zero_point);
+    }
+}
+
+/// Quantize-dequantize a tensor per-tensor; returns a new tensor.
+pub fn qdq_tensor(t: &Tensor, p: QParams, grid: QGrid) -> Tensor {
+    let mut out = t.clone();
+    qdq_slice(out.data_mut(), p, grid);
+    out
+}
+
+/// Per-lane (last axis) quantize-dequantize with a scale/zp vector.
+pub fn qdq_per_lane(t: &Tensor, params: &[QParams], grid: QGrid) -> Result<Tensor> {
+    let d = t.last_dim();
+    if params.len() != d {
+        bail!("params len {} != lane count {}", params.len(), d);
+    }
+    let mut out = t.clone();
+    for row in out.data_mut().chunks_exact_mut(d) {
+        for (x, p) in row.iter_mut().zip(params) {
+            let q = (*x / p.scale).round() + p.zero_point;
+            *x = p.scale * (q.clamp(grid.qmin, grid.qmax) - p.zero_point);
+        }
+    }
+    Ok(out)
+}
+
+/// Per-channel symmetric weight QDQ: one scale per output channel
+/// (column of a (in, out) matrix), optionally in channel groups — the
+/// Q-BERT-style group-wise baseline the paper compares against (Table 6
+/// footnote ψ).
+pub fn qdq_weight_per_channel(w: &Tensor, bits: u32, groups: usize) -> Result<Tensor> {
+    if w.shape().len() != 2 {
+        bail!("per-channel weight QDQ wants 2-D, got {:?}", w.shape());
+    }
+    let grid = QGrid::symmetric(bits);
+    let (rows, cols) = (w.shape()[0], w.shape()[1]);
+    let g = groups.clamp(1, cols);
+    let gsize = cols.div_ceil(g);
+    let mut out = w.clone();
+    for gi in 0..g {
+        let c0 = gi * gsize;
+        let c1 = ((gi + 1) * gsize).min(cols);
+        if c0 >= c1 {
+            break;
+        }
+        let mut amax = 0.0f32;
+        for r in 0..rows {
+            for c in c0..c1 {
+                amax = amax.max(w.data()[r * cols + c].abs());
+            }
+        }
+        let p = qparams_symmetric(amax, grid);
+        for r in 0..rows {
+            for c in c0..c1 {
+                let x = &mut out.data_mut()[r * cols + c];
+                let q = (*x / p.scale).round().clamp(grid.qmin, grid.qmax);
+                *x = p.scale * q;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// How ranges are estimated from calibration data (paper §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Estimator {
+    /// min/max of the most recent batch
+    CurrentMinMax,
+    /// exponential moving average of per-batch min/max (momentum 0.9)
+    RunningMinMax,
+    /// grid search minimising ||x - Q(x)||^2
+    Mse,
+}
+
+/// Activation-quantizer granularity (paper Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Granularity {
+    PerTensor,
+    /// K groups over the embedding axis; `permute` = range-based
+    /// permutation (paper §4 "per-embedding-group").
+    PerEmbeddingGroup { k: usize, permute: bool },
+    PerEmbedding,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_assert, prop_check, vec_f32};
+
+    #[test]
+    fn grid_limits() {
+        assert_eq!(QGrid::asymmetric(8), QGrid { qmin: 0.0, qmax: 255.0 });
+        assert_eq!(QGrid::symmetric(8), QGrid { qmin: -127.0, qmax: 127.0 });
+        assert_eq!(QGrid::asymmetric(2).qmax, 3.0);
+        assert_eq!(QGrid::asymmetric(16).qmax, 65535.0);
+    }
+
+    #[test]
+    fn qparams_cover_range_and_zero() {
+        let grid = QGrid::asymmetric(8);
+        let p = qparams_from_range(-1.0, 3.0, grid);
+        // zero representable exactly
+        let z = qdq(0.0, p, grid);
+        assert!(z.abs() < 1e-6, "zero -> {z}");
+        // endpoints within half a step
+        assert!((qdq(-1.0, p, grid) + 1.0).abs() <= p.scale / 2.0 + 1e-6);
+        assert!((qdq(3.0, p, grid) - 3.0).abs() <= p.scale / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn qdq_error_bound_property() {
+        // |x - qdq(x)| <= scale/2 for x in [lo, hi] — the fundamental
+        // rounding-error bound from paper Eq. 1-2.
+        prop_check("qdq error bound", 300, |rng| {
+            let lo = rng.uniform(-20.0, 0.0);
+            let hi = rng.uniform(0.1, 20.0);
+            let bits = [2u32, 4, 8, 16][rng.below(4)];
+            let grid = QGrid::asymmetric(bits);
+            let p = qparams_from_range(lo, hi, grid);
+            let x = rng.uniform(lo.min(0.0), hi.max(0.0));
+            let err = (x - qdq(x, p, grid)).abs();
+            prop_assert(
+                err <= p.scale / 2.0 + 1e-5,
+                format!("err {err} > s/2 {} (x={x}, bits={bits})", p.scale / 2.0),
+            )
+        });
+    }
+
+    #[test]
+    fn qdq_idempotent_property() {
+        prop_check("qdq idempotent", 200, |rng| {
+            let grid = QGrid::asymmetric(8);
+            let p = qparams_from_range(-5.0, 5.0, grid);
+            let x = rng.uniform(-8.0, 8.0); // include clipped region
+            let once = qdq(x, p, grid);
+            let twice = qdq(once, p, grid);
+            prop_assert((once - twice).abs() < 1e-6, format!("{once} vs {twice}"))
+        });
+    }
+
+    #[test]
+    fn qdq_clips_outside_range() {
+        let grid = QGrid::asymmetric(8);
+        let p = qparams_from_range(-1.0, 1.0, grid);
+        let big = qdq(100.0, p, grid);
+        assert!(big <= 1.0 + p.scale, "clipped value {big}");
+    }
+
+    #[test]
+    fn symmetric_weights_preserve_sign() {
+        prop_check("sym sign", 200, |rng| {
+            let grid = QGrid::symmetric(8);
+            let amax = rng.uniform(0.1, 5.0);
+            let p = qparams_symmetric(amax, grid);
+            let x = rng.uniform(-amax, amax);
+            let y = qdq(x, p, grid);
+            prop_assert(
+                x == 0.0 || y == 0.0 || x.signum() == y.signum() || y == 0.0,
+                format!("{x} -> {y}"),
+            )
+        });
+    }
+
+    #[test]
+    fn per_lane_outlier_isolation() {
+        // an outlier lane with its own scale must not degrade other lanes
+        let grid = QGrid::asymmetric(8);
+        let t = Tensor::new(vec![2, 3], vec![0.5, 0.4, 60.0, -0.5, 0.1, 59.0]).unwrap();
+        let params = vec![
+            qparams_from_range(-0.5, 0.5, grid),
+            qparams_from_range(-0.5, 0.5, grid),
+            qparams_from_range(0.0, 60.0, grid),
+        ];
+        let q = qdq_per_lane(&t, &params, grid).unwrap();
+        for (a, b) in t.data().iter().zip(q.data()).take(2) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+        assert!((q.data()[2] - 60.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_skewed_weights() {
+        // columns with very different magnitudes: per-channel wins
+        let mut rngv = crate::util::rng::Rng::new(9);
+        let data: Vec<f32> = (0..64 * 8)
+            .map(|i| {
+                let col = i % 8;
+                let mag = if col == 7 { 10.0 } else { 0.1 };
+                rngv.uniform(-mag, mag)
+            })
+            .collect();
+        let w = Tensor::new(vec![64, 8], data).unwrap();
+        let grid = QGrid::symmetric(4);
+        let pt = qdq_tensor(&w, qparams_symmetric(w.abs_max(), grid), grid);
+        let pc = qdq_weight_per_channel(&w, 4, 8).unwrap();
+        // the big column quantizes identically either way; the win is on
+        // the 7 small columns, which per-tensor rounds to ~zero
+        let small_mse = |q: &Tensor| -> f32 {
+            let mut acc = 0.0;
+            let mut n = 0;
+            for (i, (&a, &b)) in w.data().iter().zip(q.data()).enumerate() {
+                if i % 8 != 7 {
+                    acc += (a - b) * (a - b);
+                    n += 1;
+                }
+            }
+            acc / n as f32
+        };
+        assert!(small_mse(&pc) < small_mse(&pt) * 0.1,
+                "{} vs {}", small_mse(&pc), small_mse(&pt));
+    }
+
+    #[test]
+    fn low_bit_grid_small() {
+        let grid = QGrid::asymmetric(2);
+        let p = qparams_from_range(0.0, 3.0, grid);
+        let vals: Vec<f32> = vec![0.0, 1.0, 2.0, 3.0]
+            .into_iter()
+            .map(|x| qdq(x, p, grid))
+            .collect();
+        // 2 bits = 4 levels covering [0, 3]
+        assert_eq!(vals, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn prop_qdq_values_on_grid() {
+        // every dequantized value must be expressible as s*(q - z), q int
+        prop_check("on-grid", 200, |rng| {
+            let grid = QGrid::asymmetric(4);
+            let p = qparams_from_range(rng.uniform(-3.0, 0.0), rng.uniform(0.1, 3.0), grid);
+            let xs = vec_f32(rng, 16, -5.0, 5.0);
+            for x in xs {
+                let y = qdq(x, p, grid);
+                let q = y / p.scale + p.zero_point;
+                prop_assert(
+                    (q - q.round()).abs() < 1e-3,
+                    format!("off-grid: x={x} y={y} q={q}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

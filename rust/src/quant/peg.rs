@@ -1,0 +1,276 @@
+//! Per-embedding-group (PEG) quantization — the paper's novel contribution
+//! (§4, Eq. 5): split the embedding axis into K groups, share quantization
+//! parameters within each group, and optionally apply the *range-based
+//! permutation* so all outlier dims land in the same group.
+//!
+//! The output of this module is a per-lane (scale, zero-point) vector: the
+//! L2 graphs consume per-dim vectors, so "PEG with permutation" is realised
+//! by writing each group's shared parameters into that group's (permuted)
+//! member lanes — mathematically identical to the split/concat rewrite of
+//! paper Fig. 4, with zero graph changes.
+
+use anyhow::{bail, Result};
+
+use super::{qparams_from_range, Granularity, QGrid, QParams};
+
+/// Deterministic range-based permutation: lanes sorted by ascending dynamic
+/// range (paper §4: "K evenly sized groups based on indices in
+/// argsort(r)").
+pub fn range_permutation(lo: &[f32], hi: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..lo.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let ra = hi[a] - lo[a];
+        let rb = hi[b] - lo[b];
+        ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Evenly sized group boundaries: group g covers sorted positions
+/// [g*d/K, (g+1)*d/K).
+pub fn group_bounds(d: usize, k: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(k);
+    for g in 0..k {
+        out.push((g * d / k, (g + 1) * d / k));
+    }
+    out
+}
+
+/// Compute the per-lane QParams vector for a site with per-lane ranges
+/// (lo, hi), at the requested granularity.
+///
+/// Returns (params, perm) where `perm` is the range-based permutation used
+/// (identity when not permuting) — reported so the simulation-on-per-tensor
+/// -hardware path (paper Fig. 4) can materialise it.
+pub fn lane_qparams(
+    lo: &[f32],
+    hi: &[f32],
+    gran: &Granularity,
+    grid: QGrid,
+) -> Result<(Vec<QParams>, Vec<usize>)> {
+    let d = lo.len();
+    if hi.len() != d {
+        bail!("lo/hi length mismatch");
+    }
+    let identity: Vec<usize> = (0..d).collect();
+    match gran {
+        Granularity::PerTensor => {
+            let tlo = lo.iter().copied().fold(f32::INFINITY, f32::min);
+            let thi = hi.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let p = qparams_from_range(tlo, thi, grid);
+            Ok((vec![p; d], identity))
+        }
+        Granularity::PerEmbedding => {
+            let params = lo
+                .iter()
+                .zip(hi)
+                .map(|(&l, &h)| qparams_from_range(l, h, grid))
+                .collect();
+            Ok((params, identity))
+        }
+        Granularity::PerEmbeddingGroup { k, permute } => {
+            let k = (*k).max(1);
+            if d % k != 0 {
+                bail!("K={k} must divide d={d}");
+            }
+            let order = if *permute {
+                range_permutation(lo, hi)
+            } else {
+                identity.clone()
+            };
+            let mut params = vec![QParams { scale: 1.0, zero_point: 0.0 }; d];
+            for (g0, g1) in group_bounds(d, k) {
+                let members = &order[g0..g1];
+                let glo = members
+                    .iter()
+                    .map(|&j| lo[j])
+                    .fold(f32::INFINITY, f32::min);
+                let ghi = members
+                    .iter()
+                    .map(|&j| hi[j])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let p = qparams_from_range(glo, ghi, grid);
+                for &j in members {
+                    params[j] = p;
+                }
+            }
+            Ok((params, order))
+        }
+    }
+}
+
+/// Memory overhead of PEG for one attention layer, in extra parameters —
+/// the paper's d + 2*3*K accounting (§4): permutation indices plus scale &
+/// zero-point per group for FFN input, output and sum.
+pub fn peg_overhead_params(d: usize, k: usize) -> usize {
+    d + 2 * 3 * k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{qdq_per_lane, Estimator};
+    use crate::quant::estimators::RangeTracker;
+    use crate::tensor::Tensor;
+    use crate::util::prop::{prop_assert, prop_check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn permutation_sorts_by_range() {
+        let lo = vec![0.0, -5.0, 0.0, -0.1];
+        let hi = vec![1.0, 5.0, 0.5, 0.1];
+        let p = range_permutation(&lo, &hi);
+        assert_eq!(p, vec![3, 2, 0, 1]); // ranges 0.2, 0.5, 1.0, 10.0
+    }
+
+    #[test]
+    fn group_bounds_even() {
+        assert_eq!(group_bounds(6, 3), vec![(0, 2), (2, 4), (4, 6)]);
+        assert_eq!(group_bounds(8, 1), vec![(0, 8)]);
+    }
+
+    #[test]
+    fn k1_equals_per_tensor() {
+        let lo = vec![-1.0, -2.0, 0.0, -0.5];
+        let hi = vec![1.0, 3.0, 0.2, 0.5];
+        let grid = QGrid::asymmetric(8);
+        let (pt, _) = lane_qparams(&lo, &hi, &Granularity::PerTensor, grid).unwrap();
+        let (k1, _) = lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: 1, permute: false },
+            grid,
+        )
+        .unwrap();
+        assert_eq!(pt, k1);
+    }
+
+    #[test]
+    fn kd_equals_per_embedding() {
+        let lo = vec![-1.0, -2.0, 0.0, -0.5];
+        let hi = vec![1.0, 3.0, 0.2, 0.5];
+        let grid = QGrid::asymmetric(8);
+        let (pe, _) = lane_qparams(&lo, &hi, &Granularity::PerEmbedding, grid).unwrap();
+        let (kd, _) = lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: 4, permute: false },
+            grid,
+        )
+        .unwrap();
+        assert_eq!(pe, kd);
+    }
+
+    #[test]
+    fn rejects_non_dividing_k() {
+        let lo = vec![0.0; 10];
+        let hi = vec![1.0; 10];
+        assert!(lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: 3, permute: false },
+            QGrid::asymmetric(8)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn permutation_isolates_outliers() {
+        // 16 lanes, 2 adjacent-but-separated outlier lanes; K=8 with
+        // permutation puts both in the top group -> the other groups get
+        // tight scales
+        let mut lo = vec![-0.5f32; 16];
+        let mut hi = vec![0.5f32; 16];
+        lo[3] = -40.0;
+        hi[3] = 40.0;
+        lo[12] = -38.0;
+        hi[12] = 38.0;
+        let grid = QGrid::asymmetric(8);
+        let (params, order) = lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: 8, permute: true },
+            grid,
+        )
+        .unwrap();
+        // outliers sorted last (their relative order is by range)
+        let mut tail = order[14..].to_vec();
+        tail.sort();
+        assert_eq!(tail, vec![3, 12]);
+        // non-outlier lanes get a small scale
+        for j in 0..16 {
+            if j == 3 || j == 12 {
+                assert!(params[j].scale > 0.1);
+            } else {
+                assert!(params[j].scale < 0.01, "lane {j} scale {}", params[j].scale);
+            }
+        }
+    }
+
+    #[test]
+    fn permuted_groups_beat_unpermuted_on_split_outliers() {
+        // The Table 5 mechanism: K=3+P ~ K=6+P >> K=3 without P when the
+        // outlier dims are scattered.
+        let mut rng = Rng::new(11);
+        let d = 12;
+        let rows = 64;
+        let mut data = vec![0.0f32; rows * d];
+        for (i, x) in data.iter_mut().enumerate() {
+            let col = i % d;
+            let mag = if col == 1 || col == 10 { 50.0 } else { 0.8 };
+            *x = rng.uniform(-mag, mag);
+        }
+        let t = Tensor::new(vec![rows, d], data).unwrap();
+        let grid = QGrid::asymmetric(8);
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, d);
+        tr.observe(&t).unwrap();
+        let (lo, hi) = tr.lane_ranges();
+
+        let err = |gran: Granularity| {
+            let (params, _) = lane_qparams(&lo, &hi, &gran, grid).unwrap();
+            qdq_per_lane(&t, &params, grid).unwrap().mse(&t).unwrap()
+        };
+        // without P: both outlier cols land in different groups, polluting
+        // 8 of 12 lanes; with P they share one group, polluting 4.
+        let e_plain = err(Granularity::PerEmbeddingGroup { k: 3, permute: false });
+        let e_perm = err(Granularity::PerEmbeddingGroup { k: 3, permute: true });
+        let e_pe = err(Granularity::PerEmbedding);
+        assert!(e_perm < e_plain * 0.6, "perm {e_perm} vs plain {e_plain}");
+        assert!(e_pe <= e_perm * 1.01);
+    }
+
+    #[test]
+    fn overhead_matches_paper_accounting() {
+        // paper: "d + 2*3*K extra parameters per attention layer ...
+        // less than 0.04% of BERT-base"
+        let per_layer = peg_overhead_params(768, 6);
+        assert_eq!(per_layer, 768 + 36);
+        let total = per_layer * 12;
+        assert!((total as f64) < 0.0004 * 109e6);
+    }
+
+    #[test]
+    fn prop_grouped_scales_cover_member_ranges() {
+        prop_check("peg covers", 100, |rng| {
+            let d = 16;
+            let k = [1usize, 2, 4, 8, 16][rng.below(5)];
+            let lo: Vec<f32> = (0..d).map(|_| rng.uniform(-10.0, 0.0)).collect();
+            let hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 10.0)).collect();
+            let grid = QGrid::asymmetric(8);
+            let permute = rng.bool(0.5);
+            let (params, _) =
+                lane_qparams(&lo, &hi, &Granularity::PerEmbeddingGroup { k, permute }, grid)
+                    .unwrap();
+            // every lane's scale must cover its own range: s*levels >= hi-lo
+            for j in 0..d {
+                let covered = params[j].scale * grid.levels() + 1e-4;
+                prop_assert(
+                    covered >= hi[j] - lo[j],
+                    format!("lane {j}: scale {} covers {covered} < {}", params[j].scale,
+                            hi[j] - lo[j]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

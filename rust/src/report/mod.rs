@@ -1,0 +1,185 @@
+//! Reporting: markdown/console tables, CSV emission, and ASCII heatmaps for
+//! the figure reproductions (paper Fig. 2/5/6-13).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple table with a header row; renders to aligned console text and
+/// GitHub markdown.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let cols = self.header.len();
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                if let Some(cell) = row.get(c) {
+                    w[c] = w[c].max(cell.len());
+                }
+            }
+        }
+        w
+    }
+
+    pub fn to_console(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &w));
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &w));
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+}
+
+/// Format a score like the paper (2 decimals).
+pub fn fmt_score(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Write a report file, creating parent dirs.
+pub fn write_file(path: impl AsRef<Path>, content: &str) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+/// ASCII heatmap over a (rows, cols) boolean mask — used for the Fig. 2b /
+/// Fig. 6-8 outlier maps ('#' = outlier, '.' = normal). Columns are
+/// downsampled to at most `max_cols` by OR-reduction.
+pub fn bool_heatmap(mask: &[bool], rows: usize, cols: usize, max_cols: usize) -> String {
+    assert_eq!(mask.len(), rows * cols);
+    let stride = cols.div_ceil(max_cols).max(1);
+    let out_cols = cols.div_ceil(stride);
+    let mut out = String::with_capacity(rows * (out_cols + 1));
+    for r in 0..rows {
+        for oc in 0..out_cols {
+            let any = (oc * stride..((oc + 1) * stride).min(cols))
+                .any(|c| mask[r * cols + c]);
+            out.push(if any { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// ASCII bar chart for per-index scalar series (paper Fig. 2a per-token
+/// ranges, Fig. 9-13 per-sequence ranges).
+pub fn bar_chart(values: &[f32], width: usize, labels: Option<&[String]>) -> String {
+    let max = values.iter().copied().fold(f32::MIN, f32::max).max(1e-9);
+    let mut out = String::new();
+    for (i, &v) in values.iter().enumerate() {
+        let n = ((v / max) * width as f32).round().max(0.0) as usize;
+        let label = labels
+            .and_then(|l| l.get(i))
+            .cloned()
+            .unwrap_or_else(|| format!("{i:>4}"));
+        let _ = writeln!(out, "{label:>10} |{} {v:.2}", "█".repeat(n.min(width)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_formats() {
+        let mut t = Table::new("Demo", &["task", "score"]);
+        t.row(vec!["cola".into(), "57.27".into()]);
+        t.row(vec!["sst2".into(), "93.12".into()]);
+        let c = t.to_console();
+        assert!(c.contains("Demo") && c.contains("57.27"));
+        let md = t.to_markdown();
+        assert!(md.starts_with("### Demo"));
+        // header + separator + 2 data rows, each with 3 pipes
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 4);
+        assert!(md.contains("---"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn heatmap_downsamples() {
+        let mask = vec![false, true, false, false, true, false, false, false];
+        let hm = bool_heatmap(&mask, 2, 4, 2);
+        // row0: cols {0,1}->#, {2,3}->. ; row1: {0,1}->#, {2,3}->.
+        assert_eq!(hm, "#.\n#.\n");
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(&[1.0, 2.0], 10, None);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].matches('█').count() == 10);
+        assert!(lines[0].matches('█').count() == 5);
+    }
+
+    #[test]
+    fn fmt_score_handles_nan() {
+        assert_eq!(fmt_score(f64::NAN), "-");
+        assert_eq!(fmt_score(83.057), "83.06");
+    }
+}

@@ -1,0 +1,347 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once on the CPU
+//! PJRT client, and execute them from the coordinator's hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! -> XlaComputation -> compile -> execute. All graphs are lowered with
+//! return_tuple=True, so outputs arrive as one tuple literal that we
+//! unpack into tensors.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::manifest::{ArtifactSig, Manifest, TensorSig};
+use crate::tensor::{IntTensor, Tensor};
+
+/// A typed input value for an executable.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => {
+                if t.len() != sig.shape.iter().product::<usize>() {
+                    bail!(
+                        "input {}: have {} elems, signature wants {:?}",
+                        sig.name,
+                        t.len(),
+                        sig.shape
+                    );
+                }
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            Value::I32(t) => {
+                if t.data().len() != sig.shape.iter().product::<usize>() {
+                    bail!(
+                        "input {}: have {} elems, signature wants {:?}",
+                        sig.name,
+                        t.data().len(),
+                        sig.shape
+                    );
+                }
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Value {
+        Value::I32(t)
+    }
+}
+
+/// Execution statistics for the perf pass.
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_nanos: u64,
+    pub input_prep_nanos: u64,
+    pub output_fetch_nanos: u64,
+}
+
+/// The runtime: a PJRT CPU client plus an executable cache keyed by
+/// artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (with manifest.json).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir: PathBuf = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self.manifest.artifact(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&sig.file)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", sig.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.executables.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an artifact with inputs in signature order.
+    /// Returns the output tensors in signature order (i32 outputs are not
+    /// used by any of our graphs, so everything comes back as f32).
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let sig = self.manifest.artifact(name)?.clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "artifact {name}: {} inputs given, signature wants {}",
+                inputs.len(),
+                sig.inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+
+        let t0 = std::time::Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&sig.inputs)
+            .map(|(v, s)| v.to_literal(s))
+            .collect::<Result<_>>()?;
+        let t1 = std::time::Instant::now();
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        let t2 = std::time::Instant::now();
+
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        let out = self.literals_to_tensors(&sig, parts)?;
+        let t3 = std::time::Instant::now();
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.input_prep_nanos += (t1 - t0).as_nanos() as u64;
+        st.exec_nanos += (t2 - t1).as_nanos() as u64;
+        st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
+        Ok(out)
+    }
+
+    /// Low-level execute: caller builds the literal list (in signature
+    /// order) directly — avoids cloning large tensors into `Value`s on the
+    /// training hot loop. Count is validated against the signature; shapes
+    /// are the caller's responsibility (XLA still rejects mismatches).
+    pub fn run_lits(&self, name: &str, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let sig = self.manifest.artifact(name)?.clone();
+        if literals.len() != sig.inputs.len() {
+            bail!(
+                "artifact {name}: {} literals given, signature wants {}",
+                literals.len(),
+                sig.inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let t1 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        let t2 = std::time::Instant::now();
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        let out = self.literals_to_tensors(&sig, parts)?;
+        let t3 = std::time::Instant::now();
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_nanos += (t2 - t1).as_nanos() as u64;
+        st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
+        Ok(out)
+    }
+
+    /// Like [`run_lits`], but over borrowed literals — lets callers keep a
+    /// cache of static inputs (params, quant policy) across many calls and
+    /// only rebuild the per-batch literals.
+    pub fn run_lits_borrowed(&self, name: &str, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let sig = self.manifest.artifact(name)?.clone();
+        if literals.len() != sig.inputs.len() {
+            bail!(
+                "artifact {name}: {} literals given, signature wants {}",
+                literals.len(),
+                sig.inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let t1 = std::time::Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        let t2 = std::time::Instant::now();
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        let out = self.literals_to_tensors(&sig, parts)?;
+        let t3 = std::time::Instant::now();
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_nanos += (t2 - t1).as_nanos() as u64;
+        st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
+        Ok(out)
+    }
+
+    fn literals_to_tensors(
+        &self,
+        sig: &ArtifactSig,
+        parts: Vec<xla::Literal>,
+    ) -> Result<Vec<Tensor>> {
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "artifact {}: got {} outputs, signature wants {}",
+                sig.name,
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(lit, os)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output {}: {e:?}", os.name))?;
+                Tensor::new(os.shape.clone(), data)
+            })
+            .collect()
+    }
+}
+
+/// Literal constructors (shape checked against element count by the crate).
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_scalar(x: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[x]).reshape(&[])?)
+}
+
+/// Convenience: build the flat Value list for a forward/diag artifact.
+pub struct ForwardInputs<'a> {
+    pub params: &'a crate::model::Params,
+    pub act_scales: Vec<f32>,
+    pub act_zps: Vec<f32>,
+    pub act_cfg: Vec<f32>,
+    pub ids: Vec<i32>,
+    pub token_type: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_sites: usize,
+}
+
+impl<'a> ForwardInputs<'a> {
+    pub fn to_values(&self) -> Result<Vec<Value>> {
+        let mut vals: Vec<Value> = Vec::with_capacity(self.params.tensors.len() + 6);
+        for t in &self.params.tensors {
+            vals.push(Value::F32(t.clone()));
+        }
+        let s = self.act_scales.len();
+        vals.push(Value::F32(Tensor::new(vec![s], self.act_scales.clone())?));
+        vals.push(Value::F32(Tensor::new(vec![s], self.act_zps.clone())?));
+        vals.push(Value::F32(Tensor::new(
+            vec![self.n_sites, 3],
+            self.act_cfg.clone(),
+        )?));
+        vals.push(Value::I32(IntTensor::new(
+            vec![self.batch, self.seq],
+            self.ids.clone(),
+        )?));
+        vals.push(Value::I32(IntTensor::new(
+            vec![self.batch, self.seq],
+            self.token_type.clone(),
+        )?));
+        vals.push(Value::F32(Tensor::new(
+            vec![self.batch, self.seq],
+            self.mask.clone(),
+        )?));
+        Ok(vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shape_validation() {
+        let sig = TensorSig { name: "x".into(), shape: vec![2, 2], dtype: "f32".into() };
+        let ok = Value::F32(Tensor::zeros(&[2, 2]));
+        assert!(ok.to_literal(&sig).is_ok());
+        let bad = Value::F32(Tensor::zeros(&[3]));
+        assert!(bad.to_literal(&sig).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let sig = TensorSig { name: "lr".into(), shape: vec![], dtype: "f32".into() };
+        let v = Value::F32(Tensor::scalar(0.5));
+        let lit = v.to_literal(&sig).unwrap();
+        assert_eq!(lit.element_count(), 1);
+    }
+}

@@ -1,0 +1,370 @@
+//! Minimal dense tensor types (row-major f32 / i32).
+//!
+//! This is the substrate the coordinator computes on: calibration
+//! statistics, quantization simulation, AdaRound reconstruction, metric
+//! computation. It intentionally supports exactly what the pipeline needs —
+//! shapes, lane-wise reductions over the last axis, matmul, and elementwise
+//! maps — with contiguous storage that converts to/from PJRT literals
+//! without copies of copies.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal_f32(0.0, std))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of lanes in the last axis (1 for scalars).
+    pub fn last_dim(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1)
+    }
+
+    /// Rows = product of all axes but the last.
+    pub fn rows(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn std(&self) -> f32 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.data.iter().map(|&x| (x - m) * (x - m)).sum::<f32>()
+            / self.data.len() as f32)
+            .sqrt()
+    }
+
+    /// Per-lane (last-axis) min and max, reduced over all rows.
+    pub fn lane_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let d = self.last_dim();
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for row in self.data.chunks_exact(d) {
+            for (j, &x) in row.iter().enumerate() {
+                if x < lo[j] {
+                    lo[j] = x;
+                }
+                if x > hi[j] {
+                    hi[j] = x;
+                }
+            }
+        }
+        if self.data.is_empty() {
+            lo.fill(0.0);
+            hi.fill(0.0);
+        }
+        (lo, hi)
+    }
+
+    /// Per-row (all-but-last-axis) min and max — paper Fig. 2a per-token
+    /// ranges.
+    pub fn row_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let d = self.last_dim();
+        self.data
+            .chunks_exact(d)
+            .map(|row| {
+                (
+                    row.iter().copied().fold(f32::INFINITY, f32::min),
+                    row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+                )
+            })
+            .unzip()
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        })
+    }
+
+    /// Mean squared difference.
+    pub fn mse(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        if self.data.is_empty() {
+            return Ok(0.0);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / self.data.len() as f32)
+    }
+
+    /// 2-D matmul: (m, k) x (k, n) -> (m, n). Blocked over k for cache
+    /// friendliness; used by AdaRound reconstruction.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!("matmul wants 2-D tensors");
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!("matmul inner dim mismatch {k} vs {k2}");
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (l, &a) in arow.iter().enumerate() {
+                let brow = &other.data[l * n..(l + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose2(&self) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("transpose2 wants 2-D");
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Gather rows of a 2-D tensor into a new order (permutes axis 0).
+    pub fn permute_rows(&self, perm: &[usize]) -> Result<Tensor> {
+        if self.shape.len() != 2 || perm.len() != self.shape[0] {
+            bail!("permute_rows wants 2-D with matching perm");
+        }
+        let n = self.shape[1];
+        let mut out = Vec::with_capacity(self.data.len());
+        for &p in perm {
+            out.extend_from_slice(&self.data[p * n..(p + 1) * n]);
+        }
+        Tensor::new(self.shape.clone(), out)
+    }
+}
+
+/// Dense row-major i32 tensor (token ids, labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<IntTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(IntTensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn lane_min_max_works() {
+        let t = Tensor::new(vec![2, 3], vec![1., -2., 3., 4., 0., -6.]).unwrap();
+        let (lo, hi) = t.lane_min_max();
+        assert_eq!(lo, vec![1., -2., -6.]);
+        assert_eq!(hi, vec![4., 0., 3.]);
+    }
+
+    #[test]
+    fn row_min_max_works() {
+        let t = Tensor::new(vec![2, 3], vec![1., -2., 3., 4., 0., -6.]).unwrap();
+        let (lo, hi) = t.row_min_max();
+        assert_eq!(lo, vec![-2., -6.]);
+        assert_eq!(hi, vec![3., 4.]);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![1., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let t = a.transpose2().unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.transpose2().unwrap(), a);
+    }
+
+    #[test]
+    fn permute_rows_works() {
+        let a = Tensor::new(vec![3, 2], vec![0., 0., 1., 1., 2., 2.]).unwrap();
+        let p = a.permute_rows(&[2, 0, 1]).unwrap();
+        assert_eq!(p.data(), &[2., 2., 0., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn mse_and_stats() {
+        let a = Tensor::new(vec![4], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(vec![4], vec![1., 2., 3., 6.]).unwrap();
+        assert!((a.mse(&b).unwrap() - 1.0).abs() < 1e-6);
+        assert!((a.mean() - 2.5).abs() < 1e-6);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+        assert_eq!(b.abs_max(), 6.0);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = Tensor::scalar(3.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.rows(), 1);
+        assert_eq!(s.last_dim(), 1);
+    }
+}

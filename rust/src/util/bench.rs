@@ -1,0 +1,172 @@
+//! Micro-benchmark harness (criterion is not in the offline crate
+//! snapshot). Warmup + timed samples + robust statistics, printed in a
+//! criterion-like one-line format and optionally appended to a CSV so the
+//! repro scripts can collect results.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// optional throughput items/second (set via `Bencher::throughput`)
+    pub items_per_sec: Option<f64>,
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+    items: Option<u64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+            items: None,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_samples: 5,
+            items: None,
+        }
+    }
+
+    /// Declare that each iteration processes `n` items (for throughput).
+    pub fn throughput(mut self, n: u64) -> Self {
+        self.items = Some(n);
+        self
+    }
+
+    /// Run `f` repeatedly and report timing statistics.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // warmup
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        // choose batch size so one sample is ~1ms..50ms
+        let per_iter = t0.elapsed().as_nanos() as f64 / warm_iters as f64;
+        let batch = ((1_000_000.0 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure || samples.len() < self.min_samples {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean_ns: mean,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[(n * 95 / 100).min(n - 1)],
+            min_ns: samples[0],
+            items_per_sec: self.items.map(|i| i as f64 * 1e9 / mean),
+        };
+        println!("{}", format_stats(&stats));
+        stats
+    }
+}
+
+pub fn format_stats(s: &BenchStats) -> String {
+    let fmt = |ns: f64| -> String {
+        if ns < 1_000.0 {
+            format!("{ns:.0} ns")
+        } else if ns < 1_000_000.0 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    };
+    let tp = s
+        .items_per_sec
+        .map(|t| format!("  [{:.1} items/s]", t))
+        .unwrap_or_default();
+    format!(
+        "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  ({} samples){}",
+        s.name,
+        fmt(s.mean_ns),
+        fmt(s.p50_ns),
+        fmt(s.p95_ns),
+        s.samples,
+        tp
+    )
+}
+
+/// Append one line of CSV (creating a header when the file is new).
+pub fn append_csv(path: &str, s: &BenchStats) -> std::io::Result<()> {
+    use std::io::Write;
+    let new = !std::path::Path::new(path).exists();
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    if new {
+        writeln!(f, "name,samples,mean_ns,p50_ns,p95_ns,min_ns,items_per_sec")?;
+    }
+    writeln!(
+        f,
+        "{},{},{:.1},{:.1},{:.1},{:.1},{}",
+        s.name,
+        s.samples,
+        s.mean_ns,
+        s.p50_ns,
+        s.p95_ns,
+        s.min_ns,
+        s.items_per_sec.map(|t| format!("{t:.1}")).unwrap_or_default()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns * 1.001);
+        assert!(s.samples >= 5);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bencher::quick().throughput(100);
+        let s = b.bench("tp", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.items_per_sec.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny CLI argument parser (clap is not in the offline crate snapshot).
+//!
+//! Supports `bin <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first item = subcommand).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut it = items.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table1 --tasks cola,sst2 --seeds 5 --quick");
+        assert_eq!(a.subcommand, "table1");
+        assert_eq!(a.get("tasks"), Some("cola,sst2"));
+        assert_eq!(a.get_usize("seeds", 1).unwrap(), 5);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("run --lr=3e-5 --out=dir/x");
+        assert_eq!(a.get_f32("lr", 0.0).unwrap(), 3e-5);
+        assert_eq!(a.get("out"), Some("dir/x"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("eval ckpt.bin --bits 8 extra");
+        assert_eq!(a.positional, vec!["ckpt.bin", "extra"]);
+        assert_eq!(a.get_usize("bits", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("mode", "full"), "full");
+        assert_eq!(a.get_f32("lr", 1e-3).unwrap(), 1e-3);
+    }
+}

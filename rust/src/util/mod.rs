@@ -1,0 +1,10 @@
+//! Shared substrates: JSON codec, seeded RNG, CLI parsing, bench harness,
+//! property-test driver. These stand in for serde_json / rand / clap /
+//! criterion / proptest, which are not available in the offline crate
+//! snapshot (see Cargo.toml note).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,74 @@
+//! Mini property-testing driver (proptest is not in the offline crate
+//! snapshot). Runs a property over many seeded random cases and, on
+//! failure, reports the seed so the case can be replayed exactly.
+//!
+//! ```ignore
+//! prop_check("quant roundtrip", 200, |rng| {
+//!     let x = rng.uniform(-10.0, 10.0);
+//!     prop_assert(x.abs() <= 10.0, format!("x={x}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics (with the failing seed) on
+/// the first failure. Seeds derive from a fixed base so CI is stable, and
+/// can be overridden with TQ_PROP_SEED for replay.
+pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base: u64 = std::env::var("TQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let replay = std::env::var("TQ_PROP_SEED").is_ok();
+    let n = if replay { 1 } else { cases };
+    for i in 0..n {
+        let seed = base.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {i} (replay with TQ_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random float vector.
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("count", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with TQ_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        prop_check("fail", 10, |rng| {
+            prop_assert(rng.f32() < -1.0, "always fails")
+        });
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests over the AOT artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` to have run; every test skips gracefully
+//! (with a message) when artifacts/ is absent so `cargo test` stays green
+//! in a fresh checkout.
+
+use std::collections::BTreeMap;
+
+use tq::coordinator::calibrate::{calibrate, CalibCfg};
+use tq::coordinator::{eval, Ctx};
+use tq::data::{self, task_spec};
+use tq::model::qconfig::{assemble_act_tensors, QuantPolicy, SiteCfg};
+use tq::model::Params;
+use tq::quant::{Estimator, Granularity};
+use tq::runtime::{lit_f32, lit_i32, Runtime};
+
+fn ctx() -> Option<Ctx> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Ctx::new("artifacts", "/tmp/tq_test_ckpt", "/tmp/tq_test_results").unwrap())
+}
+
+#[test]
+fn manifest_matches_model_topology() {
+    let Some(ctx) = ctx() else { return };
+    let info = ctx.rt.manifest().model("base").unwrap();
+    // paper proportions: 13 activation-quantizer sites per layer + 4
+    assert_eq!(info.sites.len(), 13 * info.config.layers + 4);
+    assert_eq!(info.config.d, 128);
+    // offsets are contiguous
+    let mut off = 0;
+    for s in &info.sites {
+        assert_eq!(s.offset, off);
+        off += s.channels;
+    }
+    assert_eq!(off, info.total_scale_lanes);
+    // fwd artifact signature: params + 3 quant tensors + 3 batch tensors
+    let sig = ctx.rt.manifest().artifact("fwd_cls_b8").unwrap();
+    assert_eq!(sig.inputs.len(), info.params.len() + 6);
+}
+
+#[test]
+fn golden_fake_quant_bit_exact() {
+    let Some(ctx) = ctx() else { return };
+    let g = ctx.rt.manifest().golden_fake_quant.as_ref().unwrap();
+    let grid = tq::quant::QGrid { qmin: g.qmin, qmax: g.qmax };
+    let t = tq::tensor::Tensor::new(vec![g.rows, g.cols], g.x.clone()).unwrap();
+    let params: Vec<tq::quant::QParams> = g
+        .scale
+        .iter()
+        .zip(&g.zp)
+        .map(|(&s, &z)| tq::quant::QParams { scale: s, zero_point: z })
+        .collect();
+    let out = tq::quant::qdq_per_lane(&t, &params, grid).unwrap();
+    for (a, b) in out.data().iter().zip(&g.out) {
+        assert_eq!(a, b, "Rust QDQ differs from the Pallas kernel");
+    }
+}
+
+#[test]
+fn forward_runs_and_quant_flags_work() {
+    let Some(ctx) = ctx() else { return };
+    let task = task_spec("mnli").unwrap();
+    let info = ctx.model_info(&task).unwrap();
+    let params = Params::init(info, 3);
+    let split = data::dev_split(&task, info.config.seq).unwrap();
+    let batch = data::make_batch(&split, 0, 8, info.config.seq);
+
+    let run = |policy: &QuantPolicy| -> Vec<f32> {
+        let act = assemble_act_tensors(info, policy, &BTreeMap::new()).unwrap();
+        let mut lits = Vec::new();
+        for t in &params.tensors {
+            lits.push(lit_f32(t.data(), t.shape()).unwrap());
+        }
+        lits.push(lit_f32(&act.scales, &[act.scales.len()]).unwrap());
+        lits.push(lit_f32(&act.zps, &[act.zps.len()]).unwrap());
+        lits.push(lit_f32(&act.cfg, &[info.sites.len(), 3]).unwrap());
+        lits.push(lit_i32(&batch.ids, &[8, info.config.seq]).unwrap());
+        lits.push(lit_i32(&batch.token_type, &[8, info.config.seq]).unwrap());
+        lits.push(lit_f32(&batch.mask, &[8, info.config.seq]).unwrap());
+        ctx.rt.run_lits("fwd_cls_b8", &lits).unwrap()[0].data().to_vec()
+    };
+
+    let fp32 = run(&QuantPolicy::fp32());
+    assert!(fp32.iter().all(|x| x.is_finite()));
+    let fp32_again = run(&QuantPolicy::fp32());
+    assert_eq!(fp32, fp32_again, "executable must be deterministic");
+
+    // enabling 2-bit everywhere must change logits but stay finite
+    let crushed = run(&QuantPolicy::uniform(8, 2));
+    assert!(crushed.iter().all(|x| x.is_finite()));
+    assert_ne!(fp32, crushed);
+}
+
+#[test]
+fn calibration_covers_every_site() {
+    let Some(ctx) = ctx() else { return };
+    let task = task_spec("rte").unwrap();
+    let info = ctx.model_info(&task).unwrap();
+    let params = Params::init(info, 5);
+    let calib = calibrate(&ctx, &task, &params, &CalibCfg {
+        estimator: Estimator::RunningMinMax,
+        batch_size: 1,
+        num_batches: 2,
+        collect_grams: true,
+        seed: 0,
+    })
+    .unwrap();
+    assert_eq!(calib.trackers.len(), info.sites.len());
+    for (site, tr) in &calib.trackers {
+        assert_eq!(tr.batches_seen(), 2, "{site}");
+        let (lo, hi) = tr.lane_ranges();
+        assert!(lo.iter().zip(&hi).all(|(l, h)| l <= h), "{site}");
+    }
+    // Grams exist for every linear-input site
+    assert_eq!(
+        calib.grams.len(),
+        tq::coordinator::calibrate::gram_sites(info.config.layers).len()
+    );
+}
+
+#[test]
+fn eval_scores_in_range_and_policy_sensitivity() {
+    let Some(ctx) = ctx() else { return };
+    let task = task_spec("sst2").unwrap();
+    let info = ctx.model_info(&task).unwrap();
+    let params = Params::init(info, 7);
+    let calib = calibrate(&ctx, &task, &params, &CalibCfg {
+        num_batches: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let act8 = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers).unwrap();
+    let s8 = eval::evaluate(&ctx, &task, &params, &act8).unwrap();
+    assert!((0.0..=100.0).contains(&s8));
+
+    // PEG policy assembles with the real topology and evaluates
+    let peg = SiteCfg {
+        bits: 8,
+        granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+        enabled: true,
+    };
+    let policy = QuantPolicy::uniform(8, 8).with_site_family(info, "res2_sum", peg);
+    let actp = assemble_act_tensors(info, &policy, &calib.trackers).unwrap();
+    let sp = eval::evaluate(&ctx, &task, &params, &actp).unwrap();
+    assert!((0.0..=100.0).contains(&sp));
+}
+
+#[test]
+fn pallas_and_jnp_forward_artifacts_agree() {
+    let Some(ctx) = ctx() else { return };
+    if ctx.rt.manifest().artifact("fwd_cls_b1_pallas").is_err() {
+        eprintln!("SKIP: no pallas parity artifact");
+        return;
+    }
+    let task = task_spec("mnli").unwrap();
+    let info = ctx.model_info(&task).unwrap();
+    let params = Params::init(info, 11);
+    let split = data::dev_split(&task, info.config.seq).unwrap();
+    let batch = data::make_batch(&split, 0, 1, info.config.seq);
+    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &BTreeMap::new()).unwrap();
+    let mut lits = Vec::new();
+    for t in &params.tensors {
+        lits.push(lit_f32(t.data(), t.shape()).unwrap());
+    }
+    lits.push(lit_f32(&act.scales, &[act.scales.len()]).unwrap());
+    lits.push(lit_f32(&act.zps, &[act.zps.len()]).unwrap());
+    lits.push(lit_f32(&act.cfg, &[info.sites.len(), 3]).unwrap());
+    lits.push(lit_i32(&batch.ids, &[1, info.config.seq]).unwrap());
+    lits.push(lit_i32(&batch.token_type, &[1, info.config.seq]).unwrap());
+    lits.push(lit_f32(&batch.mask, &[1, info.config.seq]).unwrap());
+    let jnp = ctx.rt.run_lits("fwd_cls_b1", &lits).unwrap();
+    let pal = ctx.rt.run_lits("fwd_cls_b1_pallas", &lits).unwrap();
+    for (a, b) in jnp[0].data().iter().zip(pal[0].data()) {
+        assert!((a - b).abs() < 1e-4, "pallas {b} vs jnp {a}");
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_input_counts() {
+    let Some(ctx) = ctx() else { return };
+    let err = ctx.rt.run_lits("fwd_cls_b8", &[]);
+    assert!(err.is_err());
+    assert!(Runtime::new("/nonexistent").is_err());
+}
