@@ -1,0 +1,41 @@
+//! Sweep-engine benchmark: the same ≥4-configuration grid executed with a
+//! serial pool (n=1) and with all available workers, recording both to
+//! results/bench_sweep.csv plus the measured speedup. The offline
+//! substrate sweep is used so the bench runs (and the speedup is
+//! reproducible) without AOT artifacts.
+
+use tq::coordinator::sweep::{grid, run_offline, synth_data};
+use tq::quant::Estimator;
+use tq::util::bench::{append_csv, Bencher};
+use tq::util::pool::Pool;
+
+fn main() {
+    let csv = "results/bench_sweep.csv";
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let data = synth_data(128, 64, 8, 42);
+    // 2 act-bits x 3 granularities x 2 estimators = 12 configurations
+    let cfgs = grid(
+        128,
+        &[8, 4],
+        &[8],
+        &[1, 8, 128],
+        &[Estimator::CurrentMinMax, Estimator::Mse],
+    )
+    .unwrap();
+    println!("sweep bench: {} configs, up to {threads} workers", cfgs.len());
+
+    let mut means = Vec::new();
+    for (name, pool) in [
+        ("sweep 12 configs [serial n=1]".to_string(), Pool::new(1)),
+        (format!("sweep 12 configs [parallel n={threads}]"), Pool::new(threads)),
+    ] {
+        let s = Bencher::quick().throughput(cfgs.len() as u64).bench(&name, || {
+            std::hint::black_box(run_offline(&data, &cfgs, &pool).unwrap());
+        });
+        means.push(s.mean_ns);
+        append_csv(csv, &s).ok();
+    }
+    if means.len() == 2 && means[1] > 0.0 {
+        println!("parallel speedup: {:.2}x", means[0] / means[1]);
+    }
+}

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::Ctx;
 use crate::data::{self, TaskSpec};
@@ -19,6 +19,7 @@ use crate::quant::estimators::RangeTracker;
 use crate::quant::Estimator;
 use crate::runtime::{lit_f32, lit_i32};
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
 
 /// Calibration output: per-site trackers plus (optional) AdaRound Grams.
 pub struct Calibration {
@@ -92,6 +93,12 @@ pub fn calibrate(
     let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
     let mut seq_idx = (cfg.seed as usize) % split.examples.len();
 
+    // Executing the diag graph is the serial (PJRT-bound) part; the
+    // per-site statistics below fan out across the pool — every site's
+    // tracker and Gram are independent, so site-level parallelism is
+    // deterministic by construction.
+    let pool = Pool::global();
+    let serial = Pool::serial();
     for _b in 0..cfg.num_batches {
         // emulate batch-size > 1 by concatenating per-sequence taps before
         // one estimator observation
@@ -104,11 +111,33 @@ pub fn calibrate(
                 site_batches.entry(site).or_default().push(t);
             }
         }
-        for (site, parts) in site_batches {
-            let joined = concat_rows(&parts)?;
-            trackers.get_mut(&site).expect("site tracker").observe(&joined)?;
-            if cfg.collect_grams && gsites.contains(&site) {
-                accumulate_gram(&mut grams, &site, &joined)?;
+        let joined: Vec<(String, Tensor)> = site_batches
+            .into_iter()
+            .map(|(site, parts)| concat_rows(&parts).map(|j| (site, j)))
+            .collect::<Result<_>>()?;
+        {
+            let tensors: BTreeMap<&str, &Tensor> =
+                joined.iter().map(|(s, t)| (s.as_str(), t)).collect();
+            let mut work: Vec<(&mut RangeTracker, &Tensor)> = trackers
+                .iter_mut()
+                .filter_map(|(name, tr)| tensors.get(name.as_str()).map(|t| (tr, *t)))
+                .collect();
+            if work.len() != joined.len() {
+                bail!("calibration produced taps for sites without trackers");
+            }
+            let observed =
+                pool.par_iter_mut(&mut work, |_, w| w.0.observe_pool(w.1, &serial));
+            for r in observed {
+                r?;
+            }
+        }
+        if cfg.collect_grams {
+            let gwork: Vec<&(String, Tensor)> =
+                joined.iter().filter(|(s, _)| gsites.contains(s)).collect();
+            let computed = pool.par_map(&gwork, |_, item| gram_of(&item.1));
+            for (item, res) in gwork.iter().zip(computed) {
+                let (g, rows) = res?;
+                merge_gram(&mut grams, &item.0, g, rows);
             }
         }
     }
@@ -162,26 +191,38 @@ fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
     Tensor::new(vec![rows, d], data)
 }
 
-fn accumulate_gram(
-    grams: &mut BTreeMap<String, (Tensor, f32)>,
-    site: &str,
-    x: &Tensor,
-) -> Result<()> {
+/// G = XᵀX of the (rows, d)-flattened tap plus the row count.
+fn gram_of(x: &Tensor) -> Result<(Tensor, f32)> {
     let d = x.last_dim();
     let rows = x.rows();
     let flat = Tensor::new(vec![rows, d], x.data().to_vec())?;
     let g = flat.transpose2()?.matmul(&flat)?;
+    Ok((g, rows as f32))
+}
+
+/// Add one batch's Gram contribution into the per-site accumulator.
+fn merge_gram(grams: &mut BTreeMap<String, (Tensor, f32)>, site: &str, g: Tensor, rows: f32) {
     match grams.get_mut(site) {
         Some((acc, n)) => {
             for (a, b) in acc.data_mut().iter_mut().zip(g.data()) {
                 *a += b;
             }
-            *n += rows as f32;
+            *n += rows;
         }
         None => {
-            grams.insert(site.to_string(), (g, rows as f32));
+            grams.insert(site.to_string(), (g, rows));
         }
     }
+}
+
+#[allow(dead_code)]
+fn accumulate_gram(
+    grams: &mut BTreeMap<String, (Tensor, f32)>,
+    site: &str,
+    x: &Tensor,
+) -> Result<()> {
+    let (g, rows) = gram_of(x)?;
+    merge_gram(grams, site, g, rows);
     Ok(())
 }
 

@@ -11,11 +11,15 @@
 //! * [`diagnostics`] — paper Fig. 2/5/6-13 data extraction.
 //! * [`experiments`] — `repro table1` ... drivers regenerating every paper
 //!                     table & figure.
+//! * [`sweep`]       — parallel experiment-sweep engine: bits ×
+//!                     granularity × estimator grids executed concurrently
+//!                     on the `util::pool` workers.
 
 pub mod calibrate;
 pub mod diagnostics;
 pub mod eval;
 pub mod experiments;
+pub mod sweep;
 pub mod train;
 pub mod weights;
 

@@ -1,0 +1,489 @@
+//! Parallel experiment-sweep engine.
+//!
+//! The paper's tables are grids — bit-widths × granularities × range
+//! estimators — and every cell is independent, so the engine runs one
+//! configuration per `util::pool` job. Two layers:
+//!
+//! * **Offline substrate sweep** (always available): each configuration
+//!   runs the full L3 statistics pipeline — estimator observation, MSE
+//!   range search, PEG parameter assembly, activation QDQ, weight QDQ —
+//!   on deterministic synthetic calibration data with installed outlier
+//!   lanes, reporting quantization MSE per config. This is the
+//!   benchmarkable hot path (benches/sweep_bench.rs) and needs no AOT
+//!   artifacts.
+//! * **Runtime-backed scores** (when `artifacts/manifest.json` and a task
+//!   checkpoint exist): the same grid is evaluated end-to-end via
+//!   `experiments::eval_config`; workers share the runtime's
+//!   mutex-guarded compiled-executable cache, so each artifact compiles
+//!   once for the whole sweep.
+//!
+//! Inside an *offline* sweep job all kernels run with a serial inner
+//! pool — the parallelism budget is spent across configurations, and
+//! results stay bit-identical to a serial sweep (see
+//! tests/determinism.rs). The runtime-backed path reuses the existing
+//! eval pipeline, whose inner kernels use `Pool::global()`; cap
+//! oversubscription there with `TQ_THREADS` or `--threads` if needed.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::experiments::{self, EvalConfig};
+use super::Ctx;
+use crate::data::TaskSpec;
+use crate::model::qconfig::QuantPolicy;
+use crate::model::Params;
+use crate::quant::estimators::{mse_search_pool, RangeTracker};
+use crate::quant::peg::lane_qparams;
+use crate::quant::{
+    qdq_per_lane_pool, qdq_tensor_pool, qparams_from_range, qparams_symmetric, Estimator,
+    Granularity, QGrid, QParams,
+};
+use crate::report::{fmt_score, write_file, Table};
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+
+/// One cell of the sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    pub granularity: Granularity,
+    pub estimator: Estimator,
+}
+
+impl SweepConfig {
+    pub fn label(&self) -> String {
+        let g = match &self.granularity {
+            Granularity::PerTensor => "pt".to_string(),
+            Granularity::PerEmbedding => "pe".to_string(),
+            Granularity::PerEmbeddingGroup { k, permute } => {
+                format!("k{}{}", k, if *permute { "p" } else { "" })
+            }
+        };
+        let e = match self.estimator {
+            Estimator::CurrentMinMax => "current",
+            Estimator::RunningMinMax => "running",
+            Estimator::Mse => "mse",
+        };
+        format!("a{}w{}-{}-{}", self.act_bits, self.weight_bits, g, e)
+    }
+}
+
+/// Result of one configuration (offline metrics, plus the dev score when
+/// the runtime-backed pass ran).
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub label: String,
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    /// activation QDQ MSE on the held-out synthetic tensor
+    pub act_mse: f32,
+    /// weight QDQ MSE on the synthetic weight matrix
+    pub weight_mse: f32,
+    /// task dev score ×100 (runtime-backed pass only)
+    pub score: Option<f64>,
+    pub millis: f64,
+}
+
+/// Map a group count onto the paper's granularities for embedding dim `d`.
+pub fn granularity_for(d: usize, k: usize) -> Result<Granularity> {
+    if k <= 1 {
+        Ok(Granularity::PerTensor)
+    } else if k == d {
+        Ok(Granularity::PerEmbedding)
+    } else if d % k == 0 {
+        Ok(Granularity::PerEmbeddingGroup { k, permute: true })
+    } else {
+        bail!("K={k} does not divide d={d}")
+    }
+}
+
+/// Cross product of the sweep axes.
+pub fn grid(
+    d: usize,
+    act_bits: &[u32],
+    weight_bits: &[u32],
+    groups: &[usize],
+    estimators: &[Estimator],
+) -> Result<Vec<SweepConfig>> {
+    let mut out = Vec::new();
+    for &ab in act_bits {
+        for &wb in weight_bits {
+            for &k in groups {
+                let gran = granularity_for(d, k)?;
+                for &est in estimators {
+                    out.push(SweepConfig {
+                        act_bits: ab,
+                        weight_bits: wb,
+                        granularity: gran.clone(),
+                        estimator: est,
+                    });
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Deterministic synthetic calibration workload shared by every config in
+/// a sweep: activations with a few high-range outlier lanes (the paper's
+/// Fig. 2 structure — this is what makes granularity matter) plus one
+/// linear-layer weight matrix.
+pub struct SweepData {
+    pub calib: Vec<Tensor>,
+    pub eval: Tensor,
+    pub weight: Tensor,
+}
+
+pub fn synth_data(d: usize, rows: usize, batches: usize, seed: u64) -> SweepData {
+    let mut rng = Rng::new(seed);
+    let activations = |rng: &mut Rng| {
+        Tensor::from_fn(&[rows, d], |i| {
+            let lane = i % d;
+            let mag = if lane % 17 == 3 { 30.0 } else { 1.0 };
+            rng.normal_f32(0.0, mag)
+        })
+    };
+    let calib: Vec<Tensor> = (0..batches.max(1)).map(|_| activations(&mut rng)).collect();
+    let eval = activations(&mut rng);
+    let weight = Tensor::randn(&[d, 4 * d], 0.05, &mut rng);
+    SweepData { calib, eval, weight }
+}
+
+/// Run one configuration's offline substrate pipeline. `inner` is the
+/// pool used *inside* the job (serial when jobs themselves run in
+/// parallel).
+pub fn run_config_offline(
+    data: &SweepData,
+    cfg: &SweepConfig,
+    inner: &Pool,
+) -> Result<SweepResult> {
+    let t0 = Instant::now();
+    let d = data.eval.last_dim();
+    let agrid = QGrid::asymmetric(cfg.act_bits);
+
+    // calibration: estimator observation over every batch
+    let mut tracker = RangeTracker::new(cfg.estimator, d);
+    for batch in &data.calib {
+        tracker.observe_pool(batch, inner)?;
+    }
+
+    // granularity -> per-lane parameters (PEG permutation included)
+    let params: Vec<QParams> = match &cfg.granularity {
+        Granularity::PerTensor => {
+            let (lo, hi) = tracker.tensor_range_pool(agrid, inner);
+            vec![qparams_from_range(lo, hi, agrid); d]
+        }
+        g => {
+            let (lo, hi) = tracker.lane_ranges();
+            let (params, _perm) = lane_qparams(&lo, &hi, g, agrid)?;
+            params
+        }
+    };
+    let act_q = qdq_per_lane_pool(&data.eval, &params, agrid, inner)?;
+    let act_mse = act_q.mse(&data.eval)?;
+
+    // weight PTQ: symmetric per-tensor with the config's estimator
+    let wgrid = QGrid::symmetric(cfg.weight_bits);
+    let wp = match cfg.estimator {
+        Estimator::Mse => {
+            let amax = data.weight.abs_max();
+            let (lo, hi) = mse_search_pool(data.weight.data(), -amax, amax, wgrid, inner);
+            qparams_symmetric(lo.abs().max(hi.abs()), wgrid)
+        }
+        _ => qparams_symmetric(data.weight.abs_max(), wgrid),
+    };
+    let wq = qdq_tensor_pool(&data.weight, wp, wgrid, inner);
+    let weight_mse = wq.mse(&data.weight)?;
+
+    Ok(SweepResult {
+        label: cfg.label(),
+        act_bits: cfg.act_bits,
+        weight_bits: cfg.weight_bits,
+        act_mse,
+        weight_mse,
+        score: None,
+        millis: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Offline sweep: one pool job per configuration, serial inner kernels.
+/// Results are returned in grid order regardless of scheduling.
+pub fn run_offline(
+    data: &SweepData,
+    cfgs: &[SweepConfig],
+    pool: &Pool,
+) -> Result<Vec<SweepResult>> {
+    let inner = Pool::serial();
+    let jobs: Vec<_> = cfgs
+        .iter()
+        .map(|cfg| {
+            let inner = inner.clone();
+            move || run_config_offline(data, cfg, &inner)
+        })
+        .collect();
+    pool.run(jobs).into_iter().collect()
+}
+
+/// Runtime-backed scores for the same grid: each config becomes a full
+/// calibrate -> quantize -> evaluate pass through the AOT executables.
+/// Workers share `ctx.rt`'s compiled-executable cache (the runtime is
+/// `Sync`), so a warm artifact never recompiles; on a cold cache,
+/// workers racing on the same artifact may each compile it once (first
+/// insert wins — see `Runtime::executable`).
+///
+/// Note: the eval pipeline's inner kernels use `Pool::global()`, so with
+/// P config workers the CPU kernels can momentarily oversubscribe; the
+/// hot cost here is PJRT execution (serial per call), and `TQ_THREADS`
+/// caps the global pool when that matters.
+pub fn runtime_scores(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    cfgs: &[SweepConfig],
+    seeds: usize,
+    pool: &Pool,
+) -> Vec<Result<f64>> {
+    let jobs: Vec<_> = cfgs
+        .iter()
+        .map(|cfg| {
+            move || -> Result<f64> {
+                let mut policy = QuantPolicy::uniform(cfg.weight_bits, cfg.act_bits);
+                policy.default.granularity = cfg.granularity.clone();
+                policy.weights.estimator = cfg.estimator;
+                let mut ec = EvalConfig::new(policy);
+                ec.calib.estimator = cfg.estimator;
+                experiments::eval_config(ctx, task, params, &ec, seeds)
+            }
+        })
+        .collect();
+    // per-config Results: one failing config must not discard the
+    // successfully evaluated rest of the grid
+    pool.run(jobs)
+}
+
+/// Consolidated machine-readable report.
+pub fn report_json(results: &[SweepResult], threads: usize, total_ms: f64) -> Json {
+    let configs: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("label".to_string(), Json::Str(r.label.clone()));
+            m.insert("act_bits".to_string(), Json::Num(r.act_bits as f64));
+            m.insert("weight_bits".to_string(), Json::Num(r.weight_bits as f64));
+            m.insert("act_mse".to_string(), Json::Num(r.act_mse as f64));
+            m.insert("weight_mse".to_string(), Json::Num(r.weight_mse as f64));
+            if let Some(s) = r.score {
+                m.insert("score".to_string(), Json::Num(s));
+            }
+            m.insert("millis".to_string(), Json::Num(r.millis));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("threads".to_string(), Json::Num(threads as f64));
+    top.insert("total_ms".to_string(), Json::Num(total_ms));
+    top.insert("configs".to_string(), Json::Arr(configs));
+    Json::Obj(top)
+}
+
+fn parse_u32_list(s: &str) -> Result<Vec<u32>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<u32>().map_err(|_| anyhow!("bad bit-width {p:?}")))
+        .collect()
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<usize>().map_err(|_| anyhow!("bad group count {p:?}")))
+        .collect()
+}
+
+fn parse_estimators(s: &str) -> Result<Vec<Estimator>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| match p {
+            "current" | "minmax" => Ok(Estimator::CurrentMinMax),
+            "running" | "ema" => Ok(Estimator::RunningMinMax),
+            "mse" => Ok(Estimator::Mse),
+            other => bail!("unknown estimator {other:?} (current|running|mse)"),
+        })
+        .collect()
+}
+
+/// `repro sweep` driver. Runs the offline substrate sweep always, adds
+/// runtime-backed dev scores when artifacts and a checkpoint are present,
+/// and writes one consolidated report (md + csv + json) under results/.
+pub fn cmd_sweep(args: &Args) -> Result<()> {
+    let d = args.get_usize("d", 128)?;
+    let act_bits = parse_u32_list(args.get_or("bits", "8,4"))?;
+    let weight_bits = parse_u32_list(args.get_or("wbits", "8"))?;
+    let groups = parse_usize_list(args.get_or("groups", "1,8"))?;
+    let estimators = parse_estimators(args.get_or("estimators", "current,mse"))?;
+    let threads = args.get_usize("threads", 0)?;
+    let pool = if threads == 0 { Pool::global().clone() } else { Pool::new(threads) };
+
+    let cfgs = grid(d, &act_bits, &weight_bits, &groups, &estimators)?;
+    if cfgs.is_empty() {
+        bail!("sweep grid is empty");
+    }
+    println!(
+        "sweep: {} configurations on {} worker thread(s)",
+        cfgs.len(),
+        pool.threads()
+    );
+
+    let t0 = Instant::now();
+    let data = synth_data(d, 64, 8, args.get_u64("seed", 42)?);
+    let mut results = run_offline(&data, &cfgs, &pool)?;
+
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let task_name = args.get_or("task", "mnli");
+    if std::path::Path::new(artifacts).join("manifest.json").exists() {
+        let ctx = Ctx::new(
+            artifacts,
+            args.get_or("ckpt", "checkpoints"),
+            args.get_or("results", "results"),
+        )?;
+        let task = ctx.task(task_name)?;
+        match experiments::load_ckpt(&ctx, &task) {
+            Ok(params) => {
+                let seeds = args.get_usize("seeds", 1)?;
+                let scores = runtime_scores(&ctx, &task, &params, &cfgs, seeds, &pool);
+                for (r, s) in results.iter_mut().zip(scores) {
+                    match s {
+                        Ok(v) => r.score = Some(v),
+                        Err(e) => println!("({}: runtime eval failed — {e})", r.label),
+                    }
+                }
+            }
+            Err(e) => println!("(offline metrics only — {e})"),
+        }
+    } else {
+        println!("(artifacts/manifest.json absent; offline substrate metrics only)");
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut table = Table::new(
+        &format!("Quantization sweep ({} configs, {} threads)", results.len(), pool.threads()),
+        &["config", "act MSE", "weight MSE", "score", "ms"],
+    );
+    for r in &results {
+        table.row(vec![
+            r.label.clone(),
+            format!("{:.3e}", r.act_mse),
+            format!("{:.3e}", r.weight_mse),
+            r.score.map(fmt_score).unwrap_or_else(|| "-".to_string()),
+            format!("{:.1}", r.millis),
+        ]);
+    }
+    print!("{}", table.to_console());
+    println!("sweep total: {total_ms:.0} ms");
+
+    let results_dir = std::path::PathBuf::from(args.get_or("results", "results"));
+    write_file(results_dir.join("sweep.md"), &table.to_markdown())?;
+    write_file(results_dir.join("sweep.csv"), &table.to_csv())?;
+    write_file(
+        results_dir.join("sweep.json"),
+        &report_json(&results, pool.threads(), total_ms).to_string(),
+    )?;
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn assert_shareable() {
+    fn is_sync<T: Sync>() {}
+    is_sync::<Ctx>();
+    is_sync::<crate::runtime::Runtime>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_full_cross_product() {
+        let cfgs = grid(
+            128,
+            &[8, 4],
+            &[8],
+            &[1, 8, 128],
+            &[Estimator::CurrentMinMax, Estimator::Mse],
+        )
+        .unwrap();
+        assert_eq!(cfgs.len(), 2 * 1 * 3 * 2);
+        assert!(grid(10, &[8], &[8], &[3], &[Estimator::Mse]).is_err());
+    }
+
+    #[test]
+    fn granularity_mapping() {
+        assert_eq!(granularity_for(128, 1).unwrap(), Granularity::PerTensor);
+        assert_eq!(granularity_for(128, 128).unwrap(), Granularity::PerEmbedding);
+        assert_eq!(
+            granularity_for(128, 8).unwrap(),
+            Granularity::PerEmbeddingGroup { k: 8, permute: true }
+        );
+        assert!(granularity_for(128, 7).is_err());
+    }
+
+    #[test]
+    fn offline_sweep_runs_and_finer_granularity_wins() {
+        let data = synth_data(64, 32, 4, 7);
+        let cfgs = grid(64, &[8], &[8], &[1, 64], &[Estimator::CurrentMinMax]).unwrap();
+        let res = run_offline(&data, &cfgs, &Pool::new(2)).unwrap();
+        assert_eq!(res.len(), 2);
+        for r in &res {
+            assert!(r.act_mse.is_finite() && r.weight_mse.is_finite());
+        }
+        // with installed outlier lanes, per-embedding must beat per-tensor
+        assert!(
+            res[1].act_mse < res[0].act_mse,
+            "pe {} !< pt {}",
+            res[1].act_mse,
+            res[0].act_mse
+        );
+    }
+
+    #[test]
+    fn sweep_labels_are_unique() {
+        let cfgs = grid(
+            128,
+            &[8, 4],
+            &[8, 4],
+            &[1, 8, 128],
+            &[Estimator::CurrentMinMax, Estimator::RunningMinMax, Estimator::Mse],
+        )
+        .unwrap();
+        let mut labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
+        labels.sort();
+        let before = labels.len();
+        labels.dedup();
+        assert_eq!(labels.len(), before);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let data = synth_data(32, 16, 2, 1);
+        let cfgs = grid(32, &[8], &[4], &[1], &[Estimator::Mse]).unwrap();
+        let res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
+        let j = report_json(&res, 4, 12.5);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("threads").unwrap().as_usize().unwrap(), 4);
+        let arr = parsed.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(
+            arr[0].get("label").unwrap().as_str().unwrap(),
+            res[0].label
+        );
+    }
+}

@@ -8,6 +8,9 @@
 //!     repro hparams                  (appendix Tables 8-11)
 //!     repro eval --task mnli
 //!     repro smoke                    (runtime sanity: load + run artifacts)
+//!     repro sweep [--bits 8,4] [--wbits 8] [--groups 1,8] [--threads N]
+//!                                    (parallel config sweep; works without
+//!                                    artifacts — see coordinator::sweep)
 //!
 //! Common flags: --artifacts DIR (default artifacts), --ckpt DIR
 //! (default checkpoints), --results DIR (default results).
@@ -22,6 +25,14 @@ fn main() -> Result<()> {
     let args = Args::parse_env()?;
     if args.subcommand.is_empty() {
         print_help();
+        return Ok(());
+    }
+    // `sweep` manages its own (optional) runtime so it works without
+    // artifacts; everything else needs the Ctx up front.
+    if args.subcommand == "sweep" {
+        let t0 = std::time::Instant::now();
+        tq::coordinator::sweep::cmd_sweep(&args)?;
+        eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
         return Ok(());
     }
     let ctx = Ctx::new(
@@ -130,7 +141,9 @@ fn print_help() {
          Transformer Quantization' (EMNLP 2021) reproduction\n\n\
          subcommands:\n  finetune [--tasks a,b] [--epochs N] [--lr F]\n  \
          table1 table2 table4 table5 table6 table7 [--detailed] table12\n  \
-         fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  smoke\n\n\
+         fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  smoke\n  \
+         sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
+         [--estimators current,mse] [--threads N]\n\n\
          flags: --artifacts DIR --ckpt DIR --results DIR --seeds N --quick"
     );
 }

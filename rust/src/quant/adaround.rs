@@ -18,9 +18,14 @@ use anyhow::{bail, Result};
 
 use super::{QGrid, QParams};
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
 
 const ZETA: f32 = 1.1;
 const GAMMA: f32 = -0.1;
+
+/// Below this V size the per-element Adam update stays serial (the matmul
+/// still parallelises via its own threshold).
+const PAR_MIN_LANES: usize = 1 << 12;
 
 #[derive(Debug, Clone)]
 pub struct AdaRoundCfg {
@@ -97,6 +102,32 @@ pub fn adaround_with_gram(
     grid: QGrid,
     cfg: &AdaRoundCfg,
 ) -> Result<AdaRoundResult> {
+    adaround_with_gram_pool(w, g, n, p, grid, cfg, Pool::global())
+}
+
+/// Per-element Adam state for one V entry (struct-of-arrays would split
+/// poorly across the pool; one array of lanes partitions cleanly).
+#[derive(Clone, Copy)]
+struct Lane {
+    v: f32,
+    m: f32,
+    s2: f32,
+}
+
+/// Pool-explicit [`adaround_with_gram`]. The two per-iteration hot spots —
+/// the (din,din)x(din,dout) Gram matmul and the elementwise Adam update on
+/// V — fan out across workers; both are computed in the same per-element
+/// order as the serial kernel, so the optimisation trajectory is
+/// bit-identical for any worker count.
+pub fn adaround_with_gram_pool(
+    w: &Tensor,
+    g: &Tensor,
+    n: f32,
+    p: QParams,
+    grid: QGrid,
+    cfg: &AdaRoundCfg,
+    pool: &Pool,
+) -> Result<AdaRoundResult> {
     if w.shape().len() != 2 || g.shape().len() != 2 {
         bail!("adaround wants 2-D w and g");
     }
@@ -111,7 +142,7 @@ pub fn adaround_with_gram(
 
     // V init so that h(V) reproduces nearest rounding bias (paper init):
     // rest = W/s - floor(W/s);  h(v0) = rest  =>  v0 = -ln((ζ-γ)/(rest-γ) - 1)
-    let mut v: Vec<f32> = w
+    let v0: Vec<f32> = w
         .data()
         .iter()
         .zip(&wfloor)
@@ -133,7 +164,7 @@ pub fn adaround_with_gram(
     let recon_loss = |wq: &Tensor| -> f32 {
         // ||X (Wq - W)||^2 / n  computed as tr(Δᵀ G Δ) / n
         let delta = wq.sub(w).unwrap();
-        let gd = g.matmul(&delta).unwrap();
+        let gd = g.matmul_pool(&delta, pool).unwrap();
         delta
             .data()
             .iter()
@@ -157,46 +188,63 @@ pub fn adaround_with_gram(
             .collect();
         Tensor::new(vec![din, dout], data).unwrap()
     };
-    let initial_loss = recon_loss(&hard(&v));
+    let initial_loss = recon_loss(&hard(&v0));
 
     // Adam state on V
-    let mut m = vec![0.0f32; v.len()];
-    let mut s2 = vec![0.0f32; v.len()];
     let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let mut state: Vec<Lane> =
+        v0.into_iter().map(|v| Lane { v, m: 0.0, s2: 0.0 }).collect();
+    let mut vs = vec![0.0f32; state.len()];
 
     for it in 0..cfg.iters {
-        let wq = quantized(&v);
+        for (dst, l) in vs.iter_mut().zip(&state) {
+            *dst = l.v;
+        }
+        let wq = quantized(&vs);
         let delta = wq.sub(w)?;
         // dL/dWq = 2 G Δ / n
-        let gd = g.matmul(&delta)?;
+        let gd = g.matmul_pool(&delta, pool)?;
         let frac = it as f32 / cfg.iters.max(1) as f32;
         let beta = cfg.beta_end + (cfg.beta_start - cfg.beta_end) * (1.0 - frac);
         let warm = frac > 0.2; // no regulariser during warmup (paper)
 
-        for i in 0..v.len() {
-            // chain rule through clip(floor + h(V)): zero if clipped
-            let q_unclipped = wfloor[i] + h(v[i]);
-            let dq = if (grid.qmin..=grid.qmax).contains(&q_unclipped) {
-                p.scale * dh(v[i])
-            } else {
-                0.0
-            };
-            let mut grad = 2.0 * gd.data()[i] / n * dq;
-            if warm {
-                // d/dv [λ (1 - |2h-1|^β)]
-                let hv = h(v[i]);
-                let t = 2.0 * hv - 1.0;
-                let a = t.abs().max(1e-6);
-                grad += cfg.lambda * (-beta * a.powf(beta - 1.0) * t.signum() * 2.0 * dh(v[i]));
+        let update = |base: usize, block: &mut [Lane]| {
+            for (j, lane) in block.iter_mut().enumerate() {
+                let i = base + j;
+                // chain rule through clip(floor + h(V)): zero if clipped
+                let q_unclipped = wfloor[i] + h(lane.v);
+                let dq = if (grid.qmin..=grid.qmax).contains(&q_unclipped) {
+                    p.scale * dh(lane.v)
+                } else {
+                    0.0
+                };
+                let mut grad = 2.0 * gd.data()[i] / n * dq;
+                if warm {
+                    // d/dv [λ (1 - |2h-1|^β)]
+                    let hv = h(lane.v);
+                    let t = 2.0 * hv - 1.0;
+                    let a = t.abs().max(1e-6);
+                    grad += cfg.lambda
+                        * (-beta * a.powf(beta - 1.0) * t.signum() * 2.0 * dh(lane.v));
+                }
+                lane.m = b1 * lane.m + (1.0 - b1) * grad;
+                lane.s2 = b2 * lane.s2 + (1.0 - b2) * grad * grad;
+                lane.v -= cfg.lr * lane.m / (lane.s2.sqrt() + eps);
             }
-            m[i] = b1 * m[i] + (1.0 - b1) * grad;
-            s2[i] = b2 * s2[i] + (1.0 - b2) * grad * grad;
-            v[i] -= cfg.lr * m[i] / (s2[i].sqrt() + eps);
+        };
+        if pool.threads() <= 1 || state.len() < PAR_MIN_LANES {
+            update(0, &mut state);
+        } else {
+            let chunk = state.len().div_ceil(pool.threads()).max(1);
+            pool.par_chunks_mut(&mut state, chunk, |ci, block| update(ci * chunk, block));
         }
     }
 
     // snap to hard rounding (h in {0,1}) for deployment
-    let weight = hard(&v);
+    for (dst, l) in vs.iter_mut().zip(&state) {
+        *dst = l.v;
+    }
+    let weight = hard(&vs);
     let final_loss = recon_loss(&weight);
     Ok(AdaRoundResult { weight, initial_loss, final_loss })
 }

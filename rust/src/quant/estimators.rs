@@ -8,8 +8,13 @@
 
 use anyhow::{bail, Result};
 
-use super::{qdq_slice, qparams_from_range, Estimator, QGrid};
+use super::{qdq_one, qparams_from_range, Estimator, QGrid};
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
+
+/// Below this sample count the MSE grid search stays serial — scoring 41
+/// candidates over a small reservoir is cheaper than spawning workers.
+const MSE_PAR_MIN_SAMPLES: usize = 1 << 12;
 
 /// Momentum for running min-max (paper Appendix B.2 uses 0.9).
 pub const RUNNING_MOMENTUM: f32 = 0.9;
@@ -54,13 +59,21 @@ impl RangeTracker {
 
     /// Observe one calibration batch of this site's activation tensor.
     pub fn observe(&mut self, t: &Tensor) -> Result<()> {
+        self.observe_pool(t, Pool::global())
+    }
+
+    /// Pool-explicit [`RangeTracker::observe`]: the per-lane (or whole-
+    /// tensor) min/max scan fans out across workers; min/max merges are
+    /// exact, so ranges are bit-identical for any worker count.
+    pub fn observe_pool(&mut self, t: &Tensor, pool: &Pool) -> Result<()> {
         if t.last_dim() != self.lanes && !(self.lanes == 1) {
             bail!("tracker lanes {} vs tensor lanes {}", self.lanes, t.last_dim());
         }
         let (blo, bhi) = if self.lanes == 1 {
-            (vec![t.min()], vec![t.max()])
+            let (lo, hi) = t.min_max_pool(pool);
+            (vec![lo], vec![hi])
         } else {
-            t.lane_min_max()
+            t.lane_min_max_pool(pool)
         };
         match self.kind {
             Estimator::CurrentMinMax => {
@@ -116,11 +129,17 @@ impl RangeTracker {
     /// this runs the clipping-grid search of Choukroun et al. (2019) /
     /// Banner et al. (2018).
     pub fn tensor_range(&self, grid: QGrid) -> (f32, f32) {
+        self.tensor_range_pool(grid, Pool::global())
+    }
+
+    /// Pool-explicit [`RangeTracker::tensor_range`] (the MSE grid search
+    /// fans its candidate ranges across workers).
+    pub fn tensor_range_pool(&self, grid: QGrid, pool: &Pool) -> (f32, f32) {
         let (lo, hi) = self.lane_ranges();
         let lo = lo.iter().copied().fold(f32::INFINITY, f32::min).min(0.0);
         let hi = hi.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(0.0);
         match self.kind {
-            Estimator::Mse => mse_search(&self.reservoir, lo, hi, grid),
+            Estimator::Mse => mse_search_pool(&self.reservoir, lo, hi, grid, pool),
             _ => (lo, hi),
         }
     }
@@ -129,25 +148,49 @@ impl RangeTracker {
 /// Grid search over symmetric shrinkage of [lo, hi] minimising the
 /// quantize-dequantize MSE on `samples`.
 pub fn mse_search(samples: &[f32], lo: f32, hi: f32, grid: QGrid) -> (f32, f32) {
+    mse_search_pool(samples, lo, hi, grid, Pool::global())
+}
+
+/// Pool-explicit [`mse_search`]: each of the 41 candidate ranges scores on
+/// its own worker, streaming the QDQ error in sample order without
+/// materialising a buffer (same per-element ops and summation order as
+/// `qdq_slice` + a sum pass, so numerically identical to the serial
+/// reference); the argmin scans candidates in step order with a strict
+/// `<`, exactly like the serial loop — the chosen range is bit-identical
+/// for any worker count.
+pub fn mse_search_pool(
+    samples: &[f32],
+    lo: f32,
+    hi: f32,
+    grid: QGrid,
+    pool: &Pool,
+) -> (f32, f32) {
     if samples.is_empty() || hi <= lo {
         return (lo, hi);
     }
-    let mut best = (lo, hi);
-    let mut best_err = f32::INFINITY;
-    let mut buf = Vec::with_capacity(samples.len());
-    for step in 0..=40 {
+    let score_step = |step: usize| {
         let alpha = 1.0 - 0.02 * step as f32; // 1.00, 0.98 .. 0.20
         let clo = lo * alpha;
         let chi = hi * alpha;
         let p = qparams_from_range(clo, chi, grid);
-        buf.clear();
-        buf.extend_from_slice(samples);
-        qdq_slice(&mut buf, p, grid);
-        let err: f32 = samples
-            .iter()
-            .zip(&buf)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum();
+        let inv = 1.0 / p.scale;
+        let mut err = 0.0f32;
+        for &x in samples {
+            let y = qdq_one(x, inv, p, grid);
+            err += (x - y) * (x - y);
+        }
+        (err, clo, chi)
+    };
+    let scored: Vec<(f32, f32, f32)> =
+        if pool.threads() <= 1 || samples.len() < MSE_PAR_MIN_SAMPLES {
+            (0..=40).map(score_step).collect()
+        } else {
+            let steps: Vec<usize> = (0..=40).collect();
+            pool.par_map(&steps, |_, &step| score_step(step))
+        };
+    let mut best = (lo, hi);
+    let mut best_err = f32::INFINITY;
+    for (err, clo, chi) in scored {
         if err < best_err {
             best_err = err;
             best = (clo, chi);
@@ -159,7 +202,7 @@ pub fn mse_search(samples: &[f32], lo: f32, hi: f32, grid: QGrid) -> (f32, f32) 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{qdq_tensor, qparams_from_range};
+    use crate::quant::{qdq_slice, qdq_tensor, qparams_from_range};
     use crate::util::prop::{prop_check, prop_assert};
     use crate::util::rng::Rng;
 

@@ -15,6 +15,12 @@ pub mod peg;
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
+
+/// Minimum element count before the pooled QDQ kernels go parallel (the
+/// parallel kernels are bit-identical to serial; this only bounds spawn
+/// overhead).
+const PAR_MIN_ELEMS: usize = 1 << 15;
 
 /// Quantization grid for `bits`, asymmetric (unsigned) or symmetric
 /// (signed) — the paper uses asymmetric activations + symmetric weights.
@@ -74,34 +80,80 @@ pub fn qdq(x: f32, p: QParams, grid: QGrid) -> f32 {
     p.scale * (q - p.zero_point)
 }
 
-/// Quantize-dequantize a whole slice with per-tensor parameters.
+/// The per-element QDQ op shared by [`qdq_slice`] and the MSE range
+/// search — one definition so the search scores candidates with exactly
+/// the quantizer it is searching for. `inv` must be `1.0 / p.scale`.
+#[inline]
+pub fn qdq_one(x: f32, inv: f32, p: QParams, grid: QGrid) -> f32 {
+    let q = (x * inv).round() + p.zero_point;
+    p.scale * (q.clamp(grid.qmin, grid.qmax) - p.zero_point)
+}
+
+/// Quantize-dequantize a whole slice with per-tensor parameters (serial
+/// reference kernel; [`qdq_slice_pool`] is the parallel entry point).
 pub fn qdq_slice(xs: &mut [f32], p: QParams, grid: QGrid) {
     let inv = 1.0 / p.scale;
     for x in xs {
-        let q = (*x * inv).round() + p.zero_point;
-        *x = p.scale * (q.clamp(grid.qmin, grid.qmax) - p.zero_point);
+        *x = qdq_one(*x, inv, p, grid);
     }
+}
+
+/// Pool-parallel [`qdq_slice`]: elementwise, so any chunking is
+/// bit-identical to the serial kernel.
+pub fn qdq_slice_pool(xs: &mut [f32], p: QParams, grid: QGrid, pool: &Pool) {
+    if pool.threads() <= 1 || xs.len() < PAR_MIN_ELEMS {
+        qdq_slice(xs, p, grid);
+        return;
+    }
+    let per = xs.len().div_ceil(pool.threads()).max(1);
+    pool.par_chunks_mut(xs, per, |_, chunk| qdq_slice(chunk, p, grid));
 }
 
 /// Quantize-dequantize a tensor per-tensor; returns a new tensor.
 pub fn qdq_tensor(t: &Tensor, p: QParams, grid: QGrid) -> Tensor {
+    qdq_tensor_pool(t, p, grid, Pool::global())
+}
+
+/// Pool-explicit [`qdq_tensor`].
+pub fn qdq_tensor_pool(t: &Tensor, p: QParams, grid: QGrid, pool: &Pool) -> Tensor {
     let mut out = t.clone();
-    qdq_slice(out.data_mut(), p, grid);
+    qdq_slice_pool(out.data_mut(), p, grid, pool);
     out
 }
 
 /// Per-lane (last axis) quantize-dequantize with a scale/zp vector.
 pub fn qdq_per_lane(t: &Tensor, params: &[QParams], grid: QGrid) -> Result<Tensor> {
+    qdq_per_lane_pool(t, params, grid, Pool::global())
+}
+
+/// Pool-explicit [`qdq_per_lane`]: rows are partitioned across workers on
+/// row-aligned boundaries; per-element math is unchanged, so results are
+/// bit-identical for any worker count.
+pub fn qdq_per_lane_pool(
+    t: &Tensor,
+    params: &[QParams],
+    grid: QGrid,
+    pool: &Pool,
+) -> Result<Tensor> {
     let d = t.last_dim();
     if params.len() != d {
         bail!("params len {} != lane count {}", params.len(), d);
     }
     let mut out = t.clone();
-    for row in out.data_mut().chunks_exact_mut(d) {
-        for (x, p) in row.iter_mut().zip(params) {
-            let q = (*x / p.scale).round() + p.zero_point;
-            *x = p.scale * (q.clamp(grid.qmin, grid.qmax) - p.zero_point);
+    let rows = t.rows();
+    let qdq_rows = |block: &mut [f32]| {
+        for row in block.chunks_exact_mut(d) {
+            for (x, p) in row.iter_mut().zip(params) {
+                let q = (*x / p.scale).round() + p.zero_point;
+                *x = p.scale * (q.clamp(grid.qmin, grid.qmax) - p.zero_point);
+            }
         }
+    };
+    if pool.threads() <= 1 || t.len() < PAR_MIN_ELEMS || d == 0 {
+        qdq_rows(out.data_mut());
+    } else {
+        let rows_per = rows.div_ceil(pool.threads()).max(1);
+        pool.par_chunks_mut(out.data_mut(), rows_per * d, |_, block| qdq_rows(block));
     }
     Ok(out)
 }
@@ -111,6 +163,19 @@ pub fn qdq_per_lane(t: &Tensor, params: &[QParams], grid: QGrid) -> Result<Tenso
 /// Q-BERT-style group-wise baseline the paper compares against (Table 6
 /// footnote ψ).
 pub fn qdq_weight_per_channel(w: &Tensor, bits: u32, groups: usize) -> Result<Tensor> {
+    qdq_weight_per_channel_pool(w, bits, groups, Pool::global())
+}
+
+/// Pool-explicit [`qdq_weight_per_channel`]: group absolute maxima are
+/// found in parallel (one read-only scan per group, same scan order as the
+/// serial kernel), then rows quantize in parallel with the per-group
+/// parameters — bit-identical for any worker count.
+pub fn qdq_weight_per_channel_pool(
+    w: &Tensor,
+    bits: u32,
+    groups: usize,
+    pool: &Pool,
+) -> Result<Tensor> {
     if w.shape().len() != 2 {
         bail!("per-channel weight QDQ wants 2-D, got {:?}", w.shape());
     }
@@ -118,12 +183,11 @@ pub fn qdq_weight_per_channel(w: &Tensor, bits: u32, groups: usize) -> Result<Te
     let (rows, cols) = (w.shape()[0], w.shape()[1]);
     let g = groups.clamp(1, cols);
     let gsize = cols.div_ceil(g);
-    let mut out = w.clone();
-    for gi in 0..g {
+    let group_params = |gi: usize| -> QParams {
         let c0 = gi * gsize;
         let c1 = ((gi + 1) * gsize).min(cols);
         if c0 >= c1 {
-            break;
+            return QParams { scale: 1.0, zero_point: 0.0 };
         }
         let mut amax = 0.0f32;
         for r in 0..rows {
@@ -131,14 +195,29 @@ pub fn qdq_weight_per_channel(w: &Tensor, bits: u32, groups: usize) -> Result<Te
                 amax = amax.max(w.data()[r * cols + c].abs());
             }
         }
-        let p = qparams_symmetric(amax, grid);
-        for r in 0..rows {
-            for c in c0..c1 {
-                let x = &mut out.data_mut()[r * cols + c];
+        qparams_symmetric(amax, grid)
+    };
+    let params: Vec<QParams> = if pool.threads() <= 1 || w.len() < PAR_MIN_ELEMS {
+        (0..g).map(group_params).collect()
+    } else {
+        let group_ids: Vec<usize> = (0..g).collect();
+        pool.par_map(&group_ids, |_, &gi| group_params(gi))
+    };
+    let mut out = w.clone();
+    let quantize_rows = |block: &mut [f32]| {
+        for row in block.chunks_exact_mut(cols) {
+            for (c, x) in row.iter_mut().enumerate() {
+                let p = params[c / gsize];
                 let q = (*x / p.scale).round().clamp(grid.qmin, grid.qmax);
                 *x = p.scale * q;
             }
         }
+    };
+    if pool.threads() <= 1 || w.len() < PAR_MIN_ELEMS || cols == 0 {
+        quantize_rows(out.data_mut());
+    } else {
+        let rows_per = rows.div_ceil(pool.threads()).max(1);
+        pool.par_chunks_mut(out.data_mut(), rows_per * cols, |_, block| quantize_rows(block));
     }
     Ok(out)
 }

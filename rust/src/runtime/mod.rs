@@ -5,10 +5,15 @@
 //! -> XlaComputation -> compile -> execute. All graphs are lowered with
 //! return_tuple=True, so outputs arrive as one tuple literal that we
 //! unpack into tensors.
+//!
+//! The runtime is `Sync`: the executable cache and stats sit behind
+//! mutexes so the sweep engine's workers share one set of compiled
+//! artifacts instead of recompiling per configuration (compilation is the
+//! dominant cost for the QAT/eval graphs).
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -86,8 +91,8 @@ pub struct RuntimeStats {
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
-    executables: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<RuntimeStats>,
+    executables: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
@@ -100,8 +105,8 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            executables: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            executables: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -110,16 +115,19 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("runtime stats").clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = RuntimeStats::default();
+        *self.stats.lock().expect("runtime stats") = RuntimeStats::default();
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
-    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.borrow().get(name) {
+    /// Compile (or fetch from cache) an artifact's executable. The cache
+    /// is shared across threads; compilation happens outside the lock so
+    /// concurrent sweep workers never serialise on a slow compile (a lost
+    /// race costs one redundant compile, and the first insert wins).
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().expect("executable cache").get(name) {
             return Ok(e.clone());
         }
         let sig = self.manifest.artifact(name)?;
@@ -130,9 +138,9 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let rc = std::rc::Rc::new(exe);
-        self.executables.borrow_mut().insert(name.to_string(), rc.clone());
-        Ok(rc)
+        let mut cache = self.executables.lock().expect("executable cache");
+        let entry = cache.entry(name.to_string()).or_insert_with(|| Arc::new(exe));
+        Ok(entry.clone())
     }
 
     /// Execute an artifact with inputs in signature order.
@@ -169,7 +177,7 @@ impl Runtime {
         let out = self.literals_to_tensors(&sig, parts)?;
         let t3 = std::time::Instant::now();
 
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().expect("runtime stats");
         st.executions += 1;
         st.input_prep_nanos += (t1 - t0).as_nanos() as u64;
         st.exec_nanos += (t2 - t1).as_nanos() as u64;
@@ -202,7 +210,7 @@ impl Runtime {
         let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
         let out = self.literals_to_tensors(&sig, parts)?;
         let t3 = std::time::Instant::now();
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().expect("runtime stats");
         st.executions += 1;
         st.exec_nanos += (t2 - t1).as_nanos() as u64;
         st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
@@ -233,7 +241,7 @@ impl Runtime {
         let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
         let out = self.literals_to_tensors(&sig, parts)?;
         let t3 = std::time::Instant::now();
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().expect("runtime stats");
         st.executions += 1;
         st.exec_nanos += (t2 - t1).as_nanos() as u64;
         st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;

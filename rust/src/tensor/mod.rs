@@ -9,7 +9,13 @@
 
 use anyhow::{bail, Result};
 
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
+
+/// Below this element count the pooled reductions stay serial — thread
+/// spawn costs more than the scan. (Thresholds never change results: the
+/// parallel merges are exact.)
+const PAR_MIN_ELEMS: usize = 1 << 15;
 
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -146,6 +152,71 @@ impl Tensor {
         (lo, hi)
     }
 
+    /// Pool-parallel [`Tensor::lane_min_max`]: row blocks reduce on worker
+    /// threads, block results merge with exact min/max — bit-identical to
+    /// the serial scan for any worker count.
+    pub fn lane_min_max_pool(&self, pool: &Pool) -> (Vec<f32>, Vec<f32>) {
+        let d = self.last_dim();
+        if pool.threads() <= 1 || self.data.len() < PAR_MIN_ELEMS || d == 0 {
+            return self.lane_min_max();
+        }
+        let rows = self.data.len() / d;
+        let rows_per = rows.div_ceil(pool.threads()).max(1);
+        let blocks: Vec<&[f32]> = self.data.chunks(rows_per * d).collect();
+        let partials = pool.par_map(&blocks, |_, block| {
+            let mut lo = vec![f32::INFINITY; d];
+            let mut hi = vec![f32::NEG_INFINITY; d];
+            for row in block.chunks_exact(d) {
+                for (j, &x) in row.iter().enumerate() {
+                    if x < lo[j] {
+                        lo[j] = x;
+                    }
+                    if x > hi[j] {
+                        hi[j] = x;
+                    }
+                }
+            }
+            (lo, hi)
+        });
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for (blo, bhi) in partials {
+            for j in 0..d {
+                if blo[j] < lo[j] {
+                    lo[j] = blo[j];
+                }
+                if bhi[j] > hi[j] {
+                    hi[j] = bhi[j];
+                }
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Pool-parallel whole-tensor (min, max) in one pass. Empty tensors
+    /// return (∞, -∞) like the serial `min()`/`max()` folds.
+    pub fn min_max_pool(&self, pool: &Pool) -> (f32, f32) {
+        if pool.threads() <= 1 || self.data.len() < PAR_MIN_ELEMS {
+            return (self.min(), self.max());
+        }
+        let per = self.data.len().div_ceil(pool.threads()).max(1);
+        let blocks: Vec<&[f32]> = self.data.chunks(per).collect();
+        let partials = pool.par_map(&blocks, |_, block| {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in *block {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            (lo, hi)
+        });
+        partials
+            .into_iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(alo, ahi), (lo, hi)| {
+                (alo.min(lo), ahi.max(hi))
+            })
+    }
+
     /// Per-row (all-but-last-axis) min and max — paper Fig. 2a per-token
     /// ranges.
     pub fn row_min_max(&self) -> (Vec<f32>, Vec<f32>) {
@@ -228,6 +299,40 @@ impl Tensor {
                 }
             }
         }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Pool-parallel [`Tensor::matmul`]: output rows are partitioned
+    /// across workers; each row's dot products run in the same order as
+    /// the serial kernel, so results are bit-identical for any worker
+    /// count.
+    pub fn matmul_pool(&self, other: &Tensor, pool: &Pool) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!("matmul wants 2-D tensors");
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!("matmul inner dim mismatch {k} vs {k2}");
+        }
+        if pool.threads() <= 1 || m * n < PAR_MIN_ELEMS {
+            return self.matmul(other);
+        }
+        let mut out = vec![0.0f32; m * n];
+        let rows_per = m.div_ceil(pool.threads()).max(1);
+        pool.par_chunks_mut(&mut out, rows_per * n, |bi, block| {
+            let r0 = bi * rows_per;
+            for (ri, orow) in block.chunks_exact_mut(n).enumerate() {
+                let i = r0 + ri;
+                let arow = &self.data[i * k..(i + 1) * k];
+                for (l, &a) in arow.iter().enumerate() {
+                    let brow = &other.data[l * n..(l + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        });
         Tensor::new(vec![m, n], out)
     }
 

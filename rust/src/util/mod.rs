@@ -1,10 +1,11 @@
 //! Shared substrates: JSON codec, seeded RNG, CLI parsing, bench harness,
-//! property-test driver. These stand in for serde_json / rand / clap /
-//! criterion / proptest, which are not available in the offline crate
-//! snapshot (see Cargo.toml note).
+//! property-test driver, and the data-parallel thread pool. These stand in
+//! for serde_json / rand / clap / criterion / proptest / rayon, which are
+//! not available in the offline crate snapshot (see Cargo.toml note).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;

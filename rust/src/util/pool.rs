@@ -1,0 +1,282 @@
+//! Dependency-free data-parallel thread pool (std::thread::scope + mpsc
+//! channels; rayon is not in the offline crate snapshot).
+//!
+//! Design rules, enforced by the determinism test suite (tests/
+//! determinism.rs):
+//!
+//! * **Deterministic partitioning.** Work is split into contiguous,
+//!   index-addressed chunks; every output lands in a caller-visible slot
+//!   keyed by its input index. Scheduling order can vary, results cannot.
+//! * **Bit-identical math.** The pool never changes *what* is computed per
+//!   chunk — only which thread computes it — so `n = 1` and
+//!   `n = available_parallelism()` produce bit-identical floats as long as
+//!   the per-chunk computation itself is serial.
+//! * **Serial fallback.** `Pool::new(1)` (and degenerate inputs) run on
+//!   the calling thread with zero spawns, so the pool can be threaded
+//!   through cold paths for free.
+//!
+//! The worker count defaults to `std::thread::available_parallelism()` and
+//! can be pinned with the `TQ_THREADS` environment variable (handy for
+//! benchmarking serial vs parallel and for CI determinism runs).
+
+use std::sync::mpsc;
+use std::sync::{Mutex, OnceLock};
+
+/// A chunked fork-join pool. Cheap to construct: threads are scoped per
+/// call, so a `Pool` is just a worker-count policy.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// One worker: every operation runs inline on the calling thread.
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    /// Process-wide default pool (TQ_THREADS override, else
+    /// available_parallelism).
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool::new(default_threads()))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk_index, chunk)` over contiguous chunks of `data` of
+    /// length `chunk_len` (the final chunk may be shorter), distributing
+    /// chunks across workers.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = data.len().div_ceil(chunk_len);
+        if self.threads <= 1 || n_chunks <= 1 {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let mut chunks: Vec<(usize, &mut [T])> =
+            data.chunks_mut(chunk_len).enumerate().collect();
+        let per = chunks.len().div_ceil(self.threads);
+        std::thread::scope(|s| {
+            for group in chunks.chunks_mut(per) {
+                let f = &f;
+                s.spawn(move || {
+                    for (i, c) in group.iter_mut() {
+                        f(*i, &mut **c);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Map `f(index, item)` over `items`, preserving input order in the
+    /// returned vector.
+    pub fn par_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &T) -> U + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let per = items.len().div_ceil(self.threads);
+        let (tx, rx) = mpsc::channel::<(usize, Vec<U>)>();
+        std::thread::scope(|s| {
+            for (gi, group) in items.chunks(per).enumerate() {
+                let tx = tx.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let base = gi * per;
+                    let out: Vec<U> =
+                        group.iter().enumerate().map(|(j, t)| f(base + j, t)).collect();
+                    let _ = tx.send((base, out));
+                });
+            }
+        });
+        drop(tx);
+        collect_slots(rx, items.len())
+    }
+
+    /// Like [`Pool::par_map`] but with mutable access to each item.
+    pub fn par_iter_mut<T, U, F>(&self, items: &mut [T], f: F) -> Vec<U>
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut T) -> U + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let per = items.len().div_ceil(self.threads);
+        let total = items.len();
+        let (tx, rx) = mpsc::channel::<(usize, Vec<U>)>();
+        std::thread::scope(|s| {
+            for (gi, group) in items.chunks_mut(per).enumerate() {
+                let tx = tx.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let base = gi * per;
+                    let out: Vec<U> = group
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(j, t)| f(base + j, t))
+                        .collect();
+                    let _ = tx.send((base, out));
+                });
+            }
+        });
+        drop(tx);
+        collect_slots(rx, total)
+    }
+
+    /// Execute heterogeneous jobs with dynamic (work-stealing-ish queue)
+    /// scheduling; results come back in submission order. This is the
+    /// sweep engine's entry point: one job per experiment configuration.
+    pub fn run<R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        let total = jobs.len();
+        let n = self.threads.min(total.max(1));
+        if n <= 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        // LIFO pop keeps the queue a plain Vec; result order is restored
+        // by index, so scheduling order is irrelevant to the caller.
+        let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>());
+        let (tx, rx) = mpsc::channel::<(usize, Vec<R>)>();
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                let tx = tx.clone();
+                let queue = &queue;
+                s.spawn(move || loop {
+                    let job = queue.lock().expect("pool queue").pop();
+                    match job {
+                        Some((i, j)) => {
+                            let _ = tx.send((i, vec![j()]));
+                        }
+                        None => break,
+                    }
+                });
+            }
+        });
+        drop(tx);
+        collect_slots(rx, total)
+    }
+}
+
+fn default_threads() -> usize {
+    std::env::var("TQ_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// Reassemble worker results into input order.
+fn collect_slots<U>(rx: mpsc::Receiver<(usize, Vec<U>)>, total: usize) -> Vec<U> {
+    let mut slots: Vec<Option<U>> = std::iter::repeat_with(|| None).take(total).collect();
+    for (base, out) in rx {
+        for (j, u) in out.into_iter().enumerate() {
+            slots[base + j] = Some(u);
+        }
+    }
+    slots.into_iter().map(|o| o.expect("pool worker result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        for threads in [1, 2, 7] {
+            let pool = Pool::new(threads);
+            let items: Vec<usize> = (0..100).collect();
+            let out = pool.par_map(&items, |i, &x| {
+                assert_eq!(i, x);
+                x * 2
+            });
+            assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_element() {
+        for threads in [1, 3, 8] {
+            let pool = Pool::new(threads);
+            let mut data = vec![0u32; 1000];
+            pool.par_chunks_mut(&mut data, 17, |ci, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (ci * 17 + j) as u32 + 1;
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, i as u32 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn par_iter_mut_indexes_correctly() {
+        let pool = Pool::new(4);
+        let mut items: Vec<usize> = vec![0; 57];
+        let echoes = pool.par_iter_mut(&mut items, |i, slot| {
+            *slot = i + 1;
+            i
+        });
+        assert_eq!(echoes, (0..57).collect::<Vec<_>>());
+        assert_eq!(items, (1..=57).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_returns_in_submission_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<_> = (0..20)
+            .map(|i| {
+                move || {
+                    if i % 3 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_pool_never_spawns() {
+        // indirectly: results must match and nothing panics on n=1
+        let pool = Pool::serial();
+        assert_eq!(pool.threads(), 1);
+        let out = pool.par_map(&[1, 2, 3], |_, &x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        let empty: Vec<i32> = vec![];
+        assert!(pool.par_map(&empty, |_, &x: &i32| x).is_empty());
+        let none: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        assert!(pool.run(none).is_empty());
+    }
+
+    #[test]
+    fn global_pool_exists() {
+        assert!(Pool::global().threads() >= 1);
+    }
+}

@@ -1,0 +1,146 @@
+//! Parallel-vs-serial determinism: every pooled path must produce
+//! bit-identical results with one worker and with
+//! `available_parallelism()` workers, on seeded random tensors. This is
+//! the contract that lets the sweep engine spend threads freely without
+//! perturbing any paper reproduction.
+
+use tq::coordinator::sweep::{grid, run_offline, synth_data};
+use tq::quant::adaround::{adaround_with_gram_pool, AdaRoundCfg};
+use tq::quant::estimators::{mse_search_pool, RangeTracker};
+use tq::quant::{
+    qdq_per_lane_pool, qdq_slice_pool, qdq_weight_per_channel_pool, qparams_from_range,
+    qparams_symmetric, Estimator, QGrid, QParams,
+};
+use tq::tensor::Tensor;
+use tq::util::pool::Pool;
+use tq::util::rng::Rng;
+
+fn pools() -> (Pool, Pool) {
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (Pool::new(1), Pool::new(n.max(2)))
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn estimator_observe_is_parallel_deterministic() {
+    let (serial, parallel) = pools();
+    for est in [Estimator::CurrentMinMax, Estimator::RunningMinMax, Estimator::Mse] {
+        for lanes in [1usize, 96] {
+            let mut rng = Rng::new(11);
+            let mut a = RangeTracker::new(est, lanes);
+            let mut b = RangeTracker::new(est, lanes);
+            for _ in 0..4 {
+                // big enough to cross the parallel thresholds
+                let t = Tensor::randn(&[600, 96], 2.0, &mut rng);
+                a.observe_pool(&t, &serial).unwrap();
+                b.observe_pool(&t, &parallel).unwrap();
+            }
+            let (alo, ahi) = a.lane_ranges();
+            let (blo, bhi) = b.lane_ranges();
+            assert_eq!(bits(&alo), bits(&blo), "{est:?} lanes={lanes} lo");
+            assert_eq!(bits(&ahi), bits(&bhi), "{est:?} lanes={lanes} hi");
+            let grid8 = QGrid::asymmetric(8);
+            let (al, ah) = a.tensor_range_pool(grid8, &serial);
+            let (bl, bh) = b.tensor_range_pool(grid8, &parallel);
+            assert_eq!(al.to_bits(), bl.to_bits(), "{est:?} range lo");
+            assert_eq!(ah.to_bits(), bh.to_bits(), "{est:?} range hi");
+        }
+    }
+}
+
+#[test]
+fn mse_search_is_parallel_deterministic() {
+    let (serial, parallel) = pools();
+    let mut rng = Rng::new(5);
+    let samples: Vec<f32> = (0..50_000).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+    for bits_w in [2u32, 4, 8] {
+        let grid = QGrid::asymmetric(bits_w);
+        let a = mse_search_pool(&samples, -9.0, 11.0, grid, &serial);
+        let b = mse_search_pool(&samples, -9.0, 11.0, grid, &parallel);
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "bits={bits_w}");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "bits={bits_w}");
+    }
+}
+
+#[test]
+fn weight_qdq_is_parallel_deterministic() {
+    let (serial, parallel) = pools();
+    let mut rng = Rng::new(9);
+    let w = Tensor::randn(&[256, 384], 0.5, &mut rng);
+    let grid = QGrid::symmetric(4);
+    let p = qparams_symmetric(w.abs_max(), grid);
+
+    let mut xs_a = w.data().to_vec();
+    let mut xs_b = w.data().to_vec();
+    qdq_slice_pool(&mut xs_a, p, grid, &serial);
+    qdq_slice_pool(&mut xs_b, p, grid, &parallel);
+    assert_eq!(bits(&xs_a), bits(&xs_b));
+
+    let a = qdq_weight_per_channel_pool(&w, 4, 16, &serial).unwrap();
+    let b = qdq_weight_per_channel_pool(&w, 4, 16, &parallel).unwrap();
+    assert_eq!(bits(a.data()), bits(b.data()));
+}
+
+#[test]
+fn per_lane_qdq_is_parallel_deterministic() {
+    let (serial, parallel) = pools();
+    let mut rng = Rng::new(21);
+    let d = 128;
+    let t = Tensor::randn(&[512, d], 2.0, &mut rng);
+    let grid = QGrid::asymmetric(8);
+    let params: Vec<QParams> = (0..d)
+        .map(|j| qparams_from_range(-1.0 - j as f32 * 0.01, 1.0 + j as f32 * 0.02, grid))
+        .collect();
+    let a = qdq_per_lane_pool(&t, &params, grid, &serial).unwrap();
+    let b = qdq_per_lane_pool(&t, &params, grid, &parallel).unwrap();
+    assert_eq!(bits(a.data()), bits(b.data()));
+}
+
+#[test]
+fn adaround_is_parallel_deterministic() {
+    let (serial, parallel) = pools();
+    let mut rng = Rng::new(33);
+    // big enough that both the Gram matmul (96*384 = 36864 output elems)
+    // and the Adam update (36864 lanes) cross their parallel thresholds
+    let w = Tensor::randn(&[96, 384], 0.5, &mut rng);
+    let z = Tensor::randn(&[128, 96], 1.0, &mut rng);
+    let mix = Tensor::randn(&[96, 96], (1.0f32 / 96.0).sqrt(), &mut rng);
+    let x = z.matmul(&mix).unwrap();
+    let g = x.transpose2().unwrap().matmul(&x).unwrap();
+    let grid = QGrid::symmetric(3);
+    let p = qparams_symmetric(w.abs_max(), grid);
+    let cfg = AdaRoundCfg { iters: 40, ..Default::default() };
+    let n = x.shape()[0] as f32;
+
+    let a = adaround_with_gram_pool(&w, &g, n, p, grid, &cfg, &serial).unwrap();
+    let b = adaround_with_gram_pool(&w, &g, n, p, grid, &cfg, &parallel).unwrap();
+    assert_eq!(bits(a.weight.data()), bits(b.weight.data()));
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.initial_loss.to_bits(), b.initial_loss.to_bits());
+}
+
+#[test]
+fn offline_sweep_is_parallel_deterministic() {
+    let (serial, parallel) = pools();
+    let data = synth_data(128, 48, 4, 99);
+    let cfgs = grid(
+        128,
+        &[8, 4],
+        &[8],
+        &[1, 8, 128],
+        &[Estimator::CurrentMinMax, Estimator::Mse],
+    )
+    .unwrap();
+    assert!(cfgs.len() >= 4, "sweep smoke needs >= 4 configs");
+    let a = run_offline(&data, &cfgs, &serial).unwrap();
+    let b = run_offline(&data, &cfgs, &parallel).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.label, rb.label);
+        assert_eq!(ra.act_mse.to_bits(), rb.act_mse.to_bits(), "{}", ra.label);
+        assert_eq!(ra.weight_mse.to_bits(), rb.weight_mse.to_bits(), "{}", ra.label);
+    }
+}

@@ -1,0 +1,232 @@
+//! Property tests over the quantization substrate, driven by the
+//! `util::prop` mini-driver (seeded, replayable with TQ_PROP_SEED):
+//!
+//! * `qparams_from_range` + `quantize_dequantize` invariants — round-trip
+//!   error ≤ scale/2 on in-range inputs, exact zero representation, and
+//!   clamping at the grid edges — for 2/4/8-bit symmetric and asymmetric
+//!   grids.
+//! * PEG invariants — the range permutation is a valid permutation sorted
+//!   by range, `group_bounds` partitions `d` exactly for every dividing
+//!   `K`, and the K=1 / K=d endpoints coincide with per-tensor /
+//!   per-embedding parameters.
+
+use tq::quant::peg::{group_bounds, lane_qparams, range_permutation};
+use tq::quant::{
+    qdq, qparams_from_range, qparams_symmetric, Granularity, QGrid, QParams,
+};
+use tq::util::prop::{prop_assert, prop_check, vec_f32};
+
+const BITS: [u32; 3] = [2, 4, 8];
+
+#[test]
+fn prop_roundtrip_error_bounded_asymmetric() {
+    prop_check("asym |x - qdq(x)| <= s/2", 400, |rng| {
+        let bits = BITS[rng.below(3)];
+        let grid = QGrid::asymmetric(bits);
+        let lo = rng.uniform(-50.0, 0.0);
+        let hi = rng.uniform(0.1, 50.0);
+        let p = qparams_from_range(lo, hi, grid);
+        // in-range input (the derived range always covers [min(lo,0), max(hi,0)])
+        let x = rng.uniform(lo.min(0.0), hi.max(0.0));
+        let err = (x - qdq(x, p, grid)).abs();
+        prop_assert(
+            err <= p.scale / 2.0 + p.scale * 1e-3,
+            format!("bits={bits} x={x} err={err} scale={}", p.scale),
+        )
+    });
+}
+
+#[test]
+fn prop_roundtrip_error_bounded_symmetric() {
+    prop_check("sym |x - qdq(x)| <= s/2", 400, |rng| {
+        let bits = BITS[rng.below(3)];
+        let grid = QGrid::symmetric(bits);
+        let amax = rng.uniform(0.1, 50.0);
+        let p = qparams_symmetric(amax, grid);
+        let x = rng.uniform(-amax, amax);
+        let err = (x - qdq(x, p, grid)).abs();
+        prop_assert(
+            err <= p.scale / 2.0 + p.scale * 1e-3,
+            format!("bits={bits} x={x} err={err} scale={}", p.scale),
+        )
+    });
+}
+
+#[test]
+fn prop_zero_exactly_representable() {
+    prop_check("qdq(0) == 0", 400, |rng| {
+        let bits = BITS[rng.below(3)];
+        let (p, grid) = if rng.bool(0.5) {
+            let grid = QGrid::asymmetric(bits);
+            (qparams_from_range(rng.uniform(-30.0, 5.0), rng.uniform(-5.0, 30.0), grid), grid)
+        } else {
+            let grid = QGrid::symmetric(bits);
+            (qparams_symmetric(rng.uniform(0.1, 30.0), grid), grid)
+        };
+        let z = qdq(0.0, p, grid);
+        // zero must hit a grid point exactly (zero_point is integral)
+        prop_assert(z == 0.0, format!("bits={bits} qdq(0)={z} p={p:?}"))
+    });
+}
+
+#[test]
+fn prop_clamps_at_grid_edges() {
+    prop_check("clamp at edges", 300, |rng| {
+        let bits = BITS[rng.below(3)];
+        let grid = QGrid::asymmetric(bits);
+        let lo = rng.uniform(-10.0, 0.0);
+        let hi = rng.uniform(0.5, 10.0);
+        let p = qparams_from_range(lo, hi, grid);
+        // the largest/smallest representable values on this grid
+        let top = p.scale * (grid.qmax - p.zero_point);
+        let bottom = p.scale * (grid.qmin - p.zero_point);
+        for mult in [2.0f32, 10.0, 1e4] {
+            let up = qdq(hi * mult, p, grid);
+            let down = qdq(lo.min(-0.01) * mult, p, grid);
+            prop_assert(
+                (up - top).abs() <= p.scale * 1e-3,
+                format!("bits={bits} overflow {up} != top {top}"),
+            )?;
+            prop_assert(
+                (down - bottom).abs() <= p.scale * 1e-3,
+                format!("bits={bits} underflow {down} != bottom {bottom}"),
+            )?;
+        }
+        // saturation: everything past the edge maps to the same value
+        let a = qdq(hi * 3.0, p, grid);
+        let b = qdq(hi * 300.0, p, grid);
+        prop_assert(a == b, format!("saturation {a} vs {b}"))
+    });
+}
+
+#[test]
+fn prop_qdq_outputs_on_grid() {
+    prop_check("outputs on grid", 300, |rng| {
+        let bits = BITS[rng.below(3)];
+        let grid = QGrid::asymmetric(bits);
+        let p = qparams_from_range(rng.uniform(-8.0, 0.0), rng.uniform(0.1, 8.0), grid);
+        for x in vec_f32(rng, 16, -12.0, 12.0) {
+            let y = qdq(x, p, grid);
+            let q = y / p.scale + p.zero_point;
+            prop_assert(
+                (q - q.round()).abs() < 1e-3 * (1.0 + q.abs()),
+                format!("off-grid y={y} q={q}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---- PEG invariants ---------------------------------------------------
+
+#[test]
+fn prop_range_permutation_is_valid_and_sorted() {
+    prop_check("range permutation", 300, |rng| {
+        let d = 1 + rng.below(64);
+        let lo: Vec<f32> = (0..d).map(|_| rng.uniform(-20.0, 0.0)).collect();
+        let hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 20.0)).collect();
+        let perm = range_permutation(&lo, &hi);
+        // valid permutation: each index exactly once
+        let mut seen = vec![false; d];
+        for &j in &perm {
+            prop_assert(j < d && !seen[j], format!("bad perm entry {j}"))?;
+            seen[j] = true;
+        }
+        // sorted by ascending range
+        for w in perm.windows(2) {
+            let ra = hi[w[0]] - lo[w[0]];
+            let rb = hi[w[1]] - lo[w[1]];
+            prop_assert(ra <= rb, format!("not sorted: {ra} > {rb}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_bounds_partition_exactly() {
+    prop_check("group bounds partition", 300, |rng| {
+        let d = 1 + rng.below(256);
+        // every dividing k
+        for k in 1..=d {
+            if d % k != 0 {
+                continue;
+            }
+            let bounds = group_bounds(d, k);
+            prop_assert(bounds.len() == k, format!("d={d} k={k}: {} groups", bounds.len()))?;
+            let mut expected_start = 0usize;
+            for &(g0, g1) in &bounds {
+                prop_assert(
+                    g0 == expected_start,
+                    format!("d={d} k={k}: gap/overlap at {g0} (want {expected_start})"),
+                )?;
+                prop_assert(
+                    g1 - g0 == d / k,
+                    format!("d={d} k={k}: uneven group [{g0},{g1})"),
+                )?;
+                expected_start = g1;
+            }
+            prop_assert(expected_start == d, format!("d={d} k={k}: covers {expected_start}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_k1_matches_per_tensor_and_kd_matches_per_embedding() {
+    prop_check("PEG endpoints", 200, |rng| {
+        let d = [4usize, 8, 16, 32][rng.below(4)];
+        let lo: Vec<f32> = (0..d).map(|_| rng.uniform(-15.0, 0.0)).collect();
+        let hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 15.0)).collect();
+        let grid = QGrid::asymmetric([2u32, 4, 8][rng.below(3)]);
+        let permute = rng.bool(0.5);
+
+        let (pt, _) = lane_qparams(&lo, &hi, &Granularity::PerTensor, grid).unwrap();
+        let (k1, _) = lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: 1, permute },
+            grid,
+        )
+        .unwrap();
+        prop_assert(pt == k1, format!("K=1 != per-tensor: {k1:?} vs {pt:?}"))?;
+        // K=1 carries exactly one distinct parameter pair
+        prop_assert(
+            distinct_params(&k1) == 1,
+            format!("K=1 has {} distinct params", distinct_params(&k1)),
+        )?;
+
+        let (pe, _) = lane_qparams(&lo, &hi, &Granularity::PerEmbedding, grid).unwrap();
+        let (kd, _) = lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: d, permute },
+            grid,
+        )
+        .unwrap();
+        prop_assert(pe == kd, format!("K=d != per-embedding"))?;
+
+        // intermediate K: at most K distinct parameter pairs
+        let k = d / 2;
+        let (km, _) = lane_qparams(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k, permute },
+            grid,
+        )
+        .unwrap();
+        prop_assert(
+            distinct_params(&km) <= k,
+            format!("K={k} has {} distinct params", distinct_params(&km)),
+        )
+    });
+}
+
+fn distinct_params(params: &[QParams]) -> usize {
+    let mut keys: Vec<(u32, u32)> = params
+        .iter()
+        .map(|p| (p.scale.to_bits(), p.zero_point.to_bits()))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    keys.len()
+}

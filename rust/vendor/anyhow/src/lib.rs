@@ -1,0 +1,137 @@
+//! Offline stand-in for the `anyhow` crate, covering exactly the API
+//! surface this repository uses: `Error`, `Result`, the `anyhow!` /
+//! `bail!` / `ensure!` macros, and the `Context` extension trait.
+//!
+//! The error is a rendered message string (the source chain is flattened
+//! at conversion time), which keeps the shim dependency-free and `Send +
+//! Sync` so errors can cross the `util::pool` thread boundaries.
+
+use std::fmt;
+
+/// A flattened, message-carrying error (real anyhow keeps the boxed chain;
+/// we render it eagerly instead).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow: convert from any std error, flattening the source
+// chain into the message. `Error` itself deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on results whose error converts
+/// into [`Error`] (std errors via the blanket `From`, and `Error` itself).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error { msg: format!("{c}: {}", e.msg) }
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error { msg: format!("{}: {}", f(), e.msg) }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+    }
+
+    #[test]
+    fn io_error_converts_and_contextualizes() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        let e2 = fails_io().with_context(|| "loading config").unwrap_err();
+        assert!(e2.to_string().starts_with("loading config: "));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope {x}", x = 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+        fn g(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            Ok(3)
+        }
+        assert!(g(true).is_ok());
+        assert!(g(false).is_err());
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Error>();
+    }
+}

@@ -1,0 +1,240 @@
+//! Offline stub of the `xla` PJRT binding used by `tq::runtime`.
+//!
+//! The crate snapshot in this environment does not include the real XLA
+//! binding (it links the PJRT C++ runtime), so this stub provides the same
+//! *types and signatures* with honest semantics:
+//!
+//! * [`Literal`] is a real host-side tensor container — `vec1`, `reshape`,
+//!   `to_vec`, `element_count` behave exactly like the real crate, so all
+//!   the literal-assembly plumbing in `tq::runtime` works and is testable.
+//! * [`PjRtClient::cpu`] succeeds (it allocates nothing), but
+//!   [`PjRtClient::compile`] returns an error stating that the PJRT
+//!   backend is unavailable. Everything that needs to *execute* an AOT
+//!   artifact therefore fails with a clear message, and the integration
+//!   tests skip gracefully because `artifacts/manifest.json` is absent in
+//!   offline checkouts anyway.
+//!
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for the real
+//! binding to run artifacts; no `tq` source changes are needed.
+//!
+//! All types are plain data, hence `Send + Sync` — which is what lets
+//! `tq::runtime::Runtime` keep its compiled-executable cache behind a
+//! `Mutex` and be shared across the sweep engine's worker threads.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (implements `std::error::Error` so `?` converts it into
+/// `anyhow::Error` at the call sites).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const UNAVAILABLE: &str = "XLA PJRT backend unavailable in this offline build \
+     (vendor/xla-stub); swap the `xla` path dependency for the real binding \
+     to execute AOT artifacts";
+
+/// Element types a [`Literal`] can hold (the subset tq uses).
+pub trait NativeType: Copy {
+    fn make(data: &[Self], dims: Vec<i64>) -> Literal;
+    fn take(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn make(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims }
+    }
+
+    fn take(lit: &Literal) -> Option<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims }
+    }
+
+    fn take(lit: &Literal) -> Option<Vec<Self>> {
+        match lit {
+            Literal::I32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side tensor value, matching the real crate's literal semantics for
+/// the operations tq performs.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::make(data, vec![data.len() as i64])
+    }
+
+    /// Reinterpret the shape; errors when the element count differs
+    /// (product of an empty dims list is 1, i.e. a scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements cannot view as {dims:?}",
+                self.element_count()
+            )));
+        }
+        let mut out = self.clone();
+        match &mut out {
+            Literal::F32 { dims: d, .. } => *d = dims.to_vec(),
+            Literal::I32 { dims: d, .. } => *d = dims.to_vec(),
+            Literal::Tuple(_) => return Err(Error::new("reshape on tuple literal")),
+        }
+        Ok(out)
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::take(self).ok_or_else(|| Error::new("literal element type mismatch"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module (the stub keeps the raw text so `from_text_file`
+/// still validates that the artifact file exists and is readable).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        let path = path.as_ref();
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(HloModuleProto { text }),
+            Err(e) => Err(Error::new(format!("{}: {e}", path.display()))),
+        }
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[5.0f32]).reshape(&[]).unwrap();
+        assert_eq!(l.element_count(), 1);
+    }
+
+    #[test]
+    fn int_literal() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn client_compiles_to_clear_error() {
+        let c = PjRtClient::cpu().unwrap();
+        let err = c.compile(&XlaComputation).unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+
+    #[test]
+    fn types_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Literal>();
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<PjRtBuffer>();
+        check::<Error>();
+    }
+}
