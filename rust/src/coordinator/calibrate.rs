@@ -145,6 +145,7 @@ pub fn calibrate(
 }
 
 /// Execute the diagnostic artifact on one example; returns site -> tap.
+#[allow(clippy::too_many_arguments)]
 pub fn run_diag(
     ctx: &Ctx,
     artifact: &str,

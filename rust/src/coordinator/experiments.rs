@@ -1,5 +1,12 @@
 //! Experiment registry: one driver per paper table/figure (DESIGN.md §5).
 //!
+//! Every PTQ driver is now a *list of [`QuantSpec`]s plus a formatter*:
+//! the rows name their configurations declaratively and
+//! [`crate::spec::run::run_spec`] owns the calibrate → weight-QDQ →
+//! assemble → eval pipeline, so `repro table1` and
+//! `repro run --preset w8a8` are literally the same experiment. Only the
+//! QAT rows (which train) remain imperative.
+//!
 //! Every driver prints the paper-shaped table to stdout and writes
 //! markdown + CSV under `results/`. Absolute scores differ from the paper
 //! (synthetic benchmark, tiny model — DESIGN.md §2); the claims under test
@@ -23,6 +30,8 @@ use crate::model::qconfig::{
 use crate::model::{checkpoint, Params};
 use crate::quant::{Estimator, Granularity};
 use crate::report::{fmt_score, write_file, Table};
+use crate::spec::run::run_spec;
+use crate::spec::{presets, CalibSpec, PolicySpec, QuantSpec, SiteSelector};
 
 /// Shared experiment options from the CLI.
 #[derive(Debug, Clone)]
@@ -115,6 +124,12 @@ pub fn cmd_finetune(ctx: &Ctx, opts: &ExpOpts, epochs: usize, lr: f32) -> Result
 
 /// Quantization "configuration" = weight policy + activation policy +
 /// calibration settings, evaluated with median over seeds.
+///
+/// Retained only because `examples/{quickstart,end_to_end}.rs` build
+/// policies imperatively; everything in this crate routes through
+/// [`crate::spec::run`], which is the canonical pipeline (note: unlike
+/// `run_spec_on`, this ignores `calib.seed` and uses `seed_index * 97`
+/// directly — the pre-spec behavior). Do not add new callers.
 pub struct EvalConfig {
     pub policy: QuantPolicy,
     pub calib: CalibCfg,
@@ -152,277 +167,187 @@ pub fn eval_config(
     Ok(median(&scores))
 }
 
-fn fp32_score(ctx: &Ctx, task: &TaskSpec, params: &Params) -> Result<f64> {
-    let info = ctx.model_info(task)?;
-    let act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
-    evaluate(ctx, task, params, &act)
-}
-
-fn w32a8(bits: u32) -> QuantPolicy {
-    QuantPolicy {
-        default: SiteCfg { bits, ..Default::default() },
-        overrides: BTreeMap::new(),
-        weights: WeightCfg { enabled: false, ..Default::default() },
-        weight_overrides: BTreeMap::new(),
+/// Shared formatter: run one spec per row over `tasks`, print the
+/// paper-shaped table and write markdown + CSV under `results/`. The
+/// first column shows each spec's label (`QuantSpec::name`).
+fn spec_table(
+    ctx: &Ctx,
+    name: &str,
+    title: &str,
+    first_col: &str,
+    tasks: &[TaskSpec],
+    specs: Vec<QuantSpec>,
+    include_glue: bool,
+) -> Result<()> {
+    let task_names: Vec<String> = tasks.iter().map(|t| t.name.to_string()).collect();
+    let mut header: Vec<&str> = vec![first_col];
+    header.extend(tasks.iter().map(|t| t.name));
+    if include_glue {
+        header.push("GLUE");
     }
-}
-
-fn w8a32() -> QuantPolicy {
-    QuantPolicy {
-        default: SiteCfg { enabled: false, ..Default::default() },
-        overrides: BTreeMap::new(),
-        weights: WeightCfg { bits: 8, ..Default::default() },
-        weight_overrides: BTreeMap::new(),
+    let mut table = Table::new(title, &header);
+    for spec in specs {
+        let spec = spec.with_tasks(&task_names);
+        let report = run_spec(ctx, &spec)?;
+        let mut row = vec![spec.name.clone()];
+        row.extend(report.scores.iter().map(|&s| fmt_score(s)));
+        if include_glue {
+            row.push(fmt_score(report.glue));
+        }
+        table.row(row);
     }
+    finish(ctx, name, &table)
 }
 
 /// Table 1: standard 8-bit PTQ (W8A8 / W32A8 / W8A32) vs FP32 on all tasks.
 pub fn table1(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
-    let tasks = opts.tasks();
-    let mut table = Table::new(
+    let specs = [
+        ("fp32", "FP32"),
+        ("w8a8", "W8A8"),
+        ("w32a8", "W32A8"),
+        ("w8a32", "W8A32"),
+    ]
+    .into_iter()
+    .map(|(p, label)| Ok(presets::preset(p)?.named(label).with_seeds(opts.seeds)))
+    .collect::<Result<Vec<_>>>()?;
+    spec_table(
+        ctx,
+        "table1",
         "Table 1: post-training quantization (synthetic-GLUE dev)",
-        &["Configuration"]
-            .into_iter()
-            .chain(tasks.iter().map(|t| t.name))
-            .chain(["GLUE"])
-            .collect::<Vec<_>>(),
-    );
-    let configs: Vec<(&str, Option<QuantPolicy>)> = vec![
-        ("FP32", None),
-        ("W8A8", Some(QuantPolicy::uniform(8, 8))),
-        ("W32A8", Some(w32a8(8))),
-        ("W8A32", Some(w8a32())),
-    ];
-    for (label, policy) in configs {
-        let mut row = vec![label.to_string()];
-        let mut scores = Vec::new();
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let score = match &policy {
-                None => fp32_score(ctx, task, &params)?,
-                Some(p) => {
-                    eval_config(ctx, task, &params, &EvalConfig::new(p.clone()), opts.seeds)?
-                }
-            };
-            println!("  table1 {label} {}: {score:.2}", task.name);
-            row.push(fmt_score(score));
-            scores.push(score);
-        }
-        row.push(fmt_score(glue_score(&scores)));
-        table.row(row);
-    }
-    finish(ctx, "table1", &table)
+        "Configuration",
+        &opts.tasks(),
+        specs,
+        true,
+    )
 }
 
 /// Table 2: leave-one-out ablation of activation quantizers on the four
 /// problematic tasks (weights FP32, current min-max bs=1).
 pub fn table2(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
-    let tasks = opts.hard_tasks();
-    let mut table = Table::new(
-        "Table 2: leave-one-out activation-quantizer ablation (W FP32)",
-        &["Quantized activations"]
-            .into_iter()
-            .chain(tasks.iter().map(|t| t.name))
-            .collect::<Vec<_>>(),
-    );
-    let calib = CalibCfg {
+    let calib = CalibSpec {
         estimator: Estimator::CurrentMinMax,
         batch_size: 1,
         num_batches: 1,
         ..Default::default()
     };
-    let base = w32a8(8);
     let off = SiteCfg { enabled: false, ..Default::default() };
-
-    let mk = |info: &crate::model::manifest::ModelInfo, family: Option<&str>| -> QuantPolicy {
-        match family {
-            None => base.clone(),
-            Some(f) => base.clone().with_site_family(info, f, off.clone()),
-        }
+    let base = |label: &str| {
+        let mut spec = QuantSpec::new(label, PolicySpec::acts_only(8)).with_seeds(opts.seeds);
+        spec.calib = calib.clone();
+        spec
     };
 
-    let rows: Vec<(&str, Option<&str>)> = vec![
-        ("none (FP32 model)", Some("__fp32__")),
-        ("all", None),
-        ("all, except softmax input", Some("attn_scores")),
-        ("all, except sum of embeddings", Some("embed_sum")),
-        ("all, except self-attention output", Some("attn_out")),
-        ("all, except softmax output", Some("attn_probs")),
-        ("all, except residual sum after FFN", Some("res2_sum")),
-    ];
-    for (label, family) in rows {
-        let mut row = vec![label.to_string()];
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let score = if family == Some("__fp32__") {
-                fp32_score(ctx, task, &params)?
-            } else {
-                let info = ctx.model_info(task)?;
-                let policy = mk(info, family);
-                let cfg = EvalConfig { policy, calib: calib.clone(), adaround: Default::default() };
-                eval_config(ctx, task, &params, &cfg, opts.seeds)?
-            };
-            println!("  table2 {label:?} {}: {score:.2}", task.name);
-            row.push(fmt_score(score));
-        }
-        table.row(row);
+    let mut specs = vec![presets::preset("fp32")?.named("none (FP32 model)")];
+    specs.push(base("all"));
+    for (label, family) in [
+        ("all, except softmax input", "attn_scores"),
+        ("all, except sum of embeddings", "embed_sum"),
+        ("all, except self-attention output", "attn_out"),
+        ("all, except softmax output", "attn_probs"),
+        ("all, except residual sum after FFN", "res2_sum"),
+    ] {
+        specs.push(base(label).with_family(family, off.clone()));
     }
-    // last row: res2_sum unquantized in the last two layers only
-    {
-        let mut row = vec!["same, but last 2 layers only".to_string()];
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let info = ctx.model_info(task)?;
-            let l = info.config.layers;
-            let policy = base
-                .clone()
-                .with_sites(
-                    &[
-                        format!("layer{}.res2_sum", l - 1).as_str(),
-                        format!("layer{}.res2_sum", l - 2).as_str(),
-                    ],
-                    off.clone(),
-                );
-            let cfg = EvalConfig { policy, calib: calib.clone(), adaround: Default::default() };
-            let score = eval_config(ctx, task, &params, &cfg, opts.seeds)?;
-            row.push(fmt_score(score));
-        }
-        table.row(row);
-    }
-    finish(ctx, "table2", &table)
+    specs.push(base("same, but last 2 layers only").with_rule(
+        SiteSelector::FamilyLastLayers { suffix: "res2_sum".to_string(), n: 2 },
+        off,
+    ));
+    spec_table(
+        ctx,
+        "table2",
+        "Table 2: leave-one-out activation-quantizer ablation (W FP32)",
+        "Quantized activations",
+        &opts.hard_tasks(),
+        specs,
+        false,
+    )
 }
 
 /// Table 4: mixed-precision PTQ — progressively keep problematic tensors
 /// in 16 bits.
 pub fn table4(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
-    let tasks = opts.hard_tasks();
-    let mut table = Table::new(
-        "Table 4: mixed-precision PTQ (16-bit on problematic activations)",
-        &["Method"]
-            .into_iter()
-            .chain(tasks.iter().map(|t| t.name))
-            .collect::<Vec<_>>(),
-    );
     let a16 = SiteCfg { bits: 16, ..Default::default() };
-
-    for (label, stage) in [
-        ("FP32", 0usize),
-        ("W8A8 PTQ", 1),
-        ("MP-PTQ (16b FFN residual sum)", 2),
-        ("MP-PTQ (+16b FFN in/out)", 3),
-        ("MP-PTQ (+16b final output)", 4),
-    ] {
-        let mut row = vec![label.to_string()];
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let info = ctx.model_info(task)?;
-            let score = if stage == 0 {
-                fp32_score(ctx, task, &params)?
-            } else {
-                let mut policy = QuantPolicy::uniform(8, 8);
-                if stage >= 2 {
-                    policy = policy.with_site_family(info, "res2_sum", a16.clone());
-                }
-                if stage >= 3 {
-                    policy = policy
-                        .with_site_family(info, "ln1_out", a16.clone())
-                        .with_site_family(info, "ffn_out", a16.clone());
-                }
-                if stage >= 4 {
-                    policy = policy.with_sites(&["head_out", "pooled"], a16.clone());
-                }
-                eval_config(ctx, task, &params, &EvalConfig::new(policy), opts.seeds)?
-            };
-            println!("  table4 {label:?} {}: {score:.2}", task.name);
-            row.push(fmt_score(score));
+    let stage = |label: &str, n: usize| {
+        let mut spec = QuantSpec::new(label, PolicySpec::uniform(8, 8)).with_seeds(opts.seeds);
+        if n >= 2 {
+            spec = spec.with_family("res2_sum", a16.clone());
         }
-        table.row(row);
-    }
-    finish(ctx, "table4", &table)
+        if n >= 3 {
+            spec = spec
+                .with_family("ln1_out", a16.clone())
+                .with_family("ffn_out", a16.clone());
+        }
+        if n >= 4 {
+            spec = spec
+                .with_exact("head_out", a16.clone())
+                .with_exact("pooled", a16.clone());
+        }
+        spec
+    };
+    let specs = vec![
+        presets::preset("fp32")?.named("FP32"),
+        stage("W8A8 PTQ", 1),
+        stage("MP-PTQ (16b FFN residual sum)", 2),
+        stage("MP-PTQ (+16b FFN in/out)", 3),
+        stage("MP-PTQ (+16b final output)", 4),
+    ];
+    spec_table(
+        ctx,
+        "table4",
+        "Table 4: mixed-precision PTQ (16-bit on problematic activations)",
+        "Method",
+        &opts.hard_tasks(),
+        specs,
+        false,
+    )
 }
 
 /// Table 5: per-embedding-group PTQ vs number of groups K ± permutation.
 /// With d=128 we map the paper's K ∈ {768, 6, 3} to {128 (=per-embd), 8, 4}.
 pub fn table5(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
-    let tasks = opts.hard_tasks();
-    let mut table = Table::new(
-        "Table 5: per-embedding-group PTQ (d=128; paper K=3,6 -> K=4,8)",
-        &["#groups K"]
-            .into_iter()
-            .chain(tasks.iter().map(|t| t.name))
-            .collect::<Vec<_>>(),
-    );
     let ffn_sites = ["ln1_out", "ffn_out", "res2_sum"];
-
-    type Gran = Option<(Granularity, bool)>; // (granularity, only_ffn)
-    let rows: Vec<(&str, Gran)> = vec![
-        ("FP32", None),
-        ("1 (= per-tensor)", Some((Granularity::PerTensor, false))),
-        ("128 (= per-embd.)", Some((Granularity::PerEmbedding, false))),
-        ("128 (only FFN)", Some((Granularity::PerEmbedding, true))),
-        ("8 (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 8, permute: false }, true))),
-        ("4 (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 4, permute: false }, true))),
-        ("4 + P (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 4, permute: true }, true))),
-        ("8 + P (only FFN)", Some((Granularity::PerEmbeddingGroup { k: 8, permute: true }, true))),
-    ];
-    for (label, gran) in rows {
-        let mut row = vec![label.to_string()];
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let info = ctx.model_info(task)?;
-            let score = match &gran {
-                None => fp32_score(ctx, task, &params)?,
-                Some((g, only_ffn)) => {
-                    let mut policy = QuantPolicy::uniform(8, 8);
-                    if *only_ffn {
-                        for fam in ffn_sites {
-                            policy = policy.with_site_family(
-                                info,
-                                fam,
-                                SiteCfg { bits: 8, granularity: g.clone(), enabled: true },
-                            );
-                        }
-                    } else {
-                        policy.default.granularity = g.clone();
-                    }
-                    eval_config(ctx, task, &params, &EvalConfig::new(policy), opts.seeds)?
-                }
-            };
-            println!("  table5 {label:?} {}: {score:.2}", task.name);
-            row.push(fmt_score(score));
+    let mk = |label: &str, g: Granularity, only_ffn: bool| {
+        let mut policy = PolicySpec::uniform(8, 8);
+        if !only_ffn {
+            policy.default_site.granularity = g.clone();
         }
-        table.row(row);
-    }
-    finish(ctx, "table5", &table)
-}
-
-/// The best MP policy from Table 4 (everything the paper's footnotes list
-/// at 16-bit).
-fn best_mp_policy(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
-    let a16 = SiteCfg { bits: 16, ..Default::default() };
-    QuantPolicy::uniform(8, 8)
-        .with_site_family(info, "res2_sum", a16.clone())
-        .with_site_family(info, "ln1_out", a16.clone())
-        .with_site_family(info, "ffn_out", a16.clone())
-        .with_sites(&["head_out", "pooled"], a16)
-}
-
-/// The paper's chosen PEG config: K=6 (+P) on FFN in/out/sum (ours: K=8).
-fn best_peg_policy(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
-    let peg = SiteCfg {
-        bits: 8,
-        granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
-        enabled: true,
+        let mut spec = QuantSpec::new(label, policy).with_seeds(opts.seeds);
+        if only_ffn {
+            for fam in ffn_sites {
+                spec = spec.with_family(
+                    fam,
+                    SiteCfg { bits: 8, granularity: g.clone(), enabled: true },
+                );
+            }
+        }
+        spec
     };
-    QuantPolicy::uniform(8, 8)
-        .with_site_family(info, "res2_sum", peg.clone())
-        .with_site_family(info, "ln1_out", peg.clone())
-        .with_site_family(info, "ffn_out", peg)
+    let k = |k, permute| Granularity::PerEmbeddingGroup { k, permute };
+    let specs = vec![
+        presets::preset("fp32")?.named("FP32"),
+        mk("1 (= per-tensor)", Granularity::PerTensor, false),
+        mk("128 (= per-embd.)", Granularity::PerEmbedding, false),
+        mk("128 (only FFN)", Granularity::PerEmbedding, true),
+        mk("8 (only FFN)", k(8, false), true),
+        mk("4 (only FFN)", k(4, false), true),
+        mk("4 + P (only FFN)", k(4, true), true),
+        mk("8 + P (only FFN)", k(8, true), true),
+    ];
+    spec_table(
+        ctx,
+        "table5",
+        "Table 5: per-embedding-group PTQ (d=128; paper K=3,6 -> K=4,8)",
+        "#groups K",
+        &opts.hard_tasks(),
+        specs,
+        false,
+    )
 }
 
 /// Table 6: all methods compared on all 8 tasks (incl. W8A8 QAT).
 pub fn table6(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
     let tasks = opts.tasks();
+    let task_names: Vec<String> = tasks.iter().map(|t| t.name.to_string()).collect();
     let mut table = Table::new(
         "Table 6: 8-bit quantization methods",
         &["Method"]
@@ -431,44 +356,38 @@ pub fn table6(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
             .chain(["GLUE"])
             .collect::<Vec<_>>(),
     );
-
-    enum M {
-        Fp32,
-        Ptq(fn(&crate::model::manifest::ModelInfo) -> QuantPolicy),
-        Qat,
-    }
-    fn uni(_info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
-        QuantPolicy::uniform(8, 8)
-    }
-    let rows: Vec<(&str, M)> = vec![
-        ("FP32 baseline", M::Fp32),
-        ("W8A8 PTQ", M::Ptq(uni)),
-        ("W8A{8,16} MP-PTQ", M::Ptq(best_mp_policy)),
-        ("W8A8 PEG-PTQ (K=8+P)", M::Ptq(best_peg_policy)),
-        ("W8A8 QAT", M::Qat),
+    // None = the QAT row (trains, so it cannot be a PTQ spec)
+    let rows: Vec<(&str, Option<&str>)> = vec![
+        ("FP32 baseline", Some("fp32")),
+        ("W8A8 PTQ", Some("w8a8")),
+        ("W8A{8,16} MP-PTQ", Some("mixed_precision")),
+        ("W8A8 PEG-PTQ (K=8+P)", Some("peg_k8_permute")),
+        ("W8A8 QAT", None),
     ];
-    for (label, method) in rows {
+    for (label, preset_name) in rows {
         let mut row = vec![label.to_string()];
-        let mut scores = Vec::new();
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let info = ctx.model_info(task)?;
-            let score = match &method {
-                M::Fp32 => fp32_score(ctx, task, &params)?,
-                M::Ptq(f) => eval_config(
-                    ctx,
-                    task,
-                    &params,
-                    &EvalConfig::new(f(info)),
-                    opts.seeds,
-                )?,
-                M::Qat => run_qat_eval(ctx, task, &params, 8, 8, opts)?,
-            };
-            println!("  table6 {label:?} {}: {score:.2}", task.name);
-            row.push(fmt_score(score));
-            scores.push(score);
+        match preset_name {
+            Some(p) => {
+                let spec = presets::preset(p)?
+                    .named(label)
+                    .with_seeds(opts.seeds)
+                    .with_tasks(&task_names);
+                let report = run_spec(ctx, &spec)?;
+                row.extend(report.scores.iter().map(|&s| fmt_score(s)));
+                row.push(fmt_score(report.glue));
+            }
+            None => {
+                let mut scores = Vec::new();
+                for task in &tasks {
+                    let params = load_ckpt(ctx, task)?;
+                    let score = run_qat_eval(ctx, task, &params, 8, 8, opts)?;
+                    println!("  table6 {label:?} {}: {score:.2}", task.name);
+                    row.push(fmt_score(score));
+                    scores.push(score);
+                }
+                row.push(fmt_score(glue_score(&scores)));
+            }
         }
-        row.push(fmt_score(glue_score(&scores)));
         table.row(row);
     }
     finish(ctx, "table6", &table)
@@ -526,6 +445,7 @@ pub fn run_qat_eval_a32(
 /// Table 7 (+ Table 12 detail): low-bit weights & token embeddings.
 pub fn table7(ctx: &Ctx, opts: &ExpOpts, detailed: bool) -> Result<()> {
     let tasks = opts.tasks();
+    let task_names: Vec<String> = tasks.iter().map(|t| t.name.to_string()).collect();
     let mut header: Vec<&str> = vec!["Method", "Mem"];
     let names: Vec<&str> = tasks.iter().map(|t| t.name).collect();
     if detailed {
@@ -561,48 +481,62 @@ pub fn table7(ctx: &Ctx, opts: &ExpOpts, detailed: bool) -> Result<()> {
         Row { label: "W4A8, 2-bit embd. QAT", wb: 4, eb: 2, est: Estimator::Mse, ada: false, qat: true, act8: true, act_off: false, w_off: false },
     ];
 
+    // memory ratios come from one checkpoint load up front — parameter
+    // sizes are task-independent, so per-row reloads would be waste
+    let mem_basis = match tasks.first() {
+        Some(task) => Some((load_ckpt(ctx, task)?, ctx.model_info(task)?)),
+        None => None,
+    };
     for r in rows {
-        let mut scores = Vec::new();
-        let mut mem = String::new();
-        for task in &tasks {
-            let params = load_ckpt(ctx, task)?;
-            let info = ctx.model_info(task)?;
-            if mem.is_empty() {
+        let mem = match &mem_basis {
+            Some((params, info)) => {
                 let fp32 = params.size_bytes(info, 32, 32) as f64;
                 let q = params.size_bytes(info, r.wb.min(32), r.eb.min(32)) as f64;
-                mem = format!("x{:.2}", fp32 / q);
+                format!("x{:.2}", fp32 / q)
             }
-            let score = if r.qat {
-                if r.act8 {
+            None => String::new(),
+        };
+        let scores: Vec<f64> = if r.qat {
+            let mut scores = Vec::new();
+            for task in &tasks {
+                let params = load_ckpt(ctx, task)?;
+                let score = if r.act8 {
                     run_qat_eval(ctx, task, &params, r.wb, r.eb, opts)?
                 } else {
                     run_qat_eval_a32(ctx, task, &params, r.wb, r.eb, opts)?
-                }
-            } else {
-                let mut policy = if r.act_off && r.w_off {
-                    QuantPolicy::fp32()
-                } else {
-                    let mut p = if r.act_off { w8a32() } else { QuantPolicy::uniform(8, 8) };
-                    p.weights = WeightCfg { bits: r.wb, estimator: r.est, ..Default::default() };
-                    p
                 };
-                if !r.w_off {
-                    policy.weight_overrides.insert(
-                        "embed.tok".into(),
-                        WeightCfg { bits: r.eb, estimator: Estimator::Mse, ..Default::default() },
-                    );
-                }
-                let mut cfg = EvalConfig::new(policy);
-                cfg.calib.collect_grams = r.ada;
-                cfg.adaround.enabled = r.ada;
-                if opts.quick {
-                    cfg.adaround.cfg.iters = 200;
-                }
-                eval_config(ctx, task, &params, &cfg, if r.ada { 1 } else { opts.seeds })?
+                println!("  table7 {:?} {}: {score:.2}", r.label, task.name);
+                scores.push(score);
+            }
+            scores
+        } else {
+            let mut policy = if r.act_off && r.w_off {
+                PolicySpec::fp32()
+            } else {
+                let mut p = if r.act_off {
+                    PolicySpec::weights_only(8)
+                } else {
+                    PolicySpec::uniform(8, 8)
+                };
+                p.weights = WeightCfg { bits: r.wb, estimator: r.est, ..Default::default() };
+                p
             };
-            println!("  table7 {:?} {}: {score:.2}", r.label, task.name);
-            scores.push(score);
-        }
+            if !r.w_off {
+                policy.weight_overrides.insert(
+                    "embed.tok".to_string(),
+                    WeightCfg { bits: r.eb, estimator: Estimator::Mse, ..Default::default() },
+                );
+            }
+            let mut spec = QuantSpec::new(r.label, policy)
+                .with_seeds(if r.ada { 1 } else { opts.seeds })
+                .with_tasks(&task_names);
+            spec.calib.collect_grams = r.ada;
+            spec.adaround.enabled = r.ada;
+            if opts.quick {
+                spec.adaround.iters = 200;
+            }
+            run_spec(ctx, &spec)?.scores
+        };
         let mut row = vec![r.label.to_string(), mem];
         if detailed {
             row.extend(scores.iter().map(|&s| fmt_score(s)));
@@ -809,16 +743,20 @@ fn finish(ctx: &Ctx, name: &str, table: &Table) -> Result<()> {
 }
 
 /// Re-export for examples: a full PTQ pass on one task returning
-/// (fp32, w8a8, peg, mp) scores.
+/// (fp32, w8a8, peg, mp) scores — each a preset spec routed through
+/// `run_spec`.
 pub fn quick_compare(ctx: &Ctx, task_name: &str, seeds: usize) -> Result<[f64; 4]> {
-    let task = ctx.task(task_name)?;
-    let params = load_ckpt(ctx, &task)?;
-    let info = ctx.model_info(&task)?;
-    let fp32 = fp32_score(ctx, &task, &params)?;
-    let w8a8 = eval_config(ctx, &task, &params, &EvalConfig::new(QuantPolicy::uniform(8, 8)), seeds)?;
-    let peg = eval_config(ctx, &task, &params, &EvalConfig::new(best_peg_policy(info)), seeds)?;
-    let mp = eval_config(ctx, &task, &params, &EvalConfig::new(best_mp_policy(info)), seeds)?;
-    Ok([fp32, w8a8, peg, mp])
+    let tasks = vec![task_name.to_string()];
+    let mut out = [0.0f64; 4];
+    for (slot, name) in out
+        .iter_mut()
+        .zip(["fp32", "w8a8", "peg_k8_permute", "mixed_precision"])
+    {
+        let spec = presets::preset(name)?.with_seeds(seeds).with_tasks(&tasks);
+        let report = run_spec(ctx, &spec)?;
+        *slot = report.scores[0];
+    }
+    Ok(out)
 }
 
 /// Calibration+assembly helper reused by examples/benches.

@@ -10,10 +10,16 @@
 //!                     AdaRound quantize-dequantize of parameter tensors.
 //! * [`diagnostics`] — paper Fig. 2/5/6-13 data extraction.
 //! * [`experiments`] — `repro table1` ... drivers regenerating every paper
-//!                     table & figure.
+//!                     table & figure; each PTQ driver is a list of
+//!                     `crate::spec::QuantSpec`s plus a formatter.
 //! * [`sweep`]       — parallel experiment-sweep engine: bits ×
 //!                     granularity × estimator grids executed concurrently
-//!                     on the `util::pool` workers.
+//!                     on the `util::pool` workers, keyed by `spec_id` for
+//!                     resumable runs and `--compare` regression gating.
+//!
+//! The calibrate → weight-QDQ → assemble → eval sequence itself lives in
+//! `crate::spec::run` so every surface (tables, sweeps, `repro run`)
+//! executes configurations identically.
 
 pub mod calibrate;
 pub mod diagnostics;

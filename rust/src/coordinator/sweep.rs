@@ -2,7 +2,18 @@
 //!
 //! The paper's tables are grids — bit-widths × granularities × range
 //! estimators — and every cell is independent, so the engine runs one
-//! configuration per `util::pool` job. Two layers:
+//! configuration per `util::pool` job. Every cell is a [`QuantSpec`]
+//! (see `crate::spec`), keyed by its stable content hash `spec_id`:
+//!
+//! * **Resumable sweeps**: before running, configurations whose `spec_id`
+//!   already appears in `results/sweep.json` are skipped and their cached
+//!   row carried forward (`--fresh` forces a full rerun).
+//! * **Regression gate**: `--compare baseline.json` diffs the new results
+//!   against a prior report by `spec_id` and exits non-zero when a score
+//!   (or, for offline-only runs, the quantization MSE) regresses beyond
+//!   tolerance.
+//!
+//! Two execution layers:
 //!
 //! * **Offline substrate sweep** (always available): each configuration
 //!   runs the full L3 statistics pipeline — estimator observation, MSE
@@ -12,27 +23,27 @@
 //!   benchmarkable hot path (benches/sweep_bench.rs) and needs no AOT
 //!   artifacts.
 //! * **Runtime-backed scores** (when `artifacts/manifest.json` and a task
-//!   checkpoint exist): the same grid is evaluated end-to-end via
-//!   `experiments::eval_config`; workers share the runtime's
-//!   mutex-guarded compiled-executable cache, so each artifact compiles
-//!   once for the whole sweep.
+//!   checkpoint exist): each config's spec is evaluated end-to-end via
+//!   `spec::run::run_spec_on`; workers share the runtime's mutex-guarded
+//!   compiled-executable cache, so each artifact compiles once for the
+//!   whole sweep.
 //!
 //! Inside an *offline* sweep job all kernels run with a serial inner
 //! pool — the parallelism budget is spent across configurations, and
 //! results stay bit-identical to a serial sweep (see
-//! tests/determinism.rs). The runtime-backed path reuses the existing
-//! eval pipeline, whose inner kernels use `Pool::global()`; cap
+//! tests/determinism.rs). The runtime-backed path reuses the shared spec
+//! pipeline, whose inner kernels use `Pool::global()`; cap
 //! oversubscription there with `TQ_THREADS` or `--threads` if needed.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::experiments::{self, EvalConfig};
+use super::experiments;
 use super::Ctx;
 use crate::data::TaskSpec;
-use crate::model::qconfig::QuantPolicy;
 use crate::model::Params;
 use crate::quant::estimators::{mse_search_pool, RangeTracker};
 use crate::quant::peg::lane_qparams;
@@ -41,6 +52,7 @@ use crate::quant::{
     Granularity, QGrid, QParams,
 };
 use crate::report::{fmt_score, write_file, Table};
+use crate::spec::{parse_estimator, PolicySpec, QuantSpec};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -65,12 +77,21 @@ impl SweepConfig {
                 format!("k{}{}", k, if *permute { "p" } else { "" })
             }
         };
-        let e = match self.estimator {
-            Estimator::CurrentMinMax => "current",
-            Estimator::RunningMinMax => "running",
-            Estimator::Mse => "mse",
-        };
+        let e = crate::spec::estimator_name(self.estimator);
         format!("a{}w{}-{}-{}", self.act_bits, self.weight_bits, g, e)
+    }
+
+    /// The cell as a full [`QuantSpec`] on one task — this is what the
+    /// runtime-backed pass executes and what `spec_id`-keyed resume and
+    /// baseline diffs hash.
+    pub fn to_spec(&self, task: &str, seeds: usize) -> QuantSpec {
+        let mut policy = PolicySpec::uniform(self.weight_bits, self.act_bits);
+        policy.default_site.granularity = self.granularity.clone();
+        policy.weights.estimator = self.estimator;
+        let mut spec = QuantSpec::new(&self.label(), policy).with_seeds(seeds.max(1));
+        spec.calib.estimator = self.estimator;
+        spec.tasks = vec![task.to_string()];
+        spec
     }
 }
 
@@ -79,6 +100,9 @@ impl SweepConfig {
 #[derive(Debug, Clone)]
 pub struct SweepResult {
     pub label: String,
+    /// content hash of the config's spec (empty when produced by the bare
+    /// offline API without a task context)
+    pub spec_id: String,
     pub act_bits: u32,
     pub weight_bits: u32,
     /// activation QDQ MSE on the held-out synthetic tensor
@@ -203,6 +227,7 @@ pub fn run_config_offline(
 
     Ok(SweepResult {
         label: cfg.label(),
+        spec_id: String::new(),
         act_bits: cfg.act_bits,
         weight_bits: cfg.weight_bits,
         act_mse,
@@ -230,8 +255,9 @@ pub fn run_offline(
     pool.run(jobs).into_iter().collect()
 }
 
-/// Runtime-backed scores for the same grid: each config becomes a full
-/// calibrate -> quantize -> evaluate pass through the AOT executables.
+/// Runtime-backed scores for the same grid: each config becomes a
+/// [`QuantSpec`] executed through the shared `spec::run` pipeline (full
+/// calibrate -> quantize -> evaluate through the AOT executables).
 /// Workers share `ctx.rt`'s compiled-executable cache (the runtime is
 /// `Sync`), so a warm artifact never recompiles; on a cold cache,
 /// workers racing on the same artifact may each compile it once (first
@@ -253,12 +279,8 @@ pub fn runtime_scores(
         .iter()
         .map(|cfg| {
             move || -> Result<f64> {
-                let mut policy = QuantPolicy::uniform(cfg.weight_bits, cfg.act_bits);
-                policy.default.granularity = cfg.granularity.clone();
-                policy.weights.estimator = cfg.estimator;
-                let mut ec = EvalConfig::new(policy);
-                ec.calib.estimator = cfg.estimator;
-                experiments::eval_config(ctx, task, params, &ec, seeds)
+                let spec = cfg.to_spec(task.name, seeds);
+                crate::spec::run::run_spec_on(ctx, &spec, task, params)
             }
         })
         .collect();
@@ -267,13 +289,24 @@ pub fn runtime_scores(
     pool.run(jobs)
 }
 
-/// Consolidated machine-readable report.
-pub fn report_json(results: &[SweepResult], threads: usize, total_ms: f64) -> Json {
+/// Consolidated machine-readable report. `d` and `data_seed` identify the
+/// synthetic offline workload — cached rows are only valid against the
+/// same one (see [`parse_results`] / resume in [`cmd_sweep`]).
+pub fn report_json(
+    results: &[SweepResult],
+    threads: usize,
+    total_ms: f64,
+    d: usize,
+    data_seed: u64,
+) -> Json {
     let configs: Vec<Json> = results
         .iter()
         .map(|r| {
             let mut m = BTreeMap::new();
             m.insert("label".to_string(), Json::Str(r.label.clone()));
+            if !r.spec_id.is_empty() {
+                m.insert("spec_id".to_string(), Json::Str(r.spec_id.clone()));
+            }
             m.insert("act_bits".to_string(), Json::Num(r.act_bits as f64));
             m.insert("weight_bits".to_string(), Json::Num(r.weight_bits as f64));
             m.insert("act_mse".to_string(), Json::Num(r.act_mse as f64));
@@ -288,8 +321,112 @@ pub fn report_json(results: &[SweepResult], threads: usize, total_ms: f64) -> Js
     let mut top = BTreeMap::new();
     top.insert("threads".to_string(), Json::Num(threads as f64));
     top.insert("total_ms".to_string(), Json::Num(total_ms));
+    top.insert("d".to_string(), Json::Num(d as f64));
+    top.insert("data_seed".to_string(), Json::Num(data_seed as f64));
     top.insert("configs".to_string(), Json::Arr(configs));
     Json::Obj(top)
+}
+
+/// The offline act/weight MSEs are computed on the synthetic workload, so
+/// a report is only comparable/resumable against the same `--d`/`--seed`.
+/// Reports written before these fields existed never match.
+pub fn workload_matches(j: &Json, d: usize, data_seed: u64) -> bool {
+    let jd = j.opt("d").and_then(|v| v.as_usize().ok());
+    let js = j.opt("data_seed").and_then(|v| v.as_u64().ok());
+    jd == Some(d) && js == Some(data_seed)
+}
+
+/// Parse a consolidated report back into per-`spec_id` results (used for
+/// resume and `--compare`). Entries without a `spec_id` — reports written
+/// before specs existed — are skipped.
+pub fn parse_results(j: &Json) -> Result<BTreeMap<String, SweepResult>> {
+    let mut out = BTreeMap::new();
+    for c in j.get("configs")?.as_arr()? {
+        let Some(id) = c.opt("spec_id") else { continue };
+        let r = SweepResult {
+            label: c.get("label")?.as_str()?.to_string(),
+            spec_id: id.as_str()?.to_string(),
+            act_bits: c.get("act_bits")?.as_usize()? as u32,
+            weight_bits: c.get("weight_bits")?.as_usize()? as u32,
+            act_mse: c.get("act_mse")?.as_f64()? as f32,
+            weight_mse: c.get("weight_mse")?.as_f64()? as f32,
+            score: c.opt("score").map(|v| v.as_f64()).transpose()?,
+            millis: c.get("millis")?.as_f64()?,
+        };
+        out.insert(r.spec_id.clone(), r);
+    }
+    Ok(out)
+}
+
+fn load_cached(path: &Path, d: usize, data_seed: u64) -> Result<BTreeMap<String, SweepResult>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    if !workload_matches(&j, d, data_seed) {
+        // different synthetic workload: the cached offline MSEs don't
+        // transfer, so resume from scratch
+        return Ok(BTreeMap::new());
+    }
+    parse_results(&j)
+}
+
+/// One line of a `--compare` diff.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub label: String,
+    pub spec_id: String,
+    /// "score" when both runs have dev scores, else "act_mse"
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    pub regressed: bool,
+}
+
+/// Diff current results against a baseline report by `spec_id`. A config
+/// regresses when its dev score drops more than `score_tol` points, when
+/// the baseline had a score but the current run could not produce one
+/// (a silently-broken runtime must not pass the gate), or — for
+/// offline-only comparisons — when its activation QDQ MSE grows by more
+/// than the relative `mse_rel_tol`. Configs absent from the baseline are
+/// skipped (they are new, not regressions).
+pub fn compare_to_baseline(
+    current: &[SweepResult],
+    baseline: &BTreeMap<String, SweepResult>,
+    score_tol: f64,
+    mse_rel_tol: f64,
+) -> Vec<CompareRow> {
+    current
+        .iter()
+        .filter_map(|r| {
+            let base = baseline.get(&r.spec_id)?;
+            let row = match (r.score, base.score) {
+                (Some(cur), Some(b)) => CompareRow {
+                    label: r.label.clone(),
+                    spec_id: r.spec_id.clone(),
+                    metric: "score",
+                    baseline: b,
+                    current: cur,
+                    regressed: cur < b - score_tol,
+                },
+                (None, Some(b)) => CompareRow {
+                    label: r.label.clone(),
+                    spec_id: r.spec_id.clone(),
+                    metric: "score-missing",
+                    baseline: b,
+                    current: f64::NAN,
+                    regressed: true,
+                },
+                _ => CompareRow {
+                    label: r.label.clone(),
+                    spec_id: r.spec_id.clone(),
+                    metric: "act_mse",
+                    baseline: base.act_mse as f64,
+                    current: r.act_mse as f64,
+                    regressed: (r.act_mse as f64) > (base.act_mse as f64) * (1.0 + mse_rel_tol),
+                },
+            };
+            Some(row)
+        })
+        .collect()
 }
 
 fn parse_u32_list(s: &str) -> Result<Vec<u32>> {
@@ -312,18 +449,15 @@ fn parse_estimators(s: &str) -> Result<Vec<Estimator>> {
     s.split(',')
         .map(str::trim)
         .filter(|p| !p.is_empty())
-        .map(|p| match p {
-            "current" | "minmax" => Ok(Estimator::CurrentMinMax),
-            "running" | "ema" => Ok(Estimator::RunningMinMax),
-            "mse" => Ok(Estimator::Mse),
-            other => bail!("unknown estimator {other:?} (current|running|mse)"),
-        })
+        .map(parse_estimator)
         .collect()
 }
 
-/// `repro sweep` driver. Runs the offline substrate sweep always, adds
-/// runtime-backed dev scores when artifacts and a checkpoint are present,
-/// and writes one consolidated report (md + csv + json) under results/.
+/// `repro sweep` driver. Runs the offline substrate sweep (skipping
+/// configurations already in `results/sweep.json` by `spec_id` unless
+/// `--fresh`), adds runtime-backed dev scores when artifacts and a
+/// checkpoint are present, writes one consolidated report (md + csv +
+/// json) under results/, and optionally gates on `--compare baseline.json`.
 pub fn cmd_sweep(args: &Args) -> Result<()> {
     let d = args.get_usize("d", 128)?;
     let act_bits = parse_u32_list(args.get_or("bits", "8,4"))?;
@@ -331,56 +465,119 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     let groups = parse_usize_list(args.get_or("groups", "1,8"))?;
     let estimators = parse_estimators(args.get_or("estimators", "current,mse"))?;
     let threads = args.get_usize("threads", 0)?;
+    let seeds = args.get_usize("seeds", 1)?;
+    let task_name = args.get_or("task", "mnli");
     let pool = if threads == 0 { Pool::global().clone() } else { Pool::new(threads) };
 
     let cfgs = grid(d, &act_bits, &weight_bits, &groups, &estimators)?;
     if cfgs.is_empty() {
         bail!("sweep grid is empty");
     }
+    // spec_id keys every cell (policy + calibration + seeds + task);
+    // the report's d/data_seed fields additionally guard the offline
+    // workload, so a cached row is only reused for the identical run
+    let data_seed = args.get_u64("seed", 42)?;
+    let ids: Vec<String> = cfgs
+        .iter()
+        .map(|c| c.to_spec(task_name, seeds).spec_id())
+        .collect();
+
+    let results_dir = std::path::PathBuf::from(args.get_or("results", "results"));
+    let sweep_path = results_dir.join("sweep.json");
+    let cached: BTreeMap<String, SweepResult> = if args.flag("fresh") {
+        BTreeMap::new()
+    } else {
+        load_cached(&sweep_path, d, data_seed).unwrap_or_default()
+    };
+    let mut slots: Vec<Option<SweepResult>> =
+        ids.iter().map(|id| cached.get(id).cloned()).collect();
+    let todo: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    let n_cached = cfgs.len() - todo.len();
     println!(
-        "sweep: {} configurations on {} worker thread(s)",
+        "sweep: {} configurations on {} worker thread(s){}",
         cfgs.len(),
-        pool.threads()
+        pool.threads(),
+        if n_cached > 0 {
+            format!(" ({n_cached} cached by spec_id in {}; --fresh reruns)", sweep_path.display())
+        } else {
+            String::new()
+        }
     );
 
     let t0 = Instant::now();
-    let data = synth_data(d, 64, 8, args.get_u64("seed", 42)?);
-    let mut results = run_offline(&data, &cfgs, &pool)?;
+    let todo_cfgs: Vec<SweepConfig> = todo.iter().map(|&i| cfgs[i].clone()).collect();
+    if !todo_cfgs.is_empty() {
+        let data = synth_data(d, 64, 8, data_seed);
+        let fresh = run_offline(&data, &todo_cfgs, &pool)?;
+        for (&slot, mut r) in todo.iter().zip(fresh) {
+            r.spec_id = ids[slot].clone();
+            slots[slot] = Some(r);
+        }
+    }
 
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let task_name = args.get_or("task", "mnli");
-    if std::path::Path::new(artifacts).join("manifest.json").exists() {
-        let ctx = Ctx::new(
-            artifacts,
-            args.get_or("ckpt", "checkpoints"),
-            args.get_or("results", "results"),
-        )?;
-        let task = ctx.task(task_name)?;
-        match experiments::load_ckpt(&ctx, &task) {
-            Ok(params) => {
-                let seeds = args.get_usize("seeds", 1)?;
-                let scores = runtime_scores(&ctx, &task, &params, &cfgs, seeds, &pool);
-                for (r, s) in results.iter_mut().zip(scores) {
-                    match s {
-                        Ok(v) => r.score = Some(v),
-                        Err(e) => println!("({}: runtime eval failed — {e})", r.label),
+    // Runtime-backed pass over every cell still missing a dev score —
+    // fresh cells and cached offline-only rows alike, so a sweep cached
+    // before artifacts/checkpoints existed gains scores on the next run
+    // instead of being frozen until --fresh.
+    let unscored: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.as_ref().is_some_and(|r| r.score.is_none()))
+        .map(|(i, _)| i)
+        .collect();
+    if !unscored.is_empty() {
+        let artifacts = args.get_or("artifacts", "artifacts");
+        if Path::new(artifacts).join("manifest.json").exists() {
+            let ctx = Ctx::new(
+                artifacts,
+                args.get_or("ckpt", "checkpoints"),
+                args.get_or("results", "results"),
+            )?;
+            let task = ctx.task(task_name)?;
+            match experiments::load_ckpt(&ctx, &task) {
+                Ok(params) => {
+                    let unscored_cfgs: Vec<SweepConfig> =
+                        unscored.iter().map(|&i| cfgs[i].clone()).collect();
+                    let scores =
+                        runtime_scores(&ctx, &task, &params, &unscored_cfgs, seeds, &pool);
+                    for (&slot, s) in unscored.iter().zip(scores) {
+                        match s {
+                            Ok(v) => {
+                                if let Some(r) = slots[slot].as_mut() {
+                                    r.score = Some(v);
+                                }
+                            }
+                            Err(e) => {
+                                println!("({}: runtime eval failed — {e})", cfgs[slot].label())
+                            }
+                        }
                     }
                 }
+                Err(e) => println!("(offline metrics only — {e})"),
             }
-            Err(e) => println!("(offline metrics only — {e})"),
+        } else {
+            println!("(artifacts/manifest.json absent; offline substrate metrics only)");
         }
-    } else {
-        println!("(artifacts/manifest.json absent; offline substrate metrics only)");
     }
+    let results: Vec<SweepResult> = slots
+        .into_iter()
+        .map(|s| s.ok_or_else(|| anyhow!("sweep slot left unfilled")))
+        .collect::<Result<_>>()?;
     let total_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let mut table = Table::new(
         &format!("Quantization sweep ({} configs, {} threads)", results.len(), pool.threads()),
-        &["config", "act MSE", "weight MSE", "score", "ms"],
+        &["config", "spec_id", "act MSE", "weight MSE", "score", "ms"],
     );
     for r in &results {
         table.row(vec![
             r.label.clone(),
+            r.spec_id.clone(),
             format!("{:.3e}", r.act_mse),
             format!("{:.3e}", r.weight_mse),
             r.score.map(fmt_score).unwrap_or_else(|| "-".to_string()),
@@ -388,15 +585,64 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", table.to_console());
-    println!("sweep total: {total_ms:.0} ms");
+    println!("sweep total: {total_ms:.0} ms ({} run, {n_cached} cached)", todo.len());
 
-    let results_dir = std::path::PathBuf::from(args.get_or("results", "results"));
     write_file(results_dir.join("sweep.md"), &table.to_markdown())?;
     write_file(results_dir.join("sweep.csv"), &table.to_csv())?;
+    // the JSON report keeps cached rows from *other* grids/tasks too, so
+    // successive `repro sweep --task ...` invocations accumulate one
+    // resumable result store instead of overwriting each other
+    let mut store = results.clone();
+    for (id, r) in &cached {
+        if !ids.contains(id) {
+            store.push(r.clone());
+        }
+    }
     write_file(
-        results_dir.join("sweep.json"),
-        &report_json(&results, pool.threads(), total_ms).to_string(),
+        &sweep_path,
+        &report_json(&store, pool.threads(), total_ms, d, data_seed).to_string(),
     )?;
+
+    if let Some(baseline_path) = args.get("compare") {
+        let score_tol = args.get_f32("tolerance", 0.5)? as f64;
+        let mse_rel_tol = args.get_f32("mse-tolerance", 0.10)? as f64;
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow!("cannot read baseline {baseline_path:?}: {e}"))?;
+        let bj = Json::parse(&text)?;
+        if !workload_matches(&bj, d, data_seed) {
+            bail!(
+                "baseline {baseline_path} was produced with a different offline \
+                 workload (--d/--seed) — compare like-for-like sweeps"
+            );
+        }
+        let baseline = parse_results(&bj)?;
+        let rows = compare_to_baseline(&results, &baseline, score_tol, mse_rel_tol);
+        let mut diff = Table::new(
+            &format!("Sweep vs baseline {baseline_path} (tol {score_tol} pts / {mse_rel_tol} rel MSE)"),
+            &["config", "metric", "baseline", "current", "delta", "status"],
+        );
+        for row in &rows {
+            diff.row(vec![
+                row.label.clone(),
+                row.metric.to_string(),
+                format!("{:.4}", row.baseline),
+                format!("{:.4}", row.current),
+                format!("{:+.4}", row.current - row.baseline),
+                if row.regressed { "REGRESSED".to_string() } else { "ok".to_string() },
+            ]);
+        }
+        print!("{}", diff.to_console());
+        write_file(results_dir.join("sweep_compare.md"), &diff.to_markdown())?;
+        let unmatched = results.iter().filter(|r| !baseline.contains_key(&r.spec_id)).count();
+        if unmatched > 0 {
+            println!("({unmatched} config(s) not in baseline — skipped)");
+        }
+        let regressions = rows.iter().filter(|r| r.regressed).count();
+        if regressions > 0 {
+            bail!("{regressions} regression(s) vs baseline {baseline_path}");
+        }
+        println!("no regressions vs baseline {baseline_path} ({} compared)", rows.len());
+    }
     Ok(())
 }
 
@@ -410,6 +656,8 @@ fn assert_shareable() {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+    use crate::model::qconfig::QuantPolicy;
 
     #[test]
     fn grid_is_full_cross_product() {
@@ -472,11 +720,55 @@ mod tests {
     }
 
     #[test]
+    fn to_spec_reproduces_the_hard_coded_policy() {
+        // the exact QuantPolicy the pre-spec runtime pass built
+        let cfg = SweepConfig {
+            act_bits: 4,
+            weight_bits: 8,
+            granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+            estimator: Estimator::Mse,
+        };
+        let spec = cfg.to_spec("mnli", 2);
+        let mut old = QuantPolicy::uniform(8, 4);
+        old.default.granularity = Granularity::PerEmbeddingGroup { k: 8, permute: true };
+        old.weights.estimator = Estimator::Mse;
+        assert_eq!(spec.policy.resolve(&tiny_model_info()), old);
+        assert_eq!(spec.calib.estimator, Estimator::Mse);
+        assert_eq!(spec.seeds, 2);
+        assert_eq!(spec.tasks, vec!["mnli".to_string()]);
+        assert_eq!(spec.name, cfg.label());
+    }
+
+    #[test]
+    fn spec_ids_key_the_whole_cell() {
+        let cfgs = grid(
+            128,
+            &[8, 4],
+            &[8],
+            &[1, 8],
+            &[Estimator::CurrentMinMax, Estimator::Mse],
+        )
+        .unwrap();
+        let mut ids: Vec<String> =
+            cfgs.iter().map(|c| c.to_spec("mnli", 1).spec_id()).collect();
+        let before = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "grid cells must hash distinctly");
+        // task and seed count are part of the identity
+        let c = &cfgs[0];
+        assert_ne!(c.to_spec("mnli", 1).spec_id(), c.to_spec("rte", 1).spec_id());
+        assert_ne!(c.to_spec("mnli", 1).spec_id(), c.to_spec("mnli", 3).spec_id());
+        // and re-hashing is stable
+        assert_eq!(c.to_spec("mnli", 1).spec_id(), c.to_spec("mnli", 1).spec_id());
+    }
+
+    #[test]
     fn report_json_roundtrips() {
         let data = synth_data(32, 16, 2, 1);
         let cfgs = grid(32, &[8], &[4], &[1], &[Estimator::Mse]).unwrap();
         let res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
-        let j = report_json(&res, 4, 12.5);
+        let j = report_json(&res, 4, 12.5, 32, 1);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("threads").unwrap().as_usize().unwrap(), 4);
         let arr = parsed.get("configs").unwrap().as_arr().unwrap();
@@ -485,5 +777,83 @@ mod tests {
             arr[0].get("label").unwrap().as_str().unwrap(),
             res[0].label
         );
+        // the offline workload guards cache reuse across --d/--seed
+        assert!(workload_matches(&parsed, 32, 1));
+        assert!(!workload_matches(&parsed, 64, 1));
+        assert!(!workload_matches(&parsed, 32, 2));
+        // pre-spec reports (no workload fields) never match
+        assert!(!workload_matches(&Json::parse("{}").unwrap(), 32, 1));
+    }
+
+    #[test]
+    fn cached_results_roundtrip_by_spec_id() {
+        let data = synth_data(32, 16, 2, 1);
+        let cfgs = grid(32, &[8, 4], &[4], &[1], &[Estimator::Mse]).unwrap();
+        let mut res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
+        for (r, c) in res.iter_mut().zip(&cfgs) {
+            r.spec_id = c.to_spec("mnli", 1).spec_id();
+        }
+        res[0].score = Some(81.25);
+        let j = report_json(&res, 2, 5.0, 32, 1);
+        let cached = parse_results(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(cached.len(), 2);
+        let r0 = &cached[&res[0].spec_id];
+        assert_eq!(r0.label, res[0].label);
+        assert_eq!(r0.score, Some(81.25));
+        assert_eq!(r0.act_mse, res[0].act_mse);
+        assert_eq!(cached[&res[1].spec_id].score, None);
+        // entries without spec_id (pre-spec reports) are skipped
+        let legacy = report_json(
+            &[SweepResult { spec_id: String::new(), ..res[0].clone() }],
+            1,
+            1.0,
+            32,
+            1,
+        );
+        assert!(parse_results(&Json::parse(&legacy.to_string()).unwrap())
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn compare_flags_score_and_mse_regressions() {
+        let mk = |id: &str, score: Option<f64>, act_mse: f32| SweepResult {
+            label: format!("cfg-{id}"),
+            spec_id: id.to_string(),
+            act_bits: 8,
+            weight_bits: 8,
+            act_mse,
+            weight_mse: 1e-4,
+            score,
+            millis: 1.0,
+        };
+        let baseline: BTreeMap<String, SweepResult> = [
+            ("a".to_string(), mk("a", Some(80.0), 1e-3)),
+            ("b".to_string(), mk("b", Some(80.0), 1e-3)),
+            ("c".to_string(), mk("c", None, 1e-3)),
+            ("d".to_string(), mk("d", None, 1e-3)),
+            ("f".to_string(), mk("f", Some(80.0), 1e-3)),
+        ]
+        .into_iter()
+        .collect();
+        let current = vec![
+            mk("a", Some(79.8), 1e-3), // within tolerance
+            mk("b", Some(78.0), 1e-3), // score regression
+            mk("c", None, 1.04e-3),    // within relative MSE tolerance
+            mk("d", None, 2e-3),       // MSE regression
+            mk("e", Some(50.0), 1e-3), // not in baseline: skipped
+            mk("f", None, 1e-3),       // baseline scored, current didn't
+        ];
+        let rows = compare_to_baseline(&current, &baseline, 0.5, 0.10);
+        assert_eq!(rows.len(), 5);
+        assert!(!rows[0].regressed);
+        assert!(rows[1].regressed);
+        assert_eq!(rows[1].metric, "score");
+        assert!(!rows[2].regressed);
+        assert!(rows[3].regressed);
+        assert_eq!(rows[3].metric, "act_mse");
+        // a lost score must fail the gate, not silently downgrade to MSE
+        assert!(rows[4].regressed);
+        assert_eq!(rows[4].metric, "score-missing");
     }
 }

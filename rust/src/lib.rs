@@ -23,5 +23,6 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod spec;
 pub mod tensor;
 pub mod util;

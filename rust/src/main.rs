@@ -7,10 +7,15 @@
 //!     repro fig2|fig5|fig6|fig9
 //!     repro hparams                  (appendix Tables 8-11)
 //!     repro eval --task mnli
+//!     repro run --spec FILE.json | --preset NAME [--dump-spec]
+//!                                    (run any quantization spec; presets
+//!                                    name the paper's configurations)
 //!     repro smoke                    (runtime sanity: load + run artifacts)
 //!     repro sweep [--bits 8,4] [--wbits 8] [--groups 1,8] [--threads N]
-//!                                    (parallel config sweep; works without
-//!                                    artifacts — see coordinator::sweep)
+//!                 [--fresh] [--compare baseline.json]
+//!                                    (parallel config sweep, resumable by
+//!                                    spec_id; works without artifacts —
+//!                                    see coordinator::sweep)
 //!
 //! Common flags: --artifacts DIR (default artifacts), --ckpt DIR
 //! (default checkpoints), --results DIR (default results).
@@ -19,7 +24,11 @@ use anyhow::{bail, Result};
 
 use tq::coordinator::experiments::{self, ExpOpts};
 use tq::coordinator::Ctx;
+use tq::report::{fmt_score, write_file, Table};
+use tq::spec::run::run_spec;
+use tq::spec::{presets, QuantSpec};
 use tq::util::cli::Args;
+use tq::util::json::Json;
 
 fn main() -> Result<()> {
     let args = Args::parse_env()?;
@@ -27,11 +36,18 @@ fn main() -> Result<()> {
         print_help();
         return Ok(());
     }
-    // `sweep` manages its own (optional) runtime so it works without
-    // artifacts; everything else needs the Ctx up front.
+    // `sweep` and `run` manage their own (optional) runtime so they work
+    // without artifacts (offline sweep, `run --dump-spec`); everything
+    // else needs the Ctx up front.
     if args.subcommand == "sweep" {
         let t0 = std::time::Instant::now();
         tq::coordinator::sweep::cmd_sweep(&args)?;
+        eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
+        return Ok(());
+    }
+    if args.subcommand == "run" {
+        let t0 = std::time::Instant::now();
+        cmd_run(&args)?;
         eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
         return Ok(());
     }
@@ -77,6 +93,85 @@ fn main() -> Result<()> {
         }
     }
     eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
+    Ok(())
+}
+
+/// `repro run`: execute one serialized quantization spec end-to-end.
+///
+/// The spec comes from `--spec FILE.json` or `--preset NAME`; `--tasks`
+/// and `--seeds` override the spec's own eval targets / seed count.
+/// `--dump-spec` prints the canonical JSON to stdout (and only the JSON,
+/// so it can be redirected into a file and fed back via `--spec`) without
+/// running anything.
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut spec = if let Some(path) = args.get("spec") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read spec {path:?}: {e}"))?;
+        QuantSpec::parse(&text)?
+    } else if let Some(name) = args.get("preset") {
+        presets::preset(name)?
+    } else {
+        bail!(
+            "repro run needs --spec FILE.json or --preset NAME\npresets:\n{}",
+            presets::PRESETS
+                .iter()
+                .map(|(n, d)| format!("  {n:<18} {d}"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    };
+    if let Some(t) = args.get("tasks").or_else(|| args.get("task")) {
+        spec.tasks = t
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+    }
+    if let Some(s) = args.get("seeds") {
+        spec.seeds = s.parse()?;
+        if spec.seeds == 0 {
+            // keep the dump/run round-trip closed: from_json rejects 0
+            bail!("--seeds must be >= 1");
+        }
+    }
+    if args.flag("dump-spec") {
+        println!("{}", spec.to_json());
+        return Ok(());
+    }
+
+    let ctx = Ctx::new(
+        args.get_or("artifacts", "artifacts"),
+        args.get_or("ckpt", "checkpoints"),
+        args.get_or("results", "results"),
+    )?;
+    let report = run_spec(&ctx, &spec)?;
+    let mut header: Vec<&str> = vec!["spec"];
+    header.extend(report.tasks.iter().map(String::as_str));
+    header.push("GLUE");
+    let mut table = Table::new(
+        &format!("spec {} ({})", spec.display_name(), report.spec_id),
+        &header,
+    );
+    let mut row = vec![spec.display_name()];
+    row.extend(report.scores.iter().map(|&s| fmt_score(s)));
+    row.push(fmt_score(report.glue));
+    table.row(row);
+    print!("{}", table.to_console());
+
+    let results_dir = std::path::PathBuf::from(args.get_or("results", "results"));
+    write_file(
+        results_dir.join(format!("run_{}.md", report.spec_id)),
+        &table.to_markdown(),
+    )?;
+    let mut out = report.to_json();
+    if let Json::Obj(m) = &mut out {
+        m.insert("spec".to_string(), spec.to_json());
+    }
+    write_file(
+        results_dir.join(format!("run_{}.json", report.spec_id)),
+        &out.to_string(),
+    )?;
     Ok(())
 }
 
@@ -141,9 +236,16 @@ fn print_help() {
          Transformer Quantization' (EMNLP 2021) reproduction\n\n\
          subcommands:\n  finetune [--tasks a,b] [--epochs N] [--lr F]\n  \
          table1 table2 table4 table5 table6 table7 [--detailed] table12\n  \
-         fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  smoke\n  \
+         fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  \
+         run --spec FILE.json | --preset NAME [--tasks a,b] [--seeds N] \
+         [--dump-spec]\n  smoke\n  \
          sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
-         [--estimators current,mse] [--threads N]\n\n\
-         flags: --artifacts DIR --ckpt DIR --results DIR --seeds N --quick"
+         [--estimators current,mse] [--threads N] [--task NAME] [--seeds N] \
+         [--fresh] [--compare baseline.json] [--tolerance PTS]\n\n\
+         `run` executes one serialized QuantSpec (see DESIGN.md §7); \
+         `run --preset NAME --dump-spec > f.json` writes a starting point.\n\
+         presets: {}\n\n\
+         flags: --artifacts DIR --ckpt DIR --results DIR --seeds N --quick",
+        presets::preset_names().join(" ")
     );
 }

@@ -21,7 +21,7 @@ use crate::quant::estimators::RangeTracker;
 use crate::model::manifest::ModelInfo;
 
 /// Per-site activation quantizer configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SiteCfg {
     pub bits: u32,
     pub granularity: Granularity,
@@ -35,7 +35,7 @@ impl Default for SiteCfg {
 }
 
 /// Weight quantizer configuration (applied Rust-side on parameter tensors).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WeightCfg {
     pub bits: u32,
     pub estimator: Estimator,
@@ -51,7 +51,7 @@ impl Default for WeightCfg {
 }
 
 /// Full activation policy over a model's sites.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QuantPolicy {
     /// default config for sites not in `overrides`
     pub default: SiteCfg,

@@ -1,0 +1,736 @@
+//! Declarative quantization specs: every paper configuration as *data*.
+//!
+//! A [`QuantSpec`] captures everything that defines one quantization
+//! experiment — the activation/weight policy (including PEG, mixed
+//! precision and per-channel groups), the range-estimator and calibration
+//! settings, AdaRound knobs, the number of calibration seeds and the eval
+//! targets — in a fully serializable form:
+//!
+//! * JSON round-trip via [`crate::util::json::Json`] (`to_json` /
+//!   `from_json`; parse → serialize → parse is the identity),
+//! * a stable content hash [`QuantSpec::spec_id`] (FNV-1a 64 over the
+//!   canonical JSON, label excluded) that keys resumable sweeps and
+//!   baseline diffs,
+//! * a preset registry ([`presets`]) naming the paper's configurations
+//!   (`w8a8`, `mixed_precision`, `peg_k8_permute`, …),
+//! * one pipeline ([`run::run_spec`]) that owns calibrate → weight-QDQ →
+//!   assemble → eval for every driver (`repro table*`, `repro sweep`,
+//!   `repro run --spec FILE.json`).
+//!
+//! Site overrides are declarative [`SiteRule`]s (exact name, layer-family
+//! suffix, or last-N-layers family) resolved against a concrete
+//! [`ModelInfo`] into the imperative [`QuantPolicy`] the assembly layer
+//! consumes — so one spec file applies to any model topology.
+
+pub mod presets;
+pub mod run;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::ModelInfo;
+use crate::model::qconfig::{QuantPolicy, SiteCfg, WeightCfg};
+use crate::quant::{Estimator, Granularity};
+use crate::util::json::Json;
+
+/// How a [`SiteRule`] picks activation-quantizer sites.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SiteSelector {
+    /// One site by exact name (e.g. `"head_out"`).
+    Exact(String),
+    /// Every site whose name ends with the suffix, across layers
+    /// (e.g. `"res2_sum"` hits `layer0.res2_sum` .. `layerN.res2_sum`).
+    Family(String),
+    /// The family restricted to the last `n` layers — resolves to
+    /// `layer{L-n}.{suffix}` .. `layer{L-1}.{suffix}` (Table 2's
+    /// "last 2 layers only" row).
+    FamilyLastLayers { suffix: String, n: usize },
+}
+
+/// One site override: selector + the configuration it installs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteRule {
+    pub select: SiteSelector,
+    pub cfg: SiteCfg,
+}
+
+/// Serializable activation + weight policy. Resolved against a
+/// [`ModelInfo`] into the [`QuantPolicy`] the assembly layer consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    /// default config for sites not hit by any rule
+    pub default_site: SiteCfg,
+    /// applied in order; later rules overwrite earlier ones per site
+    pub rules: Vec<SiteRule>,
+    pub weights: WeightCfg,
+    /// per-weight-name overrides (e.g. 2-bit token embeddings)
+    pub weight_overrides: BTreeMap<String, WeightCfg>,
+}
+
+impl PolicySpec {
+    /// Everything FP32 (baseline).
+    pub fn fp32() -> PolicySpec {
+        PolicySpec {
+            default_site: SiteCfg { enabled: false, ..Default::default() },
+            rules: Vec::new(),
+            weights: WeightCfg { enabled: false, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    /// Uniform W{wb}A{ab} per-tensor policy (the paper's W8A8 baseline).
+    pub fn uniform(wb: u32, ab: u32) -> PolicySpec {
+        PolicySpec {
+            default_site: SiteCfg { bits: ab, ..Default::default() },
+            rules: Vec::new(),
+            weights: WeightCfg { bits: wb, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    /// Activations-only quantization (weights stay FP32) — Table 1 W32A8.
+    pub fn acts_only(ab: u32) -> PolicySpec {
+        PolicySpec {
+            default_site: SiteCfg { bits: ab, ..Default::default() },
+            rules: Vec::new(),
+            weights: WeightCfg { enabled: false, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    /// Weights-only quantization (activations stay FP32) — Table 1 W8A32.
+    pub fn weights_only(wb: u32) -> PolicySpec {
+        PolicySpec {
+            default_site: SiteCfg { enabled: false, ..Default::default() },
+            rules: Vec::new(),
+            weights: WeightCfg { bits: wb, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    /// Compile the declarative rules into the imperative per-site policy
+    /// for one concrete model topology.
+    pub fn resolve(&self, info: &ModelInfo) -> QuantPolicy {
+        let mut overrides = BTreeMap::new();
+        for rule in &self.rules {
+            match &rule.select {
+                SiteSelector::Exact(name) => {
+                    overrides.insert(name.clone(), rule.cfg.clone());
+                }
+                SiteSelector::Family(suffix) => {
+                    for s in &info.sites {
+                        if s.name.ends_with(suffix.as_str()) {
+                            overrides.insert(s.name.clone(), rule.cfg.clone());
+                        }
+                    }
+                }
+                SiteSelector::FamilyLastLayers { suffix, n } => {
+                    let layers = info.config.layers;
+                    for i in layers.saturating_sub(*n)..layers {
+                        overrides.insert(format!("layer{i}.{suffix}"), rule.cfg.clone());
+                    }
+                }
+            }
+        }
+        QuantPolicy {
+            default: self.default_site.clone(),
+            overrides,
+            weights: self.weights.clone(),
+            weight_overrides: self.weight_overrides.clone(),
+        }
+    }
+}
+
+/// Calibration settings (paper §2 / Appendix B.2), mirroring
+/// `coordinator::calibrate::CalibCfg` in serializable form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibSpec {
+    pub estimator: Estimator,
+    /// sequences per estimator observation
+    pub batch_size: usize,
+    /// number of observations
+    pub num_batches: usize,
+    pub collect_grams: bool,
+    /// base data seed; seed index `i` of a multi-seed run calibrates with
+    /// `seed + 97 * i`
+    pub seed: u64,
+}
+
+impl Default for CalibSpec {
+    fn default() -> Self {
+        // paper Appendix B.2: running min-max with bs=1, nb=16 is the most
+        // common best configuration (same default as CalibCfg)
+        CalibSpec {
+            estimator: Estimator::RunningMinMax,
+            batch_size: 1,
+            num_batches: 16,
+            collect_grams: false,
+            seed: 0,
+        }
+    }
+}
+
+/// AdaRound knobs (paper Table 7), mirroring
+/// `coordinator::weights::AdaRoundOpts` in serializable form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaRoundSpec {
+    pub enabled: bool,
+    pub iters: usize,
+    pub lr: f32,
+}
+
+impl Default for AdaRoundSpec {
+    fn default() -> Self {
+        AdaRoundSpec { enabled: false, iters: 1000, lr: 1e-2 }
+    }
+}
+
+/// One fully-described quantization experiment. See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    /// human label (presets use their registry name); NOT part of
+    /// [`QuantSpec::spec_id`], so renaming never invalidates cached results
+    pub name: String,
+    pub policy: PolicySpec,
+    pub calib: CalibSpec,
+    pub adaround: AdaRoundSpec,
+    /// calibration seeds; the reported score is the median over seeds
+    pub seeds: usize,
+    /// eval targets by task name; empty = all benchmark tasks
+    pub tasks: Vec<String>,
+}
+
+impl QuantSpec {
+    pub fn new(name: &str, policy: PolicySpec) -> QuantSpec {
+        QuantSpec {
+            name: name.to_string(),
+            policy,
+            calib: CalibSpec::default(),
+            adaround: AdaRoundSpec::default(),
+            seeds: 3,
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Append one site rule (builder style).
+    pub fn with_rule(mut self, select: SiteSelector, cfg: SiteCfg) -> QuantSpec {
+        self.policy.rules.push(SiteRule { select, cfg });
+        self
+    }
+
+    /// Override every site of a layer family (name suffix match).
+    pub fn with_family(self, suffix: &str, cfg: SiteCfg) -> QuantSpec {
+        self.with_rule(SiteSelector::Family(suffix.to_string()), cfg)
+    }
+
+    /// Override one site by exact name.
+    pub fn with_exact(self, name: &str, cfg: SiteCfg) -> QuantSpec {
+        self.with_rule(SiteSelector::Exact(name.to_string()), cfg)
+    }
+
+    pub fn with_seeds(mut self, seeds: usize) -> QuantSpec {
+        self.seeds = seeds;
+        self
+    }
+
+    /// Relabel the spec (the label is cosmetic — see [`QuantSpec::spec_id`]).
+    pub fn named(mut self, name: &str) -> QuantSpec {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Restrict the eval targets.
+    pub fn with_tasks(mut self, tasks: &[String]) -> QuantSpec {
+        self.tasks = tasks.to_vec();
+        self
+    }
+
+    /// True when the spec quantizes nothing anywhere — `run_spec` then
+    /// skips calibration entirely (single FP32 eval, like the old
+    /// hard-coded FP32 rows).
+    pub fn is_fp32(&self) -> bool {
+        !self.policy.default_site.enabled
+            && self.policy.rules.iter().all(|r| !r.cfg.enabled)
+            && !self.policy.weights.enabled
+            && self.policy.weight_overrides.values().all(|w| !w.enabled)
+    }
+
+    /// Label for progress lines and tables: the name, else a spec-id
+    /// prefix.
+    pub fn display_name(&self) -> String {
+        if self.name.is_empty() {
+            format!("spec-{}", &self.spec_id()[..8])
+        } else {
+            self.name.clone()
+        }
+    }
+
+    /// Stable content hash of the canonical JSON with the cosmetic `name`
+    /// removed. Identical across serialization round-trips and JSON key
+    /// order (objects serialize in sorted key order).
+    pub fn spec_id(&self) -> String {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("name");
+        }
+        format!("{:016x}", fnv1a64(j.to_string().as_bytes()))
+    }
+
+    // -- JSON --------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("policy", policy_to_json(&self.policy)),
+            ("calib", calib_to_json(&self.calib)),
+            ("adaround", adaround_to_json(&self.adaround)),
+            ("seeds", Json::Num(self.seeds as f64)),
+            (
+                "tasks",
+                Json::Arr(self.tasks.iter().map(|t| Json::Str(t.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QuantSpec> {
+        let seeds = j.get("seeds")?.as_usize()?;
+        if seeds == 0 {
+            bail!("spec: seeds must be >= 1");
+        }
+        Ok(QuantSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            policy: policy_from_json(j.get("policy")?)?,
+            calib: calib_from_json(j.get("calib")?)?,
+            adaround: adaround_from_json(j.get("adaround")?)?,
+            seeds,
+            tasks: j
+                .get("tasks")?
+                .as_arr()?
+                .iter()
+                .map(|t| Ok(t.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Parse a spec from JSON text (e.g. a `--spec` file).
+    pub fn parse(text: &str) -> Result<QuantSpec> {
+        QuantSpec::from_json(&Json::parse(text)?)
+    }
+}
+
+// -- enum <-> string codecs ---------------------------------------------
+
+pub fn estimator_name(e: Estimator) -> &'static str {
+    match e {
+        Estimator::CurrentMinMax => "current",
+        Estimator::RunningMinMax => "running",
+        Estimator::Mse => "mse",
+    }
+}
+
+pub fn parse_estimator(s: &str) -> Result<Estimator> {
+    match s {
+        "current" | "minmax" => Ok(Estimator::CurrentMinMax),
+        "running" | "ema" => Ok(Estimator::RunningMinMax),
+        "mse" => Ok(Estimator::Mse),
+        other => bail!("unknown estimator {other:?} (current|running|mse)"),
+    }
+}
+
+pub fn granularity_name(g: &Granularity) -> String {
+    match g {
+        Granularity::PerTensor => "per_tensor".to_string(),
+        Granularity::PerEmbedding => "per_embedding".to_string(),
+        Granularity::PerEmbeddingGroup { k, permute } => {
+            if *permute {
+                format!("group:{k}:permute")
+            } else {
+                format!("group:{k}")
+            }
+        }
+    }
+}
+
+pub fn parse_granularity(s: &str) -> Result<Granularity> {
+    match s {
+        "per_tensor" => return Ok(Granularity::PerTensor),
+        "per_embedding" => return Ok(Granularity::PerEmbedding),
+        _ => {}
+    }
+    if let Some(rest) = s.strip_prefix("group:") {
+        let (k_str, permute) = match rest.strip_suffix(":permute") {
+            Some(k) => (k, true),
+            None => (rest, false),
+        };
+        let k: usize = k_str
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad group count in granularity {s:?}"))?;
+        if k < 2 {
+            bail!("granularity {s:?}: group count must be >= 2");
+        }
+        return Ok(Granularity::PerEmbeddingGroup { k, permute });
+    }
+    bail!("unknown granularity {s:?} (per_tensor|per_embedding|group:K[:permute])")
+}
+
+fn check_bits(bits: usize, what: &str) -> Result<u32> {
+    if !(2..=32).contains(&bits) {
+        bail!("{what}: bits must be in 2..=32, got {bits}");
+    }
+    Ok(bits as u32)
+}
+
+// -- component codecs ----------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn site_cfg_to_json(c: &SiteCfg) -> Json {
+    obj(vec![
+        ("bits", Json::Num(c.bits as f64)),
+        ("granularity", Json::Str(granularity_name(&c.granularity))),
+        ("enabled", Json::Bool(c.enabled)),
+    ])
+}
+
+fn site_cfg_from_json(j: &Json) -> Result<SiteCfg> {
+    Ok(SiteCfg {
+        bits: check_bits(j.get("bits")?.as_usize()?, "site cfg")?,
+        granularity: parse_granularity(j.get("granularity")?.as_str()?)?,
+        enabled: j.get("enabled")?.as_bool()?,
+    })
+}
+
+fn weight_cfg_to_json(c: &WeightCfg) -> Json {
+    obj(vec![
+        ("bits", Json::Num(c.bits as f64)),
+        ("estimator", Json::Str(estimator_name(c.estimator).to_string())),
+        (
+            "per_channel_groups",
+            match c.per_channel_groups {
+                Some(g) => Json::Num(g as f64),
+                None => Json::Null,
+            },
+        ),
+        ("enabled", Json::Bool(c.enabled)),
+    ])
+}
+
+fn weight_cfg_from_json(j: &Json) -> Result<WeightCfg> {
+    let groups = match j.get("per_channel_groups")? {
+        Json::Null => None,
+        v => Some(v.as_usize()?),
+    };
+    Ok(WeightCfg {
+        bits: check_bits(j.get("bits")?.as_usize()?, "weight cfg")?,
+        estimator: parse_estimator(j.get("estimator")?.as_str()?)?,
+        per_channel_groups: groups,
+        enabled: j.get("enabled")?.as_bool()?,
+    })
+}
+
+fn selector_to_json(s: &SiteSelector) -> Json {
+    match s {
+        SiteSelector::Exact(name) => obj(vec![("exact", Json::Str(name.clone()))]),
+        SiteSelector::Family(suffix) => obj(vec![("family", Json::Str(suffix.clone()))]),
+        SiteSelector::FamilyLastLayers { suffix, n } => obj(vec![(
+            "family_last_layers",
+            obj(vec![
+                ("suffix", Json::Str(suffix.clone())),
+                ("n", Json::Num(*n as f64)),
+            ]),
+        )]),
+    }
+}
+
+fn selector_from_json(j: &Json) -> Result<SiteSelector> {
+    if let Some(v) = j.opt("exact") {
+        return Ok(SiteSelector::Exact(v.as_str()?.to_string()));
+    }
+    if let Some(v) = j.opt("family") {
+        return Ok(SiteSelector::Family(v.as_str()?.to_string()));
+    }
+    if let Some(v) = j.opt("family_last_layers") {
+        return Ok(SiteSelector::FamilyLastLayers {
+            suffix: v.get("suffix")?.as_str()?.to_string(),
+            n: v.get("n")?.as_usize()?,
+        });
+    }
+    bail!("site rule needs one of: exact, family, family_last_layers")
+}
+
+fn policy_to_json(p: &PolicySpec) -> Json {
+    obj(vec![
+        ("default_site", site_cfg_to_json(&p.default_site)),
+        (
+            "rules",
+            Json::Arr(
+                p.rules
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("select", selector_to_json(&r.select)),
+                            ("cfg", site_cfg_to_json(&r.cfg)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("weights", weight_cfg_to_json(&p.weights)),
+        (
+            "weight_overrides",
+            Json::Obj(
+                p.weight_overrides
+                    .iter()
+                    .map(|(k, v)| (k.clone(), weight_cfg_to_json(v)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn policy_from_json(j: &Json) -> Result<PolicySpec> {
+    Ok(PolicySpec {
+        default_site: site_cfg_from_json(j.get("default_site")?)?,
+        rules: j
+            .get("rules")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(SiteRule {
+                    select: selector_from_json(r.get("select")?)?,
+                    cfg: site_cfg_from_json(r.get("cfg")?)?,
+                })
+            })
+            .collect::<Result<_>>()?,
+        weights: weight_cfg_from_json(j.get("weights")?)?,
+        weight_overrides: j
+            .get("weight_overrides")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), weight_cfg_from_json(v)?)))
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn calib_to_json(c: &CalibSpec) -> Json {
+    obj(vec![
+        ("estimator", Json::Str(estimator_name(c.estimator).to_string())),
+        ("batch_size", Json::Num(c.batch_size as f64)),
+        ("num_batches", Json::Num(c.num_batches as f64)),
+        ("collect_grams", Json::Bool(c.collect_grams)),
+        ("seed", Json::Num(c.seed as f64)),
+    ])
+}
+
+fn calib_from_json(j: &Json) -> Result<CalibSpec> {
+    Ok(CalibSpec {
+        estimator: parse_estimator(j.get("estimator")?.as_str()?)?,
+        batch_size: j.get("batch_size")?.as_usize()?.max(1),
+        num_batches: j.get("num_batches")?.as_usize()?.max(1),
+        collect_grams: j.get("collect_grams")?.as_bool()?,
+        seed: j.get("seed")?.as_u64()?,
+    })
+}
+
+fn adaround_to_json(a: &AdaRoundSpec) -> Json {
+    obj(vec![
+        ("enabled", Json::Bool(a.enabled)),
+        ("iters", Json::Num(a.iters as f64)),
+        ("lr", Json::Num(a.lr as f64)),
+    ])
+}
+
+fn adaround_from_json(j: &Json) -> Result<AdaRoundSpec> {
+    Ok(AdaRoundSpec {
+        enabled: j.get("enabled")?.as_bool()?,
+        iters: j.get("iters")?.as_usize()?,
+        lr: j.get("lr")?.as_f64()? as f32,
+    })
+}
+
+/// FNV-1a 64-bit — tiny, stable, dependency-free content hash.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+
+    fn kitchen_sink() -> QuantSpec {
+        let mut spec = QuantSpec::new("sink", PolicySpec::uniform(4, 8))
+            .with_family(
+                "res2_sum",
+                SiteCfg {
+                    bits: 8,
+                    granularity: Granularity::PerEmbeddingGroup { k: 4, permute: true },
+                    enabled: true,
+                },
+            )
+            .with_exact("head_out", SiteCfg { bits: 16, ..Default::default() })
+            .with_rule(
+                SiteSelector::FamilyLastLayers { suffix: "ffn_out".into(), n: 2 },
+                SiteCfg { enabled: false, ..Default::default() },
+            )
+            .with_seeds(5);
+        spec.policy.weights.estimator = Estimator::Mse;
+        spec.policy.weights.per_channel_groups = Some(16);
+        spec.policy.weight_overrides.insert(
+            "embed.tok".into(),
+            WeightCfg { bits: 2, estimator: Estimator::Mse, ..Default::default() },
+        );
+        spec.calib = CalibSpec {
+            estimator: Estimator::CurrentMinMax,
+            batch_size: 2,
+            num_batches: 4,
+            collect_grams: true,
+            seed: 7,
+        };
+        spec.adaround = AdaRoundSpec { enabled: true, iters: 250, lr: 2e-2 };
+        spec.tasks = vec!["mnli".into(), "rte".into()];
+        spec
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let spec = kitchen_sink();
+        let text = spec.to_json().to_string();
+        let back = QuantSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        // canonical serialization is a fixed point
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.spec_id(), spec.spec_id());
+    }
+
+    #[test]
+    fn spec_id_ignores_key_order_and_name() {
+        let spec = kitchen_sink();
+        // scrambled key order parses to the same spec (objects are maps)
+        let scrambled = format!(
+            r#"{{"tasks": ["mnli", "rte"], "seeds": 5, "name": "sink",
+                "adaround": {}, "calib": {}, "policy": {}}}"#,
+            adaround_to_json(&spec.adaround),
+            calib_to_json(&spec.calib),
+            policy_to_json(&spec.policy),
+        );
+        let back = QuantSpec::parse(&scrambled).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.spec_id(), spec.spec_id());
+
+        // the label is cosmetic
+        let mut renamed = spec.clone();
+        renamed.name = "something else".into();
+        assert_eq!(renamed.spec_id(), spec.spec_id());
+
+        // ... but the policy is not
+        let mut changed = spec.clone();
+        changed.policy.weights.bits = 8;
+        assert_ne!(changed.spec_id(), spec.spec_id());
+        let mut reseeded = spec;
+        reseeded.calib.seed = 8;
+        assert_ne!(reseeded.spec_id(), changed.spec_id());
+    }
+
+    #[test]
+    fn resolve_applies_rules_in_order() {
+        let info = tiny_model_info(); // sites: embed_sum, layer0.res2_sum, head_out
+        let spec = kitchen_sink();
+        let policy = spec.policy.resolve(&info);
+        // family rule hit layer0.res2_sum
+        assert_eq!(
+            policy.site_cfg("layer0.res2_sum").granularity,
+            Granularity::PerEmbeddingGroup { k: 4, permute: true }
+        );
+        // exact rule hit head_out
+        assert_eq!(policy.site_cfg("head_out").bits, 16);
+        // last-layers rule synthesized layer names even off-topology
+        assert!(!policy.site_cfg("layer0.ffn_out").enabled);
+        // untouched sites use the default
+        assert_eq!(policy.site_cfg("embed_sum").bits, 8);
+        assert!(policy.site_cfg("embed_sum").enabled);
+        assert_eq!(policy.weight_cfg("embed.tok").bits, 2);
+        assert_eq!(policy.weight_cfg("layer0.ffn1.w").bits, 4);
+    }
+
+    #[test]
+    fn later_rules_overwrite_earlier() {
+        let info = tiny_model_info();
+        let spec = QuantSpec::new("o", PolicySpec::uniform(8, 8))
+            .with_family("res2_sum", SiteCfg { bits: 16, ..Default::default() })
+            .with_exact("layer0.res2_sum", SiteCfg { enabled: false, ..Default::default() });
+        let policy = spec.policy.resolve(&info);
+        assert!(!policy.site_cfg("layer0.res2_sum").enabled);
+    }
+
+    #[test]
+    fn is_fp32_detection() {
+        assert!(QuantSpec::new("f", PolicySpec::fp32()).is_fp32());
+        assert!(!QuantSpec::new("q", PolicySpec::uniform(8, 8)).is_fp32());
+        assert!(!QuantSpec::new("a", PolicySpec::acts_only(8)).is_fp32());
+        assert!(!QuantSpec::new("w", PolicySpec::weights_only(8)).is_fp32());
+        // a disabled-everything rule set still counts as fp32
+        let off = QuantSpec::new("o", PolicySpec::fp32())
+            .with_family("res2_sum", SiteCfg { enabled: false, ..Default::default() });
+        assert!(off.is_fp32());
+        // one enabled rule flips it
+        let on = QuantSpec::new("o", PolicySpec::fp32())
+            .with_family("res2_sum", SiteCfg::default());
+        assert!(!on.is_fp32());
+    }
+
+    #[test]
+    fn granularity_codec_roundtrip() {
+        for g in [
+            Granularity::PerTensor,
+            Granularity::PerEmbedding,
+            Granularity::PerEmbeddingGroup { k: 8, permute: false },
+            Granularity::PerEmbeddingGroup { k: 4, permute: true },
+        ] {
+            assert_eq!(parse_granularity(&granularity_name(&g)).unwrap(), g);
+        }
+        assert!(parse_granularity("group:1").is_err());
+        assert!(parse_granularity("group:x").is_err());
+        assert!(parse_granularity("per_token").is_err());
+    }
+
+    #[test]
+    fn estimator_codec_roundtrip() {
+        for e in [Estimator::CurrentMinMax, Estimator::RunningMinMax, Estimator::Mse] {
+            assert_eq!(parse_estimator(estimator_name(e)).unwrap(), e);
+        }
+        assert!(parse_estimator("median").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        // missing keys
+        assert!(QuantSpec::parse("{}").is_err());
+        // bad bits
+        let mut spec = QuantSpec::new("b", PolicySpec::uniform(8, 8));
+        spec.policy.default_site.bits = 64;
+        let j = spec.to_json().to_string();
+        // 64 survives serialization, parsing rejects it
+        assert!(QuantSpec::parse(&j).is_err());
+        // zero seeds
+        let mut z = QuantSpec::new("z", PolicySpec::uniform(8, 8));
+        z.seeds = 0;
+        assert!(QuantSpec::parse(&z.to_json().to_string()).is_err());
+    }
+
+    #[test]
+    fn display_name_falls_back_to_id() {
+        let mut spec = QuantSpec::new("", PolicySpec::uniform(8, 8));
+        assert!(spec.display_name().starts_with("spec-"));
+        spec.name = "w8a8".into();
+        assert_eq!(spec.display_name(), "w8a8");
+    }
+}

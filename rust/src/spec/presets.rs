@@ -1,0 +1,226 @@
+//! Named presets: the paper's quantization configurations as specs.
+//!
+//! Each preset reproduces *exactly* the `QuantPolicy` the pre-spec
+//! hard-coded drivers built (asserted in the tests below), so
+//! `repro run --preset w8a8` and the Table 1 W8A8 row are the same
+//! experiment.
+
+use anyhow::{bail, Result};
+
+use super::{AdaRoundSpec, PolicySpec, QuantSpec};
+use crate::model::qconfig::{SiteCfg, WeightCfg};
+use crate::quant::{Estimator, Granularity};
+
+/// (name, description) for every registered preset.
+pub const PRESETS: [(&str, &str); 12] = [
+    ("fp32", "FP32 baseline, no quantization"),
+    ("w8a8", "standard W8A8 per-tensor PTQ (Table 1)"),
+    ("w32a8", "8-bit activations only, FP32 weights (Table 1)"),
+    ("w8a32", "8-bit weights only, FP32 activations (Table 1)"),
+    ("mixed_precision", "W8A{8,16} MP-PTQ, 16-bit on problematic activations (Table 4 best)"),
+    ("peg_k8_permute", "W8A8 PEG-PTQ, K=8 + permutation on FFN sites (Tables 5/6 best)"),
+    ("peg_k4_permute", "W8A8 PEG-PTQ, K=4 + permutation on FFN sites (Table 5)"),
+    ("w6a32", "6-bit MSE weights + 6-bit embeddings (Table 7)"),
+    ("w4a32", "4-bit MSE weights + 4-bit embeddings (Table 7)"),
+    ("w4a32_adaround", "4-bit AdaRound weights (Table 7)"),
+    ("w8a32_embed4", "8-bit weights, 4-bit token embeddings (Table 7)"),
+    ("w8a32_embed2", "8-bit weights, 2-bit token embeddings (Table 7)"),
+];
+
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
+}
+
+/// Build a preset spec by registry name.
+pub fn preset(name: &str) -> Result<QuantSpec> {
+    let spec = match name {
+        "fp32" => QuantSpec::new("fp32", PolicySpec::fp32()),
+        "w8a8" => QuantSpec::new("w8a8", PolicySpec::uniform(8, 8)),
+        "w32a8" => QuantSpec::new("w32a8", PolicySpec::acts_only(8)),
+        "w8a32" => QuantSpec::new("w8a32", PolicySpec::weights_only(8)),
+        "mixed_precision" => mixed_precision(),
+        "peg_k8_permute" => peg_ffn(8, true, "peg_k8_permute"),
+        "peg_k4_permute" => peg_ffn(4, true, "peg_k4_permute"),
+        "w6a32" => low_bit_weights("w6a32", 6, 6, false),
+        "w4a32" => low_bit_weights("w4a32", 4, 4, false),
+        "w4a32_adaround" => low_bit_weights("w4a32_adaround", 4, 4, true),
+        "w8a32_embed4" => low_bit_weights("w8a32_embed4", 8, 4, false),
+        "w8a32_embed2" => low_bit_weights("w8a32_embed2", 8, 2, false),
+        other => bail!(
+            "unknown preset {other:?} (available: {})",
+            preset_names().join(", ")
+        ),
+    };
+    Ok(spec)
+}
+
+/// The best mixed-precision policy from Table 4: everything the paper's
+/// footnotes list kept at 16 bits.
+fn mixed_precision() -> QuantSpec {
+    let a16 = SiteCfg { bits: 16, ..Default::default() };
+    QuantSpec::new("mixed_precision", PolicySpec::uniform(8, 8))
+        .with_family("res2_sum", a16.clone())
+        .with_family("ln1_out", a16.clone())
+        .with_family("ffn_out", a16.clone())
+        .with_exact("head_out", a16.clone())
+        .with_exact("pooled", a16)
+}
+
+/// The paper's chosen PEG config: K groups (+ permutation) on the FFN
+/// input/output/residual-sum sites.
+fn peg_ffn(k: usize, permute: bool, name: &str) -> QuantSpec {
+    let peg = SiteCfg {
+        bits: 8,
+        granularity: Granularity::PerEmbeddingGroup { k, permute },
+        enabled: true,
+    };
+    QuantSpec::new(name, PolicySpec::uniform(8, 8))
+        .with_family("res2_sum", peg.clone())
+        .with_family("ln1_out", peg.clone())
+        .with_family("ffn_out", peg)
+}
+
+/// Table 7 rows: W{wb}A32 with MSE weight ranges and a {eb}-bit MSE
+/// token-embedding override, optionally with AdaRound.
+fn low_bit_weights(name: &str, wb: u32, eb: u32, adaround: bool) -> QuantSpec {
+    let mut policy = PolicySpec::weights_only(8);
+    policy.weights = WeightCfg { bits: wb, estimator: Estimator::Mse, ..Default::default() };
+    policy.weight_overrides.insert(
+        "embed.tok".to_string(),
+        WeightCfg { bits: eb, estimator: Estimator::Mse, ..Default::default() },
+    );
+    let mut spec = QuantSpec::new(name, policy);
+    if adaround {
+        spec.calib.collect_grams = true;
+        spec.adaround = AdaRoundSpec { enabled: true, ..Default::default() };
+        spec.seeds = 1;
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+    use std::collections::BTreeSet;
+
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+    use crate::model::qconfig::QuantPolicy;
+
+    // -- the exact policies the pre-spec hard-coded drivers built --------
+
+    fn old_w32a8(bits: u32) -> QuantPolicy {
+        QuantPolicy {
+            default: SiteCfg { bits, ..Default::default() },
+            overrides: BTreeMap::new(),
+            weights: WeightCfg { enabled: false, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    fn old_w8a32() -> QuantPolicy {
+        QuantPolicy {
+            default: SiteCfg { enabled: false, ..Default::default() },
+            overrides: BTreeMap::new(),
+            weights: WeightCfg { bits: 8, ..Default::default() },
+            weight_overrides: BTreeMap::new(),
+        }
+    }
+
+    fn old_best_mp(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
+        let a16 = SiteCfg { bits: 16, ..Default::default() };
+        QuantPolicy::uniform(8, 8)
+            .with_site_family(info, "res2_sum", a16.clone())
+            .with_site_family(info, "ln1_out", a16.clone())
+            .with_site_family(info, "ffn_out", a16.clone())
+            .with_sites(&["head_out", "pooled"], a16)
+    }
+
+    fn old_best_peg(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
+        let peg = SiteCfg {
+            bits: 8,
+            granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+            enabled: true,
+        };
+        QuantPolicy::uniform(8, 8)
+            .with_site_family(info, "res2_sum", peg.clone())
+            .with_site_family(info, "ln1_out", peg.clone())
+            .with_site_family(info, "ffn_out", peg)
+    }
+
+    fn old_table7_ptq(wb: u32, eb: u32) -> QuantPolicy {
+        let mut p = old_w8a32();
+        p.weights = WeightCfg { bits: wb, estimator: Estimator::Mse, ..Default::default() };
+        p.weight_overrides.insert(
+            "embed.tok".into(),
+            WeightCfg { bits: eb, estimator: Estimator::Mse, ..Default::default() },
+        );
+        p
+    }
+
+    #[test]
+    fn presets_reproduce_the_hard_coded_policies() {
+        let info = tiny_model_info();
+        let cases: Vec<(&str, QuantPolicy)> = vec![
+            ("fp32", QuantPolicy::fp32()),
+            ("w8a8", QuantPolicy::uniform(8, 8)),
+            ("w32a8", old_w32a8(8)),
+            ("w8a32", old_w8a32()),
+            ("mixed_precision", old_best_mp(&info)),
+            ("peg_k8_permute", old_best_peg(&info)),
+            ("w6a32", old_table7_ptq(6, 6)),
+            ("w4a32", old_table7_ptq(4, 4)),
+            ("w4a32_adaround", old_table7_ptq(4, 4)),
+            ("w8a32_embed4", old_table7_ptq(8, 4)),
+            ("w8a32_embed2", old_table7_ptq(8, 2)),
+        ];
+        for (name, old) in cases {
+            let spec = preset(name).unwrap();
+            assert_eq!(spec.policy.resolve(&info), old, "preset {name}");
+        }
+    }
+
+    #[test]
+    fn old_mp_exact_sites_and_preset_agree_per_site() {
+        // with_sites() inserted head_out/pooled unconditionally; the
+        // preset's Exact rules must do the same
+        let info = tiny_model_info();
+        let mp = preset("mixed_precision").unwrap().policy.resolve(&info);
+        assert_eq!(mp.site_cfg("head_out").bits, 16);
+        assert_eq!(mp.site_cfg("pooled").bits, 16);
+        assert_eq!(mp.site_cfg("layer0.res2_sum").bits, 16);
+        assert_eq!(mp.site_cfg("embed_sum").bits, 8);
+    }
+
+    #[test]
+    fn adaround_preset_sets_calibration_knobs() {
+        let spec = preset("w4a32_adaround").unwrap();
+        assert!(spec.adaround.enabled);
+        assert!(spec.calib.collect_grams);
+        assert_eq!(spec.seeds, 1);
+        let plain = preset("w4a32").unwrap();
+        assert!(!plain.adaround.enabled);
+        assert_ne!(spec.spec_id(), plain.spec_id());
+    }
+
+    #[test]
+    fn every_preset_loads_and_ids_are_unique() {
+        let mut ids = BTreeSet::new();
+        for name in preset_names() {
+            let spec = preset(name).unwrap();
+            assert_eq!(spec.name, name);
+            assert!(ids.insert(spec.spec_id()), "duplicate spec_id for {name}");
+            // and every preset survives the JSON round-trip
+            let back = QuantSpec::parse(&spec.to_json().to_string()).unwrap();
+            assert_eq!(back, spec);
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn fp32_preset_is_fp32() {
+        assert!(preset("fp32").unwrap().is_fp32());
+        assert!(!preset("w8a8").unwrap().is_fp32());
+        assert!(!preset("w8a32").unwrap().is_fp32());
+    }
+}

@@ -1,0 +1,166 @@
+//! The one pipeline every driver routes through: resolve a [`QuantSpec`]
+//! against the task's model, then calibrate → weight-QDQ → assemble
+//! activation tensors → dev-eval, median over calibration seeds.
+//!
+//! `repro table*`, `repro sweep` and `repro run --spec` all call into
+//! here, so a configuration behaves identically no matter which surface
+//! launched it.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::QuantSpec;
+use crate::coordinator::calibrate::{calibrate, CalibCfg};
+use crate::coordinator::eval::evaluate;
+use crate::coordinator::experiments::load_ckpt;
+use crate::coordinator::weights::{quantize_weights, AdaRoundCfg2, AdaRoundOpts};
+use crate::coordinator::Ctx;
+use crate::data::{task_spec, TaskSpec, TASKS};
+use crate::metrics::{glue_score, median};
+use crate::model::qconfig::assemble_act_tensors;
+use crate::model::Params;
+use crate::util::json::Json;
+
+/// Result of running one spec: per-task scores in eval order plus the
+/// GLUE-style average, keyed by the spec's content hash.
+#[derive(Debug, Clone)]
+pub struct SpecReport {
+    pub spec_id: String,
+    pub name: String,
+    /// task names in eval order
+    pub tasks: Vec<String>,
+    /// dev scores ×100, parallel to `tasks`
+    pub scores: Vec<f64>,
+    /// macro average over the evaluated tasks
+    pub glue: f64,
+}
+
+impl SpecReport {
+    pub fn score_for(&self, task: &str) -> Option<f64> {
+        self.tasks
+            .iter()
+            .position(|t| t == task)
+            .map(|i| self.scores[i])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut scores = BTreeMap::new();
+        for (t, s) in self.tasks.iter().zip(&self.scores) {
+            scores.insert(t.clone(), Json::Num(*s));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("spec_id".to_string(), Json::Str(self.spec_id.clone()));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("scores".to_string(), Json::Obj(scores));
+        m.insert("glue".to_string(), Json::Num(self.glue));
+        Json::Obj(m)
+    }
+}
+
+/// Resolve a spec's eval targets (empty = every benchmark task).
+pub fn spec_tasks(spec: &QuantSpec) -> Result<Vec<TaskSpec>> {
+    if spec.tasks.is_empty() {
+        Ok(TASKS.to_vec())
+    } else {
+        spec.tasks.iter().map(|n| task_spec(n)).collect()
+    }
+}
+
+/// Run a spec end-to-end over its eval targets, loading each task's
+/// fine-tuned checkpoint.
+pub fn run_spec(ctx: &Ctx, spec: &QuantSpec) -> Result<SpecReport> {
+    let tasks = spec_tasks(spec)?;
+    let label = spec.display_name();
+    let mut names = Vec::with_capacity(tasks.len());
+    let mut scores = Vec::with_capacity(tasks.len());
+    for task in &tasks {
+        let params = load_ckpt(ctx, task)?;
+        let score = run_spec_on(ctx, spec, task, &params)?;
+        println!("  [{label}] {}: {score:.2}", task.name);
+        names.push(task.name.to_string());
+        scores.push(score);
+    }
+    Ok(SpecReport {
+        spec_id: spec.spec_id(),
+        name: spec.name.clone(),
+        glue: glue_score(&scores),
+        tasks: names,
+        scores,
+    })
+}
+
+/// The core pipeline on one task with the given (FP32) parameters:
+/// calibrate → quantize weights → assemble activation tensors → dev eval,
+/// median over `spec.seeds` calibration seeds. FP32 specs skip
+/// calibration and evaluate once.
+pub fn run_spec_on(
+    ctx: &Ctx,
+    spec: &QuantSpec,
+    task: &TaskSpec,
+    params: &Params,
+) -> Result<f64> {
+    let info = ctx.model_info(task)?;
+    let policy = spec.policy.resolve(info);
+    if spec.is_fp32() {
+        let act = assemble_act_tensors(info, &policy, &BTreeMap::new())?;
+        return evaluate(ctx, task, params, &act);
+    }
+    let ada = AdaRoundOpts {
+        enabled: spec.adaround.enabled,
+        cfg: AdaRoundCfg2 { iters: spec.adaround.iters, lr: spec.adaround.lr },
+    };
+    let seeds = spec.seeds.max(1);
+    let mut scores = Vec::with_capacity(seeds);
+    for seed in 0..seeds {
+        let calib_cfg = CalibCfg {
+            estimator: spec.calib.estimator,
+            batch_size: spec.calib.batch_size,
+            num_batches: spec.calib.num_batches,
+            collect_grams: spec.calib.collect_grams || spec.adaround.enabled,
+            seed: spec.calib.seed + seed as u64 * 97,
+        };
+        let calib = calibrate(ctx, task, params, &calib_cfg)?;
+        let (qp, _) = quantize_weights(info, params, &policy, Some(&calib), &ada)?;
+        let act = assemble_act_tensors(info, &policy, &calib.trackers)?;
+        scores.push(evaluate(ctx, task, &qp, &act)?);
+    }
+    Ok(median(&scores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::PolicySpec;
+
+    #[test]
+    fn spec_tasks_empty_means_all() {
+        let spec = QuantSpec::new("x", PolicySpec::uniform(8, 8));
+        assert_eq!(spec_tasks(&spec).unwrap().len(), TASKS.len());
+        let some = spec.clone().with_tasks(&["mnli".into(), "rte".into()]);
+        let tasks = spec_tasks(&some).unwrap();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].name, "mnli");
+        let bad = spec.with_tasks(&["not_a_task".into()]);
+        assert!(spec_tasks(&bad).is_err());
+    }
+
+    #[test]
+    fn report_json_and_lookup() {
+        let r = SpecReport {
+            spec_id: "abc".into(),
+            name: "w8a8".into(),
+            tasks: vec!["mnli".into(), "rte".into()],
+            scores: vec![80.0, 70.0],
+            glue: 75.0,
+        };
+        assert_eq!(r.score_for("rte"), Some(70.0));
+        assert_eq!(r.score_for("cola"), None);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("spec_id").unwrap().as_str().unwrap(), "abc");
+        assert_eq!(
+            j.get("scores").unwrap().get("mnli").unwrap().as_f64().unwrap(),
+            80.0
+        );
+    }
+}

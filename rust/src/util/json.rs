@@ -60,6 +60,27 @@ impl Json {
         Ok(self.as_f64()? as usize)
     }
 
+    /// Exact non-negative integer accessor. Values at or beyond 2^53 are
+    /// rejected rather than silently rounded — the parser stores numbers
+    /// as f64, so larger integers may already have lost precision.
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("not a non-negative integer");
+        }
+        if n >= 9007199254740992.0 {
+            bail!("integer {n} too large for exact f64 representation");
+        }
+        Ok(n as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool"),
+        }
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -89,13 +110,7 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
-    // -- writer -------------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
+    // -- writer (canonical: objects emit keys in sorted order) --------------
 
     fn write(&self, out: &mut String) {
         match self {
@@ -132,6 +147,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -352,6 +375,23 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"héllo ☃\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn bool_and_u64_accessors() {
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
+        assert!(!Json::parse("false").unwrap().as_bool().unwrap());
+        assert!(Json::parse("1").unwrap().as_bool().is_err());
+        assert_eq!(Json::parse("97").unwrap().as_u64().unwrap(), 97);
+        assert!(Json::parse("\"x\"").unwrap().as_u64().is_err());
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+        assert!(Json::parse("2.5").unwrap().as_u64().is_err());
+        // beyond 2^53 the parser's f64 may already be inexact: reject
+        assert!(Json::parse("9007199254740993").unwrap().as_u64().is_err());
+        assert_eq!(
+            Json::parse("9007199254740991").unwrap().as_u64().unwrap(),
+            9007199254740991
+        );
     }
 
     #[test]

@@ -202,7 +202,7 @@ fn sweep_smoke_two_configs() {
         assert!(r.weight_mse.is_finite() && r.weight_mse >= 0.0, "{}", r.label);
         assert!(r.score.is_none(), "offline sweep must not fabricate scores");
     }
-    let j = sweep::report_json(&results, 2, 1.0).to_string();
+    let j = sweep::report_json(&results, 2, 1.0, 64, 3).to_string();
     assert!(tq::util::json::Json::parse(&j).is_ok());
 
     // The runtime-backed pass skips gracefully when artifacts are absent.

@@ -9,12 +9,21 @@
 //!   by range, `group_bounds` partitions `d` exactly for every dividing
 //!   `K`, and the K=1 / K=d endpoints coincide with per-tensor /
 //!   per-embedding parameters.
+//! * `QuantSpec` serialization invariants — parse → serialize → parse is
+//!   the identity for randomly generated specs, the canonical JSON is a
+//!   fixed point, and `spec_id` is stable across round-trips while the
+//!   cosmetic label never affects it.
 
+use std::collections::BTreeMap;
+
+use tq::model::qconfig::{SiteCfg, WeightCfg};
 use tq::quant::peg::{group_bounds, lane_qparams, range_permutation};
 use tq::quant::{
-    qdq, qparams_from_range, qparams_symmetric, Granularity, QGrid, QParams,
+    qdq, qparams_from_range, qparams_symmetric, Estimator, Granularity, QGrid, QParams,
 };
+use tq::spec::{AdaRoundSpec, CalibSpec, PolicySpec, QuantSpec, SiteRule, SiteSelector};
 use tq::util::prop::{prop_assert, prop_check, vec_f32};
+use tq::util::rng::Rng;
 
 const BITS: [u32; 3] = [2, 4, 8];
 
@@ -229,4 +238,148 @@ fn distinct_params(params: &[QParams]) -> usize {
     keys.sort();
     keys.dedup();
     keys.len()
+}
+
+// ---- QuantSpec serialization invariants --------------------------------
+
+const ESTIMATORS: [Estimator; 3] =
+    [Estimator::CurrentMinMax, Estimator::RunningMinMax, Estimator::Mse];
+
+fn rand_granularity(rng: &mut Rng) -> Granularity {
+    match rng.below(4) {
+        0 => Granularity::PerTensor,
+        1 => Granularity::PerEmbedding,
+        2 => Granularity::PerEmbeddingGroup { k: 2 + rng.below(15), permute: false },
+        _ => Granularity::PerEmbeddingGroup { k: 2 + rng.below(15), permute: true },
+    }
+}
+
+fn rand_site_cfg(rng: &mut Rng) -> SiteCfg {
+    SiteCfg {
+        bits: [2u32, 4, 8, 16][rng.below(4)],
+        granularity: rand_granularity(rng),
+        enabled: rng.bool(0.8),
+    }
+}
+
+fn rand_weight_cfg(rng: &mut Rng) -> WeightCfg {
+    WeightCfg {
+        bits: [2u32, 4, 6, 8][rng.below(4)],
+        estimator: ESTIMATORS[rng.below(3)],
+        per_channel_groups: if rng.bool(0.3) { Some(1 + rng.below(16)) } else { None },
+        enabled: rng.bool(0.8),
+    }
+}
+
+fn rand_selector(rng: &mut Rng) -> SiteSelector {
+    let fam = ["res2_sum", "ln1_out", "ffn_out", "attn_scores"][rng.below(4)].to_string();
+    match rng.below(3) {
+        0 => SiteSelector::Exact(format!("layer{}.{fam}", rng.below(6))),
+        1 => SiteSelector::Family(fam),
+        _ => SiteSelector::FamilyLastLayers { suffix: fam, n: 1 + rng.below(3) },
+    }
+}
+
+fn rand_spec(rng: &mut Rng) -> QuantSpec {
+    let mut weight_overrides = BTreeMap::new();
+    if rng.bool(0.5) {
+        weight_overrides.insert("embed.tok".to_string(), rand_weight_cfg(rng));
+    }
+    let policy = PolicySpec {
+        default_site: rand_site_cfg(rng),
+        rules: (0..rng.below(4))
+            .map(|_| SiteRule { select: rand_selector(rng), cfg: rand_site_cfg(rng) })
+            .collect(),
+        weights: rand_weight_cfg(rng),
+        weight_overrides,
+    };
+    let mut spec = QuantSpec::new("prop", policy);
+    spec.calib = CalibSpec {
+        estimator: ESTIMATORS[rng.below(3)],
+        batch_size: 1 + rng.below(4),
+        num_batches: 1 + rng.below(16),
+        collect_grams: rng.bool(0.2),
+        seed: rng.next_u64() % 1_000_000,
+    };
+    spec.adaround = AdaRoundSpec {
+        enabled: rng.bool(0.2),
+        iters: 100 + rng.below(1000),
+        lr: rng.uniform(1e-3, 1e-1),
+    };
+    spec.seeds = 1 + rng.below(5);
+    if rng.bool(0.5) {
+        spec.tasks = vec!["mnli".to_string(), "rte".to_string()];
+    }
+    spec
+}
+
+#[test]
+fn prop_spec_json_roundtrip_is_identity() {
+    prop_check("spec json roundtrip", 300, |rng| {
+        let spec = rand_spec(rng);
+        let text = spec.to_json().to_string();
+        let back = match QuantSpec::parse(&text) {
+            Ok(b) => b,
+            Err(e) => return Err(format!("parse failed: {e}\n{text}")),
+        };
+        prop_assert(back == spec, format!("roundtrip changed the spec:\n{text}"))?;
+        // canonical serialization is a fixed point (byte-for-byte)
+        prop_assert(
+            back.to_json().to_string() == text,
+            "canonical JSON is not a serialization fixed point",
+        )?;
+        prop_assert(
+            back.spec_id() == spec.spec_id(),
+            "spec_id changed across a JSON roundtrip",
+        )
+    });
+}
+
+#[test]
+fn prop_spec_id_is_label_blind_but_config_sensitive() {
+    prop_check("spec_id semantics", 200, |rng| {
+        let spec = rand_spec(rng);
+        let id = spec.spec_id();
+
+        let mut renamed = spec.clone();
+        renamed.name = format!("renamed-{}", rng.below(100));
+        prop_assert(renamed.spec_id() == id, "renaming changed spec_id")?;
+
+        let mut changed = spec.clone();
+        changed.seeds += 1;
+        prop_assert(changed.spec_id() != id, "seed-count change kept spec_id")?;
+
+        let mut reseeded = spec;
+        reseeded.calib.seed += 1;
+        prop_assert(reseeded.spec_id() != id, "calib-seed change kept spec_id")
+    });
+}
+
+#[test]
+fn prop_spec_id_is_stable_across_key_order() {
+    // Re-serializing a parsed spec always emits sorted object keys, so a
+    // file written with any key order hashes identically after parsing.
+    prop_check("spec_id key order", 100, |rng| {
+        let spec = rand_spec(rng);
+        let j = spec.to_json();
+        // hand-scramble the top-level key order in the JSON text
+        let (name, policy, calib, adaround, seeds, tasks) = (
+            j.get("name").unwrap(),
+            j.get("policy").unwrap(),
+            j.get("calib").unwrap(),
+            j.get("adaround").unwrap(),
+            j.get("seeds").unwrap(),
+            j.get("tasks").unwrap(),
+        );
+        let scrambled = format!(
+            r#"{{"tasks": {tasks}, "seeds": {seeds}, "policy": {policy},
+                "name": {name}, "calib": {calib}, "adaround": {adaround}}}"#
+        );
+        let back = QuantSpec::parse(&scrambled).map_err(|e| format!("parse: {e}"))?;
+        prop_assert(back == spec, "scrambled key order changed the spec")?;
+        prop_assert(
+            back.spec_id() == spec.spec_id(),
+            "scrambled key order changed spec_id",
+        )
+    });
 }
