@@ -557,6 +557,14 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
                             }
                         }
                     }
+                    let st = ctx.rt.stats();
+                    if st.interpreted > 0 {
+                        println!(
+                            "(runtime pass executed on the in-repo HLO interpreter: \
+                             {} of {} executions)",
+                            st.interpreted, st.executions
+                        );
+                    }
                 }
                 Err(e) => println!("(offline metrics only — {e})"),
             }

@@ -1,0 +1,589 @@
+//! HLO-text graph builder.
+//!
+//! Emits the same textual dialect [`crate::hlo::parser`] reads (and real
+//! XLA prints), so graphs built here execute on the in-repo interpreter
+//! today and on a real PJRT client when one is available. Used by the
+//! fixture generator (`repro gen-artifacts`) to lower the tiny BERT
+//! forward/diag graphs without any Python in the loop.
+//!
+//! The builder is deliberately low-level — one method per HLO op, each
+//! returning an opaque [`Op`] handle carrying the result dtype/dims — with
+//! a few composite helpers (`matmul_bias`, `softmax`, `layernorm`) where
+//! the lowering is always the same shape.
+
+use anyhow::{bail, Result};
+
+use super::DType;
+
+/// Handle to an emitted instruction: its SSA name plus result type.
+#[derive(Debug, Clone)]
+pub struct Op {
+    id: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl Op {
+    fn shape_str(&self) -> String {
+        shape_str(self.dtype, &self.dims)
+    }
+
+    /// `f32[2,3] %v17` — operand reference text.
+    fn as_ref(&self) -> String {
+        format!("{} %{}", self.shape_str(), self.id)
+    }
+}
+
+fn shape_str(dtype: DType, dims: &[usize]) -> String {
+    let body: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("{}[{}]", dtype.name(), body.join(","))
+}
+
+fn dims_attr(dims: &[usize]) -> String {
+    let body: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Builds one module: optional reduce sub-computations + one ENTRY.
+pub struct GraphBuilder {
+    module_name: String,
+    params: Vec<Op>,
+    body: Vec<String>,
+    subs: Vec<String>,
+    have_red_add: bool,
+    have_red_max: bool,
+    n: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(module_name: &str) -> GraphBuilder {
+        GraphBuilder {
+            module_name: module_name.to_string(),
+            params: Vec::new(),
+            body: Vec::new(),
+            subs: Vec::new(),
+            have_red_add: false,
+            have_red_max: false,
+            n: 0,
+        }
+    }
+
+    fn fresh(&mut self, dtype: DType, dims: &[usize]) -> Op {
+        let id = format!("v{}", self.n);
+        self.n += 1;
+        Op { id, dtype, dims: dims.to_vec() }
+    }
+
+    fn push(&mut self, op: &Op, text: String) {
+        self.body.push(format!("  %{} = {} {}", op.id, op.shape_str(), text));
+    }
+
+    // -- leaf ops ----------------------------------------------------------
+
+    pub fn param(&mut self, dtype: DType, dims: &[usize]) -> Op {
+        let op = self.fresh(dtype, dims);
+        let k = self.params.len();
+        self.push(&op, format!("parameter({k})"));
+        self.params.push(op.clone());
+        op
+    }
+
+    pub fn const_f32(&mut self, v: f32) -> Op {
+        let op = self.fresh(DType::F32, &[]);
+        self.push(&op, format!("constant({v:?})"));
+        op
+    }
+
+    // -- elementwise -------------------------------------------------------
+
+    fn binary(&mut self, opcode: &str, a: &Op, b: &Op) -> Result<Op> {
+        if a.dims != b.dims || a.dtype != b.dtype {
+            bail!("{opcode}: operand shape mismatch {:?} vs {:?}", a.dims, b.dims);
+        }
+        let op = self.fresh(a.dtype, &a.dims);
+        self.push(&op, format!("{opcode}({}, {})", a.as_ref(), b.as_ref()));
+        Ok(op)
+    }
+
+    pub fn add(&mut self, a: &Op, b: &Op) -> Result<Op> {
+        self.binary("add", a, b)
+    }
+
+    pub fn sub(&mut self, a: &Op, b: &Op) -> Result<Op> {
+        self.binary("subtract", a, b)
+    }
+
+    pub fn mul(&mut self, a: &Op, b: &Op) -> Result<Op> {
+        self.binary("multiply", a, b)
+    }
+
+    pub fn div(&mut self, a: &Op, b: &Op) -> Result<Op> {
+        self.binary("divide", a, b)
+    }
+
+    fn unary(&mut self, opcode: &str, a: &Op) -> Op {
+        let op = self.fresh(a.dtype, &a.dims);
+        self.push(&op, format!("{opcode}({})", a.as_ref()));
+        op
+    }
+
+    pub fn exp(&mut self, a: &Op) -> Op {
+        self.unary("exp", a)
+    }
+
+    pub fn tanh(&mut self, a: &Op) -> Op {
+        self.unary("tanh", a)
+    }
+
+    pub fn rsqrt(&mut self, a: &Op) -> Op {
+        self.unary("rsqrt", a)
+    }
+
+    pub fn round(&mut self, a: &Op) -> Op {
+        self.unary("round-nearest-afz", a)
+    }
+
+    pub fn clamp(&mut self, lo: &Op, x: &Op, hi: &Op) -> Op {
+        let op = self.fresh(x.dtype, &x.dims);
+        self.push(
+            &op,
+            format!("clamp({}, {}, {})", lo.as_ref(), x.as_ref(), hi.as_ref()),
+        );
+        op
+    }
+
+    pub fn select(&mut self, pred: &Op, t: &Op, f: &Op) -> Result<Op> {
+        if t.dims != f.dims {
+            bail!("select: branch shape mismatch");
+        }
+        let op = self.fresh(t.dtype, &t.dims);
+        self.push(
+            &op,
+            format!("select({}, {}, {})", pred.as_ref(), t.as_ref(), f.as_ref()),
+        );
+        Ok(op)
+    }
+
+    pub fn compare(&mut self, direction: &str, a: &Op, b: &Op) -> Result<Op> {
+        if a.dims != b.dims {
+            bail!("compare: shape mismatch");
+        }
+        let op = self.fresh(DType::Pred, &a.dims);
+        self.push(
+            &op,
+            format!("compare({}, {}), direction={direction}", a.as_ref(), b.as_ref()),
+        );
+        Ok(op)
+    }
+
+    // -- data movement -----------------------------------------------------
+
+    pub fn broadcast(&mut self, a: &Op, out_dims: &[usize], map: &[usize]) -> Result<Op> {
+        if map.len() != a.dims.len() {
+            bail!("broadcast: dimensions arity mismatch");
+        }
+        for (k, &od) in map.iter().enumerate() {
+            if od >= out_dims.len() || out_dims[od] != a.dims[k] {
+                bail!("broadcast: dim {k} does not fit output {out_dims:?}");
+            }
+        }
+        let op = self.fresh(a.dtype, out_dims);
+        self.push(
+            &op,
+            format!("broadcast({}), dimensions={}", a.as_ref(), dims_attr(map)),
+        );
+        Ok(op)
+    }
+
+    /// Broadcast a scalar to `out_dims`.
+    pub fn splat(&mut self, a: &Op, out_dims: &[usize]) -> Result<Op> {
+        if !a.dims.is_empty() {
+            bail!("splat wants a scalar operand");
+        }
+        self.broadcast(a, out_dims, &[])
+    }
+
+    pub fn reshape(&mut self, a: &Op, dims: &[usize]) -> Result<Op> {
+        let want: usize = dims.iter().product();
+        let have: usize = a.dims.iter().product();
+        if want != have {
+            bail!("reshape {:?} -> {dims:?}: element count mismatch", a.dims);
+        }
+        let op = self.fresh(a.dtype, dims);
+        self.push(&op, format!("reshape({})", a.as_ref()));
+        Ok(op)
+    }
+
+    pub fn transpose(&mut self, a: &Op, perm: &[usize]) -> Result<Op> {
+        if perm.len() != a.dims.len() {
+            bail!("transpose: rank mismatch");
+        }
+        let out: Vec<usize> = perm.iter().map(|&p| a.dims[p]).collect();
+        let op = self.fresh(a.dtype, &out);
+        self.push(
+            &op,
+            format!("transpose({}), dimensions={}", a.as_ref(), dims_attr(perm)),
+        );
+        Ok(op)
+    }
+
+    pub fn slice(&mut self, a: &Op, ranges: &[(usize, usize)]) -> Result<Op> {
+        if ranges.len() != a.dims.len() {
+            bail!("slice: rank mismatch");
+        }
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut attr = Vec::with_capacity(ranges.len());
+        for (d, &(lo, hi)) in ranges.iter().enumerate() {
+            if lo > hi || hi > a.dims[d] {
+                bail!("slice [{lo}:{hi}] out of range for dim {d} of {:?}", a.dims);
+            }
+            out.push(hi - lo);
+            attr.push(format!("[{lo}:{hi}]"));
+        }
+        let op = self.fresh(a.dtype, &out);
+        self.push(
+            &op,
+            format!("slice({}), slice={{{}}}", a.as_ref(), attr.join(", ")),
+        );
+        Ok(op)
+    }
+
+    /// Canonical embedding-table lookup: `table[V,d][indices[N]] -> [N,d]`.
+    pub fn gather_rows(&mut self, table: &Op, indices: &Op) -> Result<Op> {
+        if table.dims.len() != 2 || indices.dims.len() != 1 {
+            bail!("gather_rows wants table [V,d] and indices [N]");
+        }
+        let d = table.dims[1];
+        let n = indices.dims[0];
+        let idx2 = self.reshape(indices, &[n, 1])?;
+        let op = self.fresh(table.dtype, &[n, d]);
+        self.push(
+            &op,
+            format!(
+                "gather({}, {}), offset_dims={{1}}, collapsed_slice_dims={{0}}, \
+                 start_index_map={{0}}, index_vector_dim=1, slice_sizes={{1,{d}}}",
+                table.as_ref(),
+                idx2.as_ref()
+            ),
+        );
+        Ok(op)
+    }
+
+    // -- contractions & reductions -----------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dot_general(
+        &mut self,
+        a: &Op,
+        b: &Op,
+        lb: &[usize],
+        rb: &[usize],
+        lc: &[usize],
+        rc: &[usize],
+    ) -> Result<Op> {
+        let l_free: Vec<usize> = (0..a.dims.len())
+            .filter(|d| !lb.contains(d) && !lc.contains(d))
+            .collect();
+        let r_free: Vec<usize> = (0..b.dims.len())
+            .filter(|d| !rb.contains(d) && !rc.contains(d))
+            .collect();
+        let mut out: Vec<usize> = lb.iter().map(|&d| a.dims[d]).collect();
+        out.extend(l_free.iter().map(|&d| a.dims[d]));
+        out.extend(r_free.iter().map(|&d| b.dims[d]));
+        let op = self.fresh(DType::F32, &out);
+        let mut attrs = Vec::new();
+        if !lb.is_empty() {
+            attrs.push(format!("lhs_batch_dims={}", dims_attr(lb)));
+            attrs.push(format!("rhs_batch_dims={}", dims_attr(rb)));
+        }
+        attrs.push(format!("lhs_contracting_dims={}", dims_attr(lc)));
+        attrs.push(format!("rhs_contracting_dims={}", dims_attr(rc)));
+        self.push(
+            &op,
+            format!("dot({}, {}), {}", a.as_ref(), b.as_ref(), attrs.join(", ")),
+        );
+        Ok(op)
+    }
+
+    fn ensure_red_add(&mut self) -> &'static str {
+        if !self.have_red_add {
+            self.subs.push(
+                "%red_add (ra: f32[], rb: f32[]) -> f32[] {\n  %ra = f32[] parameter(0)\n  \
+                 %rb = f32[] parameter(1)\n  ROOT %rr = f32[] add(f32[] %ra, f32[] %rb)\n}"
+                    .to_string(),
+            );
+            self.have_red_add = true;
+        }
+        "red_add"
+    }
+
+    fn ensure_red_max(&mut self) -> &'static str {
+        if !self.have_red_max {
+            self.subs.push(
+                "%red_max (ra: f32[], rb: f32[]) -> f32[] {\n  %ra = f32[] parameter(0)\n  \
+                 %rb = f32[] parameter(1)\n  ROOT %rr = f32[] maximum(f32[] %ra, f32[] %rb)\n}"
+                    .to_string(),
+            );
+            self.have_red_max = true;
+        }
+        "red_max"
+    }
+
+    fn reduce(&mut self, a: &Op, rdims: &[usize], init: f32, apply: &str) -> Result<Op> {
+        for &d in rdims {
+            if d >= a.dims.len() {
+                bail!("reduce dim {d} out of range");
+            }
+        }
+        let init = self.const_f32(init);
+        let out: Vec<usize> = (0..a.dims.len())
+            .filter(|d| !rdims.contains(d))
+            .map(|d| a.dims[d])
+            .collect();
+        let op = self.fresh(DType::F32, &out);
+        self.push(
+            &op,
+            format!(
+                "reduce({}, {}), dimensions={}, to_apply=%{apply}",
+                a.as_ref(),
+                init.as_ref(),
+                dims_attr(rdims)
+            ),
+        );
+        Ok(op)
+    }
+
+    pub fn reduce_add(&mut self, a: &Op, rdims: &[usize]) -> Result<Op> {
+        let apply = self.ensure_red_add();
+        self.reduce(a, rdims, 0.0, apply)
+    }
+
+    pub fn reduce_max(&mut self, a: &Op, rdims: &[usize]) -> Result<Op> {
+        let apply = self.ensure_red_max();
+        self.reduce(a, rdims, f32::NEG_INFINITY, apply)
+    }
+
+    // -- composite helpers -------------------------------------------------
+
+    /// Scale every element by a compile-time scalar.
+    pub fn scale(&mut self, a: &Op, s: f32) -> Result<Op> {
+        let c = self.const_f32(s);
+        let cb = self.splat(&c, &a.dims.clone())?;
+        self.mul(a, &cb)
+    }
+
+    /// Add a compile-time scalar to every element.
+    pub fn offset(&mut self, a: &Op, s: f32) -> Result<Op> {
+        let c = self.const_f32(s);
+        let cb = self.splat(&c, &a.dims.clone())?;
+        self.add(a, &cb)
+    }
+
+    /// `x @ w + b` for `x [.., k]`, `w [k, n]`, `b [n]` (bias broadcast
+    /// over the leading axes).
+    pub fn matmul_bias(&mut self, x: &Op, w: &Op, b: &Op) -> Result<Op> {
+        let rank = x.dims.len();
+        if rank < 1 || w.dims.len() != 2 || b.dims.len() != 1 {
+            bail!("matmul_bias wants x [..,k], w [k,n], b [n]");
+        }
+        let y = self.dot_general(x, w, &[], &[], &[rank - 1], &[0])?;
+        let bb = self.broadcast(b, &y.dims.clone(), &[y.dims.len() - 1])?;
+        self.add(&y, &bb)
+    }
+
+    /// Numerically-stable softmax over the last axis.
+    pub fn softmax(&mut self, x: &Op) -> Result<Op> {
+        let rank = x.dims.len();
+        let last = rank - 1;
+        let m = self.reduce_max(x, &[last])?;
+        let keep: Vec<usize> = (0..rank - 1).collect();
+        let mb = self.broadcast(&m, &x.dims.clone(), &keep)?;
+        let c = self.sub(x, &mb)?;
+        let e = self.exp(&c);
+        let s = self.reduce_add(&e, &[last])?;
+        let sb = self.broadcast(&s, &x.dims.clone(), &keep)?;
+        self.div(&e, &sb)
+    }
+
+    /// LayerNorm over the last axis with gain `g` and bias `b` (both
+    /// `[d]`), eps 1e-5 — mirrors `kernels.layernorm`.
+    pub fn layernorm(&mut self, x: &Op, g: &Op, b: &Op) -> Result<Op> {
+        let rank = x.dims.len();
+        let last = rank - 1;
+        let d = x.dims[last];
+        let keep: Vec<usize> = (0..rank - 1).collect();
+        let sum = self.reduce_add(x, &[last])?;
+        let mean = self.scale(&sum, 1.0 / d as f32)?;
+        let mb = self.broadcast(&mean, &x.dims.clone(), &keep)?;
+        let xc = self.sub(x, &mb)?;
+        let sq = self.mul(&xc, &xc)?;
+        let var_sum = self.reduce_add(&sq, &[last])?;
+        let var = self.scale(&var_sum, 1.0 / d as f32)?;
+        let var_eps = self.offset(&var, 1e-5)?;
+        let inv = self.rsqrt(&var_eps);
+        let invb = self.broadcast(&inv, &x.dims.clone(), &keep)?;
+        let norm = self.mul(&xc, &invb)?;
+        let gb = self.broadcast(g, &x.dims.clone(), &[last])?;
+        let bb = self.broadcast(b, &x.dims.clone(), &[last])?;
+        let scaled = self.mul(&norm, &gb)?;
+        self.add(&scaled, &bb)
+    }
+
+    /// tanh-approximation GELU (matches jax.nn.gelu(approximate=True)).
+    pub fn gelu(&mut self, x: &Op) -> Result<Op> {
+        let x3 = {
+            let x2 = self.mul(x, x)?;
+            self.mul(&x2, x)?
+        };
+        let inner = {
+            let c = self.scale(&x3, 0.044715)?;
+            let s = self.add(x, &c)?;
+            self.scale(&s, 0.797_884_6)? // sqrt(2/pi)
+        };
+        let t = self.tanh(&inner);
+        let one = self.offset(&t, 1.0)?;
+        let half = self.scale(&one, 0.5)?;
+        self.mul(x, &half)
+    }
+
+    // -- finalisation ------------------------------------------------------
+
+    /// Set the ROOT tuple and render the module text.
+    pub fn finish(mut self, roots: &[Op]) -> String {
+        let shapes: Vec<String> = roots.iter().map(Op::shape_str).collect();
+        let refs: Vec<String> = roots.iter().map(Op::as_ref).collect();
+        let tuple_shape = format!("({})", shapes.join(", "));
+        let id = format!("v{}", self.n);
+        self.body.push(format!(
+            "  ROOT %{id} = {tuple_shape} tuple({})",
+            refs.join(", ")
+        ));
+
+        let header: Vec<String> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(k, p)| format!("a{k}: {}", p.shape_str()))
+            .collect();
+        let mut out = String::new();
+        out.push_str(&format!("HloModule {}\n\n", self.module_name));
+        for s in &self.subs {
+            out.push_str(s);
+            out.push_str("\n\n");
+        }
+        out.push_str(&format!(
+            "ENTRY %main ({}) -> {tuple_shape} {{\n",
+            header.join(", ")
+        ));
+        for line in &self.body {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::{interpret, parse_module, Value};
+
+    #[test]
+    fn builder_emits_parseable_module() {
+        let mut g = GraphBuilder::new("tiny");
+        let x = g.param(DType::F32, &[2, 3]);
+        let w = g.param(DType::F32, &[3, 2]);
+        let b = g.param(DType::F32, &[2]);
+        let y = g.matmul_bias(&x, &w, &b).unwrap();
+        let sm = g.softmax(&y).unwrap();
+        let text = g.finish(&[y.clone(), sm]);
+        let m = parse_module(&text).unwrap();
+        assert_eq!(m.entry().params.len(), 3);
+
+        let xs = Value::F32 { dims: vec![2, 3], data: vec![1., 0., 0., 0., 1., 0.] };
+        let ws = Value::F32 { dims: vec![3, 2], data: vec![1., 2., 3., 4., 5., 6.] };
+        let bs = Value::F32 { dims: vec![2], data: vec![0.5, -0.5] };
+        let out = interpret(&m, &[xs, ws, bs]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].f32s().unwrap(), &[1.5, 1.5, 3.5, 3.5]);
+        let sm = out[1].f32s().unwrap();
+        assert!((sm[0] - 0.5).abs() < 1e-6 && (sm[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_matches_reference() {
+        let mut g = GraphBuilder::new("ln");
+        let x = g.param(DType::F32, &[1, 4]);
+        let gain = g.param(DType::F32, &[4]);
+        let bias = g.param(DType::F32, &[4]);
+        let y = g.layernorm(&x, &gain, &bias).unwrap();
+        let text = g.finish(&[y]);
+        let m = parse_module(&text).unwrap();
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let out = interpret(&m, &[
+            Value::F32 { dims: vec![1, 4], data: data.to_vec() },
+            Value::F32 { dims: vec![4], data: vec![1.0; 4] },
+            Value::F32 { dims: vec![4], data: vec![0.0; 4] },
+        ])
+        .unwrap();
+        let got = out[0].f32s().unwrap();
+        let mean = 2.5f32;
+        let var = data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (g, x) in got.iter().zip(&data) {
+            let want = (x - mean) * inv;
+            assert!((g - want).abs() < 1e-5, "{g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gelu_matches_reference() {
+        let mut g = GraphBuilder::new("gelu");
+        let x = g.param(DType::F32, &[3]);
+        let y = g.gelu(&x).unwrap();
+        let text = g.finish(&[y]);
+        let m = parse_module(&text).unwrap();
+        let data = [-1.0f32, 0.0, 2.0];
+        let out = interpret(&m, &[Value::F32 { dims: vec![3], data: data.to_vec() }])
+            .unwrap();
+        let got = out[0].f32s().unwrap();
+        for (g, &x) in got.iter().zip(&data) {
+            let want =
+                0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044715 * x * x * x)).tanh());
+            assert!((g - want).abs() < 1e-6, "{g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gather_rows_and_slice() {
+        let mut g = GraphBuilder::new("gr");
+        let table = g.param(DType::F32, &[4, 2]);
+        let idx = g.param(DType::S32, &[3]);
+        let rows = g.gather_rows(&table, &idx).unwrap();
+        let first = g.slice(&rows, &[(0, 1), (0, 2)]).unwrap();
+        let text = g.finish(&[rows, first]);
+        let m = parse_module(&text).unwrap();
+        let out = interpret(&m, &[
+            Value::F32 {
+                dims: vec![4, 2],
+                data: vec![0., 1., 10., 11., 20., 21., 30., 31.],
+            },
+            Value::S32 { dims: vec![3], data: vec![3, 1, 0] },
+        ])
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[30., 31., 10., 11., 0., 1.]);
+        assert_eq!(out[1].f32s().unwrap(), &[30., 31.]);
+    }
+
+    #[test]
+    fn builder_validates_shapes() {
+        let mut g = GraphBuilder::new("bad");
+        let a = g.param(DType::F32, &[2]);
+        let b = g.param(DType::F32, &[3]);
+        assert!(g.add(&a, &b).is_err());
+        assert!(g.reshape(&a, &[5]).is_err());
+        assert!(g.slice(&a, &[(0, 9)]).is_err());
+        assert!(g.broadcast(&a, &[2, 2], &[5]).is_err());
+    }
+}

@@ -1,0 +1,863 @@
+//! `repro gen-artifacts`: a self-consistent fixture `artifacts/`.
+//!
+//! Lowers a shrunk BERT-style encoder (same topology family as
+//! python/compile/model.py: 13 activation-quantizer sites per layer + 4,
+//! runtime-parameterised fake-quant at every site) to HLO text with
+//! [`crate::hlo::builder`], and writes the same `manifest.json` contract
+//! aot.py emits — artifact signatures, model topology, golden fake-quant
+//! vectors. The generated modules execute on the in-repo interpreter (or
+//! a real PJRT client), so integration tests, `repro smoke` and the
+//! sweep's runtime pass run in any container without Python or XLA.
+//!
+//! The fixture model is deliberately small (1 layer, seq 24) so a full
+//! dev-set evaluation interprets in seconds, but keeps `d = 128` and the
+//! per-layer site inventory of the real export so topology-sensitive code
+//! paths (PEG grouping, site families, mixed precision) exercise
+//! realistically. Deterministic: every run emits byte-identical artifacts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::builder::{GraphBuilder, Op};
+use super::DType;
+use crate::data::{TaskKind, TASKS};
+use crate::model::checkpoint;
+use crate::model::manifest::{ModelConfig, ModelInfo, ParamSpec, SiteSpec};
+use crate::model::Params;
+use crate::quant::{qdq_per_lane, QGrid, QParams};
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// Additive attention-mask bias (mirrors model.py MASK_BIAS).
+const MASK_BIAS: f32 = -30.0;
+
+/// Architecture of the fixture model.
+#[derive(Debug, Clone)]
+pub struct FixtureConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub n_out: usize,
+    pub outlier_dims: Vec<usize>,
+}
+
+/// The fixture "base" model: d = 128 like the real export (integration
+/// tests and PEG group counts depend on it), but 1 layer / seq 24 so the
+/// interpreter evaluates a full dev split in seconds.
+pub fn base_config() -> FixtureConfig {
+    FixtureConfig {
+        name: "base".to_string(),
+        vocab: 64,
+        d: 128,
+        heads: 4,
+        layers: 1,
+        d_ff: 256,
+        seq: 24,
+        n_out: 3,
+        outlier_dims: vec![17, 89, 101],
+    }
+}
+
+/// Ordered (name, shape) parameter signature (mirrors model.py).
+pub fn param_spec(cfg: &FixtureConfig) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d;
+    let mut spec: Vec<(String, Vec<usize>)> = vec![
+        ("embed.tok".into(), vec![cfg.vocab, d]),
+        ("embed.pos".into(), vec![cfg.seq, d]),
+        ("embed.type".into(), vec![2, d]),
+        ("embed.ln.g".into(), vec![d]),
+        ("embed.ln.b".into(), vec![d]),
+    ];
+    for i in 0..cfg.layers {
+        let p = format!("layer{i}.");
+        spec.push((format!("{p}q.w"), vec![d, d]));
+        spec.push((format!("{p}q.b"), vec![d]));
+        spec.push((format!("{p}k.w"), vec![d, d]));
+        spec.push((format!("{p}k.b"), vec![d]));
+        spec.push((format!("{p}v.w"), vec![d, d]));
+        spec.push((format!("{p}v.b"), vec![d]));
+        spec.push((format!("{p}attn_out.w"), vec![d, d]));
+        spec.push((format!("{p}attn_out.b"), vec![d]));
+        spec.push((format!("{p}ln1.g"), vec![d]));
+        spec.push((format!("{p}ln1.b"), vec![d]));
+        spec.push((format!("{p}ffn1.w"), vec![d, cfg.d_ff]));
+        spec.push((format!("{p}ffn1.b"), vec![cfg.d_ff]));
+        spec.push((format!("{p}ffn2.w"), vec![cfg.d_ff, d]));
+        spec.push((format!("{p}ffn2.b"), vec![d]));
+        spec.push((format!("{p}ln2.g"), vec![d]));
+        spec.push((format!("{p}ln2.b"), vec![d]));
+    }
+    spec.push(("pool.w".into(), vec![d, d]));
+    spec.push(("pool.b".into(), vec![d]));
+    spec.push(("head.w".into(), vec![d, cfg.n_out]));
+    spec.push(("head.b".into(), vec![cfg.n_out]));
+    spec
+}
+
+/// Ordered (site, channels) activation-quantizer inventory — 13 per layer
+/// plus 4 (mirrors model.py `site_spec`).
+pub fn site_spec(cfg: &FixtureConfig) -> Vec<(String, usize)> {
+    let d = cfg.d;
+    let mut sites: Vec<(String, usize)> =
+        vec![("embed_sum".into(), d), ("embed_ln_out".into(), d)];
+    for i in 0..cfg.layers {
+        let p = format!("layer{i}.");
+        sites.push((format!("{p}q"), d));
+        sites.push((format!("{p}k"), d));
+        sites.push((format!("{p}v"), d));
+        sites.push((format!("{p}attn_scores"), 1));
+        sites.push((format!("{p}attn_probs"), 1));
+        sites.push((format!("{p}attn_ctx"), d));
+        sites.push((format!("{p}attn_out"), d));
+        sites.push((format!("{p}res1_sum"), d));
+        sites.push((format!("{p}ln1_out"), d));
+        sites.push((format!("{p}ffn_hidden"), cfg.d_ff));
+        sites.push((format!("{p}ffn_out"), d));
+        sites.push((format!("{p}res2_sum"), d));
+        sites.push((format!("{p}ln2_out"), d));
+    }
+    sites.push(("pooled".into(), d));
+    sites.push(("head_out".into(), 1));
+    sites
+}
+
+fn wq_spec(cfg: &FixtureConfig) -> Vec<String> {
+    let mut names = vec!["embed.tok".to_string()];
+    for i in 0..cfg.layers {
+        let p = format!("layer{i}.");
+        for w in ["q.w", "k.w", "v.w", "attn_out.w", "ffn1.w", "ffn2.w"] {
+            names.push(format!("{p}{w}"));
+        }
+    }
+    names.push("pool.w".to_string());
+    names.push("head.w".to_string());
+    names
+}
+
+fn site_offsets(cfg: &FixtureConfig) -> (Vec<usize>, usize) {
+    let mut offs = Vec::new();
+    let mut total = 0usize;
+    for (_, c) in site_spec(cfg) {
+        offs.push(total);
+        total += c;
+    }
+    (offs, total)
+}
+
+/// The fixture model as a [`ModelInfo`] (used for checkpoint init and for
+/// serialising the manifest's `models` section).
+pub fn model_info(cfg: &FixtureConfig) -> ModelInfo {
+    let (offs, total) = site_offsets(cfg);
+    ModelInfo {
+        config: ModelConfig {
+            name: cfg.name.clone(),
+            vocab: cfg.vocab,
+            d: cfg.d,
+            heads: cfg.heads,
+            layers: cfg.layers,
+            d_ff: cfg.d_ff,
+            seq: cfg.seq,
+            n_out: cfg.n_out,
+            outlier_dims: cfg.outlier_dims.clone(),
+            pad_id: 0,
+            cls_id: 1,
+            sep_id: 2,
+        },
+        params: param_spec(cfg)
+            .into_iter()
+            .map(|(name, shape)| ParamSpec { name, shape })
+            .collect(),
+        sites: site_spec(cfg)
+            .into_iter()
+            .zip(&offs)
+            .map(|((name, channels), &offset)| SiteSpec { name, channels, offset })
+            .collect(),
+        total_scale_lanes: total,
+        wq: wq_spec(cfg),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph construction
+// ---------------------------------------------------------------------------
+
+/// Per-site fake-quant state threaded through the forward build: enforces
+/// the canonical site order and collects diag taps.
+struct SiteQuant {
+    sites: Vec<(String, usize)>,
+    offsets: Vec<usize>,
+    next: usize,
+    diag: bool,
+    taps: Vec<(String, Op)>,
+    act_scales: Op,
+    act_zps: Op,
+    act_cfg: Op,
+}
+
+impl SiteQuant {
+    fn apply(&mut self, g: &mut GraphBuilder, name: &str, x: &Op) -> Result<Op> {
+        let (want, channels) = self
+            .sites
+            .get(self.next)
+            .cloned()
+            .ok_or_else(|| anyhow!("more quant sites than site_spec entries"))?;
+        if want != name {
+            bail!("site order mismatch: expected {want:?}, got {name:?}");
+        }
+        let offset = self.offsets[self.next];
+        let idx = self.next;
+        self.next += 1;
+        if self.diag {
+            self.taps.push((name.to_string(), x.clone()));
+        }
+        let dims = x.dims.clone();
+        let rank = dims.len();
+        // per-lane scale / zero-point, broadcast to x's shape
+        let (sb, zb) = if channels == 1 {
+            let s = g.slice(&self.act_scales, &[(offset, offset + 1)])?;
+            let s0 = g.reshape(&s, &[])?;
+            let z = g.slice(&self.act_zps, &[(offset, offset + 1)])?;
+            let z0 = g.reshape(&z, &[])?;
+            (g.splat(&s0, &dims)?, g.splat(&z0, &dims)?)
+        } else {
+            if dims[rank - 1] != channels {
+                bail!("site {name}: {channels} lanes vs last dim {}", dims[rank - 1]);
+            }
+            let s = g.slice(&self.act_scales, &[(offset, offset + channels)])?;
+            let z = g.slice(&self.act_zps, &[(offset, offset + channels)])?;
+            (
+                g.broadcast(&s, &dims, &[rank - 1])?,
+                g.broadcast(&z, &dims, &[rank - 1])?,
+            )
+        };
+        // cfg row [qmin, qmax, enable]
+        let row = g.slice(&self.act_cfg, &[(idx, idx + 1), (0, 3)])?;
+        let scalar = |g: &mut GraphBuilder, row: &Op, j: usize| -> Result<Op> {
+            let c = g.slice(row, &[(0, 1), (j, j + 1)])?;
+            g.reshape(&c, &[])
+        };
+        let qmin = scalar(g, &row, 0)?;
+        let qmax = scalar(g, &row, 1)?;
+        let enable = scalar(g, &row, 2)?;
+        let qmin_b = g.splat(&qmin, &dims)?;
+        let qmax_b = g.splat(&qmax, &dims)?;
+        // y = (clamp(round(x/s) + z, qmin, qmax) - z) * s  (== quant::qdq)
+        let t = g.div(x, &sb)?;
+        let r = g.round(&t);
+        let q = g.add(&r, &zb)?;
+        let qc = g.clamp(&qmin_b, &q, &qmax_b);
+        let dq = {
+            let c = g.sub(&qc, &zb)?;
+            g.mul(&c, &sb)?
+        };
+        // select(enable > 0.5, y, x)
+        let half = g.const_f32(0.5);
+        let pred = g.compare("GT", &enable, &half)?;
+        let pred_b = g.splat(&pred, &dims)?;
+        g.select(&pred_b, &dq, x)
+    }
+}
+
+/// Input/output signature entry for the manifest.
+#[derive(Debug, Clone)]
+struct SigEntry {
+    name: String,
+    shape: Vec<usize>,
+    dtype: &'static str,
+}
+
+fn sig(name: impl Into<String>, shape: &[usize], dtype: &'static str) -> SigEntry {
+    SigEntry { name: name.into(), shape: shape.to_vec(), dtype }
+}
+
+struct Artifact {
+    text: String,
+    inputs: Vec<SigEntry>,
+    outputs: Vec<SigEntry>,
+}
+
+/// Lower the forward (or diagnostic) graph for `cfg` at batch size `b`.
+fn build_forward(cfg: &FixtureConfig, b: usize, diag: bool, module: &str) -> Result<Artifact> {
+    let (t, d, h) = (cfg.seq, cfg.d, cfg.heads);
+    let dh = d / h;
+    if dh * h != d {
+        bail!("heads {h} must divide d {d}");
+    }
+    let (offsets, total) = site_offsets(cfg);
+    let sites = site_spec(cfg);
+    let n_sites = sites.len();
+
+    let mut g = GraphBuilder::new(module);
+    let mut inputs = Vec::new();
+    let mut p: BTreeMap<String, Op> = BTreeMap::new();
+    for (name, shape) in param_spec(cfg) {
+        let op = g.param(DType::F32, &shape);
+        inputs.push(sig(format!("param.{name}"), &shape, "f32"));
+        p.insert(name, op);
+    }
+    let act_scales = g.param(DType::F32, &[total]);
+    inputs.push(sig("act_scales", &[total], "f32"));
+    let act_zps = g.param(DType::F32, &[total]);
+    inputs.push(sig("act_zps", &[total], "f32"));
+    let act_cfg = g.param(DType::F32, &[n_sites, 3]);
+    inputs.push(sig("act_cfg", &[n_sites, 3], "f32"));
+    let ids = g.param(DType::S32, &[b, t]);
+    inputs.push(sig("input_ids", &[b, t], "i32"));
+    let tt = g.param(DType::S32, &[b, t]);
+    inputs.push(sig("token_type", &[b, t], "i32"));
+    let mask = g.param(DType::F32, &[b, t]);
+    inputs.push(sig("attn_mask", &[b, t], "f32"));
+
+    let mut q = SiteQuant {
+        sites,
+        offsets,
+        next: 0,
+        diag,
+        taps: Vec::new(),
+        act_scales,
+        act_zps,
+        act_cfg,
+    };
+
+    // embeddings: tok[ids] + pos + type[token_type]
+    let ids_flat = g.reshape(&ids, &[b * t])?;
+    let tok = g.gather_rows(&p["embed.tok"], &ids_flat)?;
+    let tok = g.reshape(&tok, &[b, t, d])?;
+    let pos = g.broadcast(&p["embed.pos"], &[b, t, d], &[1, 2])?;
+    let tt_flat = g.reshape(&tt, &[b * t])?;
+    let typ = g.gather_rows(&p["embed.type"], &tt_flat)?;
+    let typ = g.reshape(&typ, &[b, t, d])?;
+    let x0 = g.add(&tok, &pos)?;
+    let x0 = g.add(&x0, &typ)?;
+    let x0 = q.apply(&mut g, "embed_sum", &x0)?;
+    let x0 = g.layernorm(&x0, &p["embed.ln.g"], &p["embed.ln.b"])?;
+    let mut x = q.apply(&mut g, "embed_ln_out", &x0)?;
+
+    // additive attention-mask bias, broadcast to [b, h, t, t]
+    let one = g.const_f32(1.0);
+    let ones = g.splat(&one, &[b, t])?;
+    let inv_mask = g.sub(&ones, &mask)?;
+    let bias2 = g.scale(&inv_mask, MASK_BIAS)?;
+    let bias4 = g.broadcast(&bias2, &[b, h, t, t], &[0, 3])?;
+
+    for i in 0..cfg.layers {
+        let pf = format!("layer{i}.");
+        let wq = g.matmul_bias(&x, &p[&format!("{pf}q.w")], &p[&format!("{pf}q.b")])?;
+        let wq = q.apply(&mut g, &format!("{pf}q"), &wq)?;
+        let wk = g.matmul_bias(&x, &p[&format!("{pf}k.w")], &p[&format!("{pf}k.b")])?;
+        let wk = q.apply(&mut g, &format!("{pf}k"), &wk)?;
+        let wv = g.matmul_bias(&x, &p[&format!("{pf}v.w")], &p[&format!("{pf}v.b")])?;
+        let wv = q.apply(&mut g, &format!("{pf}v"), &wv)?;
+        // [b, t, d] -> [b, h, t, dh]
+        let heads = |g: &mut GraphBuilder, v: &Op| -> Result<Op> {
+            let r = g.reshape(v, &[b, t, h, dh])?;
+            g.transpose(&r, &[0, 2, 1, 3])
+        };
+        let qh = heads(&mut g, &wq)?;
+        let kh = heads(&mut g, &wk)?;
+        let vh = heads(&mut g, &wv)?;
+        let scores = g.dot_general(&qh, &kh, &[0, 1], &[0, 1], &[3], &[3])?;
+        let scores = g.scale(&scores, 1.0 / (dh as f32).sqrt())?;
+        let scores = g.add(&scores, &bias4)?;
+        let scores = q.apply(&mut g, &format!("{pf}attn_scores"), &scores)?;
+        let probs = g.softmax(&scores)?;
+        let probs = q.apply(&mut g, &format!("{pf}attn_probs"), &probs)?;
+        let ctx = g.dot_general(&probs, &vh, &[0, 1], &[0, 1], &[3], &[2])?;
+        let ctx = g.transpose(&ctx, &[0, 2, 1, 3])?;
+        let ctx = g.reshape(&ctx, &[b, t, d])?;
+        let ctx = q.apply(&mut g, &format!("{pf}attn_ctx"), &ctx)?;
+        let ao =
+            g.matmul_bias(&ctx, &p[&format!("{pf}attn_out.w")], &p[&format!("{pf}attn_out.b")])?;
+        let ao = q.apply(&mut g, &format!("{pf}attn_out"), &ao)?;
+        let res1 = g.add(&x, &ao)?;
+        let res1 = q.apply(&mut g, &format!("{pf}res1_sum"), &res1)?;
+        let ln1 = g.layernorm(&res1, &p[&format!("{pf}ln1.g")], &p[&format!("{pf}ln1.b")])?;
+        let ln1 = q.apply(&mut g, &format!("{pf}ln1_out"), &ln1)?;
+        let hdn = g.matmul_bias(&ln1, &p[&format!("{pf}ffn1.w")], &p[&format!("{pf}ffn1.b")])?;
+        let hdn = g.gelu(&hdn)?;
+        let hdn = q.apply(&mut g, &format!("{pf}ffn_hidden"), &hdn)?;
+        let fo = g.matmul_bias(&hdn, &p[&format!("{pf}ffn2.w")], &p[&format!("{pf}ffn2.b")])?;
+        let fo = q.apply(&mut g, &format!("{pf}ffn_out"), &fo)?;
+        let res2 = g.add(&ln1, &fo)?;
+        let res2 = q.apply(&mut g, &format!("{pf}res2_sum"), &res2)?;
+        let ln2 = g.layernorm(&res2, &p[&format!("{pf}ln2.g")], &p[&format!("{pf}ln2.b")])?;
+        x = q.apply(&mut g, &format!("{pf}ln2_out"), &ln2)?;
+    }
+
+    // pooler over the [CLS] position + classification/regression head
+    let cls = g.slice(&x, &[(0, b), (0, 1), (0, d)])?;
+    let cls = g.reshape(&cls, &[b, d])?;
+    let pooled = g.matmul_bias(&cls, &p["pool.w"], &p["pool.b"])?;
+    let pooled = g.tanh(&pooled);
+    let pooled = q.apply(&mut g, "pooled", &pooled)?;
+    let logits = g.matmul_bias(&pooled, &p["head.w"], &p["head.b"])?;
+    let logits = q.apply(&mut g, "head_out", &logits)?;
+
+    if q.next != q.sites.len() {
+        bail!("forward quantized {} of {} sites", q.next, q.sites.len());
+    }
+
+    let mut outputs = vec![sig("logits", &[b, cfg.n_out], "f32")];
+    let mut roots = vec![logits];
+    for (name, tap) in &q.taps {
+        outputs.push(sig(format!("tap.{name}"), &tap.dims, "f32"));
+        roots.push(tap.clone());
+    }
+    Ok(Artifact { text: g.finish(&roots), inputs, outputs })
+}
+
+/// Standalone per-lane fake-quant kernel (smoke-test artifact; same
+/// signature as aot.py's `kernel_fq_d768`).
+fn build_kernel_fq(rows: usize, d: usize, module: &str) -> Result<Artifact> {
+    let mut g = GraphBuilder::new(module);
+    let x = g.param(DType::F32, &[rows, d]);
+    let s = g.param(DType::F32, &[d]);
+    let z = g.param(DType::F32, &[d]);
+    let c = g.param(DType::F32, &[3]);
+    let dims = vec![rows, d];
+    let sb = g.broadcast(&s, &dims, &[1])?;
+    let zb = g.broadcast(&z, &dims, &[1])?;
+    let scalar = |g: &mut GraphBuilder, c: &Op, j: usize| -> Result<Op> {
+        let v = g.slice(c, &[(j, j + 1)])?;
+        g.reshape(&v, &[])
+    };
+    let qmin = scalar(&mut g, &c, 0)?;
+    let qmax = scalar(&mut g, &c, 1)?;
+    let enable = scalar(&mut g, &c, 2)?;
+    let qmin_b = g.splat(&qmin, &dims)?;
+    let qmax_b = g.splat(&qmax, &dims)?;
+    let t = g.div(&x, &sb)?;
+    let r = g.round(&t);
+    let q = g.add(&r, &zb)?;
+    let qc = g.clamp(&qmin_b, &q, &qmax_b);
+    let dq = {
+        let c2 = g.sub(&qc, &zb)?;
+        g.mul(&c2, &sb)?
+    };
+    let half = g.const_f32(0.5);
+    let pred = g.compare("GT", &enable, &half)?;
+    let pred_b = g.splat(&pred, &dims)?;
+    let out = g.select(&pred_b, &dq, &x)?;
+    Ok(Artifact {
+        text: g.finish(&[out]),
+        inputs: vec![
+            sig("x", &[rows, d], "f32"),
+            sig("scale", &[d], "f32"),
+            sig("zp", &[d], "f32"),
+            sig("cfg", &[3], "f32"),
+        ],
+        outputs: vec![sig("out", &[rows, d], "f32")],
+    })
+}
+
+/// Tiny module with analytically-known outputs: `y = 2x + 1`, per-row
+/// sums, per-column maxima. The integration suite checks the interpreter
+/// against the closed form.
+fn build_kernel_affine(module: &str) -> Result<Artifact> {
+    let (rows, cols) = (4, 3);
+    let mut g = GraphBuilder::new(module);
+    let x = g.param(DType::F32, &[rows, cols]);
+    let y = {
+        let s = g.scale(&x, 2.0)?;
+        g.offset(&s, 1.0)?
+    };
+    let rowsum = g.reduce_add(&x, &[1])?;
+    let colmax = g.reduce_max(&x, &[0])?;
+    Ok(Artifact {
+        text: g.finish(&[y, rowsum, colmax]),
+        inputs: vec![sig("x", &[rows, cols], "f32")],
+        outputs: vec![
+            sig("y", &[rows, cols], "f32"),
+            sig("rowsum", &[rows], "f32"),
+            sig("colmax", &[cols], "f32"),
+        ],
+    })
+}
+
+// ---------------------------------------------------------------------------
+// manifest serialisation
+// ---------------------------------------------------------------------------
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn num_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| num(x)).collect())
+}
+
+fn f32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn sig_json(entries: &[SigEntry]) -> Json {
+    Json::Arr(
+        entries
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("shape", num_arr(&e.shape)),
+                    ("dtype", Json::Str(e.dtype.to_string())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn model_json(info: &ModelInfo) -> Json {
+    let c = &info.config;
+    obj(vec![
+        (
+            "config",
+            obj(vec![
+                ("name", Json::Str(c.name.clone())),
+                ("vocab", num(c.vocab)),
+                ("d", num(c.d)),
+                ("heads", num(c.heads)),
+                ("layers", num(c.layers)),
+                ("d_ff", num(c.d_ff)),
+                ("seq", num(c.seq)),
+                ("n_out", num(c.n_out)),
+                ("outlier_dims", num_arr(&c.outlier_dims)),
+                ("pad_id", num(c.pad_id as usize)),
+                ("cls_id", num(c.cls_id as usize)),
+                ("sep_id", num(c.sep_id as usize)),
+            ]),
+        ),
+        (
+            "params",
+            Json::Arr(
+                info.params
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("name", Json::Str(p.name.clone())),
+                            ("shape", num_arr(&p.shape)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "sites",
+            Json::Arr(
+                info.sites
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("name", Json::Str(s.name.clone())),
+                            ("channels", num(s.channels)),
+                            ("offset", num(s.offset)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total_scale_lanes", num(info.total_scale_lanes)),
+        (
+            "wq",
+            Json::Arr(info.wq.iter().map(|w| Json::Str(w.clone())).collect()),
+        ),
+    ])
+}
+
+/// Golden fake-quant vectors, computed with the crate's own QDQ kernel so
+/// the cross-layer check in `repro smoke` / integration is exact by
+/// construction (mirrors aot.py `golden_fake_quant`).
+fn golden_fake_quant() -> Result<Json> {
+    let (rows, cols) = (5usize, 8usize);
+    let mut rng = Rng::new(1234);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-4.0, 4.0)).collect();
+    let scale: Vec<f32> = (0..cols).map(|_| rng.uniform(0.01, 0.3)).collect();
+    let zp: Vec<f32> = (0..cols).map(|_| rng.below(255) as f32).collect();
+    let grid = QGrid { qmin: 0.0, qmax: 255.0 };
+    let params: Vec<QParams> = scale
+        .iter()
+        .zip(&zp)
+        .map(|(&s, &z)| QParams { scale: s, zero_point: z })
+        .collect();
+    let t = Tensor::new(vec![rows, cols], x.clone())?;
+    let out = qdq_per_lane(&t, &params, grid)?;
+    Ok(obj(vec![
+        ("x", f32_arr(&x)),
+        ("scale", f32_arr(&scale)),
+        ("zp", f32_arr(&zp)),
+        ("qmin", Json::Num(0.0)),
+        ("qmax", Json::Num(255.0)),
+        ("rows", num(rows)),
+        ("cols", num(cols)),
+        ("out", f32_arr(out.data())),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------------
+
+/// `repro gen-artifacts [--artifacts DIR] [--ckpt DIR] [--no-ckpt]`
+pub fn cmd_gen_artifacts(args: &Args) -> Result<()> {
+    let out = args.get_or("artifacts", "artifacts");
+    let ckpt = args.get_or("ckpt", "checkpoints");
+    let ckpt_dir = if args.flag("no-ckpt") { None } else { Some(Path::new(ckpt)) };
+    generate(Path::new(out), ckpt_dir)
+}
+
+/// Emit the fixture artifact set: HLO modules + manifest.json (+ per-task
+/// deterministic init checkpoints unless `ckpt_dir` is None).
+pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let base = base_config();
+    let mut reg = base.clone();
+    reg.name = "base_reg".to_string();
+    reg.n_out = 1;
+
+    let mut jobs: Vec<(String, Artifact)> = Vec::new();
+    for (head, cfg) in [("cls", &base), ("reg", &reg)] {
+        for b in [1usize, 8] {
+            let name = format!("fwd_{head}_b{b}");
+            jobs.push((name.clone(), build_forward(cfg, b, false, &name)?));
+        }
+        let name = format!("diag_{head}_b1");
+        jobs.push((name.clone(), build_forward(cfg, 1, true, &name)?));
+    }
+    // parity artifact: the fixture has one lowering, so the "pallas" twin
+    // is the same graph (the agreement test then checks interpreter
+    // determinism end to end)
+    jobs.push((
+        "fwd_cls_b1_pallas".to_string(),
+        build_forward(&base, 1, false, "fwd_cls_b1_pallas")?,
+    ));
+    jobs.push(("kernel_fq_d768".to_string(), build_kernel_fq(8, 768, "kernel_fq_d768")?));
+    jobs.push(("kernel_affine".to_string(), build_kernel_affine("kernel_affine")?));
+
+    let mut artifacts = BTreeMap::new();
+    for (name, art) in &jobs {
+        let fname = format!("{name}.hlo.txt");
+        std::fs::write(out_dir.join(&fname), &art.text)?;
+        artifacts.insert(
+            name.clone(),
+            obj(vec![
+                ("file", Json::Str(fname)),
+                ("inputs", sig_json(&art.inputs)),
+                ("outputs", sig_json(&art.outputs)),
+            ]),
+        );
+        println!(
+            "  lowered {name}: {} inputs, {} outputs, {} KiB",
+            art.inputs.len(),
+            art.outputs.len(),
+            art.text.len() / 1024
+        );
+    }
+
+    let base_info = model_info(&base);
+    let reg_info = model_info(&reg);
+    let mut models = BTreeMap::new();
+    models.insert("base".to_string(), model_json(&base_info));
+    models.insert("base_reg".to_string(), model_json(&reg_info));
+
+    let manifest = obj(vec![
+        ("artifacts", Json::Obj(artifacts)),
+        ("models", Json::Obj(models)),
+        ("golden", obj(vec![("fake_quant", golden_fake_quant()?)])),
+    ]);
+    std::fs::write(out_dir.join("manifest.json"), manifest.to_string())?;
+    println!("wrote manifest with {} artifacts to {}", jobs.len(), out_dir.display());
+
+    if let Some(dir) = ckpt_dir {
+        for (i, task) in TASKS.iter().enumerate() {
+            let info = match task.kind {
+                TaskKind::Regression => &reg_info,
+                TaskKind::Classification(_) => &base_info,
+            };
+            let params = Params::init(info, 1000 + i as u64);
+            checkpoint::save(&params, dir.join(format!("{}.ckpt", task.name)))?;
+        }
+        println!("wrote {} fixture checkpoints to {}", TASKS.len(), dir.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::{interpret, parse_module, Value};
+
+    /// A micro config that keeps unit tests fast; d stays divisible by
+    /// heads and by the PEG group counts the qconfig tests use.
+    fn micro() -> FixtureConfig {
+        FixtureConfig {
+            name: "micro".to_string(),
+            vocab: 8,
+            d: 8,
+            heads: 2,
+            layers: 1,
+            d_ff: 16,
+            seq: 4,
+            n_out: 3,
+            outlier_dims: vec![1],
+        }
+    }
+
+    fn forward_inputs(cfg: &FixtureConfig, b: usize, enable: f32) -> Vec<Value> {
+        let info = model_info(cfg);
+        let params = Params::init(&info, 42);
+        let mut vals: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| Value::F32 { dims: t.shape().to_vec(), data: t.data().to_vec() })
+            .collect();
+        let s = info.total_scale_lanes;
+        vals.push(Value::F32 { dims: vec![s], data: vec![1.0; s] });
+        vals.push(Value::F32 { dims: vec![s], data: vec![0.0; s] });
+        let n_sites = info.sites.len();
+        let mut cfg3 = Vec::with_capacity(n_sites * 3);
+        for _ in 0..n_sites {
+            cfg3.extend_from_slice(&[0.0, 255.0, enable]);
+        }
+        vals.push(Value::F32 { dims: vec![n_sites, 3], data: cfg3 });
+        let t = cfg.seq;
+        let ids: Vec<i32> = (0..b * t).map(|i| (i % cfg.vocab) as i32).collect();
+        vals.push(Value::S32 { dims: vec![b, t], data: ids });
+        vals.push(Value::S32 { dims: vec![b, t], data: vec![0; b * t] });
+        vals.push(Value::F32 { dims: vec![b, t], data: vec![1.0; b * t] });
+        vals
+    }
+
+    #[test]
+    fn topology_matches_paper_proportions() {
+        let info = model_info(&base_config());
+        assert_eq!(info.sites.len(), 13 * info.config.layers + 4);
+        assert_eq!(info.config.d, 128);
+        let mut off = 0;
+        for s in &info.sites {
+            assert_eq!(s.offset, off);
+            off += s.channels;
+        }
+        assert_eq!(off, info.total_scale_lanes);
+        // fwd signature: params + 3 quant tensors + 3 batch tensors
+        let art = build_forward(&base_config(), 1, false, "t").unwrap();
+        assert_eq!(art.inputs.len(), info.params.len() + 6);
+    }
+
+    #[test]
+    fn forward_is_finite_deterministic_and_quant_sensitive() {
+        let cfg = micro();
+        let art = build_forward(&cfg, 2, false, "micro_fwd").unwrap();
+        let m = parse_module(&art.text).unwrap();
+        let run = |enable: f32| -> Vec<f32> {
+            let out = interpret(&m, &forward_inputs(&cfg, 2, enable)).unwrap();
+            out[0].f32s().unwrap().to_vec()
+        };
+        let fp32 = run(0.0);
+        assert_eq!(fp32.len(), 2 * cfg.n_out);
+        assert!(fp32.iter().all(|v| v.is_finite()));
+        assert_eq!(fp32, run(0.0), "interpreter must be deterministic");
+        // crushing activations to the [0,255] grid at scale 1 changes the
+        // logits but keeps them finite
+        let crushed = run(1.0);
+        assert!(crushed.iter().all(|v| v.is_finite()));
+        assert_ne!(fp32, crushed);
+    }
+
+    #[test]
+    fn diag_taps_cover_every_site_in_order() {
+        let cfg = micro();
+        let art = build_forward(&cfg, 1, true, "micro_diag").unwrap();
+        let info = model_info(&cfg);
+        assert_eq!(art.outputs.len(), 1 + info.sites.len());
+        for (o, s) in art.outputs[1..].iter().zip(&info.sites) {
+            assert_eq!(o.name, format!("tap.{}", s.name));
+            if s.channels > 1 {
+                assert_eq!(*o.shape.last().unwrap(), s.channels, "{}", s.name);
+            }
+        }
+        let m = parse_module(&art.text).unwrap();
+        let out = interpret(&m, &forward_inputs(&cfg, 1, 0.0)).unwrap();
+        assert_eq!(out.len(), 1 + info.sites.len());
+        for v in &out {
+            assert!(v.f32s().unwrap().iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn kernel_fq_matches_rust_qdq() {
+        let art = build_kernel_fq(2, 4, "fq_test").unwrap();
+        let m = parse_module(&art.text).unwrap();
+        let x = [0.3f32, -1.2, 2.7, 0.05, 1.11, -0.4, 0.0, 3.9];
+        let scale = [0.02f32, 0.05, 0.1, 0.2];
+        let zp = [128.0f32, 3.0, 0.0, 17.0];
+        let out = interpret(&m, &[
+            Value::F32 { dims: vec![2, 4], data: x.to_vec() },
+            Value::F32 { dims: vec![4], data: scale.to_vec() },
+            Value::F32 { dims: vec![4], data: zp.to_vec() },
+            Value::F32 { dims: vec![3], data: vec![0.0, 255.0, 1.0] },
+        ])
+        .unwrap();
+        let got = out[0].f32s().unwrap();
+        let grid = QGrid { qmin: 0.0, qmax: 255.0 };
+        for (i, (&g, &v)) in got.iter().zip(&x).enumerate() {
+            let p = QParams { scale: scale[i % 4], zero_point: zp[i % 4] };
+            let want = crate::quant::qdq(v, p, grid);
+            assert!((g - want).abs() < 1e-5, "lane {i}: {g} vs {want}");
+        }
+        // enable = 0 passes through untouched
+        let out = interpret(&m, &[
+            Value::F32 { dims: vec![2, 4], data: x.to_vec() },
+            Value::F32 { dims: vec![4], data: scale.to_vec() },
+            Value::F32 { dims: vec![4], data: zp.to_vec() },
+            Value::F32 { dims: vec![3], data: vec![0.0, 255.0, 0.0] },
+        ])
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &x);
+    }
+
+    #[test]
+    fn kernel_affine_analytic_values() {
+        let art = build_kernel_affine("affine_test").unwrap();
+        let m = parse_module(&art.text).unwrap();
+        let x: Vec<f32> = (0..12).map(|i| i as f32 - 5.0).collect();
+        let out = interpret(&m, &[Value::F32 { dims: vec![4, 3], data: x.clone() }])
+            .unwrap();
+        let y = out[0].f32s().unwrap();
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - (2.0 * b + 1.0)).abs() < 1e-6);
+        }
+        let rowsum = out[1].f32s().unwrap();
+        for (r, chunk) in rowsum.iter().zip(x.chunks(3)) {
+            assert!((r - chunk.iter().sum::<f32>()).abs() < 1e-6);
+        }
+        let colmax = out[2].f32s().unwrap();
+        assert_eq!(colmax, &[x[9], x[10], x[11]]);
+    }
+
+    #[test]
+    fn generate_writes_loadable_artifacts() {
+        let dir = std::env::temp_dir().join("tq_fixture_gen_test");
+        std::fs::remove_dir_all(&dir).ok();
+        // micro-speed: no checkpoints in the unit test
+        generate(&dir, None).unwrap();
+        let manifest = crate::model::manifest::Manifest::load(&dir).unwrap();
+        assert!(manifest.artifacts.len() >= 9);
+        assert!(manifest.artifact("fwd_cls_b8").is_ok());
+        assert!(manifest.artifact("diag_reg_b1").is_ok());
+        assert!(manifest.model("base").is_ok());
+        assert!(manifest.model("base_reg").is_ok());
+        assert!(manifest.golden_fake_quant.is_some());
+        // every artifact file parses
+        for a in manifest.artifacts.values() {
+            let text = std::fs::read_to_string(&a.file).unwrap();
+            parse_module(&text).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

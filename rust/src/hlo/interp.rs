@@ -1,0 +1,1262 @@
+//! Host-side HLO interpreter.
+//!
+//! Evaluates a parsed [`HloModule`] on [`Value`] inputs, covering the op
+//! set BERT-style forward/diag graphs need: `parameter`, `constant`,
+//! `broadcast`, `reshape`, `transpose`, `slice`, `concatenate`,
+//! `dot`/`dot-general`, the elementwise arithmetic ops, `exp`, `tanh`,
+//! `rsqrt`, `sqrt`, `log`, `negate`, `abs`, `floor`, `ceil`,
+//! `round-nearest-afz`, `clamp`, `select`, `compare`, `convert`, `iota`,
+//! `reduce` (add/max/min/mul combinators), `gather`, `tuple` and
+//! `get-tuple-element`.
+//!
+//! Instructions are evaluated in program order (HLO text is topologically
+//! sorted); each instruction's computed dims are checked against its
+//! declared shape, so a malformed module fails loudly instead of producing
+//! silently misshapen tensors. Everything here is plain data and pure
+//! functions — `Send + Sync` — which is what lets `runtime::Runtime` share
+//! interpreted executables across sweep workers exactly like compiled
+//! ones.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::parser::{parse_literal_numbers, parse_slice_ranges, Computation, HloModule, Inst};
+use super::{strides, DType, Shape, Value};
+
+/// Run the module's ENTRY computation. The root is usually a tuple (all
+/// our graphs lower with `return_tuple=True`); its elements are returned
+/// in order. A non-tuple root comes back as a single-element vec.
+pub fn interpret(module: &HloModule, inputs: &[Value]) -> Result<Vec<Value>> {
+    let root = eval_computation(module, module.entry(), inputs)?;
+    match root {
+        Value::Tuple(parts) => Ok(parts),
+        other => Ok(vec![other]),
+    }
+}
+
+fn eval_computation(module: &HloModule, comp: &Computation, args: &[Value]) -> Result<Value> {
+    if args.len() != comp.params.len() {
+        bail!(
+            "computation {}: {} arguments given, wants {}",
+            comp.name,
+            args.len(),
+            comp.params.len()
+        );
+    }
+    let mut env: Vec<Option<Value>> = Vec::with_capacity(comp.insts.len());
+    for _ in 0..comp.insts.len() {
+        env.push(None);
+    }
+    for (i, inst) in comp.insts.iter().enumerate() {
+        let v = eval_inst(module, comp, &env, inst, args)
+            .with_context(|| format!("in %{} = {}(..)", inst.name, inst.opcode))?;
+        check_dims(inst, &v)?;
+        env[i] = Some(v);
+    }
+    env[comp.root]
+        .take()
+        .ok_or_else(|| anyhow!("computation {}: root not evaluated", comp.name))
+}
+
+/// Declared vs computed dims must agree (tuples are checked per element
+/// count only).
+fn check_dims(inst: &Inst, v: &Value) -> Result<()> {
+    match (&inst.shape, v) {
+        (Shape::Tuple(shapes), Value::Tuple(parts)) => {
+            if shapes.len() != parts.len() {
+                bail!(
+                    "%{}: declared tuple arity {} != computed {}",
+                    inst.name,
+                    shapes.len(),
+                    parts.len()
+                );
+            }
+            Ok(())
+        }
+        (Shape::Array { dims, .. }, v) => {
+            if v.dims() != &dims[..] {
+                bail!("%{}: declared dims {:?} != computed {:?}", inst.name, dims, v.dims());
+            }
+            Ok(())
+        }
+        _ => bail!("%{}: declared/computed shape kind mismatch", inst.name),
+    }
+}
+
+fn operand<'a>(
+    comp: &Computation,
+    env: &'a [Option<Value>],
+    inst: &Inst,
+    k: usize,
+) -> Result<&'a Value> {
+    let name = inst
+        .operands
+        .get(k)
+        .ok_or_else(|| anyhow!("%{}: missing operand {k}", inst.name))?;
+    let idx = comp
+        .index
+        .get(name)
+        .ok_or_else(|| anyhow!("%{}: unknown operand %{name}", inst.name))?;
+    env[*idx]
+        .as_ref()
+        .ok_or_else(|| anyhow!("%{}: operand %{name} not yet evaluated", inst.name))
+}
+
+fn eval_inst(
+    module: &HloModule,
+    comp: &Computation,
+    env: &[Option<Value>],
+    inst: &Inst,
+    args: &[Value],
+) -> Result<Value> {
+    let op = inst.opcode.as_str();
+    match op {
+        "parameter" => {
+            let i: usize = inst
+                .payload
+                .as_deref()
+                .unwrap_or("")
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad parameter payload"))?;
+            let v = args
+                .get(i)
+                .ok_or_else(|| anyhow!("parameter({i}) out of range"))?;
+            if v.len() != inst.shape.elems() {
+                bail!(
+                    "parameter({i}): argument has {} elements, shape wants {}",
+                    v.len(),
+                    inst.shape.elems()
+                );
+            }
+            Ok(v.clone())
+        }
+        "constant" => {
+            let nums = parse_literal_numbers(inst.payload.as_deref().unwrap_or(""))?;
+            let dims = inst.shape.dims()?.to_vec();
+            let want: usize = dims.iter().product();
+            if nums.len() != want {
+                bail!("constant has {} values, shape wants {want}", nums.len());
+            }
+            match inst.shape.dtype()? {
+                DType::F32 => Ok(Value::F32 {
+                    dims,
+                    data: nums.iter().map(|&x| x as f32).collect(),
+                }),
+                DType::S32 => Ok(Value::S32 {
+                    dims,
+                    data: nums.iter().map(|&x| x as i32).collect(),
+                }),
+                DType::Pred => Ok(Value::Pred {
+                    dims,
+                    data: nums.iter().map(|&x| x != 0.0).collect(),
+                }),
+            }
+        }
+        "broadcast" => {
+            let x = operand(comp, env, inst, 0)?;
+            let out_dims = inst.shape.dims()?;
+            let map = inst.attr_dims_or("dimensions", &[])?;
+            broadcast_value(x, out_dims, &map)
+        }
+        "reshape" => {
+            let x = operand(comp, env, inst, 0)?;
+            let dims = inst.shape.dims()?.to_vec();
+            let want: usize = dims.iter().product();
+            if x.len() != want {
+                bail!("reshape: {} elements cannot view as {dims:?}", x.len());
+            }
+            Ok(with_dims(x.clone(), dims))
+        }
+        "transpose" => {
+            let x = operand(comp, env, inst, 0)?;
+            let perm = inst.attr_dims("dimensions")?;
+            transpose_value(x, &perm)
+        }
+        "slice" => {
+            let x = operand(comp, env, inst, 0)?;
+            let ranges = parse_slice_ranges(inst.attr_str("slice")?)?;
+            slice_value(x, &ranges)
+        }
+        "concatenate" => {
+            let dim = *inst
+                .attr_dims("dimensions")?
+                .first()
+                .ok_or_else(|| anyhow!("concatenate without dimension"))?;
+            let parts: Vec<&Value> = (0..inst.operands.len())
+                .map(|k| operand(comp, env, inst, k))
+                .collect::<Result<_>>()?;
+            concat_values(&parts, dim)
+        }
+        "dot" | "dot-general" => {
+            let a = operand(comp, env, inst, 0)?;
+            let b = operand(comp, env, inst, 1)?;
+            let lb = inst.attr_dims_or("lhs_batch_dims", &[])?;
+            let rb = inst.attr_dims_or("rhs_batch_dims", &[])?;
+            let lc = inst.attr_dims_or("lhs_contracting_dims", &[])?;
+            let rc = inst.attr_dims_or("rhs_contracting_dims", &[])?;
+            dot_general(a, b, &lb, &rb, &lc, &rc)
+        }
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power" => {
+            let a = operand(comp, env, inst, 0)?;
+            let b = operand(comp, env, inst, 1)?;
+            binary(op, a, b)
+        }
+        "exp" | "exponential" | "tanh" | "rsqrt" | "sqrt" | "log" | "negate" | "abs"
+        | "floor" | "ceil" | "round-nearest-afz" => {
+            let x = operand(comp, env, inst, 0)?;
+            unary(op, x)
+        }
+        "clamp" => {
+            let lo = operand(comp, env, inst, 0)?;
+            let x = operand(comp, env, inst, 1)?;
+            let hi = operand(comp, env, inst, 2)?;
+            clamp_value(lo, x, hi)
+        }
+        "select" => {
+            let p = operand(comp, env, inst, 0)?;
+            let t = operand(comp, env, inst, 1)?;
+            let f = operand(comp, env, inst, 2)?;
+            select_value(p, t, f)
+        }
+        "compare" => {
+            let a = operand(comp, env, inst, 0)?;
+            let b = operand(comp, env, inst, 1)?;
+            compare_value(inst.attr_str("direction")?, a, b)
+        }
+        "convert" => {
+            let x = operand(comp, env, inst, 0)?;
+            convert_value(x, inst.shape.dtype()?)
+        }
+        "iota" => {
+            let dims = inst.shape.dims()?.to_vec();
+            let d = inst.attr_usize("iota_dimension")?;
+            iota_value(&dims, d, inst.shape.dtype()?)
+        }
+        "reduce" => {
+            let x = operand(comp, env, inst, 0)?;
+            let init = operand(comp, env, inst, 1)?;
+            let dims = inst.attr_dims("dimensions")?;
+            let apply = inst.attr_str("to_apply")?.trim_start_matches('%');
+            let comb = combinator_of(module, apply)?;
+            reduce_value(x, init, &dims, comb)
+        }
+        "tuple" => {
+            let parts: Vec<Value> = (0..inst.operands.len())
+                .map(|k| operand(comp, env, inst, k).cloned())
+                .collect::<Result<_>>()?;
+            Ok(Value::Tuple(parts))
+        }
+        "get-tuple-element" => {
+            let x = operand(comp, env, inst, 0)?;
+            let i = inst.attr_usize("index")?;
+            match x {
+                Value::Tuple(parts) => parts
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("tuple index {i} out of range")),
+                _ => bail!("get-tuple-element on non-tuple"),
+            }
+        }
+        "gather" => {
+            let x = operand(comp, env, inst, 0)?;
+            let idx = operand(comp, env, inst, 1)?;
+            gather_value(inst, x, idx)
+        }
+        other => bail!("unsupported opcode {other:?}"),
+    }
+}
+
+fn with_dims(v: Value, dims: Vec<usize>) -> Value {
+    match v {
+        Value::F32 { data, .. } => Value::F32 { dims, data },
+        Value::S32 { data, .. } => Value::S32 { dims, data },
+        Value::Pred { data, .. } => Value::Pred { dims, data },
+        Value::Tuple(parts) => Value::Tuple(parts),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// data movement
+// ---------------------------------------------------------------------------
+
+fn broadcast_map<T: Copy>(
+    data: &[T],
+    in_dims: &[usize],
+    out_dims: &[usize],
+    map: &[usize],
+) -> Result<Vec<T>> {
+    if map.len() != in_dims.len() {
+        bail!("broadcast dimensions {map:?} do not match operand rank {}", in_dims.len());
+    }
+    for (k, &od) in map.iter().enumerate() {
+        if od >= out_dims.len() || out_dims[od] != in_dims[k] {
+            bail!("broadcast: operand dim {k} ({}) does not fit output dim {od}", in_dims[k]);
+        }
+    }
+    let out_n: usize = out_dims.iter().product();
+    let in_strides = strides(in_dims);
+    let out_strides = strides(out_dims);
+    let mut out = Vec::with_capacity(out_n);
+    for oi in 0..out_n {
+        let mut src = 0usize;
+        for (k, &od) in map.iter().enumerate() {
+            let coord = (oi / out_strides[od]) % out_dims[od];
+            src += coord * in_strides[k];
+        }
+        out.push(data[src]);
+    }
+    Ok(out)
+}
+
+fn broadcast_value(x: &Value, out_dims: &[usize], map: &[usize]) -> Result<Value> {
+    let dims = out_dims.to_vec();
+    match x {
+        Value::F32 { dims: id, data } => Ok(Value::F32 {
+            data: broadcast_map(data, id, out_dims, map)?,
+            dims,
+        }),
+        Value::S32 { dims: id, data } => Ok(Value::S32 {
+            data: broadcast_map(data, id, out_dims, map)?,
+            dims,
+        }),
+        Value::Pred { dims: id, data } => Ok(Value::Pred {
+            data: broadcast_map(data, id, out_dims, map)?,
+            dims,
+        }),
+        Value::Tuple(_) => bail!("broadcast on tuple"),
+    }
+}
+
+fn transpose_map<T: Copy>(data: &[T], in_dims: &[usize], perm: &[usize]) -> Result<(Vec<usize>, Vec<T>)> {
+    if perm.len() != in_dims.len() {
+        bail!("transpose permutation {perm:?} invalid for rank {}", in_dims.len());
+    }
+    let mut seen = vec![false; in_dims.len()];
+    for &p in perm {
+        if p >= in_dims.len() || seen[p] {
+            bail!("transpose dimensions {perm:?} are not a permutation");
+        }
+        seen[p] = true;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let in_strides = strides(in_dims);
+    let out_n: usize = out_dims.iter().product();
+    let out_strides = strides(&out_dims);
+    let mut out = Vec::with_capacity(out_n);
+    for oi in 0..out_n {
+        let mut src = 0usize;
+        for (j, &p) in perm.iter().enumerate() {
+            let coord = (oi / out_strides[j]) % out_dims[j];
+            src += coord * in_strides[p];
+        }
+        out.push(data[src]);
+    }
+    Ok((out_dims, out))
+}
+
+fn transpose_value(x: &Value, perm: &[usize]) -> Result<Value> {
+    match x {
+        Value::F32 { dims, data } => {
+            let (dims, data) = transpose_map(data, dims, perm)?;
+            Ok(Value::F32 { dims, data })
+        }
+        Value::S32 { dims, data } => {
+            let (dims, data) = transpose_map(data, dims, perm)?;
+            Ok(Value::S32 { dims, data })
+        }
+        Value::Pred { dims, data } => {
+            let (dims, data) = transpose_map(data, dims, perm)?;
+            Ok(Value::Pred { dims, data })
+        }
+        Value::Tuple(_) => bail!("transpose on tuple"),
+    }
+}
+
+fn slice_map<T: Copy>(
+    data: &[T],
+    in_dims: &[usize],
+    ranges: &[(usize, usize, usize)],
+) -> Result<(Vec<usize>, Vec<T>)> {
+    if ranges.len() != in_dims.len() {
+        bail!("slice ranges {ranges:?} rank mismatch with {in_dims:?}");
+    }
+    let mut out_dims = Vec::with_capacity(ranges.len());
+    for (d, &(lo, hi, st)) in ranges.iter().enumerate() {
+        if st == 0 || lo > hi || hi > in_dims[d] {
+            bail!("bad slice [{lo}:{hi}:{st}] for dim {d} of size {}", in_dims[d]);
+        }
+        out_dims.push((hi - lo).div_ceil(st));
+    }
+    let in_strides = strides(in_dims);
+    let out_strides = strides(&out_dims);
+    let out_n: usize = out_dims.iter().product();
+    let mut out = Vec::with_capacity(out_n);
+    for oi in 0..out_n {
+        let mut src = 0usize;
+        for d in 0..out_dims.len() {
+            let coord = (oi / out_strides[d]) % out_dims[d];
+            src += (ranges[d].0 + coord * ranges[d].2) * in_strides[d];
+        }
+        out.push(data[src]);
+    }
+    Ok((out_dims, out))
+}
+
+fn slice_value(x: &Value, ranges: &[(usize, usize, usize)]) -> Result<Value> {
+    match x {
+        Value::F32 { dims, data } => {
+            let (dims, data) = slice_map(data, dims, ranges)?;
+            Ok(Value::F32 { dims, data })
+        }
+        Value::S32 { dims, data } => {
+            let (dims, data) = slice_map(data, dims, ranges)?;
+            Ok(Value::S32 { dims, data })
+        }
+        Value::Pred { dims, data } => {
+            let (dims, data) = slice_map(data, dims, ranges)?;
+            Ok(Value::Pred { dims, data })
+        }
+        Value::Tuple(_) => bail!("slice on tuple"),
+    }
+}
+
+fn concat_values(parts: &[&Value], dim: usize) -> Result<Value> {
+    let first = parts
+        .first()
+        .ok_or_else(|| anyhow!("concatenate with no operands"))?;
+    let base = first.dims().to_vec();
+    if dim >= base.len() {
+        bail!("concatenate dim {dim} out of range for {base:?}");
+    }
+    let mut out_dims = base.clone();
+    out_dims[dim] = 0;
+    for p in parts {
+        let d = p.dims();
+        if d.len() != base.len() {
+            bail!("concatenate rank mismatch");
+        }
+        for (k, (&a, &b)) in d.iter().zip(&base).enumerate() {
+            if k != dim && a != b {
+                bail!("concatenate non-concat dim {k} mismatch: {a} vs {b}");
+            }
+        }
+        out_dims[dim] += d[dim];
+    }
+    let outer: usize = base[..dim].iter().product();
+    let inner: usize = base[dim + 1..].iter().product();
+    match first {
+        Value::F32 { .. } => {
+            let mut out: Vec<f32> = Vec::with_capacity(out_dims.iter().product());
+            for o in 0..outer {
+                for p in parts {
+                    let chunk = p.dims()[dim] * inner;
+                    let data = p.f32s()?;
+                    out.extend_from_slice(&data[o * chunk..(o + 1) * chunk]);
+                }
+            }
+            Ok(Value::F32 { dims: out_dims, data: out })
+        }
+        Value::S32 { .. } => {
+            let mut out: Vec<i32> = Vec::with_capacity(out_dims.iter().product());
+            for o in 0..outer {
+                for p in parts {
+                    let chunk = p.dims()[dim] * inner;
+                    let data = p.i32s()?;
+                    out.extend_from_slice(&data[o * chunk..(o + 1) * chunk]);
+                }
+            }
+            Ok(Value::S32 { dims: out_dims, data: out })
+        }
+        _ => bail!("concatenate supports f32/s32"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// arithmetic
+// ---------------------------------------------------------------------------
+
+fn binary(op: &str, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims() != b.dims() {
+        bail!("{op}: shape mismatch {:?} vs {:?}", a.dims(), b.dims());
+    }
+    match (a, b) {
+        (Value::F32 { dims, data: x }, Value::F32 { data: y, .. }) => {
+            let f: fn(f32, f32) -> f32 = match op {
+                "add" => |a, b| a + b,
+                "subtract" => |a, b| a - b,
+                "multiply" => |a, b| a * b,
+                "divide" => |a, b| a / b,
+                "maximum" => f32::max,
+                "minimum" => f32::min,
+                "power" => f32::powf,
+                _ => bail!("{op} on f32 unsupported"),
+            };
+            Ok(Value::F32 {
+                dims: dims.clone(),
+                data: x.iter().zip(y).map(|(&u, &v)| f(u, v)).collect(),
+            })
+        }
+        (Value::S32 { dims, data: x }, Value::S32 { data: y, .. }) => {
+            let f: fn(i32, i32) -> i32 = match op {
+                "add" => |a, b| a.wrapping_add(b),
+                "subtract" => |a, b| a.wrapping_sub(b),
+                "multiply" => |a, b| a.wrapping_mul(b),
+                "divide" => |a, b| a / b,
+                "maximum" => i32::max,
+                "minimum" => i32::min,
+                _ => bail!("{op} on s32 unsupported"),
+            };
+            Ok(Value::S32 {
+                dims: dims.clone(),
+                data: x.iter().zip(y).map(|(&u, &v)| f(u, v)).collect(),
+            })
+        }
+        _ => bail!("{op}: operand dtype mismatch"),
+    }
+}
+
+fn unary(op: &str, x: &Value) -> Result<Value> {
+    match x {
+        Value::F32 { dims, data } => {
+            let f: fn(f32) -> f32 = match op {
+                "exp" | "exponential" => f32::exp,
+                "tanh" => f32::tanh,
+                "rsqrt" => |v| 1.0 / v.sqrt(),
+                "sqrt" => f32::sqrt,
+                "log" => f32::ln,
+                "negate" => |v| -v,
+                "abs" => f32::abs,
+                "floor" => f32::floor,
+                "ceil" => f32::ceil,
+                "round-nearest-afz" => f32::round,
+                _ => bail!("{op} on f32 unsupported"),
+            };
+            Ok(Value::F32 { dims: dims.clone(), data: data.iter().map(|&v| f(v)).collect() })
+        }
+        Value::S32 { dims, data } => match op {
+            "negate" => Ok(Value::S32 {
+                dims: dims.clone(),
+                data: data.iter().map(|&v| v.wrapping_neg()).collect(),
+            }),
+            "abs" => Ok(Value::S32 {
+                dims: dims.clone(),
+                data: data.iter().map(|&v| v.wrapping_abs()).collect(),
+            }),
+            _ => bail!("{op} on s32 unsupported"),
+        },
+        _ => bail!("{op}: unsupported operand dtype"),
+    }
+}
+
+/// Element of a maybe-scalar operand (HLO allows scalar min/max in clamp).
+fn at_f32(v: &Value, i: usize) -> Result<f32> {
+    let d = v.f32s()?;
+    if d.len() == 1 {
+        return Ok(d[0]);
+    }
+    d.get(i)
+        .copied()
+        .ok_or_else(|| anyhow!("clamp bound operand too short"))
+}
+
+fn clamp_value(lo: &Value, x: &Value, hi: &Value) -> Result<Value> {
+    let data = x.f32s()?;
+    let mut out = Vec::with_capacity(data.len());
+    for (i, &v) in data.iter().enumerate() {
+        out.push(v.max(at_f32(lo, i)?).min(at_f32(hi, i)?));
+    }
+    Ok(Value::F32 { dims: x.dims().to_vec(), data: out })
+}
+
+fn select_value(p: &Value, t: &Value, f: &Value) -> Result<Value> {
+    let preds = p.preds()?;
+    if t.dims() != f.dims() {
+        bail!("select: branch shape mismatch");
+    }
+    if preds.len() != 1 && preds.len() != t.len() {
+        bail!("select: pred has {} elements, branches have {}", preds.len(), t.len());
+    }
+    let pick = |i: usize| -> bool {
+        if preds.len() == 1 {
+            preds[0]
+        } else {
+            preds[i]
+        }
+    };
+    match (t, f) {
+        (Value::F32 { dims, data: a }, Value::F32 { data: b, .. }) => Ok(Value::F32 {
+            dims: dims.clone(),
+            data: (0..a.len()).map(|i| if pick(i) { a[i] } else { b[i] }).collect(),
+        }),
+        (Value::S32 { dims, data: a }, Value::S32 { data: b, .. }) => Ok(Value::S32 {
+            dims: dims.clone(),
+            data: (0..a.len()).map(|i| if pick(i) { a[i] } else { b[i] }).collect(),
+        }),
+        _ => bail!("select: unsupported branch dtypes"),
+    }
+}
+
+fn compare_value(direction: &str, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims() != b.dims() {
+        bail!("compare: shape mismatch");
+    }
+    let dims = a.dims().to_vec();
+    let cmp = |o: std::cmp::Ordering| -> bool {
+        use std::cmp::Ordering::*;
+        match direction {
+            "EQ" => o == Equal,
+            "NE" => o != Equal,
+            "LT" => o == Less,
+            "LE" => o != Greater,
+            "GT" => o == Greater,
+            "GE" => o != Less,
+            _ => false,
+        }
+    };
+    if !matches!(direction, "EQ" | "NE" | "LT" | "LE" | "GT" | "GE") {
+        bail!("compare: unknown direction {direction:?}");
+    }
+    let data: Vec<bool> = match (a, b) {
+        (Value::F32 { data: x, .. }, Value::F32 { data: y, .. }) => x
+            .iter()
+            .zip(y)
+            .map(|(&u, &v)| u.partial_cmp(&v).map(cmp).unwrap_or(false))
+            .collect(),
+        (Value::S32 { data: x, .. }, Value::S32 { data: y, .. }) => {
+            x.iter().zip(y).map(|(&u, &v)| cmp(u.cmp(&v))).collect()
+        }
+        _ => bail!("compare: dtype mismatch"),
+    };
+    Ok(Value::Pred { dims, data })
+}
+
+fn convert_value(x: &Value, to: DType) -> Result<Value> {
+    let dims = x.dims().to_vec();
+    match (x, to) {
+        (Value::F32 { data, .. }, DType::S32) => Ok(Value::S32 {
+            dims,
+            data: data.iter().map(|&v| v as i32).collect(),
+        }),
+        (Value::S32 { data, .. }, DType::F32) => Ok(Value::F32 {
+            dims,
+            data: data.iter().map(|&v| v as f32).collect(),
+        }),
+        (Value::Pred { data, .. }, DType::F32) => Ok(Value::F32 {
+            dims,
+            data: data.iter().map(|&v| if v { 1.0 } else { 0.0 }).collect(),
+        }),
+        (Value::Pred { data, .. }, DType::S32) => Ok(Value::S32 {
+            dims,
+            data: data.iter().map(|&v| i32::from(v)).collect(),
+        }),
+        (Value::F32 { data, .. }, DType::F32) => {
+            Ok(Value::F32 { dims, data: data.clone() })
+        }
+        (Value::S32 { data, .. }, DType::S32) => {
+            Ok(Value::S32 { dims, data: data.clone() })
+        }
+        _ => bail!("convert: unsupported conversion"),
+    }
+}
+
+fn iota_value(dims: &[usize], along: usize, dtype: DType) -> Result<Value> {
+    if along >= dims.len() {
+        bail!("iota dimension {along} out of range for {dims:?}");
+    }
+    let st = strides(dims);
+    let n: usize = dims.iter().product();
+    let coord = |i: usize| (i / st[along]) % dims[along];
+    match dtype {
+        DType::F32 => Ok(Value::F32 {
+            dims: dims.to_vec(),
+            data: (0..n).map(|i| coord(i) as f32).collect(),
+        }),
+        DType::S32 => Ok(Value::S32 {
+            dims: dims.to_vec(),
+            data: (0..n).map(|i| coord(i) as i32).collect(),
+        }),
+        DType::Pred => bail!("iota on pred"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// contractions & reductions
+// ---------------------------------------------------------------------------
+
+/// Linear offsets of every coordinate combination over the selected dims
+/// (row-major over `sel`'s order).
+fn offset_table(dims: &[usize], st: &[usize], sel: &[usize]) -> Vec<usize> {
+    let n: usize = sel.iter().map(|&d| dims[d]).product();
+    let mut out = Vec::with_capacity(n);
+    let mut coords = vec![0usize; sel.len()];
+    for _ in 0..n {
+        let mut off = 0usize;
+        for (c, &d) in coords.iter().zip(sel) {
+            off += c * st[d];
+        }
+        out.push(off);
+        for j in (0..sel.len()).rev() {
+            coords[j] += 1;
+            if coords[j] < dims[sel[j]] {
+                break;
+            }
+            coords[j] = 0;
+        }
+    }
+    out
+}
+
+fn dot_general(
+    a: &Value,
+    b: &Value,
+    lb: &[usize],
+    rb: &[usize],
+    lc: &[usize],
+    rc: &[usize],
+) -> Result<Value> {
+    let (ldims, ldata) = match a {
+        Value::F32 { dims, data } => (dims, data),
+        _ => bail!("dot: lhs must be f32"),
+    };
+    let (rdims, rdata) = match b {
+        Value::F32 { dims, data } => (dims, data),
+        _ => bail!("dot: rhs must be f32"),
+    };
+    if lb.len() != rb.len() || lc.len() != rc.len() {
+        bail!("dot: batch/contracting dim count mismatch");
+    }
+    for &d in lb.iter().chain(lc) {
+        if d >= ldims.len() {
+            bail!("dot: lhs dim {d} out of range for {ldims:?}");
+        }
+    }
+    for &d in rb.iter().chain(rc) {
+        if d >= rdims.len() {
+            bail!("dot: rhs dim {d} out of range for {rdims:?}");
+        }
+    }
+    for (&l, &r) in lb.iter().zip(rb) {
+        if ldims[l] != rdims[r] {
+            bail!("dot: batch dim size mismatch ({} vs {})", ldims[l], rdims[r]);
+        }
+    }
+    for (&l, &r) in lc.iter().zip(rc) {
+        if ldims[l] != rdims[r] {
+            bail!("dot: contracting dim size mismatch ({} vs {})", ldims[l], rdims[r]);
+        }
+    }
+    let l_free: Vec<usize> = (0..ldims.len())
+        .filter(|d| !lb.contains(d) && !lc.contains(d))
+        .collect();
+    let r_free: Vec<usize> = (0..rdims.len())
+        .filter(|d| !rb.contains(d) && !rc.contains(d))
+        .collect();
+    let lst = strides(ldims);
+    let rst = strides(rdims);
+    let lb_off = offset_table(ldims, &lst, lb);
+    let lm_off = offset_table(ldims, &lst, &l_free);
+    let lk_off = offset_table(ldims, &lst, lc);
+    let rb_off = offset_table(rdims, &rst, rb);
+    let rn_off = offset_table(rdims, &rst, &r_free);
+    let rk_off = offset_table(rdims, &rst, rc);
+    let (nb, m, n, kk) = (lb_off.len(), lm_off.len(), rn_off.len(), lk_off.len());
+    let mut out = vec![0.0f32; nb * m * n];
+    for bi in 0..nb {
+        for mi in 0..m {
+            let lbase = lb_off[bi] + lm_off[mi];
+            let row = &mut out[(bi * m + mi) * n..(bi * m + mi + 1) * n];
+            for (ni, slot) in row.iter_mut().enumerate() {
+                let rbase = rb_off[bi] + rn_off[ni];
+                let mut acc = 0.0f32;
+                for k in 0..kk {
+                    acc += ldata[lbase + lk_off[k]] * rdata[rbase + rk_off[k]];
+                }
+                *slot = acc;
+            }
+        }
+    }
+    let mut out_dims: Vec<usize> = lb.iter().map(|&d| ldims[d]).collect();
+    out_dims.extend(l_free.iter().map(|&d| ldims[d]));
+    out_dims.extend(r_free.iter().map(|&d| rdims[d]));
+    Ok(Value::F32 { dims: out_dims, data: out })
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Combinator {
+    Add,
+    Max,
+    Min,
+    Mul,
+}
+
+/// A reduction sub-computation must be a single binary op over its two
+/// parameters; its opcode names the combinator.
+fn combinator_of(module: &HloModule, name: &str) -> Result<Combinator> {
+    let comp = module.computation(name)?;
+    let root = &comp.insts[comp.root];
+    match root.opcode.as_str() {
+        "add" => Ok(Combinator::Add),
+        "maximum" => Ok(Combinator::Max),
+        "minimum" => Ok(Combinator::Min),
+        "multiply" => Ok(Combinator::Mul),
+        other => bail!("unsupported reduce combinator {other:?} in %{name}"),
+    }
+}
+
+fn reduce_value(x: &Value, init: &Value, rdims: &[usize], comb: Combinator) -> Result<Value> {
+    let (dims, data) = match x {
+        Value::F32 { dims, data } => (dims, data),
+        _ => bail!("reduce supports f32 operands"),
+    };
+    let init = *init
+        .f32s()?
+        .first()
+        .ok_or_else(|| anyhow!("reduce: empty init"))?;
+    for &d in rdims {
+        if d >= dims.len() {
+            bail!("reduce dim {d} out of range for {dims:?}");
+        }
+    }
+    let keep: Vec<usize> = (0..dims.len()).filter(|d| !rdims.contains(d)).collect();
+    let st = strides(dims);
+    let k_off = offset_table(dims, &st, rdims);
+    let o_off = offset_table(dims, &st, &keep);
+    let f: fn(f32, f32) -> f32 = match comb {
+        Combinator::Add => |a, b| a + b,
+        Combinator::Max => f32::max,
+        Combinator::Min => f32::min,
+        Combinator::Mul => |a, b| a * b,
+    };
+    let mut out = Vec::with_capacity(o_off.len());
+    for &o in &o_off {
+        let mut acc = init;
+        for &k in &k_off {
+            acc = f(acc, data[o + k]);
+        }
+        out.push(acc);
+    }
+    let out_dims: Vec<usize> = keep.iter().map(|&d| dims[d]).collect();
+    Ok(Value::F32 { dims: out_dims, data: out })
+}
+
+// ---------------------------------------------------------------------------
+// gather
+// ---------------------------------------------------------------------------
+
+fn gather_value(inst: &Inst, x: &Value, idx: &Value) -> Result<Value> {
+    let (odims, odata) = match x {
+        Value::F32 { dims, data } => (dims, data),
+        _ => bail!("gather supports f32 operands"),
+    };
+    let indices = idx.i32s()?;
+    let sdims = idx.dims();
+
+    let offset_dims = inst.attr_dims("offset_dims")?;
+    let collapsed = inst.attr_dims_or("collapsed_slice_dims", &[])?;
+    let start_map = inst.attr_dims("start_index_map")?;
+    let ivd = inst.attr_usize("index_vector_dim")?;
+    let slice_sizes = inst.attr_dims("slice_sizes")?;
+    if slice_sizes.len() != odims.len() {
+        bail!("gather: slice_sizes rank mismatch");
+    }
+    if start_map.iter().any(|&d| d >= odims.len())
+        || collapsed.iter().any(|&d| d >= odims.len())
+        || slice_sizes.iter().zip(odims).any(|(&s, &d)| s > d)
+        || ivd > sdims.len()
+    {
+        bail!("gather: dimension attributes out of range");
+    }
+
+    // start_indices batch dims (all but the index-vector dim)
+    let sbatch: Vec<usize> = (0..sdims.len()).filter(|&d| d != ivd).collect();
+    let index_len = if ivd < sdims.len() { sdims[ivd] } else { 1 };
+    if index_len != start_map.len() {
+        bail!("gather: index vector length {} != start_index_map {}", index_len, start_map.len());
+    }
+
+    // output dims: batch dims (in order) with offset dims interleaved at
+    // the positions named by offset_dims
+    let out_rank = sbatch.len() + offset_dims.len();
+    let kept_slice: Vec<usize> =
+        (0..odims.len()).filter(|d| !collapsed.contains(d)).collect();
+    if kept_slice.len() != offset_dims.len() {
+        bail!("gather: offset_dims arity mismatch");
+    }
+    let mut out_dims = vec![0usize; out_rank];
+    for (k, &od) in offset_dims.iter().enumerate() {
+        if od >= out_rank {
+            bail!("gather: offset dim {od} out of range");
+        }
+        out_dims[od] = slice_sizes[kept_slice[k]];
+    }
+    let mut bpos = 0usize;
+    let batch_out_dims: Vec<usize> =
+        (0..out_rank).filter(|d| !offset_dims.contains(d)).collect();
+    for &d in &batch_out_dims {
+        out_dims[d] = sdims[sbatch[bpos]];
+        bpos += 1;
+    }
+
+    let s_strides = strides(sdims);
+    let o_strides = strides(odims);
+    let out_strides = strides(&out_dims);
+    let out_n: usize = out_dims.iter().product();
+    let mut out = Vec::with_capacity(out_n);
+    for oi in 0..out_n {
+        // decompose the output index
+        let coord = |d: usize| (oi / out_strides[d]) % out_dims[d];
+        // start-index vector for this output element
+        let mut sbase = 0usize;
+        for (b, &sd) in sbatch.iter().enumerate() {
+            sbase += coord(batch_out_dims[b]) * s_strides[sd];
+        }
+        // operand coordinates: clamped start + in-slice offset
+        let mut src = 0usize;
+        for (k, &kd) in kept_slice.iter().enumerate() {
+            src += coord(offset_dims[k]) * o_strides[kd];
+        }
+        for (k, &om) in start_map.iter().enumerate() {
+            let raw = if ivd < sdims.len() {
+                indices[sbase + k * s_strides[ivd]]
+            } else {
+                indices[sbase]
+            };
+            let max_start = odims[om] - slice_sizes[om];
+            let s = (raw.max(0) as usize).min(max_start);
+            src += s * o_strides[om];
+        }
+        out.push(odata[src]);
+    }
+    Ok(Value::F32 { dims: out_dims, data: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parse_module;
+
+    /// Build a one-entry module around instruction lines, run it on
+    /// inputs, and return the (flattened) outputs.
+    fn run(params: &[&str], body: &[&str], inputs: &[Value]) -> Result<Vec<Value>> {
+        let mut text = String::from("HloModule t\n\n");
+        text.push_str(
+            "%red_add (a: f32[], b: f32[]) -> f32[] {\n  %a = f32[] parameter(0)\n  \
+             %b = f32[] parameter(1)\n  ROOT %r = f32[] add(f32[] %a, f32[] %b)\n}\n\n",
+        );
+        text.push_str(
+            "%red_max (a: f32[], b: f32[]) -> f32[] {\n  %a = f32[] parameter(0)\n  \
+             %b = f32[] parameter(1)\n  ROOT %r = f32[] maximum(f32[] %a, f32[] %b)\n}\n\n",
+        );
+        text.push_str("ENTRY %main () -> f32[] {\n");
+        for p in params {
+            text.push_str("  ");
+            text.push_str(p);
+            text.push('\n');
+        }
+        for b in body {
+            text.push_str("  ");
+            text.push_str(b);
+            text.push('\n');
+        }
+        text.push_str("}\n");
+        let m = parse_module(&text)?;
+        interpret(&m, inputs)
+    }
+
+    fn f32v(dims: &[usize], data: &[f32]) -> Value {
+        Value::F32 { dims: dims.to_vec(), data: data.to_vec() }
+    }
+
+    fn s32v(dims: &[usize], data: &[i32]) -> Value {
+        Value::S32 { dims: dims.to_vec(), data: data.to_vec() }
+    }
+
+    #[test]
+    fn golden_elementwise() {
+        let out = run(
+            &["%p0 = f32[4] parameter(0)", "%p1 = f32[4] parameter(1)"],
+            &[
+                "%s = f32[4] add(f32[4] %p0, f32[4] %p1)",
+                "%m = f32[4] multiply(f32[4] %s, f32[4] %p1)",
+                "ROOT %d = f32[4] subtract(f32[4] %m, f32[4] %p0)",
+            ],
+            &[f32v(&[4], &[1., 2., 3., 4.]), f32v(&[4], &[10., 20., 30., 40.])],
+        )
+        .unwrap();
+        // ((p0+p1)*p1) - p0
+        assert_eq!(out[0].f32s().unwrap(), &[109., 438., 987., 1756.]);
+    }
+
+    #[test]
+    fn golden_unary_and_clamp() {
+        let out = run(
+            &["%p0 = f32[3] parameter(0)"],
+            &[
+                "%e = f32[3] exp(f32[3] %p0)",
+                "%t = f32[3] tanh(f32[3] %e)",
+                "%c0 = f32[] constant(0.25)",
+                "%c1 = f32[] constant(0.75)",
+                "ROOT %c = f32[3] clamp(f32[] %c0, f32[3] %t, f32[] %c1)",
+            ],
+            &[f32v(&[3], &[-10.0, 0.0, 10.0])],
+        )
+        .unwrap();
+        let got = out[0].f32s().unwrap();
+        let want = [
+            ((-10.0f32).exp().tanh()).clamp(0.25, 0.75),
+            (1.0f32.tanh()).clamp(0.25, 0.75),
+            (10.0f32.exp().tanh()).clamp(0.25, 0.75),
+        ];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn golden_round_rsqrt() {
+        let out = run(
+            &["%p0 = f32[4] parameter(0)"],
+            &["ROOT %r = f32[4] round-nearest-afz(f32[4] %p0)"],
+            &[f32v(&[4], &[1.4, 1.5, -1.5, 2.6])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[1.0, 2.0, -2.0, 3.0]);
+
+        let out = run(
+            &["%p0 = f32[2] parameter(0)"],
+            &["ROOT %r = f32[2] rsqrt(f32[2] %p0)"],
+            &[f32v(&[2], &[4.0, 16.0])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[0.5, 0.25]);
+    }
+
+    #[test]
+    fn golden_broadcast_and_iota() {
+        let out = run(
+            &["%p0 = f32[3] parameter(0)"],
+            &["ROOT %b = f32[2,3] broadcast(f32[3] %p0), dimensions={1}"],
+            &[f32v(&[3], &[1., 2., 3.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[1., 2., 3., 1., 2., 3.]);
+        assert_eq!(out[0].dims(), &[2, 3]);
+
+        let out = run(&[], &["ROOT %i = s32[2,3] iota(), iota_dimension=1"], &[]).unwrap();
+        assert_eq!(out[0].i32s().unwrap(), &[0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn golden_transpose_slice_concat() {
+        let out = run(
+            &["%p0 = f32[2,3] parameter(0)"],
+            &["ROOT %t = f32[3,2] transpose(f32[2,3] %p0), dimensions={1,0}"],
+            &[f32v(&[2, 3], &[1., 2., 3., 4., 5., 6.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[1., 4., 2., 5., 3., 6.]);
+
+        let out = run(
+            &["%p0 = f32[2,3] parameter(0)"],
+            &["ROOT %s = f32[1,2] slice(f32[2,3] %p0), slice={[1:2], [0:3:2]}"],
+            &[f32v(&[2, 3], &[1., 2., 3., 4., 5., 6.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[4., 6.]);
+
+        let out = run(
+            &["%p0 = f32[1,2] parameter(0)", "%p1 = f32[1,2] parameter(1)"],
+            &["ROOT %c = f32[2,2] concatenate(f32[1,2] %p0, f32[1,2] %p1), dimensions={0}"],
+            &[f32v(&[1, 2], &[1., 2.]), f32v(&[1, 2], &[3., 4.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn golden_dot_plain_and_batched() {
+        // (2,3) x (3,2)
+        let out = run(
+            &["%p0 = f32[2,3] parameter(0)", "%p1 = f32[3,2] parameter(1)"],
+            &[
+                "ROOT %d = f32[2,2] dot(f32[2,3] %p0, f32[3,2] %p1), \
+                 lhs_contracting_dims={2}, rhs_contracting_dims={0}"
+                    .trim_start_matches(' '),
+            ],
+            &[
+                f32v(&[2, 3], &[1., 2., 3., 4., 5., 6.]),
+                f32v(&[3, 2], &[1., 0., 0., 1., 1., 1.]),
+            ],
+        );
+        // lhs_contracting_dims={2} is out of range for rank 2 -> must error
+        assert!(out.is_err());
+
+        let out = run(
+            &["%p0 = f32[2,3] parameter(0)", "%p1 = f32[3,2] parameter(1)"],
+            &[
+                "ROOT %d = f32[2,2] dot(f32[2,3] %p0, f32[3,2] %p1), \
+                 lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+            ],
+            &[
+                f32v(&[2, 3], &[1., 2., 3., 4., 5., 6.]),
+                f32v(&[3, 2], &[1., 0., 0., 1., 1., 1.]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[4., 5., 10., 11.]);
+
+        // batched: (2,2,2) x (2,2,2) over batch dim 0
+        let out = run(
+            &["%p0 = f32[2,2,2] parameter(0)", "%p1 = f32[2,2,2] parameter(1)"],
+            &[
+                "ROOT %d = f32[2,2,2] dot(f32[2,2,2] %p0, f32[2,2,2] %p1), \
+                 lhs_batch_dims={0}, rhs_batch_dims={0}, \
+                 lhs_contracting_dims={2}, rhs_contracting_dims={1}",
+            ],
+            &[
+                f32v(&[2, 2, 2], &[1., 2., 3., 4., 5., 6., 7., 8.]),
+                f32v(&[2, 2, 2], &[1., 0., 0., 1., 1., 0., 0., 1.]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[1., 2., 3., 4., 5., 6., 7., 8.]);
+    }
+
+    #[test]
+    fn golden_reduce() {
+        let out = run(
+            &["%p0 = f32[2,3] parameter(0)"],
+            &[
+                "%z = f32[] constant(0)",
+                "ROOT %r = f32[2] reduce(f32[2,3] %p0, f32[] %z), dimensions={1}, \
+                 to_apply=%red_add",
+            ],
+            &[f32v(&[2, 3], &[1., 2., 3., 4., 5., 6.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[6., 15.]);
+
+        let out = run(
+            &["%p0 = f32[2,3] parameter(0)"],
+            &[
+                "%z = f32[] constant(-inf)",
+                "ROOT %r = f32[3] reduce(f32[2,3] %p0, f32[] %z), dimensions={0}, \
+                 to_apply=%red_max",
+            ],
+            &[f32v(&[2, 3], &[1., 7., 3., 4., 5., 6.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[4., 7., 6.]);
+    }
+
+    #[test]
+    fn golden_compare_select_convert() {
+        let out = run(
+            &["%p0 = f32[4] parameter(0)", "%p1 = f32[4] parameter(1)"],
+            &[
+                "%c = pred[4] compare(f32[4] %p0, f32[4] %p1), direction=GT",
+                "ROOT %s = f32[4] select(pred[4] %c, f32[4] %p0, f32[4] %p1)",
+            ],
+            &[f32v(&[4], &[1., 5., 2., 8.]), f32v(&[4], &[3., 4., 7., 6.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[3., 5., 7., 8.]);
+
+        let out = run(
+            &["%p0 = s32[3] parameter(0)"],
+            &["ROOT %c = f32[3] convert(s32[3] %p0)"],
+            &[s32v(&[3], &[1, -2, 7])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[1.0, -2.0, 7.0]);
+    }
+
+    #[test]
+    fn golden_gather_embedding_lookup() {
+        // table [4,2], indices [3,1] -> rows [3,2]
+        let out = run(
+            &["%p0 = f32[4,2] parameter(0)", "%p1 = s32[3,1] parameter(1)"],
+            &[
+                "ROOT %g = f32[3,2] gather(f32[4,2] %p0, s32[3,1] %p1), \
+                 offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, \
+                 index_vector_dim=1, slice_sizes={1,2}",
+            ],
+            &[
+                f32v(&[4, 2], &[0., 1., 10., 11., 20., 21., 30., 31.]),
+                s32v(&[3, 1], &[2, 0, 3]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[20., 21., 0., 1., 30., 31.]);
+
+        // out-of-range indices clamp (XLA semantics)
+        let out = run(
+            &["%p0 = f32[4,2] parameter(0)", "%p1 = s32[1,1] parameter(1)"],
+            &[
+                "ROOT %g = f32[1,2] gather(f32[4,2] %p0, s32[1,1] %p1), \
+                 offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, \
+                 index_vector_dim=1, slice_sizes={1,2}",
+            ],
+            &[f32v(&[4, 2], &[0., 1., 10., 11., 20., 21., 30., 31.]), s32v(&[1, 1], &[99])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[30., 31.]);
+    }
+
+    #[test]
+    fn golden_tuple_roundtrip() {
+        let out = run(
+            &["%p0 = f32[2] parameter(0)"],
+            &[
+                "%t = (f32[2], f32[2]) tuple(f32[2] %p0, f32[2] %p0)",
+                "%g = f32[2] get-tuple-element((f32[2], f32[2]) %t), index=1",
+                "ROOT %r = f32[2] add(f32[2] %g, f32[2] %p0)",
+            ],
+            &[f32v(&[2], &[1., 2.])],
+        )
+        .unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[2., 4.]);
+    }
+
+    #[test]
+    fn declared_shape_is_checked() {
+        let err = run(
+            &["%p0 = f32[4] parameter(0)"],
+            &["ROOT %r = f32[3] abs(f32[4] %p0)"],
+            &[f32v(&[4], &[1., 2., 3., 4.])],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn softmax_composed_from_primitives() {
+        // softmax over the last axis of a [1,3] row, the way the fixture
+        // graphs lower it: max -> subtract -> exp -> sum -> divide
+        let out = run(
+            &["%p0 = f32[1,3] parameter(0)"],
+            &[
+                "%ninf = f32[] constant(-inf)",
+                "%m = f32[1] reduce(f32[1,3] %p0, f32[] %ninf), dimensions={1}, \
+                 to_apply=%red_max",
+                "%mb = f32[1,3] broadcast(f32[1] %m), dimensions={0}",
+                "%c = f32[1,3] subtract(f32[1,3] %p0, f32[1,3] %mb)",
+                "%e = f32[1,3] exp(f32[1,3] %c)",
+                "%z = f32[] constant(0)",
+                "%s = f32[1] reduce(f32[1,3] %e, f32[] %z), dimensions={1}, \
+                 to_apply=%red_add",
+                "%sb = f32[1,3] broadcast(f32[1] %s), dimensions={0}",
+                "ROOT %p = f32[1,3] divide(f32[1,3] %e, f32[1,3] %sb)",
+            ],
+            &[f32v(&[1, 3], &[1.0, 2.0, 3.0])],
+        )
+        .unwrap();
+        let got = out[0].f32s().unwrap();
+        let e: Vec<f32> = [1.0f32, 2.0, 3.0].iter().map(|x| (x - 3.0).exp()).collect();
+        let s: f32 = e.iter().sum();
+        for (g, w) in got.iter().zip(e.iter().map(|x| x / s)) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+        let total: f32 = got.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,203 @@
+//! In-repo HLO-text toolchain: parser, host interpreter, and graph
+//! builder.
+//!
+//! The AOT artifacts ship as HLO *text* (python/compile/aot.py). In
+//! environments without the real PJRT binding, `runtime::Runtime` falls
+//! back to interpreting that text directly on the host (see the
+//! `ExecBackend` seam in `crate::runtime`), so every end-to-end surface —
+//! `repro smoke`, dev-set evaluation, the sweep's runtime pass — executes
+//! in-container instead of dead-ending in `vendor/xla-stub`'s compile
+//! error.
+//!
+//! Sub-modules:
+//! * [`parser`]  — HLO text -> [`HloModule`] (module / computations /
+//!                 instructions with shapes, literals, operands, attrs).
+//! * [`interp`]  — reference evaluator for the op set BERT-style
+//!                 forward/diag graphs need (dot-general, reduce, gather,
+//!                 elementwise, control ops). Plain data + pure functions,
+//!                 hence `Send + Sync` — the runtime's shared executable
+//!                 cache works unchanged.
+//! * [`builder`] — emits HLO text (the same dialect the parser reads);
+//!                 used by the fixture generator.
+//! * [`fixture`] — `repro gen-artifacts`: a small self-consistent
+//!                 `artifacts/` (manifest.json + tiny BERT forward/diag
+//!                 modules + kernel graphs + per-task init checkpoints) so
+//!                 integration tests and CI run without `make artifacts`.
+
+pub mod builder;
+pub mod fixture;
+pub mod interp;
+pub mod parser;
+
+use anyhow::{bail, Result};
+
+pub use interp::interpret;
+pub use parser::{parse_module, Computation, HloModule, Inst};
+
+/// Element types the toolchain supports (the subset tq's graphs use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::Pred => "pred",
+        }
+    }
+}
+
+/// An HLO shape: a dense array shape or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array { dtype: DType, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn f32(dims: &[usize]) -> Shape {
+        Shape::Array { dtype: DType::F32, dims: dims.to_vec() }
+    }
+
+    pub fn s32(dims: &[usize]) -> Shape {
+        Shape::Array { dtype: DType::S32, dims: dims.to_vec() }
+    }
+
+    pub fn dims(&self) -> Result<&[usize]> {
+        match self {
+            Shape::Array { dims, .. } => Ok(dims),
+            Shape::Tuple(_) => bail!("tuple shape has no array dims"),
+        }
+    }
+
+    pub fn dtype(&self) -> Result<DType> {
+        match self {
+            Shape::Array { dtype, .. } => Ok(*dtype),
+            Shape::Tuple(_) => bail!("tuple shape has no element type"),
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product(),
+            Shape::Tuple(parts) => parts.iter().map(Shape::elems).sum(),
+        }
+    }
+}
+
+/// A host-side runtime value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    S32 { dims: Vec<usize>, data: Vec<i32> },
+    Pred { dims: Vec<usize>, data: Vec<bool> },
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32 { dims: Vec::new(), data: vec![x] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32 { dims, .. } => dims,
+            Value::S32 { dims, .. } => dims,
+            Value::Pred { dims, .. } => dims,
+            Value::Tuple(_) => &[],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::S32 { data, .. } => data.len(),
+            Value::Pred { data, .. } => data.len(),
+            Value::Tuple(parts) => parts.iter().map(Value::len).sum(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Result<DType> {
+        match self {
+            Value::F32 { .. } => Ok(DType::F32),
+            Value::S32 { .. } => Ok(DType::S32),
+            Value::Pred { .. } => Ok(DType::Pred),
+            Value::Tuple(_) => bail!("tuple value has no element type"),
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Value::S32 { data, .. } => Ok(data),
+            _ => bail!("value is not s32"),
+        }
+    }
+
+    pub fn preds(&self) -> Result<&[bool]> {
+        match self {
+            Value::Pred { data, .. } => Ok(data),
+            _ => bail!("value is not pred"),
+        }
+    }
+}
+
+/// Row-major strides for `dims` (stride of the last axis is 1).
+pub(crate) fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_helpers() {
+        let s = Shape::f32(&[2, 3]);
+        assert_eq!(s.dims().unwrap(), &[2, 3]);
+        assert_eq!(s.dtype().unwrap(), DType::F32);
+        assert_eq!(s.elems(), 6);
+        let t = Shape::Tuple(vec![Shape::f32(&[2]), Shape::s32(&[])]);
+        assert_eq!(t.elems(), 3);
+        assert!(t.dims().is_err());
+        assert!(t.dtype().is_err());
+    }
+
+    #[test]
+    fn value_helpers() {
+        let v = Value::F32 { dims: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(v.dims(), &[2, 2]);
+        assert_eq!(v.len(), 4);
+        assert!(v.f32s().is_ok());
+        assert!(v.i32s().is_err());
+        let s = Value::scalar_f32(5.0);
+        assert_eq!(s.dims(), &[] as &[usize]);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn stride_math() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert_eq!(strides(&[]), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,559 @@
+//! HLO-text parser.
+//!
+//! Parses the textual HLO dialect the AOT artifacts ship in (and the
+//! [`crate::hlo::builder`] emits): a module header, optional reduction
+//! sub-computations, and an `ENTRY` computation whose instructions are one
+//! per line:
+//!
+//! ```text
+//! HloModule jit_fn
+//!
+//! %red_add (a: f32[], b: f32[]) -> f32[] {
+//!   %a = f32[] parameter(0)
+//!   %b = f32[] parameter(1)
+//!   ROOT %r = f32[] add(f32[] %a, f32[] %b)
+//! }
+//!
+//! ENTRY %main (p0: f32[2,3]) -> (f32[2]) {
+//!   %p0 = f32[2,3]{1,0} parameter(0)
+//!   %c = f32[] constant(0)
+//!   %r = f32[2]{0} reduce(f32[2,3]{1,0} %p0, f32[] %c), dimensions={1}, to_apply=%red_add
+//!   ROOT %t = (f32[2]{0}) tuple(f32[2]{0} %r)
+//! }
+//! ```
+//!
+//! Layout suffixes (`{1,0}`) and unknown attributes (`metadata=...`,
+//! `sharding=...`, `frontend_attributes=...`) are accepted and ignored, so
+//! real XLA-printed modules parse as well as builder-emitted ones.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{DType, Shape};
+
+/// One parsed instruction.
+#[derive(Debug, Clone)]
+pub struct Inst {
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    /// operand instruction names (no leading `%`)
+    pub operands: Vec<String>,
+    /// raw payload for `constant` (the literal text) and `parameter` (the
+    /// parameter index)
+    pub payload: Option<String>,
+    /// raw attribute text keyed by attribute name
+    pub attrs: BTreeMap<String, String>,
+    pub is_root: bool,
+}
+
+impl Inst {
+    /// `dimensions={0,2}`-style attribute as a usize list (empty when the
+    /// attribute is `{}`).
+    pub fn attr_dims(&self, key: &str) -> Result<Vec<usize>> {
+        let raw = self
+            .attrs
+            .get(key)
+            .ok_or_else(|| anyhow!("{}: missing attribute {key}", self.name))?;
+        parse_brace_list(raw).with_context(|| format!("{}: attribute {key}", self.name))
+    }
+
+    /// Like [`Inst::attr_dims`] but `{}`/absent maps to the default.
+    pub fn attr_dims_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.attrs.get(key) {
+            None => Ok(default.to_vec()),
+            Some(raw) => {
+                parse_brace_list(raw).with_context(|| format!("{}: attribute {key}", self.name))
+            }
+        }
+    }
+
+    /// Scalar integer attribute (e.g. `index=0`, `iota_dimension=1`).
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        let raw = self
+            .attrs
+            .get(key)
+            .ok_or_else(|| anyhow!("{}: missing attribute {key}", self.name))?;
+        raw.trim()
+            .parse::<usize>()
+            .map_err(|_| anyhow!("{}: attribute {key}={raw:?} is not an integer", self.name))
+    }
+
+    pub fn attr_str(&self, key: &str) -> Result<&str> {
+        self.attrs
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("{}: missing attribute {key}", self.name))
+    }
+}
+
+/// One computation: instructions in program order plus lookup tables.
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub insts: Vec<Inst>,
+    /// instruction index by name
+    pub index: BTreeMap<String, usize>,
+    /// instruction index of parameter `i`
+    pub params: Vec<usize>,
+    /// index of the ROOT instruction
+    pub root: usize,
+}
+
+impl Computation {
+    pub fn inst(&self, name: &str) -> Result<&Inst> {
+        let i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("computation {}: no instruction %{name}", self.name))?;
+        Ok(&self.insts[*i])
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    /// index of the ENTRY computation
+    pub entry: usize,
+}
+
+impl HloModule {
+    pub fn entry(&self) -> &Computation {
+        &self.computations[self.entry]
+    }
+
+    pub fn computation(&self, name: &str) -> Result<&Computation> {
+        self.computations
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("no computation %{name} in module {}", self.name))
+    }
+
+    /// Shapes of the entry computation's parameters, in parameter order.
+    pub fn entry_param_shapes(&self) -> Vec<&Shape> {
+        let e = self.entry();
+        e.params.iter().map(|&i| &e.insts[i].shape).collect()
+    }
+}
+
+/// Parse an HLO-text module.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut module_name = String::from("module");
+    let mut computations: Vec<Computation> = Vec::new();
+    let mut entry: Option<usize> = None;
+
+    let mut lines = text.lines();
+    while let Some(raw) = lines.next() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule") {
+            let rest = rest.trim();
+            let end = rest
+                .find(|c: char| c == ',' || c == ' ')
+                .unwrap_or(rest.len());
+            if end > 0 {
+                module_name = rest[..end].to_string();
+            }
+            continue;
+        }
+        if line.ends_with('{') && line.contains("->") {
+            let is_entry = line.starts_with("ENTRY");
+            let header = line.trim_start_matches("ENTRY").trim();
+            let name_end = header.find(' ').unwrap_or(header.len());
+            let comp_name = header[..name_end].trim_start_matches('%').to_string();
+            let mut body: Vec<String> = Vec::new();
+            for body_raw in lines.by_ref() {
+                let body_line = body_raw.trim();
+                if body_line == "}" {
+                    break;
+                }
+                if !body_line.is_empty() {
+                    body.push(body_line.to_string());
+                }
+            }
+            let comp = parse_computation(comp_name, &body)?;
+            if is_entry {
+                entry = Some(computations.len());
+            }
+            computations.push(comp);
+            continue;
+        }
+        bail!("unrecognised line outside a computation: {line:?}");
+    }
+    let entry = match entry {
+        Some(e) => e,
+        // modules printed without ENTRY keep the last computation as entry
+        None if !computations.is_empty() => computations.len() - 1,
+        None => bail!("module has no computations"),
+    };
+    Ok(HloModule { name: module_name, computations, entry })
+}
+
+fn parse_computation(name: String, body: &[String]) -> Result<Computation> {
+    let mut insts = Vec::with_capacity(body.len());
+    let mut index = BTreeMap::new();
+    let mut params: Vec<(usize, usize)> = Vec::new(); // (param number, inst idx)
+    let mut root = None;
+    for line in body {
+        let inst = parse_inst(line).with_context(|| format!("computation {name}: {line:?}"))?;
+        let i = insts.len();
+        if inst.opcode == "parameter" {
+            let n: usize = inst
+                .payload
+                .as_deref()
+                .unwrap_or("")
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad parameter index in {line:?}"))?;
+            params.push((n, i));
+        }
+        if inst.is_root {
+            root = Some(i);
+        }
+        index.insert(inst.name.clone(), i);
+        insts.push(inst);
+    }
+    params.sort();
+    for (want, (got, _)) in params.iter().enumerate() {
+        if *got != want {
+            bail!("computation {name}: parameter numbers are not 0..n");
+        }
+    }
+    let params: Vec<usize> = params.into_iter().map(|(_, i)| i).collect();
+    let root = match root {
+        Some(r) => r,
+        // some printers omit ROOT on single-instruction bodies; fall back
+        // to the last instruction
+        None if !insts.is_empty() => insts.len() - 1,
+        None => bail!("computation {name} is empty"),
+    };
+    Ok(Computation { name, insts, index, params, root })
+}
+
+fn parse_inst(line: &str) -> Result<Inst> {
+    let (is_root, rest) = match line.strip_prefix("ROOT ") {
+        Some(r) => (true, r.trim()),
+        None => (false, line),
+    };
+    let eq = rest.find(" = ").ok_or_else(|| anyhow!("no `=` in instruction"))?;
+    let name = rest[..eq].trim().trim_start_matches('%').to_string();
+    let rhs = rest[eq + 3..].trim();
+
+    let (shape, used) = parse_shape(rhs)?;
+    let rhs = rhs[used..].trim_start();
+
+    let open = rhs.find('(').ok_or_else(|| anyhow!("no operand list"))?;
+    let opcode = rhs[..open].trim().to_string();
+    let close = matching_paren(rhs, open)?;
+    let operand_str = &rhs[open + 1..close];
+    let attr_str = rhs[close + 1..].trim_start_matches(',').trim();
+
+    let mut operands = Vec::new();
+    let mut payload = None;
+    if opcode == "constant" || opcode == "parameter" {
+        payload = Some(operand_str.trim().to_string());
+    } else {
+        for piece in split_top_level(operand_str) {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let tok = piece
+                .rsplit(' ')
+                .next()
+                .ok_or_else(|| anyhow!("empty operand in {line:?}"))?;
+            if !tok.starts_with('%') {
+                bail!("operand {piece:?} has no %name");
+            }
+            operands.push(tok.trim_start_matches('%').to_string());
+        }
+    }
+
+    let mut attrs = BTreeMap::new();
+    for piece in split_top_level(attr_str) {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = piece.split_once('=') {
+            attrs.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    Ok(Inst { name, shape, opcode, operands, payload, attrs, is_root })
+}
+
+/// Parse a shape prefix of `s`; returns the shape and bytes consumed
+/// (including any `{layout}` suffix).
+pub fn parse_shape(s: &str) -> Result<(Shape, usize)> {
+    let b = s.as_bytes();
+    if b.first() == Some(&b'(') {
+        // tuple shape
+        let close = matching_paren(s, 0)?;
+        let inner = &s[1..close];
+        let mut parts = Vec::new();
+        for piece in split_top_level(inner) {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (sh, used) = parse_shape(piece)?;
+            if !piece[used..].trim().is_empty() {
+                bail!("trailing text in tuple shape element {piece:?}");
+            }
+            parts.push(sh);
+        }
+        return Ok((Shape::Tuple(parts), close + 1));
+    }
+    let open = s
+        .find('[')
+        .ok_or_else(|| anyhow!("shape {s:?} has no `[`"))?;
+    let dtype = match &s[..open] {
+        "f32" => DType::F32,
+        "s32" | "u32" => DType::S32,
+        "pred" => DType::Pred,
+        other => bail!("unsupported element type {other:?}"),
+    };
+    let close = s[open..]
+        .find(']')
+        .map(|i| i + open)
+        .ok_or_else(|| anyhow!("shape {s:?} has no `]`"))?;
+    let mut dims = Vec::new();
+    for d in s[open + 1..close].split(',') {
+        let d = d.trim();
+        if d.is_empty() {
+            continue;
+        }
+        dims.push(
+            d.parse::<usize>()
+                .map_err(|_| anyhow!("bad dimension {d:?} in shape {s:?}"))?,
+        );
+    }
+    // optional layout suffix `{1,0}`
+    let mut used = close + 1;
+    if s[used..].starts_with('{') {
+        let lclose = s[used..]
+            .find('}')
+            .ok_or_else(|| anyhow!("unterminated layout in {s:?}"))?;
+        used += lclose + 1;
+    }
+    Ok((Shape::Array { dtype, dims }, used))
+}
+
+/// Index of the `)` matching the `(` at `open`.
+fn matching_paren(s: &str, open: usize) -> Result<usize> {
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    bail!("unbalanced parentheses in {s:?}")
+}
+
+/// Split on commas at nesting depth zero (w.r.t. `()`, `{}`, `[]`).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// `{1, 2, 3}` (or `{}`) to a usize list.
+fn parse_brace_list(raw: &str) -> Result<Vec<usize>> {
+    let t = raw.trim();
+    let inner = t
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .ok_or_else(|| anyhow!("expected {{...}}, got {raw:?}"))?;
+    let mut out = Vec::new();
+    for p in inner.split(',') {
+        let p = p.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(p.parse::<usize>().map_err(|_| anyhow!("bad entry {p:?} in {raw:?}"))?);
+    }
+    Ok(out)
+}
+
+/// Parse a constant payload (`3.5`, `{1, 2}`, `{{1,2},{3,4}}`) into a flat
+/// number list; nesting must match the declared shape's element count,
+/// which the caller checks.
+pub fn parse_literal_numbers(raw: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in raw
+        .split(|c: char| c == '{' || c == '}' || c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+    {
+        let v = match tok {
+            "inf" => f64::INFINITY,
+            "-inf" => f64::NEG_INFINITY,
+            "true" => 1.0,
+            "false" => 0.0,
+            _ => tok
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad literal token {tok:?}"))?,
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Parse `[0:2], [0:128]` / `[0:24:2]` slice attribute text.
+pub fn parse_slice_ranges(raw: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let t = raw.trim();
+    let inner = t
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .unwrap_or(t);
+    let mut out = Vec::new();
+    for piece in split_top_level(inner) {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        let body = piece
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or_else(|| anyhow!("bad slice range {piece:?}"))?;
+        let parts: Vec<&str> = body.split(':').collect();
+        let parse = |s: &str| -> Result<usize> {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad slice bound {s:?}"))
+        };
+        match parts.len() {
+            2 => out.push((parse(parts[0])?, parse(parts[1])?, 1)),
+            3 => out.push((parse(parts[0])?, parse(parts[1])?, parse(parts[2])?)),
+            _ => bail!("bad slice range {piece:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_shapes() {
+        let (s, used) = parse_shape("f32[2,3]{1,0} rest").unwrap();
+        assert_eq!(s, Shape::f32(&[2, 3]));
+        assert_eq!(used, "f32[2,3]{1,0}".len());
+        let (s, _) = parse_shape("f32[]").unwrap();
+        assert_eq!(s, Shape::f32(&[]));
+        let (s, _) = parse_shape("s32[8]").unwrap();
+        assert_eq!(s, Shape::s32(&[8]));
+        let (s, used) = parse_shape("(f32[2]{0}, s32[])").unwrap();
+        assert_eq!(s, Shape::Tuple(vec![Shape::f32(&[2]), Shape::s32(&[])]));
+        assert_eq!(used, "(f32[2]{0}, s32[])".len());
+        assert!(parse_shape("f64[2]").is_err());
+    }
+
+    #[test]
+    fn parses_instruction_forms() {
+        let i = parse_inst("%p0 = f32[2,3]{1,0} parameter(0)").unwrap();
+        assert_eq!(i.opcode, "parameter");
+        assert_eq!(i.payload.as_deref(), Some("0"));
+        assert!(!i.is_root);
+
+        let i = parse_inst("%c = f32[] constant(1.5)").unwrap();
+        assert_eq!(i.payload.as_deref(), Some("1.5"));
+
+        let i = parse_inst("%c2 = f32[3]{0} constant({1, 2, 3})").unwrap();
+        assert_eq!(parse_literal_numbers(i.payload.as_deref().unwrap()).unwrap(), vec![
+            1.0, 2.0, 3.0
+        ]);
+
+        let i = parse_inst(
+            "ROOT %add.3 = f32[2,3]{1,0} add(f32[2,3]{1,0} %p0, f32[2,3]{1,0} %b.2)",
+        )
+        .unwrap();
+        assert!(i.is_root);
+        assert_eq!(i.operands, vec!["p0", "b.2"]);
+
+        let i = parse_inst(
+            "%r = f32[2]{0} reduce(f32[2,3] %x, f32[] %c), dimensions={1}, to_apply=%red_add",
+        )
+        .unwrap();
+        assert_eq!(i.attr_dims("dimensions").unwrap(), vec![1]);
+        assert_eq!(i.attr_str("to_apply").unwrap(), "%red_add");
+
+        let i = parse_inst(
+            "%d = f32[8,24,128] dot(f32[8,24,64] %a, f32[64,128] %b), \
+             lhs_contracting_dims={2}, rhs_contracting_dims={0}, metadata={op_type=\"dot\"}",
+        )
+        .unwrap();
+        assert_eq!(i.attr_dims("lhs_contracting_dims").unwrap(), vec![2]);
+        assert_eq!(i.attr_dims_or("lhs_batch_dims", &[]).unwrap(), Vec::<usize>::new());
+
+        let i = parse_inst("%s = f32[1,3]{1,0} slice(f32[5,3] %x), slice={[0:1], [0:3]}")
+            .unwrap();
+        assert_eq!(parse_slice_ranges(i.attr_str("slice").unwrap()).unwrap(), vec![
+            (0, 1, 1),
+            (0, 3, 1)
+        ]);
+    }
+
+    #[test]
+    fn parses_whole_module() {
+        let text = "\
+HloModule test_mod
+
+%red_add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: f32[2,3]) -> (f32[2]) {
+  %p0 = f32[2,3]{1,0} parameter(0)
+  %c = f32[] constant(0)
+  %r = f32[2]{0} reduce(f32[2,3]{1,0} %p0, f32[] %c), dimensions={1}, to_apply=%red_add
+  ROOT %t = (f32[2]{0}) tuple(f32[2]{0} %r)
+}
+";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.name, "test_mod");
+        assert_eq!(m.computations.len(), 2);
+        let e = m.entry();
+        assert_eq!(e.name, "main");
+        assert_eq!(e.params.len(), 1);
+        assert_eq!(e.insts[e.root].opcode, "tuple");
+        assert_eq!(m.entry_param_shapes()[0], &Shape::f32(&[2, 3]));
+        let red = m.computation("red_add").unwrap();
+        assert_eq!(red.insts[red.root].opcode, "add");
+        assert!(m.computation("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_module("not hlo at all").is_err());
+        assert!(parse_inst("%x = f32[2] add(").is_err());
+        assert!(parse_inst("just text").is_err());
+    }
+}

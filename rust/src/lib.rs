@@ -12,12 +12,15 @@
 //!   estimation, PEG grouping with range-based permutation, mixed
 //!   precision, AdaRound, QAT driving, synthetic-GLUE evaluation and the
 //!   paper's experiment reproductions — executing the AOT artifacts via
-//!   the PJRT CPU client (`xla` crate). Python never runs at request time.
+//!   the PJRT CPU client (`xla` crate) or, when no PJRT backend is
+//!   available, the in-repo HLO interpreter (`crate::hlo`). Python never
+//!   runs at request time.
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 
 pub mod coordinator;
 pub mod data;
+pub mod hlo;
 pub mod metrics;
 pub mod model;
 pub mod quant;

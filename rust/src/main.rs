@@ -11,6 +11,10 @@
 //!                                    (run any quantization spec; presets
 //!                                    name the paper's configurations)
 //!     repro smoke                    (runtime sanity: load + run artifacts)
+//!     repro gen-artifacts [--no-ckpt]
+//!                                    (emit the fixture artifacts/ + init
+//!                                    checkpoints so every runtime surface
+//!                                    works in-container — see hlo::fixture)
 //!     repro sweep [--bits 8,4] [--wbits 8] [--groups 1,8] [--threads N]
 //!                 [--fresh] [--compare baseline.json]
 //!                                    (parallel config sweep, resumable by
@@ -48,6 +52,12 @@ fn main() -> Result<()> {
     if args.subcommand == "run" {
         let t0 = std::time::Instant::now();
         cmd_run(&args)?;
+        eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
+        return Ok(());
+    }
+    if args.subcommand == "gen-artifacts" {
+        let t0 = std::time::Instant::now();
+        tq::hlo::fixture::cmd_gen_artifacts(&args)?;
         eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
         return Ok(());
     }
@@ -223,8 +233,15 @@ fn cmd_smoke(ctx: &Ctx) -> Result<()> {
     println!("kernel_fq_d768 -> {:?}, first = {}", out[0].shape(), out[0].data()[0]);
     // compile-check the rest
     for n in &names {
-        ctx.rt.executable(n)?;
-        println!("  compiled {n}");
+        let exe = ctx.rt.executable(n)?;
+        println!("  compiled {n} [{}]", exe.backend_name());
+    }
+    let st = ctx.rt.stats();
+    if st.interpreted > 0 {
+        println!(
+            "(executed via the in-repo HLO interpreter: {} of {} runs)",
+            st.interpreted, st.executions
+        );
     }
     println!("smoke OK");
     Ok(())
@@ -238,7 +255,7 @@ fn print_help() {
          table1 table2 table4 table5 table6 table7 [--detailed] table12\n  \
          fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  \
          run --spec FILE.json | --preset NAME [--tasks a,b] [--seeds N] \
-         [--dump-spec]\n  smoke\n  \
+         [--dump-spec]\n  smoke\n  gen-artifacts [--no-ckpt]\n  \
          sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
          [--estimators current,mse] [--threads N] [--task NAME] [--seeds N] \
          [--fresh] [--compare baseline.json] [--tolerance PTS]\n\n\

@@ -19,7 +19,11 @@ const MSE_PAR_MIN_SAMPLES: usize = 1 << 12;
 /// Momentum for running min-max (paper Appendix B.2 uses 0.9).
 pub const RUNNING_MOMENTUM: f32 = 0.9;
 
-/// Cap on retained samples for the MSE search (reservoir, deterministic).
+/// Cap on retained samples for the MSE search. The reservoir is a
+/// deterministic stride over the *whole* calibration stream: it fills at
+/// stride 1, and whenever it reaches capacity it re-thins itself to every
+/// other element and doubles the stride — so late batches are always
+/// represented (invariant: `reservoir[i]` is stream element `i * stride`).
 const MSE_RESERVOIR: usize = 1 << 16;
 
 /// Accumulates per-lane range statistics over calibration batches.
@@ -34,6 +38,8 @@ pub struct RangeTracker {
     /// downsampled raw values for the MSE search
     reservoir: Vec<f32>,
     seen: usize,
+    /// current sampling stride over the stream (power of two)
+    stride: usize,
 }
 
 impl RangeTracker {
@@ -46,6 +52,7 @@ impl RangeTracker {
             batches_seen: 0,
             reservoir: Vec::new(),
             seen: 0,
+            stride: 1,
         }
     }
 
@@ -105,14 +112,27 @@ impl RangeTracker {
         Ok(())
     }
 
-    /// Deterministic reservoir: keep a strided subsample once full.
+    /// Deterministic stride over the whole stream. Earlier versions
+    /// stopped sampling once the reservoir was full, so the MSE grid
+    /// search only ever saw the first ~64k calibration values and later
+    /// batches (and their outliers) were silently ignored. Now the
+    /// reservoir re-thins itself (keep every other element, double the
+    /// stride) whenever it fills, so every batch of the stream stays
+    /// represented at equal density.
     fn stash(&mut self, xs: &[f32]) {
-        self.seen += xs.len();
-        if self.reservoir.len() < MSE_RESERVOIR {
-            let room = MSE_RESERVOIR - self.reservoir.len();
-            let stride = (xs.len() / room.max(1)).max(1);
-            self.reservoir.extend(xs.iter().step_by(stride).take(room));
+        for (i, &x) in xs.iter().enumerate() {
+            let global = self.seen + i;
+            if global == self.reservoir.len() * self.stride {
+                self.reservoir.push(x);
+                if self.reservoir.len() >= MSE_RESERVOIR {
+                    let thinned: Vec<f32> =
+                        self.reservoir.iter().copied().step_by(2).collect();
+                    self.reservoir = thinned;
+                    self.stride *= 2;
+                }
+            }
         }
+        self.seen += xs.len();
     }
 
     /// Final per-lane ranges.
@@ -166,7 +186,12 @@ pub fn mse_search_pool(
     pool: &Pool,
 ) -> (f32, f32) {
     if samples.is_empty() || hi <= lo {
-        return (lo, hi);
+        // Degenerate ranges happen for real: a constant-valued site gives
+        // lo == hi != 0. Returning them untouched would hand downstream a
+        // zero-width range, so clamp to the smallest valid range that
+        // contains both the observed value and 0 (0 must stay exactly
+        // representable — padding, ReLU sparsity).
+        return (lo.min(0.0), hi.max(0.0));
     }
     let score_step = |step: usize| {
         let alpha = 1.0 - 0.02 * step as f32; // 1.00, 0.98 .. 0.20
@@ -294,6 +319,48 @@ mod tests {
             prop_assert(
                 lo[0] >= gmin - 1e-5 && hi[0] <= gmax + 1e-5,
                 format!("EMA range [{},{}] outside hull [{gmin},{gmax}]", lo[0], hi[0]),
+            )
+        });
+    }
+
+    #[test]
+    fn late_batch_outlier_influences_chosen_range() {
+        // Three batches totalling 2x the reservoir capacity + a tail. The
+        // outlier arrives in the LAST batch, after the reservoir has
+        // filled and re-thinned twice — the old fill-once reservoir never
+        // saw it, and the grid search clipped the range to alpha_min *
+        // 50 = 10. With stride re-thinning the outlier is sampled, and
+        // keeping (most of) the full range is MSE-optimal.
+        let cap = 1 << 16;
+        let mut rng = Rng::new(9);
+        let mut tr = RangeTracker::new(Estimator::Mse, 1);
+        for _ in 0..2 {
+            let data: Vec<f32> = (0..cap).map(|_| rng.uniform(0.0, 1.0)).collect();
+            tr.observe(&t(&[cap], data)).unwrap();
+        }
+        let mut tail: Vec<f32> = (0..1000).map(|_| rng.uniform(0.0, 1.0)).collect();
+        tail[0] = 50.0;
+        tr.observe(&t(&[1000], tail)).unwrap();
+
+        // the reservoir stayed bounded and kept sampling the whole stream
+        assert!(tr.reservoir.len() <= cap);
+        assert_eq!(tr.stride, 4);
+        assert_eq!(tr.seen, 2 * cap + 1000);
+        assert!(tr.reservoir.contains(&50.0), "late outlier not sampled");
+
+        let (_, hi) = tr.tensor_range(QGrid::asymmetric(8));
+        assert!(hi > 25.0, "late-batch outlier ignored: chosen hi = {hi}");
+    }
+
+    #[test]
+    fn prop_degenerate_constant_range_clamps_to_include_zero() {
+        prop_check("constant site range", 100, |rng| {
+            let c = rng.uniform(-10.0, 10.0);
+            let samples = vec![c; 33];
+            let (lo, hi) = mse_search(&samples, c, c, QGrid::asymmetric(8));
+            prop_assert(
+                lo == c.min(0.0) && hi == c.max(0.0) && lo <= 0.0 && hi >= 0.0,
+                format!("constant {c}: got [{lo}, {hi}]"),
             )
         });
     }

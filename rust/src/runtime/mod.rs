@@ -1,22 +1,29 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile them once on the CPU
-//! PJRT client, and execute them from the coordinator's hot path.
+//! Runtime: load AOT HLO-text artifacts and execute them from the
+//! coordinator's hot path, through one of two backends behind the
+//! [`ExecBackend`] seam:
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
-//! -> XlaComputation -> compile -> execute. All graphs are lowered with
-//! return_tuple=True, so outputs arrive as one tuple literal that we
-//! unpack into tensors.
+//! * **PJRT** (preferred): HLO text -> HloModuleProto -> XlaComputation ->
+//!   compile -> execute, following /opt/xla-example/load_hlo. All graphs
+//!   are lowered with return_tuple=True, so outputs arrive as one tuple
+//!   literal that we unpack into tensors.
+//! * **Interpreter** (fallback): when `PjRtClient::compile` fails — e.g.
+//!   the offline `vendor/xla-stub` build — the artifact's HLO text is
+//!   parsed and evaluated by the in-repo interpreter (`crate::hlo`).
+//!   Same inputs, same outputs, so every caller works unchanged and
+//!   artifacts execute in any container.
 //!
 //! The runtime is `Sync`: the executable cache and stats sit behind
-//! mutexes so the sweep engine's workers share one set of compiled
-//! artifacts instead of recompiling per configuration (compilation is the
-//! dominant cost for the QAT/eval graphs).
+//! mutexes so the sweep engine's workers share one set of compiled (or
+//! parsed) artifacts instead of recompiling per configuration.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::hlo;
 use crate::model::manifest::{ArtifactSig, Manifest, TensorSig};
 use crate::tensor::{IntTensor, Tensor};
 
@@ -81,9 +88,34 @@ impl From<IntTensor> for Value {
 #[derive(Debug, Clone, Default)]
 pub struct RuntimeStats {
     pub executions: u64,
+    /// executions served by the HLO interpreter (vs a PJRT executable)
+    pub interpreted: u64,
     pub exec_nanos: u64,
     pub input_prep_nanos: u64,
     pub output_fetch_nanos: u64,
+}
+
+/// How an artifact executes: a compiled PJRT executable, or the parsed
+/// HLO module evaluated by the in-repo interpreter. Both are `Sync`, so
+/// the cache is shared across sweep workers either way.
+pub enum ExecBackend {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Interp(hlo::HloModule),
+}
+
+/// A cached, executable artifact.
+pub struct Executable {
+    name: String,
+    backend: ExecBackend,
+}
+
+impl Executable {
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            ExecBackend::Pjrt(_) => "pjrt",
+            ExecBackend::Interp(_) => "interpreter",
+        }
+    }
 }
 
 /// The runtime: a PJRT CPU client plus an executable cache keyed by
@@ -91,7 +123,7 @@ pub struct RuntimeStats {
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
-    executables: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    executables: Mutex<BTreeMap<String, Arc<Executable>>>,
     stats: Mutex<RuntimeStats>,
 }
 
@@ -122,11 +154,14 @@ impl Runtime {
         *self.stats.lock().expect("runtime stats") = RuntimeStats::default();
     }
 
-    /// Compile (or fetch from cache) an artifact's executable. The cache
-    /// is shared across threads; compilation happens outside the lock so
-    /// concurrent sweep workers never serialise on a slow compile (a lost
-    /// race costs one redundant compile, and the first insert wins).
-    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    /// Compile (or fetch from cache) an artifact's executable. When PJRT
+    /// compilation fails (e.g. the offline `vendor/xla-stub` build), the
+    /// artifact's HLO text is parsed for the interpreter backend instead.
+    /// The cache is shared across threads; compilation happens outside the
+    /// lock so concurrent sweep workers never serialise on a slow compile
+    /// (a lost race costs one redundant compile, and the first insert
+    /// wins).
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.executables.lock().expect("executable cache").get(name) {
             return Ok(e.clone());
         }
@@ -134,10 +169,30 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&sig.file)
             .map_err(|e| anyhow!("parsing {}: {e:?}", sig.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let backend = match self.client.compile(&comp) {
+            Ok(exe) => ExecBackend::Pjrt(exe),
+            Err(pjrt_err) => {
+                let text = std::fs::read_to_string(&sig.file)
+                    .with_context(|| format!("reading {}", sig.file.display()))?;
+                let module = hlo::parse_module(&text).map_err(|parse_err| {
+                    anyhow!(
+                        "compiling {name}: PJRT failed ({pjrt_err:?}) and the \
+                         interpreter fallback could not parse the module: {parse_err}"
+                    )
+                })?;
+                // Once per artifact (results are cached): the fallback must
+                // be observable — it changes both throughput and f32
+                // accumulation order vs a compiled executable, and a
+                // genuine compile failure of a real PJRT binding must not
+                // vanish silently.
+                eprintln!(
+                    "[runtime] {name}: PJRT compile failed ({pjrt_err}); \
+                     falling back to the in-repo HLO interpreter"
+                );
+                ExecBackend::Interp(module)
+            }
+        };
+        let exe = Executable { name: name.to_string(), backend };
         let mut cache = self.executables.lock().expect("executable cache");
         let entry = cache.entry(name.to_string()).or_insert_with(|| Arc::new(exe));
         Ok(entry.clone())
@@ -148,120 +203,129 @@ impl Runtime {
     /// used by any of our graphs, so everything comes back as f32).
     pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
         let sig = self.manifest.artifact(name)?.clone();
-        if inputs.len() != sig.inputs.len() {
-            bail!(
-                "artifact {name}: {} inputs given, signature wants {}",
-                inputs.len(),
-                sig.inputs.len()
-            );
-        }
+        check_input_count(&sig, name, inputs.len())?;
         let exe = self.executable(name)?;
-
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .zip(&sig.inputs)
             .map(|(v, s)| v.to_literal(s))
             .collect::<Result<_>>()?;
-        let t1 = std::time::Instant::now();
-
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
-        let t2 = std::time::Instant::now();
-
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        let out = self.literals_to_tensors(&sig, parts)?;
-        let t3 = std::time::Instant::now();
-
-        let mut st = self.stats.lock().expect("runtime stats");
-        st.executions += 1;
-        st.input_prep_nanos += (t1 - t0).as_nanos() as u64;
-        st.exec_nanos += (t2 - t1).as_nanos() as u64;
-        st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
-        Ok(out)
+        self.stats.lock().expect("runtime stats").input_prep_nanos +=
+            t0.elapsed().as_nanos() as u64;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_artifact(&sig, &exe, &refs)
     }
 
     /// Low-level execute: caller builds the literal list (in signature
     /// order) directly — avoids cloning large tensors into `Value`s on the
     /// training hot loop. Count is validated against the signature; shapes
-    /// are the caller's responsibility (XLA still rejects mismatches).
+    /// are the caller's responsibility (the backend still rejects
+    /// mismatches).
     pub fn run_lits(&self, name: &str, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
         let sig = self.manifest.artifact(name)?.clone();
-        if literals.len() != sig.inputs.len() {
-            bail!(
-                "artifact {name}: {} literals given, signature wants {}",
-                literals.len(),
-                sig.inputs.len()
-            );
-        }
+        check_input_count(&sig, name, literals.len())?;
         let exe = self.executable(name)?;
-        let t1 = std::time::Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
-        let t2 = std::time::Instant::now();
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        let out = self.literals_to_tensors(&sig, parts)?;
-        let t3 = std::time::Instant::now();
-        let mut st = self.stats.lock().expect("runtime stats");
-        st.executions += 1;
-        st.exec_nanos += (t2 - t1).as_nanos() as u64;
-        st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
-        Ok(out)
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_artifact(&sig, &exe, &refs)
     }
 
-    /// Like [`run_lits`], but over borrowed literals — lets callers keep a
-    /// cache of static inputs (params, quant policy) across many calls and
-    /// only rebuild the per-batch literals.
+    /// Like [`Runtime::run_lits`], but over borrowed literals — lets
+    /// callers keep a cache of static inputs (params, quant policy) across
+    /// many calls and only rebuild the per-batch literals.
     pub fn run_lits_borrowed(&self, name: &str, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
         let sig = self.manifest.artifact(name)?.clone();
-        if literals.len() != sig.inputs.len() {
-            bail!(
-                "artifact {name}: {} literals given, signature wants {}",
-                literals.len(),
-                sig.inputs.len()
-            );
-        }
+        check_input_count(&sig, name, literals.len())?;
         let exe = self.executable(name)?;
-        let t1 = std::time::Instant::now();
-        let result = exe
-            .execute::<&xla::Literal>(literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
-        let t2 = std::time::Instant::now();
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        let out = self.literals_to_tensors(&sig, parts)?;
-        let t3 = std::time::Instant::now();
+        self.execute_artifact(&sig, &exe, literals)
+    }
+
+    /// The one post-execute path shared by [`Runtime::run`],
+    /// [`Runtime::run_lits`] and [`Runtime::run_lits_borrowed`]: dispatch
+    /// to the backend, unpack the output tuple, convert to tensors,
+    /// account stats. An empty PJRT execute result is an error here, not
+    /// a panic.
+    fn execute_artifact(
+        &self,
+        sig: &ArtifactSig,
+        exe: &Executable,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        let name = exe.name.as_str();
+        let t1 = Instant::now();
+        let (parts, interpreted) = match &exe.backend {
+            ExecBackend::Pjrt(p) => {
+                let result = p
+                    .execute::<&xla::Literal>(literals)
+                    .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+                let buf = result
+                    .first()
+                    .and_then(|device| device.first())
+                    .ok_or_else(|| anyhow!("executing {name}: empty execute result"))?;
+                let tuple = buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+                let parts =
+                    tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+                (PartsBuf::Literals(parts), false)
+            }
+            ExecBackend::Interp(module) => {
+                // Inputs convert (one copy) per call, even for literals a
+                // caller caches across calls — a few hundred KB of memcpy
+                // vs tens of ms of interpreted matmuls per forward, so a
+                // pointer-keyed conversion cache is not worth its
+                // complexity until profiles say otherwise.
+                let inputs = literals_to_values(module, literals)
+                    .with_context(|| format!("preparing {name} interpreter inputs"))?;
+                let outs = hlo::interpret(module, &inputs)
+                    .with_context(|| format!("interpreting {name}"))?;
+                (PartsBuf::Values(outs), true)
+            }
+        };
+        let t2 = Instant::now();
+        let out = parts_to_tensors(sig, parts)?;
+        let t3 = Instant::now();
         let mut st = self.stats.lock().expect("runtime stats");
         st.executions += 1;
+        if interpreted {
+            st.interpreted += 1;
+        }
         st.exec_nanos += (t2 - t1).as_nanos() as u64;
         st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
         Ok(out)
     }
+}
 
-    fn literals_to_tensors(
-        &self,
-        sig: &ArtifactSig,
-        parts: Vec<xla::Literal>,
-    ) -> Result<Vec<Tensor>> {
-        if parts.len() != sig.outputs.len() {
-            bail!(
-                "artifact {}: got {} outputs, signature wants {}",
-                sig.name,
-                parts.len(),
-                sig.outputs.len()
-            );
-        }
-        parts
+fn check_input_count(sig: &ArtifactSig, name: &str, given: usize) -> Result<()> {
+    if given != sig.inputs.len() {
+        bail!(
+            "artifact {name}: {given} inputs given, signature wants {}",
+            sig.inputs.len()
+        );
+    }
+    Ok(())
+}
+
+/// Output buffer of either backend, unified before tensor conversion.
+enum PartsBuf {
+    Literals(Vec<xla::Literal>),
+    Values(Vec<hlo::Value>),
+}
+
+fn parts_to_tensors(sig: &ArtifactSig, parts: PartsBuf) -> Result<Vec<Tensor>> {
+    let n = match &parts {
+        PartsBuf::Literals(v) => v.len(),
+        PartsBuf::Values(v) => v.len(),
+    };
+    if n != sig.outputs.len() {
+        bail!(
+            "artifact {}: got {n} outputs, signature wants {}",
+            sig.name,
+            sig.outputs.len()
+        );
+    }
+    match parts {
+        PartsBuf::Literals(parts) => parts
             .into_iter()
             .zip(&sig.outputs)
             .map(|(lit, os)| {
@@ -270,8 +334,70 @@ impl Runtime {
                     .map_err(|e| anyhow!("output {}: {e:?}", os.name))?;
                 Tensor::new(os.shape.clone(), data)
             })
-            .collect()
+            .collect(),
+        PartsBuf::Values(parts) => parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(v, os)| {
+                let data = match v {
+                    hlo::Value::F32 { data, .. } => data,
+                    other => bail!(
+                        "output {}: interpreter produced {:?}, wanted f32",
+                        os.name,
+                        other.dtype()
+                    ),
+                };
+                Tensor::new(os.shape.clone(), data)
+            })
+            .collect(),
     }
+}
+
+/// Convert caller literals into interpreter values, taking shapes from the
+/// parsed module's own parameter declarations (the authoritative source).
+fn literals_to_values(
+    module: &hlo::HloModule,
+    literals: &[&xla::Literal],
+) -> Result<Vec<hlo::Value>> {
+    let shapes = module.entry_param_shapes();
+    if literals.len() != shapes.len() {
+        bail!(
+            "module wants {} parameters, got {} literals",
+            shapes.len(),
+            literals.len()
+        );
+    }
+    literals
+        .iter()
+        .zip(shapes)
+        .enumerate()
+        .map(|(i, (lit, shape))| {
+            let dims = shape.dims()?.to_vec();
+            let want: usize = dims.iter().product();
+            if lit.element_count() != want {
+                bail!(
+                    "parameter {i}: literal has {} elements (dims {:?}), module wants {dims:?}",
+                    lit.element_count(),
+                    lit.dims()
+                );
+            }
+            match shape.dtype()? {
+                hlo::DType::F32 => Ok(hlo::Value::F32 {
+                    dims,
+                    data: lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow!("parameter {i}: {e:?}"))?,
+                }),
+                hlo::DType::S32 => Ok(hlo::Value::S32 {
+                    dims,
+                    data: lit
+                        .to_vec::<i32>()
+                        .map_err(|e| anyhow!("parameter {i}: {e:?}"))?,
+                }),
+                hlo::DType::Pred => bail!("parameter {i}: pred inputs unsupported"),
+            }
+        })
+        .collect()
 }
 
 /// Literal constructors (shape checked against element count by the crate).

@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 use crate::model::manifest::ModelInfo;
 use crate::model::qconfig::{QuantPolicy, SiteCfg, WeightCfg};
 use crate::quant::{Estimator, Granularity};
-use crate::util::json::Json;
+use crate::util::json::{obj, Json};
 
 /// How a [`SiteRule`] picks activation-quantizer sites.
 #[derive(Debug, Clone, PartialEq)]
@@ -382,10 +382,6 @@ fn check_bits(bits: usize, what: &str) -> Result<u32> {
 }
 
 // -- component codecs ----------------------------------------------------
-
-fn obj(pairs: Vec<(&str, Json)>) -> Json {
-    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
-}
 
 fn site_cfg_to_json(c: &SiteCfg) -> Json {
     obj(vec![

@@ -338,6 +338,12 @@ fn utf8_len(b: u8) -> usize {
     }
 }
 
+/// Build an object from (key, value) pairs — the one object-literal
+/// helper shared by every in-crate serializer (spec, fixture manifest).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

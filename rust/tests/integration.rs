@@ -1,8 +1,14 @@
-//! Integration tests over the AOT artifacts + PJRT runtime.
+//! Integration tests over the AOT artifacts + runtime.
 //!
-//! These need `make artifacts` to have run; every test skips gracefully
-//! (with a message) when artifacts/ is absent so `cargo test` stays green
-//! in a fresh checkout.
+//! These need artifacts: either the real export (`make artifacts`) or the
+//! in-repo fixture set (`repro gen-artifacts`, which CI runs before
+//! `cargo test`, making this suite a required gate). Every test still
+//! skips gracefully (with a message) when artifacts/ is absent so a bare
+//! `cargo test` stays green in a fresh checkout.
+//!
+//! The runtime picks its backend per artifact: PJRT when the client can
+//! compile, the in-repo HLO interpreter otherwise — these tests pass
+//! identically on both.
 
 use std::collections::BTreeMap;
 
@@ -184,6 +190,36 @@ fn runtime_rejects_bad_input_counts() {
     let err = ctx.rt.run_lits("fwd_cls_b8", &[]);
     assert!(err.is_err());
     assert!(Runtime::new("/nonexistent").is_err());
+}
+
+#[test]
+fn interpreter_matches_analytic_fixture_outputs() {
+    // The gen-artifacts fixture ships `kernel_affine`: y = 2x + 1 plus
+    // per-row sums and per-column maxima — closed-form outputs that pin
+    // the execution backend (PJRT or interpreter) end to end.
+    let Some(ctx) = ctx() else { return };
+    if ctx.rt.manifest().artifact("kernel_affine").is_err() {
+        // same "SKIP: artifacts" prefix the CI zero-skip gate greps for
+        eprintln!("SKIP: artifacts lack the kernel_affine fixture (run `repro gen-artifacts`)");
+        return;
+    }
+    let x: Vec<f32> = (0..12).map(|i| (i as f32) * 0.25 - 1.0).collect();
+    let input = tq::tensor::Tensor::new(vec![4, 3], x.clone()).unwrap();
+    let out = ctx
+        .rt
+        .run("kernel_affine", &[tq::runtime::Value::F32(input)])
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    for (a, b) in out[0].data().iter().zip(&x) {
+        assert!((a - (2.0 * b + 1.0)).abs() < 1e-5, "{a} vs 2*{b}+1");
+    }
+    for (r, chunk) in out[1].data().iter().zip(x.chunks(3)) {
+        let want: f32 = chunk.iter().sum();
+        assert!((r - want).abs() < 1e-5, "{r} vs {want}");
+    }
+    // x is monotonically increasing, so column maxima sit in the last row
+    assert_eq!(out[2].data(), &[x[9], x[10], x[11]]);
+    assert!(ctx.rt.stats().executions >= 1);
 }
 
 #[test]

@@ -9,13 +9,15 @@
 //!   the literal-assembly plumbing in `tq::runtime` works and is testable.
 //! * [`PjRtClient::cpu`] succeeds (it allocates nothing), but
 //!   [`PjRtClient::compile`] returns an error stating that the PJRT
-//!   backend is unavailable. Everything that needs to *execute* an AOT
-//!   artifact therefore fails with a clear message, and the integration
-//!   tests skip gracefully because `artifacts/manifest.json` is absent in
-//!   offline checkouts anyway.
+//!   backend is unavailable. `tq::runtime` treats that compile error as
+//!   the signal to fall back to the in-repo HLO interpreter
+//!   (`tq::hlo`), so artifacts still *execute* in offline containers —
+//!   this stub only ever reports honestly that it cannot.
 //!
 //! Swap the `xla` path dependency in `rust/Cargo.toml` for the real
-//! binding to run artifacts; no `tq` source changes are needed.
+//! binding to run artifacts on a real PJRT client; no `tq` source
+//! changes are needed (the `ExecBackend` seam picks PJRT whenever
+//! `compile` succeeds).
 //!
 //! All types are plain data, hence `Send + Sync` — which is what lets
 //! `tq::runtime::Runtime` keep its compiled-executable cache behind a
@@ -52,8 +54,8 @@ impl fmt::Debug for Error {
 impl std::error::Error for Error {}
 
 const UNAVAILABLE: &str = "XLA PJRT backend unavailable in this offline build \
-     (vendor/xla-stub); swap the `xla` path dependency for the real binding \
-     to execute AOT artifacts";
+     (vendor/xla-stub); tq::runtime falls back to the in-repo HLO \
+     interpreter, or swap the `xla` path dependency for the real binding";
 
 /// Element types a [`Literal`] can hold (the subset tq uses).
 pub trait NativeType: Copy {
@@ -126,6 +128,16 @@ impl Literal {
             Literal::F32 { data, .. } => data.len(),
             Literal::I32 { data, .. } => data.len(),
             Literal::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    /// Dimensions of an array literal (empty for scalars AND for tuples —
+    /// callers that may hold tuples should match on the variant instead).
+    pub fn dims(&self) -> Vec<i64> {
+        match self {
+            Literal::F32 { dims, .. } => dims.clone(),
+            Literal::I32 { dims, .. } => dims.clone(),
+            Literal::Tuple(_) => Vec::new(),
         }
     }
 
@@ -204,6 +216,7 @@ mod tests {
         assert_eq!(l.element_count(), 4);
         let r = l.reshape(&[2, 2]).unwrap();
         assert_eq!(r.element_count(), 4);
+        assert_eq!(r.dims(), vec![2, 2]);
         assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         assert!(l.reshape(&[3]).is_err());
         assert!(l.to_vec::<i32>().is_err());
