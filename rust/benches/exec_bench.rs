@@ -1,0 +1,264 @@
+//! Executable hot-loop throughput: the calibrate/eval batch-parallel
+//! seam (`Runtime::run_batch` on the persistent pool) measured against
+//! the pre-batching per-call serial loop, plus the pool-dispatch
+//! comparison of spawn-per-call scoped threads vs persistent workers.
+//! Results append to results/bench_exec.csv; CI runs this after
+//! `gen-artifacts` so the numbers land in the job log.
+//!
+//! Rows (artifact-backed ones require `repro gen-artifacts`):
+//!   * pool dispatch: N small jobs, spawn-per-call vs persistent workers
+//!   * dev eval:  per-call serial loop  vs  run_batch n=1  vs  run_batch n=T
+//!   * calibrate: per-call serial loop  vs  batch-parallel calibrate n=T
+
+use std::sync::mpsc;
+
+use tq::coordinator::calibrate::{calibrate, run_diag, CalibCfg};
+use tq::coordinator::{eval, Ctx};
+use tq::data::{self, task_spec, TaskKind};
+use tq::model::qconfig::{assemble_act_tensors, QuantPolicy};
+use tq::model::Params;
+use tq::runtime::{lit_f32, lit_i32};
+use tq::util::bench::{append_csv, Bencher};
+use tq::util::pool::Pool;
+
+const CSV: &str = "results/bench_exec.csv";
+
+/// The PR-1-era pool dispatch: scoped threads spawned per call, results
+/// restored by index over an mpsc channel. Kept here as the bench
+/// baseline for the persistent-worker pool.
+fn spawn_per_call_run<R, F>(jobs: Vec<F>, threads: usize) -> Vec<R>
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    let total = jobs.len();
+    let n = threads.min(total.max(1));
+    if n <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let queue = std::sync::Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>());
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            let tx = tx.clone();
+            let queue = &queue;
+            s.spawn(move || loop {
+                let job = queue.lock().expect("bench queue").pop();
+                match job {
+                    Some((i, j)) => {
+                        let _ = tx.send((i, j()));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut slots: Vec<Option<R>> = std::iter::repeat_with(|| None).take(total).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    slots.into_iter().map(|o| o.expect("bench slot")).collect()
+}
+
+/// The pre-PR eval hot loop: one `run_lits_borrowed` call per batch,
+/// strictly serial, statics re-converted by the backend on every call.
+fn evaluate_per_call(
+    ctx: &Ctx,
+    task: &data::TaskSpec,
+    params: &Params,
+    act: &tq::model::qconfig::ActQuantTensors,
+    split: &data::Split,
+) -> f64 {
+    let info = ctx.model_info(task).unwrap();
+    let b = 8usize;
+    let seq = info.config.seq;
+    let n = split.examples.len();
+    let n_classes = match task.kind {
+        TaskKind::Classification(c) => c,
+        TaskKind::Regression => 1,
+    };
+    let mut statics = Vec::new();
+    for t in &params.tensors {
+        statics.push(lit_f32(t.data(), t.shape()).unwrap());
+    }
+    statics.push(lit_f32(&act.scales, &[act.scales.len()]).unwrap());
+    statics.push(lit_f32(&act.zps, &[act.zps.len()]).unwrap());
+    statics.push(lit_f32(&act.cfg, &[info.sites.len(), 3]).unwrap());
+    let mut pred = Vec::new();
+    let mut gold = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let batch = data::make_batch(split, start, b, seq);
+        let l_ids = lit_i32(&batch.ids, &[b, seq]).unwrap();
+        let l_tt = lit_i32(&batch.token_type, &[b, seq]).unwrap();
+        let l_mask = lit_f32(&batch.mask, &[b, seq]).unwrap();
+        let mut lits: Vec<&xla::Literal> = statics.iter().collect();
+        lits.push(&l_ids);
+        lits.push(&l_tt);
+        lits.push(&l_mask);
+        let out = ctx.rt.run_lits_borrowed("fwd_cls_b8", &lits).unwrap();
+        let logits = &out[0];
+        for i in 0..(n - start).min(b) {
+            let row = &logits.data()[i * info.config.n_out..(i + 1) * info.config.n_out];
+            let p = row[..n_classes]
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.total_cmp(y.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            pred.push(p);
+            gold.push(split.examples[start + i].label);
+        }
+        start += b;
+    }
+    tq::metrics::task_score(task.name, &pred, &gold, &[], &[])
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = std::env::var("TQ_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n: &usize| n > 0)
+        .unwrap_or(threads);
+
+    // --- pool dispatch overhead: spawn-per-call vs persistent workers ---
+    let persistent = Pool::new(threads);
+    let dispatch_work = || {
+        (0..64u64)
+            .map(|i| move || (0..400u64).fold(i, |a, x| a.wrapping_mul(31).wrapping_add(x)))
+            .collect::<Vec<_>>()
+    };
+    let s = Bencher::quick().throughput(64).bench(
+        &format!("pool dispatch 64 jobs [spawn-per-call n={threads}]"),
+        || {
+            std::hint::black_box(spawn_per_call_run(dispatch_work(), threads));
+        },
+    );
+    append_csv(CSV, &s).ok();
+    let spawn_ns = s.mean_ns;
+    let s = Bencher::quick().throughput(64).bench(
+        &format!("pool dispatch 64 jobs [persistent n={threads}]"),
+        || {
+            std::hint::black_box(persistent.run(dispatch_work()));
+        },
+    );
+    append_csv(CSV, &s).ok();
+    if s.mean_ns > 0.0 {
+        println!(
+            "pool dispatch speedup (persistent vs spawn-per-call): {:.2}x",
+            spawn_ns / s.mean_ns
+        );
+    }
+
+    // --- artifact-backed rows: interpreter dev eval + calibration ---
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!(
+            "(artifacts/manifest.json absent — run `repro gen-artifacts` \
+             for the eval/calibrate rows)"
+        );
+        return;
+    }
+    let mk_ctx = |pool: Pool| {
+        Ctx::new("artifacts", "checkpoints", "results").unwrap().with_pool(pool)
+    };
+    let ctx1 = mk_ctx(Pool::new(1));
+    let ctxn = mk_ctx(Pool::new(threads));
+    let task = task_spec("sst2").unwrap();
+    let info = ctx1.model_info(&task).unwrap();
+    let params = Params::init(info, 7);
+    let act = assemble_act_tensors(info, &QuantPolicy::fp32(), &Default::default()).unwrap();
+    let mut split = data::dev_split(&task, info.config.seq).unwrap();
+    split.examples.truncate(64); // 8 executable batches
+
+    // sanity + warmup (parses the artifact into each runtime's cache)
+    let want = evaluate_per_call(&ctx1, &task, &params, &act, &split);
+    let got = eval::evaluate_split(&ctxn, &task, &params, &act, &split).unwrap();
+    assert_eq!(
+        want.to_bits(),
+        got.to_bits(),
+        "batch-parallel eval diverged from the per-call loop"
+    );
+    eval::evaluate_split(&ctx1, &task, &params, &act, &split).unwrap();
+
+    let s = Bencher::quick().throughput(64).bench("dev eval 64 ex [per-call serial]", || {
+        std::hint::black_box(evaluate_per_call(&ctx1, &task, &params, &act, &split));
+    });
+    append_csv(CSV, &s).ok();
+    let percall_ns = s.mean_ns;
+    let s = Bencher::quick().throughput(64).bench("dev eval 64 ex [run_batch n=1]", || {
+        std::hint::black_box(eval::evaluate_split(&ctx1, &task, &params, &act, &split).unwrap());
+    });
+    append_csv(CSV, &s).ok();
+    let batch1_ns = s.mean_ns;
+    let s = Bencher::quick().throughput(64).bench(
+        &format!("dev eval 64 ex [run_batch n={threads}]"),
+        || {
+            let r = eval::evaluate_split(&ctxn, &task, &params, &act, &split).unwrap();
+            std::hint::black_box(r);
+        },
+    );
+    append_csv(CSV, &s).ok();
+    if s.mean_ns > 0.0 {
+        println!(
+            "eval speedup: run_batch n={threads} vs per-call serial = {:.2}x \
+             (statics hoisting alone: {:.2}x)",
+            percall_ns / s.mean_ns,
+            percall_ns / batch1_ns
+        );
+    }
+
+    // calibration: identical work (execute + observe, nb=8 bs=2) on a
+    // 1-thread vs a T-thread pool — an equal-work speedup ratio
+    let ccfg = CalibCfg { num_batches: 8, batch_size: 2, ..Default::default() };
+    let s = Bencher::quick().throughput(16).bench(
+        "calibrate nb=8 bs=2 [run_batch n=1]",
+        || {
+            std::hint::black_box(calibrate(&ctx1, &task, &params, &ccfg).unwrap());
+        },
+    );
+    append_csv(CSV, &s).ok();
+    let serial_ns = s.mean_ns;
+    let s = Bencher::quick().throughput(16).bench(
+        &format!("calibrate nb=8 bs=2 [batch-parallel n={threads}]"),
+        || {
+            std::hint::black_box(calibrate(&ctxn, &task, &params, &ccfg).unwrap());
+        },
+    );
+    append_csv(CSV, &s).ok();
+    if s.mean_ns > 0.0 {
+        println!(
+            "calibrate speedup: batch-parallel n={threads} vs run_batch n=1 = {:.2}x",
+            serial_ns / s.mean_ns
+        );
+    }
+    // reference row, exec-only (no estimator work): the pre-PR per-call
+    // diag loop — comparable to nothing above, recorded for the statics
+    // conversion cost it re-pays on every call
+    let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &Default::default()).unwrap();
+    let tsplit = data::train_split(&task, info.config.seq).unwrap();
+    let s = Bencher::quick().throughput(16).bench(
+        "diag exec-only 16 seqs [per-call serial]",
+        || {
+            for k in 0..16usize {
+                let ex = &tsplit.examples[k % tsplit.examples.len()];
+                std::hint::black_box(
+                    run_diag(
+                        &ctx1,
+                        "diag_cls_b1",
+                        info,
+                        &params,
+                        &fp32.scales,
+                        &fp32.zps,
+                        &fp32.cfg,
+                        ex,
+                    )
+                    .unwrap(),
+                );
+            }
+        },
+    );
+    append_csv(CSV, &s).ok();
+    println!("CSV appended to {CSV}");
+}

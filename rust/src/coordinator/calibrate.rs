@@ -6,6 +6,16 @@
 //! Matches the paper's static range estimation (§2): a few batches of
 //! calibration data, estimator ∈ {current min-max, running min-max, MSE},
 //! batch size and batch count per Appendix B.2.
+//!
+//! Execution shape: the diag taps for one sequence do not depend on the
+//! estimator state, so every sequence of every calibration batch is
+//! independent — they fan out through [`Runtime::run_batch`] on
+//! `ctx.pool`, one bounded window (a pool's worth of batches) at a time
+//! so peak tap memory stays proportional to the window, not the whole
+//! run. The estimators then observe the reassembled taps strictly in
+//! batch order, which keeps order-sensitive estimators (running min-max,
+//! the MSE reservoir) bit-identical to a serial run at any window or
+//! thread count (pinned by tests/determinism.rs).
 
 use std::collections::BTreeMap;
 
@@ -91,53 +101,88 @@ pub fn calibrate(
 
     // FP32 taps: quantizers disabled
     let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
-    let mut seq_idx = (cfg.seed as usize) % split.examples.len();
+    if cfg.batch_size == 0 {
+        bail!("calibration batch_size must be >= 1");
+    }
+    if split.examples.is_empty() {
+        bail!("calibration split for {} has no examples", task.name);
+    }
+    let seq0 = (cfg.seed as usize) % split.examples.len();
 
-    // Executing the diag graph is the serial (PJRT-bound) part; the
-    // per-site statistics below fan out across the pool — every site's
+    // Execute every calibration sequence batch-parallel: statics (params
+    // + disabled quantizers) are shared, per-sequence literals are built
+    // on the worker that runs them, and taps come back in sequence order.
+    let n_sites = info.sites.len();
+    let static_lits =
+        super::static_input_lits(params, &fp32.scales, &fp32.zps, &fp32.cfg, n_sites)?;
+
+    // Per-site statistics fan out across the pool too — every site's
     // tracker and Gram are independent, so site-level parallelism is
     // deterministic by construction.
-    let pool = Pool::global();
+    let pool = &ctx.pool;
     let serial = Pool::serial();
-    for _b in 0..cfg.num_batches {
-        // emulate batch-size > 1 by concatenating per-sequence taps before
-        // one estimator observation
-        let mut site_batches: BTreeMap<String, Vec<Tensor>> = BTreeMap::new();
-        for _ in 0..cfg.batch_size {
-            let ex = &split.examples[seq_idx % split.examples.len()];
-            seq_idx += 1;
-            let taps = run_diag(ctx, &artifact, info, params, &fp32.scales, &fp32.zps, &fp32.cfg, ex)?;
-            for (site, t) in taps {
-                site_batches.entry(site).or_default().push(t);
+    // Fan out a bounded window of batches at a time: one pool's worth of
+    // parallelism with peak tap memory bounded by `window × batch_size`
+    // sequences, not the whole calibration run. Windows execute in batch
+    // order and observations are fed strictly in batch order below, so
+    // order-sensitive estimators stay bit-identical to a serial run.
+    let window = pool.threads().max(1);
+    for wb in (0..cfg.num_batches).step_by(window) {
+        let n_b = window.min(cfg.num_batches - wb);
+        let base = wb * cfg.batch_size;
+        let mut outs = ctx.rt.run_batch(
+            &artifact,
+            &static_lits,
+            n_b * cfg.batch_size,
+            |k| {
+                let ex = &split.examples[(seq0 + base + k) % split.examples.len()];
+                Ok(vec![
+                    lit_i32(&ex.ids, &[1, seq])?,
+                    lit_i32(&ex.token_type, &[1, seq])?,
+                    lit_f32(&ex.mask, &[1, seq])?,
+                ])
+            },
+            &ctx.pool,
+        )?;
+        for chunk in outs.chunks_mut(cfg.batch_size) {
+            // emulate batch-size > 1 by concatenating per-sequence taps
+            // before one estimator observation
+            let mut site_batches: BTreeMap<String, Vec<Tensor>> = BTreeMap::new();
+            for out in chunk.iter_mut() {
+                // outputs: logits, then taps in site order
+                let taps = out.split_off(1);
+                for (s, t) in info.sites.iter().zip(taps) {
+                    site_batches.entry(s.name.clone()).or_default().push(t);
+                }
             }
-        }
-        let joined: Vec<(String, Tensor)> = site_batches
-            .into_iter()
-            .map(|(site, parts)| concat_rows(&parts).map(|j| (site, j)))
-            .collect::<Result<_>>()?;
-        {
-            let tensors: BTreeMap<&str, &Tensor> =
-                joined.iter().map(|(s, t)| (s.as_str(), t)).collect();
-            let mut work: Vec<(&mut RangeTracker, &Tensor)> = trackers
-                .iter_mut()
-                .filter_map(|(name, tr)| tensors.get(name.as_str()).map(|t| (tr, *t)))
-                .collect();
-            if work.len() != joined.len() {
-                bail!("calibration produced taps for sites without trackers");
+            let joined: Vec<(String, Tensor)> = site_batches
+                .into_iter()
+                .map(|(site, parts)| concat_rows(&parts).map(|j| (site, j)))
+                .collect::<Result<_>>()?;
+            {
+                let tensors: BTreeMap<&str, &Tensor> =
+                    joined.iter().map(|(s, t)| (s.as_str(), t)).collect();
+                let mut work: Vec<(&mut RangeTracker, &Tensor)> = trackers
+                    .iter_mut()
+                    .filter_map(|(name, tr)| tensors.get(name.as_str()).map(|t| (tr, *t)))
+                    .collect();
+                if work.len() != joined.len() {
+                    bail!("calibration produced taps for sites without trackers");
+                }
+                let observed =
+                    pool.par_iter_mut(&mut work, |_, w| w.0.observe_pool(w.1, &serial));
+                for r in observed {
+                    r?;
+                }
             }
-            let observed =
-                pool.par_iter_mut(&mut work, |_, w| w.0.observe_pool(w.1, &serial));
-            for r in observed {
-                r?;
-            }
-        }
-        if cfg.collect_grams {
-            let gwork: Vec<&(String, Tensor)> =
-                joined.iter().filter(|(s, _)| gsites.contains(s)).collect();
-            let computed = pool.par_map(&gwork, |_, item| gram_of(&item.1));
-            for (item, res) in gwork.iter().zip(computed) {
-                let (g, rows) = res?;
-                merge_gram(&mut grams, &item.0, g, rows);
+            if cfg.collect_grams {
+                let gwork: Vec<&(String, Tensor)> =
+                    joined.iter().filter(|(s, _)| gsites.contains(s)).collect();
+                let computed = pool.par_map(&gwork, |_, item| gram_of(&item.1));
+                for (item, res) in gwork.iter().zip(computed) {
+                    let (g, rows) = res?;
+                    merge_gram(&mut grams, &item.0, g, rows);
+                }
             }
         }
     }
@@ -158,13 +203,8 @@ pub fn run_diag(
 ) -> Result<BTreeMap<String, Tensor>> {
     let seq = info.config.seq;
     let n_sites = info.sites.len();
-    let mut lits = Vec::with_capacity(params.tensors.len() + 6);
-    for t in &params.tensors {
-        lits.push(lit_f32(t.data(), t.shape())?);
-    }
-    lits.push(lit_f32(act_scales, &[act_scales.len()])?);
-    lits.push(lit_f32(act_zps, &[act_zps.len()])?);
-    lits.push(lit_f32(act_cfg, &[n_sites, 3])?);
+    let mut lits = super::static_input_lits(params, act_scales, act_zps, act_cfg, n_sites)?;
+    lits.reserve(3);
     lits.push(lit_i32(&ex.ids, &[1, seq])?);
     lits.push(lit_i32(&ex.token_type, &[1, seq])?);
     lits.push(lit_f32(&ex.mask, &[1, seq])?);
@@ -180,9 +220,13 @@ pub fn run_diag(
 }
 
 /// Concatenate tensors along a new leading "rows" axis (flattening all but
-/// the last axis).
+/// the last axis). An empty slice is an error, not an index panic — it
+/// can only mean a calibration batch produced no taps for a site.
 fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
-    let d = parts[0].last_dim();
+    let Some(first) = parts.first() else {
+        bail!("concat_rows: no tensors to concatenate (empty calibration batch?)");
+    };
+    let d = first.last_dim();
     let mut data = Vec::new();
     let mut rows = 0usize;
     for p in parts {
@@ -245,6 +289,12 @@ mod tests {
         let b = Tensor::zeros(&[1, 4, 3]);
         let c = concat_rows(&[a, b]).unwrap();
         assert_eq!(c.shape(), &[8, 3]);
+    }
+
+    #[test]
+    fn concat_rows_empty_is_an_error_not_a_panic() {
+        let err = concat_rows(&[]).unwrap_err();
+        assert!(err.to_string().contains("concat_rows"), "{err}");
     }
 
     #[test]

@@ -1,17 +1,36 @@
 //! Dev-set evaluation through the batched forward executables, producing
 //! the per-task GLUE scores of the paper's tables.
+//!
+//! The per-batch executions are independent, so the hot loop fans out
+//! over `ctx.pool` via [`Runtime::run_batch`]: input-literal prep for one
+//! batch overlaps execution of others, and logits are reassembled in
+//! batch order, keeping the metric stream — and therefore the score —
+//! bit-identical to a serial run (pinned by tests/determinism.rs).
 
 use anyhow::Result;
 
 use super::Ctx;
-use crate::data::{self, TaskKind, TaskSpec};
+use crate::data::{self, Split, TaskKind, TaskSpec};
 use crate::metrics;
 use crate::model::qconfig::ActQuantTensors;
 use crate::model::Params;
 use crate::runtime::{lit_f32, lit_i32};
 
+/// NaN-safe argmax over a logit row. `f32::total_cmp` gives a total
+/// order (NaN sorts above +inf), so a degenerate quantization config
+/// that produces NaN logits yields a deterministic class instead of the
+/// `partial_cmp(..).unwrap()` panic it used to.
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(j, _)| j)
+        .unwrap_or(0)
+}
+
 /// Evaluate `params` (already weight-QDQ'd if applicable) under the given
-/// activation-quantizer tensors. Returns the task score ×100.
+/// activation-quantizer tensors on the task's dev split. Returns the task
+/// score ×100.
 pub fn evaluate(
     ctx: &Ctx,
     task: &TaskSpec,
@@ -19,12 +38,26 @@ pub fn evaluate(
     act: &ActQuantTensors,
 ) -> Result<f64> {
     let info = ctx.model_info(task)?;
+    let split = data::dev_split(task, info.config.seq)?;
+    evaluate_split(ctx, task, params, act, &split)
+}
+
+/// [`evaluate`] over an explicit example split (exposed so tests and
+/// benches can pin split sizes — including sizes that are not a multiple
+/// of the executable batch, whose padded tail rows must be ignored).
+pub fn evaluate_split(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    act: &ActQuantTensors,
+    split: &Split,
+) -> Result<f64> {
+    let info = ctx.model_info(task)?;
     let head = ctx.head(task);
     let artifact = format!("fwd_{head}_b8");
     let b = 8usize;
     let seq = info.config.seq;
     let n_sites = info.sites.len();
-    let split = data::dev_split(task, seq)?;
     let n = split.examples.len();
 
     let n_classes = match task.kind {
@@ -32,37 +65,37 @@ pub fn evaluate(
         TaskKind::Regression => 1,
     };
 
+    // static inputs, built once per eval: params + quant policy tensors
+    let static_lits =
+        super::static_input_lits(params, &act.scales, &act.zps, &act.cfg, n_sites)?;
+
+    // batch-parallel execution: every batch is independent, results are
+    // reassembled in batch order below
+    let n_batches = n.div_ceil(b);
+    let outs = ctx.rt.run_batch(
+        &artifact,
+        &static_lits,
+        n_batches,
+        |bi| {
+            let batch = data::make_batch(split, bi * b, b, seq);
+            Ok(vec![
+                lit_i32(&batch.ids, &[b, seq])?,
+                lit_i32(&batch.token_type, &[b, seq])?,
+                lit_f32(&batch.mask, &[b, seq])?,
+            ])
+        },
+        &ctx.pool,
+    )?;
+
     let mut pred_cls = Vec::with_capacity(n);
     let mut gold_cls = Vec::with_capacity(n);
     let mut pred_reg = Vec::with_capacity(n);
     let mut gold_reg = Vec::with_capacity(n);
-
-    // pre-build the static literals once per eval (params + quant policy)
-    let mut static_lits = Vec::with_capacity(params.tensors.len() + 3);
-    for t in &params.tensors {
-        static_lits.push(lit_f32(t.data(), t.shape())?);
-    }
-    static_lits.push(lit_f32(&act.scales, &[act.scales.len()])?);
-    static_lits.push(lit_f32(&act.zps, &[act.zps.len()])?);
-    static_lits.push(lit_f32(&act.cfg, &[n_sites, 3])?);
-
-    let mut start = 0usize;
-    while start < n {
-        let batch = data::make_batch(&split, start, b, seq);
-        let mut lits: Vec<xla::Literal> = Vec::with_capacity(static_lits.len() + 3);
-        // Literal isn't Clone in the xla crate; rebuild per batch is the
-        // checked `run` path. We re-create only the small batch literals
-        // and re-create statics via references: execute takes Borrow<..>,
-        // so mix owned + borrowed through a small enum.
-        lits.push(lit_i32(&batch.ids, &[b, seq])?);
-        lits.push(lit_i32(&batch.token_type, &[b, seq])?);
-        lits.push(lit_f32(&batch.mask, &[b, seq])?);
-
-        // assemble full borrow list
-        let all: Vec<&xla::Literal> = static_lits.iter().chain(lits.iter()).collect();
-        let out = ctx.rt.run_lits_borrowed(&artifact, &all)?;
+    for (bi, out) in outs.iter().enumerate() {
         let logits = &out[0];
-
+        let start = bi * b;
+        // a final partial batch is padded with PAD rows; their logits are
+        // ignored, never scored (see data::make_batch)
         let take = (n - start).min(b);
         for i in 0..take {
             let ex = &split.examples[start + i];
@@ -73,18 +106,40 @@ pub fn evaluate(
                 }
                 TaskKind::Classification(_) => {
                     let row = &logits.data()[i * info.config.n_out..(i + 1) * info.config.n_out];
-                    let pred = row[..n_classes]
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(j, _)| j)
-                        .unwrap_or(0);
-                    pred_cls.push(pred);
+                    pred_cls.push(argmax(&row[..n_classes]));
                     gold_cls.push(ex.label);
                 }
             }
         }
-        start += b;
     }
     Ok(metrics::task_score(task.name, &pred_cls, &gold_cls, &pred_reg, &gold_reg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_picks_largest_finite() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[-1.0, -3.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -7.5, f32::NEG_INFINITY]), 1);
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_deterministic() {
+        // a degenerate quantization config can produce NaN logits; the
+        // old partial_cmp(..).unwrap() panicked here
+        let row = [f32::NAN, 1.0, f32::NEG_INFINITY];
+        let p = argmax(&row);
+        assert!(p < row.len());
+        assert_eq!(p, argmax(&row), "must be deterministic");
+        // all-NaN and empty rows still yield a valid index
+        assert!(argmax(&[f32::NAN, f32::NAN]) < 2);
+        assert_eq!(argmax(&[]), 0);
+        // total_cmp orders -NaN below everything: finite values still win
+        let neg_nan = f32::from_bits(0xFFC0_0000);
+        assert!(neg_nan.is_nan() && neg_nan.is_sign_negative());
+        assert_eq!(argmax(&[neg_nan, 0.5]), 1);
+    }
 }

@@ -35,13 +35,43 @@ use anyhow::Result;
 
 use crate::data::{task_spec, TaskKind, TaskSpec};
 use crate::model::manifest::ModelInfo;
-use crate::runtime::Runtime;
+use crate::model::Params;
+use crate::runtime::{lit_f32, Runtime};
+use crate::util::pool::Pool;
+
+/// Build the static input literals every forward/diag artifact shares, in
+/// signature order: parameter tensors, then activation-quantizer scales,
+/// zero-points, and the per-site `[qmin, qmax, enabled]` cfg rows. The
+/// signature order is a cross-file contract with the AOT graphs — keep
+/// every caller on this one builder.
+pub fn static_input_lits(
+    params: &Params,
+    scales: &[f32],
+    zps: &[f32],
+    cfg: &[f32],
+    n_sites: usize,
+) -> Result<Vec<xla::Literal>> {
+    let mut lits = Vec::with_capacity(params.tensors.len() + 3);
+    for t in &params.tensors {
+        lits.push(lit_f32(t.data(), t.shape())?);
+    }
+    lits.push(lit_f32(scales, &[scales.len()])?);
+    lits.push(lit_f32(zps, &[zps.len()])?);
+    lits.push(lit_f32(cfg, &[n_sites, 3])?);
+    Ok(lits)
+}
 
 /// Shared context for all pipeline stages.
 pub struct Ctx {
     pub rt: Runtime,
     pub ckpt_dir: PathBuf,
     pub results_dir: PathBuf,
+    /// Worker pool for the executable hot loop (batch-parallel
+    /// calibrate/eval via `Runtime::run_batch`) and the per-site
+    /// statistics kernels. Defaults to the shared persistent
+    /// [`Pool::global`]; tests pin it with [`Ctx::with_pool`] to compare
+    /// serial vs parallel runs bit-for-bit in one process.
+    pub pool: Pool,
 }
 
 impl Ctx {
@@ -50,7 +80,14 @@ impl Ctx {
             rt: Runtime::new(artifacts_dir)?,
             ckpt_dir: PathBuf::from(ckpt_dir),
             results_dir: PathBuf::from(results_dir),
+            pool: Pool::global().clone(),
         })
+    }
+
+    /// Replace the hot-loop pool (builder style).
+    pub fn with_pool(mut self, pool: Pool) -> Ctx {
+        self.pool = pool;
+        self
     }
 
     /// Head kind string for artifact names: "cls" or "reg".

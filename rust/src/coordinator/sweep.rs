@@ -32,8 +32,11 @@
 //! pool — the parallelism budget is spent across configurations, and
 //! results stay bit-identical to a serial sweep (see
 //! tests/determinism.rs). The runtime-backed path reuses the shared spec
-//! pipeline, whose inner kernels use `Pool::global()`; cap
-//! oversubscription there with `TQ_THREADS` or `--threads` if needed.
+//! pipeline, whose batch-parallel eval/calibrate loops run on `ctx.pool`;
+//! `cmd_sweep` points that at the same persistent pool the config jobs
+//! use, so nested submissions share one worker set (the pool's
+//! caller-participation design makes that deadlock-free) instead of
+//! oversubscribing the machine.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -263,10 +266,10 @@ pub fn run_offline(
 /// workers racing on the same artifact may each compile it once (first
 /// insert wins — see `Runtime::executable`).
 ///
-/// Note: the eval pipeline's inner kernels use `Pool::global()`, so with
-/// P config workers the CPU kernels can momentarily oversubscribe; the
-/// hot cost here is PJRT execution (serial per call), and `TQ_THREADS`
-/// caps the global pool when that matters.
+/// Note: the eval pipeline's batch-parallel hot loop runs on `ctx.pool`;
+/// when that is the same pool as `pool` (as in `cmd_sweep`), nested
+/// batches queue onto the shared workers and the thread budget stays at
+/// one pool's worth — `TQ_THREADS` caps it globally.
 pub fn runtime_scores(
     ctx: &Ctx,
     task: &TaskSpec,
@@ -533,11 +536,15 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     if !unscored.is_empty() {
         let artifacts = args.get_or("artifacts", "artifacts");
         if Path::new(artifacts).join("manifest.json").exists() {
+            // the spec pipeline's batch-parallel hot loop shares the
+            // sweep's worker set — nested batches are deadlock-free by
+            // the pool's caller-participation design
             let ctx = Ctx::new(
                 artifacts,
                 args.get_or("ckpt", "checkpoints"),
                 args.get_or("results", "results"),
-            )?;
+            )?
+            .with_pool(pool.clone());
             let task = ctx.task(task_name)?;
             match experiments::load_ckpt(&ctx, &task) {
                 Ok(params) => {

@@ -144,10 +144,18 @@ fn finetune_with(
         rng.shuffle(&mut order);
         for chunk in order.chunks_exact(cfg.batch) {
             let batch = gather_batch(&split, chunk, seq);
-            let mut lits = Vec::with_capacity(3 * np + 7);
-            for t in p.tensors.iter().chain(&m.tensors).chain(&v.tensors) {
-                lits.push(lit_f32(t.data(), t.shape())?);
-            }
+            // the train step itself is inherently serial (step k+1 needs
+            // step k's params), but the per-step literal assembly — one
+            // memcpy per param/optimizer tensor — is independent per
+            // tensor, so it fans out across the pool deterministically
+            let pmv: Vec<_> =
+                p.tensors.iter().chain(&m.tensors).chain(&v.tensors).collect();
+            let mut lits: Vec<xla::Literal> = ctx
+                .pool
+                .par_map(&pmv, |_, t| lit_f32(t.data(), t.shape()))
+                .into_iter()
+                .collect::<Result<_>>()?;
+            lits.reserve(7);
             lits.push(lit_i32(&batch.ids, &[cfg.batch, seq])?);
             lits.push(lit_i32(&batch.token_type, &[cfg.batch, seq])?);
             lits.push(lit_f32(&batch.mask, &[cfg.batch, seq])?);
@@ -284,10 +292,16 @@ pub fn qat(
         rng.shuffle(&mut order);
         for chunk in order.chunks_exact(cfg.batch) {
             let batch = gather_batch(&split, chunk, seq);
-            let mut lits = Vec::with_capacity(3 * np + 15);
-            for t in p.tensors.iter().chain(&m.tensors).chain(&v.tensors) {
-                lits.push(lit_f32(t.data(), t.shape())?);
-            }
+            // see finetune_with: literal assembly is per-tensor
+            // independent, so it runs on the pool
+            let pmv: Vec<_> =
+                p.tensors.iter().chain(&m.tensors).chain(&v.tensors).collect();
+            let mut lits: Vec<xla::Literal> = ctx
+                .pool
+                .par_map(&pmv, |_, t| lit_f32(t.data(), t.shape()))
+                .into_iter()
+                .collect::<Result<_>>()?;
+            lits.reserve(15);
             lits.push(lit_f32(&a_s, &[s_lanes])?);
             lits.push(lit_f32(&msv, &[s_lanes])?);
             lits.push(lit_f32(&vsv, &[s_lanes])?);
@@ -347,6 +361,7 @@ fn gather_batch(split: &data::Split, idx: &[usize], seq: usize) -> data::Batch {
         labels_reg: Vec::with_capacity(b),
         batch: b,
         seq,
+        real: b,
     };
     for &i in idx {
         let ex = &split.examples[i];

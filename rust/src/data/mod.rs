@@ -329,12 +329,19 @@ pub struct Batch {
     pub labels_reg: Vec<f32>,
     pub batch: usize,
     pub seq: usize,
+    /// number of genuine examples; rows `real..batch` are PAD padding
+    pub real: usize,
 }
 
-/// Assemble `examples[start..start+b]` into a flat batch, cycling if the
-/// slice runs past the end (handy for fixed-batch executables).
+/// Assemble `examples[start..start+b]` into a flat batch for a
+/// fixed-batch executable. A final partial batch is padded with PAD-token
+/// rows (mask all-zero, labels zero) up to `b`; it used to wrap around to
+/// the head of the split instead, which silently duplicated leading
+/// examples into every consumer that trusts the label vectors —
+/// `real` tells consumers how many rows to score.
 pub fn make_batch(split: &Split, start: usize, b: usize, seq: usize) -> Batch {
     let n = split.examples.len();
+    let real = n.saturating_sub(start).min(b);
     let mut out = Batch {
         ids: Vec::with_capacity(b * seq),
         token_type: Vec::with_capacity(b * seq),
@@ -343,14 +350,22 @@ pub fn make_batch(split: &Split, start: usize, b: usize, seq: usize) -> Batch {
         labels_reg: Vec::with_capacity(b),
         batch: b,
         seq,
+        real,
     };
-    for i in 0..b {
-        let ex = &split.examples[(start + i) % n];
+    for i in 0..real {
+        let ex = &split.examples[start + i];
         out.ids.extend_from_slice(&ex.ids);
         out.token_type.extend_from_slice(&ex.token_type);
         out.mask.extend_from_slice(&ex.mask);
         out.labels_cls.push(ex.label as i32);
         out.labels_reg.push(ex.target);
+    }
+    for _ in real..b {
+        out.ids.resize(out.ids.len() + seq, PAD_ID);
+        out.token_type.resize(out.token_type.len() + seq, 0);
+        out.mask.resize(out.mask.len() + seq, 0.0);
+        out.labels_cls.push(0);
+        out.labels_reg.push(0.0);
     }
     out
 }
@@ -449,15 +464,33 @@ mod tests {
     }
 
     #[test]
-    fn batch_assembly_and_cycling() {
+    fn batch_assembly_and_tail_padding() {
         let t = task_spec("rte").unwrap();
         let split = make_split(&t, SEQ, 10, 1).unwrap();
+        // full batch: all rows real
+        let full = make_batch(&split, 0, 8, SEQ);
+        assert_eq!(full.real, 8);
+        assert_eq!(full.ids.len(), 8 * SEQ);
+        assert_eq!(&full.ids[0..SEQ], &split.examples[0].ids[..]);
+        // tail batch: 2 real rows, 2 PAD rows — the old wraparound
+        // duplicated examples 0 and 1 here, double-counting them in any
+        // consumer that trusts the label vectors
         let b = make_batch(&split, 8, 4, SEQ);
         assert_eq!(b.ids.len(), 4 * SEQ);
         assert_eq!(b.labels_cls.len(), 4);
-        // cycling: items 8, 9, 0, 1
+        assert_eq!(b.real, 2);
         assert_eq!(&b.ids[0..SEQ], &split.examples[8].ids[..]);
-        assert_eq!(&b.ids[2 * SEQ..3 * SEQ], &split.examples[0].ids[..]);
+        assert_eq!(&b.ids[SEQ..2 * SEQ], &split.examples[9].ids[..]);
+        for row in 2..4 {
+            assert!(b.ids[row * SEQ..(row + 1) * SEQ].iter().all(|&id| id == PAD_ID));
+            assert!(b.mask[row * SEQ..(row + 1) * SEQ].iter().all(|&m| m == 0.0));
+            assert_eq!(b.labels_cls[row], 0);
+            assert_eq!(b.labels_reg[row], 0.0);
+        }
+        // start past the end: a fully padded batch, zero real rows
+        let past = make_batch(&split, 12, 4, SEQ);
+        assert_eq!(past.real, 0);
+        assert!(past.ids.iter().all(|&id| id == PAD_ID));
     }
 
     #[test]

@@ -26,6 +26,14 @@ use super::{strides, DType, Shape, Value};
 /// our graphs lower with `return_tuple=True`); its elements are returned
 /// in order. A non-tuple root comes back as a single-element vec.
 pub fn interpret(module: &HloModule, inputs: &[Value]) -> Result<Vec<Value>> {
+    let refs: Vec<&Value> = inputs.iter().collect();
+    interpret_refs(module, &refs)
+}
+
+/// Like [`interpret`], but over borrowed inputs — lets callers keep
+/// expensive static inputs (parameter tensors) converted once and share
+/// them across many executions (see `Runtime::run_batch`).
+pub fn interpret_refs(module: &HloModule, inputs: &[&Value]) -> Result<Vec<Value>> {
     let root = eval_computation(module, module.entry(), inputs)?;
     match root {
         Value::Tuple(parts) => Ok(parts),
@@ -33,7 +41,7 @@ pub fn interpret(module: &HloModule, inputs: &[Value]) -> Result<Vec<Value>> {
     }
 }
 
-fn eval_computation(module: &HloModule, comp: &Computation, args: &[Value]) -> Result<Value> {
+fn eval_computation(module: &HloModule, comp: &Computation, args: &[&Value]) -> Result<Value> {
     if args.len() != comp.params.len() {
         bail!(
             "computation {}: {} arguments given, wants {}",
@@ -106,7 +114,7 @@ fn eval_inst(
     comp: &Computation,
     env: &[Option<Value>],
     inst: &Inst,
-    args: &[Value],
+    args: &[&Value],
 ) -> Result<Value> {
     let op = inst.opcode.as_str();
     match op {
@@ -118,7 +126,7 @@ fn eval_inst(
                 .trim()
                 .parse()
                 .map_err(|_| anyhow!("bad parameter payload"))?;
-            let v = args
+            let v = *args
                 .get(i)
                 .ok_or_else(|| anyhow!("parameter({i}) out of range"))?;
             if v.len() != inst.shape.elems() {

@@ -31,7 +31,7 @@ pub mod parser;
 
 use anyhow::{bail, Result};
 
-pub use interp::interpret;
+pub use interp::{interpret, interpret_refs};
 pub use parser::{parse_module, Computation, HloModule, Inst};
 
 /// Element types the toolchain supports (the subset tq's graphs use).

@@ -236,6 +236,32 @@ fn cmd_smoke(ctx: &Ctx) -> Result<()> {
         let exe = ctx.rt.executable(n)?;
         println!("  compiled {n} [{}]", exe.backend_name());
     }
+    // Runtime-backed eval through the batch-parallel hot loop: calibrate
+    // → quantize activations → score a dev subset. The score is printed
+    // with its exact bit pattern so driver runs under different
+    // TQ_THREADS settings can diff the output — the pool contract says
+    // they must match bit-for-bit.
+    if ctx.rt.manifest().model("base").is_ok() {
+        use tq::coordinator::calibrate::{calibrate, CalibCfg};
+        use tq::coordinator::eval;
+        use tq::model::qconfig::{assemble_act_tensors, QuantPolicy};
+        let task = ctx.task("sst2")?;
+        let info = ctx.model_info(&task)?;
+        let params = tq::coordinator::experiments::load_ckpt(&ctx, &task)
+            .unwrap_or_else(|_| tq::model::Params::init(info, 0));
+        let cfg = CalibCfg { num_batches: 4, batch_size: 2, ..Default::default() };
+        let calib = calibrate(&ctx, &task, &params, &cfg)?;
+        let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
+        let mut split = tq::data::dev_split(&task, info.config.seq)?;
+        split.examples.truncate(128);
+        let score = eval::evaluate_split(&ctx, &task, &params, &act, &split)?;
+        eprintln!("[smoke eval ran on {} pool thread(s)]", ctx.pool.threads());
+        println!(
+            "eval sst2 (128 dev examples, W8A8 activations-only) score = {score} \
+             [bits {:016x}]",
+            score.to_bits()
+        );
+    }
     let st = ctx.rt.stats();
     if st.interpreted > 0 {
         println!(

@@ -14,7 +14,10 @@
 //!
 //! The runtime is `Sync`: the executable cache and stats sit behind
 //! mutexes so the sweep engine's workers share one set of compiled (or
-//! parsed) artifacts instead of recompiling per configuration.
+//! parsed) artifacts instead of recompiling per configuration. On top of
+//! that, [`Runtime::run_batch`] executes one artifact over many
+//! independent input sets concurrently on a `util::pool::Pool` — the
+//! batch-parallel seam behind calibrate and eval (DESIGN.md §9).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -26,6 +29,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::hlo;
 use crate::model::manifest::{ArtifactSig, Manifest, TensorSig};
 use crate::tensor::{IntTensor, Tensor};
+use crate::util::pool::Pool;
 
 /// A typed input value for an executable.
 #[derive(Debug, Clone)]
@@ -240,6 +244,136 @@ impl Runtime {
         self.execute_artifact(&sig, &exe, literals)
     }
 
+    /// Execute one artifact over `n_items` independent input sets
+    /// concurrently on `pool` — the batch-parallel hot loop behind
+    /// calibrate and eval. `statics` are the inputs shared by every item
+    /// (parameter tensors, quantizer tensors) in signature order;
+    /// `prep(i)` builds item `i`'s trailing per-call literals *on the
+    /// worker that executes it*, so input-literal prep overlaps other
+    /// items' execution.
+    ///
+    /// Results come back indexed by item (the first error in item order
+    /// wins), and each item's execution math is identical to a lone
+    /// `run_lits_borrowed` call, so a caller that consumes the vector in
+    /// order is bit-identical to the serial loop it replaces — the
+    /// contract tests/determinism.rs pins across `TQ_THREADS` settings.
+    ///
+    /// On the interpreter backend the static literals are converted to
+    /// interpreter values once per *call* instead of once per
+    /// *execution*, which removes the literal→value conversion copy of
+    /// the parameter tensors from the per-item path. (The interpreter
+    /// still clones each parameter into its eval env per execution — a
+    /// `Cow`-based env would drop that second copy; see ROADMAP.)
+    pub fn run_batch<F>(
+        &self,
+        name: &str,
+        statics: &[xla::Literal],
+        n_items: usize,
+        prep: F,
+        pool: &Pool,
+    ) -> Result<Vec<Vec<Tensor>>>
+    where
+        F: Fn(usize) -> Result<Vec<xla::Literal>> + Sync,
+    {
+        let sig = self.manifest.artifact(name)?.clone();
+        // resolve (and, cold, compile/parse) once before fanning out so
+        // items never race on the executable cache within one call
+        let exe = self.executable(name)?;
+        match &exe.backend {
+            ExecBackend::Pjrt(_) => {
+                let sig = &sig;
+                let exe = &exe;
+                let prep = &prep;
+                let jobs: Vec<_> = (0..n_items)
+                    .map(|i| {
+                        move || -> Result<Vec<Tensor>> {
+                            let t0 = Instant::now();
+                            let per = prep(i)?;
+                            check_input_count(sig, &sig.name, statics.len() + per.len())?;
+                            self.stats.lock().expect("runtime stats").input_prep_nanos +=
+                                t0.elapsed().as_nanos() as u64;
+                            let refs: Vec<&xla::Literal> =
+                                statics.iter().chain(per.iter()).collect();
+                            self.execute_artifact(sig, exe, &refs)
+                        }
+                    })
+                    .collect();
+                pool.run(jobs).into_iter().collect()
+            }
+            ExecBackend::Interp(module) => {
+                let shapes = module.entry_param_shapes();
+                if shapes.len() != sig.inputs.len() {
+                    bail!(
+                        "artifact {name}: module wants {} parameters, signature has {}",
+                        shapes.len(),
+                        sig.inputs.len()
+                    );
+                }
+                if statics.len() > shapes.len() {
+                    bail!(
+                        "artifact {name}: {} static inputs exceed the {} parameters",
+                        statics.len(),
+                        shapes.len()
+                    );
+                }
+                let t0 = Instant::now();
+                let static_vals: Vec<hlo::Value> = statics
+                    .iter()
+                    .zip(shapes.iter().copied())
+                    .enumerate()
+                    .map(|(i, (lit, shape))| literal_to_value(lit, shape, i))
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("preparing {name} static inputs"))?;
+                self.stats.lock().expect("runtime stats").input_prep_nanos +=
+                    t0.elapsed().as_nanos() as u64;
+                let per_shapes = &shapes[statics.len()..];
+                let sig = &sig;
+                let static_vals = &static_vals;
+                let prep = &prep;
+                let jobs: Vec<_> = (0..n_items)
+                    .map(|i| {
+                        move || -> Result<Vec<Tensor>> {
+                            let t0 = Instant::now();
+                            let per_lits = prep(i)?;
+                            check_input_count(
+                                sig,
+                                &sig.name,
+                                statics.len() + per_lits.len(),
+                            )?;
+                            let per_vals: Vec<hlo::Value> = per_lits
+                                .iter()
+                                .zip(per_shapes.iter().copied())
+                                .enumerate()
+                                .map(|(j, (lit, shape))| {
+                                    literal_to_value(lit, shape, statics.len() + j)
+                                })
+                                .collect::<Result<_>>()
+                                .with_context(|| {
+                                    format!("preparing {} item {i} inputs", sig.name)
+                                })?;
+                            let t1 = Instant::now();
+                            let refs: Vec<&hlo::Value> =
+                                static_vals.iter().chain(per_vals.iter()).collect();
+                            let outs = hlo::interpret_refs(module, &refs)
+                                .with_context(|| format!("interpreting {} item {i}", sig.name))?;
+                            let t2 = Instant::now();
+                            let out = parts_to_tensors(sig, PartsBuf::Values(outs))?;
+                            let t3 = Instant::now();
+                            let mut st = self.stats.lock().expect("runtime stats");
+                            st.executions += 1;
+                            st.interpreted += 1;
+                            st.input_prep_nanos += (t1 - t0).as_nanos() as u64;
+                            st.exec_nanos += (t2 - t1).as_nanos() as u64;
+                            st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
+                            Ok(out)
+                        }
+                    })
+                    .collect();
+                pool.run(jobs).into_iter().collect()
+            }
+        }
+    }
+
     /// The one post-execute path shared by [`Runtime::run`],
     /// [`Runtime::run_lits`] and [`Runtime::run_lits_borrowed`]: dispatch
     /// to the backend, unpack the output tuple, convert to tensors,
@@ -369,35 +503,40 @@ fn literals_to_values(
     }
     literals
         .iter()
+        .copied()
         .zip(shapes)
         .enumerate()
-        .map(|(i, (lit, shape))| {
-            let dims = shape.dims()?.to_vec();
-            let want: usize = dims.iter().product();
-            if lit.element_count() != want {
-                bail!(
-                    "parameter {i}: literal has {} elements (dims {:?}), module wants {dims:?}",
-                    lit.element_count(),
-                    lit.dims()
-                );
-            }
-            match shape.dtype()? {
-                hlo::DType::F32 => Ok(hlo::Value::F32 {
-                    dims,
-                    data: lit
-                        .to_vec::<f32>()
-                        .map_err(|e| anyhow!("parameter {i}: {e:?}"))?,
-                }),
-                hlo::DType::S32 => Ok(hlo::Value::S32 {
-                    dims,
-                    data: lit
-                        .to_vec::<i32>()
-                        .map_err(|e| anyhow!("parameter {i}: {e:?}"))?,
-                }),
-                hlo::DType::Pred => bail!("parameter {i}: pred inputs unsupported"),
-            }
-        })
+        .map(|(i, (lit, shape))| literal_to_value(lit, shape, i))
         .collect()
+}
+
+/// Convert one caller literal into the interpreter value for parameter
+/// `i`, checked against the module's declared shape.
+fn literal_to_value(lit: &xla::Literal, shape: &hlo::Shape, i: usize) -> Result<hlo::Value> {
+    let dims = shape.dims()?.to_vec();
+    let want: usize = dims.iter().product();
+    if lit.element_count() != want {
+        bail!(
+            "parameter {i}: literal has {} elements (dims {:?}), module wants {dims:?}",
+            lit.element_count(),
+            lit.dims()
+        );
+    }
+    match shape.dtype()? {
+        hlo::DType::F32 => Ok(hlo::Value::F32 {
+            dims,
+            data: lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("parameter {i}: {e:?}"))?,
+        }),
+        hlo::DType::S32 => Ok(hlo::Value::S32 {
+            dims,
+            data: lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("parameter {i}: {e:?}"))?,
+        }),
+        hlo::DType::Pred => bail!("parameter {i}: pred inputs unsupported"),
+    }
 }
 
 /// Literal constructors (shape checked against element count by the crate).

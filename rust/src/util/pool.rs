@@ -1,5 +1,8 @@
-//! Dependency-free data-parallel thread pool (std::thread::scope + mpsc
-//! channels; rayon is not in the offline crate snapshot).
+//! Dependency-free data-parallel thread pool on **persistent worker
+//! threads** (job queue + condvar; rayon is not in the offline crate
+//! snapshot). Workers are spawned once per [`Pool`] and live until the
+//! last clone is dropped, so the executable hot loop (calibrate/eval
+//! batches, sweep cells) pays no per-call spawn cost.
 //!
 //! Design rules, enforced by the determinism test suite (tests/
 //! determinism.rs):
@@ -12,26 +15,184 @@
 //!   `n = available_parallelism()` produce bit-identical floats as long as
 //!   the per-chunk computation itself is serial.
 //! * **Serial fallback.** `Pool::new(1)` (and degenerate inputs) run on
-//!   the calling thread with zero spawns, so the pool can be threaded
-//!   through cold paths for free.
+//!   the calling thread with zero spawns and zero queue traffic, so the
+//!   pool can be threaded through cold paths for free.
+//! * **No deadlock on nested use.** The submitting thread always helps
+//!   drain its own batch, so a batch submitted from *inside* a pool job
+//!   (e.g. a sweep cell whose inner eval is itself batch-parallel)
+//!   completes even when every worker is busy — nested submissions
+//!   degrade to inline execution instead of deadlocking.
+//! * **Panics cannot hang the queue.** A panicking job is caught on the
+//!   worker, the batch still drains, and the payload is re-thrown on the
+//!   submitting thread — so callers see an ordinary panic (catchable with
+//!   `std::panic::catch_unwind`) and the pool stays usable.
 //!
 //! The worker count defaults to `std::thread::available_parallelism()` and
 //! can be pinned with the `TQ_THREADS` environment variable (handy for
 //! benchmarking serial vs parallel and for CI determinism runs).
+//! `Pool::global()` is the shared persistent instance every hot path uses
+//! by default.
 
-use std::sync::mpsc;
-use std::sync::{Mutex, OnceLock};
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// A chunked fork-join pool. Cheap to construct: threads are scoped per
-/// call, so a `Pool` is just a worker-count policy.
-#[derive(Debug, Clone)]
+/// A queued unit of work. Jobs are erased to `'static` when enqueued; the
+/// borrow they actually carry is kept alive by [`Pool::exec_batch`]
+/// blocking until the whole batch has finished (the same guarantee
+/// `std::thread::scope` provides).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A job that may borrow the submitting stack frame.
+type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+struct BatchState {
+    /// jobs submitted and not yet finished (started or queued)
+    pending: usize,
+    /// first panic payload caught while running a job of this batch
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// One fork-join submission: the not-yet-started jobs plus completion
+/// tracking. Shared between the submitting thread (which participates)
+/// and the persistent workers.
+struct Batch {
+    queue: Mutex<VecDeque<Job>>,
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+impl Batch {
+    fn new(jobs: VecDeque<Job>) -> Batch {
+        let n = jobs.len();
+        Batch {
+            queue: Mutex::new(jobs),
+            state: Mutex::new(BatchState { pending: n, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn pop(&self) -> Option<Job> {
+        self.queue.lock().expect("pool batch queue").pop_front()
+    }
+
+    /// Run one job. Panics are caught so a panicking job can never hang
+    /// the queue: the first payload is stashed and re-thrown on the
+    /// submitting thread once the batch has fully drained.
+    fn run_one(&self, job: Job) {
+        let res = catch_unwind(AssertUnwindSafe(job));
+        let mut st = self.state.lock().expect("pool batch state");
+        st.pending -= 1;
+        if let Err(p) = res {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        if st.pending == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+struct Injector {
+    batches: VecDeque<Arc<Batch>>,
+    shutdown: bool,
+}
+
+struct Core {
+    injector: Mutex<Injector>,
+    work: Condvar,
+}
+
+fn worker_loop(core: &Core) {
+    let mut inj = core.injector.lock().expect("pool injector");
+    loop {
+        // claim one job from the oldest batch that still has queued work,
+        // removing exhausted batches (their stragglers are tracked by
+        // each batch's own `pending` count) as we go
+        let mut found: Option<(Arc<Batch>, Job)> = None;
+        while found.is_none() {
+            let Some(front) = inj.batches.front() else { break };
+            let batch = front.clone();
+            match batch.pop() {
+                Some(job) => found = Some((batch, job)),
+                None => {
+                    inj.batches.pop_front();
+                }
+            }
+        }
+        match found {
+            Some((batch, job)) => {
+                drop(inj);
+                batch.run_one(job);
+                inj = core.injector.lock().expect("pool injector");
+            }
+            None if inj.shutdown => return,
+            None => inj = core.work.wait(inj).expect("pool injector"),
+        }
+    }
+}
+
+/// Owns the worker threads: dropping the last `Pool` clone signals
+/// shutdown and joins them.
+struct Workers {
+    core: Arc<Core>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        self.core.injector.lock().expect("pool injector").shutdown = true;
+        self.core.work.notify_all();
+        for h in self.handles.lock().expect("pool worker handles").drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A chunked fork-join pool over persistent workers. Clones share the
+/// same worker set; `Pool::new(1)` spawns nothing and runs everything
+/// inline.
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
+    /// `None` for the serial pool: no workers, no queue.
+    workers: Option<Arc<Workers>>,
+}
+
+impl fmt::Debug for Pool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pool({} threads, persistent)", self.threads)
+    }
 }
 
 impl Pool {
+    /// Spawn a pool with `threads` total runners. The submitting thread
+    /// participates in every batch, so `threads - 1` persistent workers
+    /// are spawned.
     pub fn new(threads: usize) -> Pool {
-        Pool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Pool { threads, workers: None };
+        }
+        let core = Arc::new(Core {
+            injector: Mutex::new(Injector { batches: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let core = core.clone();
+                std::thread::Builder::new()
+                    .name(format!("tq-pool-{i}"))
+                    .spawn(move || worker_loop(&core))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool {
+            threads,
+            workers: Some(Arc::new(Workers { core, handles: Mutex::new(handles) })),
+        }
     }
 
     /// One worker: every operation runs inline on the calling thread.
@@ -39,8 +200,9 @@ impl Pool {
         Pool::new(1)
     }
 
-    /// Process-wide default pool (TQ_THREADS override, else
-    /// available_parallelism).
+    /// Process-wide persistent pool (TQ_THREADS override, else
+    /// available_parallelism). Shared by every hot path that does not get
+    /// an explicit pool.
     pub fn global() -> &'static Pool {
         static POOL: OnceLock<Pool> = OnceLock::new();
         POOL.get_or_init(|| Pool::new(default_threads()))
@@ -48,6 +210,47 @@ impl Pool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Fork-join primitive every public method builds on: enqueue `jobs`
+    /// for the workers, help drain them on the calling thread, and return
+    /// once every job has finished. Because the caller always
+    /// participates, a batch submitted from inside a pool job completes
+    /// even when all workers are busy with outer jobs — there is no
+    /// deadlock by construction. The first caught panic (if any) is
+    /// re-thrown here after the batch has drained.
+    fn exec_batch<'env>(&self, jobs: Vec<ScopedJob<'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let jobs: VecDeque<Job> = jobs
+            .into_iter()
+            // SAFETY: the job may borrow `'env` state from the caller.
+            // This function blocks until `pending == 0`, i.e. until every
+            // job has run to completion, so no borrow outlives this call
+            // — the lifetime erasure is never observable.
+            .map(|j| unsafe { std::mem::transmute::<ScopedJob<'env>, Job>(j) })
+            .collect();
+        let batch = Arc::new(Batch::new(jobs));
+        if let Some(w) = &self.workers {
+            let mut inj = w.core.injector.lock().expect("pool injector");
+            inj.batches.push_back(batch.clone());
+            drop(inj);
+            w.core.work.notify_all();
+        }
+        // participate: drain our own batch so progress never depends on a
+        // free worker
+        while let Some(job) = batch.pop() {
+            batch.run_one(job);
+        }
+        let mut st = batch.state.lock().expect("pool batch state");
+        while st.pending > 0 {
+            st = batch.done.wait(st).expect("pool batch state");
+        }
+        if let Some(p) = st.panic.take() {
+            drop(st);
+            resume_unwind(p);
+        }
     }
 
     /// Run `f(chunk_index, chunk)` over contiguous chunks of `data` of
@@ -66,19 +269,24 @@ impl Pool {
             }
             return;
         }
-        let mut chunks: Vec<(usize, &mut [T])> =
+        let chunks: Vec<(usize, &mut [T])> =
             data.chunks_mut(chunk_len).enumerate().collect();
         let per = chunks.len().div_ceil(self.threads);
-        std::thread::scope(|s| {
-            for group in chunks.chunks_mut(per) {
-                let f = &f;
-                s.spawn(move || {
-                    for (i, c) in group.iter_mut() {
-                        f(*i, &mut **c);
-                    }
-                });
+        let f = &f;
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(self.threads);
+        let mut it = chunks.into_iter();
+        loop {
+            let group: Vec<(usize, &mut [T])> = it.by_ref().take(per).collect();
+            if group.is_empty() {
+                break;
             }
-        });
+            jobs.push(Box::new(move || {
+                for (i, c) in group {
+                    f(i, c);
+                }
+            }));
+        }
+        self.exec_batch(jobs);
     }
 
     /// Map `f(index, item)` over `items`, preserving input order in the
@@ -93,21 +301,30 @@ impl Pool {
             return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
         let per = items.len().div_ceil(self.threads);
-        let (tx, rx) = mpsc::channel::<(usize, Vec<U>)>();
-        std::thread::scope(|s| {
-            for (gi, group) in items.chunks(per).enumerate() {
-                let tx = tx.clone();
-                let f = &f;
-                s.spawn(move || {
-                    let base = gi * per;
-                    let out: Vec<U> =
-                        group.iter().enumerate().map(|(j, t)| f(base + j, t)).collect();
-                    let _ = tx.send((base, out));
-                });
-            }
-        });
-        drop(tx);
-        collect_slots(rx, items.len())
+        let total = items.len();
+        let slots: Mutex<Vec<Option<U>>> =
+            Mutex::new(std::iter::repeat_with(|| None).take(total).collect());
+        {
+            let f = &f;
+            let slots = &slots;
+            let jobs: Vec<ScopedJob<'_>> = items
+                .chunks(per)
+                .enumerate()
+                .map(|(gi, group)| {
+                    Box::new(move || {
+                        let base = gi * per;
+                        let out: Vec<U> = group
+                            .iter()
+                            .enumerate()
+                            .map(|(j, t)| f(base + j, t))
+                            .collect();
+                        store_group(slots, base, out);
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            self.exec_batch(jobs);
+        }
+        take_slots(slots)
     }
 
     /// Like [`Pool::par_map`] but with mutable access to each item.
@@ -122,60 +339,60 @@ impl Pool {
         }
         let per = items.len().div_ceil(self.threads);
         let total = items.len();
-        let (tx, rx) = mpsc::channel::<(usize, Vec<U>)>();
-        std::thread::scope(|s| {
-            for (gi, group) in items.chunks_mut(per).enumerate() {
-                let tx = tx.clone();
-                let f = &f;
-                s.spawn(move || {
-                    let base = gi * per;
-                    let out: Vec<U> = group
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(j, t)| f(base + j, t))
-                        .collect();
-                    let _ = tx.send((base, out));
-                });
-            }
-        });
-        drop(tx);
-        collect_slots(rx, total)
+        let slots: Mutex<Vec<Option<U>>> =
+            Mutex::new(std::iter::repeat_with(|| None).take(total).collect());
+        {
+            let f = &f;
+            let slots = &slots;
+            let jobs: Vec<ScopedJob<'_>> = items
+                .chunks_mut(per)
+                .enumerate()
+                .map(|(gi, group)| {
+                    Box::new(move || {
+                        let base = gi * per;
+                        let out: Vec<U> = group
+                            .iter_mut()
+                            .enumerate()
+                            .map(|(j, t)| f(base + j, t))
+                            .collect();
+                        store_group(slots, base, out);
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            self.exec_batch(jobs);
+        }
+        take_slots(slots)
     }
 
-    /// Execute heterogeneous jobs with dynamic (work-stealing-ish queue)
-    /// scheduling; results come back in submission order. This is the
-    /// sweep engine's entry point: one job per experiment configuration.
+    /// Execute heterogeneous jobs with dynamic scheduling (one queue entry
+    /// per job); results come back in submission order. This is the sweep
+    /// engine's and `Runtime::run_batch`'s entry point.
     pub fn run<R, F>(&self, jobs: Vec<F>) -> Vec<R>
     where
         R: Send,
         F: FnOnce() -> R + Send,
     {
         let total = jobs.len();
-        let n = self.threads.min(total.max(1));
-        if n <= 1 {
+        if self.threads <= 1 || total <= 1 {
             return jobs.into_iter().map(|j| j()).collect();
         }
-        // LIFO pop keeps the queue a plain Vec; result order is restored
-        // by index, so scheduling order is irrelevant to the caller.
-        let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>());
-        let (tx, rx) = mpsc::channel::<(usize, Vec<R>)>();
-        std::thread::scope(|s| {
-            for _ in 0..n {
-                let tx = tx.clone();
-                let queue = &queue;
-                s.spawn(move || loop {
-                    let job = queue.lock().expect("pool queue").pop();
-                    match job {
-                        Some((i, j)) => {
-                            let _ = tx.send((i, vec![j()]));
-                        }
-                        None => break,
-                    }
-                });
-            }
-        });
-        drop(tx);
-        collect_slots(rx, total)
+        let slots: Mutex<Vec<Option<R>>> =
+            Mutex::new(std::iter::repeat_with(|| None).take(total).collect());
+        {
+            let slots = &slots;
+            let boxed: Vec<ScopedJob<'_>> = jobs
+                .into_iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    Box::new(move || {
+                        let r = job();
+                        store_group(slots, i, vec![r]);
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            self.exec_batch(boxed);
+        }
+        take_slots(slots)
     }
 }
 
@@ -189,15 +406,25 @@ fn default_threads() -> usize {
         })
 }
 
-/// Reassemble worker results into input order.
-fn collect_slots<U>(rx: mpsc::Receiver<(usize, Vec<U>)>, total: usize) -> Vec<U> {
-    let mut slots: Vec<Option<U>> = std::iter::repeat_with(|| None).take(total).collect();
-    for (base, out) in rx {
-        for (j, u) in out.into_iter().enumerate() {
-            slots[base + j] = Some(u);
-        }
+/// Write one contiguous group of results into the slots, keyed by input
+/// index. This is the single place results land — par_map, par_iter_mut
+/// and run all route through it, so the index-addressed determinism
+/// contract lives in one function.
+fn store_group<U>(slots: &Mutex<Vec<Option<U>>>, base: usize, out: Vec<U>) {
+    let mut s = slots.lock().expect("pool result slots");
+    for (j, u) in out.into_iter().enumerate() {
+        s[base + j] = Some(u);
     }
-    slots.into_iter().map(|o| o.expect("pool worker result")).collect()
+}
+
+/// Unwrap the index-addressed result slots into input order.
+fn take_slots<U>(slots: Mutex<Vec<Option<U>>>) -> Vec<U> {
+    slots
+        .into_inner()
+        .expect("pool result slots")
+        .into_iter()
+        .map(|o| o.expect("pool worker result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -264,9 +491,9 @@ mod tests {
 
     #[test]
     fn serial_pool_never_spawns() {
-        // indirectly: results must match and nothing panics on n=1
         let pool = Pool::serial();
         assert_eq!(pool.threads(), 1);
+        assert!(pool.workers.is_none(), "serial pool must not hold workers");
         let out = pool.par_map(&[1, 2, 3], |_, &x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
         let empty: Vec<i32> = vec![];
@@ -278,5 +505,59 @@ mod tests {
     #[test]
     fn global_pool_exists() {
         assert!(Pool::global().threads() >= 1);
+    }
+
+    #[test]
+    fn workers_are_reused_across_many_calls() {
+        // the persistent pool must survive thousands of small batches
+        // without respawning (a respawn bug would blow the thread limit
+        // or deadlock); clone shares the same worker set
+        let pool = Pool::new(3);
+        let alias = pool.clone();
+        for round in 0..500 {
+            let items: Vec<usize> = (0..8).collect();
+            let out = alias.par_map(&items, |_, &x| x + round);
+            assert_eq!(out, (0..8).map(|x| x + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        // outer jobs saturate every runner, then each submits an inner
+        // batch to the SAME pool; caller participation must drain it
+        let pool = Pool::new(4);
+        let outer: Vec<_> = (0..8)
+            .map(|i| {
+                let pool = pool.clone();
+                move || {
+                    let items: Vec<usize> = (0..16).collect();
+                    let inner = pool.par_map(&items, |_, &x| x * x);
+                    inner.iter().sum::<usize>() + i
+                }
+            })
+            .collect();
+        let want: usize = (0..16).map(|x: usize| x * x).sum();
+        let out = pool.run(outer);
+        assert_eq!(out, (0..8).map(|i| want + i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_surfaces_and_pool_survives() {
+        let pool = Pool::new(4);
+        let jobs: Vec<_> = (0..16)
+            .map(|i| {
+                move || {
+                    if i == 11 {
+                        panic!("boom from job {i}");
+                    }
+                    i
+                }
+            })
+            .collect();
+        let res = catch_unwind(AssertUnwindSafe(|| pool.run(jobs)));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // the queue is not hung: the same pool keeps working
+        let out = pool.run((0..32).map(|i| move || i * 3).collect::<Vec<_>>());
+        assert_eq!(out, (0..32).map(|i| i * 3).collect::<Vec<_>>());
     }
 }

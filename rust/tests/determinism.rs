@@ -3,8 +3,19 @@
 //! `available_parallelism()` workers, on seeded random tensors. This is
 //! the contract that lets the sweep engine spend threads freely without
 //! perturbing any paper reproduction.
+//!
+//! The `calibrate_eval_*` test additionally pins the batch-parallel
+//! executable hot loop (`Runtime::run_batch` through the persistent
+//! pool): a full calibrate → evaluate run must score bit-identically on
+//! a 1-thread and an 8-thread `Ctx` — the in-process equivalent of
+//! `TQ_THREADS=1` vs `TQ_THREADS=8 repro smoke`.
 
+use tq::coordinator::calibrate::{calibrate, CalibCfg};
 use tq::coordinator::sweep::{grid, run_offline, synth_data};
+use tq::coordinator::{eval, Ctx};
+use tq::data::task_spec;
+use tq::model::qconfig::{assemble_act_tensors, QuantPolicy};
+use tq::model::Params;
 use tq::quant::adaround::{adaround_with_gram_pool, AdaRoundCfg};
 use tq::quant::estimators::{mse_search_pool, RangeTracker};
 use tq::quant::{
@@ -120,6 +131,92 @@ fn adaround_is_parallel_deterministic() {
     assert_eq!(bits(a.weight.data()), bits(b.weight.data()));
     assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
     assert_eq!(a.initial_loss.to_bits(), b.initial_loss.to_bits());
+}
+
+/// Full executable-hot-loop bit-identity: calibrate → assemble → evaluate
+/// on a 1-thread pool vs an 8-thread pool over the same artifacts. This
+/// is the contract behind `TQ_THREADS=N repro smoke` printing the same
+/// score bits for every N. Requires artifacts (CI generates them before
+/// `cargo test`; a bare checkout skips).
+#[test]
+fn calibrate_eval_is_parallel_deterministic() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let mut runs: Vec<(Vec<u32>, u64)> = Vec::new();
+    for threads in [1usize, 8] {
+        let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+            .unwrap()
+            .with_pool(Pool::new(threads));
+        let info = ctx.model_info(&task).unwrap();
+        let params = Params::init(info, 17);
+        // batch_size 2 exercises the concat path; grams exercise the
+        // pooled Gram fan-out
+        let cfg = CalibCfg {
+            num_batches: 4,
+            batch_size: 2,
+            collect_grams: true,
+            ..Default::default()
+        };
+        let calib = calibrate(&ctx, &task, &params, &cfg).unwrap();
+        // estimator state must be bit-identical lane by lane
+        let mut range_bits = Vec::new();
+        for tr in calib.trackers.values() {
+            let (lo, hi) = tr.lane_ranges();
+            range_bits.extend(bits(&lo));
+            range_bits.extend(bits(&hi));
+        }
+        let act =
+            assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers).unwrap();
+        let mut split = tq::data::dev_split(&task, info.config.seq).unwrap();
+        // a non-multiple of the executable batch: the padded tail rows
+        // must not perturb the score either
+        split.examples.truncate(20);
+        let score = eval::evaluate_split(&ctx, &task, &params, &act, &split).unwrap();
+        runs.push((range_bits, score.to_bits()));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "estimator ranges diverged across thread counts");
+    assert_eq!(
+        runs[0].1, runs[1].1,
+        "dev score diverged: {} vs {}",
+        f64::from_bits(runs[0].1),
+        f64::from_bits(runs[1].1)
+    );
+}
+
+/// The persistent pool survives sustained small-batch traffic and
+/// panicking jobs: a panic surfaces as a clean unwind on the submitter
+/// (not a hung queue), and the same workers keep serving afterwards.
+#[test]
+fn pool_stress_many_small_jobs_and_panic_containment() {
+    let pool = Pool::new(8);
+    // thousands of tiny jobs across hundreds of batches on one worker set
+    for round in 0..200u64 {
+        let jobs: Vec<_> = (0..32u64).map(|i| move || i * i + round).collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..32u64).map(|i| i * i + round).collect::<Vec<_>>());
+    }
+    // mixed workloads on the same pool
+    let items: Vec<u64> = (0..1000).collect();
+    let doubled = pool.par_map(&items, |i, &x| {
+        assert_eq!(i as u64, x);
+        x * 2
+    });
+    assert_eq!(doubled[999], 1998);
+    // a panicking job must propagate cleanly...
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(
+            (0..16)
+                .map(|i| move || if i == 7 { panic!("job {i} failed") } else { i })
+                .collect::<Vec<_>>(),
+        )
+    }));
+    assert!(res.is_err(), "panic must reach the submitter");
+    // ...and the queue must not be hung: the pool still works
+    let after = pool.run((0..64).map(|i| move || i + 1).collect::<Vec<_>>());
+    assert_eq!(after, (1..=64).collect::<Vec<_>>());
 }
 
 #[test]

@@ -154,6 +154,86 @@ fn eval_scores_in_range_and_policy_sensitivity() {
     assert!((0.0..=100.0).contains(&sp));
 }
 
+/// The dev split is rarely a multiple of the executable batch; the final
+/// partial batch is padded (see `data::make_batch`) and its rows must be
+/// ignored, never scored. Pinned by recomputing the same predictions with
+/// the OLD wraparound tail (head examples duplicated into the padding
+/// rows): tail content must not move the score by a single bit.
+#[test]
+fn eval_scores_ignore_padded_tail_rows() {
+    let Some(ctx) = ctx() else { return };
+    let task = task_spec("sst2").unwrap();
+    let info = ctx.model_info(&task).unwrap();
+    let params = Params::init(info, 23);
+    let act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new()).unwrap();
+    let seq = info.config.seq;
+    let mut split = data::dev_split(&task, seq).unwrap();
+    split.examples.truncate(20); // 2 full batches + a 4-row tail
+    let score = eval::evaluate_split(&ctx, &task, &params, &act, &split).unwrap();
+
+    let b = 8usize;
+    let n = split.examples.len();
+    let mut statics = Vec::new();
+    for t in &params.tensors {
+        statics.push(lit_f32(t.data(), t.shape()).unwrap());
+    }
+    statics.push(lit_f32(&act.scales, &[act.scales.len()]).unwrap());
+    statics.push(lit_f32(&act.zps, &[act.zps.len()]).unwrap());
+    statics.push(lit_f32(&act.cfg, &[info.sites.len(), 3]).unwrap());
+    let mut preds = Vec::new();
+    let mut golds = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        // old-style wraparound batch: rows past the end duplicate the
+        // head of the split
+        let mut ids = Vec::new();
+        let mut tt = Vec::new();
+        let mut mask = Vec::new();
+        for i in 0..b {
+            let ex = &split.examples[(start + i) % n];
+            ids.extend_from_slice(&ex.ids);
+            tt.extend_from_slice(&ex.token_type);
+            mask.extend_from_slice(&ex.mask);
+        }
+        let l_ids = lit_i32(&ids, &[b, seq]).unwrap();
+        let l_tt = lit_i32(&tt, &[b, seq]).unwrap();
+        let l_mask = lit_f32(&mask, &[b, seq]).unwrap();
+        let mut lits: Vec<&xla::Literal> = statics.iter().collect();
+        lits.push(&l_ids);
+        lits.push(&l_tt);
+        lits.push(&l_mask);
+        let out = ctx.rt.run_lits_borrowed("fwd_cls_b8", &lits).unwrap();
+        let logits = &out[0];
+        let take = (n - start).min(b);
+        for i in 0..take {
+            let row = &logits.data()[i * info.config.n_out..(i + 1) * info.config.n_out];
+            let pred = row[..2]
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.total_cmp(y.1))
+                .map(|(j, _)| j)
+                .unwrap();
+            preds.push(pred);
+            golds.push(split.examples[start + i].label);
+        }
+        start += b;
+    }
+    let want = tq::metrics::task_score("sst2", &preds, &golds, &[], &[]);
+    assert_eq!(
+        score.to_bits(),
+        want.to_bits(),
+        "padded tail leaked into the score: {score} vs {want}"
+    );
+
+    // an exact multiple of the batch takes the no-padding path and must
+    // also produce the same per-example predictions
+    let mut split16 = data::dev_split(&task, seq).unwrap();
+    split16.examples.truncate(16);
+    let s16 = eval::evaluate_split(&ctx, &task, &params, &act, &split16).unwrap();
+    let want16 = tq::metrics::task_score("sst2", &preds[..16], &golds[..16], &[], &[]);
+    assert_eq!(s16.to_bits(), want16.to_bits());
+}
+
 #[test]
 fn pallas_and_jnp_forward_artifacts_agree() {
     let Some(ctx) = ctx() else { return };
