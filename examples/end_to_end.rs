@@ -48,9 +48,8 @@ fn main() -> Result<()> {
     let w8a8 = eval_config(&ctx, &task, &res.params,
                            &EvalConfig::new(QuantPolicy::uniform(8, 8)), 1)?;
     let peg_cfg = SiteCfg {
-        bits: 8,
         granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
-        enabled: true,
+        ..Default::default()
     };
     let mut peg_policy = QuantPolicy::uniform(8, 8);
     for fam in ["ln1_out", "ffn_out", "res2_sum"] {

@@ -30,9 +30,8 @@ fn main() -> Result<()> {
 
     // PEG with range-based permutation on the FFN sites (paper Table 5)
     let peg_cfg = SiteCfg {
-        bits: 8,
         granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
-        enabled: true,
+        ..Default::default()
     };
     let mut policy = QuantPolicy::uniform(8, 8);
     for fam in ["ln1_out", "ffn_out", "res2_sum"] {

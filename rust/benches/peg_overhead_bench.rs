@@ -1,24 +1,85 @@
-//! PEG re-scaling overhead vs K — the paper's §4 efficiency argument:
-//! per-embedding quantization needs d accumulator re-scalings per output,
-//! PEG needs only K. We measure the end-to-end latency of the standalone
-//! Pallas PEG-matmul artifacts (T=128, d=768, n=768) at K = 1 / 3 / 6 / 16
-//! on the PJRT CPU client, plus the fake-quant kernel.
+//! PEG overhead vs K — both halves of the paper's §4 efficiency argument:
+//!
+//! 1. **Parameter-resolution cost** (always runs, no artifacts): the
+//!    Rust-side PEG pipeline — tracker → permutation → groups →
+//!    (per-group MSE search) → lane qparams — timed at d=768 for
+//!    K = 1 / 3 / 6 / 12 / 768, with the paper's d + 2·3·K storage
+//!    overhead recorded per row. This is what `repro sweep`'s K axis
+//!    pays per cell.
+//! 2. **Kernel latency** (needs artifacts): the standalone Pallas
+//!    PEG-matmul artifacts (T=128, d=768, n=768) at K = 1 / 3 / 6 / 16
+//!    on the PJRT CPU client, plus the fake-quant kernel.
+//!
+//! Everything appends to results/bench_peg.csv so CI can publish one
+//! artifact.
 
+use tq::model::qconfig::{site_lane_params_pool, SiteCfg};
+use tq::quant::estimators::RangeTracker;
+use tq::quant::peg::granularity_overhead_params;
+use tq::quant::{Estimator, QGrid, RangeMethod};
 use tq::runtime::{Runtime, Value};
 use tq::tensor::Tensor;
 use tq::util::bench::{append_csv, Bencher};
+use tq::util::pool::Pool;
 use tq::util::rng::Rng;
 
+fn granularity_for(d: usize, k: usize) -> tq::quant::Granularity {
+    tq::coordinator::sweep::granularity_for(d, k).unwrap()
+}
+
+fn bench_param_resolution(csv: &str) {
+    let d = 768;
+    let mut rng = Rng::new(5);
+    let mut tracker = RangeTracker::new(Estimator::CurrentMinMax, d).with_row_samples();
+    for _ in 0..4 {
+        let t = Tensor::from_fn(&[256, d], |i| {
+            let lane = i % d;
+            let mag = if lane % 127 == 3 { 30.0 } else { 1.0 };
+            rng.normal_f32(0.0, mag)
+        });
+        tracker.observe(&t).unwrap();
+    }
+    let grid = QGrid::asymmetric(8);
+    let pool = Pool::global();
+    for k in [1usize, 3, 6, 12, 768] {
+        for method in [RangeMethod::Auto, RangeMethod::MsePerGroup] {
+            let cfg = SiteCfg {
+                bits: 8,
+                granularity: granularity_for(d, k),
+                range_method: method,
+                enabled: true,
+            };
+            let overhead = granularity_overhead_params(d, &cfg.granularity);
+            let tag = match method {
+                RangeMethod::MsePerGroup => "mse_group",
+                _ => "minmax",
+            };
+            let s = Bencher::quick().bench(
+                &format!("peg_param_resolution d=768 K={k} {tag} (overhead={overhead})"),
+                || {
+                    std::hint::black_box(
+                        site_lane_params_pool(&tracker, &cfg, grid, pool).unwrap(),
+                    );
+                },
+            );
+            append_csv(csv, &s).ok();
+        }
+    }
+}
+
 fn main() {
+    let csv = "results/bench_peg.csv";
+    // half 1: parameter-resolution cost — always runs, artifacts or not
+    bench_param_resolution(csv);
+
     let rt = match Runtime::new("artifacts") {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping peg_overhead_bench (no artifacts): {e}");
+            eprintln!("skipping peg kernel bench (no artifacts): {e}");
             return;
         }
     };
     let mut rng = Rng::new(3);
-    let csv = "results/bench_peg.csv";
 
     let x = Tensor::randn(&[128, 768], 1.0, &mut rng);
     let w = Tensor::randn(&[768, 768], 0.05, &mut rng);

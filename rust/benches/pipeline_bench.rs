@@ -46,9 +46,8 @@ fn main() {
 
     // policy assembly cost (the L3 "hot" configuration path)
     let peg = SiteCfg {
-        bits: 8,
         granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
-        enabled: true,
+        ..Default::default()
     };
     let mut policy = QuantPolicy::uniform(8, 8);
     for fam in ["ln1_out", "ffn_out", "res2_sum"] {

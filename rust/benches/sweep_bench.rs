@@ -5,7 +5,7 @@
 //! reproducible) without AOT artifacts.
 
 use tq::coordinator::sweep::{grid, run_offline, synth_data};
-use tq::quant::Estimator;
+use tq::quant::{Estimator, RangeMethod};
 use tq::util::bench::{append_csv, Bencher};
 use tq::util::pool::Pool;
 
@@ -20,6 +20,7 @@ fn main() {
         &[8],
         &[1, 8, 128],
         &[Estimator::CurrentMinMax, Estimator::Mse],
+        &[RangeMethod::Auto],
     )
     .unwrap();
     println!("sweep bench: {} configs, up to {threads} workers", cfgs.len());

@@ -84,6 +84,29 @@ pub fn calibrate(
     params: &Params,
     cfg: &CalibCfg,
 ) -> Result<Calibration> {
+    calibrate_with(ctx, task, params, cfg, None)
+}
+
+/// True when a site's resolved config needs retained row samples at
+/// calibration time — [`RangeMethod::needs_row_samples`] gated on the
+/// site actually being quantized.
+fn needs_row_samples(sc: &crate::model::qconfig::SiteCfg, estimator: Estimator) -> bool {
+    sc.enabled && sc.range_method.needs_row_samples(estimator)
+}
+
+/// Policy-aware [`calibrate`]: when the resolved activation policy is
+/// known up front, sites whose range method needs an MSE search beyond
+/// what the calibration estimator retains get row-sampling trackers
+/// ([`RangeTracker::with_row_samples`]) — so `mse_group` / `mse_tensor`
+/// sites work under *any* calibration estimator. With `policy == None`
+/// this is exactly the old behaviour.
+pub fn calibrate_with(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    params: &Params,
+    cfg: &CalibCfg,
+    policy: Option<&QuantPolicy>,
+) -> Result<Calibration> {
     let info = ctx.model_info(task)?;
     let artifact = format!("diag_{}_b1", ctx.head(task));
     let seq = info.config.seq;
@@ -94,7 +117,13 @@ pub fn calibrate(
     let mut trackers: BTreeMap<String, RangeTracker> = info
         .sites
         .iter()
-        .map(|s| (s.name.clone(), RangeTracker::new(cfg.estimator, s.channels)))
+        .map(|s| {
+            let mut tr = RangeTracker::new(cfg.estimator, s.channels);
+            if policy.is_some_and(|p| needs_row_samples(p.site_cfg(&s.name), cfg.estimator)) {
+                tr = tr.with_row_samples();
+            }
+            (s.name.clone(), tr)
+        })
         .collect();
     let gsites = gram_sites(info.config.layers);
     let mut grams: BTreeMap<String, (Tensor, f32)> = BTreeMap::new();
@@ -295,6 +324,39 @@ mod tests {
     fn concat_rows_empty_is_an_error_not_a_panic() {
         let err = concat_rows(&[]).unwrap_err();
         assert!(err.to_string().contains("concat_rows"), "{err}");
+    }
+
+    #[test]
+    fn row_sampling_follows_the_range_method() {
+        use crate::model::qconfig::SiteCfg;
+        use crate::quant::RangeMethod;
+        let mk = |m: RangeMethod, enabled: bool| SiteCfg {
+            range_method: m,
+            enabled,
+            ..Default::default()
+        };
+        // mse_group always samples rows; mse_tensor only when the
+        // estimator does not already keep an MSE reservoir
+        assert!(needs_row_samples(&mk(RangeMethod::MsePerGroup, true), Estimator::Mse));
+        assert!(needs_row_samples(
+            &mk(RangeMethod::MsePerGroup, true),
+            Estimator::RunningMinMax
+        ));
+        assert!(needs_row_samples(
+            &mk(RangeMethod::MseTensor, true),
+            Estimator::RunningMinMax
+        ));
+        assert!(!needs_row_samples(&mk(RangeMethod::MseTensor, true), Estimator::Mse));
+        assert!(!needs_row_samples(&mk(RangeMethod::Auto, true), Estimator::RunningMinMax));
+        assert!(!needs_row_samples(
+            &mk(RangeMethod::CurrentMinMax, true),
+            Estimator::RunningMinMax
+        ));
+        // disabled sites never pay the sample memory
+        assert!(!needs_row_samples(
+            &mk(RangeMethod::MsePerGroup, false),
+            Estimator::RunningMinMax
+        ));
     }
 
     #[test]

@@ -8,12 +8,12 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use super::calibrate::run_diag;
 use super::Ctx;
 use crate::data::{self, TaskSpec};
 use crate::model::manifest::ModelInfo;
 use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
 use crate::model::Params;
+use crate::runtime::{lit_f32, lit_i32};
 use crate::tensor::Tensor;
 
 /// Taps for a handful of dev sequences, FP32.
@@ -35,6 +35,14 @@ pub fn collect_taps(
 
 /// Variant-agnostic tap collection (used for Fig. 9-13 model sweeps where
 /// the artifact name and model info differ).
+///
+/// The per-sequence diag executions are independent, so they fan out
+/// through [`crate::runtime::Runtime::run_batch`] on `ctx.pool`: the
+/// static inputs (params + disabled quantizers) are built once, each
+/// sequence's literals are built on the worker that runs it, and the taps
+/// are reassembled in sequence order — `per_seq[i]` is bit-identical to a
+/// serial [`super::calibrate::run_diag`] loop at any thread count (pinned
+/// by tests/determinism.rs).
 pub fn collect_taps_with(
     ctx: &Ctx,
     artifact: &str,
@@ -45,10 +53,41 @@ pub fn collect_taps_with(
 ) -> Result<DiagRun> {
     let split = data::dev_split(task, info.config.seq)?;
     let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
-    let mut per_seq = Vec::with_capacity(n_seqs);
-    let mut examples = Vec::with_capacity(n_seqs);
-    for ex in split.examples.iter().take(n_seqs) {
-        per_seq.push(run_diag(ctx, artifact, info, params, &fp32.scales, &fp32.zps, &fp32.cfg, ex)?);
+    let n = n_seqs.min(split.examples.len());
+    let seq = info.config.seq;
+    let static_lits = super::static_input_lits(
+        params,
+        &fp32.scales,
+        &fp32.zps,
+        &fp32.cfg,
+        info.sites.len(),
+    )?;
+    let outs = ctx.rt.run_batch(
+        artifact,
+        &static_lits,
+        n,
+        |i| {
+            let ex = &split.examples[i];
+            Ok(vec![
+                lit_i32(&ex.ids, &[1, seq])?,
+                lit_i32(&ex.token_type, &[1, seq])?,
+                lit_f32(&ex.mask, &[1, seq])?,
+            ])
+        },
+        &ctx.pool,
+    )?;
+    let mut per_seq = Vec::with_capacity(n);
+    let mut examples = Vec::with_capacity(n);
+    for (ex, mut out) in split.examples.iter().take(n).zip(outs) {
+        // outputs: logits, then taps in site order
+        let taps = out.split_off(1);
+        per_seq.push(
+            info.sites
+                .iter()
+                .map(|s| s.name.clone())
+                .zip(taps)
+                .collect::<BTreeMap<String, Tensor>>(),
+        );
         examples.push(ex.clone());
     }
     Ok(DiagRun { per_seq, examples })

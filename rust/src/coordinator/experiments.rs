@@ -316,7 +316,7 @@ pub fn table5(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
             for fam in ffn_sites {
                 spec = spec.with_family(
                     fam,
-                    SiteCfg { bits: 8, granularity: g.clone(), enabled: true },
+                    SiteCfg { granularity: g.clone(), ..Default::default() },
                 );
             }
         }
@@ -332,11 +332,14 @@ pub fn table5(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
         mk("4 (only FFN)", k(4, false), true),
         mk("4 + P (only FFN)", k(4, true), true),
         mk("8 + P (only FFN)", k(8, true), true),
+        // the paper's literal K values — near-even groups since 6,3 ∤ 128
+        mk("3 + P (only FFN)", k(3, true), true),
+        mk("6 + P (only FFN)", k(6, true), true),
     ];
     spec_table(
         ctx,
         "table5",
-        "Table 5: per-embedding-group PTQ (d=128; paper K=3,6 -> K=4,8)",
+        "Table 5: per-embedding-group PTQ (d=128; incl. paper K=3,6 rows)",
         "#groups K",
         &opts.hard_tasks(),
         specs,

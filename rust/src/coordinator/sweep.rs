@@ -47,15 +47,16 @@ use anyhow::{anyhow, bail, Result};
 use super::experiments;
 use super::Ctx;
 use crate::data::TaskSpec;
+use crate::model::qconfig::{site_lane_params_pool, SiteCfg};
 use crate::model::Params;
 use crate::quant::estimators::{mse_search_pool, RangeTracker};
-use crate::quant::peg::lane_qparams;
+use crate::quant::peg::granularity_overhead_params;
 use crate::quant::{
-    qdq_per_lane_pool, qdq_tensor_pool, qparams_from_range, qparams_symmetric, Estimator,
-    Granularity, QGrid, QParams,
+    qdq_per_lane_pool, qdq_tensor_pool, qparams_symmetric, Estimator, Granularity, QGrid,
+    QParams, RangeMethod,
 };
 use crate::report::{fmt_score, write_file, Table};
-use crate::spec::{parse_estimator, PolicySpec, QuantSpec};
+use crate::spec::{parse_estimator, parse_range_method, range_method_name, PolicySpec, QuantSpec};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -69,6 +70,8 @@ pub struct SweepConfig {
     pub weight_bits: u32,
     pub granularity: Granularity,
     pub estimator: Estimator,
+    /// how site ranges are derived (the PEG per-group MSE axis)
+    pub range_method: RangeMethod,
 }
 
 impl SweepConfig {
@@ -81,7 +84,12 @@ impl SweepConfig {
             }
         };
         let e = crate::spec::estimator_name(self.estimator);
-        format!("a{}w{}-{}-{}", self.act_bits, self.weight_bits, g, e)
+        let mut label = format!("a{}w{}-{}-{}", self.act_bits, self.weight_bits, g, e);
+        if self.range_method != RangeMethod::Auto {
+            label.push('-');
+            label.push_str(range_method_name(self.range_method));
+        }
+        label
     }
 
     /// The cell as a full [`QuantSpec`] on one task — this is what the
@@ -90,6 +98,7 @@ impl SweepConfig {
     pub fn to_spec(&self, task: &str, seeds: usize) -> QuantSpec {
         let mut policy = PolicySpec::uniform(self.weight_bits, self.act_bits);
         policy.default_site.granularity = self.granularity.clone();
+        policy.default_site.range_method = self.range_method;
         policy.weights.estimator = self.estimator;
         let mut spec = QuantSpec::new(&self.label(), policy).with_seeds(seeds.max(1));
         spec.calib.estimator = self.estimator;
@@ -112,31 +121,43 @@ pub struct SweepResult {
     pub act_mse: f32,
     /// weight QDQ MSE on the synthetic weight matrix
     pub weight_mse: f32,
+    /// extra stored parameters per attention layer for the cell's
+    /// granularity (the paper's §4 PEG accounting; 0 for per-tensor) —
+    /// the accuracy-vs-overhead axis of the K sweep
+    pub peg_overhead: usize,
     /// task dev score ×100 (runtime-backed pass only)
     pub score: Option<f64>,
     pub millis: f64,
 }
 
-/// Map a group count onto the paper's granularities for embedding dim `d`.
+/// Map a group count onto the paper's granularities for embedding dim
+/// `d`: K=1 → per-tensor, K=d → per-embedding, otherwise K permuted
+/// near-even groups (K need not divide d; `peg::group_bounds` splits with
+/// group sizes differing by at most one, so the paper's K=6/K=12 rows
+/// work at any d). K > d stays an error — a typo'd group count must not
+/// silently collapse into a duplicate per-embedding cell.
 pub fn granularity_for(d: usize, k: usize) -> Result<Granularity> {
     if k <= 1 {
         Ok(Granularity::PerTensor)
     } else if k == d {
         Ok(Granularity::PerEmbedding)
-    } else if d % k == 0 {
+    } else if k < d {
         Ok(Granularity::PerEmbeddingGroup { k, permute: true })
     } else {
-        bail!("K={k} does not divide d={d}")
+        bail!("K={k} exceeds d={d} (use K=d for per-embedding)")
     }
 }
 
-/// Cross product of the sweep axes.
+/// Cross product of the sweep axes. `mse_tensor` only composes with K=1
+/// (per-tensor) cells — ask for `mse_group` on grouped cells instead —
+/// so invalid pairs fail here, before any work is scheduled.
 pub fn grid(
     d: usize,
     act_bits: &[u32],
     weight_bits: &[u32],
     groups: &[usize],
     estimators: &[Estimator],
+    range_methods: &[RangeMethod],
 ) -> Result<Vec<SweepConfig>> {
     let mut out = Vec::new();
     for &ab in act_bits {
@@ -144,12 +165,21 @@ pub fn grid(
             for &k in groups {
                 let gran = granularity_for(d, k)?;
                 for &est in estimators {
-                    out.push(SweepConfig {
-                        act_bits: ab,
-                        weight_bits: wb,
-                        granularity: gran.clone(),
-                        estimator: est,
-                    });
+                    for &rm in range_methods {
+                        if rm == RangeMethod::MseTensor && gran != Granularity::PerTensor {
+                            bail!(
+                                "range method mse_tensor needs K=1 (per-tensor); \
+                                 use mse_group for K={k}"
+                            );
+                        }
+                        out.push(SweepConfig {
+                            act_bits: ab,
+                            weight_bits: wb,
+                            granularity: gran.clone(),
+                            estimator: est,
+                            range_method: rm,
+                        });
+                    }
                 }
             }
         }
@@ -194,24 +224,27 @@ pub fn run_config_offline(
     let d = data.eval.last_dim();
     let agrid = QGrid::asymmetric(cfg.act_bits);
 
-    // calibration: estimator observation over every batch
+    // calibration: estimator observation over every batch, retaining row
+    // samples when the range method needs them (the same predicate
+    // calibrate_with consults)
     let mut tracker = RangeTracker::new(cfg.estimator, d);
+    if cfg.range_method.needs_row_samples(cfg.estimator) {
+        tracker = tracker.with_row_samples();
+    }
     for batch in &data.calib {
         tracker.observe_pool(batch, inner)?;
     }
 
-    // granularity -> per-lane parameters (PEG permutation included)
-    let params: Vec<QParams> = match &cfg.granularity {
-        Granularity::PerTensor => {
-            let (lo, hi) = tracker.tensor_range_pool(agrid, inner);
-            vec![qparams_from_range(lo, hi, agrid); d]
-        }
-        g => {
-            let (lo, hi) = tracker.lane_ranges();
-            let (params, _perm) = lane_qparams(&lo, &hi, g, agrid)?;
-            params
-        }
+    // (granularity, range_method) -> per-lane parameters through the one
+    // site-resolution path the runtime assembly uses too
+    let site_cfg = SiteCfg {
+        bits: cfg.act_bits,
+        granularity: cfg.granularity.clone(),
+        range_method: cfg.range_method,
+        enabled: true,
     };
+    let (params, _perm): (Vec<QParams>, _) =
+        site_lane_params_pool(&tracker, &site_cfg, agrid, inner)?;
     let act_q = qdq_per_lane_pool(&data.eval, &params, agrid, inner)?;
     let act_mse = act_q.mse(&data.eval)?;
 
@@ -235,6 +268,7 @@ pub fn run_config_offline(
         weight_bits: cfg.weight_bits,
         act_mse,
         weight_mse,
+        peg_overhead: granularity_overhead_params(d, &cfg.granularity),
         score: None,
         millis: t0.elapsed().as_secs_f64() * 1e3,
     })
@@ -314,6 +348,7 @@ pub fn report_json(
             m.insert("weight_bits".to_string(), Json::Num(r.weight_bits as f64));
             m.insert("act_mse".to_string(), Json::Num(r.act_mse as f64));
             m.insert("weight_mse".to_string(), Json::Num(r.weight_mse as f64));
+            m.insert("peg_overhead".to_string(), Json::Num(r.peg_overhead as f64));
             if let Some(s) = r.score {
                 m.insert("score".to_string(), Json::Num(s));
             }
@@ -353,6 +388,12 @@ pub fn parse_results(j: &Json) -> Result<BTreeMap<String, SweepResult>> {
             weight_bits: c.get("weight_bits")?.as_usize()? as u32,
             act_mse: c.get("act_mse")?.as_f64()? as f32,
             weight_mse: c.get("weight_mse")?.as_f64()? as f32,
+            // absent in reports written before the overhead column
+            peg_overhead: c
+                .opt("peg_overhead")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
             score: c.opt("score").map(|v| v.as_f64()).transpose()?,
             millis: c.get("millis")?.as_f64()?,
         };
@@ -456,6 +497,14 @@ fn parse_estimators(s: &str) -> Result<Vec<Estimator>> {
         .collect()
 }
 
+fn parse_range_methods(s: &str) -> Result<Vec<RangeMethod>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(parse_range_method)
+        .collect()
+}
+
 /// `repro sweep` driver. Runs the offline substrate sweep (skipping
 /// configurations already in `results/sweep.json` by `spec_id` unless
 /// `--fresh`), adds runtime-backed dev scores when artifacts and a
@@ -467,12 +516,13 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     let weight_bits = parse_u32_list(args.get_or("wbits", "8"))?;
     let groups = parse_usize_list(args.get_or("groups", "1,8"))?;
     let estimators = parse_estimators(args.get_or("estimators", "current,mse"))?;
+    let range_methods = parse_range_methods(args.get_or("range-methods", "auto"))?;
     let threads = args.get_usize("threads", 0)?;
     let seeds = args.get_usize("seeds", 1)?;
     let task_name = args.get_or("task", "mnli");
     let pool = if threads == 0 { Pool::global().clone() } else { Pool::new(threads) };
 
-    let cfgs = grid(d, &act_bits, &weight_bits, &groups, &estimators)?;
+    let cfgs = grid(d, &act_bits, &weight_bits, &groups, &estimators, &range_methods)?;
     if cfgs.is_empty() {
         bail!("sweep grid is empty");
     }
@@ -492,8 +542,19 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         load_cached(&sweep_path, d, data_seed).unwrap_or_default()
     };
-    let mut slots: Vec<Option<SweepResult>> =
-        ids.iter().map(|id| cached.get(id).cloned()).collect();
+    let mut slots: Vec<Option<SweepResult>> = ids
+        .iter()
+        .zip(&cfgs)
+        .map(|(id, cfg)| {
+            cached.get(id).cloned().map(|mut r| {
+                // cached rows may predate the overhead column (parsed as
+                // 0) or carry a stale value; it derives from the cell
+                // itself, so stamp it fresh like spec_id on new rows
+                r.peg_overhead = granularity_overhead_params(d, &cfg.granularity);
+                r
+            })
+        })
+        .collect();
     let todo: Vec<usize> = slots
         .iter()
         .enumerate()
@@ -587,7 +648,7 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
 
     let mut table = Table::new(
         &format!("Quantization sweep ({} configs, {} threads)", results.len(), pool.threads()),
-        &["config", "spec_id", "act MSE", "weight MSE", "score", "ms"],
+        &["config", "spec_id", "act MSE", "weight MSE", "overhead", "score", "ms"],
     );
     for r in &results {
         table.row(vec![
@@ -595,6 +656,7 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
             r.spec_id.clone(),
             format!("{:.3e}", r.act_mse),
             format!("{:.3e}", r.weight_mse),
+            format!("{}", r.peg_overhead),
             r.score.map(fmt_score).unwrap_or_else(|| "-".to_string()),
             format!("{:.1}", r.millis),
         ]);
@@ -652,6 +714,17 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
         if unmatched > 0 {
             println!("({unmatched} config(s) not in baseline — skipped)");
         }
+        if rows.is_empty() && !baseline.is_empty() {
+            // every current cell missed the baseline: the gate would pass
+            // without comparing anything — that is drift, not a pass
+            bail!(
+                "baseline {baseline_path} shares no spec_ids with this sweep \
+                 ({} baseline entries, {} current configs) — the compare gate \
+                 would be vacuous; regenerate the baseline for this grid",
+                baseline.len(),
+                results.len()
+            );
+        }
         let regressions = rows.iter().filter(|r| r.regressed).count();
         if regressions > 0 {
             bail!("{regressions} regression(s) vs baseline {baseline_path}");
@@ -682,10 +755,15 @@ mod tests {
             &[8],
             &[1, 8, 128],
             &[Estimator::CurrentMinMax, Estimator::Mse],
+            &[RangeMethod::Auto, RangeMethod::MsePerGroup],
         )
         .unwrap();
-        assert_eq!(cfgs.len(), 2 * 1 * 3 * 2);
-        assert!(grid(10, &[8], &[8], &[3], &[Estimator::Mse]).is_err());
+        assert_eq!(cfgs.len(), 2 * 1 * 3 * 2 * 2);
+        // mse_tensor only composes with per-tensor cells
+        assert!(grid(128, &[8], &[8], &[8], &[Estimator::Mse], &[RangeMethod::MseTensor])
+            .is_err());
+        assert!(grid(128, &[8], &[8], &[1], &[Estimator::Mse], &[RangeMethod::MseTensor])
+            .is_ok());
     }
 
     #[test]
@@ -696,13 +774,27 @@ mod tests {
             granularity_for(128, 8).unwrap(),
             Granularity::PerEmbeddingGroup { k: 8, permute: true }
         );
-        assert!(granularity_for(128, 7).is_err());
+        // non-dividing K: near-even permuted groups (paper K=6/12 at any d)
+        assert_eq!(
+            granularity_for(128, 6).unwrap(),
+            Granularity::PerEmbeddingGroup { k: 6, permute: true }
+        );
+        // K beyond d is a typo, not a silent duplicate per-embedding cell
+        assert!(granularity_for(128, 1000).is_err());
     }
 
     #[test]
     fn offline_sweep_runs_and_finer_granularity_wins() {
         let data = synth_data(64, 32, 4, 7);
-        let cfgs = grid(64, &[8], &[8], &[1, 64], &[Estimator::CurrentMinMax]).unwrap();
+        let cfgs = grid(
+            64,
+            &[8],
+            &[8],
+            &[1, 64],
+            &[Estimator::CurrentMinMax],
+            &[RangeMethod::Auto],
+        )
+        .unwrap();
         let res = run_offline(&data, &cfgs, &Pool::new(2)).unwrap();
         assert_eq!(res.len(), 2);
         for r in &res {
@@ -715,6 +807,33 @@ mod tests {
             res[1].act_mse,
             res[0].act_mse
         );
+        // the overhead column follows the paper's accounting
+        assert_eq!(res[0].peg_overhead, 0);
+        assert_eq!(res[1].peg_overhead, 6 * 64);
+    }
+
+    #[test]
+    fn offline_mse_group_cells_run_and_report_overhead() {
+        let data = synth_data(64, 32, 4, 7);
+        // K=6 does not divide d=64: the near-even uneven-group path runs
+        // through the row-sampling per-group search
+        let cfgs = grid(
+            64,
+            &[8],
+            &[8],
+            &[1, 6, 64],
+            &[Estimator::CurrentMinMax],
+            &[RangeMethod::Auto, RangeMethod::MsePerGroup],
+        )
+        .unwrap();
+        assert_eq!(cfgs.len(), 6);
+        let res = run_offline(&data, &cfgs, &Pool::new(2)).unwrap();
+        for r in &res {
+            assert!(r.act_mse.is_finite(), "{}", r.label);
+        }
+        // K=6 permuted groups: d + 2*3*K extra parameters
+        let k6 = res.iter().find(|r| r.label.contains("k6p")).unwrap();
+        assert_eq!(k6.peg_overhead, 64 + 36);
     }
 
     #[test]
@@ -725,6 +844,7 @@ mod tests {
             &[8, 4],
             &[1, 8, 128],
             &[Estimator::CurrentMinMax, Estimator::RunningMinMax, Estimator::Mse],
+            &[RangeMethod::Auto, RangeMethod::CurrentMinMax, RangeMethod::MsePerGroup],
         )
         .unwrap();
         let mut labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
@@ -742,6 +862,7 @@ mod tests {
             weight_bits: 8,
             granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
             estimator: Estimator::Mse,
+            range_method: RangeMethod::Auto,
         };
         let spec = cfg.to_spec("mnli", 2);
         let mut old = QuantPolicy::uniform(8, 4);
@@ -752,6 +873,13 @@ mod tests {
         assert_eq!(spec.seeds, 2);
         assert_eq!(spec.tasks, vec!["mnli".to_string()]);
         assert_eq!(spec.name, cfg.label());
+        // the range method is part of the spec (and so of its identity)
+        let mse = SweepConfig { range_method: RangeMethod::MsePerGroup, ..cfg.clone() };
+        assert_eq!(
+            mse.to_spec("mnli", 2).policy.default_site.range_method,
+            RangeMethod::MsePerGroup
+        );
+        assert_ne!(mse.to_spec("mnli", 2).spec_id(), spec.spec_id());
     }
 
     #[test]
@@ -762,6 +890,7 @@ mod tests {
             &[8],
             &[1, 8],
             &[Estimator::CurrentMinMax, Estimator::Mse],
+            &[RangeMethod::Auto, RangeMethod::MsePerGroup],
         )
         .unwrap();
         let mut ids: Vec<String> =
@@ -781,7 +910,8 @@ mod tests {
     #[test]
     fn report_json_roundtrips() {
         let data = synth_data(32, 16, 2, 1);
-        let cfgs = grid(32, &[8], &[4], &[1], &[Estimator::Mse]).unwrap();
+        let cfgs =
+            grid(32, &[8], &[4], &[1], &[Estimator::Mse], &[RangeMethod::Auto]).unwrap();
         let res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
         let j = report_json(&res, 4, 12.5, 32, 1);
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -803,7 +933,8 @@ mod tests {
     #[test]
     fn cached_results_roundtrip_by_spec_id() {
         let data = synth_data(32, 16, 2, 1);
-        let cfgs = grid(32, &[8, 4], &[4], &[1], &[Estimator::Mse]).unwrap();
+        let cfgs =
+            grid(32, &[8, 4], &[4], &[1], &[Estimator::Mse], &[RangeMethod::Auto]).unwrap();
         let mut res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
         for (r, c) in res.iter_mut().zip(&cfgs) {
             r.spec_id = c.to_spec("mnli", 1).spec_id();
@@ -839,6 +970,7 @@ mod tests {
             weight_bits: 8,
             act_mse,
             weight_mse: 1e-4,
+            peg_overhead: 0,
             score,
             millis: 1.0,
         };

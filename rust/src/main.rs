@@ -7,15 +7,18 @@
 //!     repro fig2|fig5|fig6|fig9
 //!     repro hparams                  (appendix Tables 8-11)
 //!     repro eval --task mnli
-//!     repro run --spec FILE.json | --preset NAME [--dump-spec]
+//!     repro run --spec FILE.json | --preset NAME [--dump-spec] [--explain]
 //!                                    (run any quantization spec; presets
-//!                                    name the paper's configurations)
+//!                                    name the paper's configurations;
+//!                                    --explain prints the resolved
+//!                                    per-site policy without running)
 //!     repro smoke                    (runtime sanity: load + run artifacts)
 //!     repro gen-artifacts [--no-ckpt]
 //!                                    (emit the fixture artifacts/ + init
 //!                                    checkpoints so every runtime surface
 //!                                    works in-container — see hlo::fixture)
-//!     repro sweep [--bits 8,4] [--wbits 8] [--groups 1,8] [--threads N]
+//!     repro sweep [--bits 8,4] [--wbits 8] [--groups 1,8]
+//!                 [--range-methods auto,mse_group] [--threads N]
 //!                 [--fresh] [--compare baseline.json]
 //!                                    (parallel config sweep, resumable by
 //!                                    spec_id; works without artifacts —
@@ -155,6 +158,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         args.get_or("ckpt", "checkpoints"),
         args.get_or("results", "results"),
     )?;
+    if args.flag("explain") {
+        return explain_spec(&ctx, &spec);
+    }
     let report = run_spec(&ctx, &spec)?;
     let mut header: Vec<&str> = vec!["spec"];
     header.extend(report.tasks.iter().map(String::as_str));
@@ -182,6 +188,70 @@ fn cmd_run(args: &Args) -> Result<()> {
         results_dir.join(format!("run_{}.json", report.spec_id)),
         &out.to_string(),
     )?;
+    Ok(())
+}
+
+/// `repro run --explain`: resolve the spec against each target task's
+/// model topology and print the per-site policy — bits, granularity,
+/// range method, enabled — plus the PEG parameter overhead, without
+/// executing anything. This is the spec-diff surface: two specs can be
+/// compared site by site before spending a calibration run.
+fn explain_spec(ctx: &Ctx, spec: &QuantSpec) -> Result<()> {
+    use tq::quant::peg::site_overhead_params;
+    use tq::spec::{granularity_name, range_method_name};
+    let tasks = tq::spec::run::spec_tasks(spec)?;
+    println!("spec {} ({})", spec.display_name(), spec.spec_id());
+    // tasks share a topology per head kind; explain each distinct one
+    let mut seen = std::collections::BTreeSet::new();
+    for task in &tasks {
+        if !seen.insert(ctx.head(task)) {
+            continue;
+        }
+        let info = ctx.model_info(task)?;
+        let policy = spec.policy.resolve(info);
+        let mut table = Table::new(
+            &format!(
+                "resolved activation sites ({} head, d={}, task {})",
+                ctx.head(task),
+                info.config.d,
+                task.name
+            ),
+            &["site", "lanes", "bits", "granularity", "range_method", "enabled", "overhead"],
+        );
+        let mut total_overhead = 0usize;
+        for s in &info.sites {
+            let c = policy.site_cfg(&s.name);
+            let overhead = if !c.enabled || s.channels <= 1 {
+                0
+            } else {
+                site_overhead_params(s.channels, &c.granularity)
+            };
+            total_overhead += overhead;
+            table.row(vec![
+                s.name.clone(),
+                format!("{}", s.channels),
+                format!("{}", c.bits),
+                granularity_name(&c.granularity),
+                range_method_name(c.range_method).to_string(),
+                if c.enabled { "yes".to_string() } else { "no".to_string() },
+                format!("{overhead}"),
+            ]);
+        }
+        print!("{}", table.to_console());
+        println!(
+            "total activation-quantizer overhead: {total_overhead} extra parameters"
+        );
+    }
+    println!(
+        "weights: {} bits, estimator {}, per-channel groups {:?}, enabled {}",
+        spec.policy.weights.bits,
+        tq::spec::estimator_name(spec.policy.weights.estimator),
+        spec.policy.weights.per_channel_groups,
+        spec.policy.weights.enabled,
+    );
+    for (name, w) in &spec.policy.weight_overrides {
+        println!("  weight override {name}: {} bits, enabled {}", w.bits, w.enabled);
+    }
     Ok(())
 }
 
@@ -281,12 +351,15 @@ fn print_help() {
          table1 table2 table4 table5 table6 table7 [--detailed] table12\n  \
          fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  \
          run --spec FILE.json | --preset NAME [--tasks a,b] [--seeds N] \
-         [--dump-spec]\n  smoke\n  gen-artifacts [--no-ckpt]\n  \
+         [--dump-spec] [--explain]\n  smoke\n  gen-artifacts [--no-ckpt]\n  \
          sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
-         [--estimators current,mse] [--threads N] [--task NAME] [--seeds N] \
+         [--estimators current,mse] [--range-methods auto,mse_group] \
+         [--threads N] [--task NAME] [--seeds N] \
          [--fresh] [--compare baseline.json] [--tolerance PTS]\n\n\
          `run` executes one serialized QuantSpec (see DESIGN.md §7); \
-         `run --preset NAME --dump-spec > f.json` writes a starting point.\n\
+         `run --preset NAME --dump-spec > f.json` writes a starting point; \
+         `run --preset NAME --explain` prints the resolved per-site policy \
+         (bits, granularity, range_method, PEG overhead).\n\
          presets: {}\n\n\
          flags: --artifacts DIR --ckpt DIR --results DIR --seeds N --quick",
         presets::preset_names().join(" ")

@@ -12,25 +12,34 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::quant::{
-    peg::lane_qparams, qparams_from_range, Estimator, Granularity, QGrid, QParams,
+    peg::{lane_qparams, site_groups},
+    qparams_from_range, Estimator, Granularity, QGrid, QParams, RangeMethod,
 };
-use crate::quant::estimators::RangeTracker;
+use crate::quant::estimators::{mse_search_groups_pool, mse_search_pool, RangeTracker};
 use crate::model::manifest::ModelInfo;
+use crate::util::pool::Pool;
 
 /// Per-site activation quantizer configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SiteCfg {
     pub bits: u32,
     pub granularity: Granularity,
+    /// how the final range(s) are derived from tracked statistics
+    pub range_method: RangeMethod,
     pub enabled: bool,
 }
 
 impl Default for SiteCfg {
     fn default() -> Self {
-        SiteCfg { bits: 8, granularity: Granularity::PerTensor, enabled: true }
+        SiteCfg {
+            bits: 8,
+            granularity: Granularity::PerTensor,
+            range_method: RangeMethod::Auto,
+            enabled: true,
+        }
     }
 }
 
@@ -122,6 +131,98 @@ pub struct ActQuantTensors {
     pub permutations: BTreeMap<String, Vec<usize>>,
 }
 
+/// Resolve one site's per-lane parameters from its calibrated tracker:
+/// the granularity defines the parameter-sharing groups (PEG permutation
+/// included), the range method defines how each group's range is chosen
+/// (tracked bounds vs MSE grid search). Returns the per-lane params plus
+/// the lane permutation used (identity unless range-permuted PEG).
+///
+/// This is the *single* quantizer-site resolution path: the activation
+/// assembly ([`assemble_act_tensors_pool`]) and the sweep's offline
+/// substrate both route through it, so a `(granularity, range_method)`
+/// pair means the same thing on every surface.
+pub fn site_lane_params_pool(
+    tracker: &RangeTracker,
+    cfg: &SiteCfg,
+    grid: QGrid,
+    pool: &Pool,
+) -> Result<(Vec<QParams>, Vec<usize>)> {
+    let (lo, hi) = tracker.lane_ranges();
+    let d = lo.len();
+    // K beyond the site's lane count is a misconfigured spec, not a
+    // request for per-embedding: fail loudly here (the one resolution
+    // path) instead of letting site_groups' library-level clamp silently
+    // reinterpret it — the same contract the sweep CLI enforces for
+    // --groups
+    if let Granularity::PerEmbeddingGroup { k, .. } = &cfg.granularity {
+        if *k > d {
+            bail!(
+                "granularity group:{k} exceeds this site's {d} lanes — use \
+                 per_embedding or a smaller K"
+            );
+        }
+    }
+    let identity: Vec<usize> = (0..d).collect();
+    match cfg.range_method {
+        RangeMethod::Auto => match &cfg.granularity {
+            // pre-range_method behaviour: per-tensor sites follow the
+            // calibration estimator (MSE kind -> tensor grid search),
+            // grouped sites use tracked lane bounds
+            Granularity::PerTensor => {
+                let (tlo, thi) = tracker.tensor_range_pool(grid, pool);
+                Ok((vec![qparams_from_range(tlo, thi, grid); d], identity))
+            }
+            g => lane_qparams(&lo, &hi, g, grid),
+        },
+        RangeMethod::CurrentMinMax => lane_qparams(&lo, &hi, &cfg.granularity, grid),
+        RangeMethod::MseTensor => {
+            if cfg.granularity != Granularity::PerTensor {
+                bail!(
+                    "range_method mse_tensor requires per_tensor granularity \
+                     (got {:?}) — use mse_group for grouped sites",
+                    cfg.granularity
+                );
+            }
+            let (tlo, thi) = if tracker.kind == Estimator::Mse {
+                // the MSE estimator already retains a value reservoir
+                tracker.tensor_range_pool(grid, pool)
+            } else {
+                let Some((rows, _)) = tracker.row_samples() else {
+                    bail!(
+                        "range_method mse_tensor under a non-MSE estimator needs \
+                         retained samples: build the tracker with \
+                         with_row_samples() (the spec pipeline does this for you)"
+                    );
+                };
+                let tlo = lo.iter().copied().fold(f32::INFINITY, f32::min).min(0.0);
+                let thi = hi.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+                mse_search_pool(rows, tlo, thi, grid, pool)
+            };
+            Ok((vec![qparams_from_range(tlo, thi, grid); d], identity))
+        }
+        RangeMethod::MsePerGroup => {
+            let Some((rows, _)) = tracker.row_samples() else {
+                bail!(
+                    "range_method mse_group needs per-lane samples: build the \
+                     tracker with with_row_samples() (the spec pipeline does \
+                     this for mse_group sites automatically)"
+                );
+            };
+            let (groups, order) = site_groups(&lo, &hi, &cfg.granularity)?;
+            let ranges =
+                mse_search_groups_pool(rows, tracker.lanes(), &groups, &lo, &hi, grid, pool);
+            let mut params = vec![QParams { scale: 1.0, zero_point: 0.0 }; d];
+            for (members, (glo, ghi)) in groups.iter().zip(ranges) {
+                let p = qparams_from_range(glo, ghi, grid);
+                for &j in members {
+                    params[j] = p;
+                }
+            }
+            Ok((params, order))
+        }
+    }
+}
+
 /// Compile per-site range statistics + policy into runtime tensors.
 ///
 /// `trackers` maps site name -> calibrated RangeTracker (per-lane stats).
@@ -129,6 +230,19 @@ pub fn assemble_act_tensors(
     info: &ModelInfo,
     policy: &QuantPolicy,
     trackers: &BTreeMap<String, RangeTracker>,
+) -> Result<ActQuantTensors> {
+    assemble_act_tensors_pool(info, policy, trackers, Pool::global())
+}
+
+/// Pool-explicit [`assemble_act_tensors`]: per-site resolution goes
+/// through [`site_lane_params_pool`], whose MSE searches fan out on
+/// `pool` with results reassembled in a fixed order — bit-identical for
+/// any worker count.
+pub fn assemble_act_tensors_pool(
+    info: &ModelInfo,
+    policy: &QuantPolicy,
+    trackers: &BTreeMap<String, RangeTracker>,
+    pool: &Pool,
 ) -> Result<ActQuantTensors> {
     let mut scales = vec![1.0f32; info.total_scale_lanes];
     let mut zps = vec![0.0f32; info.total_scale_lanes];
@@ -153,25 +267,19 @@ pub fn assemble_act_tensors(
                 continue;
             }
         };
-        let params: Vec<QParams> = if site.channels == 1 {
-            let (lo, hi) = tracker.tensor_range(grid);
-            vec![qparams_from_range(lo, hi, grid)]
+        // scalar sites cannot be grouped: resolve them per-tensor so a
+        // grouped default policy still applies cleanly everywhere
+        let (params, perm) = if site.channels == 1 {
+            let scalar = SiteCfg { granularity: Granularity::PerTensor, ..sc.clone() };
+            site_lane_params_pool(tracker, &scalar, grid, pool)?
         } else {
-            match &sc.granularity {
-                Granularity::PerTensor => {
-                    let (lo, hi) = tracker.tensor_range(grid);
-                    vec![qparams_from_range(lo, hi, grid); site.channels]
-                }
-                g => {
-                    let (lo, hi) = tracker.lane_ranges();
-                    let (params, perm) = lane_qparams(&lo, &hi, g, grid)?;
-                    if matches!(g, Granularity::PerEmbeddingGroup { permute: true, .. }) {
-                        permutations.insert(site.name.clone(), perm);
-                    }
-                    params
-                }
-            }
+            site_lane_params_pool(tracker, sc, grid, pool)?
         };
+        if site.channels > 1
+            && matches!(sc.granularity, Granularity::PerEmbeddingGroup { permute: true, .. })
+        {
+            permutations.insert(site.name.clone(), perm);
+        }
         for (l, p) in params.iter().enumerate() {
             scales[site.offset + l] = p.scale;
             zps[site.offset + l] = p.zero_point;
@@ -269,9 +377,8 @@ mod tests {
         let policy = QuantPolicy::uniform(8, 8).with_sites(
             &["layer0.res2_sum"],
             SiteCfg {
-                bits: 8,
                 granularity: Granularity::PerEmbeddingGroup { k: 4, permute: true },
-                enabled: true,
+                ..Default::default()
             },
         );
         let out = assemble_act_tensors(&info, &policy, &trackers).unwrap();
@@ -290,5 +397,117 @@ mod tests {
         let trackers = BTreeMap::new();
         let t = assemble_act_tensors(&info, &QuantPolicy::uniform(8, 8), &trackers).unwrap();
         assert!(t.scales.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn range_method_current_skips_the_mse_search() {
+        // an Mse-kind tracker with one outlier among thousands of small
+        // values: Auto runs the grid search (clips), CurrentMinMax must
+        // keep the raw tracked bounds
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut tr = RangeTracker::new(Estimator::Mse, 1);
+        let mut data: Vec<f32> = (0..4096).map(|_| rng.uniform(0.0, 1.0)).collect();
+        data[7] = 10.0;
+        tr.observe(&Tensor::new(vec![4096], data).unwrap()).unwrap();
+        let grid = QGrid::asymmetric(4);
+        let pool = Pool::serial();
+        let auto = SiteCfg::default();
+        let raw = SiteCfg { range_method: RangeMethod::CurrentMinMax, ..Default::default() };
+        let (pa, _) = site_lane_params_pool(&tr, &auto, grid, &pool).unwrap();
+        let (pr, _) = site_lane_params_pool(&tr, &raw, grid, &pool).unwrap();
+        // raw covers the outlier: scale ~ 10/15; auto clips well below
+        assert!(pr[0].scale > 0.5, "raw scale {}", pr[0].scale);
+        assert!(pa[0].scale < pr[0].scale * 0.6, "auto did not clip: {}", pa[0].scale);
+    }
+
+    #[test]
+    fn mse_tensor_rejects_grouped_granularity_and_wants_samples() {
+        let tr = RangeTracker::new(Estimator::CurrentMinMax, 4);
+        let grid = QGrid::asymmetric(8);
+        let pool = Pool::serial();
+        let grouped = SiteCfg {
+            granularity: Granularity::PerEmbeddingGroup { k: 2, permute: false },
+            range_method: RangeMethod::MseTensor,
+            ..Default::default()
+        };
+        assert!(site_lane_params_pool(&tr, &grouped, grid, &pool).is_err());
+        // per-tensor granularity but no retained samples under a non-MSE
+        // estimator: a clear error, not a silent fallback
+        let tensor = SiteCfg { range_method: RangeMethod::MseTensor, ..Default::default() };
+        let err = site_lane_params_pool(&tr, &tensor, grid, &pool).unwrap_err();
+        assert!(err.to_string().contains("with_row_samples"), "{err}");
+        let mse_group = SiteCfg { range_method: RangeMethod::MsePerGroup, ..Default::default() };
+        assert!(site_lane_params_pool(&tr, &mse_group, grid, &pool).is_err());
+        // K beyond the site's lanes is a spec error at this layer, not a
+        // silent per-embedding clamp (site_groups clamps only as a
+        // library-level never-panic guarantee)
+        let oversized = SiteCfg {
+            granularity: Granularity::PerEmbeddingGroup { k: 99, permute: true },
+            ..Default::default()
+        };
+        let err = site_lane_params_pool(&tr, &oversized, grid, &pool).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn mse_group_assembles_per_group_searched_scales() {
+        let info = tiny_model_info();
+        let s = info.site("layer0.res2_sum").unwrap().clone();
+        let d = s.channels;
+        let mut rng = crate::util::rng::Rng::new(7);
+        // every lane ~U(0,1); lane 3 has one +10 spike (paper §3's
+        // range-vs-precision trade-off at 4 bits: clipping the spike is
+        // MSE-optimal, min-max keeps it)
+        let mut data = Vec::with_capacity(2000 * d);
+        for row in 0..2000 {
+            for lane in 0..d {
+                if lane == 3 && row == 100 {
+                    data.push(10.0);
+                } else {
+                    data.push(rng.uniform(0.0, 1.0));
+                }
+            }
+        }
+        let spiky = Tensor::new(vec![2000, d], data).unwrap();
+        let mut trackers = BTreeMap::new();
+        for site in &info.sites {
+            let mut tr =
+                RangeTracker::new(Estimator::CurrentMinMax, site.channels).with_row_samples();
+            if site.name == s.name {
+                tr.observe(&spiky).unwrap();
+            } else {
+                tr.observe(&Tensor::from_fn(&[4, site.channels], |i| (i % 5) as f32 - 2.0))
+                    .unwrap();
+            }
+            trackers.insert(site.name.clone(), tr);
+        }
+
+        let site_cfg = |method: RangeMethod| SiteCfg {
+            bits: 4,
+            granularity: Granularity::PerEmbeddingGroup { k: 4, permute: true },
+            range_method: method,
+            enabled: true,
+        };
+        let policy = |method: RangeMethod| {
+            QuantPolicy::uniform(8, 8).with_sites(&[s.name.as_str()], site_cfg(method))
+        };
+        let searched =
+            assemble_act_tensors(&info, &policy(RangeMethod::MsePerGroup), &trackers).unwrap();
+        let raw =
+            assemble_act_tensors(&info, &policy(RangeMethod::CurrentMinMax), &trackers)
+                .unwrap();
+        let mm = raw.scales[s.offset + 3];
+        let ms = searched.scales[s.offset + 3];
+        // min-max keeps the spike (scale ~ 10/15); the searched group clips
+        assert!(mm > 0.5, "min-max scale {mm}");
+        assert!(ms < mm * 0.6, "searched {ms} !< min-max {mm}");
+        assert!(ms > 0.05, "searched scale collapsed: {ms}");
+        assert!(searched.permutations.contains_key(&s.name));
+        // the spike-free groups are untouched by the spike either way
+        let other_max = (0..d)
+            .filter(|&j| searched.scales[s.offset + j] != ms)
+            .map(|j| searched.scales[s.offset + j])
+            .fold(0.0f32, f32::max);
+        assert!(other_max < 0.2, "tight groups polluted: {other_max}");
     }
 }

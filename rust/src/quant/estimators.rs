@@ -26,6 +26,12 @@ pub const RUNNING_MOMENTUM: f32 = 0.9;
 /// represented (invariant: `reservoir[i]` is stream element `i * stride`).
 const MSE_RESERVOIR: usize = 1 << 16;
 
+/// Cap on retained *rows* for the per-group MSE search (rows keep one
+/// aligned value per lane, so the per-site memory is `ROW_RESERVOIR *
+/// lanes` floats). Same deterministic stride + re-thinning scheme as
+/// [`MSE_RESERVOIR`], over rows instead of values.
+const ROW_RESERVOIR: usize = 1 << 11;
+
 /// Accumulates per-lane range statistics over calibration batches.
 #[derive(Debug, Clone)]
 pub struct RangeTracker {
@@ -40,6 +46,16 @@ pub struct RangeTracker {
     seen: usize,
     /// current sampling stride over the stream (power of two)
     stride: usize,
+    /// retain per-lane row samples (set for sites whose resolved range
+    /// method needs an MSE search the `kind` alone would not feed —
+    /// `mse_group` always, `mse_tensor` under a non-MSE estimator)
+    sample_rows: bool,
+    /// row-major `(rows_kept, lanes)` buffer of retained rows
+    lane_rows: Vec<f32>,
+    rows_kept: usize,
+    rows_seen: usize,
+    /// current row-sampling stride over the stream (power of two)
+    row_stride: usize,
 }
 
 impl RangeTracker {
@@ -53,6 +69,35 @@ impl RangeTracker {
             reservoir: Vec::new(),
             seen: 0,
             stride: 1,
+            sample_rows: false,
+            lane_rows: Vec::new(),
+            rows_kept: 0,
+            rows_seen: 0,
+            row_stride: 1,
+        }
+    }
+
+    /// Builder: also retain per-lane row samples, feeding the per-group
+    /// MSE grid search ([`mse_search_groups_pool`]) for any calibration
+    /// estimator. The spec pipeline enables this automatically for sites
+    /// resolved to a row-sampling range method.
+    pub fn with_row_samples(mut self) -> RangeTracker {
+        self.sample_rows = true;
+        self
+    }
+
+    /// Whether this tracker retains per-lane row samples.
+    pub fn has_row_samples(&self) -> bool {
+        self.sample_rows
+    }
+
+    /// The retained rows as a row-major `(rows, lanes)` buffer plus the
+    /// row count; `None` when row sampling was not enabled.
+    pub fn row_samples(&self) -> Option<(&[f32], usize)> {
+        if self.sample_rows {
+            Some((&self.lane_rows, self.rows_kept))
+        } else {
+            None
         }
     }
 
@@ -108,6 +153,9 @@ impl RangeTracker {
                 self.stash(t.data());
             }
         }
+        if self.sample_rows {
+            self.stash_rows(t);
+        }
         self.batches_seen += 1;
         Ok(())
     }
@@ -133,6 +181,35 @@ impl RangeTracker {
             }
         }
         self.seen += xs.len();
+    }
+
+    /// Deterministic row-stride sampling mirroring [`RangeTracker::stash`]
+    /// with rows (not values) as the unit, so every retained sample keeps
+    /// one aligned value per lane — the per-group MSE search needs lane
+    /// identity, which the flat reservoir discards. Scalar trackers
+    /// (`lanes == 1`) treat every element as a width-1 row. Invariant:
+    /// retained row `i` is stream row `i * row_stride`.
+    fn stash_rows(&mut self, t: &Tensor) {
+        let d = self.lanes;
+        let rows = if d == 1 { t.len() } else { t.rows() };
+        let data = t.data();
+        for r in 0..rows {
+            let global = self.rows_seen + r;
+            if global == self.rows_kept * self.row_stride {
+                self.lane_rows.extend_from_slice(&data[r * d..(r + 1) * d]);
+                self.rows_kept += 1;
+                if self.rows_kept >= ROW_RESERVOIR {
+                    let mut thinned = Vec::with_capacity((self.rows_kept / 2 + 1) * d);
+                    for keep in (0..self.rows_kept).step_by(2) {
+                        thinned.extend_from_slice(&self.lane_rows[keep * d..(keep + 1) * d]);
+                    }
+                    self.lane_rows = thinned;
+                    self.rows_kept = self.rows_kept.div_ceil(2);
+                    self.row_stride *= 2;
+                }
+            }
+        }
+        self.rows_seen += rows;
     }
 
     /// Final per-lane ranges.
@@ -222,6 +299,55 @@ pub fn mse_search_pool(
         }
     }
     best
+}
+
+/// Per-group MSE grid search over retained row samples (`rows` is the
+/// row-major `(n, lanes)` buffer of [`RangeTracker::row_samples`]; the
+/// row count derives from the buffer length, so a mismatched count can
+/// never index out of bounds): for each lane group, gather the group's
+/// values (rows outer, members in group order inner), seed the search
+/// with the group's tracked range from `lo`/`hi`, and run the
+/// 41-candidate grid search.
+///
+/// Groups fan out one-per-pool-job with *serial* inner scoring, and every
+/// group's sample gather and argmin are order-fixed — so the chosen
+/// ranges are bit-identical for any worker count, like
+/// [`mse_search_pool`].
+pub fn mse_search_groups_pool(
+    rows: &[f32],
+    lanes: usize,
+    groups: &[Vec<usize>],
+    lo: &[f32],
+    hi: &[f32],
+    grid: QGrid,
+    pool: &Pool,
+) -> Vec<(f32, f32)> {
+    let n_rows = if lanes == 0 { 0 } else { rows.len() / lanes };
+    let serial = Pool::serial();
+    let search_one = |members: &Vec<usize>, inner: &Pool| -> (f32, f32) {
+        let glo = members.iter().map(|&j| lo[j]).fold(f32::INFINITY, f32::min);
+        let ghi = members.iter().map(|&j| hi[j]).fold(f32::NEG_INFINITY, f32::max);
+        let mut samples = Vec::with_capacity(n_rows * members.len());
+        for r in 0..n_rows {
+            let row = &rows[r * lanes..(r + 1) * lanes];
+            for &j in members {
+                samples.push(row[j]);
+            }
+        }
+        mse_search_pool(&samples, glo, ghi, grid, inner)
+    };
+    if groups.len() == 1 {
+        // a single group (per-tensor-granularity site) has no group-level
+        // parallelism to spend the pool on — hand it to the candidate
+        // scan instead; mse_search_pool is bit-identical at any worker
+        // count, so the chosen range is unchanged
+        return vec![search_one(&groups[0], pool)];
+    }
+    if pool.threads() <= 1 {
+        groups.iter().map(|g| search_one(g, &serial)).collect()
+    } else {
+        pool.par_map(groups, |_, g| search_one(g, &serial))
+    }
 }
 
 #[cfg(test)]
@@ -350,6 +476,92 @@ mod tests {
 
         let (_, hi) = tr.tensor_range(QGrid::asymmetric(8));
         assert!(hi > 25.0, "late-batch outlier ignored: chosen hi = {hi}");
+    }
+
+    #[test]
+    fn row_samples_are_opt_in_and_lane_aligned() {
+        let mut tr = RangeTracker::new(Estimator::RunningMinMax, 3);
+        tr.observe(&t(&[2, 3], vec![1., 2., 3., 4., 5., 6.])).unwrap();
+        assert!(!tr.has_row_samples());
+        assert!(tr.row_samples().is_none());
+
+        let mut tr = RangeTracker::new(Estimator::RunningMinMax, 3).with_row_samples();
+        tr.observe(&t(&[2, 3], vec![1., 2., 3., 4., 5., 6.])).unwrap();
+        tr.observe(&t(&[1, 3], vec![7., 8., 9.])).unwrap();
+        let (rows, n) = tr.row_samples().unwrap();
+        assert_eq!(n, 3);
+        // lane j of every retained row is an actual lane-j value
+        assert_eq!(rows, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+    }
+
+    #[test]
+    fn row_reservoir_stays_bounded_and_strided() {
+        let cap = 1 << 11;
+        let d = 4;
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, d).with_row_samples();
+        // 3x capacity in rows; values encode their global row index
+        for b in 0..3 {
+            let tensor = Tensor::from_fn(&[cap, d], |i| (b * cap + i / d) as f32);
+            tr.observe(&tensor).unwrap();
+        }
+        let (rows, n) = tr.row_samples().unwrap();
+        assert!(n <= cap, "reservoir overflow: {n}");
+        assert_eq!(rows.len(), n * d);
+        // invariant: retained row i is stream row i * stride
+        assert_eq!(tr.row_stride, 4);
+        for i in 0..n {
+            assert_eq!(rows[i * d], (i * tr.row_stride) as f32, "row {i}");
+        }
+        // late rows are represented
+        assert!(rows[(n - 1) * d] >= (2 * cap) as f32);
+    }
+
+    #[test]
+    fn scalar_tracker_rows_are_elements() {
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, 1).with_row_samples();
+        tr.observe(&t(&[2, 3], vec![1., 2., 3., 4., 5., 6.])).unwrap();
+        let (rows, n) = tr.row_samples().unwrap();
+        assert_eq!(n, 6);
+        assert_eq!(rows, &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn group_search_isolates_outlier_group() {
+        // lanes 0/1 tight, lanes 2/3 heavy-tailed around one huge value:
+        // per-group search at 4 bits clips the outlier group's range but
+        // leaves the tight group's intact
+        let mut rng = Rng::new(4);
+        let d = 4;
+        let n_rows = 2048;
+        let mut tr = RangeTracker::new(Estimator::CurrentMinMax, d).with_row_samples();
+        let tensor = Tensor::from_fn(&[n_rows, d], |i| {
+            let lane = i % d;
+            if lane < 2 {
+                rng.uniform(-1.0, 1.0)
+            } else {
+                rng.normal_f32(0.0, 1.0)
+            }
+        });
+        tr.observe(&tensor).unwrap();
+        let (lo, mut hi) = tr.lane_ranges();
+        // install an outlier the search should clip away at 4 bits
+        hi[3] = 60.0;
+        let (rows, _) = tr.row_samples().unwrap();
+        let groups = vec![vec![0usize, 1], vec![2usize, 3]];
+        let ranges = mse_search_groups_pool(
+            rows,
+            d,
+            &groups,
+            &lo,
+            &hi,
+            QGrid::asymmetric(4),
+            &Pool::serial(),
+        );
+        assert_eq!(ranges.len(), 2);
+        // tight group keeps (most of) its range
+        assert!(ranges[0].1 > 0.5, "tight group clipped to {:?}", ranges[0]);
+        // outlier group is clipped well below the installed 60.0
+        assert!(ranges[1].1 < 30.0, "outlier group kept {:?}", ranges[1]);
     }
 
     #[test]

@@ -238,9 +238,56 @@ pub enum Estimator {
 pub enum Granularity {
     PerTensor,
     /// K groups over the embedding axis; `permute` = range-based
-    /// permutation (paper §4 "per-embedding-group").
+    /// permutation (paper §4 "per-embedding-group"). K need not divide
+    /// the embedding dim: [`peg::group_bounds`] partitions the lanes into
+    /// groups whose sizes differ by at most one.
     PerEmbeddingGroup { k: usize, permute: bool },
     PerEmbedding,
+}
+
+/// How a site's final quantization range(s) are derived from its tracked
+/// calibration statistics, resolved per site at assembly time
+/// ([`crate::model::qconfig::site_lane_params_pool`]).
+///
+/// The granularity says how lanes *share* parameters; the range method
+/// says how each parameter group's range is *chosen* — tracked bounds
+/// as-is, or refined by the MSE grid search (paper Appendix:
+/// per-embedding MSE ranges are `MsePerGroup` + per-embedding
+/// granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RangeMethod {
+    /// Follow the calibration estimator: per-tensor sites calibrated with
+    /// [`Estimator::Mse`] get the tensor grid search, everything else
+    /// uses the tracked ranges — the behaviour before `range_method`
+    /// existed, and the default.
+    #[default]
+    Auto,
+    /// Tracked ranges exactly as the estimator left them, never searched.
+    CurrentMinMax,
+    /// Per-tensor MSE grid search over retained samples, broadcast to
+    /// every lane (requires [`Granularity::PerTensor`]).
+    MseTensor,
+    /// One MSE grid search per granularity group, over that group's
+    /// retained row samples — per-group clipped ranges on top of the PEG
+    /// permutation.
+    MsePerGroup,
+}
+
+impl RangeMethod {
+    /// True when this method needs retained row samples
+    /// ([`estimators::RangeTracker::with_row_samples`]) from calibration,
+    /// given the estimator in use: `MsePerGroup` always (the per-group
+    /// search needs lane-aligned values), `MseTensor` whenever the
+    /// estimator is not already stashing an MSE value reservoir. The one
+    /// definition both `calibrate_with` and the sweep's offline substrate
+    /// consult.
+    pub fn needs_row_samples(self, estimator: Estimator) -> bool {
+        match self {
+            RangeMethod::MsePerGroup => true,
+            RangeMethod::MseTensor => estimator != Estimator::Mse,
+            RangeMethod::Auto | RangeMethod::CurrentMinMax => false,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -16,24 +16,67 @@ use super::{qparams_from_range, Granularity, QGrid, QParams};
 /// Deterministic range-based permutation: lanes sorted by ascending dynamic
 /// range (paper §4: "K evenly sized groups based on indices in
 /// argsort(r)").
+///
+/// Total for *any* input: a lane whose range is NaN (NaN statistics) is
+/// treated as infinitely wide, so degenerate lanes sort last with the
+/// outliers and the comparator stays a total order (`sort_by` may panic
+/// on a non-transitive comparator, which the old
+/// `partial_cmp(..).unwrap_or(Equal)` tiebreak was for mixed NaN/finite
+/// inputs). Ties break by lane index, so the permutation is always a
+/// valid, deterministic rearrangement of `0..d`.
 pub fn range_permutation(lo: &[f32], hi: &[f32]) -> Vec<usize> {
+    let range = |j: usize| {
+        let r = hi[j] - lo[j];
+        // `+ 0.0` normalises -0.0 so equal-width lanes compare Equal
+        if r.is_nan() { f32::INFINITY } else { r + 0.0 }
+    };
     let mut idx: Vec<usize> = (0..lo.len()).collect();
-    idx.sort_by(|&a, &b| {
-        let ra = hi[a] - lo[a];
-        let rb = hi[b] - lo[b];
-        ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| range(a).total_cmp(&range(b)).then(a.cmp(&b)));
     idx
 }
 
-/// Evenly sized group boundaries: group g covers sorted positions
-/// [g*d/K, (g+1)*d/K).
+/// (Nearly) evenly sized group boundaries: group g covers sorted
+/// positions [g*d/K, (g+1)*d/K). For any `1 <= k <= d` the boundaries
+/// partition `0..d` exactly, with group sizes differing by at most one
+/// when K does not divide d.
 pub fn group_bounds(d: usize, k: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::with_capacity(k);
     for g in 0..k {
         out.push((g * d / k, (g + 1) * d / k));
     }
     out
+}
+
+/// Decompose a site's `d` lanes into parameter-sharing groups for a
+/// granularity. Returns `(groups, order)`: `groups[g]` lists the member
+/// lanes of group `g` (in permuted order), and `order` is the lane
+/// permutation the grouping was built over — the identity unless the
+/// granularity asks for the range-based permutation. Group counts clamp
+/// to `1..=d`, so K=1 degrades to per-tensor and K>=d to per-embedding.
+pub fn site_groups(
+    lo: &[f32],
+    hi: &[f32],
+    gran: &Granularity,
+) -> Result<(Vec<Vec<usize>>, Vec<usize>)> {
+    let d = lo.len();
+    if hi.len() != d {
+        bail!("lo/hi length mismatch: {} vs {}", d, hi.len());
+    }
+    let identity: Vec<usize> = (0..d).collect();
+    let (order, k) = match gran {
+        Granularity::PerTensor => (identity, 1),
+        Granularity::PerEmbedding => (identity, d.max(1)),
+        Granularity::PerEmbeddingGroup { k, permute } => {
+            let k = (*k).clamp(1, d.max(1));
+            let order = if *permute { range_permutation(lo, hi) } else { identity };
+            (order, k)
+        }
+    };
+    let groups = group_bounds(d, k)
+        .into_iter()
+        .map(|(g0, g1)| order[g0..g1].to_vec())
+        .collect();
+    Ok((groups, order))
 }
 
 /// Compute the per-lane QParams vector for a site with per-lane ranges
@@ -48,55 +91,18 @@ pub fn lane_qparams(
     gran: &Granularity,
     grid: QGrid,
 ) -> Result<(Vec<QParams>, Vec<usize>)> {
+    let (groups, order) = site_groups(lo, hi, gran)?;
     let d = lo.len();
-    if hi.len() != d {
-        bail!("lo/hi length mismatch");
-    }
-    let identity: Vec<usize> = (0..d).collect();
-    match gran {
-        Granularity::PerTensor => {
-            let tlo = lo.iter().copied().fold(f32::INFINITY, f32::min);
-            let thi = hi.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let p = qparams_from_range(tlo, thi, grid);
-            Ok((vec![p; d], identity))
-        }
-        Granularity::PerEmbedding => {
-            let params = lo
-                .iter()
-                .zip(hi)
-                .map(|(&l, &h)| qparams_from_range(l, h, grid))
-                .collect();
-            Ok((params, identity))
-        }
-        Granularity::PerEmbeddingGroup { k, permute } => {
-            let k = (*k).max(1);
-            if d % k != 0 {
-                bail!("K={k} must divide d={d}");
-            }
-            let order = if *permute {
-                range_permutation(lo, hi)
-            } else {
-                identity.clone()
-            };
-            let mut params = vec![QParams { scale: 1.0, zero_point: 0.0 }; d];
-            for (g0, g1) in group_bounds(d, k) {
-                let members = &order[g0..g1];
-                let glo = members
-                    .iter()
-                    .map(|&j| lo[j])
-                    .fold(f32::INFINITY, f32::min);
-                let ghi = members
-                    .iter()
-                    .map(|&j| hi[j])
-                    .fold(f32::NEG_INFINITY, f32::max);
-                let p = qparams_from_range(glo, ghi, grid);
-                for &j in members {
-                    params[j] = p;
-                }
-            }
-            Ok((params, order))
+    let mut params = vec![QParams { scale: 1.0, zero_point: 0.0 }; d];
+    for members in &groups {
+        let glo = members.iter().map(|&j| lo[j]).fold(f32::INFINITY, f32::min);
+        let ghi = members.iter().map(|&j| hi[j]).fold(f32::NEG_INFINITY, f32::max);
+        let p = qparams_from_range(glo, ghi, grid);
+        for &j in members {
+            params[j] = p;
         }
     }
+    Ok((params, order))
 }
 
 /// Memory overhead of PEG for one attention layer, in extra parameters —
@@ -104,6 +110,42 @@ pub fn lane_qparams(
 /// zero-point per group for FFN input, output and sum.
 pub fn peg_overhead_params(d: usize, k: usize) -> usize {
     d + 2 * 3 * k
+}
+
+/// The same per-attention-layer accounting generalised over granularities
+/// (the sweep's overhead column): per-tensor is the zero baseline,
+/// per-embedding stores 2 parameters per lane for the 3 FFN sites (no
+/// permutation needed — every lane already has its own), and PEG stores 2
+/// per group per site plus the d permutation indices when the range-based
+/// permutation is on. `granularity_overhead_params(d, PEG{k, permute:
+/// true})` equals [`peg_overhead_params`]`(d, k)`.
+pub fn granularity_overhead_params(d: usize, gran: &Granularity) -> usize {
+    match gran {
+        Granularity::PerTensor => 0,
+        Granularity::PerEmbedding => 2 * 3 * d,
+        Granularity::PerEmbeddingGroup { k, permute } => {
+            let k = (*k).clamp(1, d.max(1));
+            2 * 3 * k + if *permute { d } else { 0 }
+        }
+    }
+}
+
+/// Overhead of ONE site with `channels` lanes, vs the per-tensor
+/// baseline of a single (scale, zero-point) pair: 2 extra parameters per
+/// additional group, plus the permutation indices when the range-based
+/// permutation is on. This is the `repro run --explain` per-site column;
+/// [`granularity_overhead_params`] is the paper's per-attention-layer
+/// roll-up (3 sites, each group's pair counted, permutation shared once
+/// per layer) used by the sweep's overhead column.
+pub fn site_overhead_params(channels: usize, gran: &Granularity) -> usize {
+    match gran {
+        Granularity::PerTensor => 0,
+        Granularity::PerEmbedding => 2 * channels.saturating_sub(1),
+        Granularity::PerEmbeddingGroup { k, permute } => {
+            let k = (*k).clamp(1, channels.max(1));
+            2 * (k - 1) + if *permute { channels } else { 0 }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +169,49 @@ mod tests {
     fn group_bounds_even() {
         assert_eq!(group_bounds(6, 3), vec![(0, 2), (2, 4), (4, 6)]);
         assert_eq!(group_bounds(8, 1), vec![(0, 8)]);
+    }
+
+    #[test]
+    fn group_bounds_uneven_partitions_exactly() {
+        // K need not divide d: boundaries still tile 0..d with sizes
+        // differing by at most one
+        for (d, k) in [(10usize, 3usize), (128, 6), (128, 12), (7, 5)] {
+            let bounds = group_bounds(d, k);
+            assert_eq!(bounds.len(), k);
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds[k - 1].1, d);
+            let mut sizes = Vec::new();
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap/overlap at {w:?}");
+            }
+            for (a, b) in &bounds {
+                assert!(a <= b);
+                sizes.push(b - a);
+            }
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "d={d} K={k} sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn site_groups_shapes() {
+        let lo = vec![-1.0f32; 8];
+        let hi = vec![1.0f32; 8];
+        let (g_pt, ord) = site_groups(&lo, &hi, &Granularity::PerTensor).unwrap();
+        assert_eq!(g_pt, vec![(0..8).collect::<Vec<_>>()]);
+        assert_eq!(ord, (0..8).collect::<Vec<_>>());
+        let (g_pe, _) = site_groups(&lo, &hi, &Granularity::PerEmbedding).unwrap();
+        assert_eq!(g_pe.len(), 8);
+        assert!(g_pe.iter().enumerate().all(|(j, g)| g == &vec![j]));
+        // K clamps into 1..=d instead of erroring
+        let (g_big, _) = site_groups(
+            &lo,
+            &hi,
+            &Granularity::PerEmbeddingGroup { k: 99, permute: false },
+        )
+        .unwrap();
+        assert_eq!(g_big.len(), 8);
+        assert!(site_groups(&lo, &hi[..4], &Granularity::PerTensor).is_err());
     }
 
     #[test]
@@ -162,16 +247,44 @@ mod tests {
     }
 
     #[test]
-    fn rejects_non_dividing_k() {
-        let lo = vec![0.0; 10];
-        let hi = vec![1.0; 10];
-        assert!(lane_qparams(
+    fn non_dividing_k_uses_near_even_groups() {
+        // 10 lanes in 3 groups: sizes 3/3/4, every lane covered exactly once
+        let lo: Vec<f32> = (0..10).map(|j| -(j as f32) - 1.0).collect();
+        let hi: Vec<f32> = (0..10).map(|j| (j as f32) + 1.0).collect();
+        let (params, order) = lane_qparams(
             &lo,
             &hi,
             &Granularity::PerEmbeddingGroup { k: 3, permute: false },
-            QGrid::asymmetric(8)
+            QGrid::asymmetric(8),
         )
-        .is_err());
+        .unwrap();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+        // group maxima widen monotonically: lanes 0..3 share lane 2's
+        // range, 3..6 lane 5's, 6..10 lane 9's
+        assert_eq!(params[0], params[2]);
+        assert_eq!(params[3], params[5]);
+        assert_eq!(params[6], params[9]);
+        assert!(params[0].scale < params[3].scale);
+        assert!(params[3].scale < params[6].scale);
+    }
+
+    #[test]
+    fn permutation_is_total_on_nan_and_inf_lanes() {
+        // NaN/inf statistics must not break the sort (the old partial_cmp
+        // tiebreak was non-transitive on mixed NaN/finite ranges)
+        let lo = vec![0.0, f32::NAN, -1.0, f32::NEG_INFINITY, -0.5, 0.0];
+        let hi = vec![5.0, f32::NAN, 1.0, 2.0, f32::INFINITY, 1.0];
+        let p = range_permutation(&lo, &hi);
+        let mut sorted = p.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>(), "not a permutation: {p:?}");
+        // non-finite-range lanes (1, 3, 4) sort after every finite lane
+        let pos = |j: usize| p.iter().position(|&x| x == j).unwrap();
+        for finite in [0usize, 2, 5] {
+            for wild in [1usize, 3, 4] {
+                assert!(pos(finite) < pos(wild), "lane {finite} after lane {wild}: {p:?}");
+            }
+        }
     }
 
     #[test]
@@ -250,10 +363,57 @@ mod tests {
     }
 
     #[test]
+    fn granularity_overhead_generalises_peg_accounting() {
+        let d = 768;
+        assert_eq!(granularity_overhead_params(d, &Granularity::PerTensor), 0);
+        assert_eq!(granularity_overhead_params(d, &Granularity::PerEmbedding), 6 * d);
+        for k in [3usize, 6, 12] {
+            assert_eq!(
+                granularity_overhead_params(
+                    d,
+                    &Granularity::PerEmbeddingGroup { k, permute: true }
+                ),
+                peg_overhead_params(d, k)
+            );
+            assert_eq!(
+                granularity_overhead_params(
+                    d,
+                    &Granularity::PerEmbeddingGroup { k, permute: false }
+                ),
+                6 * k
+            );
+        }
+    }
+
+    #[test]
+    fn site_overhead_baseline_is_one_pair() {
+        // one site, vs the single per-tensor (scale, zp) pair
+        let d = 128;
+        assert_eq!(site_overhead_params(d, &Granularity::PerTensor), 0);
+        assert_eq!(site_overhead_params(d, &Granularity::PerEmbedding), 2 * (d - 1));
+        assert_eq!(
+            site_overhead_params(d, &Granularity::PerEmbeddingGroup { k: 6, permute: false }),
+            10
+        );
+        assert_eq!(
+            site_overhead_params(d, &Granularity::PerEmbeddingGroup { k: 6, permute: true }),
+            10 + d
+        );
+        // K=1 without permutation is exactly the per-tensor baseline
+        assert_eq!(
+            site_overhead_params(d, &Granularity::PerEmbeddingGroup { k: 1, permute: false }),
+            0
+        );
+        // degenerate sites never underflow
+        assert_eq!(site_overhead_params(0, &Granularity::PerEmbedding), 0);
+    }
+
+    #[test]
     fn prop_grouped_scales_cover_member_ranges() {
         prop_check("peg covers", 100, |rng| {
             let d = 16;
-            let k = [1usize, 2, 4, 8, 16][rng.below(5)];
+            // any K in 1..=d, dividing or not
+            let k = 1 + rng.below(d);
             let lo: Vec<f32> = (0..d).map(|_| rng.uniform(-10.0, 0.0)).collect();
             let hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 10.0)).collect();
             let grid = QGrid::asymmetric(8);

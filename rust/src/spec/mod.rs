@@ -31,7 +31,7 @@ use anyhow::{bail, Result};
 
 use crate::model::manifest::ModelInfo;
 use crate::model::qconfig::{QuantPolicy, SiteCfg, WeightCfg};
-use crate::quant::{Estimator, Granularity};
+use crate::quant::{Estimator, Granularity, RangeMethod};
 use crate::util::json::{obj, Json};
 
 /// How a [`SiteRule`] picks activation-quantizer sites.
@@ -374,6 +374,25 @@ pub fn parse_granularity(s: &str) -> Result<Granularity> {
     bail!("unknown granularity {s:?} (per_tensor|per_embedding|group:K[:permute])")
 }
 
+pub fn range_method_name(m: RangeMethod) -> &'static str {
+    match m {
+        RangeMethod::Auto => "auto",
+        RangeMethod::CurrentMinMax => "current",
+        RangeMethod::MseTensor => "mse_tensor",
+        RangeMethod::MsePerGroup => "mse_group",
+    }
+}
+
+pub fn parse_range_method(s: &str) -> Result<RangeMethod> {
+    match s {
+        "auto" => Ok(RangeMethod::Auto),
+        "current" | "minmax" => Ok(RangeMethod::CurrentMinMax),
+        "mse_tensor" => Ok(RangeMethod::MseTensor),
+        "mse_group" | "mse_per_group" => Ok(RangeMethod::MsePerGroup),
+        other => bail!("unknown range method {other:?} (auto|current|mse_tensor|mse_group)"),
+    }
+}
+
 fn check_bits(bits: usize, what: &str) -> Result<u32> {
     if !(2..=32).contains(&bits) {
         bail!("{what}: bits must be in 2..=32, got {bits}");
@@ -384,17 +403,33 @@ fn check_bits(bits: usize, what: &str) -> Result<u32> {
 // -- component codecs ----------------------------------------------------
 
 fn site_cfg_to_json(c: &SiteCfg) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("bits", Json::Num(c.bits as f64)),
         ("granularity", Json::Str(granularity_name(&c.granularity))),
         ("enabled", Json::Bool(c.enabled)),
-    ])
+    ];
+    // Auto (the pre-range_method behaviour) is omitted so specs that do
+    // not use the feature serialize byte-identically to pre-PR5 files —
+    // keeping their spec_id stable, which keys resumable sweeps and
+    // --compare baselines
+    if c.range_method != RangeMethod::Auto {
+        fields.push((
+            "range_method",
+            Json::Str(range_method_name(c.range_method).to_string()),
+        ));
+    }
+    obj(fields)
 }
 
 fn site_cfg_from_json(j: &Json) -> Result<SiteCfg> {
     Ok(SiteCfg {
         bits: check_bits(j.get("bits")?.as_usize()?, "site cfg")?,
         granularity: parse_granularity(j.get("granularity")?.as_str()?)?,
+        // absent in specs written before range_method existed
+        range_method: match j.opt("range_method") {
+            Some(v) => parse_range_method(v.as_str()?)?,
+            None => RangeMethod::Auto,
+        },
         enabled: j.get("enabled")?.as_bool()?,
     })
 }
@@ -569,6 +604,7 @@ mod tests {
                 SiteCfg {
                     bits: 8,
                     granularity: Granularity::PerEmbeddingGroup { k: 4, permute: true },
+                    range_method: RangeMethod::MsePerGroup,
                     enabled: true,
                 },
             )
@@ -704,6 +740,36 @@ mod tests {
             assert_eq!(parse_estimator(estimator_name(e)).unwrap(), e);
         }
         assert!(parse_estimator("median").is_err());
+    }
+
+    #[test]
+    fn range_method_codec_roundtrip_and_back_compat() {
+        for m in [
+            RangeMethod::Auto,
+            RangeMethod::CurrentMinMax,
+            RangeMethod::MseTensor,
+            RangeMethod::MsePerGroup,
+        ] {
+            assert_eq!(parse_range_method(range_method_name(m)).unwrap(), m);
+        }
+        assert!(parse_range_method("mse").is_err());
+        // a pre-range_method site cfg (no key) parses as Auto
+        let legacy = Json::parse(
+            r#"{"bits": 8, "granularity": "per_tensor", "enabled": true}"#,
+        )
+        .unwrap();
+        let cfg = site_cfg_from_json(&legacy).unwrap();
+        assert_eq!(cfg.range_method, RangeMethod::Auto);
+        assert_eq!(cfg, SiteCfg::default());
+        // and the reverse: Auto serializes with NO range_method key, so a
+        // spec that does not use the feature is byte-identical to what
+        // pre-range_method code wrote — its spec_id (which keys resumable
+        // sweeps and --compare baselines) must not churn
+        let auto_json = site_cfg_to_json(&SiteCfg::default()).to_string();
+        assert!(!auto_json.contains("range_method"), "{auto_json}");
+        assert_eq!(auto_json, legacy.to_string());
+        let non_auto = SiteCfg { range_method: RangeMethod::MsePerGroup, ..Default::default() };
+        assert!(site_cfg_to_json(&non_auto).to_string().contains("mse_group"));
     }
 
     #[test]

@@ -9,10 +9,10 @@ use anyhow::{bail, Result};
 
 use super::{AdaRoundSpec, PolicySpec, QuantSpec};
 use crate::model::qconfig::{SiteCfg, WeightCfg};
-use crate::quant::{Estimator, Granularity};
+use crate::quant::{Estimator, Granularity, RangeMethod};
 
 /// (name, description) for every registered preset.
-pub const PRESETS: [(&str, &str); 12] = [
+pub const PRESETS: [(&str, &str); 15] = [
     ("fp32", "FP32 baseline, no quantization"),
     ("w8a8", "standard W8A8 per-tensor PTQ (Table 1)"),
     ("w32a8", "8-bit activations only, FP32 weights (Table 1)"),
@@ -20,6 +20,9 @@ pub const PRESETS: [(&str, &str); 12] = [
     ("mixed_precision", "W8A{8,16} MP-PTQ, 16-bit on problematic activations (Table 4 best)"),
     ("peg_k8_permute", "W8A8 PEG-PTQ, K=8 + permutation on FFN sites (Tables 5/6 best)"),
     ("peg_k4_permute", "W8A8 PEG-PTQ, K=4 + permutation on FFN sites (Table 5)"),
+    ("peg_k6_permute", "W8A8 PEG-PTQ, K=6 + permutation on FFN sites (paper Table 3/5 row)"),
+    ("peg_k12_permute", "W8A8 PEG-PTQ, K=12 + permutation on FFN sites (paper Table 3 row)"),
+    ("peg_k6_mse", "W8A8 PEG-PTQ, K=6 + permutation with per-group MSE ranges (mse_group)"),
     ("w6a32", "6-bit MSE weights + 6-bit embeddings (Table 7)"),
     ("w4a32", "4-bit MSE weights + 4-bit embeddings (Table 7)"),
     ("w4a32_adaround", "4-bit AdaRound weights (Table 7)"),
@@ -39,8 +42,11 @@ pub fn preset(name: &str) -> Result<QuantSpec> {
         "w32a8" => QuantSpec::new("w32a8", PolicySpec::acts_only(8)),
         "w8a32" => QuantSpec::new("w8a32", PolicySpec::weights_only(8)),
         "mixed_precision" => mixed_precision(),
-        "peg_k8_permute" => peg_ffn(8, true, "peg_k8_permute"),
-        "peg_k4_permute" => peg_ffn(4, true, "peg_k4_permute"),
+        "peg_k8_permute" => peg_ffn(8, true, RangeMethod::Auto, "peg_k8_permute"),
+        "peg_k4_permute" => peg_ffn(4, true, RangeMethod::Auto, "peg_k4_permute"),
+        "peg_k6_permute" => peg_ffn(6, true, RangeMethod::Auto, "peg_k6_permute"),
+        "peg_k12_permute" => peg_ffn(12, true, RangeMethod::Auto, "peg_k12_permute"),
+        "peg_k6_mse" => peg_ffn(6, true, RangeMethod::MsePerGroup, "peg_k6_mse"),
         "w6a32" => low_bit_weights("w6a32", 6, 6, false),
         "w4a32" => low_bit_weights("w4a32", 4, 4, false),
         "w4a32_adaround" => low_bit_weights("w4a32_adaround", 4, 4, true),
@@ -67,11 +73,15 @@ fn mixed_precision() -> QuantSpec {
 }
 
 /// The paper's chosen PEG config: K groups (+ permutation) on the FFN
-/// input/output/residual-sum sites.
-fn peg_ffn(k: usize, permute: bool, name: &str) -> QuantSpec {
+/// input/output/residual-sum sites, ranges per `method` (`Auto` = the
+/// tracked estimator bounds, `MsePerGroup` = one grid search per group).
+/// K need not divide the embedding dim — groups split near-evenly, so
+/// the paper's K=6/K=12 rows work at any d.
+fn peg_ffn(k: usize, permute: bool, method: RangeMethod, name: &str) -> QuantSpec {
     let peg = SiteCfg {
         bits: 8,
         granularity: Granularity::PerEmbeddingGroup { k, permute },
+        range_method: method,
         enabled: true,
     };
     QuantSpec::new(name, PolicySpec::uniform(8, 8))
@@ -138,9 +148,8 @@ mod tests {
 
     fn old_best_peg(info: &crate::model::manifest::ModelInfo) -> QuantPolicy {
         let peg = SiteCfg {
-            bits: 8,
             granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
-            enabled: true,
+            ..Default::default()
         };
         QuantPolicy::uniform(8, 8)
             .with_site_family(info, "res2_sum", peg.clone())
@@ -222,5 +231,33 @@ mod tests {
         assert!(preset("fp32").unwrap().is_fp32());
         assert!(!preset("w8a8").unwrap().is_fp32());
         assert!(!preset("w8a32").unwrap().is_fp32());
+    }
+
+    #[test]
+    fn peg_presets_cover_the_paper_k_rows() {
+        use crate::quant::RangeMethod;
+        let info = tiny_model_info();
+        for (name, k) in [("peg_k6_permute", 6usize), ("peg_k12_permute", 12)] {
+            let policy = preset(name).unwrap().policy.resolve(&info);
+            let cfg = policy.site_cfg("layer0.res2_sum");
+            assert_eq!(
+                cfg.granularity,
+                Granularity::PerEmbeddingGroup { k, permute: true },
+                "{name}"
+            );
+            assert_eq!(cfg.range_method, RangeMethod::Auto, "{name}");
+            // non-FFN sites stay per-tensor
+            assert_eq!(policy.site_cfg("embed_sum").granularity, Granularity::PerTensor);
+        }
+        // the mse_group preset differs from its Auto twin only in the
+        // range method — and hashes distinctly
+        let auto = preset("peg_k6_permute").unwrap();
+        let mse = preset("peg_k6_mse").unwrap();
+        let mse_policy = mse.policy.resolve(&info);
+        assert_eq!(
+            mse_policy.site_cfg("layer0.res2_sum").range_method,
+            RangeMethod::MsePerGroup
+        );
+        assert_ne!(auto.spec_id(), mse.spec_id());
     }
 }

@@ -11,14 +11,14 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use super::QuantSpec;
-use crate::coordinator::calibrate::{calibrate, CalibCfg};
+use crate::coordinator::calibrate::{calibrate_with, CalibCfg};
 use crate::coordinator::eval::evaluate;
 use crate::coordinator::experiments::load_ckpt;
 use crate::coordinator::weights::{quantize_weights, AdaRoundCfg2, AdaRoundOpts};
 use crate::coordinator::Ctx;
 use crate::data::{task_spec, TaskSpec, TASKS};
 use crate::metrics::{glue_score, median};
-use crate::model::qconfig::assemble_act_tensors;
+use crate::model::qconfig::{assemble_act_tensors, assemble_act_tensors_pool};
 use crate::model::Params;
 use crate::util::json::Json;
 
@@ -120,9 +120,11 @@ pub fn run_spec_on(
             collect_grams: spec.calib.collect_grams || spec.adaround.enabled,
             seed: spec.calib.seed + seed as u64 * 97,
         };
-        let calib = calibrate(ctx, task, params, &calib_cfg)?;
+        // the resolved policy rides along so mse_group / mse_tensor sites
+        // get row-sampling trackers under any calibration estimator
+        let calib = calibrate_with(ctx, task, params, &calib_cfg, Some(&policy))?;
         let (qp, _) = quantize_weights(info, params, &policy, Some(&calib), &ada)?;
-        let act = assemble_act_tensors(info, &policy, &calib.trackers)?;
+        let act = assemble_act_tensors_pool(info, &policy, &calib.trackers, &ctx.pool)?;
         scores.push(evaluate(ctx, task, &qp, &act)?);
     }
     Ok(median(&scores))

@@ -10,17 +10,20 @@
 //! a 1-thread and an 8-thread `Ctx` — the in-process equivalent of
 //! `TQ_THREADS=1` vs `TQ_THREADS=8 repro smoke`.
 
-use tq::coordinator::calibrate::{calibrate, CalibCfg};
+use tq::coordinator::calibrate::{calibrate, calibrate_with, CalibCfg};
 use tq::coordinator::sweep::{grid, run_offline, synth_data};
-use tq::coordinator::{eval, Ctx};
+use tq::coordinator::{diagnostics, eval, Ctx};
 use tq::data::task_spec;
-use tq::model::qconfig::{assemble_act_tensors, QuantPolicy};
+use tq::model::qconfig::{
+    assemble_act_tensors, assemble_act_tensors_pool, site_lane_params_pool, QuantPolicy,
+    SiteCfg,
+};
 use tq::model::Params;
 use tq::quant::adaround::{adaround_with_gram_pool, AdaRoundCfg};
 use tq::quant::estimators::{mse_search_pool, RangeTracker};
 use tq::quant::{
     qdq_per_lane_pool, qdq_slice_pool, qdq_weight_per_channel_pool, qparams_from_range,
-    qparams_symmetric, Estimator, QGrid, QParams,
+    qparams_symmetric, Estimator, Granularity, QGrid, QParams, RangeMethod,
 };
 use tq::tensor::Tensor;
 use tq::util::pool::Pool;
@@ -58,6 +61,43 @@ fn estimator_observe_is_parallel_deterministic() {
             let (bl, bh) = b.tensor_range_pool(grid8, &parallel);
             assert_eq!(al.to_bits(), bl.to_bits(), "{est:?} range lo");
             assert_eq!(ah.to_bits(), bh.to_bits(), "{est:?} range hi");
+        }
+    }
+}
+
+/// Per-group MSE search (the PEG range pipeline: tracker → permutation →
+/// groups → per-group grid search → lane qparams) must choose
+/// bit-identical parameters on a serial and a many-worker pool.
+#[test]
+fn peg_group_mse_search_is_pool_size_independent() {
+    let (serial, parallel) = pools();
+    let d = 48;
+    let cfg = SiteCfg {
+        bits: 4,
+        granularity: Granularity::PerEmbeddingGroup { k: 6, permute: true },
+        range_method: RangeMethod::MsePerGroup,
+        enabled: true,
+    };
+    for pool_pair in [(&serial, &serial), (&serial, &parallel), (&parallel, &serial)] {
+        let mut rng = Rng::new(41);
+        let mut a = RangeTracker::new(Estimator::CurrentMinMax, d).with_row_samples();
+        let mut b = RangeTracker::new(Estimator::CurrentMinMax, d).with_row_samples();
+        for _ in 0..3 {
+            let t = Tensor::from_fn(&[400, d], |i| {
+                let lane = i % d;
+                let mag = if lane % 11 == 2 { 40.0 } else { 1.0 };
+                rng.normal_f32(0.0, mag)
+            });
+            a.observe_pool(&t, pool_pair.0).unwrap();
+            b.observe_pool(&t, pool_pair.1).unwrap();
+        }
+        let grid4 = QGrid::asymmetric(4);
+        let (pa, perm_a) = site_lane_params_pool(&a, &cfg, grid4, pool_pair.0).unwrap();
+        let (pb, perm_b) = site_lane_params_pool(&b, &cfg, grid4, pool_pair.1).unwrap();
+        assert_eq!(perm_a, perm_b, "permutation diverged across pools");
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.scale.to_bits(), y.scale.to_bits(), "scale diverged");
+            assert_eq!(x.zero_point.to_bits(), y.zero_point.to_bits(), "zp diverged");
         }
     }
 }
@@ -186,6 +226,125 @@ fn calibrate_eval_is_parallel_deterministic() {
     );
 }
 
+/// PEG with per-group MSE ranges through the real pipeline: calibrate
+/// (row-sampling trackers) → assemble (per-group grid search) → evaluate
+/// must be bit-identical on a 1-thread and an 8-thread `Ctx` — the PEG
+/// analogue of `calibrate_eval_is_parallel_deterministic`, covering the
+/// range_method plumbing end to end.
+#[test]
+fn peg_mse_group_calibrate_eval_is_parallel_deterministic() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let peg = SiteCfg {
+        bits: 8,
+        granularity: Granularity::PerEmbeddingGroup { k: 6, permute: true },
+        range_method: RangeMethod::MsePerGroup,
+        enabled: true,
+    };
+    let mut runs: Vec<(Vec<u32>, u64)> = Vec::new();
+    for threads in [1usize, 8] {
+        let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+            .unwrap()
+            .with_pool(Pool::new(threads));
+        let info = ctx.model_info(&task).unwrap();
+        let params = Params::init(info, 29);
+        let policy = QuantPolicy::uniform(8, 8)
+            .with_site_family(info, "res2_sum", peg.clone())
+            .with_site_family(info, "ffn_out", peg.clone());
+        let cfg = CalibCfg { num_batches: 4, batch_size: 2, ..Default::default() };
+        let calib = calibrate_with(&ctx, &task, &params, &cfg, Some(&policy)).unwrap();
+        // mse_group sites really did retain row samples
+        let tr = &calib.trackers["layer0.res2_sum"];
+        assert!(tr.has_row_samples());
+        assert!(tr.row_samples().unwrap().1 > 0, "no rows retained");
+        let act =
+            assemble_act_tensors_pool(info, &policy, &calib.trackers, &ctx.pool).unwrap();
+        assert!(act.permutations.contains_key("layer0.res2_sum"));
+        let mut scale_bits = bits(&act.scales);
+        scale_bits.extend(bits(&act.zps));
+        let mut split = tq::data::dev_split(&task, info.config.seq).unwrap();
+        split.examples.truncate(20);
+        let score = eval::evaluate_split(&ctx, &task, &params, &act, &split).unwrap();
+        runs.push((scale_bits, score.to_bits()));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "PEG scales/zps diverged across thread counts");
+    assert_eq!(
+        runs[0].1, runs[1].1,
+        "PEG dev score diverged: {} vs {}",
+        f64::from_bits(runs[0].1),
+        f64::from_bits(runs[1].1)
+    );
+}
+
+/// Batched diagnostics taps (`collect_taps` through `Runtime::run_batch`,
+/// ROADMAP follow-on from PR 4): tap order and content must be
+/// bit-identical to the serial `run_diag` loop, at any thread count.
+#[test]
+fn diag_taps_batched_match_serial_run_diag() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let n_seqs = 6;
+    let mut batched: Vec<Vec<(String, Vec<u32>)>> = Vec::new();
+    for threads in [1usize, 8] {
+        let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+            .unwrap()
+            .with_pool(Pool::new(threads));
+        let info = ctx.model_info(&task).unwrap();
+        let params = Params::init(info, 31);
+        let runs = diagnostics::collect_taps(&ctx, &task, &params, n_seqs).unwrap();
+        assert_eq!(runs.per_seq.len(), n_seqs);
+        assert_eq!(runs.examples.len(), n_seqs);
+        batched.push(
+            runs.per_seq
+                .iter()
+                .map(|taps| {
+                    // BTreeMap iteration: site order is fixed and identical
+                    taps.iter().map(|(s, t)| (s.clone(), bits(t.data()))).collect()
+                })
+                .collect::<Vec<Vec<_>>>()
+                .concat(),
+        );
+    }
+    assert_eq!(batched[0], batched[1], "taps diverged across thread counts");
+
+    // and against the serial reference path (run_diag per example)
+    let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+        .unwrap()
+        .with_pool(Pool::new(1));
+    let info = ctx.model_info(&task).unwrap();
+    let params = Params::init(info, 31);
+    let split = tq::data::dev_split(&task, info.config.seq).unwrap();
+    let fp32 = assemble_act_tensors(
+        info,
+        &QuantPolicy::fp32(),
+        &std::collections::BTreeMap::new(),
+    )
+    .unwrap();
+    let artifact = format!("diag_{}_b1", ctx.head(&task));
+    let mut serial: Vec<(String, Vec<u32>)> = Vec::new();
+    for ex in split.examples.iter().take(n_seqs) {
+        let taps = tq::coordinator::calibrate::run_diag(
+            &ctx,
+            &artifact,
+            info,
+            &params,
+            &fp32.scales,
+            &fp32.zps,
+            &fp32.cfg,
+            ex,
+        )
+        .unwrap();
+        serial.extend(taps.iter().map(|(s, t)| (s.clone(), bits(t.data()))));
+    }
+    assert_eq!(batched[0], serial, "batched taps diverged from the serial run_diag loop");
+}
+
 /// The persistent pool survives sustained small-batch traffic and
 /// panicking jobs: a panic surfaces as a clean unwind on the submitter
 /// (not a hung queue), and the same workers keep serving afterwards.
@@ -223,12 +382,15 @@ fn pool_stress_many_small_jobs_and_panic_containment() {
 fn offline_sweep_is_parallel_deterministic() {
     let (serial, parallel) = pools();
     let data = synth_data(128, 48, 4, 99);
+    // K=6 does not divide 128: the near-even group path and the per-group
+    // MSE search are pinned alongside the classic cells
     let cfgs = grid(
         128,
         &[8, 4],
         &[8],
-        &[1, 8, 128],
+        &[1, 6, 8, 128],
         &[Estimator::CurrentMinMax, Estimator::Mse],
+        &[RangeMethod::Auto, RangeMethod::MsePerGroup],
     )
     .unwrap();
     assert!(cfgs.len() >= 4, "sweep smoke needs >= 4 configs");
@@ -239,5 +401,6 @@ fn offline_sweep_is_parallel_deterministic() {
         assert_eq!(ra.label, rb.label);
         assert_eq!(ra.act_mse.to_bits(), rb.act_mse.to_bits(), "{}", ra.label);
         assert_eq!(ra.weight_mse.to_bits(), rb.weight_mse.to_bits(), "{}", ra.label);
+        assert_eq!(ra.peg_overhead, rb.peg_overhead, "{}", ra.label);
     }
 }

@@ -17,7 +17,7 @@ use tq::coordinator::{eval, Ctx};
 use tq::data::{self, task_spec};
 use tq::model::qconfig::{assemble_act_tensors, QuantPolicy, SiteCfg};
 use tq::model::Params;
-use tq::quant::{Estimator, Granularity};
+use tq::quant::{Estimator, Granularity, RangeMethod};
 use tq::runtime::{lit_f32, lit_i32, Runtime};
 
 fn ctx() -> Option<Ctx> {
@@ -144,9 +144,8 @@ fn eval_scores_in_range_and_policy_sensitivity() {
 
     // PEG policy assembles with the real topology and evaluates
     let peg = SiteCfg {
-        bits: 8,
         granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
-        enabled: true,
+        ..Default::default()
     };
     let policy = QuantPolicy::uniform(8, 8).with_site_family(info, "res2_sum", peg);
     let actp = assemble_act_tensors(info, &policy, &calib.trackers).unwrap();
@@ -309,7 +308,15 @@ fn sweep_smoke_two_configs() {
 
     // The offline substrate sweep needs no artifacts and must always run.
     let data = sweep::synth_data(64, 32, 2, 3);
-    let cfgs = sweep::grid(64, &[8], &[8], &[1, 8], &[Estimator::CurrentMinMax]).unwrap();
+    let cfgs = sweep::grid(
+        64,
+        &[8],
+        &[8],
+        &[1, 8],
+        &[Estimator::CurrentMinMax],
+        &[RangeMethod::Auto],
+    )
+    .unwrap();
     assert_eq!(cfgs.len(), 2);
     let results = sweep::run_offline(&data, &cfgs, &Pool::new(2)).unwrap();
     assert_eq!(results.len(), 2);
@@ -335,4 +342,21 @@ fn sweep_smoke_two_configs() {
         let s = s.unwrap();
         assert!((0.0..=100.0).contains(&s));
     }
+
+    // A PEG cell with per-group MSE ranges runs the full runtime pipeline
+    // too: calibrate (row-sampling trackers) → per-group search → eval.
+    let peg_cfgs = sweep::grid(
+        64,
+        &[8],
+        &[8],
+        &[6],
+        &[Estimator::CurrentMinMax],
+        &[RangeMethod::MsePerGroup],
+    )
+    .unwrap();
+    assert_eq!(peg_cfgs.len(), 1);
+    assert!(peg_cfgs[0].label().contains("mse_group"), "{}", peg_cfgs[0].label());
+    let peg_scores = sweep::runtime_scores(&ctx, &task, &params, &peg_cfgs, 1, &Pool::new(2));
+    let s = peg_scores.into_iter().next().unwrap().unwrap();
+    assert!((0.0..=100.0).contains(&s));
 }

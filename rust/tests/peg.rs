@@ -1,0 +1,237 @@
+//! Per-embedding-group (PEG) property & golden suite.
+//!
+//! Locks down the paper's headline mechanism end to end:
+//! * `range_permutation` returns a valid permutation for ANY input —
+//!   NaN/inf lanes included (a non-total comparator can make `sort_by`
+//!   panic, so this is a real failure mode, not paranoia);
+//! * `group_bounds(d, k)` partitions `0..d` exactly for every `k`,
+//!   dividing or not;
+//! * grouped qparams always cover each member lane's range;
+//! * the synthetic-outlier golden fixture (one hot lane, paper §3):
+//!   PEG-k strictly beats per-tensor at equal bit-width, and degrades
+//!   gracefully to per-tensor at K=1 and per-lane at K=d.
+
+use tq::model::qconfig::{site_lane_params_pool, SiteCfg};
+use tq::quant::estimators::RangeTracker;
+use tq::quant::peg::{group_bounds, lane_qparams, range_permutation, site_groups};
+use tq::quant::{qdq_per_lane, Estimator, Granularity, QGrid, RangeMethod};
+use tq::tensor::Tensor;
+use tq::util::pool::Pool;
+use tq::util::prop::{prop_assert, prop_check};
+use tq::util::rng::Rng;
+
+fn is_permutation(p: &[usize], d: usize) -> bool {
+    let mut seen = vec![false; d];
+    p.len() == d
+        && p.iter().all(|&j| {
+            if j < d && !seen[j] {
+                seen[j] = true;
+                true
+            } else {
+                false
+            }
+        })
+}
+
+#[test]
+fn prop_range_permutation_is_valid_for_any_input() {
+    prop_check("permutation total", 300, |rng| {
+        let d = 1 + rng.below(32);
+        let mut lo: Vec<f32> = (0..d).map(|_| rng.uniform(-50.0, 0.0)).collect();
+        let mut hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 50.0)).collect();
+        // poison a random subset of lanes with NaN / ±inf statistics
+        for _ in 0..rng.below(d + 1) {
+            let j = rng.below(d);
+            match rng.below(4) {
+                0 => lo[j] = f32::NAN,
+                1 => hi[j] = f32::NAN,
+                2 => lo[j] = f32::NEG_INFINITY,
+                _ => hi[j] = f32::INFINITY,
+            }
+        }
+        let p = range_permutation(&lo, &hi);
+        prop_assert(is_permutation(&p, d), format!("invalid permutation {p:?} for d={d}"))
+    });
+}
+
+#[test]
+fn prop_group_bounds_partition_any_k() {
+    prop_check("group bounds partition any k", 300, |rng| {
+        let d = 1 + rng.below(200);
+        let k = 1 + rng.below(d);
+        let bounds = group_bounds(d, k);
+        prop_assert(bounds.len() == k, format!("{} groups, wanted {k}", bounds.len()))?;
+        prop_assert(bounds[0].0 == 0 && bounds[k - 1].1 == d, format!("ends {bounds:?}"))?;
+        for w in bounds.windows(2) {
+            prop_assert(
+                w[0].1 == w[1].0,
+                format!("gap/overlap between {:?} and {:?}", w[0], w[1]),
+            )?;
+        }
+        let sizes: Vec<usize> = bounds.iter().map(|(a, b)| b - a).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        prop_assert(max - min <= 1, format!("uneven by >1: {sizes:?} (d={d} k={k})"))
+    });
+}
+
+#[test]
+fn prop_site_groups_cover_every_lane_once() {
+    prop_check("site groups partition", 200, |rng| {
+        let d = 1 + rng.below(40);
+        let lo: Vec<f32> = (0..d).map(|_| rng.uniform(-10.0, 0.0)).collect();
+        let hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 10.0)).collect();
+        let gran = match rng.below(3) {
+            0 => Granularity::PerTensor,
+            1 => Granularity::PerEmbedding,
+            _ => Granularity::PerEmbeddingGroup {
+                k: 1 + rng.below(d + 4), // may exceed d: must clamp, not panic
+                permute: rng.bool(0.5),
+            },
+        };
+        let (groups, order) = site_groups(&lo, &hi, &gran).unwrap();
+        prop_assert(is_permutation(&order, d), format!("order not a permutation: {order:?}"))?;
+        let mut count = vec![0usize; d];
+        for g in &groups {
+            for &j in g {
+                prop_assert(j < d, format!("lane {j} out of range"))?;
+                count[j] += 1;
+            }
+        }
+        prop_assert(
+            count.iter().all(|&c| c == 1),
+            format!("lanes not covered exactly once: {count:?} ({gran:?})"),
+        )
+    });
+}
+
+#[test]
+fn prop_grouped_qparams_cover_member_lane_ranges() {
+    prop_check("peg coverage", 200, |rng| {
+        let d = 2 + rng.below(30);
+        let k = 1 + rng.below(d); // any K, dividing or not
+        let lo: Vec<f32> = (0..d).map(|_| rng.uniform(-20.0, 0.0)).collect();
+        let hi: Vec<f32> = (0..d).map(|_| rng.uniform(0.0, 20.0)).collect();
+        let grid = QGrid::asymmetric([4u32, 8][rng.below(2)]);
+        let permute = rng.bool(0.5);
+        let (params, _) =
+            lane_qparams(&lo, &hi, &Granularity::PerEmbeddingGroup { k, permute }, grid)
+                .unwrap();
+        for j in 0..d {
+            let covered = params[j].scale * grid.levels() + 1e-3;
+            prop_assert(
+                covered >= hi[j] - lo[j],
+                format!(
+                    "lane {j}: scale {} covers {covered} < {} (d={d} k={k} permute={permute})",
+                    params[j].scale,
+                    hi[j] - lo[j]
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The golden fixture: rows of mostly-unit activations with ONE hot lane
+/// (the paper §3 structured-outlier shape). Returns (tensor, tracker).
+fn hot_lane_fixture(d: usize, rows: usize, hot: usize, seed: u64) -> (Tensor, RangeTracker) {
+    let mut rng = Rng::new(seed);
+    let t = Tensor::from_fn(&[rows, d], |i| {
+        let lane = i % d;
+        let mag = if lane == hot { 30.0 } else { 1.0 };
+        rng.normal_f32(0.0, mag)
+    });
+    let mut tr = RangeTracker::new(Estimator::CurrentMinMax, d);
+    tr.observe(&t).unwrap();
+    (t, tr)
+}
+
+#[test]
+fn golden_peg_beats_per_tensor_and_degrades_gracefully() {
+    let d = 16;
+    let (t, tr) = hot_lane_fixture(d, 512, 11, 5);
+    let (lo, hi) = tr.lane_ranges();
+    let grid = QGrid::asymmetric(8);
+    let err = |gran: &Granularity| -> f32 {
+        let (params, _) = lane_qparams(&lo, &hi, gran, grid).unwrap();
+        qdq_per_lane(&t, &params, grid).unwrap().mse(&t).unwrap()
+    };
+
+    let e_pt = err(&Granularity::PerTensor);
+    let e_pe = err(&Granularity::PerEmbedding);
+    // PEG-k (k>1, permuted) strictly beats per-tensor at the same bits:
+    // the hot lane is isolated, every other group gets a tight scale.
+    // With one hot lane out of d, a K-group split leaves ~d/K lanes
+    // sharing the wide range, so the MSE shrinks roughly like 1/K.
+    for k in [2usize, 4, 8] {
+        let e_k = err(&Granularity::PerEmbeddingGroup { k, permute: true });
+        assert!(
+            e_k < e_pt * 0.75,
+            "PEG-{k} MSE {e_k} not strictly below per-tensor {e_pt}"
+        );
+        // and never beats the per-lane floor (up to f32 noise)
+        assert!(e_pe <= e_k * 1.01, "per-lane {e_pe} worse than PEG-{k} {e_k}");
+    }
+    let e_8 = err(&Granularity::PerEmbeddingGroup { k: 8, permute: true });
+    assert!(e_8 < e_pt * 0.3, "PEG-8 {e_8} should approach the per-lane floor {e_pt}");
+
+    // K=1 is exactly per-tensor, K=d exactly per-lane — bit for bit
+    let (p_pt, _) = lane_qparams(&lo, &hi, &Granularity::PerTensor, grid).unwrap();
+    let (p_k1, _) = lane_qparams(
+        &lo,
+        &hi,
+        &Granularity::PerEmbeddingGroup { k: 1, permute: false },
+        grid,
+    )
+    .unwrap();
+    assert_eq!(p_pt, p_k1, "K=1 must equal per-tensor");
+    let (p_pe, _) = lane_qparams(&lo, &hi, &Granularity::PerEmbedding, grid).unwrap();
+    let (p_kd, _) = lane_qparams(
+        &lo,
+        &hi,
+        &Granularity::PerEmbeddingGroup { k: d, permute: true },
+        grid,
+    )
+    .unwrap();
+    assert_eq!(p_pe.len(), p_kd.len());
+    for (a, b) in p_pe.iter().zip(&p_kd) {
+        assert_eq!(a.scale.to_bits(), b.scale.to_bits(), "K=d must equal per-lane");
+        assert_eq!(a.zero_point.to_bits(), b.zero_point.to_bits());
+    }
+}
+
+#[test]
+fn golden_per_group_mse_refines_the_minmax_groups() {
+    // same hot-lane structure, plus a single far outlier in the hot lane:
+    // at 4 bits the mse_group search clips it, min-max grouping cannot
+    let d = 16;
+    let rows = 2000;
+    let mut rng = Rng::new(9);
+    let t = Tensor::from_fn(&[rows, d], |i| {
+        let (row, lane) = (i / d, i % d);
+        if lane == 11 {
+            if row == 777 { 200.0 } else { rng.uniform(0.0, 10.0) }
+        } else {
+            rng.uniform(0.0, 1.0)
+        }
+    });
+    let mut tr = RangeTracker::new(Estimator::CurrentMinMax, d).with_row_samples();
+    tr.observe(&t).unwrap();
+    let grid = QGrid::asymmetric(4);
+    let pool = Pool::serial();
+    let cfg = |m: RangeMethod| SiteCfg {
+        bits: 4,
+        granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
+        range_method: m,
+        enabled: true,
+    };
+    let err = |m: RangeMethod| -> f32 {
+        let (params, _) = site_lane_params_pool(&tr, &cfg(m), grid, &pool).unwrap();
+        qdq_per_lane(&t, &params, grid).unwrap().mse(&t).unwrap()
+    };
+    let e_minmax = err(RangeMethod::CurrentMinMax);
+    let e_searched = err(RangeMethod::MsePerGroup);
+    assert!(
+        e_searched < e_minmax * 0.8,
+        "per-group MSE {e_searched} not below min-max grouping {e_minmax}"
+    );
+}

@@ -20,6 +20,7 @@ use tq::model::qconfig::{SiteCfg, WeightCfg};
 use tq::quant::peg::{group_bounds, lane_qparams, range_permutation};
 use tq::quant::{
     qdq, qparams_from_range, qparams_symmetric, Estimator, Granularity, QGrid, QParams,
+    RangeMethod,
 };
 use tq::spec::{AdaRoundSpec, CalibSpec, PolicySpec, QuantSpec, SiteRule, SiteSelector};
 use tq::util::prop::{prop_assert, prop_check, vec_f32};
@@ -258,6 +259,14 @@ fn rand_site_cfg(rng: &mut Rng) -> SiteCfg {
     SiteCfg {
         bits: [2u32, 4, 8, 16][rng.below(4)],
         granularity: rand_granularity(rng),
+        // mse_tensor is excluded: it only composes with per-tensor
+        // granularity (the assembly rejects other pairings), and these
+        // random specs exercise serialization, not assembly
+        range_method: [
+            RangeMethod::Auto,
+            RangeMethod::CurrentMinMax,
+            RangeMethod::MsePerGroup,
+        ][rng.below(3)],
         enabled: rng.bool(0.8),
     }
 }
