@@ -8,7 +8,16 @@
 //! Rows (artifact-backed ones require `repro gen-artifacts`):
 //!   * pool dispatch: N small jobs, spawn-per-call vs persistent workers
 //!   * dev eval:  per-call serial loop  vs  run_batch n=1  vs  run_batch n=T
+//!   * dev eval engines: naive per-instruction interpreter (the pre-plan
+//!     baseline, forced via `Runtime::set_naive_interp`) vs the preplanned
+//!     engine — naive rows also land in results/bench_exec_baseline.csv and
+//!     both engines' per-phase nanos (from `RuntimeStats` deltas) in
+//!     results/bench_exec_phases.csv
 //!   * calibrate: per-call serial loop  vs  batch-parallel calibrate n=T
+//!
+//! With `TQ_PERF_GATE` set (non-empty, not "0") the process exits 1 if the
+//! planned engine's eval throughput is below `TQ_PERF_MIN_SPEEDUP`
+//! (default 1.5) times the naive engine's — the CI perf-regression step.
 
 use std::sync::mpsc;
 
@@ -22,6 +31,31 @@ use tq::util::bench::{append_csv, Bencher};
 use tq::util::pool::Pool;
 
 const CSV: &str = "results/bench_exec.csv";
+const BASELINE_CSV: &str = "results/bench_exec_baseline.csv";
+const PHASES_CSV: &str = "results/bench_exec_phases.csv";
+
+/// Append one engine's per-phase nanos (a `RuntimeStats` delta over a
+/// timed section) to the phases CSV.
+fn append_phases(path: &str, engine: &str, st: &tq::runtime::RuntimeStats) -> std::io::Result<()> {
+    use std::io::Write;
+    let p = std::path::Path::new(path);
+    if let Some(dir) = p.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let write_header = !p.exists();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(p)?;
+    if write_header {
+        writeln!(
+            f,
+            "engine,executions,input_prep_nanos,exec_nanos,output_fetch_nanos"
+        )?;
+    }
+    writeln!(
+        f,
+        "{engine},{},{},{},{}",
+        st.executions, st.input_prep_nanos, st.exec_nanos, st.output_fetch_nanos
+    )
+}
 
 /// The PR-1-era pool dispatch: scoped threads spawned per call, results
 /// restored by index over an mpsc channel. Kept here as the bench
@@ -207,6 +241,67 @@ fn main() {
             percall_ns / s.mean_ns,
             percall_ns / batch1_ns
         );
+    }
+
+    // --- engine comparison on the tiny-BERT fwd artifact: the naive
+    // per-instruction interpreter (forced, the pre-PR baseline measured
+    // in-tree so before/after share one machine and build) vs the
+    // preplanned engine — same ctx, same pool, same inputs ---
+    ctxn.rt.set_naive_interp(true);
+    let naive_score = eval::evaluate_split(&ctxn, &task, &params, &act, &split).unwrap();
+    ctxn.rt.set_naive_interp(false);
+    let plan_score = eval::evaluate_split(&ctxn, &task, &params, &act, &split).unwrap();
+    assert_eq!(
+        naive_score.to_bits(),
+        plan_score.to_bits(),
+        "preplanned engine diverged from the naive interpreter"
+    );
+
+    ctxn.rt.set_naive_interp(true);
+    ctxn.rt.reset_stats();
+    let s_naive = Bencher::quick().throughput(64).bench(
+        &format!("dev eval 64 ex [engine=naive n={threads}]"),
+        || {
+            std::hint::black_box(
+                eval::evaluate_split(&ctxn, &task, &params, &act, &split).unwrap(),
+            );
+        },
+    );
+    append_csv(CSV, &s_naive).ok();
+    append_csv(BASELINE_CSV, &s_naive).ok();
+    append_phases(PHASES_CSV, "naive", &ctxn.rt.stats()).ok();
+
+    ctxn.rt.set_naive_interp(false);
+    ctxn.rt.reset_stats();
+    let s_plan = Bencher::quick().throughput(64).bench(
+        &format!("dev eval 64 ex [engine=planned n={threads}]"),
+        || {
+            std::hint::black_box(
+                eval::evaluate_split(&ctxn, &task, &params, &act, &split).unwrap(),
+            );
+        },
+    );
+    append_csv(CSV, &s_plan).ok();
+    append_phases(PHASES_CSV, "planned", &ctxn.rt.stats()).ok();
+
+    let engine_speedup = if s_plan.mean_ns > 0.0 { s_naive.mean_ns / s_plan.mean_ns } else { 0.0 };
+    println!(
+        "interp engine speedup (planned vs naive, n={threads}): {engine_speedup:.2}x"
+    );
+    let gate = std::env::var("TQ_PERF_GATE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    if gate {
+        let min: f64 = std::env::var("TQ_PERF_MIN_SPEEDUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.5);
+        if engine_speedup < min {
+            eprintln!(
+                "PERF GATE FAILED: planned vs naive eval speedup \
+                 {engine_speedup:.2}x < required {min:.2}x"
+            );
+            std::process::exit(1);
+        }
+        println!("perf gate passed: {engine_speedup:.2}x >= {min:.2}x");
     }
 
     // calibration: identical work (execute + observe, nb=8 bs=2) on a

@@ -65,28 +65,36 @@ fn eval_computation(module: &HloModule, comp: &Computation, args: &[&Value]) -> 
         .ok_or_else(|| anyhow!("computation {}: root not evaluated", comp.name))
 }
 
-/// Declared vs computed dims must agree (tuples are checked per element
-/// count only).
+/// Declared vs computed dims must agree; tuples are checked recursively,
+/// element by element, so a malformed root tuple fails loudly too.
 fn check_dims(inst: &Inst, v: &Value) -> Result<()> {
-    match (&inst.shape, v) {
+    check_shape(&inst.shape, v).with_context(|| format!("%{}", inst.name))
+}
+
+/// Recursive declared-shape vs computed-value check, shared with the
+/// preplanned engine (`hlo::plan`).
+pub(crate) fn check_shape(shape: &Shape, v: &Value) -> Result<()> {
+    match (shape, v) {
         (Shape::Tuple(shapes), Value::Tuple(parts)) => {
             if shapes.len() != parts.len() {
                 bail!(
-                    "%{}: declared tuple arity {} != computed {}",
-                    inst.name,
+                    "declared tuple arity {} != computed {}",
                     shapes.len(),
                     parts.len()
                 );
+            }
+            for (k, (s, p)) in shapes.iter().zip(parts).enumerate() {
+                check_shape(s, p).with_context(|| format!("tuple element {k}"))?;
             }
             Ok(())
         }
         (Shape::Array { dims, .. }, v) => {
             if v.dims() != &dims[..] {
-                bail!("%{}: declared dims {:?} != computed {:?}", inst.name, dims, v.dims());
+                bail!("declared dims {:?} != computed {:?}", dims, v.dims());
             }
             Ok(())
         }
-        _ => bail!("%{}: declared/computed shape kind mismatch", inst.name),
+        _ => bail!("declared/computed shape kind mismatch"),
     }
 }
 
@@ -138,28 +146,7 @@ fn eval_inst(
             }
             Ok(v.clone())
         }
-        "constant" => {
-            let nums = parse_literal_numbers(inst.payload.as_deref().unwrap_or(""))?;
-            let dims = inst.shape.dims()?.to_vec();
-            let want: usize = dims.iter().product();
-            if nums.len() != want {
-                bail!("constant has {} values, shape wants {want}", nums.len());
-            }
-            match inst.shape.dtype()? {
-                DType::F32 => Ok(Value::F32 {
-                    dims,
-                    data: nums.iter().map(|&x| x as f32).collect(),
-                }),
-                DType::S32 => Ok(Value::S32 {
-                    dims,
-                    data: nums.iter().map(|&x| x as i32).collect(),
-                }),
-                DType::Pred => Ok(Value::Pred {
-                    dims,
-                    data: nums.iter().map(|&x| x != 0.0).collect(),
-                }),
-            }
-        }
+        "constant" => constant_value(inst),
         "broadcast" => {
             let x = operand(comp, env, inst, 0)?;
             let out_dims = inst.shape.dims()?;
@@ -268,13 +255,39 @@ fn eval_inst(
         "gather" => {
             let x = operand(comp, env, inst, 0)?;
             let idx = operand(comp, env, inst, 1)?;
-            gather_value(inst, x, idx)
+            let spec = GatherSpec::from_inst(inst)?;
+            gather_value(&spec, x, idx)
         }
         other => bail!("unsupported opcode {other:?}"),
     }
 }
 
-fn with_dims(v: Value, dims: Vec<usize>) -> Value {
+/// Materialise a `constant` instruction's literal — at eval time for the
+/// naive engine, once per module at plan-build time for `hlo::plan`.
+pub(crate) fn constant_value(inst: &Inst) -> Result<Value> {
+    let nums = parse_literal_numbers(inst.payload.as_deref().unwrap_or(""))?;
+    let dims = inst.shape.dims()?.to_vec();
+    let want: usize = dims.iter().product();
+    if nums.len() != want {
+        bail!("constant has {} values, shape wants {want}", nums.len());
+    }
+    match inst.shape.dtype()? {
+        DType::F32 => Ok(Value::F32 {
+            dims,
+            data: nums.iter().map(|&x| x as f32).collect(),
+        }),
+        DType::S32 => Ok(Value::S32 {
+            dims,
+            data: nums.iter().map(|&x| x as i32).collect(),
+        }),
+        DType::Pred => Ok(Value::Pred {
+            dims,
+            data: nums.iter().map(|&x| x != 0.0).collect(),
+        }),
+    }
+}
+
+pub(crate) fn with_dims(v: Value, dims: Vec<usize>) -> Value {
     match v {
         Value::F32 { data, .. } => Value::F32 { dims, data },
         Value::S32 { data, .. } => Value::S32 { dims, data },
@@ -316,7 +329,7 @@ fn broadcast_map<T: Copy>(
     Ok(out)
 }
 
-fn broadcast_value(x: &Value, out_dims: &[usize], map: &[usize]) -> Result<Value> {
+pub(crate) fn broadcast_value(x: &Value, out_dims: &[usize], map: &[usize]) -> Result<Value> {
     let dims = out_dims.to_vec();
     match x {
         Value::F32 { dims: id, data } => Ok(Value::F32 {
@@ -362,7 +375,7 @@ fn transpose_map<T: Copy>(data: &[T], in_dims: &[usize], perm: &[usize]) -> Resu
     Ok((out_dims, out))
 }
 
-fn transpose_value(x: &Value, perm: &[usize]) -> Result<Value> {
+pub(crate) fn transpose_value(x: &Value, perm: &[usize]) -> Result<Value> {
     match x {
         Value::F32 { dims, data } => {
             let (dims, data) = transpose_map(data, dims, perm)?;
@@ -410,7 +423,7 @@ fn slice_map<T: Copy>(
     Ok((out_dims, out))
 }
 
-fn slice_value(x: &Value, ranges: &[(usize, usize, usize)]) -> Result<Value> {
+pub(crate) fn slice_value(x: &Value, ranges: &[(usize, usize, usize)]) -> Result<Value> {
     match x {
         Value::F32 { dims, data } => {
             let (dims, data) = slice_map(data, dims, ranges)?;
@@ -428,7 +441,7 @@ fn slice_value(x: &Value, ranges: &[(usize, usize, usize)]) -> Result<Value> {
     }
 }
 
-fn concat_values(parts: &[&Value], dim: usize) -> Result<Value> {
+pub(crate) fn concat_values(parts: &[&Value], dim: usize) -> Result<Value> {
     let first = parts
         .first()
         .ok_or_else(|| anyhow!("concatenate with no operands"))?;
@@ -483,70 +496,150 @@ fn concat_values(parts: &[&Value], dim: usize) -> Result<Value> {
 // arithmetic
 // ---------------------------------------------------------------------------
 
-fn binary(op: &str, a: &Value, b: &Value) -> Result<Value> {
+/// Elementwise binary op, shared between the naive evaluator and the
+/// preplanned engine's fused kernels so both compute bit-identical f32
+/// results by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+impl BinOp {
+    pub(crate) fn parse(op: &str) -> Option<BinOp> {
+        Some(match op {
+            "add" => BinOp::Add,
+            "subtract" => BinOp::Sub,
+            "multiply" => BinOp::Mul,
+            "divide" => BinOp::Div,
+            "maximum" => BinOp::Max,
+            "minimum" => BinOp::Min,
+            "power" => BinOp::Pow,
+            _ => return None,
+        })
+    }
+
+    #[inline(always)]
+    pub(crate) fn f32(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Max => a.max(b),
+            BinOp::Min => a.min(b),
+            BinOp::Pow => a.powf(b),
+        }
+    }
+
+    /// s32 semantics: wrapping arithmetic; division is checked so a zero
+    /// divisor (or `i32::MIN / -1`) is a loud interpreter error instead of
+    /// a process abort.
+    #[inline(always)]
+    fn s32(self, a: i32, b: i32) -> Result<i32> {
+        Ok(match self {
+            BinOp::Add => a.wrapping_add(b),
+            BinOp::Sub => a.wrapping_sub(b),
+            BinOp::Mul => a.wrapping_mul(b),
+            BinOp::Div => a
+                .checked_div(b)
+                .ok_or_else(|| anyhow!("s32 divide: {a} / {b} is undefined"))?,
+            BinOp::Max => a.max(b),
+            BinOp::Min => a.min(b),
+            BinOp::Pow => bail!("power on s32 unsupported"),
+        })
+    }
+}
+
+/// Elementwise unary op, shared with the fused kernels like [`BinOp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum UnOp {
+    Exp,
+    Tanh,
+    Rsqrt,
+    Sqrt,
+    Log,
+    Neg,
+    Abs,
+    Floor,
+    Ceil,
+    Round,
+}
+
+impl UnOp {
+    pub(crate) fn parse(op: &str) -> Option<UnOp> {
+        Some(match op {
+            "exp" | "exponential" => UnOp::Exp,
+            "tanh" => UnOp::Tanh,
+            "rsqrt" => UnOp::Rsqrt,
+            "sqrt" => UnOp::Sqrt,
+            "log" => UnOp::Log,
+            "negate" => UnOp::Neg,
+            "abs" => UnOp::Abs,
+            "floor" => UnOp::Floor,
+            "ceil" => UnOp::Ceil,
+            "round-nearest-afz" => UnOp::Round,
+            _ => return None,
+        })
+    }
+
+    #[inline(always)]
+    pub(crate) fn f32(self, v: f32) -> f32 {
+        match self {
+            UnOp::Exp => v.exp(),
+            UnOp::Tanh => v.tanh(),
+            UnOp::Rsqrt => 1.0 / v.sqrt(),
+            UnOp::Sqrt => v.sqrt(),
+            UnOp::Log => v.ln(),
+            UnOp::Neg => -v,
+            UnOp::Abs => v.abs(),
+            UnOp::Floor => v.floor(),
+            UnOp::Ceil => v.ceil(),
+            UnOp::Round => v.round(),
+        }
+    }
+}
+
+pub(crate) fn binary(op: &str, a: &Value, b: &Value) -> Result<Value> {
     if a.dims() != b.dims() {
         bail!("{op}: shape mismatch {:?} vs {:?}", a.dims(), b.dims());
     }
+    let bin = BinOp::parse(op).ok_or_else(|| anyhow!("unknown binary op {op:?}"))?;
     match (a, b) {
-        (Value::F32 { dims, data: x }, Value::F32 { data: y, .. }) => {
-            let f: fn(f32, f32) -> f32 = match op {
-                "add" => |a, b| a + b,
-                "subtract" => |a, b| a - b,
-                "multiply" => |a, b| a * b,
-                "divide" => |a, b| a / b,
-                "maximum" => f32::max,
-                "minimum" => f32::min,
-                "power" => f32::powf,
-                _ => bail!("{op} on f32 unsupported"),
-            };
-            Ok(Value::F32 {
-                dims: dims.clone(),
-                data: x.iter().zip(y).map(|(&u, &v)| f(u, v)).collect(),
-            })
-        }
-        (Value::S32 { dims, data: x }, Value::S32 { data: y, .. }) => {
-            let f: fn(i32, i32) -> i32 = match op {
-                "add" => |a, b| a.wrapping_add(b),
-                "subtract" => |a, b| a.wrapping_sub(b),
-                "multiply" => |a, b| a.wrapping_mul(b),
-                "divide" => |a, b| a / b,
-                "maximum" => i32::max,
-                "minimum" => i32::min,
-                _ => bail!("{op} on s32 unsupported"),
-            };
-            Ok(Value::S32 {
-                dims: dims.clone(),
-                data: x.iter().zip(y).map(|(&u, &v)| f(u, v)).collect(),
-            })
-        }
+        (Value::F32 { dims, data: x }, Value::F32 { data: y, .. }) => Ok(Value::F32 {
+            dims: dims.clone(),
+            data: x.iter().zip(y).map(|(&u, &v)| bin.f32(u, v)).collect(),
+        }),
+        (Value::S32 { dims, data: x }, Value::S32 { data: y, .. }) => Ok(Value::S32 {
+            dims: dims.clone(),
+            data: x
+                .iter()
+                .zip(y)
+                .map(|(&u, &v)| bin.s32(u, v))
+                .collect::<Result<_>>()?,
+        }),
         _ => bail!("{op}: operand dtype mismatch"),
     }
 }
 
-fn unary(op: &str, x: &Value) -> Result<Value> {
+pub(crate) fn unary(op: &str, x: &Value) -> Result<Value> {
+    let un = UnOp::parse(op).ok_or_else(|| anyhow!("unknown unary op {op:?}"))?;
     match x {
-        Value::F32 { dims, data } => {
-            let f: fn(f32) -> f32 = match op {
-                "exp" | "exponential" => f32::exp,
-                "tanh" => f32::tanh,
-                "rsqrt" => |v| 1.0 / v.sqrt(),
-                "sqrt" => f32::sqrt,
-                "log" => f32::ln,
-                "negate" => |v| -v,
-                "abs" => f32::abs,
-                "floor" => f32::floor,
-                "ceil" => f32::ceil,
-                "round-nearest-afz" => f32::round,
-                _ => bail!("{op} on f32 unsupported"),
-            };
-            Ok(Value::F32 { dims: dims.clone(), data: data.iter().map(|&v| f(v)).collect() })
-        }
-        Value::S32 { dims, data } => match op {
-            "negate" => Ok(Value::S32 {
+        Value::F32 { dims, data } => Ok(Value::F32 {
+            dims: dims.clone(),
+            data: data.iter().map(|&v| un.f32(v)).collect(),
+        }),
+        Value::S32 { dims, data } => match un {
+            UnOp::Neg => Ok(Value::S32 {
                 dims: dims.clone(),
                 data: data.iter().map(|&v| v.wrapping_neg()).collect(),
             }),
-            "abs" => Ok(Value::S32 {
+            UnOp::Abs => Ok(Value::S32 {
                 dims: dims.clone(),
                 data: data.iter().map(|&v| v.wrapping_abs()).collect(),
             }),
@@ -567,7 +660,7 @@ fn at_f32(v: &Value, i: usize) -> Result<f32> {
         .ok_or_else(|| anyhow!("clamp bound operand too short"))
 }
 
-fn clamp_value(lo: &Value, x: &Value, hi: &Value) -> Result<Value> {
+pub(crate) fn clamp_value(lo: &Value, x: &Value, hi: &Value) -> Result<Value> {
     let data = x.f32s()?;
     let mut out = Vec::with_capacity(data.len());
     for (i, &v) in data.iter().enumerate() {
@@ -576,7 +669,7 @@ fn clamp_value(lo: &Value, x: &Value, hi: &Value) -> Result<Value> {
     Ok(Value::F32 { dims: x.dims().to_vec(), data: out })
 }
 
-fn select_value(p: &Value, t: &Value, f: &Value) -> Result<Value> {
+pub(crate) fn select_value(p: &Value, t: &Value, f: &Value) -> Result<Value> {
     let preds = p.preds()?;
     if t.dims() != f.dims() {
         bail!("select: branch shape mismatch");
@@ -604,41 +697,77 @@ fn select_value(p: &Value, t: &Value, f: &Value) -> Result<Value> {
     }
 }
 
-fn compare_value(direction: &str, a: &Value, b: &Value) -> Result<Value> {
+/// Comparison direction, shared with the fused kernels like [`BinOp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpDir {
+    pub(crate) fn parse(direction: &str) -> Option<CmpDir> {
+        Some(match direction {
+            "EQ" => CmpDir::Eq,
+            "NE" => CmpDir::Ne,
+            "LT" => CmpDir::Lt,
+            "LE" => CmpDir::Le,
+            "GT" => CmpDir::Gt,
+            "GE" => CmpDir::Ge,
+            _ => return None,
+        })
+    }
+
+    #[inline(always)]
+    fn of_ordering(self, o: std::cmp::Ordering) -> bool {
+        use std::cmp::Ordering::*;
+        match self {
+            CmpDir::Eq => o == Equal,
+            CmpDir::Ne => o != Equal,
+            CmpDir::Lt => o == Less,
+            CmpDir::Le => o != Greater,
+            CmpDir::Gt => o == Greater,
+            CmpDir::Ge => o != Less,
+        }
+    }
+}
+
+/// XLA (totalorder-free) float comparison: the default comparison type for
+/// f32 operands treats NaN as unordered, which makes every direction false
+/// — *except* `NE`, which is true whenever either side is NaN.
+#[inline(always)]
+pub(crate) fn cmp_f32(dir: CmpDir, u: f32, v: f32) -> bool {
+    match u.partial_cmp(&v) {
+        Some(o) => dir.of_ordering(o),
+        None => dir == CmpDir::Ne,
+    }
+}
+
+pub(crate) fn compare_value(direction: &str, a: &Value, b: &Value) -> Result<Value> {
     if a.dims() != b.dims() {
         bail!("compare: shape mismatch");
     }
     let dims = a.dims().to_vec();
-    let cmp = |o: std::cmp::Ordering| -> bool {
-        use std::cmp::Ordering::*;
-        match direction {
-            "EQ" => o == Equal,
-            "NE" => o != Equal,
-            "LT" => o == Less,
-            "LE" => o != Greater,
-            "GT" => o == Greater,
-            "GE" => o != Less,
-            _ => false,
-        }
-    };
-    if !matches!(direction, "EQ" | "NE" | "LT" | "LE" | "GT" | "GE") {
-        bail!("compare: unknown direction {direction:?}");
-    }
+    let dir = CmpDir::parse(direction)
+        .ok_or_else(|| anyhow!("compare: unknown direction {direction:?}"))?;
     let data: Vec<bool> = match (a, b) {
-        (Value::F32 { data: x, .. }, Value::F32 { data: y, .. }) => x
+        (Value::F32 { data: x, .. }, Value::F32 { data: y, .. }) => {
+            x.iter().zip(y).map(|(&u, &v)| cmp_f32(dir, u, v)).collect()
+        }
+        (Value::S32 { data: x, .. }, Value::S32 { data: y, .. }) => x
             .iter()
             .zip(y)
-            .map(|(&u, &v)| u.partial_cmp(&v).map(cmp).unwrap_or(false))
+            .map(|(&u, &v)| dir.of_ordering(u.cmp(&v)))
             .collect(),
-        (Value::S32 { data: x, .. }, Value::S32 { data: y, .. }) => {
-            x.iter().zip(y).map(|(&u, &v)| cmp(u.cmp(&v))).collect()
-        }
         _ => bail!("compare: dtype mismatch"),
     };
     Ok(Value::Pred { dims, data })
 }
 
-fn convert_value(x: &Value, to: DType) -> Result<Value> {
+pub(crate) fn convert_value(x: &Value, to: DType) -> Result<Value> {
     let dims = x.dims().to_vec();
     match (x, to) {
         (Value::F32 { data, .. }, DType::S32) => Ok(Value::S32 {
@@ -667,7 +796,7 @@ fn convert_value(x: &Value, to: DType) -> Result<Value> {
     }
 }
 
-fn iota_value(dims: &[usize], along: usize, dtype: DType) -> Result<Value> {
+pub(crate) fn iota_value(dims: &[usize], along: usize, dtype: DType) -> Result<Value> {
     if along >= dims.len() {
         bail!("iota dimension {along} out of range for {dims:?}");
     }
@@ -714,22 +843,27 @@ fn offset_table(dims: &[usize], st: &[usize], sel: &[usize]) -> Vec<usize> {
     out
 }
 
-fn dot_general(
-    a: &Value,
-    b: &Value,
+/// Validated offset tables and output dims for one dot-general call —
+/// shared between the naive kernel and the fast paths so both walk exactly
+/// the same element sequences.
+struct DotPrep {
+    lb_off: Vec<usize>,
+    lm_off: Vec<usize>,
+    lk_off: Vec<usize>,
+    rb_off: Vec<usize>,
+    rn_off: Vec<usize>,
+    rk_off: Vec<usize>,
+    out_dims: Vec<usize>,
+}
+
+fn dot_prep(
+    ldims: &[usize],
+    rdims: &[usize],
     lb: &[usize],
     rb: &[usize],
     lc: &[usize],
     rc: &[usize],
-) -> Result<Value> {
-    let (ldims, ldata) = match a {
-        Value::F32 { dims, data } => (dims, data),
-        _ => bail!("dot: lhs must be f32"),
-    };
-    let (rdims, rdata) = match b {
-        Value::F32 { dims, data } => (dims, data),
-        _ => bail!("dot: rhs must be f32"),
-    };
+) -> Result<DotPrep> {
     if lb.len() != rb.len() || lc.len() != rc.len() {
         bail!("dot: batch/contracting dim count mismatch");
     }
@@ -761,36 +895,168 @@ fn dot_general(
         .collect();
     let lst = strides(ldims);
     let rst = strides(rdims);
-    let lb_off = offset_table(ldims, &lst, lb);
-    let lm_off = offset_table(ldims, &lst, &l_free);
-    let lk_off = offset_table(ldims, &lst, lc);
-    let rb_off = offset_table(rdims, &rst, rb);
-    let rn_off = offset_table(rdims, &rst, &r_free);
-    let rk_off = offset_table(rdims, &rst, rc);
-    let (nb, m, n, kk) = (lb_off.len(), lm_off.len(), rn_off.len(), lk_off.len());
+    let mut out_dims: Vec<usize> = lb.iter().map(|&d| ldims[d]).collect();
+    out_dims.extend(l_free.iter().map(|&d| ldims[d]));
+    out_dims.extend(r_free.iter().map(|&d| rdims[d]));
+    Ok(DotPrep {
+        lb_off: offset_table(ldims, &lst, lb),
+        lm_off: offset_table(ldims, &lst, &l_free),
+        lk_off: offset_table(ldims, &lst, lc),
+        rb_off: offset_table(rdims, &rst, rb),
+        rn_off: offset_table(rdims, &rst, &r_free),
+        rk_off: offset_table(rdims, &rst, rc),
+        out_dims,
+    })
+}
+
+fn dot_operands<'v>(a: &'v Value, b: &'v Value) -> Result<(&'v [usize], &'v [f32], &'v [usize], &'v [f32])> {
+    let (ldims, ldata) = match a {
+        Value::F32 { dims, data } => (dims, data),
+        _ => bail!("dot: lhs must be f32"),
+    };
+    let (rdims, rdata) = match b {
+        Value::F32 { dims, data } => (dims, data),
+        _ => bail!("dot: rhs must be f32"),
+    };
+    Ok((ldims, ldata, rdims, rdata))
+}
+
+pub(crate) fn dot_general(
+    a: &Value,
+    b: &Value,
+    lb: &[usize],
+    rb: &[usize],
+    lc: &[usize],
+    rc: &[usize],
+) -> Result<Value> {
+    let (ldims, ldata, rdims, rdata) = dot_operands(a, b)?;
+    let p = dot_prep(ldims, rdims, lb, rb, lc, rc)?;
+    let (nb, m, n, kk) = (p.lb_off.len(), p.lm_off.len(), p.rn_off.len(), p.lk_off.len());
     let mut out = vec![0.0f32; nb * m * n];
     for bi in 0..nb {
         for mi in 0..m {
-            let lbase = lb_off[bi] + lm_off[mi];
+            let lbase = p.lb_off[bi] + p.lm_off[mi];
             let row = &mut out[(bi * m + mi) * n..(bi * m + mi + 1) * n];
             for (ni, slot) in row.iter_mut().enumerate() {
-                let rbase = rb_off[bi] + rn_off[ni];
+                let rbase = p.rb_off[bi] + p.rn_off[ni];
                 let mut acc = 0.0f32;
                 for k in 0..kk {
-                    acc += ldata[lbase + lk_off[k]] * rdata[rbase + rk_off[k]];
+                    acc += ldata[lbase + p.lk_off[k]] * rdata[rbase + p.rk_off[k]];
                 }
                 *slot = acc;
             }
         }
     }
-    let mut out_dims: Vec<usize> = lb.iter().map(|&d| ldims[d]).collect();
-    out_dims.extend(l_free.iter().map(|&d| ldims[d]));
-    out_dims.extend(r_free.iter().map(|&d| rdims[d]));
-    Ok(Value::F32 { dims: out_dims, data: out })
+    Ok(Value::F32 { dims: p.out_dims, data: out })
+}
+
+/// `Some(s)` when `off` is the arithmetic sequence `0, s, 2s, ..` — i.e.
+/// the selected dims walk memory with one fixed stride.
+fn fixed_stride(off: &[usize]) -> Option<usize> {
+    if off.len() < 2 {
+        return None;
+    }
+    let s = off[1];
+    for (k, &o) in off.iter().enumerate() {
+        if o != k * s {
+            return None;
+        }
+    }
+    Some(s)
+}
+
+/// Columns-per-block for the ikj fast path: bounds the live output span to
+/// ~L1 size so `out_row += a * b_row` stays cache-resident for every k.
+const DOT_N_BLOCK: usize = 4096;
+
+/// dot-general with contiguous-contracting-dim fast paths, used by the
+/// preplanned engine. Every path accumulates each output element's
+/// products in ascending-k order starting from 0.0 — the exact sequence
+/// of f32 additions the naive kernel performs — so results are
+/// bit-identical to [`dot_general`] by construction (the invariant the
+/// determinism suite pins across thread counts and engines).
+pub(crate) fn dot_general_fast(
+    a: &Value,
+    b: &Value,
+    lb: &[usize],
+    rb: &[usize],
+    lc: &[usize],
+    rc: &[usize],
+) -> Result<Value> {
+    let (ldims, ldata, rdims, rdata) = dot_operands(a, b)?;
+    let p = dot_prep(ldims, rdims, lb, rb, lc, rc)?;
+    let (nb, m, n, kk) = (p.lb_off.len(), p.lm_off.len(), p.rn_off.len(), p.lk_off.len());
+    let ls = fixed_stride(&p.lk_off);
+    let rs = fixed_stride(&p.rk_off);
+    let ns = fixed_stride(&p.rn_off);
+    let mut out = vec![0.0f32; nb * m * n];
+    if ls == Some(1) && rs == Some(1) {
+        // Both contracting walks are unit-stride: each output element is a
+        // plain dot of two contiguous slices (k ascending, as naive).
+        for bi in 0..nb {
+            for mi in 0..m {
+                let lbase = p.lb_off[bi] + p.lm_off[mi];
+                let lrow = &ldata[lbase..lbase + kk];
+                let row = &mut out[(bi * m + mi) * n..(bi * m + mi + 1) * n];
+                for (ni, slot) in row.iter_mut().enumerate() {
+                    let rbase = p.rb_off[bi] + p.rn_off[ni];
+                    let rrow = &rdata[rbase..rbase + kk];
+                    let mut acc = 0.0f32;
+                    for (&u, &v) in lrow.iter().zip(rrow) {
+                        acc += u * v;
+                    }
+                    *slot = acc;
+                }
+            }
+        }
+    } else if ls == Some(1) && ns == Some(1) && rs == Some(n) && kk >= 2 {
+        // rhs is a row-major [K, N] block: stream it row by row (ikj
+        // order), accumulating into the zero-initialised output row. Each
+        // out[ni] still receives its products in ascending-k order, so the
+        // f32 sum per element is unchanged — only the interleaving across
+        // *different* output elements differs, and those never mix.
+        for bi in 0..nb {
+            for mi in 0..m {
+                let lbase = p.lb_off[bi] + p.lm_off[mi];
+                let lrow = &ldata[lbase..lbase + kk];
+                let rb0 = p.rb_off[bi];
+                let row = &mut out[(bi * m + mi) * n..(bi * m + mi + 1) * n];
+                let mut n0 = 0usize;
+                while n0 < n {
+                    let n1 = (n0 + DOT_N_BLOCK).min(n);
+                    let block = &mut row[n0..n1];
+                    for (k, &u) in lrow.iter().enumerate() {
+                        let rrow = &rdata[rb0 + k * n + n0..rb0 + k * n + n1];
+                        for (slot, &v) in block.iter_mut().zip(rrow) {
+                            *slot += u * v;
+                        }
+                    }
+                    n0 = n1;
+                }
+            }
+        }
+    } else {
+        // generic layout: same offset-table walk as the naive kernel
+        for bi in 0..nb {
+            for mi in 0..m {
+                let lbase = p.lb_off[bi] + p.lm_off[mi];
+                let row = &mut out[(bi * m + mi) * n..(bi * m + mi + 1) * n];
+                for (ni, slot) in row.iter_mut().enumerate() {
+                    let rbase = p.rb_off[bi] + p.rn_off[ni];
+                    let mut acc = 0.0f32;
+                    for k in 0..kk {
+                        acc += ldata[lbase + p.lk_off[k]] * rdata[rbase + p.rk_off[k]];
+                    }
+                    *slot = acc;
+                }
+            }
+        }
+    }
+    Ok(Value::F32 { dims: p.out_dims, data: out })
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Combinator {
+pub(crate) enum Combinator {
     Add,
     Max,
     Min,
@@ -799,7 +1065,7 @@ enum Combinator {
 
 /// A reduction sub-computation must be a single binary op over its two
 /// parameters; its opcode names the combinator.
-fn combinator_of(module: &HloModule, name: &str) -> Result<Combinator> {
+pub(crate) fn combinator_of(module: &HloModule, name: &str) -> Result<Combinator> {
     let comp = module.computation(name)?;
     let root = &comp.insts[comp.root];
     match root.opcode.as_str() {
@@ -811,7 +1077,7 @@ fn combinator_of(module: &HloModule, name: &str) -> Result<Combinator> {
     }
 }
 
-fn reduce_value(x: &Value, init: &Value, rdims: &[usize], comb: Combinator) -> Result<Value> {
+pub(crate) fn reduce_value(x: &Value, init: &Value, rdims: &[usize], comb: Combinator) -> Result<Value> {
     let (dims, data) = match x {
         Value::F32 { dims, data } => (dims, data),
         _ => bail!("reduce supports f32 operands"),
@@ -851,7 +1117,30 @@ fn reduce_value(x: &Value, init: &Value, rdims: &[usize], comb: Combinator) -> R
 // gather
 // ---------------------------------------------------------------------------
 
-fn gather_value(inst: &Inst, x: &Value, idx: &Value) -> Result<Value> {
+/// Gather attributes, parsed once per instruction (at plan-build time for
+/// the preplanned engine) instead of once per execution.
+#[derive(Debug, Clone)]
+pub(crate) struct GatherSpec {
+    pub(crate) offset_dims: Vec<usize>,
+    pub(crate) collapsed: Vec<usize>,
+    pub(crate) start_map: Vec<usize>,
+    pub(crate) ivd: usize,
+    pub(crate) slice_sizes: Vec<usize>,
+}
+
+impl GatherSpec {
+    pub(crate) fn from_inst(inst: &Inst) -> Result<GatherSpec> {
+        Ok(GatherSpec {
+            offset_dims: inst.attr_dims("offset_dims")?,
+            collapsed: inst.attr_dims_or("collapsed_slice_dims", &[])?,
+            start_map: inst.attr_dims("start_index_map")?,
+            ivd: inst.attr_usize("index_vector_dim")?,
+            slice_sizes: inst.attr_dims("slice_sizes")?,
+        })
+    }
+}
+
+pub(crate) fn gather_value(spec: &GatherSpec, x: &Value, idx: &Value) -> Result<Value> {
     let (odims, odata) = match x {
         Value::F32 { dims, data } => (dims, data),
         _ => bail!("gather supports f32 operands"),
@@ -859,11 +1148,8 @@ fn gather_value(inst: &Inst, x: &Value, idx: &Value) -> Result<Value> {
     let indices = idx.i32s()?;
     let sdims = idx.dims();
 
-    let offset_dims = inst.attr_dims("offset_dims")?;
-    let collapsed = inst.attr_dims_or("collapsed_slice_dims", &[])?;
-    let start_map = inst.attr_dims("start_index_map")?;
-    let ivd = inst.attr_usize("index_vector_dim")?;
-    let slice_sizes = inst.attr_dims("slice_sizes")?;
+    let GatherSpec { offset_dims, collapsed, start_map, ivd, slice_sizes } = spec;
+    let ivd = *ivd;
     if slice_sizes.len() != odims.len() {
         bail!("gather: slice_sizes rank mismatch");
     }
@@ -968,7 +1254,29 @@ mod tests {
         }
         text.push_str("}\n");
         let m = parse_module(&text)?;
-        interpret(&m, inputs)
+        let naive = interpret(&m, inputs);
+        // Every golden doubles as a plan-vs-naive bit-identity check: the
+        // preplanned engine must agree with the naive evaluation outcome
+        // (same bits on success, an error of its own on failure).
+        match crate::hlo::Plan::build(&m) {
+            Ok(plan) => {
+                let refs: Vec<&Value> = inputs.iter().collect();
+                match (&naive, plan.execute(&refs)) {
+                    (Ok(a), Ok(b)) => crate::hlo::plan::assert_bits_eq(a, &b),
+                    (Err(_), Err(_)) => {}
+                    (Ok(_), Err(e)) => {
+                        panic!("planned engine failed where naive succeeded: {e:#}")
+                    }
+                    (Err(e), Ok(_)) => {
+                        panic!("planned engine succeeded where naive failed: {e:#}")
+                    }
+                }
+            }
+            Err(e) => {
+                assert!(naive.is_err(), "plan build failed but naive engine ran: {e:#}")
+            }
+        }
+        naive
     }
 
     fn f32v(dims: &[usize], data: &[f32]) -> Value {
@@ -1266,5 +1574,96 @@ mod tests {
         }
         let total: f32 = got.iter().sum();
         assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compare_nan_semantics_per_direction() {
+        // XLA float compare treats NaN as unordered: every direction is
+        // false except NE, which is true when either side is NaN.
+        let x = f32v(&[3], &[f32::NAN, 1.0, f32::NAN]);
+        let y = f32v(&[3], &[1.0, f32::NAN, f32::NAN]);
+        for (dir, want) in [
+            ("EQ", [false, false, false]),
+            ("NE", [true, true, true]),
+            ("LT", [false, false, false]),
+            ("LE", [false, false, false]),
+            ("GT", [false, false, false]),
+            ("GE", [false, false, false]),
+        ] {
+            let line = format!(
+                "ROOT %c = pred[3] compare(f32[3] %p0, f32[3] %p1), direction={dir}"
+            );
+            let out = run(
+                &["%p0 = f32[3] parameter(0)", "%p1 = f32[3] parameter(1)"],
+                &[line.as_str()],
+                &[x.clone(), y.clone()],
+            )
+            .unwrap();
+            assert_eq!(out[0].preds().unwrap(), &want, "direction {dir}");
+        }
+        // ordered lanes still compare normally alongside NaN lanes
+        let out = run(
+            &["%p0 = f32[3] parameter(0)", "%p1 = f32[3] parameter(1)"],
+            &["ROOT %c = pred[3] compare(f32[3] %p0, f32[3] %p1), direction=LT"],
+            &[f32v(&[3], &[1.0, f32::NAN, 2.0]), f32v(&[3], &[2.0, 2.0, 1.0])],
+        )
+        .unwrap();
+        assert_eq!(out[0].preds().unwrap(), &[true, false, false]);
+    }
+
+    #[test]
+    fn s32_divide_returns_error_not_abort() {
+        // division by zero must be an interpreter error, not a process
+        // abort (`a / b` on i32 panics on 0 and on MIN / -1)
+        let err = run(
+            &["%p0 = s32[2] parameter(0)", "%p1 = s32[2] parameter(1)"],
+            &["ROOT %d = s32[2] divide(s32[2] %p0, s32[2] %p1)"],
+            &[s32v(&[2], &[1, 2]), s32v(&[2], &[1, 0])],
+        );
+        assert!(err.is_err(), "divide by zero must error");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("divide"), "error should name the op: {msg}");
+
+        let err = run(
+            &["%p0 = s32[1] parameter(0)", "%p1 = s32[1] parameter(1)"],
+            &["ROOT %d = s32[1] divide(s32[1] %p0, s32[1] %p1)"],
+            &[s32v(&[1], &[i32::MIN]), s32v(&[1], &[-1])],
+        );
+        assert!(err.is_err(), "i32::MIN / -1 must error");
+
+        // plain division still works
+        let out = run(
+            &["%p0 = s32[2] parameter(0)", "%p1 = s32[2] parameter(1)"],
+            &["ROOT %d = s32[2] divide(s32[2] %p0, s32[2] %p1)"],
+            &[s32v(&[2], &[7, -9]), s32v(&[2], &[2, 3])],
+        )
+        .unwrap();
+        assert_eq!(out[0].i32s().unwrap(), &[3, -3]);
+    }
+
+    #[test]
+    fn tuple_element_dims_are_checked() {
+        // a root tuple whose declared element shape disagrees with the
+        // computed element must fail loudly (previously only the arity
+        // was checked)
+        let err = run(
+            &["%p0 = f32[4] parameter(0)"],
+            &[
+                "%e = f32[4] exp(f32[4] %p0)",
+                "ROOT %t = (f32[4], f32[2]) tuple(f32[4] %e, f32[4] %p0)",
+            ],
+            &[f32v(&[4], &[1.0, 2.0, 3.0, 4.0])],
+        );
+        assert!(err.is_err(), "mis-declared tuple element dims must be rejected");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("tuple element 1"), "error names the element: {msg}");
+
+        // the arity check still fires too
+        let err = run(
+            &["%p0 = f32[4] parameter(0)"],
+            &["ROOT %t = (f32[4], f32[4]) tuple(f32[4] %p0)"],
+            &[f32v(&[4], &[1.0, 2.0, 3.0, 4.0])],
+        );
+        assert!(err.is_err(), "tuple arity mismatch must be rejected");
     }
 }

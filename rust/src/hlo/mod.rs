@@ -17,6 +17,11 @@
 //!                 elementwise, control ops). Plain data + pure functions,
 //!                 hence `Send + Sync` — the runtime's shared executable
 //!                 cache works unchanged.
+//! * [`plan`]    — once-per-module execution planning (operand slot
+//!                 resolution, constant materialisation, last-use
+//!                 liveness, elementwise fusion, borrowed parameters);
+//!                 the runtime's interpreted hot path. Bit-identical to
+//!                 [`interp`] by construction.
 //! * [`builder`] — emits HLO text (the same dialect the parser reads);
 //!                 used by the fixture generator.
 //! * [`fixture`] — `repro gen-artifacts`: a small self-consistent
@@ -28,11 +33,13 @@ pub mod builder;
 pub mod fixture;
 pub mod interp;
 pub mod parser;
+pub mod plan;
 
 use anyhow::{bail, Result};
 
 pub use interp::{interpret, interpret_refs};
 pub use parser::{parse_module, Computation, HloModule, Inst};
+pub use plan::Plan;
 
 /// Element types the toolchain supports (the subset tq's graphs use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,0 +1,1522 @@
+//! Once-per-module execution planning for the host interpreter.
+//!
+//! [`Plan::build`] lowers an entry computation into a flat step list that
+//! the hot path replays without any per-execution name resolution:
+//!
+//! * **Operand resolution** — operand names become env slot indices at
+//!   build time (the naive engine does a hashmap lookup per operand per
+//!   execution).
+//! * **Constant materialisation** — `constant` literals are parsed once
+//!   and borrowed by every execution.
+//! * **Borrowed parameters** — the env is a vector of [`Slot`]s, a
+//!   `Cow`-style cell that lets parameter tensors be *borrowed* from the
+//!   caller instead of cloned per execution, which is what makes
+//!   `Runtime::run_batch`'s shared static inputs zero-copy per item.
+//! * **Liveness** — each step lists the slots whose last consumer it is;
+//!   intermediates are dropped as soon as their final consumer ran
+//!   instead of staying live until the root.
+//! * **Elementwise fusion** — chains of same-shape elementwise ops
+//!   (binary/unary arithmetic, `clamp`, `select`, f32 `compare`, and
+//!   splat/row/column `broadcast`s feeding them) collapse into a single
+//!   pass over the data: one register program evaluated per element, with
+//!   stores only for values observable outside the fused group.
+//!
+//! Numerical contract: every fused kernel calls the *same* scalar
+//! functions as the naive engine ([`BinOp::f32`], [`UnOp::f32`],
+//! [`cmp_f32`], the `max(lo).min(hi)` clamp), preds are encoded as exact
+//! 1.0/0.0, and `dot` uses [`interp::dot_general_fast`] whose every path
+//! accumulates in ascending-k order from 0.0 — so planned results are
+//! bit-identical to the naive interpreter by construction, not by
+//! tolerance. `tests/determinism.rs` pins this across engines and thread
+//! counts.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::interp::{self, check_shape, cmp_f32, BinOp, CmpDir, Combinator, GatherSpec, UnOp};
+use super::parser::{parse_slice_ranges, Computation, HloModule};
+use super::{DType, Shape, Value};
+
+// ---------------------------------------------------------------------------
+// plan data model
+// ---------------------------------------------------------------------------
+
+/// A compiled execution plan for a module's ENTRY computation.
+/// Immutable and `Send + Sync`: built once, shared across workers.
+pub struct Plan {
+    n_args: usize,
+    n_slots: usize,
+    /// (env slot, caller argument index, declared shape)
+    params: Vec<(usize, usize, Shape)>,
+    /// (env slot, materialised literal)
+    consts: Vec<(usize, Value)>,
+    steps: Vec<Step>,
+    outputs: Vec<OutSpec>,
+    root_is_tuple: bool,
+}
+
+struct OutSpec {
+    slot: usize,
+    shape: Shape,
+}
+
+struct Step {
+    /// instruction name (first member's, for fused groups) — error context
+    name: String,
+    kind: StepKind,
+    /// slots whose last use is this step; emptied right after it runs
+    frees: Vec<usize>,
+}
+
+enum StepKind {
+    Plain { out: usize, shape: Shape, operands: Vec<usize>, op: OpStep },
+    Fused(Fused),
+}
+
+/// One non-fused instruction with its attributes parsed at build time.
+enum OpStep {
+    Broadcast { dims: Vec<usize>, map: Vec<usize> },
+    Reshape { dims: Vec<usize>, want: usize },
+    Transpose { perm: Vec<usize> },
+    Slice { ranges: Vec<(usize, usize, usize)> },
+    Concat { dim: usize },
+    Dot { lb: Vec<usize>, rb: Vec<usize>, lc: Vec<usize>, rc: Vec<usize> },
+    Binary { op: String },
+    Unary { op: String },
+    Clamp,
+    Select,
+    Compare { dir: String },
+    Convert { to: DType },
+    Iota { dims: Vec<usize>, along: usize, dtype: DType },
+    Reduce { rdims: Vec<usize>, comb: Combinator },
+    Tuple,
+    Gte { index: usize },
+    Gather { spec: GatherSpec },
+    /// kept so a module the naive engine would reject at eval time fails
+    /// at the same point (execution), with the same message
+    Unsupported { opcode: String },
+}
+
+/// How a fused load walks its source buffer as the element index `i`
+/// sweeps the group's output space: `Full` = `src[i]`, `Splat` =
+/// `src[0]`, `Mod(m)` = `src[i % m]` (row-vector broadcast over the
+/// trailing axis), `Div(d)` = `src[i / d]` (per-row scalar broadcast).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Pat {
+    Full,
+    Splat,
+    Mod(usize),
+    Div(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Load {
+    slot: usize,
+    pat: Pat,
+    /// pred sources decode to exact 1.0 / 0.0
+    pred: bool,
+}
+
+/// One register of the per-element program. Indices refer to earlier
+/// registers, so a single left-to-right sweep evaluates the whole group.
+#[derive(Debug, Clone, Copy)]
+enum Node {
+    Load(usize),
+    Bin(BinOp, usize, usize),
+    Un(UnOp, usize),
+    /// max(lo).min(hi), same scalar sequence as `interp::clamp_value`
+    Clamp(usize, usize, usize),
+    Cmp(CmpDir, usize, usize),
+    Sel(usize, usize, usize),
+}
+
+struct Store {
+    node: usize,
+    slot: usize,
+    dims: Vec<usize>,
+    /// re-encode the 1.0/0.0 register as `Value::Pred` (exact)
+    pred: bool,
+}
+
+struct Fused {
+    n: usize,
+    loads: Vec<Load>,
+    nodes: Vec<Node>,
+    stores: Vec<Store>,
+}
+
+/// `Cow`-style env cell: parameters and constants are borrowed,
+/// intermediates owned, dead slots empty.
+enum Slot<'a> {
+    Empty,
+    Ref(&'a Value),
+    Own(Value),
+}
+
+impl Slot<'_> {
+    fn get(&self) -> Option<&Value> {
+        match *self {
+            Slot::Empty => None,
+            Slot::Ref(v) => Some(v),
+            Slot::Own(ref v) => Some(v),
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Src<'v> {
+    F32(&'v [f32]),
+    Pred(&'v [bool]),
+}
+
+// ---------------------------------------------------------------------------
+// builder
+// ---------------------------------------------------------------------------
+
+/// Operand of a fused candidate: an earlier member's register, or a load
+/// from an env slot with an access pattern.
+#[derive(Clone, Copy)]
+enum ORef {
+    Member(usize),
+    Load(usize, Pat, bool),
+}
+
+#[derive(Clone)]
+enum MKind {
+    Bin(BinOp, ORef, ORef),
+    Un(UnOp, ORef),
+    Clamp(ORef, ORef, ORef),
+    Sel(ORef, ORef, ORef),
+    Cmp(CmpDir, ORef, ORef),
+    Bcast(ORef),
+}
+
+#[derive(Clone)]
+struct Member {
+    idx: usize,
+    pred_out: bool,
+    kind: MKind,
+}
+
+struct Builder<'m> {
+    module: &'m HloModule,
+    comp: &'m Computation,
+    /// per instruction: operand env slots (resolved names)
+    ops: Vec<Vec<usize>>,
+    /// per slot: instruction indices that consume it
+    uses: Vec<Vec<usize>>,
+    is_output: Vec<bool>,
+    prefilled: Vec<bool>,
+    root_skipped: bool,
+    steps: Vec<Step>,
+    members: Vec<Member>,
+    run_map: HashMap<usize, usize>,
+    run_od: Vec<usize>,
+}
+
+impl Plan {
+    /// Lower `module`'s ENTRY computation into an execution plan.
+    ///
+    /// Build is total for any module the naive engine can *evaluate*;
+    /// structural errors the naive engine would only hit at eval time
+    /// (unknown operands, bad attributes, malformed literals) surface
+    /// here instead, so callers can fall back to the naive engine.
+    pub fn build(module: &HloModule) -> Result<Plan> {
+        let comp = module.entry();
+        let n = comp.insts.len();
+
+        // -- operand name -> slot resolution (once, ever) --
+        let mut ops: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for (i, inst) in comp.insts.iter().enumerate() {
+            let mut v = Vec::with_capacity(inst.operands.len());
+            for name in &inst.operands {
+                let &s = comp
+                    .index
+                    .get(name)
+                    .ok_or_else(|| anyhow!("%{}: unknown operand %{name}", inst.name))?;
+                if s >= i {
+                    bail!("%{}: operand %{name} not defined before use", inst.name);
+                }
+                v.push(s);
+            }
+            ops.push(v);
+        }
+        let mut uses: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, o) in ops.iter().enumerate() {
+            for &s in o {
+                uses[s].push(i);
+            }
+        }
+
+        // -- outputs: a root tuple is decomposed into its operand slots so
+        // the tuple itself is never materialised --
+        let root_inst = &comp.insts[comp.root];
+        let root_is_tuple = root_inst.opcode == "tuple";
+        let mut outputs = Vec::new();
+        if root_is_tuple {
+            let Shape::Tuple(part_shapes) = &root_inst.shape else {
+                bail!("%{}: tuple root with non-tuple shape", root_inst.name);
+            };
+            if part_shapes.len() != ops[comp.root].len() {
+                bail!(
+                    "%{}: tuple shape arity {} != operand count {}",
+                    root_inst.name,
+                    part_shapes.len(),
+                    ops[comp.root].len()
+                );
+            }
+            for (&slot, sh) in ops[comp.root].iter().zip(part_shapes) {
+                outputs.push(OutSpec { slot, shape: sh.clone() });
+            }
+        } else {
+            outputs.push(OutSpec { slot: comp.root, shape: root_inst.shape.clone() });
+        }
+        let mut is_output = vec![false; n];
+        for o in &outputs {
+            is_output[o.slot] = true;
+        }
+
+        // -- prefill: parameters are borrowed, constants materialised once --
+        let mut params = Vec::new();
+        let mut consts = Vec::new();
+        let mut prefilled = vec![false; n];
+        for (i, inst) in comp.insts.iter().enumerate() {
+            match inst.opcode.as_str() {
+                "parameter" => {
+                    let ai: usize = inst
+                        .payload
+                        .as_deref()
+                        .unwrap_or("")
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("%{}: bad parameter payload", inst.name))?;
+                    if ai >= comp.params.len() {
+                        bail!("parameter({ai}) out of range");
+                    }
+                    params.push((i, ai, inst.shape.clone()));
+                    prefilled[i] = true;
+                }
+                "constant" => {
+                    let v = interp::constant_value(inst)
+                        .with_context(|| format!("in %{} = constant(..)", inst.name))?;
+                    consts.push((i, v));
+                    prefilled[i] = true;
+                }
+                _ => {}
+            }
+        }
+
+        // the root tuple instruction itself is skipped unless something
+        // downstream consumes the tuple value
+        let root_skipped = root_is_tuple && uses[comp.root].is_empty();
+
+        let mut b = Builder {
+            module,
+            comp,
+            ops,
+            uses,
+            is_output,
+            prefilled,
+            root_skipped,
+            steps: Vec::new(),
+            members: Vec::new(),
+            run_map: HashMap::new(),
+            run_od: Vec::new(),
+        };
+        b.scan()?;
+        let mut steps = b.steps;
+
+        // -- liveness: last step touching each slot; outputs pinned live --
+        let mut last = vec![0usize; n];
+        for (si, step) in steps.iter().enumerate() {
+            match &step.kind {
+                StepKind::Plain { out, operands, .. } => {
+                    for &s in operands {
+                        last[s] = si;
+                    }
+                    last[*out] = si;
+                }
+                StepKind::Fused(f) => {
+                    for ld in &f.loads {
+                        last[ld.slot] = si;
+                    }
+                    for st in &f.stores {
+                        last[st.slot] = si;
+                    }
+                }
+            }
+        }
+        for o in &outputs {
+            last[o.slot] = usize::MAX;
+        }
+        for (s, &si) in last.iter().enumerate() {
+            if si < steps.len() {
+                steps[si].frees.push(s);
+            }
+        }
+
+        Ok(Plan {
+            n_args: comp.params.len(),
+            n_slots: n,
+            params,
+            consts,
+            steps,
+            outputs,
+            root_is_tuple,
+        })
+    }
+
+    /// Number of steps the hot loop replays.
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Number of fused elementwise groups in the plan.
+    pub fn n_fused_groups(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::Fused(_)))
+            .count()
+    }
+}
+
+impl Builder<'_> {
+    fn scan(&mut self) -> Result<()> {
+        for i in 0..self.comp.insts.len() {
+            if self.prefilled[i] {
+                continue;
+            }
+            if self.root_skipped && i == self.comp.root {
+                continue;
+            }
+            let inst = &self.comp.insts[i];
+            if !self.members.is_empty() {
+                let od = self.run_od.clone();
+                if let Some(kind) = self.classify(i, &od, true) {
+                    self.push_member(i, kind);
+                    continue;
+                }
+                // Hoist-through: a step whose operands are disjoint from
+                // the open run can execute *before* it, so emitting it now
+                // does not flush the run. Keeps e.g. a scalar enable
+                // `compare` mid QDQ-chain from splitting the chain's fused
+                // group. Bigger fusable work (n > run's n) flushes instead
+                // so it can seed its own run.
+                let touches = self.ops[i].iter().any(|s| self.run_map.contains_key(s));
+                let run_n: usize = self.run_od.iter().product();
+                let standalone = match inst.shape.dims() {
+                    Ok(d) => {
+                        let d = d.to_vec();
+                        self.classify(i, &d, false).is_some()
+                    }
+                    Err(_) => false,
+                };
+                if !touches && (!standalone || inst.shape.elems() <= run_n) {
+                    let step = self.plain_step(i)?;
+                    self.steps.push(step);
+                    continue;
+                }
+                self.flush()?;
+            }
+            // run is empty here: seed a new one or emit a plain step
+            let seeded = match inst.shape.dims() {
+                Ok(d) => {
+                    let d = d.to_vec();
+                    match self.classify(i, &d, false) {
+                        Some(kind) => {
+                            self.run_od = d;
+                            self.push_member(i, kind);
+                            true
+                        }
+                        None => false,
+                    }
+                }
+                Err(_) => false,
+            };
+            if !seeded {
+                let step = self.plain_step(i)?;
+                self.steps.push(step);
+            }
+        }
+        self.flush()
+    }
+
+    fn push_member(&mut self, i: usize, kind: MKind) {
+        let pred_out = matches!(
+            self.comp.insts[i].shape,
+            Shape::Array { dtype: DType::Pred, .. }
+        );
+        self.run_map.insert(i, self.members.len());
+        self.members.push(Member { idx: i, pred_out, kind });
+    }
+
+    /// Can instruction `i` join a fused run with output dims `od`?
+    /// `in_run` selects whether operands may reference current members.
+    /// Conservative by design: anything not provably equivalent to the
+    /// naive evaluation falls back to a plain step.
+    fn classify(&self, i: usize, od: &[usize], in_run: bool) -> Option<MKind> {
+        let inst = &self.comp.insts[i];
+        let ops = &self.ops[i];
+        let (odt, odims) = match &inst.shape {
+            Shape::Array { dtype, dims } => (*dtype, dims),
+            Shape::Tuple(_) => return None,
+        };
+        if odims[..] != *od {
+            return None;
+        }
+        let f32_full = |s: usize| -> Option<ORef> {
+            if in_run {
+                if let Some(&mi) = self.run_map.get(&s) {
+                    return (!self.members[mi].pred_out).then_some(ORef::Member(mi));
+                }
+            }
+            let sh = &self.comp.insts[s].shape;
+            (sh.dtype().ok()? == DType::F32 && sh.dims().ok()? == od)
+                .then_some(ORef::Load(s, Pat::Full, false))
+        };
+        // HLO clamp allows scalar bounds (see `interp::at_f32`)
+        let f32_or_splat = |s: usize| -> Option<ORef> {
+            if let Some(r) = f32_full(s) {
+                return Some(r);
+            }
+            let sh = &self.comp.insts[s].shape;
+            (sh.dtype().ok()? == DType::F32 && sh.elems() == 1)
+                .then_some(ORef::Load(s, Pat::Splat, false))
+        };
+        let pred_in = |s: usize| -> Option<ORef> {
+            if in_run {
+                if let Some(&mi) = self.run_map.get(&s) {
+                    return self.members[mi].pred_out.then_some(ORef::Member(mi));
+                }
+            }
+            let sh = &self.comp.insts[s].shape;
+            if sh.dtype().ok()? != DType::Pred {
+                return None;
+            }
+            if sh.dims().ok()? == od {
+                Some(ORef::Load(s, Pat::Full, true))
+            } else if sh.elems() == 1 {
+                Some(ORef::Load(s, Pat::Splat, true))
+            } else {
+                None
+            }
+        };
+        match inst.opcode.as_str() {
+            "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+                if odt == DType::F32 && ops.len() == 2 =>
+            {
+                Some(MKind::Bin(
+                    BinOp::parse(&inst.opcode)?,
+                    f32_full(ops[0])?,
+                    f32_full(ops[1])?,
+                ))
+            }
+            "exp" | "exponential" | "tanh" | "rsqrt" | "sqrt" | "log" | "negate" | "abs"
+            | "floor" | "ceil" | "round-nearest-afz"
+                if odt == DType::F32 && ops.len() == 1 =>
+            {
+                Some(MKind::Un(UnOp::parse(&inst.opcode)?, f32_full(ops[0])?))
+            }
+            "clamp" if odt == DType::F32 && ops.len() == 3 => Some(MKind::Clamp(
+                f32_or_splat(ops[0])?,
+                f32_full(ops[1])?,
+                f32_or_splat(ops[2])?,
+            )),
+            "select" if odt == DType::F32 && ops.len() == 3 => Some(MKind::Sel(
+                pred_in(ops[0])?,
+                f32_full(ops[1])?,
+                f32_full(ops[2])?,
+            )),
+            "compare" if odt == DType::Pred && ops.len() == 2 => {
+                let dir = CmpDir::parse(inst.attrs.get("direction")?.trim())?;
+                Some(MKind::Cmp(dir, f32_full(ops[0])?, f32_full(ops[1])?))
+            }
+            "broadcast" if ops.len() == 1 => {
+                let s = ops[0];
+                if in_run && self.run_map.contains_key(&s) {
+                    return None;
+                }
+                let sh = &self.comp.insts[s].shape;
+                let idims = sh.dims().ok()?;
+                let idt = sh.dtype().ok()?;
+                if idt != odt || !matches!(odt, DType::F32 | DType::Pred) {
+                    return None;
+                }
+                let map = inst.attr_dims_or("dimensions", &[]).ok()?;
+                if map.len() != idims.len() {
+                    return None;
+                }
+                for (k, &d) in map.iter().enumerate() {
+                    if d >= od.len() || od[d] != idims[k] {
+                        return None;
+                    }
+                }
+                let n_in: usize = idims.iter().product();
+                let identity = map.iter().enumerate().all(|(k, &d)| d == k);
+                let pat = if n_in == 1 {
+                    Pat::Splat
+                } else if map.len() == 1 && !od.is_empty() && map[0] == od.len() - 1 {
+                    Pat::Mod(od[od.len() - 1])
+                } else if identity && map.len() + 1 == od.len() {
+                    Pat::Div(od[od.len() - 1])
+                } else if identity && map.len() == od.len() {
+                    Pat::Full
+                } else {
+                    return None;
+                };
+                Some(MKind::Bcast(ORef::Load(s, pat, odt == DType::Pred)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Close the open run: a single member becomes a plain step, two or
+    /// more become one fused group.
+    fn flush(&mut self) -> Result<()> {
+        if self.members.is_empty() {
+            return Ok(());
+        }
+        let members = std::mem::take(&mut self.members);
+        self.run_map.clear();
+        if members.len() == 1 {
+            let step = self.plain_step(members[0].idx)?;
+            self.steps.push(step);
+            return Ok(());
+        }
+        let n: usize = self.run_od.iter().product();
+        let mut loads: Vec<Load> = Vec::new();
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut load_ix: HashMap<(usize, Pat, bool), usize> = HashMap::new();
+        let mut reg_of: Vec<usize> = Vec::with_capacity(members.len());
+        fn reg(
+            r: ORef,
+            reg_of: &[usize],
+            loads: &mut Vec<Load>,
+            nodes: &mut Vec<Node>,
+            load_ix: &mut HashMap<(usize, Pat, bool), usize>,
+        ) -> usize {
+            match r {
+                ORef::Member(mi) => reg_of[mi],
+                ORef::Load(slot, pat, pred) => {
+                    *load_ix.entry((slot, pat, pred)).or_insert_with(|| {
+                        loads.push(Load { slot, pat, pred });
+                        nodes.push(Node::Load(loads.len() - 1));
+                        nodes.len() - 1
+                    })
+                }
+            }
+        }
+        for m in &members {
+            let node = match m.kind {
+                MKind::Bin(op, a, b) => {
+                    let ra = reg(a, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    let rb = reg(b, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    nodes.push(Node::Bin(op, ra, rb));
+                    nodes.len() - 1
+                }
+                MKind::Un(op, x) => {
+                    let rx = reg(x, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    nodes.push(Node::Un(op, rx));
+                    nodes.len() - 1
+                }
+                MKind::Clamp(lo, x, hi) => {
+                    let rl = reg(lo, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    let rx = reg(x, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    let rh = reg(hi, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    nodes.push(Node::Clamp(rl, rx, rh));
+                    nodes.len() - 1
+                }
+                MKind::Sel(p, t, f) => {
+                    let rp = reg(p, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    let rt = reg(t, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    let rf = reg(f, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    nodes.push(Node::Sel(rp, rt, rf));
+                    nodes.len() - 1
+                }
+                MKind::Cmp(dir, a, b) => {
+                    let ra = reg(a, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    let rb = reg(b, &reg_of, &mut loads, &mut nodes, &mut load_ix);
+                    nodes.push(Node::Cmp(dir, ra, rb));
+                    nodes.len() - 1
+                }
+                MKind::Bcast(l) => reg(l, &reg_of, &mut loads, &mut nodes, &mut load_ix),
+            };
+            reg_of.push(node);
+        }
+        // store only what is observable outside the group
+        let in_group: std::collections::HashSet<usize> =
+            members.iter().map(|m| m.idx).collect();
+        let mut stores = Vec::new();
+        for (mi, m) in members.iter().enumerate() {
+            let external = self.is_output[m.idx]
+                || self.uses[m.idx].iter().any(|u| !in_group.contains(u));
+            if external {
+                stores.push(Store {
+                    node: reg_of[mi],
+                    slot: m.idx,
+                    dims: self.comp.insts[m.idx].shape.dims()?.to_vec(),
+                    pred: m.pred_out,
+                });
+            }
+        }
+        self.steps.push(Step {
+            name: self.comp.insts[members[0].idx].name.clone(),
+            kind: StepKind::Fused(Fused { n, loads, nodes, stores }),
+            frees: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Lower one instruction to a non-fused step, parsing its attributes
+    /// now so execution never touches the attr map.
+    fn plain_step(&self, i: usize) -> Result<Step> {
+        let inst = &self.comp.insts[i];
+        let operands = self.ops[i].clone();
+        let need = |k: usize| -> Result<()> {
+            if operands.len() < k {
+                bail!("%{}: missing operand {}", inst.name, operands.len());
+            }
+            Ok(())
+        };
+        let op = match inst.opcode.as_str() {
+            "broadcast" => {
+                need(1)?;
+                OpStep::Broadcast {
+                    dims: inst.shape.dims()?.to_vec(),
+                    map: inst.attr_dims_or("dimensions", &[])?,
+                }
+            }
+            "reshape" => {
+                need(1)?;
+                let dims = inst.shape.dims()?.to_vec();
+                let want = dims.iter().product();
+                OpStep::Reshape { dims, want }
+            }
+            "transpose" => {
+                need(1)?;
+                OpStep::Transpose { perm: inst.attr_dims("dimensions")? }
+            }
+            "slice" => {
+                need(1)?;
+                OpStep::Slice { ranges: parse_slice_ranges(inst.attr_str("slice")?)? }
+            }
+            "concatenate" => {
+                let dim = *inst
+                    .attr_dims("dimensions")?
+                    .first()
+                    .ok_or_else(|| anyhow!("concatenate without dimension"))?;
+                OpStep::Concat { dim }
+            }
+            "dot" | "dot-general" => {
+                need(2)?;
+                OpStep::Dot {
+                    lb: inst.attr_dims_or("lhs_batch_dims", &[])?,
+                    rb: inst.attr_dims_or("rhs_batch_dims", &[])?,
+                    lc: inst.attr_dims_or("lhs_contracting_dims", &[])?,
+                    rc: inst.attr_dims_or("rhs_contracting_dims", &[])?,
+                }
+            }
+            "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power" => {
+                need(2)?;
+                OpStep::Binary { op: inst.opcode.clone() }
+            }
+            "exp" | "exponential" | "tanh" | "rsqrt" | "sqrt" | "log" | "negate" | "abs"
+            | "floor" | "ceil" | "round-nearest-afz" => {
+                need(1)?;
+                OpStep::Unary { op: inst.opcode.clone() }
+            }
+            "clamp" => {
+                need(3)?;
+                OpStep::Clamp
+            }
+            "select" => {
+                need(3)?;
+                OpStep::Select
+            }
+            "compare" => {
+                need(2)?;
+                OpStep::Compare { dir: inst.attr_str("direction")?.to_string() }
+            }
+            "convert" => {
+                need(1)?;
+                OpStep::Convert { to: inst.shape.dtype()? }
+            }
+            "iota" => OpStep::Iota {
+                dims: inst.shape.dims()?.to_vec(),
+                along: inst.attr_usize("iota_dimension")?,
+                dtype: inst.shape.dtype()?,
+            },
+            "reduce" => {
+                need(2)?;
+                let apply = inst.attr_str("to_apply")?.trim_start_matches('%');
+                OpStep::Reduce {
+                    rdims: inst.attr_dims("dimensions")?,
+                    comb: interp::combinator_of(self.module, apply)?,
+                }
+            }
+            "tuple" => OpStep::Tuple,
+            "get-tuple-element" => {
+                need(1)?;
+                OpStep::Gte { index: inst.attr_usize("index")? }
+            }
+            "gather" => {
+                need(2)?;
+                OpStep::Gather { spec: GatherSpec::from_inst(inst)? }
+            }
+            other => OpStep::Unsupported { opcode: other.to_string() },
+        };
+        Ok(Step {
+            name: inst.name.clone(),
+            kind: StepKind::Plain { out: i, shape: inst.shape.clone(), operands, op },
+            frees: Vec::new(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// execution
+// ---------------------------------------------------------------------------
+
+impl Plan {
+    /// Execute the plan on borrowed inputs. Parameter tensors are never
+    /// cloned into the env — the naive engine's per-execution clone in
+    /// its `parameter` arm is the single biggest per-item cost
+    /// `run_batch` pays for shared static weights.
+    pub fn execute(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.n_args {
+            bail!(
+                "plan: {} arguments given, wants {}",
+                inputs.len(),
+                self.n_args
+            );
+        }
+        let mut env: Vec<Slot> = (0..self.n_slots).map(|_| Slot::Empty).collect();
+        for (slot, ai, shape) in &self.params {
+            let v = inputs[*ai];
+            if v.len() != shape.elems() {
+                bail!(
+                    "parameter({ai}): argument has {} elements, shape wants {}",
+                    v.len(),
+                    shape.elems()
+                );
+            }
+            check_shape(shape, v).with_context(|| format!("parameter({ai})"))?;
+            env[*slot] = Slot::Ref(v);
+        }
+        for (slot, v) in &self.consts {
+            env[*slot] = Slot::Ref(v);
+        }
+        for step in &self.steps {
+            run_step(step, &mut env).with_context(|| format!("in %{}", step.name))?;
+        }
+        // outputs: take owned values out of the env, cloning only when a
+        // slot repeats or is still borrowed
+        let mut res: Vec<Value> = Vec::with_capacity(self.outputs.len());
+        for (k, o) in self.outputs.iter().enumerate() {
+            let repeats_later = self.outputs[k + 1..].iter().any(|o2| o2.slot == o.slot);
+            let v = if repeats_later {
+                env[o.slot]
+                    .get()
+                    .cloned()
+                    .ok_or_else(|| anyhow!("output {k}: slot not evaluated"))?
+            } else {
+                match std::mem::replace(&mut env[o.slot], Slot::Empty) {
+                    Slot::Own(v) => v,
+                    Slot::Ref(v) => v.clone(),
+                    Slot::Empty => bail!("output {k}: slot not evaluated"),
+                }
+            };
+            check_shape(&o.shape, &v).with_context(|| format!("output {k}"))?;
+            res.push(v);
+        }
+        if self.root_is_tuple {
+            Ok(res)
+        } else {
+            // mirror `interpret_refs`: a non-tuple root that still
+            // evaluates to a tuple value is flattened
+            match res.pop() {
+                Some(Value::Tuple(parts)) => Ok(parts),
+                Some(v) => Ok(vec![v]),
+                None => Ok(Vec::new()),
+            }
+        }
+    }
+}
+
+fn run_step<'a>(step: &'a Step, env: &mut [Slot<'a>]) -> Result<()> {
+    match &step.kind {
+        StepKind::Plain { out, shape, operands, op } => {
+            // reshape of a dying owned value is a metadata-only retag
+            if let OpStep::Reshape { dims, want } = op {
+                let a = operands[0];
+                if step.frees.contains(&a) && matches!(env[a], Slot::Own(_)) {
+                    let Slot::Own(v) = std::mem::replace(&mut env[a], Slot::Empty) else {
+                        unreachable!()
+                    };
+                    if v.len() != *want {
+                        bail!("reshape: {} elements cannot view as {dims:?}", v.len());
+                    }
+                    let v = interp::with_dims(v, dims.clone());
+                    check_shape(shape, &v)?;
+                    env[*out] = Slot::Own(v);
+                    for &s in &step.frees {
+                        env[s] = Slot::Empty;
+                    }
+                    return Ok(());
+                }
+            }
+            let v = {
+                let vals: Vec<&Value> = operands
+                    .iter()
+                    .map(|&s| {
+                        env[s]
+                            .get()
+                            .ok_or_else(|| anyhow!("operand slot {s} not evaluated"))
+                    })
+                    .collect::<Result<_>>()?;
+                eval_plain(op, &vals)?
+            };
+            check_shape(shape, &v)?;
+            env[*out] = Slot::Own(v);
+            for &s in &step.frees {
+                env[s] = Slot::Empty;
+            }
+            Ok(())
+        }
+        StepKind::Fused(f) => {
+            let mut out_bufs: Vec<Vec<f32>> =
+                f.stores.iter().map(|_| Vec::with_capacity(f.n)).collect();
+            {
+                let mut srcs: Vec<Src> = Vec::with_capacity(f.loads.len());
+                for ld in &f.loads {
+                    let v = env[ld.slot]
+                        .get()
+                        .ok_or_else(|| anyhow!("fused load: slot {} not evaluated", ld.slot))?;
+                    let src = if ld.pred {
+                        Src::Pred(v.preds()?)
+                    } else {
+                        Src::F32(v.f32s()?)
+                    };
+                    let len = match src {
+                        Src::F32(s) => s.len(),
+                        Src::Pred(s) => s.len(),
+                    };
+                    // length each pattern demands to cover indices 0..n
+                    let short = f.n > 0
+                        && match ld.pat {
+                            Pat::Full => len < f.n,
+                            Pat::Splat => len < 1,
+                            Pat::Mod(m) => len < m,
+                            Pat::Div(d) => len.saturating_mul(d) < f.n,
+                        };
+                    if short {
+                        bail!(
+                            "fused load of slot {}: operand has {len} elements (pattern {:?}, n {})",
+                            ld.slot,
+                            ld.pat,
+                            f.n
+                        );
+                    }
+                    srcs.push(src);
+                }
+                let mut regs = vec![0.0f32; f.nodes.len()];
+                for i in 0..f.n {
+                    for (j, node) in f.nodes.iter().enumerate() {
+                        let v = match *node {
+                            Node::Load(l) => {
+                                let idx = match f.loads[l].pat {
+                                    Pat::Full => i,
+                                    Pat::Splat => 0,
+                                    Pat::Mod(m) => i % m,
+                                    Pat::Div(d) => i / d,
+                                };
+                                match srcs[l] {
+                                    Src::F32(s) => s[idx],
+                                    Src::Pred(s) => {
+                                        if s[idx] {
+                                            1.0
+                                        } else {
+                                            0.0
+                                        }
+                                    }
+                                }
+                            }
+                            Node::Bin(op, a, b) => op.f32(regs[a], regs[b]),
+                            Node::Un(op, x) => op.f32(regs[x]),
+                            Node::Clamp(lo, x, hi) => regs[x].max(regs[lo]).min(regs[hi]),
+                            Node::Cmp(dir, a, b) => {
+                                if cmp_f32(dir, regs[a], regs[b]) {
+                                    1.0
+                                } else {
+                                    0.0
+                                }
+                            }
+                            Node::Sel(p, t, fl) => {
+                                if regs[p] != 0.0 {
+                                    regs[t]
+                                } else {
+                                    regs[fl]
+                                }
+                            }
+                        };
+                        regs[j] = v;
+                    }
+                    for (buf, st) in out_bufs.iter_mut().zip(&f.stores) {
+                        buf.push(regs[st.node]);
+                    }
+                }
+            }
+            for (st, buf) in f.stores.iter().zip(out_bufs) {
+                let v = if st.pred {
+                    Value::Pred {
+                        dims: st.dims.clone(),
+                        data: buf.iter().map(|&x| x != 0.0).collect(),
+                    }
+                } else {
+                    Value::F32 { dims: st.dims.clone(), data: buf }
+                };
+                env[st.slot] = Slot::Own(v);
+            }
+            for &s in &step.frees {
+                env[s] = Slot::Empty;
+            }
+            Ok(())
+        }
+    }
+}
+
+fn eval_plain(op: &OpStep, vals: &[&Value]) -> Result<Value> {
+    match op {
+        OpStep::Broadcast { dims, map } => interp::broadcast_value(vals[0], dims, map),
+        OpStep::Reshape { dims, want } => {
+            if vals[0].len() != *want {
+                bail!("reshape: {} elements cannot view as {dims:?}", vals[0].len());
+            }
+            Ok(interp::with_dims(vals[0].clone(), dims.clone()))
+        }
+        OpStep::Transpose { perm } => interp::transpose_value(vals[0], perm),
+        OpStep::Slice { ranges } => interp::slice_value(vals[0], ranges),
+        OpStep::Concat { dim } => interp::concat_values(vals, *dim),
+        OpStep::Dot { lb, rb, lc, rc } => {
+            interp::dot_general_fast(vals[0], vals[1], lb, rb, lc, rc)
+        }
+        OpStep::Binary { op } => interp::binary(op, vals[0], vals[1]),
+        OpStep::Unary { op } => interp::unary(op, vals[0]),
+        OpStep::Clamp => interp::clamp_value(vals[0], vals[1], vals[2]),
+        OpStep::Select => interp::select_value(vals[0], vals[1], vals[2]),
+        OpStep::Compare { dir } => interp::compare_value(dir, vals[0], vals[1]),
+        OpStep::Convert { to } => interp::convert_value(vals[0], *to),
+        OpStep::Iota { dims, along, dtype } => interp::iota_value(dims, *along, *dtype),
+        OpStep::Reduce { rdims, comb } => interp::reduce_value(vals[0], vals[1], rdims, *comb),
+        OpStep::Tuple => Ok(Value::Tuple(vals.iter().map(|&v| v.clone()).collect())),
+        OpStep::Gte { index } => match vals[0] {
+            Value::Tuple(parts) => parts
+                .get(*index)
+                .cloned()
+                .ok_or_else(|| anyhow!("tuple index {index} out of range")),
+            _ => bail!("get-tuple-element on non-tuple"),
+        },
+        OpStep::Gather { spec } => interp::gather_value(spec, vals[0], vals[1]),
+        OpStep::Unsupported { opcode } => bail!("unsupported opcode {opcode:?}"),
+    }
+}
+
+/// Bitwise output comparison: f32 lanes via `to_bits`, so NaN payloads
+/// and signed zeros count too. Test-only, shared with `interp`'s golden
+/// suite so every golden doubles as a plan-vs-naive identity check.
+#[cfg(test)]
+pub(crate) fn assert_bits_eq(a: &[Value], b: &[Value]) {
+    assert_eq!(a.len(), b.len(), "output arity differs");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        bits_eq_one(x, y, &format!("output {k}"));
+    }
+}
+
+#[cfg(test)]
+fn bits_eq_one(x: &Value, y: &Value, at: &str) {
+    assert_eq!(x.dims(), y.dims(), "{at}: dims differ");
+    match (x, y) {
+        (Value::F32 { data: a, .. }, Value::F32 { data: b, .. }) => {
+            assert_eq!(a.len(), b.len(), "{at}: length differs");
+            for (i, (u, v)) in a.iter().zip(b).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{at}[{i}]: {u} vs {v} differ bitwise");
+            }
+        }
+        (Value::S32 { data: a, .. }, Value::S32 { data: b, .. }) => {
+            assert_eq!(a, b, "{at}: s32 differs")
+        }
+        (Value::Pred { data: a, .. }, Value::Pred { data: b, .. }) => {
+            assert_eq!(a, b, "{at}: pred differs")
+        }
+        (Value::Tuple(a), Value::Tuple(b)) => {
+            assert_eq!(a.len(), b.len(), "{at}: tuple arity differs");
+            for (i, (u, v)) in a.iter().zip(b).enumerate() {
+                bits_eq_one(u, v, &format!("{at}.{i}"));
+            }
+        }
+        _ => panic!("{at}: dtype differs"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parse_module;
+
+    fn module(params: &[&str], body: &[&str]) -> HloModule {
+        let mut text = String::from("HloModule t\n\n");
+        text.push_str(
+            "%red_add (a: f32[], b: f32[]) -> f32[] {\n  %a = f32[] parameter(0)\n  \
+             %b = f32[] parameter(1)\n  ROOT %r = f32[] add(f32[] %a, f32[] %b)\n}\n\n",
+        );
+        text.push_str(
+            "%red_max (a: f32[], b: f32[]) -> f32[] {\n  %a = f32[] parameter(0)\n  \
+             %b = f32[] parameter(1)\n  ROOT %r = f32[] maximum(f32[] %a, f32[] %b)\n}\n\n",
+        );
+        text.push_str("ENTRY %main () -> f32[] {\n");
+        for p in params {
+            text.push_str("  ");
+            text.push_str(p);
+            text.push('\n');
+        }
+        for b in body {
+            text.push_str("  ");
+            text.push_str(b);
+            text.push('\n');
+        }
+        text.push_str("}\n");
+        parse_module(&text).unwrap()
+    }
+
+    /// Run both engines and demand agreement: same outputs (bitwise) when
+    /// the naive engine succeeds, an error from the planned side too when
+    /// it fails. Returns the naive result either way.
+    fn run_both(params: &[&str], body: &[&str], inputs: &[Value]) -> Result<Vec<Value>> {
+        let m = module(params, body);
+        let naive = crate::hlo::interpret(&m, inputs);
+        let plan = match Plan::build(&m) {
+            Ok(p) => p,
+            Err(e) => {
+                assert!(
+                    naive.is_err(),
+                    "plan build failed but naive engine ran: {e:#}"
+                );
+                return naive;
+            }
+        };
+        let refs: Vec<&Value> = inputs.iter().collect();
+        match (naive, plan.execute(&refs)) {
+            (Ok(a), Ok(b)) => {
+                assert_bits_eq(&a, &b);
+                Ok(a)
+            }
+            (Err(e), Err(_)) => Err(e),
+            (Ok(_), Err(e)) => panic!("planned engine failed where naive succeeded: {e:#}"),
+            (Err(e), Ok(_)) => panic!("planned engine succeeded where naive failed: {e:#}"),
+        }
+    }
+
+    fn f32v(dims: &[usize], data: &[f32]) -> Value {
+        Value::F32 { dims: dims.to_vec(), data: data.to_vec() }
+    }
+
+    fn s32v(dims: &[usize], data: &[i32]) -> Value {
+        Value::S32 { dims: dims.to_vec(), data: data.to_vec() }
+    }
+
+    /// Deterministic pseudo-random f32s (no RNG dependency).
+    fn lcg(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) * 4.0 - 2.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn qdq_chain_fuses_into_one_group_with_hoisted_compare() {
+        // A fake-quant site: divide -> round -> clamp -> multiply with a
+        // scalar enable compare hoisted through the run and a pred splat
+        // broadcast feeding the final select. The whole chain must be ONE
+        // fused group plus the hoisted scalar compare.
+        let params = &["%x = f32[64] parameter(0)"];
+        let body = &[
+            "%s = f32[] constant(0.05)",
+            "%sb = f32[64] broadcast(f32[] %s), dimensions={}",
+            "%d = f32[64] divide(f32[64] %x, f32[64] %sb)",
+            "%r = f32[64] round-nearest-afz(f32[64] %d)",
+            "%lo = f32[] constant(-128)",
+            "%hi = f32[] constant(127)",
+            "%c = f32[64] clamp(f32[] %lo, f32[64] %r, f32[] %hi)",
+            "%q = f32[64] multiply(f32[64] %c, f32[64] %sb)",
+            "%thr = f32[] constant(0)",
+            "%en = pred[] compare(f32[] %s, f32[] %thr), direction=GT",
+            "%enb = pred[64] broadcast(pred[] %en), dimensions={}",
+            "ROOT %out = f32[64] select(pred[64] %enb, f32[64] %q, f32[64] %x)",
+        ];
+        let x = f32v(&[64], &lcg(64, 7));
+        let m = module(params, body);
+        let plan = Plan::build(&m).unwrap();
+        assert_eq!(plan.n_fused_groups(), 1, "QDQ chain should be one fused group");
+        // fused group + hoisted scalar compare = 2 steps
+        assert_eq!(plan.n_steps(), 2, "expected [hoisted compare, fused group]");
+        run_both(params, body, &[x]).unwrap();
+    }
+
+    #[test]
+    fn broadcast_patterns_match_naive() {
+        // row (Mod), column (Div), splat, and a non-fusable middle-dims
+        // map that must fall back to a plain step — all bit-identical.
+        run_both(
+            &["%r = f32[3] parameter(0)", "%x = f32[2,3] parameter(1)"],
+            &[
+                "%b = f32[2,3] broadcast(f32[3] %r), dimensions={1}",
+                "ROOT %o = f32[2,3] add(f32[2,3] %x, f32[2,3] %b)",
+            ],
+            &[f32v(&[3], &lcg(3, 1)), f32v(&[2, 3], &lcg(6, 2))],
+        )
+        .unwrap();
+        run_both(
+            &["%c = f32[2] parameter(0)", "%x = f32[2,3] parameter(1)"],
+            &[
+                "%b = f32[2,3] broadcast(f32[2] %c), dimensions={0}",
+                "ROOT %o = f32[2,3] multiply(f32[2,3] %x, f32[2,3] %b)",
+            ],
+            &[f32v(&[2], &lcg(2, 3)), f32v(&[2, 3], &lcg(6, 4))],
+        )
+        .unwrap();
+        run_both(
+            &["%s = f32[] parameter(0)", "%x = f32[2,3] parameter(1)"],
+            &[
+                "%b = f32[2,3] broadcast(f32[] %s), dimensions={}",
+                "ROOT %o = f32[2,3] subtract(f32[2,3] %x, f32[2,3] %b)",
+            ],
+            &[f32v(&[], &[0.5]), f32v(&[2, 3], &lcg(6, 5))],
+        )
+        .unwrap();
+        run_both(
+            &["%m = f32[3,4] parameter(0)", "%x = f32[2,3,4] parameter(1)"],
+            &[
+                "%b = f32[2,3,4] broadcast(f32[3,4] %m), dimensions={1,2}",
+                "ROOT %o = f32[2,3,4] add(f32[2,3,4] %x, f32[2,3,4] %b)",
+            ],
+            &[f32v(&[3, 4], &lcg(12, 6)), f32v(&[2, 3, 4], &lcg(24, 7))],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn fused_intermediate_consumed_outside_group_is_stored() {
+        // %a is consumed both inside the fused run (by %b) and by the
+        // root tuple — the store-externality rule must materialise it.
+        let out = run_both(
+            &["%x = f32[8] parameter(0)"],
+            &[
+                "%a = f32[8] exp(f32[8] %x)",
+                "%b = f32[8] add(f32[8] %a, f32[8] %x)",
+                "ROOT %t = (f32[8], f32[8]) tuple(f32[8] %a, f32[8] %b)",
+            ],
+            &[f32v(&[8], &lcg(8, 11))],
+        )
+        .unwrap();
+        assert_eq!(out.len(), 2);
+        let a = out[0].f32s().unwrap();
+        let b = out[1].f32s().unwrap();
+        for i in 0..8 {
+            assert!((a[i] - b[i]).abs() > 0.0 || a[i] == b[i]);
+        }
+    }
+
+    #[test]
+    fn dot_fast_paths_bit_identical_to_naive_kernel() {
+        // ikj streaming (Case A), contiguous-slices (Case B) and the
+        // generic layout all agree bitwise with the naive kernel.
+        let a = Value::F32 { dims: vec![4, 9], data: lcg(36, 21) };
+        let b_kn = Value::F32 { dims: vec![9, 5], data: lcg(45, 22) };
+        let b_nk = Value::F32 { dims: vec![5, 9], data: lcg(45, 23) };
+        // Case A: lhs [M,K] x rhs [K,N], contracting {1}x{0}
+        let naive = interp::dot_general(&a, &b_kn, &[], &[], &[1], &[0]).unwrap();
+        let fast = interp::dot_general_fast(&a, &b_kn, &[], &[], &[1], &[0]).unwrap();
+        assert_bits_eq(&[naive], &[fast]);
+        // Case B: lhs [M,K] x rhs [N,K], contracting {1}x{1}
+        let naive = interp::dot_general(&a, &b_nk, &[], &[], &[1], &[1]).unwrap();
+        let fast = interp::dot_general_fast(&a, &b_nk, &[], &[], &[1], &[1]).unwrap();
+        assert_bits_eq(&[naive], &[fast]);
+        // generic: transposed lhs [K,M], contracting {0}x{0}
+        let at = Value::F32 { dims: vec![9, 4], data: lcg(36, 24) };
+        let naive = interp::dot_general(&at, &b_kn, &[], &[], &[0], &[0]).unwrap();
+        let fast = interp::dot_general_fast(&at, &b_kn, &[], &[], &[0], &[0]).unwrap();
+        assert_bits_eq(&[naive], &[fast]);
+        // batched Case A: [B,M,K] x [B,K,N]
+        let ab = Value::F32 { dims: vec![2, 3, 7], data: lcg(42, 25) };
+        let bb = Value::F32 { dims: vec![2, 7, 4], data: lcg(56, 26) };
+        let naive = interp::dot_general(&ab, &bb, &[0], &[0], &[2], &[1]).unwrap();
+        let fast = interp::dot_general_fast(&ab, &bb, &[0], &[0], &[2], &[1]).unwrap();
+        assert_bits_eq(&[naive], &[fast]);
+        // degenerate K=1 (fixed_stride returns None -> generic path)
+        let a1 = Value::F32 { dims: vec![3, 1], data: lcg(3, 27) };
+        let b1 = Value::F32 { dims: vec![1, 2], data: lcg(2, 28) };
+        let naive = interp::dot_general(&a1, &b1, &[], &[], &[1], &[0]).unwrap();
+        let fast = interp::dot_general_fast(&a1, &b1, &[], &[], &[1], &[0]).unwrap();
+        assert_bits_eq(&[naive], &[fast]);
+    }
+
+    #[test]
+    fn dot_inside_plan_matches_naive_end_to_end() {
+        run_both(
+            &["%a = f32[4,9] parameter(0)", "%b = f32[9,5] parameter(1)"],
+            &[
+                "%d = f32[4,5] dot(f32[4,9] %a, f32[9,5] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+                "ROOT %o = f32[4,5] tanh(f32[4,5] %d)",
+            ],
+            &[
+                Value::F32 { dims: vec![4, 9], data: lcg(36, 31) },
+                Value::F32 { dims: vec![9, 5], data: lcg(45, 32) },
+            ],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn nan_compare_directions_fused_and_plain() {
+        // NaN makes every direction false except NE (XLA float compare);
+        // pred outputs of a fused group are stored exactly.
+        let x = f32v(&[4], &[1.0, f32::NAN, 3.0, f32::NAN]);
+        let y = f32v(&[4], &[1.0, 2.0, f32::NAN, f32::NAN]);
+        let out = run_both(
+            &["%x = f32[4] parameter(0)", "%y = f32[4] parameter(1)"],
+            &[
+                "%eq = pred[4] compare(f32[4] %x, f32[4] %y), direction=EQ",
+                "%ne = pred[4] compare(f32[4] %x, f32[4] %y), direction=NE",
+                "%lt = pred[4] compare(f32[4] %x, f32[4] %y), direction=LT",
+                "%ge = pred[4] compare(f32[4] %x, f32[4] %y), direction=GE",
+                "ROOT %t = (pred[4], pred[4], pred[4], pred[4]) tuple(pred[4] %eq, pred[4] %ne, pred[4] %lt, pred[4] %ge)",
+            ],
+            &[x, y],
+        )
+        .unwrap();
+        assert_eq!(out[0].preds().unwrap(), &[true, false, false, false]);
+        assert_eq!(out[1].preds().unwrap(), &[false, true, true, true]);
+        assert_eq!(out[2].preds().unwrap(), &[false, false, false, false]);
+        assert_eq!(out[3].preds().unwrap(), &[true, false, false, false]);
+    }
+
+    #[test]
+    fn nan_propagates_through_select_and_clamp() {
+        let x = f32v(&[4], &[f32::NAN, -5.0, 0.5, 9.0]);
+        let out = run_both(
+            &["%x = f32[4] parameter(0)"],
+            &[
+                "%lo = f32[] constant(-1)",
+                "%hi = f32[] constant(1)",
+                "%c = f32[4] clamp(f32[] %lo, f32[4] %x, f32[] %hi)",
+                "%z = f32[] constant(0)",
+                "%zb = f32[4] broadcast(f32[] %z), dimensions={}",
+                "%p = pred[4] compare(f32[4] %x, f32[4] %zb), direction=GT",
+                "ROOT %s = f32[4] select(pred[4] %p, f32[4] %x, f32[4] %c)",
+            ],
+            &[x],
+        )
+        .unwrap();
+        let got = out[0].f32s().unwrap();
+        // NaN > 0 is false -> select picks the clamped branch; clamp of
+        // NaN under max/min keeps the bound chain's result.
+        assert_eq!(got[1], -1.0);
+        assert_eq!(got[2], 0.5);
+        assert_eq!(got[3], 1.0);
+    }
+
+    #[test]
+    fn s32_ops_stay_plain_and_divide_errors_are_loud() {
+        let out = run_both(
+            &["%a = s32[3] parameter(0)", "%b = s32[3] parameter(1)"],
+            &["ROOT %d = s32[3] divide(s32[3] %a, s32[3] %b)"],
+            &[s32v(&[3], &[9, -8, 7]), s32v(&[3], &[3, 2, -1])],
+        )
+        .unwrap();
+        assert_eq!(out[0].i32s().unwrap(), &[3, -4, -7]);
+        // division by zero: an error from BOTH engines, not an abort
+        let err = run_both(
+            &["%a = s32[1] parameter(0)", "%b = s32[1] parameter(1)"],
+            &["ROOT %d = s32[1] divide(s32[1] %a, s32[1] %b)"],
+            &[s32v(&[1], &[5]), s32v(&[1], &[0])],
+        );
+        assert!(err.is_err());
+        // i32::MIN / -1 overflows: also an error, not an abort
+        let err = run_both(
+            &["%a = s32[1] parameter(0)", "%b = s32[1] parameter(1)"],
+            &["ROOT %d = s32[1] divide(s32[1] %a, s32[1] %b)"],
+            &[s32v(&[1], &[i32::MIN]), s32v(&[1], &[-1])],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn softmax_composed_matches_naive_with_nan_row() {
+        // softmax(x) over the last axis built from primitives, with one
+        // row poisoned by NaN: both engines must agree bitwise and the
+        // poisoned row must come out all-NaN (0/0 at the divide).
+        let params = &["%x = f32[2,4] parameter(0)"];
+        let body = &[
+            "%init_max = f32[] constant(-3.402823e38)",
+            "%mx = f32[2] reduce(f32[2,4] %x, f32[] %init_max), dimensions={1}, to_apply=%red_max",
+            "%mxb = f32[2,4] broadcast(f32[2] %mx), dimensions={0}",
+            "%sh = f32[2,4] subtract(f32[2,4] %x, f32[2,4] %mxb)",
+            "%e = f32[2,4] exp(f32[2,4] %sh)",
+            "%zero = f32[] constant(0)",
+            "%sum = f32[2] reduce(f32[2,4] %e, f32[] %zero), dimensions={1}, to_apply=%red_add",
+            "%sumb = f32[2,4] broadcast(f32[2] %sum), dimensions={0}",
+            "ROOT %sm = f32[2,4] divide(f32[2,4] %e, f32[2,4] %sumb)",
+        ];
+        let clean = f32v(&[2, 4], &[0.1, 0.2, 0.3, 0.4, 1.0, 2.0, 3.0, 4.0]);
+        let out = run_both(params, body, &[clean]).unwrap();
+        let sm = out[0].f32s().unwrap();
+        let s0: f32 = sm[..4].iter().sum();
+        assert!((s0 - 1.0).abs() < 1e-5);
+
+        let poisoned = f32v(&[2, 4], &[0.1, f32::NAN, 0.3, 0.4, 1.0, 2.0, 3.0, 4.0]);
+        let out = run_both(params, body, &[poisoned]).unwrap();
+        let sm = out[0].f32s().unwrap();
+        assert!(sm[..4].iter().all(|v| v.is_nan()), "poisoned row must be all-NaN");
+        assert!(sm[4..].iter().all(|v| !v.is_nan()), "clean row stays finite");
+    }
+
+    #[test]
+    fn plain_ops_roundtrip_through_plan() {
+        run_both(
+            &["%x = f32[2,3] parameter(0)"],
+            &[
+                "%t = f32[3,2] transpose(f32[2,3] %x), dimensions={1,0}",
+                "%r = f32[6] reshape(f32[3,2] %t)",
+                "%s = f32[3] slice(f32[6] %r), slice={[0:6:2]}",
+                "%c = f32[9] concatenate(f32[6] %r, f32[3] %s), dimensions={0}",
+                "ROOT %o = f32[9] negate(f32[9] %c)",
+            ],
+            &[f32v(&[2, 3], &lcg(6, 41))],
+        )
+        .unwrap();
+        run_both(
+            &[],
+            &[
+                "%i = s32[2,3] iota(), iota_dimension=1",
+                "ROOT %f = f32[2,3] convert(s32[2,3] %i)",
+            ],
+            &[],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn gather_through_plan_matches_naive() {
+        run_both(
+            &["%tbl = f32[5,3] parameter(0)", "%ids = s32[2] parameter(1)"],
+            &[
+                "ROOT %g = f32[2,3] gather(f32[5,3] %tbl, s32[2] %ids), \
+                 offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, \
+                 index_vector_dim=1, slice_sizes={1,3}",
+            ],
+            &[f32v(&[5, 3], &lcg(15, 51)), s32v(&[2], &[4, 1])],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn malformed_root_tuple_element_rejected_by_both() {
+        // declared tuple element dims disagree with the computed value:
+        // both engines must fail loudly.
+        let err = run_both(
+            &["%x = f32[4] parameter(0)"],
+            &[
+                "%a = f32[4] exp(f32[4] %x)",
+                "ROOT %t = (f32[2]) tuple(f32[4] %a)",
+            ],
+            &[f32v(&[4], &lcg(4, 61))],
+        );
+        assert!(err.is_err(), "mis-declared tuple element must be rejected");
+    }
+
+    #[test]
+    fn reshape_retags_in_place_and_borrowed_params_clone() {
+        // reshape of a dying intermediate takes the in-place path;
+        // reshape of a borrowed parameter must clone. Both bit-match.
+        run_both(
+            &["%x = f32[6] parameter(0)"],
+            &[
+                "%a = f32[6] add(f32[6] %x, f32[6] %x)",
+                "%r = f32[2,3] reshape(f32[6] %a)",
+                "%rx = f32[2,3] reshape(f32[6] %x)",
+                "ROOT %o = f32[2,3] multiply(f32[2,3] %r, f32[2,3] %rx)",
+            ],
+            &[f32v(&[6], &lcg(6, 71))],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn non_tuple_root_and_param_passthrough() {
+        // root is a plain op
+        run_both(
+            &["%x = f32[3] parameter(0)"],
+            &["ROOT %o = f32[3] sqrt(f32[3] %x)"],
+            &[f32v(&[3], &[4.0, 9.0, 16.0])],
+        )
+        .unwrap();
+        // root is a parameter (prefilled slot as output)
+        run_both(
+            &["%x = f32[3] parameter(0)"],
+            &["ROOT %o = f32[3] abs(f32[3] %x)"],
+            &[f32v(&[3], &[-1.0, 2.0, -3.0])],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn liveness_frees_every_intermediate() {
+        // every non-output step slot must appear in exactly one frees
+        // list; outputs in none.
+        let m = module(
+            &["%x = f32[8] parameter(0)"],
+            &[
+                "%a = f32[8] exp(f32[8] %x)",
+                "%s = f32[] constant(0)",
+                "%sb = f32[8] broadcast(f32[] %s), dimensions={}",
+                "%d = f32[2,4] reshape(f32[8] %a)",
+                "%t = f32[4,2] transpose(f32[2,4] %d), dimensions={1,0}",
+                "%r = f32[8] reshape(f32[4,2] %t)",
+                "ROOT %o = f32[8] add(f32[8] %r, f32[8] %sb)",
+            ],
+        );
+        let plan = Plan::build(&m).unwrap();
+        let mut freed: Vec<usize> = plan.steps.iter().flat_map(|s| s.frees.clone()).collect();
+        freed.sort_unstable();
+        let before = freed.len();
+        freed.dedup();
+        assert_eq!(before, freed.len(), "slot freed twice");
+        for o in &plan.outputs {
+            assert!(!freed.contains(&o.slot), "output slot must stay live");
+        }
+        // the plan executes correctly after all that liveness machinery
+        let x = f32v(&[8], &lcg(8, 81));
+        let refs: Vec<&Value> = [&x].to_vec();
+        let got = plan.execute(&refs).unwrap();
+        let want = crate::hlo::interpret(&m, &[x]).unwrap();
+        assert_bits_eq(&want, &got);
+    }
+
+    #[test]
+    fn repeated_output_slot_clones() {
+        let out = run_both(
+            &["%x = f32[2] parameter(0)"],
+            &[
+                "%a = f32[2] exp(f32[2] %x)",
+                "ROOT %t = (f32[2], f32[2]) tuple(f32[2] %a, f32[2] %a)",
+            ],
+            &[f32v(&[2], &[0.0, 1.0])],
+        )
+        .unwrap();
+        assert_bits_eq(&[out[0].clone()], &[out[1].clone()]);
+    }
+}

@@ -21,6 +21,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -104,7 +105,13 @@ pub struct RuntimeStats {
 /// the cache is shared across sweep workers either way.
 pub enum ExecBackend {
     Pjrt(xla::PjRtLoadedExecutable),
-    Interp(hlo::HloModule),
+    Interp {
+        module: hlo::HloModule,
+        /// execution plan built once when the artifact is cached
+        /// (`hlo::plan`); `None` means planning failed and the naive
+        /// engine serves this artifact (the loud safety valve)
+        plan: Option<hlo::Plan>,
+    },
 }
 
 /// A cached, executable artifact.
@@ -117,7 +124,7 @@ impl Executable {
     pub fn backend_name(&self) -> &'static str {
         match self.backend {
             ExecBackend::Pjrt(_) => "pjrt",
-            ExecBackend::Interp(_) => "interpreter",
+            ExecBackend::Interp { .. } => "interpreter",
         }
     }
 }
@@ -129,6 +136,12 @@ pub struct Runtime {
     manifest: Manifest,
     executables: Mutex<BTreeMap<String, Arc<Executable>>>,
     stats: Mutex<RuntimeStats>,
+    /// Force the naive (per-instruction) interpreter even when a plan is
+    /// available. Settable via `TQ_INTERP=naive` or
+    /// [`Runtime::set_naive_interp`]; exists so the bench harness can
+    /// measure the pre-plan baseline in-tree and as an escape hatch if a
+    /// planned execution ever misbehaves in the field.
+    naive_interp: AtomicBool,
 }
 
 impl Runtime {
@@ -138,12 +151,25 @@ impl Runtime {
         let manifest = Manifest::load(&dir)
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let naive = std::env::var("TQ_INTERP").as_deref() == Ok("naive");
         Ok(Runtime {
             client,
             manifest,
             executables: Mutex::new(BTreeMap::new()),
             stats: Mutex::new(RuntimeStats::default()),
+            naive_interp: AtomicBool::new(naive),
         })
+    }
+
+    /// Force (or release) the naive per-instruction interpreter. The
+    /// bench harness uses this to time the pre-plan baseline in the same
+    /// process; `TQ_INTERP=naive` sets it at construction.
+    pub fn set_naive_interp(&self, naive: bool) {
+        self.naive_interp.store(naive, Ordering::Relaxed);
+    }
+
+    fn use_naive_interp(&self) -> bool {
+        self.naive_interp.load(Ordering::Relaxed)
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -193,7 +219,21 @@ impl Runtime {
                     "[runtime] {name}: PJRT compile failed ({pjrt_err}); \
                      falling back to the in-repo HLO interpreter"
                 );
-                ExecBackend::Interp(module)
+                // Plan once here so every execution amortises the pass.
+                // Planning is total for modules the naive engine can run,
+                // so a failure is loud (and leaves the artifact on the
+                // naive engine rather than unusable).
+                let plan = match hlo::Plan::build(&module) {
+                    Ok(p) => Some(p),
+                    Err(plan_err) => {
+                        eprintln!(
+                            "[runtime] {name}: execution planning failed \
+                             ({plan_err:#}); staying on the naive interpreter"
+                        );
+                        None
+                    }
+                };
+                ExecBackend::Interp { module, plan }
             }
         };
         let exe = Executable { name: name.to_string(), backend };
@@ -260,10 +300,10 @@ impl Runtime {
     ///
     /// On the interpreter backend the static literals are converted to
     /// interpreter values once per *call* instead of once per
-    /// *execution*, which removes the literal→value conversion copy of
-    /// the parameter tensors from the per-item path. (The interpreter
-    /// still clones each parameter into its eval env per execution — a
-    /// `Cow`-based env would drop that second copy; see ROADMAP.)
+    /// *execution*, and the preplanned engine's `Cow`-style env borrows
+    /// them per item (`Slot::Ref`), so the shared parameter tensors are
+    /// zero-copy on the per-item path. Per-item timing is aggregated
+    /// locally and merged into the shared stats under one lock per call.
     pub fn run_batch<F>(
         &self,
         name: &str,
@@ -300,7 +340,7 @@ impl Runtime {
                     .collect();
                 pool.run(jobs).into_iter().collect()
             }
-            ExecBackend::Interp(module) => {
+            ExecBackend::Interp { module, plan } => {
                 let shapes = module.entry_param_shapes();
                 if shapes.len() != sig.inputs.len() {
                     bail!(
@@ -324,15 +364,23 @@ impl Runtime {
                     .map(|(i, (lit, shape))| literal_to_value(lit, shape, i))
                     .collect::<Result<_>>()
                     .with_context(|| format!("preparing {name} static inputs"))?;
-                self.stats.lock().expect("runtime stats").input_prep_nanos +=
-                    t0.elapsed().as_nanos() as u64;
+                let statics_prep_nanos = t0.elapsed().as_nanos() as u64;
                 let per_shapes = &shapes[statics.len()..];
                 let sig = &sig;
                 let static_vals = &static_vals;
                 let prep = &prep;
+                // The planned engine borrows the shared statics per item
+                // (Cow env: `Slot::Ref`), so each execution is zero-copy
+                // over the parameter tensors; the naive engine still
+                // clones them into its env.
+                let use_plan: Option<&hlo::Plan> =
+                    if self.use_naive_interp() { None } else { plan.as_ref() };
+                // Per-item timing rides back with each result so the
+                // shared stats mutex is taken once per call, not three
+                // times per item at eval rates.
                 let jobs: Vec<_> = (0..n_items)
                     .map(|i| {
-                        move || -> Result<Vec<Tensor>> {
+                        move || -> Result<(Vec<Tensor>, [u64; 3])> {
                             let t0 = Instant::now();
                             let per_lits = prep(i)?;
                             check_input_count(
@@ -354,22 +402,47 @@ impl Runtime {
                             let t1 = Instant::now();
                             let refs: Vec<&hlo::Value> =
                                 static_vals.iter().chain(per_vals.iter()).collect();
-                            let outs = hlo::interpret_refs(module, &refs)
-                                .with_context(|| format!("interpreting {} item {i}", sig.name))?;
+                            let outs = match use_plan {
+                                Some(p) => p.execute(&refs).with_context(|| {
+                                    format!("interpreting {} item {i} (planned)", sig.name)
+                                })?,
+                                None => {
+                                    hlo::interpret_refs(module, &refs).with_context(|| {
+                                        format!("interpreting {} item {i}", sig.name)
+                                    })?
+                                }
+                            };
                             let t2 = Instant::now();
                             let out = parts_to_tensors(sig, PartsBuf::Values(outs))?;
                             let t3 = Instant::now();
-                            let mut st = self.stats.lock().expect("runtime stats");
-                            st.executions += 1;
-                            st.interpreted += 1;
-                            st.input_prep_nanos += (t1 - t0).as_nanos() as u64;
-                            st.exec_nanos += (t2 - t1).as_nanos() as u64;
-                            st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
-                            Ok(out)
+                            let nanos = [
+                                (t1 - t0).as_nanos() as u64,
+                                (t2 - t1).as_nanos() as u64,
+                                (t3 - t2).as_nanos() as u64,
+                            ];
+                            Ok((out, nanos))
                         }
                     })
                     .collect();
-                pool.run(jobs).into_iter().collect()
+                let results = pool.run(jobs);
+                let mut st = self.stats.lock().expect("runtime stats");
+                st.input_prep_nanos += statics_prep_nanos;
+                let mut out = Vec::with_capacity(results.len());
+                for r in results {
+                    match r {
+                        Ok((tensors, [prep_ns, exec_ns, fetch_ns])) => {
+                            st.executions += 1;
+                            st.interpreted += 1;
+                            st.input_prep_nanos += prep_ns;
+                            st.exec_nanos += exec_ns;
+                            st.output_fetch_nanos += fetch_ns;
+                            out.push(Ok(tensors));
+                        }
+                        Err(e) => out.push(Err(e)),
+                    }
+                }
+                drop(st);
+                out.into_iter().collect()
             }
         }
     }
@@ -403,7 +476,7 @@ impl Runtime {
                     tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
                 (PartsBuf::Literals(parts), false)
             }
-            ExecBackend::Interp(module) => {
+            ExecBackend::Interp { module, plan } => {
                 // Inputs convert (one copy) per call, even for literals a
                 // caller caches across calls — a few hundred KB of memcpy
                 // vs tens of ms of interpreted matmuls per forward, so a
@@ -411,8 +484,15 @@ impl Runtime {
                 // complexity until profiles say otherwise.
                 let inputs = literals_to_values(module, literals)
                     .with_context(|| format!("preparing {name} interpreter inputs"))?;
-                let outs = hlo::interpret(module, &inputs)
-                    .with_context(|| format!("interpreting {name}"))?;
+                let outs = match plan {
+                    Some(p) if !self.use_naive_interp() => {
+                        let refs: Vec<&hlo::Value> = inputs.iter().collect();
+                        p.execute(&refs)
+                            .with_context(|| format!("interpreting {name} (planned)"))?
+                    }
+                    _ => hlo::interpret(module, &inputs)
+                        .with_context(|| format!("interpreting {name}"))?,
+                };
                 (PartsBuf::Values(outs), true)
             }
         };

@@ -9,6 +9,11 @@
 //! pool): a full calibrate → evaluate run must score bit-identically on
 //! a 1-thread and an 8-thread `Ctx` — the in-process equivalent of
 //! `TQ_THREADS=1` vs `TQ_THREADS=8 repro smoke`.
+//!
+//! `planned_engine_matches_naive_across_thread_counts` extends that to
+//! the interpreter engines: the preplanned execution engine (`hlo::plan`)
+//! and the naive per-instruction interpreter must agree bit-for-bit at
+//! every thread count.
 
 use tq::coordinator::calibrate::{calibrate, calibrate_with, CalibCfg};
 use tq::coordinator::sweep::{grid, run_offline, synth_data};
@@ -224,6 +229,60 @@ fn calibrate_eval_is_parallel_deterministic() {
         f64::from_bits(runs[0].1),
         f64::from_bits(runs[1].1)
     );
+}
+
+/// Engine × thread-count bit-identity: the preplanned execution engine
+/// (`hlo::plan`, the default interpreter hot path) must score
+/// bit-identically to the naive per-instruction interpreter at 1 and 8
+/// threads — 4-way equality over calibrate → assemble → evaluate. This is
+/// the determinism half of the plan rework's contract: fusion, liveness,
+/// borrowed-parameter envs, and the dot fast paths may change *when* work
+/// happens, never *what* f32 operations run in what accumulation order.
+#[test]
+fn planned_engine_matches_naive_across_thread_counts() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let mut runs: Vec<(String, Vec<u32>, u64)> = Vec::new();
+    for threads in [1usize, 8] {
+        for naive in [false, true] {
+            let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+                .unwrap()
+                .with_pool(Pool::new(threads));
+            ctx.rt.set_naive_interp(naive);
+            let info = ctx.model_info(&task).unwrap();
+            let params = Params::init(info, 17);
+            let cfg = CalibCfg { num_batches: 4, batch_size: 2, ..Default::default() };
+            let calib = calibrate(&ctx, &task, &params, &cfg).unwrap();
+            let mut range_bits = Vec::new();
+            for tr in calib.trackers.values() {
+                let (lo, hi) = tr.lane_ranges();
+                range_bits.extend(bits(&lo));
+                range_bits.extend(bits(&hi));
+            }
+            let act =
+                assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)
+                    .unwrap();
+            let mut split = tq::data::dev_split(&task, info.config.seq).unwrap();
+            split.examples.truncate(20);
+            let score = eval::evaluate_split(&ctx, &task, &params, &act, &split).unwrap();
+            let label = format!("threads={threads} engine={}", if naive { "naive" } else { "planned" });
+            runs.push((label, range_bits, score.to_bits()));
+        }
+    }
+    let (ref label0, ref ranges0, score0) = runs[0];
+    for (label, ranges, score) in &runs[1..] {
+        assert_eq!(ranges0, ranges, "{label} estimator ranges diverged from {label0}");
+        assert_eq!(
+            score0,
+            *score,
+            "{label} score diverged from {label0}: {} vs {}",
+            f64::from_bits(score0),
+            f64::from_bits(*score)
+        );
+    }
 }
 
 /// PEG with per-group MSE ranges through the real pipeline: calibrate
