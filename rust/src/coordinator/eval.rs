@@ -9,12 +9,11 @@
 
 use anyhow::Result;
 
-use super::Ctx;
+use super::{batch_input_lits, Ctx, EVAL_BATCH};
 use crate::data::{self, Split, TaskKind, TaskSpec};
 use crate::metrics;
 use crate::model::qconfig::ActQuantTensors;
 use crate::model::Params;
-use crate::runtime::{lit_f32, lit_i32};
 
 /// NaN-safe argmax over a logit row. `f32::total_cmp` gives a total
 /// order (NaN sorts above +inf), so a degenerate quantization config
@@ -54,8 +53,8 @@ pub fn evaluate_split(
 ) -> Result<f64> {
     let info = ctx.model_info(task)?;
     let head = ctx.head(task);
-    let artifact = format!("fwd_{head}_b8");
-    let b = 8usize;
+    let b = EVAL_BATCH;
+    let artifact = format!("fwd_{head}_b{b}");
     let seq = info.config.seq;
     let n_sites = info.sites.len();
     let n = split.examples.len();
@@ -76,14 +75,7 @@ pub fn evaluate_split(
         &artifact,
         &static_lits,
         n_batches,
-        |bi| {
-            let batch = data::make_batch(split, bi * b, b, seq);
-            Ok(vec![
-                lit_i32(&batch.ids, &[b, seq])?,
-                lit_i32(&batch.token_type, &[b, seq])?,
-                lit_f32(&batch.mask, &[b, seq])?,
-            ])
-        },
+        |bi| batch_input_lits(&data::make_batch(split, bi * b, b, seq)),
         &ctx.pool,
     )?;
 

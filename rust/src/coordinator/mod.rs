@@ -33,11 +33,16 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::data::{task_spec, TaskKind, TaskSpec};
+use crate::data::{task_spec, Batch, TaskKind, TaskSpec};
 use crate::model::manifest::ModelInfo;
 use crate::model::Params;
-use crate::runtime::{lit_f32, Runtime};
+use crate::runtime::{lit_f32, lit_i32, Runtime};
 use crate::util::pool::Pool;
+
+/// Executable batch capacity of the forward artifacts (`fwd_*_b8`) — the
+/// row count every forward batch is padded to. One constant shared by
+/// eval and the serving layer so both address the same artifacts.
+pub const EVAL_BATCH: usize = 8;
 
 /// Build the static input literals every forward/diag artifact shares, in
 /// signature order: parameter tensors, then activation-quantizer scales,
@@ -59,6 +64,21 @@ pub fn static_input_lits(
     lits.push(lit_f32(zps, &[zps.len()])?);
     lits.push(lit_f32(cfg, &[n_sites, 3])?);
     Ok(lits)
+}
+
+/// Build one forward batch's per-call input literals, in signature order
+/// after the statics: token ids, token types, attention mask. The other
+/// half of the forward-input contract next to [`static_input_lits`] —
+/// dev-set eval and the serving layer assemble batches through this one
+/// builder, which is what makes serve-vs-direct bit-identity structural
+/// (tests/determinism.rs pins it).
+pub fn batch_input_lits(batch: &Batch) -> Result<Vec<xla::Literal>> {
+    let (b, seq) = (batch.batch, batch.seq);
+    Ok(vec![
+        lit_i32(&batch.ids, &[b, seq])?,
+        lit_i32(&batch.token_type, &[b, seq])?,
+        lit_f32(&batch.mask, &[b, seq])?,
+    ])
 }
 
 /// Shared context for all pipeline stages.

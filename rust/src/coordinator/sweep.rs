@@ -47,6 +47,7 @@ use anyhow::{anyhow, bail, Result};
 use super::experiments;
 use super::Ctx;
 use crate::data::TaskSpec;
+use crate::hlo::fixture;
 use crate::model::qconfig::{site_lane_params_pool, SiteCfg};
 use crate::model::Params;
 use crate::quant::estimators::{mse_search_pool, RangeTracker};
@@ -125,9 +126,31 @@ pub struct SweepResult {
     /// granularity (the paper's §4 PEG accounting; 0 for per-tensor) —
     /// the accuracy-vs-overhead axis of the K sweep
     pub peg_overhead: usize,
+    /// `peg_overhead` as a percentage of the reference model's total
+    /// parameter count at this `d` (see [`reference_total_params`]) —
+    /// the paper's "overhead is negligible" claim, made checkable
+    pub peg_overhead_pct: f64,
     /// task dev score ×100 (runtime-backed pass only)
     pub score: Option<f64>,
     pub millis: f64,
+}
+
+/// Total parameter count of the reference fixture architecture at
+/// embedding dim `d` (`d_ff = 2d`, the shipped fixture's ratio). This is
+/// the denominator that puts `peg_overhead` in context: extra PEG
+/// parameters as a fraction of the model they decorate, so the paper's
+/// "overhead is negligible" framing shows up as a number in the table.
+pub fn reference_total_params(d: usize) -> usize {
+    let mut cfg = fixture::base_config();
+    cfg.d = d;
+    cfg.d_ff = 2 * d;
+    fixture::param_spec(&cfg).iter().map(|(_, shape)| shape.iter().product::<usize>()).sum()
+}
+
+/// `overhead` extra parameters as a percentage of
+/// [`reference_total_params`] at embedding dim `d`.
+pub fn overhead_pct(overhead: usize, d: usize) -> f64 {
+    100.0 * overhead as f64 / reference_total_params(d) as f64
 }
 
 /// Map a group count onto the paper's granularities for embedding dim
@@ -261,6 +284,7 @@ pub fn run_config_offline(
     let wq = qdq_tensor_pool(&data.weight, wp, wgrid, inner);
     let weight_mse = wq.mse(&data.weight)?;
 
+    let peg_overhead = granularity_overhead_params(d, &cfg.granularity);
     Ok(SweepResult {
         label: cfg.label(),
         spec_id: String::new(),
@@ -268,7 +292,8 @@ pub fn run_config_offline(
         weight_bits: cfg.weight_bits,
         act_mse,
         weight_mse,
-        peg_overhead: granularity_overhead_params(d, &cfg.granularity),
+        peg_overhead,
+        peg_overhead_pct: overhead_pct(peg_overhead, d),
         score: None,
         millis: t0.elapsed().as_secs_f64() * 1e3,
     })
@@ -349,6 +374,7 @@ pub fn report_json(
             m.insert("act_mse".to_string(), Json::Num(r.act_mse as f64));
             m.insert("weight_mse".to_string(), Json::Num(r.weight_mse as f64));
             m.insert("peg_overhead".to_string(), Json::Num(r.peg_overhead as f64));
+            m.insert("peg_overhead_pct".to_string(), Json::Num(r.peg_overhead_pct));
             if let Some(s) = r.score {
                 m.insert("score".to_string(), Json::Num(s));
             }
@@ -388,12 +414,17 @@ pub fn parse_results(j: &Json) -> Result<BTreeMap<String, SweepResult>> {
             weight_bits: c.get("weight_bits")?.as_usize()? as u32,
             act_mse: c.get("act_mse")?.as_f64()? as f32,
             weight_mse: c.get("weight_mse")?.as_f64()? as f32,
-            // absent in reports written before the overhead column
+            // absent in reports written before the overhead columns
             peg_overhead: c
                 .opt("peg_overhead")
                 .map(|v| v.as_usize())
                 .transpose()?
                 .unwrap_or(0),
+            peg_overhead_pct: c
+                .opt("peg_overhead_pct")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(0.0),
             score: c.opt("score").map(|v| v.as_f64()).transpose()?,
             millis: c.get("millis")?.as_f64()?,
         };
@@ -547,10 +578,11 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
         .zip(&cfgs)
         .map(|(id, cfg)| {
             cached.get(id).cloned().map(|mut r| {
-                // cached rows may predate the overhead column (parsed as
-                // 0) or carry a stale value; it derives from the cell
-                // itself, so stamp it fresh like spec_id on new rows
+                // cached rows may predate the overhead columns (parsed
+                // as 0) or carry stale values; they derive from the cell
+                // itself, so stamp them fresh like spec_id on new rows
                 r.peg_overhead = granularity_overhead_params(d, &cfg.granularity);
+                r.peg_overhead_pct = overhead_pct(r.peg_overhead, d);
                 r
             })
         })
@@ -648,7 +680,7 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
 
     let mut table = Table::new(
         &format!("Quantization sweep ({} configs, {} threads)", results.len(), pool.threads()),
-        &["config", "spec_id", "act MSE", "weight MSE", "overhead", "score", "ms"],
+        &["config", "spec_id", "act MSE", "weight MSE", "overhead", "ovh %", "score", "ms"],
     );
     for r in &results {
         table.row(vec![
@@ -657,6 +689,7 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
             format!("{:.3e}", r.act_mse),
             format!("{:.3e}", r.weight_mse),
             format!("{}", r.peg_overhead),
+            format!("{:.2}", r.peg_overhead_pct),
             r.score.map(fmt_score).unwrap_or_else(|| "-".to_string()),
             format!("{:.1}", r.millis),
         ]);
@@ -810,6 +843,24 @@ mod tests {
         // the overhead column follows the paper's accounting
         assert_eq!(res[0].peg_overhead, 0);
         assert_eq!(res[1].peg_overhead, 6 * 64);
+        // ...and the % column is the same count over the reference
+        // model's total parameters at this d
+        assert_eq!(res[0].peg_overhead_pct, 0.0);
+        let want = 100.0 * (6 * 64) as f64 / reference_total_params(64) as f64;
+        assert!((res[1].peg_overhead_pct - want).abs() < 1e-12);
+        assert!(res[1].peg_overhead_pct > 0.0 && res[1].peg_overhead_pct < 100.0);
+    }
+
+    #[test]
+    fn reference_params_scale_with_d() {
+        // the denominator must grow with the model it normalises against,
+        // keeping the % meaningful across --d settings
+        let small = reference_total_params(64);
+        let big = reference_total_params(128);
+        assert!(small > 0);
+        assert!(big > 2 * small, "{big} !> 2*{small}");
+        // per-embedding overhead (6d) stays a small fraction of the model
+        assert!(overhead_pct(6 * 128, 128) < 5.0);
     }
 
     #[test]
@@ -947,6 +998,7 @@ mod tests {
         assert_eq!(r0.label, res[0].label);
         assert_eq!(r0.score, Some(81.25));
         assert_eq!(r0.act_mse, res[0].act_mse);
+        assert_eq!(r0.peg_overhead_pct, res[0].peg_overhead_pct);
         assert_eq!(cached[&res[1].spec_id].score, None);
         // entries without spec_id (pre-spec reports) are skipped
         let legacy = report_json(
@@ -962,6 +1014,19 @@ mod tests {
     }
 
     #[test]
+    fn parse_tolerates_reports_without_overhead_columns() {
+        // results files written before the overhead / % columns existed
+        // must still load (resume keys off spec_id, not schema version)
+        let text = r#"{"configs": [{"label": "a8w8-pt-current", "spec_id": "id1",
+            "act_bits": 8, "weight_bits": 8, "act_mse": 0.001,
+            "weight_mse": 0.0001, "millis": 1.5}]}"#;
+        let cached = parse_results(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cached["id1"].peg_overhead, 0);
+        assert_eq!(cached["id1"].peg_overhead_pct, 0.0);
+        assert_eq!(cached["id1"].score, None);
+    }
+
+    #[test]
     fn compare_flags_score_and_mse_regressions() {
         let mk = |id: &str, score: Option<f64>, act_mse: f32| SweepResult {
             label: format!("cfg-{id}"),
@@ -971,6 +1036,7 @@ mod tests {
             act_mse,
             weight_mse: 1e-4,
             peg_overhead: 0,
+            peg_overhead_pct: 0.0,
             score,
             millis: 1.0,
         };

@@ -139,6 +139,18 @@ impl GraphBuilder {
         self.unary("rsqrt", a)
     }
 
+    pub fn sqrt(&mut self, a: &Op) -> Op {
+        self.unary("sqrt", a)
+    }
+
+    pub fn log(&mut self, a: &Op) -> Op {
+        self.unary("log", a)
+    }
+
+    pub fn neg(&mut self, a: &Op) -> Op {
+        self.unary("negate", a)
+    }
+
     pub fn round(&mut self, a: &Op) -> Op {
         self.unary("round-nearest-afz", a)
     }
@@ -176,7 +188,52 @@ impl GraphBuilder {
         Ok(op)
     }
 
+    /// Elementwise dtype cast (f32 <-> s32, pred -> f32/s32).
+    pub fn convert(&mut self, a: &Op, dtype: DType) -> Op {
+        let op = self.fresh(dtype, &a.dims);
+        self.push(&op, format!("convert({})", a.as_ref()));
+        op
+    }
+
+    /// `out[..., i, ...] = i` along dimension `along`.
+    pub fn iota(&mut self, dtype: DType, dims: &[usize], along: usize) -> Result<Op> {
+        if along >= dims.len() {
+            bail!("iota dimension {along} out of range for {dims:?}");
+        }
+        let op = self.fresh(dtype, dims);
+        self.push(&op, format!("iota(), iota_dimension={along}"));
+        Ok(op)
+    }
+
     // -- data movement -----------------------------------------------------
+
+    /// Concatenate along `dim`; all other dims must agree.
+    pub fn concatenate(&mut self, parts: &[Op], dim: usize) -> Result<Op> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("concatenate: no operands"))?;
+        if dim >= first.dims.len() {
+            bail!("concatenate dim {dim} out of range for {:?}", first.dims);
+        }
+        let mut out = first.dims.clone();
+        out[dim] = 0;
+        for p in parts {
+            if p.dims.len() != first.dims.len() || p.dtype != first.dtype {
+                bail!("concatenate: rank/dtype mismatch");
+            }
+            for (k, (&a, &b)) in p.dims.iter().zip(&first.dims).enumerate() {
+                if k != dim && a != b {
+                    bail!("concatenate: non-concat dim {k} mismatch: {a} vs {b}");
+                }
+            }
+            out[dim] += p.dims[dim];
+        }
+        let refs: Vec<String> = parts.iter().map(Op::as_ref).collect();
+        let op = self.fresh(first.dtype, &out);
+        self.push(
+            &op,
+            format!("concatenate({}), dimensions={{{dim}}}", refs.join(", ")),
+        );
+        Ok(op)
+    }
 
     pub fn broadcast(&mut self, a: &Op, out_dims: &[usize], map: &[usize]) -> Result<Op> {
         if map.len() != a.dims.len() {

@@ -33,7 +33,7 @@ use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
 /// Additive attention-mask bias (mirrors model.py MASK_BIAS).
-const MASK_BIAS: f32 = -30.0;
+pub(crate) const MASK_BIAS: f32 = -30.0;
 
 /// Architecture of the fixture model.
 #[derive(Debug, Clone)]
@@ -129,7 +129,7 @@ pub fn site_spec(cfg: &FixtureConfig) -> Vec<(String, usize)> {
     sites
 }
 
-fn wq_spec(cfg: &FixtureConfig) -> Vec<String> {
+pub(crate) fn wq_spec(cfg: &FixtureConfig) -> Vec<String> {
     let mut names = vec!["embed.tok".to_string()];
     for i in 0..cfg.layers {
         let p = format!("layer{i}.");
@@ -142,7 +142,7 @@ fn wq_spec(cfg: &FixtureConfig) -> Vec<String> {
     names
 }
 
-fn site_offsets(cfg: &FixtureConfig) -> (Vec<usize>, usize) {
+pub(crate) fn site_offsets(cfg: &FixtureConfig) -> (Vec<usize>, usize) {
     let mut offs = Vec::new();
     let mut total = 0usize;
     for (_, c) in site_spec(cfg) {
@@ -268,24 +268,29 @@ impl SiteQuant {
 
 /// Input/output signature entry for the manifest.
 #[derive(Debug, Clone)]
-struct SigEntry {
-    name: String,
-    shape: Vec<usize>,
-    dtype: &'static str,
+pub(crate) struct SigEntry {
+    pub(crate) name: String,
+    pub(crate) shape: Vec<usize>,
+    pub(crate) dtype: &'static str,
 }
 
-fn sig(name: impl Into<String>, shape: &[usize], dtype: &'static str) -> SigEntry {
+pub(crate) fn sig(name: impl Into<String>, shape: &[usize], dtype: &'static str) -> SigEntry {
     SigEntry { name: name.into(), shape: shape.to_vec(), dtype }
 }
 
-struct Artifact {
-    text: String,
-    inputs: Vec<SigEntry>,
-    outputs: Vec<SigEntry>,
+pub(crate) struct Artifact {
+    pub(crate) text: String,
+    pub(crate) inputs: Vec<SigEntry>,
+    pub(crate) outputs: Vec<SigEntry>,
 }
 
 /// Lower the forward (or diagnostic) graph for `cfg` at batch size `b`.
-fn build_forward(cfg: &FixtureConfig, b: usize, diag: bool, module: &str) -> Result<Artifact> {
+pub(crate) fn build_forward(
+    cfg: &FixtureConfig,
+    b: usize,
+    diag: bool,
+    module: &str,
+) -> Result<Artifact> {
     let (t, d, h) = (cfg.seq, cfg.d, cfg.heads);
     let dh = d / h;
     if dh * h != d {
@@ -628,6 +633,16 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
         }
         let name = format!("diag_{head}_b1");
         jobs.push((name.clone(), build_forward(cfg, 1, true, &name)?));
+        // train-step graphs (forward + backward + Adam) at the batch the
+        // coordinator trains with
+        let regression = *head == "reg";
+        for (kind, qat) in [("fp32", false), ("qat", true)] {
+            let name = format!("train_{kind}_{head}_b16");
+            jobs.push((
+                name.clone(),
+                super::train_graph::build_train_step(cfg, regression, qat, 16, &name)?,
+            ));
+        }
     }
     // parity artifact: the fixture has one lowering, so the "pallas" twin
     // is the same graph (the agreement test then checks interpreter
@@ -847,9 +862,16 @@ mod tests {
         // micro-speed: no checkpoints in the unit test
         generate(&dir, None).unwrap();
         let manifest = crate::model::manifest::Manifest::load(&dir).unwrap();
-        assert!(manifest.artifacts.len() >= 9);
+        assert!(manifest.artifacts.len() >= 13);
         assert!(manifest.artifact("fwd_cls_b8").is_ok());
         assert!(manifest.artifact("diag_reg_b1").is_ok());
+        // train-step artifacts for both heads and both variants
+        for name in
+            ["train_fp32_cls_b16", "train_qat_cls_b16", "train_fp32_reg_b16", "train_qat_reg_b16"]
+        {
+            let art = manifest.artifact(name).unwrap();
+            assert_eq!(art.outputs.last().unwrap().name, "loss", "{name}");
+        }
         assert!(manifest.model("base").is_ok());
         assert!(manifest.model("base_reg").is_ok());
         assert!(manifest.golden_fake_quant.is_some());

@@ -34,6 +34,7 @@ pub mod fixture;
 pub mod interp;
 pub mod parser;
 pub mod plan;
+pub(crate) mod train_graph;
 
 use anyhow::{bail, Result};
 

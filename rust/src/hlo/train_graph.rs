@@ -1,0 +1,1343 @@
+//! Train-step graphs: the fixture forward plus a hand-derived backward
+//! pass and an in-graph Adam update, lowered to the same HLO-text dialect
+//! as the inference artifacts so `coordinator::train` runs end-to-end on
+//! the in-repo interpreter.
+//!
+//! Two variants, matching the signatures `coordinator/train.rs` feeds:
+//!
+//! * `train_fp32_{head}_b16` — plain fine-tuning with the outlier-inducing
+//!   auxiliary loss (DESIGN.md §2) on the last layer's `ffn_out`.
+//! * `train_qat_{head}_b16` — quantization-aware training: every
+//!   activation site carries the runtime-parameterised fake-quant of the
+//!   forward graphs, every `wq` weight is fake-quantised per-tensor, and
+//!   the backward pass applies the straight-through estimator for inputs
+//!   plus the LSQ gradient `(q_c - z) - u·1[in-range]` for the scales.
+//!
+//! The forward emits the *same op sequence* as `fixture::build_forward`,
+//! so with quantizers disabled the train graph's logits are bit-identical
+//! to the inference graph's — pinned in the tests below, together with a
+//! finite-difference check of the analytic gradients (recovered exactly
+//! from the first-step Adam moment output: `g = m' / (1 - β1)`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::builder::{GraphBuilder, Op};
+use super::fixture::{
+    param_spec, sig, site_offsets, site_spec, wq_spec, Artifact, FixtureConfig, SigEntry,
+    MASK_BIAS,
+};
+use super::DType;
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+fn splat_c(g: &mut GraphBuilder, v: f32, dims: &[usize]) -> Result<Op> {
+    let c = g.const_f32(v);
+    g.splat(&c, dims)
+}
+
+fn row_scalar(g: &mut GraphBuilder, row: &Op, j: usize) -> Result<Op> {
+    let c = g.slice(row, &[(0, 1), (j, j + 1)])?;
+    g.reshape(&c, &[])
+}
+
+// ---------------------------------------------------------------------------
+// fake-quant forward/backward (activation sites + weight tensors)
+// ---------------------------------------------------------------------------
+
+/// Saved per-site state for the STE/LSQ backward.
+struct ActTape {
+    channels: usize,
+    zb: Op,
+    u: Op,
+    q: Op,
+    qc: Op,
+    qmin_b: Op,
+    qmax_b: Op,
+    pred_b: Op,
+}
+
+/// Walks the canonical site order (like `fixture::SiteQuant`), emitting
+/// QDQ in QAT mode and collecting per-site scale gradients.
+struct SiteCtx {
+    sites: Vec<(String, usize)>,
+    offsets: Vec<usize>,
+    next: usize,
+    qat: bool,
+    a_s: Option<Op>,
+    a_z: Option<Op>,
+    a_cfg: Option<Op>,
+    tapes: Vec<Option<ActTape>>,
+    grads: Vec<Option<Op>>,
+}
+
+impl SiteCtx {
+    fn idx_of(&self, name: &str) -> Result<usize> {
+        self.sites
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("unknown quant site {name:?}"))
+    }
+
+    fn apply(&mut self, g: &mut GraphBuilder, name: &str, x: &Op) -> Result<Op> {
+        let (want, channels) = self
+            .sites
+            .get(self.next)
+            .cloned()
+            .ok_or_else(|| anyhow!("more quant sites than site_spec entries"))?;
+        if want != name {
+            bail!("site order mismatch: expected {want:?}, got {name:?}");
+        }
+        let offset = self.offsets[self.next];
+        let idx = self.next;
+        self.next += 1;
+        if !self.qat {
+            return Ok(x.clone());
+        }
+        let (a_s, a_z, a_cfg) = (
+            self.a_s.clone().unwrap(),
+            self.a_z.clone().unwrap(),
+            self.a_cfg.clone().unwrap(),
+        );
+        let dims = x.dims.clone();
+        let rank = dims.len();
+        let (sb, zb) = if channels == 1 {
+            let s = g.slice(&a_s, &[(offset, offset + 1)])?;
+            let s0 = g.reshape(&s, &[])?;
+            let z = g.slice(&a_z, &[(offset, offset + 1)])?;
+            let z0 = g.reshape(&z, &[])?;
+            (g.splat(&s0, &dims)?, g.splat(&z0, &dims)?)
+        } else {
+            if dims[rank - 1] != channels {
+                bail!("site {name}: {channels} lanes vs last dim {}", dims[rank - 1]);
+            }
+            let s = g.slice(&a_s, &[(offset, offset + channels)])?;
+            let z = g.slice(&a_z, &[(offset, offset + channels)])?;
+            (
+                g.broadcast(&s, &dims, &[rank - 1])?,
+                g.broadcast(&z, &dims, &[rank - 1])?,
+            )
+        };
+        let row = g.slice(&a_cfg, &[(idx, idx + 1), (0, 3)])?;
+        let qmin = row_scalar(g, &row, 0)?;
+        let qmax = row_scalar(g, &row, 1)?;
+        let enable = row_scalar(g, &row, 2)?;
+        let qmin_b = g.splat(&qmin, &dims)?;
+        let qmax_b = g.splat(&qmax, &dims)?;
+        let u = g.div(x, &sb)?;
+        let r = g.round(&u);
+        let q = g.add(&r, &zb)?;
+        let qc = g.clamp(&qmin_b, &q, &qmax_b);
+        let dq = {
+            let c = g.sub(&qc, &zb)?;
+            g.mul(&c, &sb)?
+        };
+        let half = g.const_f32(0.5);
+        let pred = g.compare("GT", &enable, &half)?;
+        let pred_b = g.splat(&pred, &dims)?;
+        let y = g.select(&pred_b, &dq, x)?;
+        self.tapes[idx] =
+            Some(ActTape { channels, zb, u, q, qc, qmin_b, qmax_b, pred_b });
+        Ok(y)
+    }
+
+    /// STE input gradient + LSQ scale gradient, reduced to the site's
+    /// lanes and stashed for the final concatenation.
+    fn backward(&mut self, g: &mut GraphBuilder, name: &str, dy: &Op) -> Result<Op> {
+        let idx = self.idx_of(name)?;
+        if !self.qat {
+            return Ok(dy.clone());
+        }
+        let t = self.tapes[idx]
+            .take()
+            .ok_or_else(|| anyhow!("site {name:?} backward before forward"))?;
+        let dims = dy.dims.clone();
+        let ones = splat_c(g, 1.0, &dims)?;
+        let zeros = splat_c(g, 0.0, &dims)?;
+        let ge = g.compare("GE", &t.q, &t.qmin_b)?;
+        let mge = g.select(&ge, &ones, &zeros)?;
+        let le = g.compare("LE", &t.q, &t.qmax_b)?;
+        let mle = g.select(&le, &ones, &zeros)?;
+        let mask = g.mul(&mge, &mle)?;
+        let dxm = g.mul(dy, &mask)?;
+        let dx = g.select(&t.pred_b, &dxm, dy)?;
+        // LSQ: in-range rows give round(u) - u, clamped rows qmin/qmax - z
+        let qz = g.sub(&t.qc, &t.zb)?;
+        let um = g.mul(&t.u, &mask)?;
+        let gs = g.sub(&qz, &um)?;
+        let dgs = g.mul(dy, &gs)?;
+        let dse = g.select(&t.pred_b, &dgs, &zeros)?;
+        let rank = dims.len();
+        let grad = if t.channels == 1 {
+            let all: Vec<usize> = (0..rank).collect();
+            let s = g.reduce_add(&dse, &all)?;
+            g.reshape(&s, &[1])?
+        } else {
+            let lead: Vec<usize> = (0..rank - 1).collect();
+            g.reduce_add(&dse, &lead)?
+        };
+        self.grads[idx] = Some(grad);
+        Ok(dx)
+    }
+}
+
+/// Saved per-weight-tensor QDQ state (symmetric, zero-point 0).
+#[derive(Clone)]
+struct WTape {
+    j: usize,
+    sb: Op,
+    u: Op,
+    q: Op,
+    qc: Op,
+    qmin_b: Op,
+    qmax_b: Op,
+    pred_b: Op,
+}
+
+fn wqdq_fwd(
+    g: &mut GraphBuilder,
+    w: &Op,
+    j: usize,
+    w_s: &Op,
+    w_cfg: &Op,
+) -> Result<(Op, WTape)> {
+    let dims = w.dims.clone();
+    let s = g.slice(w_s, &[(j, j + 1)])?;
+    let s0 = g.reshape(&s, &[])?;
+    let sb = g.splat(&s0, &dims)?;
+    let row = g.slice(w_cfg, &[(j, j + 1), (0, 3)])?;
+    let qmin = row_scalar(g, &row, 0)?;
+    let qmax = row_scalar(g, &row, 1)?;
+    let enable = row_scalar(g, &row, 2)?;
+    let qmin_b = g.splat(&qmin, &dims)?;
+    let qmax_b = g.splat(&qmax, &dims)?;
+    let u = g.div(w, &sb)?;
+    let q = g.round(&u);
+    let qc = g.clamp(&qmin_b, &q, &qmax_b);
+    let dq = g.mul(&qc, &sb)?;
+    let half = g.const_f32(0.5);
+    let pred = g.compare("GT", &enable, &half)?;
+    let pred_b = g.splat(&pred, &dims)?;
+    let y = g.select(&pred_b, &dq, w)?;
+    Ok((y, WTape { j, sb, u, q, qc, qmin_b, qmax_b, pred_b }))
+}
+
+// ---------------------------------------------------------------------------
+// gradient accumulation
+// ---------------------------------------------------------------------------
+
+struct GradSink {
+    grads: BTreeMap<String, Op>,
+    wtapes: BTreeMap<String, WTape>,
+    ws_grads: Vec<Option<Op>>,
+}
+
+impl GradSink {
+    fn add(&mut self, g: &mut GraphBuilder, name: &str, grad: Op) -> Result<()> {
+        if let Some(prev) = self.grads.remove(name) {
+            let merged = g.add(&prev, &grad)?;
+            self.grads.insert(name.to_string(), merged);
+        } else {
+            self.grads.insert(name.to_string(), grad);
+        }
+        Ok(())
+    }
+
+    /// Gradient w.r.t. a weight *as used* in the forward: routed through
+    /// the weight QDQ backward in QAT mode (STE + per-tensor LSQ grad).
+    fn weight(&mut self, g: &mut GraphBuilder, name: &str, dwq: Op) -> Result<()> {
+        let Some(t) = self.wtapes.get(name).cloned() else {
+            return self.add(g, name, dwq);
+        };
+        let dims = dwq.dims.clone();
+        let ones = splat_c(g, 1.0, &dims)?;
+        let zeros = splat_c(g, 0.0, &dims)?;
+        let ge = g.compare("GE", &t.q, &t.qmin_b)?;
+        let mge = g.select(&ge, &ones, &zeros)?;
+        let le = g.compare("LE", &t.q, &t.qmax_b)?;
+        let mle = g.select(&le, &ones, &zeros)?;
+        let mask = g.mul(&mge, &mle)?;
+        let dxm = g.mul(&dwq, &mask)?;
+        let dw = g.select(&t.pred_b, &dxm, &dwq)?;
+        let um = g.mul(&t.u, &mask)?;
+        let gs = g.sub(&t.qc, &um)?;
+        let dgs = g.mul(&dwq, &gs)?;
+        let dse = g.select(&t.pred_b, &dgs, &zeros)?;
+        let all: Vec<usize> = (0..dims.len()).collect();
+        let s = g.reduce_add(&dse, &all)?;
+        let sv = g.reshape(&s, &[1])?;
+        let slot = &mut self.ws_grads[t.j];
+        *slot = Some(match slot.take() {
+            Some(prev) => g.add(&prev, &sv)?,
+            None => sv,
+        });
+        self.add(g, name, dw)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// differentiable composites
+// ---------------------------------------------------------------------------
+
+/// LayerNorm emitting the identical op sequence to `builder::layernorm`,
+/// returning what the backward needs (x-hat, broadcast inv-std, gain).
+struct LnTape {
+    norm: Op,
+    invb: Op,
+    gb: Op,
+}
+
+fn ln_fwd(g: &mut GraphBuilder, x: &Op, gain: &Op, bias: &Op) -> Result<(Op, LnTape)> {
+    let rank = x.dims.len();
+    let last = rank - 1;
+    let d = x.dims[last];
+    let keep: Vec<usize> = (0..rank - 1).collect();
+    let sum = g.reduce_add(x, &[last])?;
+    let mean = g.scale(&sum, 1.0 / d as f32)?;
+    let mb = g.broadcast(&mean, &x.dims.clone(), &keep)?;
+    let xc = g.sub(x, &mb)?;
+    let sq = g.mul(&xc, &xc)?;
+    let var_sum = g.reduce_add(&sq, &[last])?;
+    let var = g.scale(&var_sum, 1.0 / d as f32)?;
+    let var_eps = g.offset(&var, 1e-5)?;
+    let inv = g.rsqrt(&var_eps);
+    let invb = g.broadcast(&inv, &x.dims.clone(), &keep)?;
+    let norm = g.mul(&xc, &invb)?;
+    let gb = g.broadcast(gain, &x.dims.clone(), &[last])?;
+    let bb = g.broadcast(bias, &x.dims.clone(), &[last])?;
+    let scaled = g.mul(&norm, &gb)?;
+    let y = g.add(&scaled, &bb)?;
+    Ok((y, LnTape { norm, invb, gb }))
+}
+
+/// dx = σ̂·(dx̂ − mean(dx̂) − x̂·mean(dx̂·x̂)) over the last axis.
+fn ln_bwd(g: &mut GraphBuilder, t: &LnTape, dy: &Op) -> Result<(Op, Op, Op)> {
+    let rank = dy.dims.len();
+    let last = rank - 1;
+    let d = dy.dims[last];
+    let keep: Vec<usize> = (0..last).collect();
+    let dnorm = g.mul(dy, &t.gb)?;
+    let dyn_ = g.mul(dy, &t.norm)?;
+    let dg = g.reduce_add(&dyn_, &keep)?;
+    let db = g.reduce_add(dy, &keep)?;
+    let s1 = g.reduce_add(&dnorm, &[last])?;
+    let m1 = g.scale(&s1, 1.0 / d as f32)?;
+    let m1b = g.broadcast(&m1, &dy.dims.clone(), &keep)?;
+    let dn_n = g.mul(&dnorm, &t.norm)?;
+    let s2 = g.reduce_add(&dn_n, &[last])?;
+    let m2 = g.scale(&s2, 1.0 / d as f32)?;
+    let m2b = g.broadcast(&m2, &dy.dims.clone(), &keep)?;
+    let nm2 = g.mul(&t.norm, &m2b)?;
+    let inner = g.sub(&dnorm, &m1b)?;
+    let inner = g.sub(&inner, &nm2)?;
+    let dx = g.mul(&inner, &t.invb)?;
+    Ok((dx, dg, db))
+}
+
+/// `builder::gelu`'s exact op sequence, also returning tanh(inner).
+fn gelu_fwd(g: &mut GraphBuilder, x: &Op) -> Result<(Op, Op)> {
+    let x2 = g.mul(x, x)?;
+    let x3 = g.mul(&x2, x)?;
+    let c = g.scale(&x3, 0.044715)?;
+    let s = g.add(x, &c)?;
+    let inner = g.scale(&s, 0.797_884_6)?;
+    let t = g.tanh(&inner);
+    let one = g.offset(&t, 1.0)?;
+    let half = g.scale(&one, 0.5)?;
+    let y = g.mul(x, &half)?;
+    Ok((y, t))
+}
+
+/// g'(x) = ½(1+t) + ½x(1−t²)·c·(1+3a·x²), t = tanh(c(x+ax³)).
+fn gelu_bwd(g: &mut GraphBuilder, x: &Op, t: &Op, dy: &Op) -> Result<Op> {
+    let t2 = g.mul(t, t)?;
+    let nt2 = g.scale(&t2, -1.0)?;
+    let om = g.offset(&nt2, 1.0)?;
+    let x2 = g.mul(x, x)?;
+    let poly = {
+        let p = g.scale(&x2, 3.0 * 0.044715)?;
+        g.offset(&p, 1.0)?
+    };
+    let half_term = {
+        let o = g.offset(t, 1.0)?;
+        g.scale(&o, 0.5)?
+    };
+    let term2 = {
+        let a = g.mul(x, &om)?;
+        let b = g.mul(&a, &poly)?;
+        g.scale(&b, 0.5 * 0.797_884_6)?
+    };
+    let deriv = g.add(&half_term, &term2)?;
+    g.mul(dy, &deriv)
+}
+
+/// dS = P ∘ (dP − Σ_last(dP ∘ P)).
+fn softmax_bwd(g: &mut GraphBuilder, probs: &Op, dp: &Op) -> Result<Op> {
+    let rank = dp.dims.len();
+    let last = rank - 1;
+    let keep: Vec<usize> = (0..last).collect();
+    let pd = g.mul(dp, probs)?;
+    let s = g.reduce_add(&pd, &[last])?;
+    let sb = g.broadcast(&s, &dp.dims.clone(), &keep)?;
+    let inner = g.sub(dp, &sb)?;
+    g.mul(probs, &inner)
+}
+
+/// dx = dy·wᵀ, dw = xᵀ·dy, db = Σ_lead dy for `y = x@w + b`.
+fn matmul_bias_bwd(
+    g: &mut GraphBuilder,
+    x: &Op,
+    w: &Op,
+    dy: &Op,
+) -> Result<(Op, Op, Op)> {
+    let rank = dy.dims.len();
+    let lead: Vec<usize> = (0..rank - 1).collect();
+    let dx = g.dot_general(dy, w, &[], &[], &[rank - 1], &[1])?;
+    let dw = g.dot_general(x, dy, &[], &[], &lead, &lead)?;
+    let db = g.reduce_add(dy, &lead)?;
+    Ok((dx, dw, db))
+}
+
+/// `[n, v]` one-hot rows from s32 indices (iota + compare EQ + select —
+/// no scatter needed; the table gradient is then a plain dot).
+fn one_hot(g: &mut GraphBuilder, idx: &Op, v: usize) -> Result<Op> {
+    let n = idx.dims[0];
+    let io = g.iota(DType::F32, &[n, v], 1)?;
+    let f = g.convert(idx, DType::F32);
+    let fb = g.broadcast(&f, &[n, v], &[0])?;
+    let pr = g.compare("EQ", &io, &fb)?;
+    let ones = splat_c(g, 1.0, &[n, v])?;
+    let zeros = splat_c(g, 0.0, &[n, v])?;
+    g.select(&pr, &ones, &zeros)
+}
+
+/// One Adam step: m' = β1·m + (1−β1)g, v' = β2·v + (1−β2)g²,
+/// p' = p − lr·m'/(√v' + ε). Bias correction stays host-side in `lr_eff`.
+fn adam_update(
+    g: &mut GraphBuilder,
+    p: &Op,
+    m: &Op,
+    v: &Op,
+    grad: &Op,
+    lr: &Op,
+) -> Result<(Op, Op, Op)> {
+    let m1 = g.scale(m, ADAM_B1)?;
+    let g1 = g.scale(grad, 1.0 - ADAM_B1)?;
+    let m_new = g.add(&m1, &g1)?;
+    let v1 = g.scale(v, ADAM_B2)?;
+    let g2 = g.mul(grad, grad)?;
+    let g2s = g.scale(&g2, 1.0 - ADAM_B2)?;
+    let v_new = g.add(&v1, &g2s)?;
+    let sq = g.sqrt(&v_new);
+    let denom = g.offset(&sq, ADAM_EPS)?;
+    let lrb = g.splat(lr, &p.dims.clone())?;
+    let num = g.mul(&lrb, &m_new)?;
+    let step = g.div(&num, &denom)?;
+    let p_new = g.sub(p, &step)?;
+    Ok((p_new, m_new, v_new))
+}
+
+// ---------------------------------------------------------------------------
+// the train step
+// ---------------------------------------------------------------------------
+
+/// QAT quantizer-state parameters (scales are trained; zero-points and
+/// cfg rows are fixed inputs).
+struct QState {
+    a_s: Op,
+    msv: Op,
+    vsv: Op,
+    a_z: Op,
+    a_cfg: Op,
+    w_s: Op,
+    mwv: Op,
+    vwv: Op,
+    w_cfg: Op,
+}
+
+struct LayerTape {
+    x_in: Op,
+    qh: Op,
+    kh: Op,
+    vh: Op,
+    probs: Op,
+    probs_q: Op,
+    ctx_q: Op,
+    ln1_tape: LnTape,
+    ln1_q: Op,
+    h_lin: Op,
+    gelu_t: Op,
+    h_q: Op,
+    fo: Op,
+    ln2_tape: LnTape,
+}
+
+/// Lower one train step for `cfg` at batch `b`. Input/output ordering is
+/// the `coordinator/train.rs` contract:
+///
+/// fp32 in:  p…, m…, v…, ids, token_type, mask, labels, lr, aux_λ, aux_t
+/// fp32 out: p'…, m'…, v'…, loss
+/// qat  in:  p…, m…, v…, a_s, m_s, v_s, a_z, a_cfg, w_s, m_w, v_w, w_cfg,
+///           ids, token_type, mask, labels, lr, lr_scales
+/// qat  out: p'…, m'…, v'…, a_s', m_s', v_s', w_s', m_w', v_w', loss
+pub(crate) fn build_train_step(
+    cfg: &FixtureConfig,
+    regression: bool,
+    qat: bool,
+    b: usize,
+    module: &str,
+) -> Result<Artifact> {
+    let (t, d, h) = (cfg.seq, cfg.d, cfg.heads);
+    let dh = d / h;
+    if dh * h != d {
+        bail!("heads {h} must divide d {d}");
+    }
+    let (offsets, total) = site_offsets(cfg);
+    let sites = site_spec(cfg);
+    let n_sites = sites.len();
+    let wq_names = wq_spec(cfg);
+    let n_wq = wq_names.len();
+    let pspec = param_spec(cfg);
+    let np = pspec.len();
+
+    let mut g = GraphBuilder::new(module);
+    let mut inputs: Vec<SigEntry> = Vec::new();
+
+    let mut p: BTreeMap<String, Op> = BTreeMap::new();
+    let mut p_ord = Vec::with_capacity(np);
+    for (name, shape) in &pspec {
+        let op = g.param(DType::F32, shape);
+        inputs.push(sig(format!("param.{name}"), shape, "f32"));
+        p.insert(name.clone(), op.clone());
+        p_ord.push(op);
+    }
+    let mut m_ord = Vec::with_capacity(np);
+    for (name, shape) in &pspec {
+        m_ord.push(g.param(DType::F32, shape));
+        inputs.push(sig(format!("m.{name}"), shape, "f32"));
+    }
+    let mut v_ord = Vec::with_capacity(np);
+    for (name, shape) in &pspec {
+        v_ord.push(g.param(DType::F32, shape));
+        inputs.push(sig(format!("v.{name}"), shape, "f32"));
+    }
+
+    // QAT quantizer state (scales are trained, z / cfg are fixed inputs)
+    let mut qstate: Option<QState> = None;
+    if qat {
+        let a_s = g.param(DType::F32, &[total]);
+        inputs.push(sig("act_scales", &[total], "f32"));
+        let msv = g.param(DType::F32, &[total]);
+        inputs.push(sig("m_scales", &[total], "f32"));
+        let vsv = g.param(DType::F32, &[total]);
+        inputs.push(sig("v_scales", &[total], "f32"));
+        let a_z = g.param(DType::F32, &[total]);
+        inputs.push(sig("act_zps", &[total], "f32"));
+        let a_cfg = g.param(DType::F32, &[n_sites, 3]);
+        inputs.push(sig("act_cfg", &[n_sites, 3], "f32"));
+        let w_s = g.param(DType::F32, &[n_wq]);
+        inputs.push(sig("wq_scales", &[n_wq], "f32"));
+        let mwv = g.param(DType::F32, &[n_wq]);
+        inputs.push(sig("m_wq", &[n_wq], "f32"));
+        let vwv = g.param(DType::F32, &[n_wq]);
+        inputs.push(sig("v_wq", &[n_wq], "f32"));
+        let w_cfg = g.param(DType::F32, &[n_wq, 3]);
+        inputs.push(sig("wq_cfg", &[n_wq, 3], "f32"));
+        qstate = Some(QState { a_s, msv, vsv, a_z, a_cfg, w_s, mwv, vwv, w_cfg });
+    }
+
+    let ids = g.param(DType::S32, &[b, t]);
+    inputs.push(sig("input_ids", &[b, t], "i32"));
+    let tt_in = g.param(DType::S32, &[b, t]);
+    inputs.push(sig("token_type", &[b, t], "i32"));
+    let mask = g.param(DType::F32, &[b, t]);
+    inputs.push(sig("attn_mask", &[b, t], "f32"));
+    let labels = if regression {
+        let l = g.param(DType::F32, &[b]);
+        inputs.push(sig("labels", &[b], "f32"));
+        l
+    } else {
+        let l = g.param(DType::S32, &[b]);
+        inputs.push(sig("labels", &[b], "i32"));
+        l
+    };
+    let lr = g.param(DType::F32, &[]);
+    inputs.push(sig("lr", &[], "f32"));
+    let mut aux_lambda = None;
+    let mut aux_target = None;
+    let mut lr_scales = None;
+    if qat {
+        let l = g.param(DType::F32, &[]);
+        inputs.push(sig("lr_scales", &[], "f32"));
+        lr_scales = Some(l);
+    } else {
+        let l = g.param(DType::F32, &[]);
+        inputs.push(sig("aux_lambda", &[], "f32"));
+        aux_lambda = Some(l);
+        let tg = g.param(DType::F32, &[]);
+        inputs.push(sig("aux_target", &[], "f32"));
+        aux_target = Some(tg);
+    }
+
+    // weight fake-quant (QAT): wq-listed tensors as used by the forward
+    let mut sink = GradSink {
+        grads: BTreeMap::new(),
+        wtapes: BTreeMap::new(),
+        ws_grads: vec![None; n_wq],
+    };
+    let mut used: BTreeMap<String, Op> = p.clone();
+    if let Some(q) = &qstate {
+        for (j, name) in wq_names.iter().enumerate() {
+            let (y, tape) = wqdq_fwd(&mut g, &p[name], j, &q.w_s, &q.w_cfg)?;
+            used.insert(name.clone(), y);
+            sink.wtapes.insert(name.clone(), tape);
+        }
+    }
+
+    let mut sc = SiteCtx {
+        sites,
+        offsets,
+        next: 0,
+        qat,
+        a_s: qstate.as_ref().map(|q| q.a_s.clone()),
+        a_z: qstate.as_ref().map(|q| q.a_z.clone()),
+        a_cfg: qstate.as_ref().map(|q| q.a_cfg.clone()),
+        tapes: (0..n_sites).map(|_| None).collect(),
+        grads: (0..n_sites).map(|_| None).collect(),
+    };
+
+    // -- forward (op-for-op the fixture forward, with intermediates saved)
+    let ids_flat = g.reshape(&ids, &[b * t])?;
+    let tok = g.gather_rows(&used["embed.tok"], &ids_flat)?;
+    let tok3 = g.reshape(&tok, &[b, t, d])?;
+    let pos = g.broadcast(&p["embed.pos"], &[b, t, d], &[1, 2])?;
+    let tt_flat = g.reshape(&tt_in, &[b * t])?;
+    let typ = g.gather_rows(&p["embed.type"], &tt_flat)?;
+    let typ3 = g.reshape(&typ, &[b, t, d])?;
+    let x0 = g.add(&tok3, &pos)?;
+    let x0 = g.add(&x0, &typ3)?;
+    let x0q = sc.apply(&mut g, "embed_sum", &x0)?;
+    let (eln, eln_tape) = ln_fwd(&mut g, &x0q, &p["embed.ln.g"], &p["embed.ln.b"])?;
+    let mut x = sc.apply(&mut g, "embed_ln_out", &eln)?;
+
+    let one = g.const_f32(1.0);
+    let ones_bt = g.splat(&one, &[b, t])?;
+    let inv_mask = g.sub(&ones_bt, &mask)?;
+    let bias2 = g.scale(&inv_mask, MASK_BIAS)?;
+    let bias4 = g.broadcast(&bias2, &[b, h, t, t], &[0, 3])?;
+
+    let heads_of = |g: &mut GraphBuilder, v: &Op| -> Result<Op> {
+        let r = g.reshape(v, &[b, t, h, dh])?;
+        g.transpose(&r, &[0, 2, 1, 3])
+    };
+    let unheads = |g: &mut GraphBuilder, v: &Op| -> Result<Op> {
+        let r = g.transpose(v, &[0, 2, 1, 3])?;
+        g.reshape(&r, &[b, t, d])
+    };
+
+    let mut tapes: Vec<LayerTape> = Vec::with_capacity(cfg.layers);
+    for i in 0..cfg.layers {
+        let pf = format!("layer{i}.");
+        let x_in = x.clone();
+        let wq_l = g.matmul_bias(&x, &used[&format!("{pf}q.w")], &p[&format!("{pf}q.b")])?;
+        let wq_q = sc.apply(&mut g, &format!("{pf}q"), &wq_l)?;
+        let wk_l = g.matmul_bias(&x, &used[&format!("{pf}k.w")], &p[&format!("{pf}k.b")])?;
+        let wk_q = sc.apply(&mut g, &format!("{pf}k"), &wk_l)?;
+        let wv_l = g.matmul_bias(&x, &used[&format!("{pf}v.w")], &p[&format!("{pf}v.b")])?;
+        let wv_q = sc.apply(&mut g, &format!("{pf}v"), &wv_l)?;
+        let qh = heads_of(&mut g, &wq_q)?;
+        let kh = heads_of(&mut g, &wk_q)?;
+        let vh = heads_of(&mut g, &wv_q)?;
+        let scores = g.dot_general(&qh, &kh, &[0, 1], &[0, 1], &[3], &[3])?;
+        let scores = g.scale(&scores, 1.0 / (dh as f32).sqrt())?;
+        let scores = g.add(&scores, &bias4)?;
+        let scores_q = sc.apply(&mut g, &format!("{pf}attn_scores"), &scores)?;
+        let probs = g.softmax(&scores_q)?;
+        let probs_q = sc.apply(&mut g, &format!("{pf}attn_probs"), &probs)?;
+        let ctx = g.dot_general(&probs_q, &vh, &[0, 1], &[0, 1], &[3], &[2])?;
+        let ctx = g.transpose(&ctx, &[0, 2, 1, 3])?;
+        let ctx = g.reshape(&ctx, &[b, t, d])?;
+        let ctx_q = sc.apply(&mut g, &format!("{pf}attn_ctx"), &ctx)?;
+        let ao = g.matmul_bias(
+            &ctx_q,
+            &used[&format!("{pf}attn_out.w")],
+            &p[&format!("{pf}attn_out.b")],
+        )?;
+        let ao_q = sc.apply(&mut g, &format!("{pf}attn_out"), &ao)?;
+        let res1 = g.add(&x, &ao_q)?;
+        let res1_q = sc.apply(&mut g, &format!("{pf}res1_sum"), &res1)?;
+        let (ln1, ln1_tape) =
+            ln_fwd(&mut g, &res1_q, &p[&format!("{pf}ln1.g")], &p[&format!("{pf}ln1.b")])?;
+        let ln1_q = sc.apply(&mut g, &format!("{pf}ln1_out"), &ln1)?;
+        let h_lin = g.matmul_bias(
+            &ln1_q,
+            &used[&format!("{pf}ffn1.w")],
+            &p[&format!("{pf}ffn1.b")],
+        )?;
+        let (h_act, gelu_t) = gelu_fwd(&mut g, &h_lin)?;
+        let h_q = sc.apply(&mut g, &format!("{pf}ffn_hidden"), &h_act)?;
+        let fo = g.matmul_bias(
+            &h_q,
+            &used[&format!("{pf}ffn2.w")],
+            &p[&format!("{pf}ffn2.b")],
+        )?;
+        let fo_q = sc.apply(&mut g, &format!("{pf}ffn_out"), &fo)?;
+        let res2 = g.add(&ln1_q, &fo_q)?;
+        let res2_q = sc.apply(&mut g, &format!("{pf}res2_sum"), &res2)?;
+        let (ln2, ln2_tape) =
+            ln_fwd(&mut g, &res2_q, &p[&format!("{pf}ln2.g")], &p[&format!("{pf}ln2.b")])?;
+        x = sc.apply(&mut g, &format!("{pf}ln2_out"), &ln2)?;
+        tapes.push(LayerTape {
+            x_in,
+            qh,
+            kh,
+            vh,
+            probs,
+            probs_q,
+            ctx_q,
+            ln1_tape,
+            ln1_q,
+            h_lin,
+            gelu_t,
+            h_q,
+            fo,
+            ln2_tape,
+        });
+    }
+
+    let cls_s = g.slice(&x, &[(0, b), (0, 1), (0, d)])?;
+    let cls = g.reshape(&cls_s, &[b, d])?;
+    let pooled_lin = g.matmul_bias(&cls, &used["pool.w"], &p["pool.b"])?;
+    let pooled_t = g.tanh(&pooled_lin);
+    let pooled_q = sc.apply(&mut g, "pooled", &pooled_t)?;
+    let logits_lin = g.matmul_bias(&pooled_q, &used["head.w"], &p["head.b"])?;
+    let logits = sc.apply(&mut g, "head_out", &logits_lin)?;
+    if sc.next != n_sites {
+        bail!("forward quantized {} of {n_sites} sites", sc.next);
+    }
+
+    // -- loss + dL/dlogits
+    let n_out = cfg.n_out;
+    let (task_loss, dlogits) = if regression {
+        let pred = g.reshape(&logits, &[b])?;
+        let diff = g.sub(&pred, &labels)?;
+        let sq = g.mul(&diff, &diff)?;
+        let tot = g.reduce_add(&sq, &[0])?;
+        let loss = g.scale(&tot, 1.0 / b as f32)?;
+        let dpred = g.scale(&diff, 2.0 / b as f32)?;
+        (loss, g.reshape(&dpred, &[b, 1])?)
+    } else {
+        let oh = one_hot(&mut g, &labels, n_out)?;
+        let mx = g.reduce_max(&logits, &[1])?;
+        let mxb = g.broadcast(&mx, &[b, n_out], &[0])?;
+        let zc = g.sub(&logits, &mxb)?;
+        let e = g.exp(&zc);
+        let ssum = g.reduce_add(&e, &[1])?;
+        let lsum = g.log(&ssum);
+        let lsb = g.broadcast(&lsum, &[b, n_out], &[0])?;
+        let logp = g.sub(&zc, &lsb)?;
+        let picked = g.mul(&oh, &logp)?;
+        let rows = g.reduce_add(&picked, &[1])?;
+        let tot = g.reduce_add(&rows, &[0])?;
+        let loss = g.scale(&tot, -1.0 / b as f32)?;
+        let ssb = g.broadcast(&ssum, &[b, n_out], &[0])?;
+        let psm = g.div(&e, &ssb)?;
+        let dlog = g.sub(&psm, &oh)?;
+        (loss, g.scale(&dlog, 1.0 / b as f32)?)
+    };
+
+    // outlier-inducing aux loss on the last layer's ffn_out (fp32 only)
+    let mut aux_dfo: Option<Op> = None;
+    let loss = if let (Some(lam), Some(targ)) = (&aux_lambda, &aux_target) {
+        let kn = cfg.outlier_dims.len().max(1);
+        let iota_d = g.iota(DType::F32, &[d], 0)?;
+        let ones_d = splat_c(&mut g, 1.0, &[d])?;
+        let zeros_d = splat_c(&mut g, 0.0, &[d])?;
+        let mut mask_d = zeros_d.clone();
+        for &k in &cfg.outlier_dims {
+            let kc = g.const_f32(k as f32);
+            let kb = g.splat(&kc, &[d])?;
+            let pr = g.compare("EQ", &iota_d, &kb)?;
+            let onek = g.select(&pr, &ones_d, &zeros_d)?;
+            mask_d = g.add(&mask_d, &onek)?;
+        }
+        let maskb = g.broadcast(&mask_d, &[b, t, d], &[2])?;
+        let targb = g.splat(targ, &[b, t, d])?;
+        let aux_x = &tapes.last().ok_or_else(|| anyhow!("no layers"))?.fo;
+        let dxm = g.sub(aux_x, &targb)?;
+        let xm = g.mul(&dxm, &maskb)?;
+        let sq = g.mul(&xm, &xm)?;
+        let s3 = g.reduce_add(&sq, &[0, 1, 2])?;
+        let mean = g.scale(&s3, 1.0 / (b * t * kn) as f32)?;
+        let aux = g.mul(lam, &mean)?;
+        let coef = g.scale(lam, 2.0 / (b * t * kn) as f32)?;
+        let coefb = g.splat(&coef, &[b, t, d])?;
+        aux_dfo = Some(g.mul(&coefb, &xm)?);
+        g.add(&task_loss, &aux)?
+    } else {
+        task_loss
+    };
+
+    // -- backward
+    let d_logits_lin = sc.backward(&mut g, "head_out", &dlogits)?;
+    let (d_pooled_q, dwh, dbh) = matmul_bias_bwd(&mut g, &pooled_q, &used["head.w"], &d_logits_lin)?;
+    sink.weight(&mut g, "head.w", dwh)?;
+    sink.add(&mut g, "head.b", dbh)?;
+    let d_pooled_t = sc.backward(&mut g, "pooled", &d_pooled_q)?;
+    let d_pooled_lin = {
+        let y2 = g.mul(&pooled_t, &pooled_t)?;
+        let ny2 = g.scale(&y2, -1.0)?;
+        let om = g.offset(&ny2, 1.0)?;
+        g.mul(&d_pooled_t, &om)?
+    };
+    let (d_cls, dwp, dbp) = matmul_bias_bwd(&mut g, &cls, &used["pool.w"], &d_pooled_lin)?;
+    sink.weight(&mut g, "pool.w", dwp)?;
+    sink.add(&mut g, "pool.b", dbp)?;
+    let d_cls3 = g.reshape(&d_cls, &[b, 1, d])?;
+    let mut d_x = if t > 1 {
+        let zrest = splat_c(&mut g, 0.0, &[b, t - 1, d])?;
+        g.concatenate(&[d_cls3, zrest], 1)?
+    } else {
+        d_cls3
+    };
+
+    for (i, tape) in tapes.iter().enumerate().rev() {
+        let pf = format!("layer{i}.");
+        let d_ln2 = sc.backward(&mut g, &format!("{pf}ln2_out"), &d_x)?;
+        let (d_res2q, dg2, db2) = ln_bwd(&mut g, &tape.ln2_tape, &d_ln2)?;
+        sink.add(&mut g, &format!("{pf}ln2.g"), dg2)?;
+        sink.add(&mut g, &format!("{pf}ln2.b"), db2)?;
+        let d_res2 = sc.backward(&mut g, &format!("{pf}res2_sum"), &d_res2q)?;
+        // res2 = ln1_q + fo_q: gradient fans out to both
+        let mut d_fo = sc.backward(&mut g, &format!("{pf}ffn_out"), &d_res2)?;
+        if let Some(aux) = aux_dfo.as_ref().filter(|_| i + 1 == cfg.layers) {
+            d_fo = g.add(&d_fo, aux)?;
+        }
+        let (d_hq, dw2, db2f) =
+            matmul_bias_bwd(&mut g, &tape.h_q, &used[&format!("{pf}ffn2.w")], &d_fo)?;
+        sink.weight(&mut g, &format!("{pf}ffn2.w"), dw2)?;
+        sink.add(&mut g, &format!("{pf}ffn2.b"), db2f)?;
+        let d_hact = sc.backward(&mut g, &format!("{pf}ffn_hidden"), &d_hq)?;
+        let d_hlin = gelu_bwd(&mut g, &tape.h_lin, &tape.gelu_t, &d_hact)?;
+        let (d_ln1q_2, dw1, db1f) =
+            matmul_bias_bwd(&mut g, &tape.ln1_q, &used[&format!("{pf}ffn1.w")], &d_hlin)?;
+        sink.weight(&mut g, &format!("{pf}ffn1.w"), dw1)?;
+        sink.add(&mut g, &format!("{pf}ffn1.b"), db1f)?;
+        let d_ln1q = g.add(&d_res2, &d_ln1q_2)?;
+        let d_ln1 = sc.backward(&mut g, &format!("{pf}ln1_out"), &d_ln1q)?;
+        let (d_res1q, dg1, db1) = ln_bwd(&mut g, &tape.ln1_tape, &d_ln1)?;
+        sink.add(&mut g, &format!("{pf}ln1.g"), dg1)?;
+        sink.add(&mut g, &format!("{pf}ln1.b"), db1)?;
+        let d_res1 = sc.backward(&mut g, &format!("{pf}res1_sum"), &d_res1q)?;
+        let d_ao = sc.backward(&mut g, &format!("{pf}attn_out"), &d_res1)?;
+        let (d_ctxq, dwo, dbo) =
+            matmul_bias_bwd(&mut g, &tape.ctx_q, &used[&format!("{pf}attn_out.w")], &d_ao)?;
+        sink.weight(&mut g, &format!("{pf}attn_out.w"), dwo)?;
+        sink.add(&mut g, &format!("{pf}attn_out.b"), dbo)?;
+        let d_ctxr = sc.backward(&mut g, &format!("{pf}attn_ctx"), &d_ctxq)?;
+        let d_ctx4 = g.reshape(&d_ctxr, &[b, t, h, dh])?;
+        let d_ctx = g.transpose(&d_ctx4, &[0, 2, 1, 3])?;
+        let d_probs_q =
+            g.dot_general(&d_ctx, &tape.vh, &[0, 1], &[0, 1], &[3], &[3])?;
+        let d_vh = g.dot_general(&tape.probs_q, &d_ctx, &[0, 1], &[0, 1], &[2], &[2])?;
+        let d_probs = sc.backward(&mut g, &format!("{pf}attn_probs"), &d_probs_q)?;
+        let d_scores_q = softmax_bwd(&mut g, &tape.probs, &d_probs)?;
+        let d_scores2 = sc.backward(&mut g, &format!("{pf}attn_scores"), &d_scores_q)?;
+        let d_scores0 = g.scale(&d_scores2, 1.0 / (dh as f32).sqrt())?;
+        let d_qh = g.dot_general(&d_scores0, &tape.kh, &[0, 1], &[0, 1], &[3], &[2])?;
+        let d_kh = g.dot_general(&d_scores0, &tape.qh, &[0, 1], &[0, 1], &[2], &[2])?;
+        let d_wqq = unheads(&mut g, &d_qh)?;
+        let d_wkq = unheads(&mut g, &d_kh)?;
+        let d_wvq = unheads(&mut g, &d_vh)?;
+        let mut d_xin = d_res1.clone();
+        for (site, dv, wn, bn) in [
+            ("q", &d_wqq, "q.w", "q.b"),
+            ("k", &d_wkq, "k.w", "k.b"),
+            ("v", &d_wvq, "v.w", "v.b"),
+        ] {
+            let d_lin = sc.backward(&mut g, &format!("{pf}{site}"), dv)?;
+            let (dxp, dw, db) =
+                matmul_bias_bwd(&mut g, &tape.x_in, &used[&format!("{pf}{wn}")], &d_lin)?;
+            sink.weight(&mut g, &format!("{pf}{wn}"), dw)?;
+            sink.add(&mut g, &format!("{pf}{bn}"), db)?;
+            d_xin = g.add(&d_xin, &dxp)?;
+        }
+        d_x = d_xin;
+    }
+
+    // embeddings backward
+    let d_eln = sc.backward(&mut g, "embed_ln_out", &d_x)?;
+    let (d_x0q, dge, dbe) = ln_bwd(&mut g, &eln_tape, &d_eln)?;
+    sink.add(&mut g, "embed.ln.g", dge)?;
+    sink.add(&mut g, "embed.ln.b", dbe)?;
+    let d_x0 = sc.backward(&mut g, "embed_sum", &d_x0q)?;
+    let d_pos = g.reduce_add(&d_x0, &[0])?;
+    sink.add(&mut g, "embed.pos", d_pos)?;
+    let d_flat = g.reshape(&d_x0, &[b * t, d])?;
+    let oh_tok = one_hot(&mut g, &ids_flat, cfg.vocab)?;
+    let d_tok_tbl = g.dot_general(&oh_tok, &d_flat, &[], &[], &[0], &[0])?;
+    sink.weight(&mut g, "embed.tok", d_tok_tbl)?;
+    let oh_typ = one_hot(&mut g, &tt_flat, 2)?;
+    let d_typ_tbl = g.dot_general(&oh_typ, &d_flat, &[], &[], &[0], &[0])?;
+    sink.add(&mut g, "embed.type", d_typ_tbl)?;
+
+    // -- Adam updates & outputs
+    let mut p_out = Vec::with_capacity(np);
+    let mut m_out = Vec::with_capacity(np);
+    let mut v_out = Vec::with_capacity(np);
+    for (i, (name, _)) in pspec.iter().enumerate() {
+        let grad = sink
+            .grads
+            .remove(name)
+            .ok_or_else(|| anyhow!("missing gradient for param {name:?}"))?;
+        let (pn, mn, vn) = adam_update(&mut g, &p_ord[i], &m_ord[i], &v_ord[i], &grad, &lr)?;
+        p_out.push(pn);
+        m_out.push(mn);
+        v_out.push(vn);
+    }
+
+    let mut outputs: Vec<SigEntry> = Vec::new();
+    for (name, shape) in &pspec {
+        outputs.push(sig(format!("out.param.{name}"), shape, "f32"));
+    }
+    for (name, shape) in &pspec {
+        outputs.push(sig(format!("out.m.{name}"), shape, "f32"));
+    }
+    for (name, shape) in &pspec {
+        outputs.push(sig(format!("out.v.{name}"), shape, "f32"));
+    }
+    let mut roots: Vec<Op> = Vec::new();
+    roots.extend(p_out);
+    roots.extend(m_out);
+    roots.extend(v_out);
+
+    if let Some(q) = &qstate {
+        let lr_s = lr_scales.as_ref().expect("qat lr_scales");
+        let parts: Vec<Op> = sc
+            .grads
+            .iter()
+            .enumerate()
+            .map(|(i, o)| o.clone().ok_or_else(|| anyhow!("site {i} grad missing")))
+            .collect::<Result<_>>()?;
+        let gs_all = g.concatenate(&parts, 0)?;
+        let (asn, msn, vsn) =
+            adam_update(&mut g, &q.a_s, &q.msv, &q.vsv, &gs_all, lr_s)?;
+        let wparts: Vec<Op> = sink
+            .ws_grads
+            .iter()
+            .enumerate()
+            .map(|(j, o)| o.clone().ok_or_else(|| anyhow!("wq {j} grad missing")))
+            .collect::<Result<_>>()?;
+        let gw_all = g.concatenate(&wparts, 0)?;
+        let (wsn, mwn, vwn) =
+            adam_update(&mut g, &q.w_s, &q.mwv, &q.vwv, &gw_all, lr_s)?;
+        roots.extend([asn, msn, vsn, wsn, mwn, vwn]);
+        outputs.push(sig("out.act_scales", &[total], "f32"));
+        outputs.push(sig("out.m_scales", &[total], "f32"));
+        outputs.push(sig("out.v_scales", &[total], "f32"));
+        outputs.push(sig("out.wq_scales", &[n_wq], "f32"));
+        outputs.push(sig("out.m_wq", &[n_wq], "f32"));
+        outputs.push(sig("out.v_wq", &[n_wq], "f32"));
+    }
+    roots.push(loss);
+    outputs.push(sig("loss", &[], "f32"));
+
+    Ok(Artifact { text: g.finish(&roots), inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::fixture::{build_forward, model_info};
+    use crate::hlo::{interpret, parse_module, HloModule, Plan, Value};
+    use crate::model::Params;
+
+    fn micro() -> FixtureConfig {
+        FixtureConfig {
+            name: "micro".to_string(),
+            vocab: 8,
+            d: 8,
+            heads: 2,
+            layers: 1,
+            d_ff: 16,
+            seq: 4,
+            n_out: 3,
+            outlier_dims: vec![1],
+        }
+    }
+
+    fn f32v(dims: &[usize], data: Vec<f32>) -> Value {
+        Value::F32 { dims: dims.to_vec(), data }
+    }
+
+    /// Batch tensors shared by every variant: ids cycling the vocab, all
+    /// token-type 0, full attention mask, labels i % n_out (or 0.5·i).
+    fn batch_inputs(cfg: &FixtureConfig, b: usize, regression: bool) -> Vec<Value> {
+        let t = cfg.seq;
+        let ids: Vec<i32> = (0..b * t).map(|i| (i % cfg.vocab) as i32).collect();
+        let mut vals = vec![
+            Value::S32 { dims: vec![b, t], data: ids },
+            Value::S32 { dims: vec![b, t], data: vec![0; b * t] },
+            f32v(&[b, t], vec![1.0; b * t]),
+        ];
+        if regression {
+            vals.push(f32v(&[b], (0..b).map(|i| 0.5 * i as f32).collect()));
+        } else {
+            vals.push(Value::S32 {
+                dims: vec![b],
+                data: (0..b).map(|i| (i % cfg.n_out) as i32).collect(),
+            });
+        }
+        vals
+    }
+
+    /// fp32 train inputs: params + zero moments + batch + lr/aux scalars.
+    fn fp32_inputs(
+        cfg: &FixtureConfig,
+        b: usize,
+        regression: bool,
+        lr: f32,
+        lam: f32,
+        targ: f32,
+    ) -> Vec<Value> {
+        let info = model_info(cfg);
+        let params = Params::init(&info, 42);
+        let mut vals: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| f32v(t.shape(), t.data().to_vec()))
+            .collect();
+        for t in &params.tensors {
+            vals.push(f32v(t.shape(), vec![0.0; t.data().len()]));
+        }
+        for t in &params.tensors {
+            vals.push(f32v(t.shape(), vec![0.0; t.data().len()]));
+        }
+        vals.extend(batch_inputs(cfg, b, regression));
+        vals.push(Value::scalar_f32(lr));
+        vals.push(Value::scalar_f32(lam));
+        vals.push(Value::scalar_f32(targ));
+        vals
+    }
+
+    /// QAT train inputs; `enable` switches every activation/weight
+    /// quantizer on or off via the cfg rows.
+    fn qat_inputs(cfg: &FixtureConfig, b: usize, lr: f32, enable: f32) -> Vec<Value> {
+        let info = model_info(cfg);
+        let params = Params::init(&info, 42);
+        let lanes = info.total_scale_lanes;
+        let n_sites = info.sites.len();
+        let n_wq = info.wq.len();
+        let mut vals: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| f32v(t.shape(), t.data().to_vec()))
+            .collect();
+        for _ in 0..2 {
+            for t in &params.tensors {
+                vals.push(f32v(t.shape(), vec![0.0; t.data().len()]));
+            }
+        }
+        vals.push(f32v(&[lanes], vec![0.05; lanes])); // act_scales
+        vals.push(f32v(&[lanes], vec![0.0; lanes])); // m_scales
+        vals.push(f32v(&[lanes], vec![0.0; lanes])); // v_scales
+        vals.push(f32v(&[lanes], vec![128.0; lanes])); // act_zps
+        let mut acfg = Vec::with_capacity(n_sites * 3);
+        for _ in 0..n_sites {
+            acfg.extend_from_slice(&[0.0, 255.0, enable]);
+        }
+        vals.push(f32v(&[n_sites, 3], acfg));
+        let w_s: Vec<f32> = info
+            .wq
+            .iter()
+            .map(|name| {
+                let i = info.params.iter().position(|p| &p.name == name).unwrap();
+                let amax =
+                    params.tensors[i].data().iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                (amax / 127.0).max(1e-6)
+            })
+            .collect();
+        vals.push(f32v(&[n_wq], w_s));
+        vals.push(f32v(&[n_wq], vec![0.0; n_wq])); // m_wq
+        vals.push(f32v(&[n_wq], vec![0.0; n_wq])); // v_wq
+        let mut wcfg = Vec::with_capacity(n_wq * 3);
+        for _ in 0..n_wq {
+            wcfg.extend_from_slice(&[-127.0, 127.0, enable]);
+        }
+        vals.push(f32v(&[n_wq, 3], wcfg));
+        vals.extend(batch_inputs(cfg, b, false));
+        vals.push(Value::scalar_f32(lr));
+        vals.push(Value::scalar_f32(lr)); // lr_scales
+        vals
+    }
+
+    fn train_module(cfg: &FixtureConfig, regression: bool, qat: bool, b: usize) -> HloModule {
+        let art = build_train_step(cfg, regression, qat, b, "t").unwrap();
+        parse_module(&art.text).unwrap()
+    }
+
+    fn run(m: &HloModule, inputs: &[Value]) -> Vec<Value> {
+        interpret(m, inputs).unwrap()
+    }
+
+    /// Host-f64 cross-entropy of the forward graph's logits — the train
+    /// graph emits the identical forward op sequence, so its loss must
+    /// agree closely.
+    #[test]
+    fn fp32_loss_matches_forward_cross_entropy() {
+        let cfg = micro();
+        let (b, n_out) = (2usize, cfg.n_out);
+        let m = train_module(&cfg, false, false, b);
+        let inputs = fp32_inputs(&cfg, b, false, 0.0, 0.0, 0.0);
+        let out = run(&m, &inputs);
+        let np = param_spec(&cfg).len();
+        assert_eq!(out.len(), 3 * np + 1);
+        let loss = out[3 * np].f32s().unwrap()[0];
+
+        // forward graph at enable=0, same params
+        let fwd = build_forward(&cfg, b, false, "fwd").unwrap();
+        let fm = parse_module(&fwd.text).unwrap();
+        let info = model_info(&cfg);
+        let params = Params::init(&info, 42);
+        let mut fin: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| f32v(t.shape(), t.data().to_vec()))
+            .collect();
+        let lanes = info.total_scale_lanes;
+        fin.push(f32v(&[lanes], vec![1.0; lanes]));
+        fin.push(f32v(&[lanes], vec![0.0; lanes]));
+        let n_sites = info.sites.len();
+        let mut acfg = Vec::new();
+        for _ in 0..n_sites {
+            acfg.extend_from_slice(&[0.0, 255.0, 0.0]);
+        }
+        fin.push(f32v(&[n_sites, 3], acfg));
+        fin.extend(batch_inputs(&cfg, b, false).into_iter().take(3));
+        let fout = run(&fm, &fin);
+        let logits = fout[0].f32s().unwrap();
+        let mut want = 0.0f64;
+        for i in 0..b {
+            let row: Vec<f64> =
+                logits[i * n_out..(i + 1) * n_out].iter().map(|&v| v as f64).collect();
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f64>().ln();
+            want -= row[i % n_out] - lse;
+        }
+        want /= b as f64;
+        assert!(
+            (loss as f64 - want).abs() < 1e-4,
+            "train loss {loss} vs host CE {want}"
+        );
+    }
+
+    /// With lr = 0 the updated params are bit-identical to the inputs
+    /// (p' = p − 0·step), while the moments pick up the gradients.
+    #[test]
+    fn zero_lr_keeps_params_bitwise() {
+        let cfg = micro();
+        let b = 2;
+        let m = train_module(&cfg, false, false, b);
+        let inputs = fp32_inputs(&cfg, b, false, 0.0, 0.0, 0.0);
+        let out = run(&m, &inputs);
+        let np = param_spec(&cfg).len();
+        for i in 0..np {
+            assert_eq!(
+                out[i].f32s().unwrap(),
+                inputs[i].f32s().unwrap(),
+                "param {i} moved at lr=0"
+            );
+        }
+        // at m = 0, m' = (1-β1)·g — some gradient must be nonzero
+        let any_grad = (0..np)
+            .any(|i| out[np + i].f32s().unwrap().iter().any(|&v| v != 0.0));
+        assert!(any_grad, "all first-moment outputs are zero");
+    }
+
+    /// Central-difference check of the analytic gradients. At m = 0 the
+    /// first-moment output is (1−β1)·g, so g = 10·m'. The finite
+    /// difference runs the same train graph at p ± h (loss is computed
+    /// before the update, so lr is irrelevant).
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = micro();
+        let b = 2;
+        let m = train_module(&cfg, false, false, b);
+        let inputs = fp32_inputs(&cfg, b, false, 0.0, 0.0, 0.0);
+        let out = run(&m, &inputs);
+        let pspec = param_spec(&cfg);
+        let np = pspec.len();
+        let probe = [
+            ("head.b", 0usize),
+            ("pool.w", 3),
+            ("layer0.ffn1.w", 5),
+            ("embed.ln.g", 2),
+            ("embed.tok", 10),
+        ];
+        let h = 1e-2f32;
+        for (name, elem) in probe {
+            let pi = pspec.iter().position(|(n, _)| n == name).unwrap();
+            let analytic = out[np + pi].f32s().unwrap()[elem] * 10.0;
+            let loss_at = |delta: f32| -> f64 {
+                let mut shifted = inputs.clone();
+                if let Value::F32 { data, .. } = &mut shifted[pi] {
+                    data[elem] += delta;
+                }
+                run(&m, &shifted)[3 * np].f32s().unwrap()[0] as f64
+            };
+            let fd = ((loss_at(h) - loss_at(-h)) / (2.0 * h as f64)) as f32;
+            let tol = 0.05 * fd.abs().max(analytic.abs()) + 2e-3;
+            assert!(
+                (fd - analytic).abs() < tol,
+                "{name}[{elem}]: fd {fd} vs analytic {analytic}"
+            );
+        }
+    }
+
+    /// The fp32-only auxiliary loss adds λ·mean over the outlier lanes;
+    /// switching λ on must move the loss by a finite, positive amount and
+    /// still produce finite updates.
+    #[test]
+    fn aux_loss_shifts_total_loss() {
+        let cfg = micro();
+        let b = 2;
+        let m = train_module(&cfg, false, false, b);
+        let np = param_spec(&cfg).len();
+        let base = run(&m, &fp32_inputs(&cfg, b, false, 0.01, 0.0, 0.0));
+        let aux = run(&m, &fp32_inputs(&cfg, b, false, 0.01, 0.5, 2.0));
+        let l0 = base[3 * np].f32s().unwrap()[0];
+        let l1 = aux[3 * np].f32s().unwrap()[0];
+        assert!(l0.is_finite() && l1.is_finite());
+        assert!(l1 > l0, "aux loss should add a positive penalty: {l1} vs {l0}");
+        for v in &aux {
+            assert!(v.f32s().unwrap().iter().all(|x| x.is_finite()));
+        }
+    }
+
+    /// Repeated steps on one batch must descend.
+    #[test]
+    fn fp32_training_reduces_loss() {
+        let cfg = micro();
+        let b = 2;
+        let m = train_module(&cfg, false, false, b);
+        let np = param_spec(&cfg).len();
+        let mut inputs = fp32_inputs(&cfg, b, false, 0.001, 0.0, 0.0);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..8 {
+            let out = run(&m, &inputs);
+            last = out[3 * np].f32s().unwrap()[0];
+            first.get_or_insert(last);
+            for (i, v) in out.into_iter().take(3 * np).enumerate() {
+                inputs[i] = v;
+            }
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first,
+            "loss did not decrease over 8 steps: {first} -> {last}"
+        );
+    }
+
+    /// The regression head trains too: finite loss, lr=0 keeps params.
+    #[test]
+    fn regression_variant_runs() {
+        let cfg = micro();
+        let b = 2;
+        let m = train_module(&cfg, true, false, b);
+        let np = param_spec(&cfg).len();
+        let inputs = fp32_inputs(&cfg, b, true, 0.0, 0.0, 0.0);
+        let out = run(&m, &inputs);
+        assert_eq!(out.len(), 3 * np + 1);
+        assert!(out[3 * np].f32s().unwrap()[0].is_finite());
+        assert_eq!(out[0].f32s().unwrap(), inputs[0].f32s().unwrap());
+    }
+
+    /// With every quantizer disabled the QAT graph is bit-identical to
+    /// fp32 (λ = 0): the QDQ select returns its fp32 operand exactly, and
+    /// the zero LSQ gradients leave the scale moments at exactly 0.
+    #[test]
+    fn qat_disabled_is_bitwise_fp32() {
+        let cfg = micro();
+        let b = 2;
+        let info = model_info(&cfg);
+        let np = info.params.len();
+        let fp = run(&train_module(&cfg, false, false, b), &fp32_inputs(&cfg, b, false, 0.01, 0.0, 0.0));
+        let qt = run(&train_module(&cfg, false, true, b), &qat_inputs(&cfg, b, 0.01, 0.0));
+        // p'/m'/v' agree bitwise
+        for i in 0..3 * np {
+            assert_eq!(fp[i].f32s().unwrap(), qt[i].f32s().unwrap(), "slot {i}");
+        }
+        // loss (last output of both) agrees bitwise
+        let lf = fp[3 * np].f32s().unwrap()[0];
+        let lq = qt.last().unwrap().f32s().unwrap()[0];
+        assert_eq!(lf.to_bits(), lq.to_bits(), "loss {lf} vs {lq}");
+        // scale moments stay exactly zero (gradients are hard zeros)
+        let msv = qt[3 * np + 1].f32s().unwrap();
+        let mwv = qt[3 * np + 4].f32s().unwrap();
+        assert!(msv.iter().all(|&v| v == 0.0));
+        assert!(mwv.iter().all(|&v| v == 0.0));
+    }
+
+    /// Enabled quantizers: loss stays finite and the LSQ gradients move
+    /// the learned scales.
+    #[test]
+    fn qat_enabled_trains_scales() {
+        let cfg = micro();
+        let b = 2;
+        let info = model_info(&cfg);
+        let np = info.params.len();
+        let m = train_module(&cfg, false, true, b);
+        let inputs = qat_inputs(&cfg, b, 0.01, 1.0);
+        let out = run(&m, &inputs);
+        assert_eq!(out.len(), 3 * np + 7);
+        for v in &out {
+            assert!(v.f32s().unwrap().iter().all(|x| x.is_finite()));
+        }
+        let loss = out.last().unwrap().f32s().unwrap()[0];
+        assert!(loss.is_finite());
+        let a_s_in = inputs[3 * np].f32s().unwrap();
+        let a_s_out = out[3 * np].f32s().unwrap();
+        assert_eq!(a_s_in.len(), a_s_out.len());
+        assert!(
+            a_s_in.iter().zip(a_s_out).any(|(a, b)| a != b),
+            "no activation scale moved"
+        );
+        let ws_in = inputs[3 * np + 5].f32s().unwrap();
+        let ws_out = out[3 * np + 3].f32s().unwrap();
+        assert!(
+            ws_in.iter().zip(ws_out).any(|(a, b)| a != b),
+            "no weight scale moved"
+        );
+    }
+
+    /// Preplanned execution is bit-identical to the reference interpreter
+    /// on both train variants.
+    #[test]
+    fn plan_matches_interp_on_train_graphs() {
+        let cfg = micro();
+        let b = 2;
+        for (qat, inputs) in [
+            (false, fp32_inputs(&cfg, b, false, 0.01, 0.3, 1.5)),
+            (true, qat_inputs(&cfg, b, 0.01, 1.0)),
+        ] {
+            let art = build_train_step(&cfg, false, qat, b, "t").unwrap();
+            let m = parse_module(&art.text).unwrap();
+            let want = interpret(&m, &inputs).unwrap();
+            let plan = Plan::build(&m).unwrap();
+            let refs: Vec<&Value> = inputs.iter().collect();
+            let got = plan.execute(&refs).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (w, g) in want.iter().zip(&got) {
+                let (w, g) = (w.f32s().unwrap(), g.f32s().unwrap());
+                assert_eq!(w.len(), g.len());
+                for (a, b) in w.iter().zip(g) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "qat={qat}");
+                }
+            }
+        }
+    }
+}

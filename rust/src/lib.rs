@@ -26,6 +26,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod spec;
 pub mod tensor;
 pub mod util;

@@ -23,6 +23,13 @@
 //!                                    (parallel config sweep, resumable by
 //!                                    spec_id; works without artifacts —
 //!                                    see coordinator::sweep)
+//!     repro serve-bench [--task sst2] [--duration-ms 2000] [--qps 100]
+//!                 [--clients 4] [--windows 0,2000] [--cache-caps 2]
+//!                 [--depth 256] [--max-batch 32] [--fail-on-shed]
+//!                                    (closed+open-loop load bench against
+//!                                    the continuous-batching serving layer;
+//!                                    writes results/bench_serve.csv —
+//!                                    see serve::bench)
 //!
 //! Common flags: --artifacts DIR (default artifacts), --ckpt DIR
 //! (default checkpoints), --results DIR (default results).
@@ -61,6 +68,12 @@ fn main() -> Result<()> {
     if args.subcommand == "gen-artifacts" {
         let t0 = std::time::Instant::now();
         tq::hlo::fixture::cmd_gen_artifacts(&args)?;
+        eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
+        return Ok(());
+    }
+    if args.subcommand == "serve-bench" {
+        let t0 = std::time::Instant::now();
+        tq::serve::bench::cmd_serve_bench(&args)?;
         eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
         return Ok(());
     }
@@ -355,7 +368,10 @@ fn print_help() {
          sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
          [--estimators current,mse] [--range-methods auto,mse_group] \
          [--threads N] [--task NAME] [--seeds N] \
-         [--fresh] [--compare baseline.json] [--tolerance PTS]\n\n\
+         [--fresh] [--compare baseline.json] [--tolerance PTS]\n  \
+         serve-bench [--task NAME] [--duration-ms N] [--qps F] \
+         [--clients N] [--windows us,us] [--cache-caps n,m] [--depth N] \
+         [--max-batch N] [--fail-on-shed]\n\n\
          `run` executes one serialized QuantSpec (see DESIGN.md §7); \
          `run --preset NAME --dump-spec > f.json` writes a starting point; \
          `run --preset NAME --explain` prints the resolved per-site policy \

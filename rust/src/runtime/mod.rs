@@ -95,9 +95,18 @@ pub struct RuntimeStats {
     pub executions: u64,
     /// executions served by the HLO interpreter (vs a PJRT executable)
     pub interpreted: u64,
+    /// executions dispatched by the serving layer (`serve::queue`), a
+    /// subset of `executions` — distinguishes online traffic from batch
+    /// jobs in one shared runtime
+    pub served: u64,
     pub exec_nanos: u64,
     pub input_prep_nanos: u64,
     pub output_fetch_nanos: u64,
+    /// serve-layer model-cache counters (`serve::cache` folds its deltas
+    /// in via [`Runtime::note_model_cache`])
+    pub model_cache_hits: u64,
+    pub model_cache_misses: u64,
+    pub model_cache_evictions: u64,
 }
 
 /// How an artifact executes: a compiled PJRT executable, or the parsed
@@ -182,6 +191,16 @@ impl Runtime {
 
     pub fn reset_stats(&self) {
         *self.stats.lock().expect("runtime stats") = RuntimeStats::default();
+    }
+
+    /// Fold serve-layer model-cache counter deltas into the shared stats,
+    /// under the same lock `stats`/`reset_stats` take — so a snapshot
+    /// never observes a half-applied delta.
+    pub fn note_model_cache(&self, hits: u64, misses: u64, evictions: u64) {
+        let mut st = self.stats.lock().expect("runtime stats");
+        st.model_cache_hits += hits;
+        st.model_cache_misses += misses;
+        st.model_cache_evictions += evictions;
     }
 
     /// Compile (or fetch from cache) an artifact's executable. When PJRT
@@ -315,6 +334,39 @@ impl Runtime {
     where
         F: Fn(usize) -> Result<Vec<xla::Literal>> + Sync,
     {
+        self.run_batch_inner(name, statics, n_items, prep, pool, false)
+    }
+
+    /// [`Runtime::run_batch`] for the serving layer: identical execution
+    /// and results, but every item is also attributed to the `served`
+    /// stats counter so online traffic is distinguishable from batch
+    /// jobs sharing this runtime.
+    pub fn run_batch_served<F>(
+        &self,
+        name: &str,
+        statics: &[xla::Literal],
+        n_items: usize,
+        prep: F,
+        pool: &Pool,
+    ) -> Result<Vec<Vec<Tensor>>>
+    where
+        F: Fn(usize) -> Result<Vec<xla::Literal>> + Sync,
+    {
+        self.run_batch_inner(name, statics, n_items, prep, pool, true)
+    }
+
+    fn run_batch_inner<F>(
+        &self,
+        name: &str,
+        statics: &[xla::Literal],
+        n_items: usize,
+        prep: F,
+        pool: &Pool,
+        served: bool,
+    ) -> Result<Vec<Vec<Tensor>>>
+    where
+        F: Fn(usize) -> Result<Vec<xla::Literal>> + Sync,
+    {
         let sig = self.manifest.artifact(name)?.clone();
         // resolve (and, cold, compile/parse) once before fanning out so
         // items never race on the executable cache within one call
@@ -326,19 +378,21 @@ impl Runtime {
                 let prep = &prep;
                 let jobs: Vec<_> = (0..n_items)
                     .map(|i| {
-                        move || -> Result<Vec<Tensor>> {
+                        move || -> Result<(Vec<Tensor>, [u64; 3], bool)> {
                             let t0 = Instant::now();
                             let per = prep(i)?;
                             check_input_count(sig, &sig.name, statics.len() + per.len())?;
-                            self.stats.lock().expect("runtime stats").input_prep_nanos +=
-                                t0.elapsed().as_nanos() as u64;
+                            let prep_ns = t0.elapsed().as_nanos() as u64;
                             let refs: Vec<&xla::Literal> =
                                 statics.iter().chain(per.iter()).collect();
-                            self.execute_artifact(sig, exe, &refs)
+                            let (out, [exec_ns, fetch_ns], interpreted) =
+                                self.execute_artifact_timed(sig, exe, &refs)?;
+                            Ok((out, [prep_ns, exec_ns, fetch_ns], interpreted))
                         }
                     })
                     .collect();
-                pool.run(jobs).into_iter().collect()
+                let results = pool.run(jobs);
+                self.merge_batch_stats(results, served, 0)
             }
             ExecBackend::Interp { module, plan } => {
                 let shapes = module.entry_param_shapes();
@@ -380,7 +434,7 @@ impl Runtime {
                 // times per item at eval rates.
                 let jobs: Vec<_> = (0..n_items)
                     .map(|i| {
-                        move || -> Result<(Vec<Tensor>, [u64; 3])> {
+                        move || -> Result<(Vec<Tensor>, [u64; 3], bool)> {
                             let t0 = Instant::now();
                             let per_lits = prep(i)?;
                             check_input_count(
@@ -420,31 +474,48 @@ impl Runtime {
                                 (t2 - t1).as_nanos() as u64,
                                 (t3 - t2).as_nanos() as u64,
                             ];
-                            Ok((out, nanos))
+                            Ok((out, nanos, true))
                         }
                     })
                     .collect();
                 let results = pool.run(jobs);
-                let mut st = self.stats.lock().expect("runtime stats");
-                st.input_prep_nanos += statics_prep_nanos;
-                let mut out = Vec::with_capacity(results.len());
-                for r in results {
-                    match r {
-                        Ok((tensors, [prep_ns, exec_ns, fetch_ns])) => {
-                            st.executions += 1;
-                            st.interpreted += 1;
-                            st.input_prep_nanos += prep_ns;
-                            st.exec_nanos += exec_ns;
-                            st.output_fetch_nanos += fetch_ns;
-                            out.push(Ok(tensors));
-                        }
-                        Err(e) => out.push(Err(e)),
-                    }
-                }
-                drop(st);
-                out.into_iter().collect()
+                self.merge_batch_stats(results, served, statics_prep_nanos)
             }
         }
+    }
+
+    /// Merge a batch call's per-item results into the shared stats under
+    /// ONE lock acquisition, so `stats`/`reset_stats` snapshots never
+    /// interleave with a half-accounted batch.
+    fn merge_batch_stats(
+        &self,
+        results: Vec<Result<(Vec<Tensor>, [u64; 3], bool)>>,
+        served: bool,
+        statics_prep_nanos: u64,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let mut st = self.stats.lock().expect("runtime stats");
+        st.input_prep_nanos += statics_prep_nanos;
+        let mut out = Vec::with_capacity(results.len());
+        for r in results {
+            match r {
+                Ok((tensors, [prep_ns, exec_ns, fetch_ns], interpreted)) => {
+                    st.executions += 1;
+                    if interpreted {
+                        st.interpreted += 1;
+                    }
+                    if served {
+                        st.served += 1;
+                    }
+                    st.input_prep_nanos += prep_ns;
+                    st.exec_nanos += exec_ns;
+                    st.output_fetch_nanos += fetch_ns;
+                    out.push(Ok(tensors));
+                }
+                Err(e) => out.push(Err(e)),
+            }
+        }
+        drop(st);
+        out.into_iter().collect()
     }
 
     /// The one post-execute path shared by [`Runtime::run`],
@@ -458,6 +529,29 @@ impl Runtime {
         exe: &Executable,
         literals: &[&xla::Literal],
     ) -> Result<Vec<Tensor>> {
+        let (out, [exec_ns, fetch_ns], interpreted) =
+            self.execute_artifact_timed(sig, exe, literals)?;
+        let mut st = self.stats.lock().expect("runtime stats");
+        st.executions += 1;
+        if interpreted {
+            st.interpreted += 1;
+        }
+        st.exec_nanos += exec_ns;
+        st.output_fetch_nanos += fetch_ns;
+        Ok(out)
+    }
+
+    /// [`Runtime::execute_artifact`] minus the accounting: returns the
+    /// output tensors plus `[exec, fetch]` nanos and whether the
+    /// interpreter served the call, without touching the stats mutex —
+    /// batch callers aggregate per-item timings and merge them under one
+    /// lock per call.
+    fn execute_artifact_timed(
+        &self,
+        sig: &ArtifactSig,
+        exe: &Executable,
+        literals: &[&xla::Literal],
+    ) -> Result<(Vec<Tensor>, [u64; 2], bool)> {
         let name = exe.name.as_str();
         let t1 = Instant::now();
         let (parts, interpreted) = match &exe.backend {
@@ -499,14 +593,8 @@ impl Runtime {
         let t2 = Instant::now();
         let out = parts_to_tensors(sig, parts)?;
         let t3 = Instant::now();
-        let mut st = self.stats.lock().expect("runtime stats");
-        st.executions += 1;
-        if interpreted {
-            st.interpreted += 1;
-        }
-        st.exec_nanos += (t2 - t1).as_nanos() as u64;
-        st.output_fetch_nanos += (t3 - t2).as_nanos() as u64;
-        Ok(out)
+        let nanos = [(t2 - t1).as_nanos() as u64, (t3 - t2).as_nanos() as u64];
+        Ok((out, nanos, interpreted))
     }
 }
 

@@ -1,0 +1,375 @@
+//! `repro serve-bench` — closed- and open-loop load generation against
+//! the serving layer.
+//!
+//! * **Closed loop**: N client threads each submit → wait → repeat, so
+//!   concurrency (not rate) is the control variable; measures the
+//!   latency/throughput the engine sustains under back-pressure.
+//! * **Open loop**: a generator submits at a target offered QPS on a
+//!   fixed schedule regardless of completions — the arrival pattern a
+//!   real front end produces — so queueing delay and admission shed
+//!   become visible when offered load exceeds capacity.
+//!
+//! Both replay real task dev-set examples, sweep the dispatcher's
+//! batch-window, and report p50/p95/p99 latency (µs, measured submit →
+//! completion), sustained QPS, the batch-size histogram, and shed rate
+//! per row of `results/bench_serve.csv`. A separate cache section
+//! exercises the spec-addressed model cache at each `--cache-caps`
+//! capacity (two passes over the bench spec set: capacities below the
+//! spec count churn, capacities at/above it hit). `--fail-on-shed`
+//! makes any shed row fatal — the CI smoke gate.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::cache::{ModelCache, ServeModel};
+use super::queue::{ServeConfig, Server, SubmitError};
+use crate::coordinator::Ctx;
+use crate::data::{dev_split, Example, TaskSpec};
+use crate::report::{write_file, Table};
+use crate::runtime::Runtime;
+use crate::spec::{PolicySpec, QuantSpec};
+use crate::util::cli::Args;
+use crate::util::pool::Pool;
+
+/// One load run's raw outcome.
+struct LoadResult {
+    completed: u64,
+    shed: u64,
+    wall: Duration,
+    /// sorted submit→completion latencies of successful requests, µs
+    latencies_us: Vec<u64>,
+    hist: String,
+}
+
+/// Nearest-rank percentile over a sorted sample (0 when empty).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| Ok(t.parse()?))
+        .collect()
+}
+
+fn parse_u64_list(s: &str) -> Result<Vec<u64>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| Ok(t.parse()?))
+        .collect()
+}
+
+/// The bench's spec set: fp32 pass-through plus two PTQ configs, all
+/// with a deliberately small calibration budget (assembly cost is what
+/// the cache sweep measures, not accuracy).
+fn bench_specs(task: &TaskSpec) -> Vec<QuantSpec> {
+    let mut specs = vec![
+        QuantSpec::new("fp32", PolicySpec::fp32()),
+        QuantSpec::new("w8a8", PolicySpec::uniform(8, 8)),
+        QuantSpec::new("w4a8", PolicySpec::uniform(4, 8)),
+    ];
+    for s in &mut specs {
+        s.tasks = vec![task.name.to_string()];
+        s.seeds = 1;
+        s.calib.num_batches = 2;
+        s.calib.batch_size = 2;
+    }
+    specs
+}
+
+/// Closed loop: `clients` threads in lock-step submit → wait → repeat
+/// until the deadline, then the server drains.
+fn run_closed(
+    rt: &Runtime,
+    pool: &Pool,
+    model: Arc<ServeModel>,
+    cfg: ServeConfig,
+    clients: usize,
+    duration: Duration,
+    examples: &[Example],
+) -> LoadResult {
+    std::thread::scope(|s| {
+        let server = Server::start(s, rt, pool, model, cfg);
+        let lat = Mutex::new(Vec::<u64>::new());
+        let t0 = Instant::now();
+        std::thread::scope(|cs| {
+            for c in 0..clients {
+                let server = &server;
+                let lat = &lat;
+                cs.spawn(move || {
+                    let mut i = c;
+                    while t0.elapsed() < duration {
+                        match server.submit(examples[i % examples.len()].clone()) {
+                            Ok(ticket) => {
+                                let (res, latency) = ticket.wait_timed();
+                                if res.is_ok() {
+                                    lat.lock()
+                                        .expect("bench latencies")
+                                        .push(latency.as_micros() as u64);
+                                }
+                            }
+                            Err(SubmitError::QueueFull { .. }) => {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(_) => break,
+                        }
+                        i += clients;
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown();
+        let wall = t0.elapsed();
+        let mut lats = lat.into_inner().expect("bench latencies");
+        lats.sort_unstable();
+        LoadResult {
+            completed: stats.completed,
+            shed: stats.shed,
+            wall,
+            latencies_us: lats,
+            hist: stats.hist_string(),
+        }
+    })
+}
+
+/// Open loop: submit on a fixed `1/qps` schedule until the deadline
+/// (sheds allowed), drain, then collect the completion-time latencies
+/// recorded in each ticket.
+fn run_open(
+    rt: &Runtime,
+    pool: &Pool,
+    model: Arc<ServeModel>,
+    cfg: ServeConfig,
+    qps: f64,
+    duration: Duration,
+    examples: &[Example],
+) -> LoadResult {
+    std::thread::scope(|s| {
+        let server = Server::start(s, rt, pool, model, cfg);
+        let interval = Duration::from_secs_f64(1.0 / qps.max(1e-9));
+        let t0 = Instant::now();
+        let mut next = t0;
+        let mut tickets = Vec::new();
+        let mut i = 0usize;
+        while t0.elapsed() < duration {
+            let now = Instant::now();
+            if now < next {
+                std::thread::sleep(next - now);
+            }
+            match server.submit(examples[i % examples.len()].clone()) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::QueueFull { .. }) => {}
+                Err(_) => break,
+            }
+            i += 1;
+            next += interval;
+        }
+        let stats = server.shutdown();
+        let wall = t0.elapsed();
+        // every ticket completed during the drain; latency was stamped
+        // at completion, so collecting late does not skew it
+        let mut lats: Vec<u64> = tickets
+            .into_iter()
+            .filter_map(|t| {
+                let (res, latency) = t.wait_timed();
+                res.ok().map(|_| latency.as_micros() as u64)
+            })
+            .collect();
+        lats.sort_unstable();
+        LoadResult {
+            completed: stats.completed,
+            shed: stats.shed,
+            wall,
+            latencies_us: lats,
+            hist: stats.hist_string(),
+        }
+    })
+}
+
+const CSV_HEADER: [&str; 17] = [
+    "mode",
+    "window_us",
+    "cache_cap",
+    "clients",
+    "offered_qps",
+    "duration_ms",
+    "completed",
+    "shed",
+    "shed_rate",
+    "sustained_qps",
+    "p50_us",
+    "p95_us",
+    "p99_us",
+    "batch_hist",
+    "cache_hits",
+    "cache_misses",
+    "cache_evictions",
+];
+
+/// `repro serve-bench` entry point.
+pub fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(
+        args.get_or("artifacts", "artifacts"),
+        args.get_or("ckpt", "checkpoints"),
+        args.get_or("results", "results"),
+    )?;
+    let task = ctx.task(args.get_or("task", "sst2"))?;
+    let duration = Duration::from_millis(args.get_u64("duration-ms", 2000)?);
+    let qps = f64::from(args.get_f32("qps", 100.0)?);
+    let clients = args.get_usize("clients", 4)?.max(1);
+    let depth = args.get_usize("depth", 256)?;
+    let max_batch = args.get_usize("max-batch", 32)?;
+    let windows_us = parse_u64_list(args.get_or("windows", "0,2000"))?;
+    let caps = parse_usize_list(args.get_or("cache-caps", "2"))?;
+    let fail_on_shed = args.flag("fail-on-shed");
+    if windows_us.is_empty() {
+        bail!("--windows needs at least one batch-window setting (µs)");
+    }
+
+    let info = ctx.model_info(&task)?;
+    let mut split = dev_split(&task, info.config.seq)?;
+    split.examples.truncate(args.get_usize("examples", 256)?.max(1));
+    let examples = split.examples;
+    let specs = bench_specs(&task);
+
+    let mut table = Table::new("serve-bench", &CSV_HEADER);
+
+    // Model-cache sweep: two passes over the spec set per capacity.
+    // Below the spec count the second pass still misses (LRU churn);
+    // at/above it, it hits every spec.
+    for &cap in &caps {
+        let cache = ModelCache::new(cap);
+        for _pass in 0..2 {
+            for spec in &specs {
+                cache.get_or_assemble(&ctx, spec, &task)?;
+            }
+        }
+        let st = cache.stats();
+        println!(
+            "cache cap {cap}: {} hits / {} misses / {} evictions over 2 passes of {} specs",
+            st.hits,
+            st.misses,
+            st.evictions,
+            specs.len()
+        );
+        let mut row = vec!["cache".to_string(), "-".to_string(), cap.to_string()];
+        row.extend(vec!["-".to_string(); 11]);
+        row.extend([st.hits.to_string(), st.misses.to_string(), st.evictions.to_string()]);
+        table.row(row);
+    }
+
+    // Serving sweep: the quantized spec from a warm cache, per window.
+    let cache = ModelCache::new(caps.iter().copied().max().unwrap_or(2));
+    let model = cache.get_or_assemble(&ctx, &specs[1], &task)?;
+    let mut total_shed = 0u64;
+    for &window in &windows_us {
+        let cfg = ServeConfig {
+            max_batch,
+            batch_window: Duration::from_micros(window),
+            queue_depth: depth,
+        };
+        for mode in ["closed", "open"] {
+            let r = if mode == "closed" {
+                run_closed(
+                    &ctx.rt,
+                    &ctx.pool,
+                    model.clone(),
+                    cfg.clone(),
+                    clients,
+                    duration,
+                    &examples,
+                )
+            } else {
+                run_open(&ctx.rt, &ctx.pool, model.clone(), cfg.clone(), qps, duration, &examples)
+            };
+            let offered = r.completed + r.shed;
+            let shed_rate =
+                if offered == 0 { 0.0 } else { r.shed as f64 / offered as f64 };
+            let sustained = r.completed as f64 / r.wall.as_secs_f64().max(1e-9);
+            total_shed += r.shed;
+            println!(
+                "{mode} window={window}us: {} ok, {} shed, {sustained:.1} qps sustained, \
+                 p50={}us p95={}us p99={}us, batches {}",
+                r.completed,
+                r.shed,
+                percentile(&r.latencies_us, 0.50),
+                percentile(&r.latencies_us, 0.95),
+                percentile(&r.latencies_us, 0.99),
+                r.hist
+            );
+            table.row(vec![
+                mode.to_string(),
+                window.to_string(),
+                cache.capacity().to_string(),
+                if mode == "closed" { clients.to_string() } else { "1".to_string() },
+                if mode == "open" { format!("{qps:.0}") } else { "-".to_string() },
+                duration.as_millis().to_string(),
+                r.completed.to_string(),
+                r.shed.to_string(),
+                format!("{shed_rate:.4}"),
+                format!("{sustained:.1}"),
+                percentile(&r.latencies_us, 0.50).to_string(),
+                percentile(&r.latencies_us, 0.95).to_string(),
+                percentile(&r.latencies_us, 0.99).to_string(),
+                r.hist,
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+        }
+    }
+
+    print!("{}", table.to_console());
+    let results_dir = PathBuf::from(args.get_or("results", "results"));
+    write_file(results_dir.join("bench_serve.csv"), &table.to_csv())?;
+
+    let st = ctx.rt.stats();
+    println!(
+        "runtime: {} executions ({} served, {} interpreted); model cache \
+         {} hits / {} misses / {} evictions",
+        st.executions,
+        st.served,
+        st.interpreted,
+        st.model_cache_hits,
+        st.model_cache_misses,
+        st.model_cache_evictions
+    );
+    if fail_on_shed && total_shed > 0 {
+        bail!("serve-bench shed {total_shed} request(s) at smoke load (--fail-on-shed)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.99), 0);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&xs, 0.0), 1);
+        // nearest-rank: (99 * 0.5).round() = 50 -> xs[50] = 51
+        assert_eq!(percentile(&xs, 0.50), 51);
+        assert_eq!(percentile(&xs, 0.99), 99);
+        assert_eq!(percentile(&xs, 1.0), 100);
+    }
+
+    #[test]
+    fn list_parsing() {
+        assert_eq!(parse_u64_list("0,2000").unwrap(), vec![0, 2000]);
+        assert_eq!(parse_usize_list(" 1, 2 ,3 ").unwrap(), vec![1, 2, 3]);
+        assert!(parse_u64_list("1,x").is_err());
+    }
+}

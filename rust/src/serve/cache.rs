@@ -1,0 +1,279 @@
+//! Spec-addressed model cache: `spec_id` → fully assembled serving
+//! artifact, with LRU eviction under a capacity knob.
+//!
+//! A cache entry ([`ServeModel`]) is everything a dispatched batch needs
+//! beyond its per-batch inputs: the QDQ'd parameters and calibrated
+//! activation quantizers from `spec::run::assemble_for_serving`,
+//! pre-rendered into the static input literals, with the forward
+//! executable warmed in the runtime's own cache (parse + `hlo::Plan`).
+//! Assembly is the expensive path (checkpoint load + calibration +
+//! weight QDQ), so the cache is what makes multi-spec serving viable.
+//!
+//! Hit/miss/eviction counters are kept per cache (for tests and the
+//! bench report) and folded into the shared `RuntimeStats` via
+//! `Runtime::note_model_cache` on every `get_or_build`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::{static_input_lits, Ctx};
+use crate::data::TaskSpec;
+use crate::runtime::Runtime;
+use crate::spec::run::{assemble_for_serving, AssembledModel};
+use crate::spec::QuantSpec;
+
+/// A cached, ready-to-dispatch model: the assembled artifact plus its
+/// static input literals, built once at insert time and shared by every
+/// batch the dispatcher executes against it.
+pub struct ServeModel {
+    pub assembled: AssembledModel,
+    /// parameter + activation-quantizer literals in signature order
+    /// (`coordinator::static_input_lits`)
+    pub statics: Vec<xla::Literal>,
+}
+
+impl ServeModel {
+    /// Assemble a spec for serving and pre-build its runtime state: the
+    /// static input literals, and the executable warmed in the runtime
+    /// cache so the first request never pays for parse + plan.
+    pub fn build(ctx: &Ctx, spec: &QuantSpec, task: &TaskSpec) -> Result<ServeModel> {
+        let assembled = assemble_for_serving(ctx, spec, task)?;
+        ctx.rt.executable(&assembled.artifact)?;
+        ServeModel::from_assembled(assembled)
+    }
+
+    /// Wrap an already-assembled model. Tests use this to feed the cache
+    /// and dispatcher without the checkpoint-loading assembly path.
+    pub fn from_assembled(assembled: AssembledModel) -> Result<ServeModel> {
+        let statics = static_input_lits(
+            &assembled.params,
+            &assembled.act.scales,
+            &assembled.act.zps,
+            &assembled.act.cfg,
+            assembled.n_sites,
+        )?;
+        Ok(ServeModel { assembled, statics })
+    }
+
+    pub fn spec_id(&self) -> &str {
+        &self.assembled.spec_id
+    }
+}
+
+/// Cache counters. `hits + misses` equals the number of lookups;
+/// `evictions` counts entries displaced by inserts at capacity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct CacheInner {
+    map: BTreeMap<String, Arc<ServeModel>>,
+    /// spec_ids in recency order: index 0 is least recently used
+    order: Vec<String>,
+    stats: CacheStats,
+}
+
+/// The spec-addressed LRU cache. All methods take `&self`; the interior
+/// mutex makes it shareable between the dispatcher and warm-up callers.
+pub struct ModelCache {
+    cap: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl ModelCache {
+    /// A cache holding at most `capacity` models (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> ModelCache {
+        ModelCache {
+            cap: capacity.max(1),
+            inner: Mutex::new(CacheInner {
+                map: BTreeMap::new(),
+                order: Vec::new(),
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("model cache").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().expect("model cache").stats
+    }
+
+    /// Resident spec_ids, least recently used first.
+    pub fn resident(&self) -> Vec<String> {
+        self.inner.lock().expect("model cache").order.clone()
+    }
+
+    /// Look up a spec_id: a hit refreshes its recency, a miss only
+    /// counts. (Callers wanting the build-on-miss path use
+    /// [`ModelCache::get_or_build`].)
+    pub fn lookup(&self, spec_id: &str) -> Option<Arc<ServeModel>> {
+        let mut inner = self.inner.lock().expect("model cache");
+        match inner.map.get(spec_id).cloned() {
+            Some(m) => {
+                inner.stats.hits += 1;
+                touch(&mut inner.order, spec_id);
+                Some(m)
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a model, evicting the least-recently-used
+    /// entry when a new key arrives at capacity. Returns the evicted
+    /// spec_id, if any.
+    pub fn insert(&self, model: Arc<ServeModel>) -> Option<String> {
+        let id = model.spec_id().to_string();
+        let mut inner = self.inner.lock().expect("model cache");
+        let mut evicted = None;
+        if !inner.map.contains_key(&id) && inner.map.len() >= self.cap {
+            let lru = inner.order.remove(0);
+            inner.map.remove(&lru);
+            inner.stats.evictions += 1;
+            evicted = Some(lru);
+        }
+        inner.map.insert(id.clone(), model);
+        touch(&mut inner.order, &id);
+        evicted
+    }
+
+    /// The serving-path entry: return the cached model for `spec_id` or
+    /// build and insert it. The counter delta (one hit, or one miss plus
+    /// at most one eviction) is folded into the runtime's shared stats.
+    pub fn get_or_build<F>(
+        &self,
+        rt: &Runtime,
+        spec_id: &str,
+        build: F,
+    ) -> Result<Arc<ServeModel>>
+    where
+        F: FnOnce() -> Result<ServeModel>,
+    {
+        if let Some(m) = self.lookup(spec_id) {
+            rt.note_model_cache(1, 0, 0);
+            return Ok(m);
+        }
+        let model = Arc::new(build()?);
+        let evicted = self.insert(model.clone());
+        rt.note_model_cache(0, 1, u64::from(evicted.is_some()));
+        Ok(model)
+    }
+
+    /// [`ModelCache::get_or_build`] over the standard assembly pipeline.
+    pub fn get_or_assemble(
+        &self,
+        ctx: &Ctx,
+        spec: &QuantSpec,
+        task: &TaskSpec,
+    ) -> Result<Arc<ServeModel>> {
+        self.get_or_build(&ctx.rt, &spec.spec_id(), || ServeModel::build(ctx, spec, task))
+    }
+
+    /// Warm-up preloading: assemble `specs` in order so steady-state
+    /// traffic starts hot. With more specs than capacity, the last
+    /// `capacity` of them survive (LRU).
+    pub fn warm_up(&self, ctx: &Ctx, specs: &[QuantSpec], task: &TaskSpec) -> Result<()> {
+        for spec in specs {
+            self.get_or_assemble(ctx, spec, task)?;
+        }
+        Ok(())
+    }
+}
+
+/// Move `id` to the most-recently-used position (appending if absent).
+fn touch(order: &mut Vec<String>, id: &str) {
+    if let Some(i) = order.iter().position(|x| x == id) {
+        order.remove(i);
+    }
+    order.push(id.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_model_info;
+    use crate::model::qconfig::assemble_act_tensors;
+    use crate::model::Params;
+    use crate::quant::QuantPolicy;
+
+    /// A ServeModel with real tensors but no artifacts/checkpoints behind
+    /// it — enough for cache-policy tests.
+    fn dummy_model(spec_id: &str) -> Arc<ServeModel> {
+        let info = tiny_model_info();
+        let params = Params::init(&info, 7);
+        let act = assemble_act_tensors(&info, &QuantPolicy::fp32(), &BTreeMap::new()).unwrap();
+        let assembled = AssembledModel {
+            spec_id: spec_id.to_string(),
+            task: "sst2".to_string(),
+            artifact: "fwd_cls_b8".to_string(),
+            params,
+            act,
+            batch: 8,
+            seq: info.config.seq,
+            n_out: info.config.n_out,
+            n_sites: info.sites.len(),
+        };
+        Arc::new(ServeModel::from_assembled(assembled).unwrap())
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cache = ModelCache::new(2);
+        assert!(cache.is_empty());
+        assert!(cache.insert(dummy_model("a")).is_none());
+        assert!(cache.insert(dummy_model("b")).is_none());
+        // touch "a" so "b" becomes the LRU entry
+        assert!(cache.lookup("a").is_some());
+        let evicted = cache.insert(dummy_model("c"));
+        assert_eq!(evicted.as_deref(), Some("b"));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup("b").is_none());
+        assert!(cache.lookup("a").is_some());
+        assert!(cache.lookup("c").is_some());
+        assert_eq!(cache.resident(), vec!["a".to_string(), "c".to_string()]);
+        let st = cache.stats();
+        assert_eq!(st.hits, 3);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_evicting() {
+        let cache = ModelCache::new(2);
+        cache.insert(dummy_model("a"));
+        cache.insert(dummy_model("b"));
+        // refreshing a resident key must not evict anything
+        assert!(cache.insert(dummy_model("a")).is_none());
+        assert_eq!(cache.len(), 2);
+        // ...but it does move "a" to MRU: inserting "c" now evicts "b"
+        assert_eq!(cache.insert(dummy_model("c")).as_deref(), Some("b"));
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn capacity_clamps_to_one() {
+        let cache = ModelCache::new(0);
+        assert_eq!(cache.capacity(), 1);
+        cache.insert(dummy_model("a"));
+        assert_eq!(cache.insert(dummy_model("b")).as_deref(), Some("a"));
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! `serve` — the quantized-inference serving layer (DESIGN.md §12).
+//!
+//! Turns the batch-job engine (`Runtime::run_batch` on the persistent
+//! `util::pool` workers) into an online server:
+//!
+//! * [`queue`] — async request queue with continuous batching: callers
+//!   submit single examples and block on a [`queue::Ticket`]; a
+//!   dispatcher thread coalesces queued requests under a configurable
+//!   batch-window (max wait) and max-batch-size, fans the coalesced set
+//!   out over the pool as padded executable batches, and routes each
+//!   logit row back to its submitter by index. Admission is bounded:
+//!   past the configured queue depth, submissions shed with an explicit
+//!   error instead of growing without bound, and shutdown drains every
+//!   admitted request exactly once.
+//! * [`cache`] — spec-addressed model cache: `spec_id` → fully assembled
+//!   artifact (checkpoint + weight QDQ + calibrated activation
+//!   quantizers + pre-built static input literals, with the executable's
+//!   `hlo::Plan` warmed in the runtime cache). LRU eviction under a
+//!   capacity knob, warm-up preloading, and hit/miss/eviction counters
+//!   folded into `RuntimeStats`.
+//! * [`bench`] — `repro serve-bench`: closed- and open-loop load
+//!   generation over real task examples, reporting p50/p95/p99 latency,
+//!   sustained QPS, batch-size histogram, and shed rate per
+//!   batch-window and cache-capacity setting.
+//!
+//! Re-batching preserves bit-identity with direct `run_batch` calls:
+//! the forward graphs never reduce over the batch dimension (every op
+//! is per-row there), batches are assembled by the same
+//! `coordinator::batch_input_lits` builder with the same PAD-row
+//! padding, and each real row's math is therefore independent of which
+//! batch it rode in — the property tests/determinism.rs pins.
+
+pub mod bench;
+pub mod cache;
+pub mod queue;
+
+pub use cache::{CacheStats, ModelCache, ServeModel};
+pub use queue::{ServeConfig, ServeStats, Server, SubmitError, Ticket};

@@ -1,0 +1,501 @@
+//! Async request queue with continuous batching.
+//!
+//! Callers [`Server::submit`] single examples and block on the returned
+//! [`Ticket`]. A dedicated dispatcher thread coalesces queued requests
+//! under the batch-window/max-batch policy in [`ServeConfig`], assembles
+//! them into PAD-padded executable batches with the same
+//! `coordinator::batch_input_lits` + `data::make_batch` builders the
+//! batch-eval path uses, executes them via `Runtime::run_batch_served`
+//! on the persistent `util::pool` workers, and routes each logit row
+//! back to its submitter by index.
+//!
+//! Admission control is a bounded queue: past `queue_depth`
+//! undispatched requests, submissions fail fast with
+//! [`SubmitError::QueueFull`] (counted as shed) instead of growing the
+//! queue without bound. Shutdown is a graceful drain: the flag stops
+//! admission, the dispatcher flushes everything already admitted
+//! (skipping further batch-window waits), and every ticket is answered
+//! exactly once — completion slots only accept the first result.
+//!
+//! The dispatcher runs as a *scoped* thread (`std::thread::scope`), so
+//! it can borrow the runtime and pool directly from the caller's stack —
+//! no `Arc<Runtime>` rework of the coordinator — at the price that a
+//! `Server` lives inside a `thread::scope` block. Dropping the server
+//! performs the same drain as [`Server::shutdown`].
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::cache::ServeModel;
+use crate::coordinator::batch_input_lits;
+use crate::data::{self, Example, Split};
+use crate::runtime::Runtime;
+use crate::util::pool::Pool;
+
+/// Batching and admission policy for one [`Server`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max examples coalesced into one dispatch. May exceed the
+    /// executable batch capacity: the dispatcher splits a coalesced set
+    /// of `k` requests into `ceil(k/b)` padded executable batches and
+    /// fans them out over the pool in one `run_batch_served` call.
+    pub max_batch: usize,
+    /// Batch window: once the queue is non-empty, how long the
+    /// dispatcher waits for more arrivals before dispatching a partial
+    /// batch. Zero dispatches whatever is queued immediately.
+    pub batch_window: Duration,
+    /// Admission bound: submissions beyond this many queued,
+    /// not-yet-dispatched requests shed with [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 32,
+            batch_window: Duration::from_micros(200),
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Why a submission was rejected at the door.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control: the queue is at its configured depth; the
+    /// request was shed, not enqueued.
+    QueueFull { depth: usize },
+    /// The server is draining (shutdown started) — nothing new admitted.
+    ShuttingDown,
+    /// The example's rows are not packed at the model's sequence length.
+    BadShape { want_seq: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth } => {
+                write!(f, "request shed: serve queue at depth {depth}")
+            }
+            SubmitError::ShuttingDown => write!(f, "serve queue is shutting down"),
+            SubmitError::BadShape { want_seq } => {
+                write!(f, "example must be packed at seq length {want_seq}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Counters for one server, snapshot via [`Server::stats`] (or returned
+/// by [`Server::shutdown`], at which point `accepted == completed +
+/// failed` — the drain guarantee).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// requests admitted to the queue
+    pub accepted: u64,
+    /// requests rejected by admission control (`QueueFull`)
+    pub shed: u64,
+    /// requests answered with a logit row
+    pub completed: u64,
+    /// requests answered with an execution error
+    pub failed: u64,
+    /// `batches[s]` = executable batches dispatched with `s` real rows
+    /// (index 0 unused); the batch-size histogram of the bench report
+    pub batches: Vec<u64>,
+}
+
+impl ServeStats {
+    pub fn dispatched_batches(&self) -> u64 {
+        self.batches.iter().sum()
+    }
+
+    /// Histogram as `"1:12|3:2|8:40"` (fill-size:count, zero counts
+    /// omitted); `"-"` when nothing was dispatched.
+    pub fn hist_string(&self) -> String {
+        let parts: Vec<String> = self
+            .batches
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(s, c)| format!("{s}:{c}"))
+            .collect();
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join("|")
+        }
+    }
+}
+
+/// One request's completion slot: result + queue-to-completion latency,
+/// written exactly once by the dispatcher.
+struct TicketState {
+    submitted: Instant,
+    done: Mutex<Option<(Result<Vec<f32>, String>, Duration)>>,
+    cv: Condvar,
+}
+
+impl TicketState {
+    fn new() -> TicketState {
+        TicketState {
+            submitted: Instant::now(),
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deliver a result. Only the first delivery lands (the
+    /// answered-exactly-once guarantee); later calls are no-ops.
+    fn complete(&self, result: Result<Vec<f32>, String>) {
+        let latency = self.submitted.elapsed();
+        let mut slot = self.done.lock().expect("serve ticket");
+        if slot.is_none() {
+            *slot = Some((result, latency));
+        }
+        drop(slot);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to one submitted request; consume it to block for the logits.
+pub struct Ticket(Arc<TicketState>);
+
+impl Ticket {
+    /// Block until the dispatcher answers: the example's logit row.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.wait_timed().0
+    }
+
+    /// [`Ticket::wait`] plus the submit-to-completion latency, measured
+    /// at completion time (not at this call) so slow consumers don't
+    /// inflate the bench percentiles.
+    pub fn wait_timed(self) -> (Result<Vec<f32>>, Duration) {
+        let mut slot = self.0.done.lock().expect("serve ticket");
+        loop {
+            if let Some((r, latency)) = slot.take() {
+                return (r.map_err(|e| anyhow!("serve: {e}")), latency);
+            }
+            slot = self.0.cv.wait(slot).expect("serve ticket");
+        }
+    }
+}
+
+struct Pending {
+    example: Example,
+    ticket: Arc<TicketState>,
+}
+
+struct QueueState {
+    pending: VecDeque<Pending>,
+    shutdown: bool,
+    accepted: u64,
+    shed: u64,
+    completed: u64,
+    failed: u64,
+    batches: Vec<u64>,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    state: Mutex<QueueState>,
+    /// signalled on submit and on shutdown
+    work: Condvar,
+}
+
+/// The serving front end: submission API plus the scoped dispatcher
+/// thread. Create inside a `std::thread::scope` via [`Server::start`].
+pub struct Server<'scope> {
+    shared: Arc<Shared>,
+    want_seq: usize,
+    handle: Option<ScopedJoinHandle<'scope, ()>>,
+}
+
+impl<'scope> Server<'scope> {
+    /// Spawn the dispatcher on `scope` serving `model` on `rt`/`pool`.
+    pub fn start(
+        scope: &'scope Scope<'scope, '_>,
+        rt: &'scope Runtime,
+        pool: &'scope Pool,
+        model: Arc<ServeModel>,
+        cfg: ServeConfig,
+    ) -> Server<'scope> {
+        let cfg = ServeConfig { max_batch: cfg.max_batch.max(1), ..cfg };
+        let want_seq = model.assembled.seq;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                shutdown: false,
+                accepted: 0,
+                shed: 0,
+                completed: 0,
+                failed: 0,
+                batches: vec![0; model.assembled.batch + 1],
+            }),
+            work: Condvar::new(),
+            cfg,
+        });
+        let dispatcher_shared = shared.clone();
+        let handle =
+            scope.spawn(move || dispatcher(&dispatcher_shared, rt, pool, &model));
+        Server { shared, want_seq, handle: Some(handle) }
+    }
+
+    /// Submit one example (packed at the model's seq length). Returns a
+    /// [`Ticket`] to block on, or an explicit admission error.
+    pub fn submit(&self, example: Example) -> Result<Ticket, SubmitError> {
+        let seq = self.want_seq;
+        if example.ids.len() != seq
+            || example.token_type.len() != seq
+            || example.mask.len() != seq
+        {
+            return Err(SubmitError::BadShape { want_seq: seq });
+        }
+        let mut st = self.shared.state.lock().expect("serve queue");
+        if st.shutdown {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.pending.len() >= self.shared.cfg.queue_depth {
+            st.shed += 1;
+            return Err(SubmitError::QueueFull { depth: self.shared.cfg.queue_depth });
+        }
+        let ticket = Arc::new(TicketState::new());
+        st.pending.push_back(Pending { example, ticket: ticket.clone() });
+        st.accepted += 1;
+        drop(st);
+        self.shared.work.notify_all();
+        Ok(Ticket(ticket))
+    }
+
+    /// Counter snapshot (consistent: taken under the queue lock).
+    pub fn stats(&self) -> ServeStats {
+        let st = self.shared.state.lock().expect("serve queue");
+        ServeStats {
+            accepted: st.accepted,
+            shed: st.shed,
+            completed: st.completed,
+            failed: st.failed,
+            batches: st.batches.clone(),
+        }
+    }
+
+    /// Graceful drain: stop admitting, let the dispatcher flush every
+    /// queued request (without further batch-window waits), join it, and
+    /// return the final counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.finish();
+        self.stats()
+    }
+
+    fn finish(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("serve queue");
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        let panicked = match self.handle.take() {
+            Some(handle) => handle.join().is_err(),
+            None => false,
+        };
+        // Normally empty: the dispatcher drains before exiting. If it
+        // died, answer the leftovers (as failures, keeping `accepted ==
+        // completed + failed`) so no waiter hangs forever.
+        let leftovers: Vec<Pending> = {
+            let mut st = self.shared.state.lock().expect("serve queue");
+            let left: Vec<Pending> = st.pending.drain(..).collect();
+            st.failed += left.len() as u64;
+            left
+        };
+        for p in &leftovers {
+            p.ticket.complete(Err("serve dispatcher terminated before this request".into()));
+        }
+        if panicked {
+            eprintln!("[serve] dispatcher panicked; drained {} leftovers", leftovers.len());
+        }
+    }
+}
+
+impl Drop for Server<'_> {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// The dispatcher loop: sleep until work arrives, coalesce under the
+/// batch window, dispatch, repeat; on shutdown, drain without waiting.
+fn dispatcher(shared: &Shared, rt: &Runtime, pool: &Pool, model: &ServeModel) {
+    loop {
+        let drained: Vec<Pending> = {
+            let mut st = shared.state.lock().expect("serve queue");
+            while st.pending.is_empty() && !st.shutdown {
+                st = shared.work.wait(st).expect("serve queue");
+            }
+            if st.pending.is_empty() {
+                return; // shutdown and fully drained
+            }
+            // Batch window, measured from the first queued request: wait
+            // for more arrivals up to the deadline, dispatching early
+            // when the coalescing cap is reached. A drain skips the wait.
+            let deadline = Instant::now() + shared.cfg.batch_window;
+            while st.pending.len() < shared.cfg.max_batch && !st.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .work
+                    .wait_timeout(st, deadline - now)
+                    .expect("serve queue");
+                st = guard;
+            }
+            let k = st.pending.len().min(shared.cfg.max_batch);
+            st.pending.drain(..k).collect()
+        };
+        execute_coalesced(shared, rt, pool, model, drained);
+    }
+}
+
+/// Execute one coalesced set of requests as `ceil(k/b)` padded
+/// executable batches fanned out on the pool, and route logit row `r`
+/// back to submitter `r` — the same `make_batch` padding and
+/// `batch_input_lits` assembly as batch eval, which is why re-batching
+/// is bit-transparent.
+fn execute_coalesced(
+    shared: &Shared,
+    rt: &Runtime,
+    pool: &Pool,
+    model: &ServeModel,
+    drained: Vec<Pending>,
+) {
+    let k = drained.len();
+    let b = model.assembled.batch;
+    let seq = model.assembled.seq;
+    let n_out = model.assembled.n_out;
+    let (examples, tickets): (Vec<Example>, Vec<Arc<TicketState>>) =
+        drained.into_iter().map(|p| (p.example, p.ticket)).unzip();
+    let split = Split { examples };
+    let n_exec = k.div_ceil(b);
+    let result = rt.run_batch_served(
+        &model.assembled.artifact,
+        &model.statics,
+        n_exec,
+        |i| batch_input_lits(&data::make_batch(&split, i * b, b, seq)),
+        pool,
+    );
+    match result {
+        Ok(outs) => {
+            for (r, ticket) in tickets.iter().enumerate() {
+                let logits = &outs[r / b][0];
+                let row = logits.data()[(r % b) * n_out..(r % b + 1) * n_out].to_vec();
+                ticket.complete(Ok(row));
+            }
+            let mut st = shared.state.lock().expect("serve queue");
+            st.completed += k as u64;
+            for i in 0..n_exec {
+                let fill = (k - i * b).min(b);
+                st.batches[fill] += 1;
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for ticket in &tickets {
+                ticket.complete(Err(msg.clone()));
+            }
+            shared.state.lock().expect("serve queue").failed += k as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_error_display() {
+        assert_eq!(
+            SubmitError::QueueFull { depth: 4 }.to_string(),
+            "request shed: serve queue at depth 4"
+        );
+        assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));
+        assert!(SubmitError::BadShape { want_seq: 24 }.to_string().contains("24"));
+    }
+
+    #[test]
+    fn ticket_completes_exactly_once() {
+        let state = Arc::new(TicketState::new());
+        state.complete(Ok(vec![1.0, 2.0]));
+        state.complete(Ok(vec![9.0])); // must not overwrite
+        state.complete(Err("late error".into())); // must not overwrite
+        let (row, latency) = Ticket(state).wait_timed();
+        assert_eq!(row.unwrap(), vec![1.0, 2.0]);
+        // latency was measured at first completion, long before any wait
+        assert!(latency < Duration::from_secs(3600));
+    }
+
+    fn packed_example(seq: usize) -> Example {
+        Example {
+            ids: vec![1; seq],
+            token_type: vec![0; seq],
+            mask: vec![1.0; seq],
+            label: 0,
+            target: 0.0,
+        }
+    }
+
+    /// Admission control in isolation: a dispatcher-less `Server` (no
+    /// handle) exercises the submit-side checks without a runtime.
+    #[test]
+    fn admission_checks_shape_depth_and_shutdown() {
+        let shared = Arc::new(Shared {
+            cfg: ServeConfig {
+                max_batch: 4,
+                batch_window: Duration::ZERO,
+                queue_depth: 1,
+            },
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                shutdown: false,
+                accepted: 0,
+                shed: 0,
+                completed: 0,
+                failed: 0,
+                batches: vec![0; 9],
+            }),
+            work: Condvar::new(),
+        });
+        let server = Server { shared: shared.clone(), want_seq: 4, handle: None };
+        assert_eq!(
+            server.submit(packed_example(3)).err(),
+            Some(SubmitError::BadShape { want_seq: 4 })
+        );
+        let admitted = server.submit(packed_example(4)).unwrap();
+        assert_eq!(
+            server.submit(packed_example(4)).err(),
+            Some(SubmitError::QueueFull { depth: 1 })
+        );
+        shared.state.lock().unwrap().shutdown = true;
+        assert_eq!(server.submit(packed_example(4)).err(), Some(SubmitError::ShuttingDown));
+        let stats = server.stats();
+        assert_eq!((stats.accepted, stats.shed), (1, 1));
+        // dropping the server answers the stranded request as a failure,
+        // preserving accepted == completed + failed
+        drop(server);
+        assert!(admitted.wait().is_err());
+        let st = shared.state.lock().unwrap();
+        assert_eq!((st.completed, st.failed), (0, 1));
+    }
+
+    #[test]
+    fn hist_string_formats() {
+        let mut st = ServeStats::default();
+        assert_eq!(st.hist_string(), "-");
+        st.batches = vec![0, 12, 0, 2, 0, 0, 0, 0, 40];
+        assert_eq!(st.hist_string(), "1:12|3:2|8:40");
+        assert_eq!(st.dispatched_batches(), 54);
+    }
+}

@@ -18,7 +18,9 @@ use crate::coordinator::weights::{quantize_weights, AdaRoundCfg2, AdaRoundOpts};
 use crate::coordinator::Ctx;
 use crate::data::{task_spec, TaskSpec, TASKS};
 use crate::metrics::{glue_score, median};
-use crate::model::qconfig::{assemble_act_tensors, assemble_act_tensors_pool};
+use crate::model::qconfig::{
+    assemble_act_tensors, assemble_act_tensors_pool, ActQuantTensors,
+};
 use crate::model::Params;
 use crate::util::json::Json;
 
@@ -100,34 +102,102 @@ pub fn run_spec_on(
     task: &TaskSpec,
     params: &Params,
 ) -> Result<f64> {
+    if spec.is_fp32() {
+        let (qp, act) = assemble_once(ctx, spec, task, params, 0)?;
+        return evaluate(ctx, task, &qp, &act);
+    }
+    let seeds = spec.seeds.max(1);
+    let mut scores = Vec::with_capacity(seeds);
+    for seed in 0..seeds {
+        let (qp, act) = assemble_once(ctx, spec, task, params, seed)?;
+        scores.push(evaluate(ctx, task, &qp, &act)?);
+    }
+    Ok(median(&scores))
+}
+
+/// One calibration seed's assembly, without the eval: calibrate →
+/// weight-QDQ → activation-quantizer tensors. Returns the (possibly
+/// QDQ'd) parameters plus the flat activation tensors — everything a
+/// forward executable needs beyond the per-batch inputs. FP32 specs skip
+/// calibration and return the parameters unchanged with quantization
+/// disabled at every site. [`run_spec_on`] medians evals of this over
+/// seeds; the serving layer caches its output per spec_id.
+pub fn assemble_once(
+    ctx: &Ctx,
+    spec: &QuantSpec,
+    task: &TaskSpec,
+    params: &Params,
+    seed: usize,
+) -> Result<(Params, ActQuantTensors)> {
     let info = ctx.model_info(task)?;
     let policy = spec.policy.resolve(info);
     if spec.is_fp32() {
         let act = assemble_act_tensors(info, &policy, &BTreeMap::new())?;
-        return evaluate(ctx, task, params, &act);
+        return Ok((params.clone(), act));
     }
     let ada = AdaRoundOpts {
         enabled: spec.adaround.enabled,
         cfg: AdaRoundCfg2 { iters: spec.adaround.iters, lr: spec.adaround.lr },
     };
-    let seeds = spec.seeds.max(1);
-    let mut scores = Vec::with_capacity(seeds);
-    for seed in 0..seeds {
-        let calib_cfg = CalibCfg {
-            estimator: spec.calib.estimator,
-            batch_size: spec.calib.batch_size,
-            num_batches: spec.calib.num_batches,
-            collect_grams: spec.calib.collect_grams || spec.adaround.enabled,
-            seed: spec.calib.seed + seed as u64 * 97,
-        };
-        // the resolved policy rides along so mse_group / mse_tensor sites
-        // get row-sampling trackers under any calibration estimator
-        let calib = calibrate_with(ctx, task, params, &calib_cfg, Some(&policy))?;
-        let (qp, _) = quantize_weights(info, params, &policy, Some(&calib), &ada)?;
-        let act = assemble_act_tensors_pool(info, &policy, &calib.trackers, &ctx.pool)?;
-        scores.push(evaluate(ctx, task, &qp, &act)?);
-    }
-    Ok(median(&scores))
+    let calib_cfg = CalibCfg {
+        estimator: spec.calib.estimator,
+        batch_size: spec.calib.batch_size,
+        num_batches: spec.calib.num_batches,
+        collect_grams: spec.calib.collect_grams || spec.adaround.enabled,
+        seed: spec.calib.seed + seed as u64 * 97,
+    };
+    // the resolved policy rides along so mse_group / mse_tensor sites
+    // get row-sampling trackers under any calibration estimator
+    let calib = calibrate_with(ctx, task, params, &calib_cfg, Some(&policy))?;
+    let (qp, _) = quantize_weights(info, params, &policy, Some(&calib), &ada)?;
+    let act = assemble_act_tensors_pool(info, &policy, &calib.trackers, &ctx.pool)?;
+    Ok((qp, act))
+}
+
+/// A fully assembled, ready-to-serve model for one (spec, task): the
+/// spec-addressed artifact the serving layer's cache stores. `params`
+/// already carry the weight QDQ, `act` the calibrated activation
+/// quantizers (calibration seed 0 — online serving has one model, not a
+/// seed ensemble).
+#[derive(Debug, Clone)]
+pub struct AssembledModel {
+    /// content hash of the spec ([`QuantSpec::spec_id`]) — the cache key
+    pub spec_id: String,
+    pub task: String,
+    /// forward artifact name (`fwd_{head}_b{batch}`)
+    pub artifact: String,
+    pub params: Params,
+    pub act: ActQuantTensors,
+    /// executable batch capacity (rows per execution)
+    pub batch: usize,
+    pub seq: usize,
+    pub n_out: usize,
+    pub n_sites: usize,
+}
+
+/// Assemble a spec for serving on one task, keyed by its spec_id: load
+/// the task checkpoint, run one calibration-seed-0 assembly, and resolve
+/// the forward artifact it will execute under.
+pub fn assemble_for_serving(
+    ctx: &Ctx,
+    spec: &QuantSpec,
+    task: &TaskSpec,
+) -> Result<AssembledModel> {
+    let params = load_ckpt(ctx, task)?;
+    let (qp, act) = assemble_once(ctx, spec, task, &params, 0)?;
+    let info = ctx.model_info(task)?;
+    let b = crate::coordinator::EVAL_BATCH;
+    Ok(AssembledModel {
+        spec_id: spec.spec_id(),
+        task: task.name.to_string(),
+        artifact: format!("fwd_{}_b{b}", ctx.head(task)),
+        params: qp,
+        act,
+        batch: b,
+        seq: info.config.seq,
+        n_out: info.config.n_out,
+        n_sites: info.sites.len(),
+    })
 }
 
 #[cfg(test)]

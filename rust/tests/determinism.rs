@@ -14,11 +14,20 @@
 //! the interpreter engines: the preplanned execution engine (`hlo::plan`)
 //! and the naive per-instruction interpreter must agree bit-for-bit at
 //! every thread count.
+//!
+//! The `serve_*` tests pin the serving layer's contracts: the
+//! continuous-batching dispatcher is bit-identical to direct `run_batch`
+//! at every thread count and batch window, admission control sheds
+//! explicitly at depth, shutdown drains every admitted request exactly
+//! once, and the model cache's counters fold into `RuntimeStats`.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use tq::coordinator::calibrate::{calibrate, calibrate_with, CalibCfg};
 use tq::coordinator::sweep::{grid, run_offline, synth_data};
-use tq::coordinator::{diagnostics, eval, Ctx};
-use tq::data::task_spec;
+use tq::coordinator::{batch_input_lits, diagnostics, eval, Ctx, EVAL_BATCH};
+use tq::data::{make_batch, task_spec, TaskSpec};
 use tq::model::qconfig::{
     assemble_act_tensors, assemble_act_tensors_pool, site_lane_params_pool, QuantPolicy,
     SiteCfg,
@@ -30,6 +39,10 @@ use tq::quant::{
     qdq_per_lane_pool, qdq_slice_pool, qdq_weight_per_channel_pool, qparams_from_range,
     qparams_symmetric, Estimator, Granularity, QGrid, QParams, RangeMethod,
 };
+use tq::serve::{
+    CacheStats, ModelCache, ServeConfig, ServeModel, Server, SubmitError, Ticket,
+};
+use tq::spec::run::AssembledModel;
 use tq::tensor::Tensor;
 use tq::util::pool::Pool;
 use tq::util::rng::Rng;
@@ -462,4 +475,248 @@ fn offline_sweep_is_parallel_deterministic() {
         assert_eq!(ra.weight_mse.to_bits(), rb.weight_mse.to_bits(), "{}", ra.label);
         assert_eq!(ra.peg_overhead, rb.peg_overhead, "{}", ra.label);
     }
+}
+
+/// A ready-to-serve model over the generated artifacts without the
+/// checkpoint-loading assembly path: seeded `Params::init` weights plus
+/// either a calibrated W8A8 policy or disabled (fp32) quantizers.
+fn serve_model(ctx: &Ctx, task: &TaskSpec, spec_id: &str, quantized: bool) -> ServeModel {
+    let info = ctx.model_info(task).unwrap();
+    let params = Params::init(info, 17);
+    let act = if quantized {
+        let cfg = CalibCfg { num_batches: 2, batch_size: 2, ..Default::default() };
+        let calib = calibrate(ctx, task, &params, &cfg).unwrap();
+        assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers).unwrap()
+    } else {
+        assemble_act_tensors(info, &QuantPolicy::fp32(), &std::collections::BTreeMap::new())
+            .unwrap()
+    };
+    ServeModel::from_assembled(AssembledModel {
+        spec_id: spec_id.to_string(),
+        task: task.name.to_string(),
+        artifact: format!("fwd_{}_b{EVAL_BATCH}", ctx.head(task)),
+        params,
+        act,
+        batch: EVAL_BATCH,
+        seq: info.config.seq,
+        n_out: info.config.n_out,
+        n_sites: info.sites.len(),
+    })
+    .unwrap()
+}
+
+/// Serve-path bit-identity: the continuous-batching dispatcher must
+/// return exactly the logit rows a direct `run_batch` over the same
+/// split produces — at 1 and 8 threads and across batch windows that
+/// coalesce very differently (immediate dispatch vs wide coalescing into
+/// multiple executable batches). Re-batching only re-partitions rows
+/// across padded executable batches; no forward op reduces over the
+/// batch dimension, so each row's math is independent of which batch it
+/// rode in.
+#[test]
+fn serve_queue_matches_direct_run_batch() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    for threads in [1usize, 8] {
+        let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+            .unwrap()
+            .with_pool(Pool::new(threads));
+        let model = Arc::new(serve_model(&ctx, &task, "det-w8a8", true));
+        let (b, seq, n_out) =
+            (model.assembled.batch, model.assembled.seq, model.assembled.n_out);
+        let mut split = tq::data::dev_split(&task, seq).unwrap();
+        // 13 = 8 + 5: one full and one PAD-padded executable batch
+        split.examples.truncate(13);
+        let n = split.examples.len();
+
+        let outs = ctx
+            .rt
+            .run_batch(
+                &model.assembled.artifact,
+                &model.statics,
+                n.div_ceil(b),
+                |i| batch_input_lits(&make_batch(&split, i * b, b, seq)),
+                &ctx.pool,
+            )
+            .unwrap();
+        let direct: Vec<Vec<u32>> = (0..n)
+            .map(|r| bits(&outs[r / b][0].data()[(r % b) * n_out..(r % b + 1) * n_out]))
+            .collect();
+        assert_eq!(ctx.rt.stats().served, 0, "direct run_batch must not count as served");
+
+        for window_us in [0u64, 500, 5000] {
+            let served_before = ctx.rt.stats().served;
+            let rows: Vec<Vec<u32>> = std::thread::scope(|scope| {
+                let server = Server::start(
+                    scope,
+                    &ctx.rt,
+                    &ctx.pool,
+                    model.clone(),
+                    ServeConfig {
+                        max_batch: 32,
+                        batch_window: Duration::from_micros(window_us),
+                        queue_depth: 64,
+                    },
+                );
+                let tickets: Vec<Ticket> = split
+                    .examples
+                    .iter()
+                    .map(|ex| server.submit(ex.clone()).unwrap())
+                    .collect();
+                let stats = server.shutdown();
+                assert_eq!(stats.accepted, n as u64, "threads={threads} window={window_us}");
+                assert_eq!(stats.completed, n as u64, "threads={threads} window={window_us}");
+                assert_eq!((stats.shed, stats.failed), (0, 0));
+                tickets.into_iter().map(|t| bits(&t.wait().unwrap())).collect()
+            });
+            assert_eq!(rows, direct, "threads={threads} window={window_us}us");
+            assert!(
+                ctx.rt.stats().served > served_before,
+                "serve path must bump the served counter"
+            );
+        }
+    }
+}
+
+/// Admission control sheds — explicitly, without loss — when a burst
+/// outruns a deliberately tiny queue: with depth 2 and a long batch
+/// window the dispatcher is still coalescing while the 8-burst arrives,
+/// so most of it must see `QueueFull`, and shutdown must still answer
+/// every admitted request.
+#[test]
+fn serve_sheds_on_full_queue() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+        .unwrap()
+        .with_pool(Pool::new(2));
+    let model = Arc::new(serve_model(&ctx, &task, "det-shed", false));
+    let mut split = tq::data::dev_split(&task, model.assembled.seq).unwrap();
+    split.examples.truncate(8);
+    std::thread::scope(|scope| {
+        let server = Server::start(
+            scope,
+            &ctx.rt,
+            &ctx.pool,
+            model.clone(),
+            ServeConfig {
+                max_batch: 4,
+                batch_window: Duration::from_millis(500),
+                queue_depth: 2,
+            },
+        );
+        let mut tickets = Vec::new();
+        let mut shed = 0u64;
+        for ex in &split.examples {
+            match server.submit(ex.clone()) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::QueueFull { depth }) => {
+                    assert_eq!(depth, 2);
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(shed >= 1, "a depth-2 queue must shed part of an 8-burst");
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, shed);
+        assert_eq!(stats.accepted, tickets.len() as u64);
+        assert_eq!(stats.accepted + stats.shed, 8);
+        assert_eq!(stats.completed, stats.accepted, "drain must answer every admitted request");
+        assert_eq!(stats.failed, 0);
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), model.assembled.n_out);
+        }
+    });
+}
+
+/// Graceful drain: with a batch window far longer than the test, only
+/// shutdown can dispatch — it must flush everything admitted, exactly
+/// once, without sleeping out the window. 11 requests coalesce into one
+/// drain of ceil(11/8) = 2 executable batches (fills 8 and 3), which
+/// also pins the multi-batch split of one coalesced set.
+#[test]
+fn serve_drains_on_shutdown_without_loss() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+        .unwrap()
+        .with_pool(Pool::new(2));
+    let model = Arc::new(serve_model(&ctx, &task, "det-drain", false));
+    let mut split = tq::data::dev_split(&task, model.assembled.seq).unwrap();
+    split.examples.truncate(11);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        let server = Server::start(
+            scope,
+            &ctx.rt,
+            &ctx.pool,
+            model.clone(),
+            ServeConfig {
+                max_batch: 256,
+                batch_window: Duration::from_secs(3600),
+                queue_depth: 1024,
+            },
+        );
+        let tickets: Vec<Ticket> = split
+            .examples
+            .iter()
+            .map(|ex| server.submit(ex.clone()).unwrap())
+            .collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.accepted, 11);
+        assert_eq!(stats.completed, 11, "drain lost requests");
+        assert_eq!((stats.shed, stats.failed), (0, 0));
+        assert_eq!(stats.hist_string(), "3:1|8:1", "one full + one padded executable batch");
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), model.assembled.n_out);
+        }
+    });
+    assert!(
+        t0.elapsed() < Duration::from_secs(600),
+        "drain must skip the batch window, not sleep it out"
+    );
+}
+
+/// The model cache's hit/miss/eviction counters must fold into the
+/// shared `RuntimeStats` exactly: driving a capacity-2 cache through a
+/// known access pattern over three specs yields equal counters on the
+/// cache and on the runtime, with LRU eviction picking the stalest id.
+#[test]
+fn model_cache_counters_fold_into_runtime_stats() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+        .unwrap()
+        .with_pool(Pool::new(2));
+    let cache = ModelCache::new(2);
+    for id in ["s1", "s2", "s3", "s1", "s3", "s2"] {
+        let m = cache
+            .get_or_build(&ctx.rt, id, || Ok(serve_model(&ctx, &task, id, false)))
+            .unwrap();
+        assert_eq!(m.spec_id(), id);
+    }
+    // s1, s2, s3 miss (s3 evicts s1), s1 misses again (evicts s2),
+    // s3 hits, s2 misses (evicts s1)
+    let want = CacheStats { hits: 1, misses: 5, evictions: 3 };
+    assert_eq!(cache.stats(), want);
+    assert_eq!(cache.len(), 2);
+    assert_eq!(cache.resident(), vec!["s3".to_string(), "s2".to_string()]);
+    let rs = ctx.rt.stats();
+    assert_eq!(
+        (rs.model_cache_hits, rs.model_cache_misses, rs.model_cache_evictions),
+        (want.hits, want.misses, want.evictions),
+    );
 }
