@@ -1,0 +1,1122 @@
+//! Quantization-hazard linter: `repro lint` (DESIGN.md §13).
+//!
+//! Two passes share one diagnostic surface:
+//!
+//!   * **artifact verification** — every module in the manifest must
+//!     parse and pass the static verifier
+//!     ([`crate::hlo::verify`](mod@crate::hlo::verify));
+//!     those findings keep their TQ1xx codes (TQ100 = parse error).
+//!   * **spec linting** — each quantization spec is checked against each
+//!     model topology and its lowered forward graph for the hazards
+//!     below (TQ0xx).
+//!
+//! | code  | severity | meaning |
+//! |-------|----------|---------|
+//! | TQ001 | deny | residual add consumes an unquantized activation |
+//! | TQ002 | deny | hard-coded clamp bounds != declared bit-width grid |
+//! | TQ003 | warn | spec rule matches no site in this topology (dead) |
+//! | TQ004 | warn | spec rule fully shadowed by later rules |
+//! | TQ005 | warn | overlapping rules with identical configs (redundant) |
+//! | TQ006 | deny | PEG group count K invalid for the site's lane count |
+//! | TQ007 | deny | `mse_tensor` range method on grouped granularity |
+//! | TQ008 | deny | fake-quant wiring mismatch (cfg row / lane slice) |
+//!
+//! TQ001 is the paper's central failure mode (§3): the residual sums
+//! carry the outlier activations, and a quantized residual sum fed by an
+//! *unquantized* producer means calibration never saw the tensor the
+//! deployed kernel will actually quantize. The graph pass therefore
+//! recognises every fake-quant block structurally (the QDQ pattern
+//! [`crate::hlo::fixture`] lowers) instead of trusting site metadata.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hlo::parser::{parse_literal_numbers, parse_slice_ranges, Computation};
+use crate::hlo::{parse_module, verify_module, DType, HloModule, Shape};
+use crate::model::manifest::{Manifest, ModelInfo};
+use crate::model::qconfig::QuantPolicy;
+use crate::quant::{Granularity, QGrid, RangeMethod};
+use crate::spec::{presets, PolicySpec, QuantSpec};
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+
+/// Finding severity: `Deny` makes `repro lint` exit non-zero, `Warn` is
+/// advisory (dead-rule visibility, redundant layering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One lint finding with a stable diagnostic code.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// where: `spec/model: site` or `artifact/%computation/%instruction`
+    pub loc: String,
+    pub msg: String,
+}
+
+impl Diag {
+    fn deny(code: &'static str, loc: impl Into<String>, msg: impl Into<String>) -> Diag {
+        Diag { code, severity: Severity::Deny, loc: loc.into(), msg: msg.into() }
+    }
+
+    fn warn(code: &'static str, loc: impl Into<String>, msg: impl Into<String>) -> Diag {
+        Diag { code, severity: Severity::Warn, loc: loc.into(), msg: msg.into() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("severity", Json::Str(self.severity.name().to_string())),
+            ("loc", Json::Str(self.loc.clone())),
+            ("msg", Json::Str(self.msg.clone())),
+        ])
+    }
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}] {}: {}", self.severity.name(), self.code, self.loc, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule-level lints (TQ003-TQ005): spec vs topology, before resolution
+// ---------------------------------------------------------------------------
+
+/// Lint a spec's site rules against one model topology: dead rules
+/// (TQ003), fully shadowed rules (TQ004), redundant identical overlaps
+/// (TQ005). All warn-level — `resolve` installs them silently either
+/// way, which is exactly why they need surfacing.
+pub fn lint_spec_rules(spec: &PolicySpec, info: &ModelInfo) -> Vec<Diag> {
+    let matched: Vec<Vec<String>> =
+        spec.rules.iter().map(|r| r.select.matching_sites(info)).collect();
+    // later rules win per site, mirroring resolve()'s insert order
+    let mut owner: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, m) in matched.iter().enumerate() {
+        for s in m {
+            owner.insert(s.as_str(), i);
+        }
+    }
+    let mut out = Vec::new();
+    for (i, (rule, m)) in spec.rules.iter().zip(&matched).enumerate() {
+        let loc = format!("rule #{i} ({})", rule.select.describe());
+        if m.is_empty() {
+            out.push(Diag::warn(
+                "TQ003",
+                loc,
+                "matches no site in this topology (dead rule) — a typo'd site \
+                 name silently leaves the site at the spec default",
+            ));
+        } else if m.iter().all(|s| owner.get(s.as_str()) != Some(&i)) {
+            out.push(Diag::warn(
+                "TQ004",
+                loc,
+                format!(
+                    "every matched site (e.g. {}) is overridden by a later rule — \
+                     this rule has no effect (fully shadowed)",
+                    m[0]
+                ),
+            ));
+        }
+    }
+    for i in 0..spec.rules.len() {
+        for j in (i + 1)..spec.rules.len() {
+            if spec.rules[i].cfg != spec.rules[j].cfg {
+                // broad-then-specific layering with *different* configs is
+                // the idiomatic spec style; only identical configs are noise
+                continue;
+            }
+            if let Some(shared) = matched[i].iter().find(|s| matched[j].contains(*s)) {
+                out.push(Diag::warn(
+                    "TQ005",
+                    format!("rule #{j} ({})", spec.rules[j].select.describe()),
+                    format!(
+                        "duplicates rule #{i} ({}) with an identical config on \
+                         shared site {shared} (redundant overlap)",
+                        spec.rules[i].select.describe()
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// resolved-policy lints (TQ006-TQ007): per-site config vs site geometry
+// ---------------------------------------------------------------------------
+
+/// Lint a resolved policy against the sites it will configure: PEG K vs
+/// lane count (TQ006) and range-method/granularity contradictions
+/// (TQ007). Both deny — assembly ([`crate::model::qconfig`]) rejects
+/// them too, but only deep inside a calibration run.
+pub fn lint_policy(policy: &QuantPolicy, info: &ModelInfo) -> Vec<Diag> {
+    let mut out = Vec::new();
+    for site in &info.sites {
+        let cfg = policy.site_cfg(&site.name);
+        if !cfg.enabled {
+            continue;
+        }
+        let loc = format!("site {}", site.name);
+        if let Granularity::PerEmbeddingGroup { k, .. } = &cfg.granularity {
+            if *k == 0 {
+                out.push(Diag::deny("TQ006", loc.clone(), "per-embedding-group K must be >= 1"));
+            } else if *k > site.channels {
+                out.push(Diag::deny(
+                    "TQ006",
+                    loc.clone(),
+                    format!(
+                        "K={k} exceeds the site's {} lane(s) — assembly will \
+                         reject this spec (use per_embedding or a smaller K)",
+                        site.channels
+                    ),
+                ));
+            }
+        }
+        if cfg.range_method == RangeMethod::MseTensor
+            && cfg.granularity != Granularity::PerTensor
+        {
+            out.push(Diag::deny(
+                "TQ007",
+                loc,
+                format!(
+                    "range_method mse_tensor requires per_tensor granularity \
+                     (got {:?}) — use mse_group for grouped sites",
+                    cfg.granularity
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// graph lints (TQ001, TQ002, TQ008): the lowered QDQ blocks themselves
+// ---------------------------------------------------------------------------
+
+/// Where a traced graph value ultimately comes from.
+#[derive(Debug, Clone, PartialEq)]
+enum Src {
+    /// a scalar f32 constant (possibly broadcast)
+    Const(f32),
+    /// a rectangular window of entry parameter `param`: per-dim
+    /// `[lo, hi)` after composing the stride-1 slice chain
+    Window { param: usize, ranges: Vec<(usize, usize)> },
+    Opaque,
+}
+
+fn inst_idx(c: &Computation, name: &str) -> Option<usize> {
+    c.index.get(name).copied()
+}
+
+/// Walk a value upward through broadcasts/reshapes, composing
+/// consecutive stride-1 slices, until a parameter or scalar constant.
+/// Anything else (or a reshape *between* parameter and slice, which
+/// would scramble the window coordinates) is `Opaque`.
+fn trace(c: &Computation, start: usize) -> Src {
+    let mut i = start;
+    // accumulated window in the coordinates of inst `i`'s output; the
+    // first (outermost) slice seeds it, deeper slices shift it
+    let mut acc: Option<Vec<(usize, usize)>> = None;
+    // def-before-use makes cycles impossible; the bound is belt-and-braces
+    for _ in 0..64 {
+        let inst = &c.insts[i];
+        match inst.opcode.as_str() {
+            "broadcast" | "reshape" => {
+                if inst.opcode == "reshape" && acc.is_some() {
+                    return Src::Opaque;
+                }
+                match inst.operands.first().and_then(|n| inst_idx(c, n)) {
+                    Some(j) => i = j,
+                    None => return Src::Opaque,
+                }
+            }
+            "slice" => {
+                let Ok(raw) = inst.attr_str("slice") else { return Src::Opaque };
+                let Ok(ranges) = parse_slice_ranges(raw) else { return Src::Opaque };
+                if ranges.iter().any(|&(_, _, st)| st != 1) {
+                    return Src::Opaque;
+                }
+                let win: Vec<(usize, usize)> = match &acc {
+                    None => ranges.iter().map(|&(lo, hi, _)| (lo, hi)).collect(),
+                    Some(outer) => {
+                        if outer.len() != ranges.len() {
+                            return Src::Opaque;
+                        }
+                        outer
+                            .iter()
+                            .zip(&ranges)
+                            .map(|(&(olo, ohi), &(ilo, _, _))| (ilo + olo, ilo + ohi))
+                            .collect()
+                    }
+                };
+                acc = Some(win);
+                match inst.operands.first().and_then(|n| inst_idx(c, n)) {
+                    Some(j) => i = j,
+                    None => return Src::Opaque,
+                }
+            }
+            "parameter" => {
+                let Some(p) =
+                    inst.payload.as_deref().and_then(|s| s.trim().parse::<usize>().ok())
+                else {
+                    return Src::Opaque;
+                };
+                let ranges = match acc {
+                    Some(r) => r,
+                    None => match &inst.shape {
+                        Shape::Array { dims, .. } => dims.iter().map(|&d| (0, d)).collect(),
+                        Shape::Tuple(_) => return Src::Opaque,
+                    },
+                };
+                return Src::Window { param: p, ranges };
+            }
+            "constant" => {
+                if acc.is_some() {
+                    return Src::Opaque;
+                }
+                let Some(payload) = inst.payload.as_deref() else { return Src::Opaque };
+                let Ok(nums) = parse_literal_numbers(payload) else { return Src::Opaque };
+                return match nums[..] {
+                    [v] => Src::Const(v as f32),
+                    _ => Src::Opaque,
+                };
+            }
+            _ => return Src::Opaque,
+        }
+    }
+    Src::Opaque
+}
+
+/// One fake-quant block recognised in a lowered graph.
+struct FqMatch {
+    /// pre-quant activation instruction (the QDQ input `x`)
+    input: usize,
+    /// final `select(enable, dq, x)` instruction, when found
+    output: Option<usize>,
+    /// index into `info.sites`, when identifiable
+    site: Option<usize>,
+}
+
+/// Lint one lowered forward graph against a resolved policy: recognise
+/// every QDQ block `clamp(qmin, round(x / s) + z, qmax)` structurally,
+/// check its wiring against the site table (TQ008), hard-coded bounds
+/// against the declared grid (TQ002), and — the paper's §3 hazard — that
+/// every enabled residual-sum site quantizes an add of *quantized*
+/// operands (TQ001).
+pub fn lint_graph(m: &HloModule, info: &ModelInfo, policy: &QuantPolicy) -> Result<Vec<Diag>> {
+    let c = m.entry();
+    let n_sites = info.sites.len();
+    let total = info.total_scale_lanes;
+
+    // locate the (act_scales, act_zps, act_cfg) parameter triple:
+    // act_cfg is the [n_sites, 3] f32 parameter immediately preceded by
+    // the two [total] lane vectors (build_forward's layout)
+    let dims_of = |pi: usize| -> Option<&[usize]> {
+        match &c.insts[c.params[pi]].shape {
+            Shape::Array { dtype: DType::F32, dims } => Some(dims.as_slice()),
+            _ => None,
+        }
+    };
+    let mut cfg_param = None;
+    for pi in 2..c.params.len() {
+        if dims_of(pi).is_some_and(|d| *d == [n_sites, 3])
+            && dims_of(pi - 1).is_some_and(|d| *d == [total])
+            && dims_of(pi - 2).is_some_and(|d| *d == [total])
+        {
+            cfg_param = Some(pi);
+        }
+    }
+    let Some(cfg_p) = cfg_param else {
+        bail!(
+            "module {}: no (act_scales[{total}], act_zps[{total}], \
+             act_cfg[{n_sites}x3]) parameter triple — not a quantized forward \
+             graph for model {}",
+            m.name,
+            info.config.name
+        );
+    };
+    let (scales_p, zps_p) = (cfg_p - 2, cfg_p - 1);
+
+    // consumer index, for walking clamp -> subtract -> multiply -> select
+    let mut uses: Vec<Vec<usize>> = vec![Vec::new(); c.insts.len()];
+    for (i, inst) in c.insts.iter().enumerate() {
+        for opn in &inst.operands {
+            if let Some(j) = inst_idx(c, opn) {
+                uses[j].push(i);
+            }
+        }
+    }
+
+    let mut diags = Vec::new();
+    let mut fq: Vec<FqMatch> = Vec::new();
+    for (ci, inst) in c.insts.iter().enumerate() {
+        if inst.opcode != "clamp" || inst.operands.len() != 3 {
+            continue;
+        }
+        let (Some(lo_i), Some(mid_i), Some(hi_i)) = (
+            inst_idx(c, &inst.operands[0]),
+            inst_idx(c, &inst.operands[1]),
+            inst_idx(c, &inst.operands[2]),
+        ) else {
+            continue;
+        };
+        // structural gate: the clamped value must be round(x / s) + z
+        let mid = &c.insts[mid_i];
+        if mid.opcode != "add" || mid.operands.len() != 2 {
+            continue;
+        }
+        let mid_ops: Vec<usize> =
+            mid.operands.iter().filter_map(|n| inst_idx(c, n)).collect();
+        if mid_ops.len() != 2 {
+            continue;
+        }
+        let Some(rp) =
+            mid_ops.iter().position(|&j| c.insts[j].opcode == "round-nearest-afz")
+        else {
+            continue;
+        };
+        let zb_i = mid_ops[1 - rp];
+        let Some(div_i) =
+            c.insts[mid_ops[rp]].operands.first().and_then(|n| inst_idx(c, n))
+        else {
+            continue;
+        };
+        let div = &c.insts[div_i];
+        if div.opcode != "divide" || div.operands.len() != 2 {
+            continue;
+        }
+        let (Some(x_i), Some(sb_i)) =
+            (inst_idx(c, &div.operands[0]), inst_idx(c, &div.operands[1]))
+        else {
+            continue;
+        };
+        let loc = format!("{}/%{}/%{}", m.name, c.name, inst.name);
+
+        let lo = trace(c, lo_i);
+        let hi = trace(c, hi_i);
+        let sb = trace(c, sb_i);
+        let zb = trace(c, zb_i);
+
+        // identify the site from the act_cfg row the bounds read
+        let mut site: Option<usize> = None;
+        if let (
+            Src::Window { param: p1, ranges: r1 },
+            Src::Window { param: p2, ranges: r2 },
+        ) = (&lo, &hi)
+        {
+            if *p1 == cfg_p && *p2 == cfg_p {
+                let cell = |r: &[(usize, usize)]| -> Option<(usize, usize)> {
+                    (r.len() == 2 && r[0].1 == r[0].0 + 1 && r[1].1 == r[1].0 + 1)
+                        .then(|| (r[0].0, r[1].0))
+                };
+                match (cell(r1), cell(r2)) {
+                    (Some((row_lo, col_lo)), Some((row_hi, col_hi))) => {
+                        if row_lo != row_hi {
+                            diags.push(Diag::deny(
+                                "TQ008",
+                                loc.clone(),
+                                format!(
+                                    "clamp bounds read different act_cfg rows \
+                                     ({row_lo} vs {row_hi})"
+                                ),
+                            ));
+                        } else if (col_lo, col_hi) != (0, 1) {
+                            diags.push(Diag::deny(
+                                "TQ008",
+                                loc.clone(),
+                                format!(
+                                    "clamp bounds read act_cfg columns \
+                                     ({col_lo}, {col_hi}); the row layout is \
+                                     [qmin, qmax, enable] = columns (0, 1)"
+                                ),
+                            ));
+                        } else if row_lo >= n_sites {
+                            diags.push(Diag::deny(
+                                "TQ008",
+                                loc.clone(),
+                                format!(
+                                    "act_cfg row {row_lo} out of range for \
+                                     {n_sites} sites"
+                                ),
+                            ));
+                        } else {
+                            site = Some(row_lo);
+                        }
+                    }
+                    _ => diags.push(Diag::deny(
+                        "TQ008",
+                        loc.clone(),
+                        "clamp bounds are non-scalar act_cfg windows",
+                    )),
+                }
+            }
+        }
+
+        let lanes = |s: &Src, p: usize| -> Option<(usize, usize)> {
+            match s {
+                Src::Window { param, ranges } if *param == p && ranges.len() == 1 => {
+                    Some(ranges[0])
+                }
+                _ => None,
+            }
+        };
+        let s_lanes = lanes(&sb, scales_p);
+        let z_lanes = lanes(&zb, zps_p);
+        if site.is_none() {
+            // hard-coded-bounds blocks: identify the site from its scale
+            // lane window instead
+            site = s_lanes.and_then(|(slo, shi)| {
+                info.sites
+                    .iter()
+                    .position(|s| s.offset == slo && s.offset + s.channels == shi)
+            });
+        }
+
+        if let Some(k) = site {
+            let ss = &info.sites[k];
+            let want = (ss.offset, ss.offset + ss.channels);
+            if let Some(sl) = s_lanes {
+                if sl != want {
+                    diags.push(Diag::deny(
+                        "TQ008",
+                        loc.clone(),
+                        format!(
+                            "site {} (act_cfg row {k}) reads act_scales[{}..{}) \
+                             but owns lanes [{}..{})",
+                            ss.name, sl.0, sl.1, want.0, want.1
+                        ),
+                    ));
+                }
+            }
+            if let Some(zl) = z_lanes {
+                if zl != want {
+                    diags.push(Diag::deny(
+                        "TQ008",
+                        loc.clone(),
+                        format!(
+                            "site {} reads act_zps[{}..{}) but owns lanes \
+                             [{}..{})",
+                            ss.name, zl.0, zl.1, want.0, want.1
+                        ),
+                    ));
+                }
+            }
+            let cfg = policy.site_cfg(&ss.name);
+            if cfg.enabled {
+                if let (Src::Const(a), Src::Const(b)) = (&lo, &hi) {
+                    let grid = QGrid::asymmetric(cfg.bits);
+                    if *a != grid.qmin || *b != grid.qmax {
+                        diags.push(Diag::deny(
+                            "TQ002",
+                            loc.clone(),
+                            format!(
+                                "site {}: hard-coded clamp bounds [{a}, {b}] are \
+                                 inconsistent with the declared {}-bit \
+                                 asymmetric grid [{}, {}]",
+                                ss.name, cfg.bits, grid.qmin, grid.qmax
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // find the QDQ output: clamp -> subtract -> multiply -> select
+        // with the multiply on the enabled branch and x on the bypass
+        let mut output = None;
+        'find: for &sub_i in &uses[ci] {
+            if c.insts[sub_i].opcode != "subtract" {
+                continue;
+            }
+            for &mul_i in &uses[sub_i] {
+                if c.insts[mul_i].opcode != "multiply" {
+                    continue;
+                }
+                for &sel_i in &uses[mul_i] {
+                    let sel = &c.insts[sel_i];
+                    if sel.opcode == "select"
+                        && sel.operands.len() == 3
+                        && inst_idx(c, &sel.operands[1]) == Some(mul_i)
+                        && inst_idx(c, &sel.operands[2]) == Some(x_i)
+                    {
+                        output = Some(sel_i);
+                        break 'find;
+                    }
+                }
+            }
+        }
+        fq.push(FqMatch { input: x_i, output, site });
+    }
+
+    // ---- TQ001: enabled residual-sum sites must quantize an add of
+    // quantized operands. embed_sum also ends in `_sum` but its input add
+    // legitimately consumes raw gather outputs, so only the true residual
+    // connections (res1/res2) are checked.
+    let mut out_site: BTreeMap<usize, usize> = BTreeMap::new();
+    for f in &fq {
+        if let (Some(o), Some(s)) = (f.output, f.site) {
+            out_site.insert(o, s);
+        }
+    }
+    let passthrough = |mut j: usize| -> usize {
+        for _ in 0..16 {
+            let inst = &c.insts[j];
+            if !matches!(inst.opcode.as_str(), "reshape" | "transpose") {
+                break;
+            }
+            match inst.operands.first().and_then(|n| inst_idx(c, n)) {
+                Some(k) => j = k,
+                None => break,
+            }
+        }
+        j
+    };
+    for f in &fq {
+        let Some(k) = f.site else { continue };
+        let name = info.sites[k].name.as_str();
+        if !(name.ends_with("res1_sum") || name.ends_with("res2_sum")) {
+            continue;
+        }
+        if !policy.site_cfg(name).enabled {
+            continue;
+        }
+        let loc = format!("{}/%{}/site {}", m.name, c.name, name);
+        let add = &c.insts[f.input];
+        if add.opcode != "add" {
+            diags.push(Diag::deny(
+                "TQ001",
+                loc.clone(),
+                format!(
+                    "residual site quantizes %{} ({}) instead of the residual add",
+                    add.name, add.opcode
+                ),
+            ));
+            continue;
+        }
+        for opn in &add.operands {
+            let Some(j0) = inst_idx(c, opn) else { continue };
+            match out_site.get(&passthrough(j0)) {
+                Some(&src) if policy.site_cfg(&info.sites[src].name).enabled => {}
+                Some(&src) => diags.push(Diag::deny(
+                    "TQ001",
+                    loc.clone(),
+                    format!(
+                        "residual add consumes %{opn} from disabled site {} — an \
+                         unquantized activation flows into a quantized residual \
+                         sum (the paper's §3 outlier path); enable the producer \
+                         site or disable {name}",
+                        info.sites[src].name
+                    ),
+                )),
+                None => diags.push(Diag::deny(
+                    "TQ001",
+                    loc.clone(),
+                    format!(
+                        "residual add consumes %{opn}, which is not the output \
+                         of any fake-quant site — calibration never sees the \
+                         tensor this quantizer will clamp"
+                    ),
+                )),
+            }
+        }
+    }
+    Ok(diags)
+}
+
+// ---------------------------------------------------------------------------
+// CLI driver
+// ---------------------------------------------------------------------------
+
+/// `repro lint [--artifacts DIR] [--spec FILE | --preset NAME] [--json]`
+///
+/// Pass 1 parses and statically verifies every artifact in the manifest
+/// (TQ100-TQ107, all deny). Pass 2 lints each spec (default: every
+/// preset) against each model topology and its batch-1 forward graph.
+/// Exits non-zero iff any deny-level finding.
+pub fn cmd_lint(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(dir).with_context(|| {
+        format!("loading {dir}/manifest.json — run `repro gen-artifacts` first")
+    })?;
+
+    let mut diags: Vec<Diag> = Vec::new();
+
+    // ---- pass 1: every shipped artifact must parse and verify
+    for (name, sig) in &manifest.artifacts {
+        let text = match std::fs::read_to_string(&sig.file) {
+            Ok(t) => t,
+            Err(e) => {
+                diags.push(Diag::deny(
+                    "TQ100",
+                    name.clone(),
+                    format!("cannot read {:?}: {e}", sig.file),
+                ));
+                continue;
+            }
+        };
+        match parse_module(&text) {
+            Err(e) => {
+                diags.push(Diag::deny("TQ100", name.clone(), format!("parse error: {e:#}")))
+            }
+            Ok(module) => {
+                for v in verify_module(&module) {
+                    diags.push(Diag::deny(
+                        v.code,
+                        format!("{name}/%{}/%{}", v.comp, v.inst),
+                        v.msg,
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- pass 2: spec hazards against each model + its forward graph
+    let specs: Vec<QuantSpec> = if let Some(path) = args.get("spec") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("cannot read spec {path:?}"))?;
+        vec![QuantSpec::parse(&text)?]
+    } else if let Some(name) = args.get("preset") {
+        vec![presets::preset(name)?]
+    } else {
+        let mut v = Vec::new();
+        for n in presets::preset_names() {
+            v.push(presets::preset(n)?);
+        }
+        v
+    };
+
+    let mut fwd: BTreeMap<&str, HloModule> = BTreeMap::new();
+    for (model, art) in [("base", "fwd_cls_b1"), ("base_reg", "fwd_reg_b1")] {
+        if let Ok(sig) = manifest.artifact(art) {
+            let text = std::fs::read_to_string(&sig.file)
+                .with_context(|| format!("reading {art}"))?;
+            // a parse failure is already a TQ100 from pass 1; don't also die
+            if let Ok(m) = parse_module(&text) {
+                fwd.insert(model, m);
+            }
+        }
+    }
+
+    for spec in &specs {
+        for (model, info) in &manifest.models {
+            let prefix = format!("{}/{model}", spec.name);
+            let mut local = lint_spec_rules(&spec.policy, info);
+            let policy = spec.policy.resolve(info);
+            local.extend(lint_policy(&policy, info));
+            if let Some(m) = fwd.get(model.as_str()) {
+                local.extend(
+                    lint_graph(m, info, &policy)
+                        .with_context(|| format!("linting {prefix}"))?,
+                );
+            }
+            for mut d in local {
+                d.loc = format!("{prefix}: {}", d.loc);
+                diags.push(d);
+            }
+        }
+    }
+
+    diags.sort_by(|a, b| {
+        b.severity
+            .cmp(&a.severity)
+            .then_with(|| a.code.cmp(b.code))
+            .then_with(|| a.loc.cmp(&b.loc))
+    });
+    let n_deny = diags.iter().filter(|d| d.severity == Severity::Deny).count();
+    if args.flag("json") {
+        let arr = Json::Arr(diags.iter().map(Diag::to_json).collect());
+        println!("{arr}");
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+    }
+    eprintln!(
+        "lint: {} artifact(s), {} spec(s) x {} model(s) checked — {} finding(s), {} deny",
+        manifest.artifacts.len(),
+        specs.len(),
+        manifest.models.len(),
+        diags.len(),
+        n_deny
+    );
+    if n_deny > 0 {
+        bail!("lint failed: {n_deny} deny-level finding(s)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::builder::{GraphBuilder, Op};
+    use crate::hlo::fixture::{build_forward, model_info, FixtureConfig};
+    use crate::model::manifest::{ModelConfig, ModelInfo, SiteSpec};
+    use crate::model::qconfig::SiteCfg;
+    use crate::spec::{SiteRule, SiteSelector};
+    use crate::util::rng::Rng;
+
+    fn info_with(sites: &[(&str, usize)]) -> ModelInfo {
+        let mut specs = Vec::new();
+        let mut off = 0;
+        for (name, c) in sites {
+            specs.push(SiteSpec { name: name.to_string(), channels: *c, offset: off });
+            off += c;
+        }
+        ModelInfo {
+            config: ModelConfig {
+                name: "mini".into(),
+                vocab: 16,
+                d: 8,
+                heads: 2,
+                layers: 2,
+                d_ff: 16,
+                seq: 4,
+                n_out: 3,
+                outlier_dims: vec![1],
+                pad_id: 0,
+                cls_id: 1,
+                sep_id: 2,
+            },
+            params: Vec::new(),
+            sites: specs,
+            total_scale_lanes: off,
+            wq: Vec::new(),
+        }
+    }
+
+    fn rule(select: SiteSelector, bits: u32) -> SiteRule {
+        SiteRule { select, cfg: SiteCfg { bits, ..Default::default() } }
+    }
+
+    fn codes(diags: &[Diag]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    // ---- TQ003/TQ004/TQ005 -------------------------------------------------
+
+    #[test]
+    fn dead_rule_is_tq003() {
+        let info = info_with(&[("layer0.res2_sum", 8)]);
+        let mut spec = PolicySpec::uniform(8, 8);
+        spec.rules.push(rule(SiteSelector::Exact("no_such_site".into()), 16));
+        let d = lint_spec_rules(&spec, &info);
+        assert_eq!(codes(&d), ["TQ003"]);
+        assert_eq!(d[0].severity, Severity::Warn);
+    }
+
+    #[test]
+    fn fully_shadowed_rule_is_tq004() {
+        let info = info_with(&[("layer0.res2_sum", 8)]);
+        let mut spec = PolicySpec::uniform(8, 8);
+        spec.rules.push(rule(SiteSelector::Family("res2_sum".into()), 16));
+        spec.rules.push(rule(SiteSelector::Exact("layer0.res2_sum".into()), 12));
+        let d = lint_spec_rules(&spec, &info);
+        assert_eq!(codes(&d), ["TQ004"]);
+        assert!(d[0].loc.contains("rule #0"), "{}", d[0].loc);
+    }
+
+    #[test]
+    fn identical_config_overlap_is_tq005() {
+        let info = info_with(&[("layer0.res2_sum", 8), ("layer1.res2_sum", 8)]);
+        let mut spec = PolicySpec::uniform(8, 8);
+        spec.rules.push(rule(SiteSelector::Family("res2_sum".into()), 16));
+        spec.rules.push(rule(SiteSelector::Exact("layer1.res2_sum".into()), 16));
+        let d = lint_spec_rules(&spec, &info);
+        // rule #1 re-installs an identical config -> redundant, but NOT
+        // fully shadowed (it still owns layer1)
+        assert_eq!(codes(&d), ["TQ005"]);
+    }
+
+    #[test]
+    fn broad_then_specific_layering_is_clean() {
+        // the idiomatic mixed-precision shape: broad family rule, then a
+        // *different* config on one member — no findings
+        let info = info_with(&[("layer0.res2_sum", 8), ("layer1.res2_sum", 8)]);
+        let mut spec = PolicySpec::uniform(8, 8);
+        spec.rules.push(rule(SiteSelector::Family("res2_sum".into()), 16));
+        spec.rules.push(rule(SiteSelector::Exact("layer1.res2_sum".into()), 12));
+        assert!(lint_spec_rules(&spec, &info).is_empty());
+    }
+
+    // ---- TQ006/TQ007 -------------------------------------------------------
+
+    #[test]
+    fn peg_k_hazards_are_tq006() {
+        let info = info_with(&[("layer0.res2_sum", 8)]);
+        let mut policy = PolicySpec::uniform(8, 8).resolve(&info);
+        let peg = |k| SiteCfg {
+            granularity: Granularity::PerEmbeddingGroup { k, permute: true },
+            ..Default::default()
+        };
+        policy.overrides.insert("layer0.res2_sum".into(), peg(16));
+        assert_eq!(codes(&lint_policy(&policy, &info)), ["TQ006"]);
+        policy.overrides.insert("layer0.res2_sum".into(), peg(0));
+        assert_eq!(codes(&lint_policy(&policy, &info)), ["TQ006"]);
+        policy.overrides.insert("layer0.res2_sum".into(), peg(4));
+        assert!(lint_policy(&policy, &info).is_empty());
+        // disabled sites are never checked
+        policy
+            .overrides
+            .insert("layer0.res2_sum".into(), SiteCfg { enabled: false, ..peg(16) });
+        assert!(lint_policy(&policy, &info).is_empty());
+    }
+
+    #[test]
+    fn mse_tensor_on_grouped_site_is_tq007() {
+        let info = info_with(&[("layer0.res2_sum", 8)]);
+        let mut policy = PolicySpec::uniform(8, 8).resolve(&info);
+        policy.overrides.insert(
+            "layer0.res2_sum".into(),
+            SiteCfg {
+                granularity: Granularity::PerEmbedding,
+                range_method: RangeMethod::MseTensor,
+                ..Default::default()
+            },
+        );
+        assert_eq!(codes(&lint_policy(&policy, &info)), ["TQ007"]);
+    }
+
+    // ---- graph lints -------------------------------------------------------
+
+    /// Mirror of the fixture's QDQ lowering (SiteQuant::apply) for
+    /// hand-built graphs. `bounds`: None = read the act_cfg row (the
+    /// correct wiring); Some((lo, hi)) = hard-coded constants.
+    #[allow(clippy::too_many_arguments)]
+    fn qdq(
+        g: &mut GraphBuilder,
+        x: &Op,
+        idx: usize,
+        offset: usize,
+        channels: usize,
+        scales: &Op,
+        zps: &Op,
+        cfg: &Op,
+        bounds: Option<(f32, f32)>,
+    ) -> Op {
+        let dims = x.dims.clone();
+        let rank = dims.len();
+        let s = g.slice(scales, &[(offset, offset + channels)]).unwrap();
+        let z = g.slice(zps, &[(offset, offset + channels)]).unwrap();
+        let sb = g.broadcast(&s, &dims, &[rank - 1]).unwrap();
+        let zb = g.broadcast(&z, &dims, &[rank - 1]).unwrap();
+        let row = g.slice(cfg, &[(idx, idx + 1), (0, 3)]).unwrap();
+        let cell = |g: &mut GraphBuilder, j: usize| -> Op {
+            let c = g.slice(&row, &[(0, 1), (j, j + 1)]).unwrap();
+            g.reshape(&c, &[]).unwrap()
+        };
+        let (qmin_b, qmax_b) = match bounds {
+            None => {
+                let qmin = cell(g, 0);
+                let qmax = cell(g, 1);
+                (g.splat(&qmin, &dims).unwrap(), g.splat(&qmax, &dims).unwrap())
+            }
+            Some((lo, hi)) => {
+                let lo = g.const_f32(lo);
+                let hi = g.const_f32(hi);
+                (g.splat(&lo, &dims).unwrap(), g.splat(&hi, &dims).unwrap())
+            }
+        };
+        let enable = cell(g, 2);
+        let t = g.div(x, &sb).unwrap();
+        let r = g.round(&t);
+        let q = g.add(&r, &zb).unwrap();
+        let qc = g.clamp(&qmin_b, &q, &qmax_b);
+        let c1 = g.sub(&qc, &zb).unwrap();
+        let dq = g.mul(&c1, &sb).unwrap();
+        let half = g.const_f32(0.5);
+        let pred = g.compare("GT", &enable, &half).unwrap();
+        let pred_b = g.splat(&pred, &dims).unwrap();
+        g.select(&pred_b, &dq, x).unwrap()
+    }
+
+    /// Three-site residual scaffold: x -> q0; tanh -> q1; add(q0, q1) -> q2
+    /// (q2 is `layer0.res1_sum`). `quantize_producer` = false drops q1 and
+    /// feeds the raw tanh into the residual add.
+    fn residual_module(quantize_producer: bool, bounds: Option<(f32, f32)>) -> HloModule {
+        let mut g = GraphBuilder::new("mini_fwd");
+        let x = g.param(DType::F32, &[2, 8]);
+        let scales = g.param(DType::F32, &[24]);
+        let zps = g.param(DType::F32, &[24]);
+        let cfg = g.param(DType::F32, &[3, 3]);
+        let q0 = qdq(&mut g, &x, 0, 0, 8, &scales, &zps, &cfg, None);
+        let t = g.tanh(&q0);
+        let prod = if quantize_producer {
+            qdq(&mut g, &t, 1, 8, 8, &scales, &zps, &cfg, None)
+        } else {
+            t
+        };
+        let res = g.add(&q0, &prod).unwrap();
+        let out = qdq(&mut g, &res, 2, 16, 8, &scales, &zps, &cfg, bounds);
+        let text = g.finish(&[out]);
+        parse_module(&text).unwrap()
+    }
+
+    fn residual_info() -> ModelInfo {
+        info_with(&[("embed_ln_out", 8), ("layer0.attn_out", 8), ("layer0.res1_sum", 8)])
+    }
+
+    #[test]
+    fn clean_residual_graph_lints_clean() {
+        let m = residual_module(true, None);
+        let info = residual_info();
+        let policy = PolicySpec::uniform(8, 8).resolve(&info);
+        let d = lint_graph(&m, &info, &policy).unwrap();
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unquantized_residual_operand_is_tq001() {
+        let m = residual_module(false, None);
+        let info = residual_info();
+        let policy = PolicySpec::uniform(8, 8).resolve(&info);
+        let d = lint_graph(&m, &info, &policy).unwrap();
+        assert_eq!(codes(&d), ["TQ001"], "{d:?}");
+        assert!(d[0].msg.contains("not the output of any fake-quant site"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn disabled_producer_site_is_tq001() {
+        let m = residual_module(true, None);
+        let info = residual_info();
+        let mut policy = PolicySpec::uniform(8, 8).resolve(&info);
+        policy
+            .overrides
+            .insert("layer0.attn_out".into(), SiteCfg { enabled: false, ..Default::default() });
+        let d = lint_graph(&m, &info, &policy).unwrap();
+        assert_eq!(codes(&d), ["TQ001"], "{d:?}");
+        assert!(d[0].msg.contains("disabled site layer0.attn_out"), "{}", d[0].msg);
+        // disabling the residual site itself silences the check
+        policy
+            .overrides
+            .insert("layer0.res1_sum".into(), SiteCfg { enabled: false, ..Default::default() });
+        assert!(lint_graph(&m, &info, &policy).unwrap().is_empty());
+    }
+
+    #[test]
+    fn hardcoded_clamp_bounds_off_grid_is_tq002() {
+        // bounds [0, 100] on a declared 8-bit site (grid [0, 255])
+        let m = residual_module(true, Some((0.0, 100.0)));
+        let info = residual_info();
+        let policy = PolicySpec::uniform(8, 8).resolve(&info);
+        let d = lint_graph(&m, &info, &policy).unwrap();
+        assert_eq!(codes(&d), ["TQ002"], "{d:?}");
+        // bounds that match the declared grid are fine
+        let ok = residual_module(true, Some((0.0, 255.0)));
+        assert!(lint_graph(&ok, &info, &policy).unwrap().is_empty());
+        // ... and a disabled site's bounds are never judged
+        let mut off = PolicySpec::uniform(8, 8).resolve(&info);
+        off.overrides
+            .insert("layer0.res1_sum".into(), SiteCfg { enabled: false, ..Default::default() });
+        assert!(lint_graph(&m, &info, &off).unwrap().is_empty());
+    }
+
+    #[test]
+    fn mismatched_cfg_wiring_is_tq008() {
+        // qmin from row 0, qmax from row 1: not a coherent site read
+        let mut g = GraphBuilder::new("bad_fwd");
+        let x = g.param(DType::F32, &[2, 8]);
+        let scales = g.param(DType::F32, &[8]);
+        let zps = g.param(DType::F32, &[8]);
+        let cfg = g.param(DType::F32, &[1, 3]);
+        let dims = vec![2usize, 8];
+        let s = g.slice(&scales, &[(0, 8)]).unwrap();
+        let z = g.slice(&zps, &[(0, 8)]).unwrap();
+        let sb = g.broadcast(&s, &dims, &[1]).unwrap();
+        let zb = g.broadcast(&z, &dims, &[1]).unwrap();
+        let r0 = g.slice(&cfg, &[(0, 1), (0, 1)]).unwrap();
+        let qmin = g.reshape(&r0, &[]).unwrap();
+        // wrong column for qmax: reads `enable` instead
+        let r1 = g.slice(&cfg, &[(0, 1), (2, 3)]).unwrap();
+        let qmax = g.reshape(&r1, &[]).unwrap();
+        let qmin_b = g.splat(&qmin, &dims).unwrap();
+        let qmax_b = g.splat(&qmax, &dims).unwrap();
+        let t = g.div(&x, &sb).unwrap();
+        let r = g.round(&t);
+        let q = g.add(&r, &zb).unwrap();
+        let qc = g.clamp(&qmin_b, &q, &qmax_b);
+        let c1 = g.sub(&qc, &zb).unwrap();
+        let dq = g.mul(&c1, &sb).unwrap();
+        let half = g.const_f32(0.5);
+        let en = g.slice(&cfg, &[(0, 1), (2, 3)]).unwrap();
+        let en = g.reshape(&en, &[]).unwrap();
+        let pred = g.compare("GT", &en, &half).unwrap();
+        let pred_b = g.splat(&pred, &dims).unwrap();
+        let out = g.select(&pred_b, &dq, &x).unwrap();
+        let m = parse_module(&g.finish(&[out])).unwrap();
+        let info = info_with(&[("embed_ln_out", 8)]);
+        let policy = PolicySpec::uniform(8, 8).resolve(&info);
+        let d = lint_graph(&m, &info, &policy).unwrap();
+        assert_eq!(codes(&d), ["TQ008"], "{d:?}");
+        assert!(d[0].msg.contains("columns"), "{}", d[0].msg);
+    }
+
+    // ---- the real fixture lowering, across randomized topologies -----------
+
+    #[test]
+    fn fixture_forward_graphs_lint_clean_across_topologies() {
+        // property check: for randomized (d, heads, layers, seq), the
+        // fixture lowering verifies AND lints clean under a fully
+        // quantized policy — i.e. every residual site's operands really
+        // are quantized, at every size
+        let mut rng = Rng::new(0xC0FFEE);
+        for trial in 0..4 {
+            let heads = [1, 2, 4][rng.below(3)];
+            let d = heads * (2 + rng.below(3));
+            let cfg = FixtureConfig {
+                name: format!("prop{trial}"),
+                vocab: 8 + rng.below(8),
+                d,
+                heads,
+                layers: 1 + rng.below(3),
+                d_ff: 2 * d,
+                seq: 3 + rng.below(4),
+                n_out: 2,
+                outlier_dims: vec![0],
+            };
+            let art = build_forward(&cfg, 1, false, &cfg.name).unwrap();
+            let m = parse_module(&art.text).unwrap();
+            crate::hlo::verify(&m).unwrap();
+            let info = model_info(&cfg);
+            for spec in [PolicySpec::uniform(8, 8), PolicySpec::acts_only(8)] {
+                let policy = spec.resolve(&info);
+                let d = lint_graph(&m, &info, &policy).unwrap();
+                assert!(d.is_empty(), "cfg {:?}: {d:?}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn all_presets_lint_clean_on_fixture_topology() {
+        // `repro lint`'s deny gate over the preset registry, minus the
+        // on-disk manifest: every preset x the fixture base topology
+        let base = crate::hlo::fixture::base_config();
+        let art = build_forward(&base, 1, false, "fwd_cls_b1").unwrap();
+        let m = parse_module(&art.text).unwrap();
+        let info = model_info(&base);
+        for name in presets::preset_names() {
+            let spec = presets::preset(name).unwrap();
+            let mut d = lint_spec_rules(&spec.policy, &info);
+            let policy = spec.policy.resolve(&info);
+            d.extend(lint_policy(&policy, &info));
+            d.extend(lint_graph(&m, &info, &policy).unwrap());
+            let denies: Vec<&Diag> =
+                d.iter().filter(|x| x.severity == Severity::Deny).collect();
+            assert!(denies.is_empty(), "preset {name}: {denies:?}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Static analysis over quantization specs and lowered graphs
+//! (DESIGN.md §13).
+//!
+//! [`crate::hlo::verify`](mod@crate::hlo::verify) answers "is this
+//! module well-formed?"; this
+//! layer answers "is this *quantization configuration* of a well-formed
+//! module going to silently hurt accuracy?" — the hazards the paper
+//! traces to specific graph sites (residual-sum outliers, §3) or to
+//! spec/topology mismatches that the runtime only surfaces deep inside a
+//! calibration run, if at all.
+
+pub mod lint;
+
+pub use lint::{cmd_lint, lint_graph, lint_policy, lint_spec_rules, Diag, Severity};

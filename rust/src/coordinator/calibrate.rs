@@ -9,7 +9,8 @@
 //!
 //! Execution shape: the diag taps for one sequence do not depend on the
 //! estimator state, so every sequence of every calibration batch is
-//! independent — they fan out through [`Runtime::run_batch`] on
+//! independent — they fan out through
+//! [`Runtime::run_batch`](crate::runtime::Runtime::run_batch) on
 //! `ctx.pool`, one bounded window (a pool's worth of batches) at a time
 //! so peak tap memory stays proportional to the window, not the whole
 //! run. The estimators then observe the reassembled taps strictly in

@@ -2,7 +2,8 @@
 //! the per-task GLUE scores of the paper's tables.
 //!
 //! The per-batch executions are independent, so the hot loop fans out
-//! over `ctx.pool` via [`Runtime::run_batch`]: input-literal prep for one
+//! over `ctx.pool` via [`Runtime::run_batch`](crate::runtime::Runtime::run_batch):
+//! input-literal prep for one
 //! batch overlaps execution of others, and logits are reassembled in
 //! batch order, keeping the metric stream — and therefore the score —
 //! bit-identical to a serial run (pinned by tests/determinism.rs).

@@ -18,7 +18,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::builder::{GraphBuilder, Op};
 use super::DType;
@@ -656,6 +656,13 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
 
     let mut artifacts = BTreeMap::new();
     for (name, art) in &jobs {
+        // every emitted module must pass the static verifier before it is
+        // written: gen-artifacts never ships a graph the runtime's cache
+        // admission gate would then reject
+        let module = super::parse_module(&art.text)
+            .with_context(|| format!("parsing generated artifact {name}"))?;
+        super::verify::verify(&module)
+            .with_context(|| format!("verifying generated artifact {name}"))?;
         let fname = format!("{name}.hlo.txt");
         std::fs::write(out_dir.join(&fname), &art.text)?;
         artifacts.insert(
@@ -875,10 +882,13 @@ mod tests {
         assert!(manifest.model("base").is_ok());
         assert!(manifest.model("base_reg").is_ok());
         assert!(manifest.golden_fake_quant.is_some());
-        // every artifact file parses
+        // golden gate: every artifact file parses AND passes the static
+        // verifier — gen-artifacts must never ship a module the runtime's
+        // cache-admission check would reject
         for a in manifest.artifacts.values() {
             let text = std::fs::read_to_string(&a.file).unwrap();
-            parse_module(&text).unwrap();
+            let m = parse_module(&text).unwrap();
+            crate::hlo::verify(&m).unwrap_or_else(|e| panic!("{}: {e:#}", a.name));
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -57,7 +57,11 @@ fn eval_computation(module: &HloModule, comp: &Computation, args: &[&Value]) -> 
     for (i, inst) in comp.insts.iter().enumerate() {
         let v = eval_inst(module, comp, &env, inst, args)
             .with_context(|| format!("in %{} = {}(..)", inst.name, inst.opcode))?;
-        check_dims(inst, &v)?;
+        // statically proven for any module admitted through the runtime
+        // cache or `Plan::build` (see `hlo::verify`); debug-only re-check
+        if cfg!(debug_assertions) {
+            check_dims(inst, &v)?;
+        }
         env[i] = Some(v);
     }
     env[comp.root]

@@ -22,6 +22,10 @@
 //!                 liveness, elementwise fusion, borrowed parameters);
 //!                 the runtime's interpreted hot path. Bit-identical to
 //!                 [`interp`] by construction.
+//! * [`verify`](mod@verify) — static whole-module shape/dtype verifier
+//!                 (TQ1xx diagnostics); runs before plan build and cache
+//!                 admission so dynamic per-op checks in [`interp`] and
+//!                 [`plan`] can retreat behind `debug_assertions`.
 //! * [`builder`] — emits HLO text (the same dialect the parser reads);
 //!                 used by the fixture generator.
 //! * [`fixture`] — `repro gen-artifacts`: a small self-consistent
@@ -35,12 +39,14 @@ pub mod interp;
 pub mod parser;
 pub mod plan;
 pub(crate) mod train_graph;
+pub mod verify;
 
 use anyhow::{bail, Result};
 
 pub use interp::{interpret, interpret_refs};
 pub use parser::{parse_module, Computation, HloModule, Inst};
 pub use plan::Plan;
+pub use verify::{verify, verify_module, VerifyDiag};
 
 /// Element types the toolchain supports (the subset tq's graphs use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -8,7 +8,7 @@
 //!   execution).
 //! * **Constant materialisation** — `constant` literals are parsed once
 //!   and borrowed by every execution.
-//! * **Borrowed parameters** — the env is a vector of [`Slot`]s, a
+//! * **Borrowed parameters** — the env is a vector of `Slot`s, a
 //!   `Cow`-style cell that lets parameter tensors be *borrowed* from the
 //!   caller instead of cloned per execution, which is what makes
 //!   `Runtime::run_batch`'s shared static inputs zero-copy per item.
@@ -22,9 +22,9 @@
 //!   stores only for values observable outside the fused group.
 //!
 //! Numerical contract: every fused kernel calls the *same* scalar
-//! functions as the naive engine ([`BinOp::f32`], [`UnOp::f32`],
-//! [`cmp_f32`], the `max(lo).min(hi)` clamp), preds are encoded as exact
-//! 1.0/0.0, and `dot` uses [`interp::dot_general_fast`] whose every path
+//! functions as the naive engine (`BinOp::f32`, `UnOp::f32`,
+//! `cmp_f32`, the `max(lo).min(hi)` clamp), preds are encoded as exact
+//! 1.0/0.0, and `dot` uses `interp::dot_general_fast` whose every path
 //! accumulates in ascending-k order from 0.0 — so planned results are
 //! bit-identical to the naive interpreter by construction, not by
 //! tolerance. `tests/determinism.rs` pins this across engines and thread
@@ -222,7 +222,13 @@ impl Plan {
     /// structural errors the naive engine would only hit at eval time
     /// (unknown operands, bad attributes, malformed literals) surface
     /// here instead, so callers can fall back to the naive engine.
+    ///
+    /// Build starts with the static verifier
+    /// ([`crate::hlo::verify`](fn@crate::hlo::verify)),
+    /// so a plan only ever exists for a shape/dtype-consistent module —
+    /// the per-step shape checks in [`Plan::execute`] are debug-only.
     pub fn build(module: &HloModule) -> Result<Plan> {
+        super::verify::verify(module).context("planning")?;
         let comp = module.entry();
         let n = comp.insts.len();
 
@@ -827,7 +833,10 @@ impl Plan {
                     Slot::Empty => bail!("output {k}: slot not evaluated"),
                 }
             };
-            check_shape(&o.shape, &v).with_context(|| format!("output {k}"))?;
+            // proven statically at build time (verify); debug-only re-check
+            if cfg!(debug_assertions) {
+                check_shape(&o.shape, &v).with_context(|| format!("output {k}"))?;
+            }
             res.push(v);
         }
         if self.root_is_tuple {
@@ -858,7 +867,9 @@ fn run_step<'a>(step: &'a Step, env: &mut [Slot<'a>]) -> Result<()> {
                         bail!("reshape: {} elements cannot view as {dims:?}", v.len());
                     }
                     let v = interp::with_dims(v, dims.clone());
-                    check_shape(shape, &v)?;
+                    if cfg!(debug_assertions) {
+                        check_shape(shape, &v)?;
+                    }
                     env[*out] = Slot::Own(v);
                     for &s in &step.frees {
                         env[s] = Slot::Empty;
@@ -877,7 +888,9 @@ fn run_step<'a>(step: &'a Step, env: &mut [Slot<'a>]) -> Result<()> {
                     .collect::<Result<_>>()?;
                 eval_plain(op, &vals)?
             };
-            check_shape(shape, &v)?;
+            if cfg!(debug_assertions) {
+                check_shape(shape, &v)?;
+            }
             env[*out] = Slot::Own(v);
             for &s in &step.frees {
                 env[s] = Slot::Empty;

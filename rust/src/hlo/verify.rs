@@ -1,0 +1,1154 @@
+//! Static shape/dtype verifier for parsed HLO modules.
+//!
+//! One full inference pass over every computation in an [`HloModule`]:
+//! for each instruction the verifier re-derives the output shape and
+//! element type from the operand *declarations* and the instruction's
+//! attributes, then demands the declaration match. Because every
+//! instruction is checked, "declared" and "inferred" operand shapes are
+//! interchangeable — a single linear pass gives whole-module soundness.
+//!
+//! The verifier runs at the three graph choke points (executable-cache
+//! admission in `runtime`, [`crate::hlo::Plan::build`], and
+//! `repro gen-artifacts`), which is what lets the interpreter's and the
+//! planned engine's per-execution shape checks retreat behind
+//! `debug_assertions`: a module that reaches execution has already been
+//! proven shape/dtype-consistent.
+//!
+//! Diagnostics carry stable codes (see DESIGN.md §13 for the catalog):
+//!
+//! | code  | meaning                                                    |
+//! |-------|------------------------------------------------------------|
+//! | TQ101 | duplicate instruction name inside a computation            |
+//! | TQ102 | operand undefined or not defined before use                |
+//! | TQ103 | operand arity wrong for the opcode                         |
+//! | TQ104 | unsupported opcode                                         |
+//! | TQ105 | declared shape/dtype differs from the inferred one         |
+//! | TQ106 | attribute missing, malformed, or inconsistent with shapes  |
+//! | TQ107 | operand element type / kind unsupported for the op         |
+//!
+//! (TQ100 is reserved for parse failures and emitted by `repro lint`.)
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::parser::{parse_literal_numbers, parse_slice_ranges, Computation, HloModule, Inst};
+use super::{DType, Shape};
+
+/// One verifier finding. All verifier findings are deny-severity: a
+/// module that produces any cannot be admitted for execution.
+#[derive(Debug, Clone)]
+pub struct VerifyDiag {
+    /// stable diagnostic code (`TQ101`..`TQ107`)
+    pub code: &'static str,
+    /// computation the instruction lives in
+    pub comp: String,
+    /// instruction name (no leading `%`)
+    pub inst: String,
+    pub msg: String,
+}
+
+impl fmt::Display for VerifyDiag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] %{}/%{}: {}", self.code, self.comp, self.inst, self.msg)
+    }
+}
+
+/// Verify every computation in the module; returns all findings (empty
+/// means the module is statically shape/dtype-consistent).
+pub fn verify_module(m: &HloModule) -> Vec<VerifyDiag> {
+    let mut out = Vec::new();
+    for c in &m.computations {
+        verify_computation(m, c, &mut out);
+    }
+    out
+}
+
+/// [`verify_module`] as a hard gate: `Err` lists the findings.
+pub fn verify(m: &HloModule) -> Result<()> {
+    let diags = verify_module(m);
+    if diags.is_empty() {
+        return Ok(());
+    }
+    const SHOW: usize = 12;
+    let mut lines: Vec<String> = diags.iter().take(SHOW).map(|d| format!("  {d}")).collect();
+    if diags.len() > SHOW {
+        lines.push(format!("  ... and {} more", diags.len() - SHOW));
+    }
+    bail!(
+        "module {}: {} verifier finding(s):\n{}",
+        m.name,
+        diags.len(),
+        lines.join("\n")
+    );
+}
+
+/// Inference failure local to one instruction: code + message, located
+/// by the caller.
+struct Fail {
+    code: &'static str,
+    msg: String,
+}
+
+fn fail(code: &'static str, msg: impl Into<String>) -> Fail {
+    Fail { code, msg: msg.into() }
+}
+
+type IResult = std::result::Result<Shape, Fail>;
+
+fn verify_computation(m: &HloModule, c: &Computation, out: &mut Vec<VerifyDiag>) {
+    let push = |out: &mut Vec<VerifyDiag>, inst: &Inst, f: Fail| {
+        out.push(VerifyDiag {
+            code: f.code,
+            comp: c.name.clone(),
+            inst: inst.name.clone(),
+            msg: f.msg,
+        });
+    };
+
+    // duplicate names: the parser rejects these in text, but modules can
+    // be built programmatically, so re-check against the name index.
+    let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, inst) in c.insts.iter().enumerate() {
+        if let Some(first) = seen.insert(inst.name.as_str(), i) {
+            push(
+                out,
+                inst,
+                fail(
+                    "TQ101",
+                    format!("duplicate instruction name (first defined at index {first})"),
+                ),
+            );
+        }
+    }
+
+    for (i, inst) in c.insts.iter().enumerate() {
+        // def-before-use over the name index
+        let mut operands_ok = true;
+        for op in &inst.operands {
+            match c.index.get(op) {
+                Some(&j) if j < i => {}
+                Some(_) => {
+                    operands_ok = false;
+                    push(out, inst, fail("TQ102", format!("operand %{op} used before definition")));
+                }
+                None => {
+                    operands_ok = false;
+                    push(out, inst, fail("TQ102", format!("operand %{op} is not defined")));
+                }
+            }
+        }
+        if !operands_ok {
+            continue;
+        }
+        if let Err(f) = check_arity(inst) {
+            push(out, inst, f);
+            continue;
+        }
+        let ops: Vec<&Shape> = inst.operands.iter().map(|o| &c.insts[c.index[o]].shape).collect();
+        match infer(m, inst, &ops) {
+            Ok(inferred) => {
+                if inferred != inst.shape {
+                    push(
+                        out,
+                        inst,
+                        fail(
+                            "TQ105",
+                            format!(
+                                "declared {} but inferred {}",
+                                shape_str(&inst.shape),
+                                shape_str(&inferred)
+                            ),
+                        ),
+                    );
+                }
+            }
+            Err(f) => push(out, inst, f),
+        }
+    }
+}
+
+fn shape_str(s: &Shape) -> String {
+    match s {
+        Shape::Array { dtype, dims } => {
+            let d: Vec<String> = dims.iter().map(usize::to_string).collect();
+            format!("{}[{}]", dtype.name(), d.join(","))
+        }
+        Shape::Tuple(parts) => {
+            let p: Vec<String> = parts.iter().map(shape_str).collect();
+            format!("({})", p.join(", "))
+        }
+    }
+}
+
+const UNARY_OPS: &[&str] = &[
+    "exp",
+    "exponential",
+    "tanh",
+    "rsqrt",
+    "sqrt",
+    "log",
+    "negate",
+    "abs",
+    "floor",
+    "ceil",
+    "round-nearest-afz",
+];
+
+const BINARY_OPS: &[&str] =
+    &["add", "subtract", "multiply", "divide", "maximum", "minimum", "power"];
+
+/// (min, max) operand count per opcode; `None` = unsupported opcode.
+fn arity_of(opcode: &str) -> Option<(usize, usize)> {
+    if UNARY_OPS.contains(&opcode) {
+        return Some((1, 1));
+    }
+    if BINARY_OPS.contains(&opcode) {
+        return Some((2, 2));
+    }
+    Some(match opcode {
+        "parameter" | "constant" | "iota" => (0, 0),
+        "broadcast" | "reshape" | "transpose" | "slice" | "convert" | "get-tuple-element" => (1, 1),
+        "dot" | "dot-general" | "compare" | "reduce" | "gather" => (2, 2),
+        "clamp" | "select" => (3, 3),
+        "concatenate" => (1, usize::MAX),
+        "tuple" => (0, usize::MAX),
+        _ => return None,
+    })
+}
+
+fn check_arity(inst: &Inst) -> std::result::Result<(), Fail> {
+    match arity_of(&inst.opcode) {
+        None => Err(fail("TQ104", format!("unsupported opcode {:?}", inst.opcode))),
+        Some((lo, hi)) => {
+            let n = inst.operands.len();
+            if n < lo || n > hi {
+                let want = if lo == hi {
+                    format!("{lo}")
+                } else if hi == usize::MAX {
+                    format!("at least {lo}")
+                } else {
+                    format!("{lo}..{hi}")
+                };
+                Err(fail(
+                    "TQ103",
+                    format!("{} takes {want} operand(s), got {n}", inst.opcode),
+                ))
+            } else {
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Array-shape accessor: tuple operands are a kind error for every op
+/// except `tuple`/`get-tuple-element`, which handle tuples themselves.
+fn arr<'a>(s: &'a Shape, what: &str) -> std::result::Result<(DType, &'a [usize]), Fail> {
+    match s {
+        Shape::Array { dtype, dims } => Ok((*dtype, dims)),
+        Shape::Tuple(_) => Err(fail("TQ107", format!("{what} operand is a tuple, expected an array"))),
+    }
+}
+
+fn numeric(dt: DType, what: &str) -> std::result::Result<(), Fail> {
+    match dt {
+        DType::F32 | DType::S32 => Ok(()),
+        DType::Pred => Err(fail("TQ107", format!("{what} must be f32 or s32, got pred"))),
+    }
+}
+
+fn elems(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+fn attr_err(e: anyhow::Error) -> Fail {
+    fail("TQ106", format!("{e:#}"))
+}
+
+/// Infer the output shape of `inst` from its operand shapes. Every rule
+/// mirrors the corresponding kernel in [`crate::hlo::interp`] (this
+/// module is deliberately *no weaker*; where noted it is slightly
+/// stricter than the interpreter's length-based checks, and everything
+/// the builder emits satisfies the stricter rule).
+fn infer(m: &HloModule, inst: &Inst, ops: &[&Shape]) -> IResult {
+    match inst.opcode.as_str() {
+        "parameter" => {
+            inst.payload
+                .as_deref()
+                .unwrap_or("")
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| fail("TQ106", format!("bad parameter payload {:?}", inst.payload)))?;
+            Ok(inst.shape.clone())
+        }
+        "constant" => {
+            let (_, dims) = arr(&inst.shape, "constant")?;
+            let lit = parse_literal_numbers(inst.payload.as_deref().unwrap_or(""))
+                .map_err(attr_err)?;
+            if lit.len() != elems(dims) {
+                return Err(fail(
+                    "TQ106",
+                    format!("literal has {} element(s), shape wants {}", lit.len(), elems(dims)),
+                ));
+            }
+            Ok(inst.shape.clone())
+        }
+        "broadcast" => {
+            let (dt, idims) = arr(ops[0], "broadcast")?;
+            let (odt, odims) = arr(&inst.shape, "broadcast output")?;
+            if odt != dt {
+                return Err(fail(
+                    "TQ105",
+                    format!("broadcast changes dtype {} -> {}", dt.name(), odt.name()),
+                ));
+            }
+            let map = inst.attr_dims_or("dimensions", &[]).map_err(attr_err)?;
+            if map.len() != idims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!("dimensions has {} entries for rank-{} operand", map.len(), idims.len()),
+                ));
+            }
+            for (k, &d) in map.iter().enumerate() {
+                if d >= odims.len() {
+                    return Err(fail(
+                        "TQ106",
+                        format!("dimensions[{k}]={d} out of range for rank-{} output", odims.len()),
+                    ));
+                }
+                if odims[d] != idims[k] {
+                    return Err(fail(
+                        "TQ106",
+                        format!(
+                            "operand dim {k} (size {}) maps to output dim {d} (size {})",
+                            idims[k], odims[d]
+                        ),
+                    ));
+                }
+            }
+            Ok(inst.shape.clone())
+        }
+        "reshape" => {
+            let (dt, idims) = arr(ops[0], "reshape")?;
+            let (odt, odims) = arr(&inst.shape, "reshape output")?;
+            if odt != dt {
+                return Err(fail(
+                    "TQ105",
+                    format!("reshape changes dtype {} -> {}", dt.name(), odt.name()),
+                ));
+            }
+            if elems(idims) != elems(odims) {
+                return Err(fail(
+                    "TQ106",
+                    format!(
+                        "element count changes {} -> {}",
+                        elems(idims),
+                        elems(odims)
+                    ),
+                ));
+            }
+            Ok(inst.shape.clone())
+        }
+        "transpose" => {
+            let (dt, idims) = arr(ops[0], "transpose")?;
+            let perm = inst.attr_dims("dimensions").map_err(attr_err)?;
+            if perm.len() != idims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!("permutation has {} entries for rank {}", perm.len(), idims.len()),
+                ));
+            }
+            let mut hit = vec![false; idims.len()];
+            for &p in &perm {
+                if p >= idims.len() || hit[p] {
+                    return Err(fail("TQ106", format!("dimensions={perm:?} is not a permutation")));
+                }
+                hit[p] = true;
+            }
+            let odims: Vec<usize> = perm.iter().map(|&p| idims[p]).collect();
+            Ok(Shape::Array { dtype: dt, dims: odims })
+        }
+        "slice" => {
+            let (dt, idims) = arr(ops[0], "slice")?;
+            let ranges =
+                parse_slice_ranges(inst.attr_str("slice").map_err(attr_err)?).map_err(attr_err)?;
+            if ranges.len() != idims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!("slice has {} ranges for rank {}", ranges.len(), idims.len()),
+                ));
+            }
+            let mut odims = Vec::with_capacity(idims.len());
+            for (d, &(lo, hi, st)) in ranges.iter().enumerate() {
+                if st == 0 {
+                    return Err(fail("TQ106", format!("slice dim {d}: zero stride")));
+                }
+                if lo > hi || hi > idims[d] {
+                    return Err(fail(
+                        "TQ106",
+                        format!("slice dim {d}: [{lo}:{hi}] out of range for size {}", idims[d]),
+                    ));
+                }
+                odims.push((hi - lo).div_ceil(st));
+            }
+            Ok(Shape::Array { dtype: dt, dims: odims })
+        }
+        "concatenate" => {
+            let (dt0, d0) = arr(ops[0], "concatenate")?;
+            numeric(dt0, "concatenate")?;
+            let dims_attr = inst.attr_dims("dimensions").map_err(attr_err)?;
+            let [axis] = dims_attr[..] else {
+                return Err(fail(
+                    "TQ106",
+                    format!("dimensions={dims_attr:?}, expected exactly one axis"),
+                ));
+            };
+            if axis >= d0.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!("axis {axis} out of range for rank {}", d0.len()),
+                ));
+            }
+            let mut odims = d0.to_vec();
+            let mut total = d0[axis];
+            for (k, s) in ops.iter().enumerate().skip(1) {
+                let (dt, d) = arr(s, "concatenate")?;
+                if dt != dt0 {
+                    return Err(fail("TQ107", "concatenate operand dtypes differ".to_string()));
+                }
+                if d.len() != d0.len() {
+                    return Err(fail("TQ106", format!("operand {k} rank differs")));
+                }
+                for (ax, (&a, &b)) in d0.iter().zip(d).enumerate() {
+                    if ax != axis && a != b {
+                        return Err(fail(
+                            "TQ106",
+                            format!("operand {k} dim {ax}: {b} != {a} (non-axis dims must match)"),
+                        ));
+                    }
+                }
+                total += d[axis];
+            }
+            odims[axis] = total;
+            Ok(Shape::Array { dtype: dt0, dims: odims })
+        }
+        "dot" | "dot-general" => {
+            let (ldt, ldims) = arr(ops[0], "dot lhs")?;
+            let (rdt, rdims) = arr(ops[1], "dot rhs")?;
+            if ldt != DType::F32 || rdt != DType::F32 {
+                return Err(fail("TQ107", "dot operands must be f32".to_string()));
+            }
+            let lb = inst.attr_dims_or("lhs_batch_dims", &[]).map_err(attr_err)?;
+            let rb = inst.attr_dims_or("rhs_batch_dims", &[]).map_err(attr_err)?;
+            let lc = inst.attr_dims_or("lhs_contracting_dims", &[]).map_err(attr_err)?;
+            let rc = inst.attr_dims_or("rhs_contracting_dims", &[]).map_err(attr_err)?;
+            if lb.len() != rb.len() {
+                return Err(fail("TQ106", "lhs/rhs batch dim counts differ".to_string()));
+            }
+            if lc.len() != rc.len() {
+                return Err(fail("TQ106", "lhs/rhs contracting dim counts differ".to_string()));
+            }
+            for (&d, side, rank) in lb
+                .iter()
+                .map(|d| (d, "lhs_batch", ldims.len()))
+                .chain(rb.iter().map(|d| (d, "rhs_batch", rdims.len())))
+                .chain(lc.iter().map(|d| (d, "lhs_contracting", ldims.len())))
+                .chain(rc.iter().map(|d| (d, "rhs_contracting", rdims.len())))
+            {
+                if d >= rank {
+                    return Err(fail(
+                        "TQ106",
+                        format!("{side} dim {d} out of range for rank {rank}"),
+                    ));
+                }
+            }
+            for (k, (&l, &r)) in lb.iter().zip(&rb).enumerate() {
+                if ldims[l] != rdims[r] {
+                    return Err(fail(
+                        "TQ106",
+                        format!("batch dim {k}: lhs size {} != rhs size {}", ldims[l], rdims[r]),
+                    ));
+                }
+            }
+            for (k, (&l, &r)) in lc.iter().zip(&rc).enumerate() {
+                if ldims[l] != rdims[r] {
+                    return Err(fail(
+                        "TQ106",
+                        format!(
+                            "contracting dim {k}: lhs size {} != rhs size {}",
+                            ldims[l], rdims[r]
+                        ),
+                    ));
+                }
+            }
+            let mut odims: Vec<usize> = lb.iter().map(|&d| ldims[d]).collect();
+            for (d, &s) in ldims.iter().enumerate() {
+                if !lb.contains(&d) && !lc.contains(&d) {
+                    odims.push(s);
+                }
+            }
+            for (d, &s) in rdims.iter().enumerate() {
+                if !rb.contains(&d) && !rc.contains(&d) {
+                    odims.push(s);
+                }
+            }
+            Ok(Shape::Array { dtype: DType::F32, dims: odims })
+        }
+        op if BINARY_OPS.contains(&op) => {
+            let (adt, adims) = arr(ops[0], op)?;
+            let (bdt, bdims) = arr(ops[1], op)?;
+            if adt != bdt {
+                return Err(fail(
+                    "TQ107",
+                    format!("{op} operand dtypes differ: {} vs {}", adt.name(), bdt.name()),
+                ));
+            }
+            numeric(adt, op)?;
+            if op == "power" && adt == DType::S32 {
+                return Err(fail("TQ107", "power is not defined on s32".to_string()));
+            }
+            if adims != bdims {
+                return Err(fail(
+                    "TQ106",
+                    format!("{op} operand dims differ: {adims:?} vs {bdims:?}"),
+                ));
+            }
+            Ok(ops[0].clone())
+        }
+        op if UNARY_OPS.contains(&op) => {
+            let (dt, _) = arr(ops[0], op)?;
+            match dt {
+                DType::F32 => {}
+                DType::S32 if matches!(op, "negate" | "abs") => {}
+                other => {
+                    return Err(fail(
+                        "TQ107",
+                        format!("{op} is not defined on {}", other.name()),
+                    ))
+                }
+            }
+            Ok(ops[0].clone())
+        }
+        "clamp" => {
+            let (xdt, xdims) = arr(ops[1], "clamp value")?;
+            if xdt != DType::F32 {
+                return Err(fail("TQ107", "clamp value must be f32".to_string()));
+            }
+            for (s, what) in [(ops[0], "clamp lo"), (ops[2], "clamp hi")] {
+                let (dt, dims) = arr(s, what)?;
+                if dt != DType::F32 {
+                    return Err(fail("TQ107", format!("{what} must be f32")));
+                }
+                // stricter than the interpreter's element-count check:
+                // bounds are a scalar or exactly the value's shape
+                if elems(dims) != 1 && dims != xdims {
+                    return Err(fail(
+                        "TQ106",
+                        format!("{what} dims {dims:?} are neither scalar nor {xdims:?}"),
+                    ));
+                }
+            }
+            Ok(ops[1].clone())
+        }
+        "select" => {
+            let (pdt, pdims) = arr(ops[0], "select pred")?;
+            if pdt != DType::Pred {
+                return Err(fail("TQ107", "select predicate must be pred".to_string()));
+            }
+            let (tdt, tdims) = arr(ops[1], "select on-true")?;
+            let (fdt, fdims) = arr(ops[2], "select on-false")?;
+            if tdt != fdt {
+                return Err(fail("TQ107", "select branch dtypes differ".to_string()));
+            }
+            numeric(tdt, "select branches")?;
+            if tdims != fdims {
+                return Err(fail(
+                    "TQ106",
+                    format!("select branch dims differ: {tdims:?} vs {fdims:?}"),
+                ));
+            }
+            if elems(pdims) != 1 && pdims != tdims {
+                return Err(fail(
+                    "TQ106",
+                    format!("select pred dims {pdims:?} are neither scalar nor {tdims:?}"),
+                ));
+            }
+            Ok(ops[1].clone())
+        }
+        "compare" => {
+            let dir = inst.attr_str("direction").map_err(attr_err)?;
+            if !matches!(dir, "EQ" | "NE" | "LT" | "LE" | "GT" | "GE") {
+                return Err(fail("TQ106", format!("unknown compare direction {dir:?}")));
+            }
+            let (adt, adims) = arr(ops[0], "compare")?;
+            let (bdt, bdims) = arr(ops[1], "compare")?;
+            if adt != bdt {
+                return Err(fail("TQ107", "compare operand dtypes differ".to_string()));
+            }
+            numeric(adt, "compare")?;
+            if adims != bdims {
+                return Err(fail(
+                    "TQ106",
+                    format!("compare operand dims differ: {adims:?} vs {bdims:?}"),
+                ));
+            }
+            Ok(Shape::Array { dtype: DType::Pred, dims: adims.to_vec() })
+        }
+        "convert" => {
+            let (idt, idims) = arr(ops[0], "convert")?;
+            let (odt, odims) = arr(&inst.shape, "convert output")?;
+            let ok = matches!(
+                (idt, odt),
+                (DType::F32, DType::S32)
+                    | (DType::S32, DType::F32)
+                    | (DType::Pred, DType::F32)
+                    | (DType::Pred, DType::S32)
+                    | (DType::F32, DType::F32)
+                    | (DType::S32, DType::S32)
+            );
+            if !ok {
+                return Err(fail(
+                    "TQ107",
+                    format!("convert {} -> {} is unsupported", idt.name(), odt.name()),
+                ));
+            }
+            if idims != odims {
+                return Err(fail(
+                    "TQ106",
+                    format!("convert changes dims {idims:?} -> {odims:?}"),
+                ));
+            }
+            Ok(inst.shape.clone())
+        }
+        "iota" => {
+            let (dt, dims) = arr(&inst.shape, "iota output")?;
+            numeric(dt, "iota")?;
+            let d = inst.attr_usize("iota_dimension").map_err(attr_err)?;
+            if d >= dims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!("iota_dimension {d} out of range for rank {}", dims.len()),
+                ));
+            }
+            Ok(inst.shape.clone())
+        }
+        "reduce" => {
+            let (ddt, ddims) = arr(ops[0], "reduce data")?;
+            if ddt != DType::F32 {
+                return Err(fail("TQ107", "reduce data must be f32".to_string()));
+            }
+            let (idt, idims) = arr(ops[1], "reduce init")?;
+            if idt != DType::F32 || elems(idims) != 1 {
+                return Err(fail("TQ107", "reduce init must be a scalar f32".to_string()));
+            }
+            let rdims = inst.attr_dims("dimensions").map_err(attr_err)?;
+            let mut hit = vec![false; ddims.len()];
+            for &d in &rdims {
+                if d >= ddims.len() {
+                    return Err(fail(
+                        "TQ106",
+                        format!("reduce dim {d} out of range for rank {}", ddims.len()),
+                    ));
+                }
+                if hit[d] {
+                    return Err(fail("TQ106", format!("reduce dim {d} repeated")));
+                }
+                hit[d] = true;
+            }
+            let apply = inst
+                .attr_str("to_apply")
+                .map_err(attr_err)?
+                .trim_start_matches('%');
+            let comb = m
+                .computations
+                .iter()
+                .find(|c| c.name == apply)
+                .ok_or_else(|| fail("TQ106", format!("to_apply=%{apply}: no such computation")))?;
+            let root_op = comb.insts[comb.root].opcode.as_str();
+            if !matches!(root_op, "add" | "maximum" | "minimum" | "multiply") {
+                return Err(fail(
+                    "TQ106",
+                    format!("to_apply=%{apply}: unsupported combinator {root_op:?}"),
+                ));
+            }
+            let odims: Vec<usize> = ddims
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| !hit[*d])
+                .map(|(_, &s)| s)
+                .collect();
+            Ok(Shape::Array { dtype: DType::F32, dims: odims })
+        }
+        "tuple" => {
+            let Shape::Tuple(parts) = &inst.shape else {
+                return Err(fail("TQ105", "tuple output declared as an array".to_string()));
+            };
+            if parts.len() != ops.len() {
+                return Err(fail(
+                    "TQ105",
+                    format!("declared arity {} but {} operand(s)", parts.len(), ops.len()),
+                ));
+            }
+            Ok(Shape::Tuple(ops.iter().map(|s| (*s).clone()).collect()))
+        }
+        "get-tuple-element" => {
+            let Shape::Tuple(parts) = ops[0] else {
+                return Err(fail("TQ107", "get-tuple-element operand is not a tuple".to_string()));
+            };
+            let idx = inst.attr_usize("index").map_err(attr_err)?;
+            let part = parts.get(idx).ok_or_else(|| {
+                fail("TQ106", format!("index {idx} out of range for arity {}", parts.len()))
+            })?;
+            Ok(part.clone())
+        }
+        "gather" => {
+            let (odt, odims) = arr(ops[0], "gather operand")?;
+            if odt != DType::F32 {
+                return Err(fail("TQ107", "gather operand must be f32".to_string()));
+            }
+            let (idt, idims) = arr(ops[1], "gather indices")?;
+            if idt != DType::S32 {
+                return Err(fail("TQ107", "gather indices must be s32".to_string()));
+            }
+            let offset_dims = inst.attr_dims("offset_dims").map_err(attr_err)?;
+            let collapsed = inst.attr_dims_or("collapsed_slice_dims", &[]).map_err(attr_err)?;
+            let start_map = inst.attr_dims("start_index_map").map_err(attr_err)?;
+            let ivd = inst.attr_usize("index_vector_dim").map_err(attr_err)?;
+            let slice_sizes = inst.attr_dims("slice_sizes").map_err(attr_err)?;
+            if slice_sizes.len() != odims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!(
+                        "slice_sizes has {} entries for rank-{} operand",
+                        slice_sizes.len(),
+                        odims.len()
+                    ),
+                ));
+            }
+            for (d, (&sz, &lim)) in slice_sizes.iter().zip(odims).enumerate() {
+                if sz > lim {
+                    return Err(fail(
+                        "TQ106",
+                        format!("slice_sizes[{d}]={sz} exceeds operand dim {lim}"),
+                    ));
+                }
+            }
+            for &d in start_map.iter().chain(&collapsed) {
+                if d >= odims.len() {
+                    return Err(fail(
+                        "TQ106",
+                        format!("operand dim {d} out of range for rank {}", odims.len()),
+                    ));
+                }
+            }
+            if ivd > idims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!("index_vector_dim {ivd} out of range for rank {}", idims.len()),
+                ));
+            }
+            let index_len = if ivd == idims.len() { 1 } else { idims[ivd] };
+            if index_len != start_map.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!(
+                        "start_index_map has {} entries but index vectors have {index_len}",
+                        start_map.len()
+                    ),
+                ));
+            }
+            let batch: Vec<usize> = idims
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| *d != ivd)
+                .map(|(_, &s)| s)
+                .collect();
+            let kept: Vec<usize> = (0..odims.len()).filter(|d| !collapsed.contains(d)).collect();
+            if kept.len() != offset_dims.len() {
+                return Err(fail(
+                    "TQ106",
+                    format!(
+                        "offset_dims has {} entries but {} slice dim(s) survive collapsing",
+                        offset_dims.len(),
+                        kept.len()
+                    ),
+                ));
+            }
+            let out_rank = batch.len() + offset_dims.len();
+            let mut slots: Vec<Option<usize>> = vec![None; out_rank];
+            for (k, &d) in offset_dims.iter().enumerate() {
+                if d >= out_rank || slots[d].is_some() {
+                    return Err(fail(
+                        "TQ106",
+                        format!("offset_dims={offset_dims:?} invalid for output rank {out_rank}"),
+                    ));
+                }
+                slots[d] = Some(slice_sizes[kept[k]]);
+            }
+            let mut batch_it = batch.into_iter();
+            let out: Vec<usize> = slots
+                .into_iter()
+                .map(|s| s.unwrap_or_else(|| batch_it.next().unwrap_or(0)))
+                .collect();
+            Ok(Shape::Array { dtype: DType::F32, dims: out })
+        }
+        other => Err(fail("TQ104", format!("unsupported opcode {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parse_module;
+
+    /// Build a module with the standard reduce combinators plus an entry
+    /// whose params/body come from the test.
+    fn module(params: &[&str], body: &[&str]) -> HloModule {
+        let mut text = String::from("HloModule vtest\n\n");
+        text.push_str(
+            "%red_add (a: f32[], b: f32[]) -> f32[] {\n  %a = f32[] parameter(0)\n  \
+             %b = f32[] parameter(1)\n  ROOT %r = f32[] add(f32[] %a, f32[] %b)\n}\n\n",
+        );
+        text.push_str("ENTRY %main () -> f32[] {\n");
+        for p in params {
+            text.push_str("  ");
+            text.push_str(p);
+            text.push('\n');
+        }
+        for b in body {
+            text.push_str("  ");
+            text.push_str(b);
+            text.push('\n');
+        }
+        text.push_str("}\n");
+        parse_module(&text).unwrap()
+    }
+
+    fn accept(params: &[&str], body: &[&str]) {
+        let m = module(params, body);
+        let diags = verify_module(&m);
+        assert!(diags.is_empty(), "expected clean, got: {diags:?}");
+    }
+
+    fn reject(params: &[&str], body: &[&str], code: &str) {
+        let m = module(params, body);
+        let diags = verify_module(&m);
+        assert!(
+            diags.iter().any(|d| d.code == code),
+            "expected a {code} finding, got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn parameter_constant_accept_reject() {
+        accept(&["%x = f32[2] parameter(0)"], &["ROOT %c = f32[2] abs(f32[2] %x)"]);
+        // constant literal count must match the shape
+        reject(&[], &["ROOT %c = f32[3] constant({1, 2})"], "TQ106");
+        accept(&[], &["ROOT %c = f32[2] constant({1, 2})"]);
+    }
+
+    #[test]
+    fn def_before_use_and_duplicates() {
+        reject(
+            &["%x = f32[2] parameter(0)"],
+            &["ROOT %r = f32[2] add(f32[2] %x, f32[2] %nope)"],
+            "TQ102",
+        );
+        // used-before-defined (operand defined later in the body)
+        reject(
+            &["%x = f32[2] parameter(0)"],
+            &[
+                "%a = f32[2] add(f32[2] %x, f32[2] %b)",
+                "%b = f32[2] abs(f32[2] %x)",
+                "ROOT %r = f32[2] add(f32[2] %a, f32[2] %b)",
+            ],
+            "TQ102",
+        );
+    }
+
+    #[test]
+    fn arity_and_unknown_opcode() {
+        reject(&["%x = f32[2] parameter(0)"], &["ROOT %r = f32[2] add(f32[2] %x)"], "TQ103");
+        reject(
+            &["%x = f32[2] parameter(0)"],
+            &["ROOT %r = f32[2] frobnicate(f32[2] %x)"],
+            "TQ104",
+        );
+    }
+
+    #[test]
+    fn broadcast_accept_reject() {
+        accept(
+            &["%x = f32[3] parameter(0)"],
+            &["ROOT %b = f32[2,3] broadcast(f32[3] %x), dimensions={1}"],
+        );
+        // mapped output dim has the wrong size
+        reject(
+            &["%x = f32[3] parameter(0)"],
+            &["ROOT %b = f32[2,4] broadcast(f32[3] %x), dimensions={1}"],
+            "TQ106",
+        );
+    }
+
+    #[test]
+    fn reshape_accept_reject() {
+        accept(&["%x = f32[6] parameter(0)"], &["ROOT %r = f32[2,3] reshape(f32[6] %x)"]);
+        reject(&["%x = f32[6] parameter(0)"], &["ROOT %r = f32[2,4] reshape(f32[6] %x)"], "TQ106");
+    }
+
+    #[test]
+    fn transpose_accept_reject() {
+        accept(
+            &["%x = f32[2,3] parameter(0)"],
+            &["ROOT %t = f32[3,2] transpose(f32[2,3] %x), dimensions={1,0}"],
+        );
+        reject(
+            &["%x = f32[2,3] parameter(0)"],
+            &["ROOT %t = f32[3,2] transpose(f32[2,3] %x), dimensions={1,1}"],
+            "TQ106",
+        );
+    }
+
+    #[test]
+    fn slice_accept_reject() {
+        accept(
+            &["%x = f32[4,6] parameter(0)"],
+            &["ROOT %s = f32[2,3] slice(f32[4,6] %x), slice={[0:2], [0:6:2]}"],
+        );
+        reject(
+            &["%x = f32[4,6] parameter(0)"],
+            &["ROOT %s = f32[2,3] slice(f32[4,6] %x), slice={[0:2], [0:7:2]}"],
+            "TQ106",
+        );
+    }
+
+    #[test]
+    fn concatenate_accept_reject() {
+        accept(
+            &["%x = f32[2,3] parameter(0)", "%y = f32[2,2] parameter(1)"],
+            &["ROOT %c = f32[2,5] concatenate(f32[2,3] %x, f32[2,2] %y), dimensions={1}"],
+        );
+        // non-axis dims must match
+        reject(
+            &["%x = f32[2,3] parameter(0)", "%y = f32[3,2] parameter(1)"],
+            &["ROOT %c = f32[2,5] concatenate(f32[2,3] %x, f32[3,2] %y), dimensions={1}"],
+            "TQ106",
+        );
+    }
+
+    #[test]
+    fn dot_accept_reject() {
+        accept(
+            &["%a = f32[2,3] parameter(0)", "%b = f32[3,4] parameter(1)"],
+            &[
+                "ROOT %d = f32[2,4] dot(f32[2,3] %a, f32[3,4] %b), \
+                 lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+            ],
+        );
+        // contracting sizes disagree: the canonical "bad dot dims" case
+        reject(
+            &["%a = f32[2,3] parameter(0)", "%b = f32[4,5] parameter(1)"],
+            &[
+                "ROOT %d = f32[2,5] dot(f32[2,3] %a, f32[4,5] %b), \
+                 lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+            ],
+            "TQ106",
+        );
+        // batched
+        accept(
+            &["%a = f32[5,2,3] parameter(0)", "%b = f32[5,3,4] parameter(1)"],
+            &[
+                "ROOT %d = f32[5,2,4] dot(f32[5,2,3] %a, f32[5,3,4] %b), \
+                 lhs_batch_dims={0}, rhs_batch_dims={0}, \
+                 lhs_contracting_dims={2}, rhs_contracting_dims={1}",
+            ],
+        );
+    }
+
+    #[test]
+    fn elementwise_accept_reject() {
+        accept(
+            &["%x = f32[4] parameter(0)", "%y = f32[4] parameter(1)"],
+            &["ROOT %r = f32[4] multiply(f32[4] %x, f32[4] %y)"],
+        );
+        reject(
+            &["%x = f32[4] parameter(0)", "%y = f32[3] parameter(1)"],
+            &["ROOT %r = f32[4] multiply(f32[4] %x, f32[3] %y)"],
+            "TQ106",
+        );
+        // s32 power is a kind error
+        reject(
+            &["%x = s32[4] parameter(0)", "%y = s32[4] parameter(1)"],
+            &["ROOT %r = s32[4] power(s32[4] %x, s32[4] %y)"],
+            "TQ107",
+        );
+        accept(&["%x = f32[4] parameter(0)"], &["ROOT %r = f32[4] tanh(f32[4] %x)"]);
+        reject(&["%x = s32[4] parameter(0)"], &["ROOT %r = s32[4] tanh(s32[4] %x)"], "TQ107");
+    }
+
+    #[test]
+    fn clamp_select_compare_accept_reject() {
+        accept(
+            &["%lo = f32[] parameter(0)", "%x = f32[4] parameter(1)", "%hi = f32[] parameter(2)"],
+            &["ROOT %c = f32[4] clamp(f32[] %lo, f32[4] %x, f32[] %hi)"],
+        );
+        reject(
+            &["%lo = f32[2] parameter(0)", "%x = f32[4] parameter(1)", "%hi = f32[] parameter(2)"],
+            &["ROOT %c = f32[4] clamp(f32[2] %lo, f32[4] %x, f32[] %hi)"],
+            "TQ106",
+        );
+        accept(
+            &["%x = f32[4] parameter(0)", "%y = f32[4] parameter(1)"],
+            &[
+                "%z = f32[] constant(0)",
+                "%zb = f32[4] broadcast(f32[] %z), dimensions={}",
+                "%p = pred[4] compare(f32[4] %x, f32[4] %zb), direction=GT",
+                "ROOT %s = f32[4] select(pred[4] %p, f32[4] %x, f32[4] %y)",
+            ],
+        );
+        // select predicate must be pred-typed
+        reject(
+            &["%p = f32[4] parameter(0)", "%x = f32[4] parameter(1)", "%y = f32[4] parameter(2)"],
+            &["ROOT %s = f32[4] select(f32[4] %p, f32[4] %x, f32[4] %y)"],
+            "TQ107",
+        );
+        // unknown compare direction
+        reject(
+            &["%x = f32[4] parameter(0)", "%y = f32[4] parameter(1)"],
+            &["ROOT %p = pred[4] compare(f32[4] %x, f32[4] %y), direction=XX"],
+            "TQ106",
+        );
+        // compare output must be pred
+        reject(
+            &["%x = f32[4] parameter(0)", "%y = f32[4] parameter(1)"],
+            &["ROOT %p = f32[4] compare(f32[4] %x, f32[4] %y), direction=GT"],
+            "TQ105",
+        );
+    }
+
+    #[test]
+    fn convert_iota_accept_reject() {
+        accept(&["%x = s32[4] parameter(0)"], &["ROOT %c = f32[4] convert(s32[4] %x)"]);
+        reject(&["%x = f32[4] parameter(0)"], &["ROOT %c = pred[4] convert(f32[4] %x)"], "TQ107");
+        accept(&[], &["ROOT %i = s32[3,4] iota(), iota_dimension=1"]);
+        reject(&[], &["ROOT %i = s32[3,4] iota(), iota_dimension=2"], "TQ106");
+    }
+
+    #[test]
+    fn reduce_accept_reject() {
+        accept(
+            &["%x = f32[2,4] parameter(0)"],
+            &[
+                "%z = f32[] constant(0)",
+                "ROOT %r = f32[2] reduce(f32[2,4] %x, f32[] %z), dimensions={1}, \
+                 to_apply=%red_add",
+            ],
+        );
+        // wrong kept-dims shape
+        reject(
+            &["%x = f32[2,4] parameter(0)"],
+            &[
+                "%z = f32[] constant(0)",
+                "ROOT %r = f32[4] reduce(f32[2,4] %x, f32[] %z), dimensions={1}, \
+                 to_apply=%red_add",
+            ],
+            "TQ105",
+        );
+        // missing combinator computation
+        reject(
+            &["%x = f32[2,4] parameter(0)"],
+            &[
+                "%z = f32[] constant(0)",
+                "ROOT %r = f32[2] reduce(f32[2,4] %x, f32[] %z), dimensions={1}, \
+                 to_apply=%red_nope",
+            ],
+            "TQ106",
+        );
+    }
+
+    #[test]
+    fn tuple_accept_reject() {
+        accept(
+            &["%x = f32[2] parameter(0)", "%y = s32[3] parameter(1)"],
+            &["ROOT %t = (f32[2], s32[3]) tuple(f32[2] %x, s32[3] %y)"],
+        );
+        // element shape mismatch
+        reject(
+            &["%x = f32[4] parameter(0)"],
+            &["ROOT %t = (f32[2]) tuple(f32[4] %x)"],
+            "TQ105",
+        );
+        accept(
+            &["%x = f32[2] parameter(0)", "%y = s32[3] parameter(1)"],
+            &[
+                "%t = (f32[2], s32[3]) tuple(f32[2] %x, s32[3] %y)",
+                "ROOT %g = s32[3] get-tuple-element((f32[2], s32[3]) %t), index=1",
+            ],
+        );
+        reject(
+            &["%x = f32[2] parameter(0)"],
+            &[
+                "%t = (f32[2]) tuple(f32[2] %x)",
+                "ROOT %g = f32[2] get-tuple-element((f32[2]) %t), index=1",
+            ],
+            "TQ106",
+        );
+    }
+
+    #[test]
+    fn gather_accept_reject() {
+        accept(
+            &["%tbl = f32[5,3] parameter(0)", "%ids = s32[2,1] parameter(1)"],
+            &[
+                "ROOT %g = f32[2,3] gather(f32[5,3] %tbl, s32[2,1] %ids), \
+                 offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, \
+                 index_vector_dim=1, slice_sizes={1,3}",
+            ],
+        );
+        // slice_sizes must cover every operand dim
+        reject(
+            &["%tbl = f32[5,3] parameter(0)", "%ids = s32[2,1] parameter(1)"],
+            &[
+                "ROOT %g = f32[2,3] gather(f32[5,3] %tbl, s32[2,1] %ids), \
+                 offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, \
+                 index_vector_dim=1, slice_sizes={1}",
+            ],
+            "TQ106",
+        );
+        // wrong declared output dims
+        reject(
+            &["%tbl = f32[5,3] parameter(0)", "%ids = s32[2,1] parameter(1)"],
+            &[
+                "ROOT %g = f32[2,4] gather(f32[5,3] %tbl, s32[2,1] %ids), \
+                 offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, \
+                 index_vector_dim=1, slice_sizes={1,3}",
+            ],
+            "TQ105",
+        );
+    }
+
+    #[test]
+    fn declared_dtype_must_match_inferred() {
+        // declared s32 out of an f32 add
+        reject(
+            &["%x = f32[2] parameter(0)", "%y = f32[2] parameter(1)"],
+            &["ROOT %r = s32[2] add(f32[2] %x, f32[2] %y)"],
+            "TQ105",
+        );
+    }
+
+    #[test]
+    fn builder_emitted_module_verifies() {
+        use crate::hlo::builder::GraphBuilder;
+        let mut b = GraphBuilder::new("vb");
+        let x = b.param(DType::F32, &[4, 8]);
+        let w = b.param(DType::F32, &[8, 2]);
+        let d = b.dot_general(&x, &w, &[], &[], &[1], &[0]).unwrap();
+        let t = b.tanh(&d);
+        let text = b.finish(&[t]);
+        let m = parse_module(&text).unwrap();
+        let diags = verify_module(&m);
+        assert!(diags.is_empty(), "builder module must verify: {diags:?}");
+    }
+}

@@ -18,6 +18,7 @@
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod hlo;

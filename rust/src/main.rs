@@ -23,6 +23,12 @@
 //!                                    (parallel config sweep, resumable by
 //!                                    spec_id; works without artifacts —
 //!                                    see coordinator::sweep)
+//!     repro lint [--spec FILE.json | --preset NAME] [--json]
+//!                                    (static verifier over every manifest
+//!                                    artifact + quantization-hazard linter
+//!                                    over spec x topology x forward graph;
+//!                                    exits non-zero on any deny finding —
+//!                                    see analysis::lint for the TQ codes)
 //!     repro serve-bench [--task sst2] [--duration-ms 2000] [--qps 100]
 //!                 [--clients 4] [--windows 0,2000] [--cache-caps 2]
 //!                 [--depth 256] [--max-batch 32] [--fail-on-shed]
@@ -76,6 +82,12 @@ fn main() -> Result<()> {
         tq::serve::bench::cmd_serve_bench(&args)?;
         eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
         return Ok(());
+    }
+    if args.subcommand == "lint" {
+        let t0 = std::time::Instant::now();
+        let r = tq::analysis::cmd_lint(&args);
+        eprintln!("[done in {:.1}s]", t0.elapsed().as_secs_f32());
+        return r;
     }
     let ctx = Ctx::new(
         args.get_or("artifacts", "artifacts"),
@@ -254,6 +266,11 @@ fn explain_spec(ctx: &Ctx, spec: &QuantSpec) -> Result<()> {
         println!(
             "total activation-quantizer overhead: {total_overhead} extra parameters"
         );
+        // dead/shadowed/redundant rule visibility (same findings as
+        // `repro lint`, scoped to this topology)
+        for d in tq::analysis::lint_spec_rules(&spec.policy, info) {
+            println!("  {d}");
+        }
     }
     println!(
         "weights: {} bits, estimator {}, per-channel groups {:?}, enabled {}",
@@ -365,6 +382,7 @@ fn print_help() {
          fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  \
          run --spec FILE.json | --preset NAME [--tasks a,b] [--seeds N] \
          [--dump-spec] [--explain]\n  smoke\n  gen-artifacts [--no-ckpt]\n  \
+         lint [--spec FILE.json | --preset NAME] [--json]\n  \
          sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
          [--estimators current,mse] [--range-methods auto,mse_group] \
          [--threads N] [--task NAME] [--seeds N] \

@@ -229,6 +229,12 @@ impl Runtime {
                          interpreter fallback could not parse the module: {parse_err}"
                     )
                 })?;
+                // Cache admission gate: a module that does not pass static
+                // shape/dtype verification never reaches interp or plan
+                // (which is what lets their per-execution shape checks
+                // retreat behind debug_assertions).
+                hlo::verify(&module)
+                    .with_context(|| format!("verifying {name} for the interpreter fallback"))?;
                 // Once per artifact (results are cached): the fallback must
                 // be observable — it changes both throughput and f32
                 // accumulation order vs a compiled executable, and a

@@ -48,6 +48,48 @@ pub enum SiteSelector {
     FamilyLastLayers { suffix: String, n: usize },
 }
 
+impl SiteSelector {
+    /// Site names this selector covers in `info`'s topology, in site
+    /// order. [`PolicySpec::resolve`] installs `Exact` and
+    /// `FamilyLastLayers` override entries *unconditionally* — a name
+    /// that is not a real site is silently dead there; this helper
+    /// restricts to real sites, which is exactly what the lint layer
+    /// (`analysis::lint`, TQ003) uses to flag dead rules.
+    pub fn matching_sites(&self, info: &ModelInfo) -> Vec<String> {
+        match self {
+            SiteSelector::Exact(name) => info
+                .sites
+                .iter()
+                .filter(|s| s.name == *name)
+                .map(|s| s.name.clone())
+                .collect(),
+            SiteSelector::Family(suffix) => info
+                .sites
+                .iter()
+                .filter(|s| s.name.ends_with(suffix.as_str()))
+                .map(|s| s.name.clone())
+                .collect(),
+            SiteSelector::FamilyLastLayers { suffix, n } => {
+                let layers = info.config.layers;
+                (layers.saturating_sub(*n)..layers)
+                    .map(|i| format!("layer{i}.{suffix}"))
+                    .filter(|name| info.sites.iter().any(|s| s.name == *name))
+                    .collect()
+            }
+        }
+    }
+
+    /// Short human description for diagnostics (`exact:head_out`,
+    /// `family:res2_sum`, `last2:res2_sum`).
+    pub fn describe(&self) -> String {
+        match self {
+            SiteSelector::Exact(name) => format!("exact:{name}"),
+            SiteSelector::Family(suffix) => format!("family:{suffix}"),
+            SiteSelector::FamilyLastLayers { suffix, n } => format!("last{n}:{suffix}"),
+        }
+    }
+}
+
 /// One site override: selector + the configuration it installs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SiteRule {
