@@ -5,6 +5,7 @@
 //! reproducible) without AOT artifacts.
 
 use tq::coordinator::sweep::{grid, run_offline, synth_data};
+use tq::model::manifest::Architecture;
 use tq::quant::{Estimator, RangeMethod};
 use tq::util::bench::{append_csv, Bencher};
 use tq::util::pool::Pool;
@@ -16,6 +17,7 @@ fn main() {
     // 2 act-bits x 3 granularities x 2 estimators = 12 configurations
     let cfgs = grid(
         128,
+        &[Architecture::Bert],
         &[8, 4],
         &[8],
         &[1, 8, 128],

@@ -325,7 +325,11 @@ pub fn lint_graph(m: &HloModule, info: &ModelInfo, policy: &QuantPolicy) -> Resu
 
     // locate the (act_scales, act_zps, act_cfg) parameter triple:
     // act_cfg is the [n_sites, 3] f32 parameter immediately preceded by
-    // the two [total] lane vectors (build_forward's layout)
+    // the two [total] lane vectors (build_forward's layout). Train-step
+    // graphs interleave the Adam moment vectors with the quantizer state
+    // (act_scales, m_scales, v_scales, act_zps, act_cfg —
+    // build_train_step's layout), so when the two slots before act_zps
+    // are *also* [total] lane vectors the scale source sits four back.
     let dims_of = |pi: usize| -> Option<&[usize]> {
         match &c.insts[c.params[pi]].shape {
             Shape::Array { dtype: DType::F32, dims } => Some(dims.as_slice()),
@@ -339,6 +343,7 @@ pub fn lint_graph(m: &HloModule, info: &ModelInfo, policy: &QuantPolicy) -> Resu
             && dims_of(pi - 2).is_some_and(|d| *d == [total])
         {
             cfg_param = Some(pi);
+            break;
         }
     }
     let Some(cfg_p) = cfg_param else {
@@ -350,7 +355,15 @@ pub fn lint_graph(m: &HloModule, info: &ModelInfo, policy: &QuantPolicy) -> Resu
             info.config.name
         );
     };
-    let (scales_p, zps_p) = (cfg_p - 2, cfg_p - 1);
+    let zps_p = cfg_p - 1;
+    let scales_p = if cfg_p >= 4
+        && dims_of(cfg_p - 3).is_some_and(|d| *d == [total])
+        && dims_of(cfg_p - 4).is_some_and(|d| *d == [total])
+    {
+        cfg_p - 4
+    } else {
+        cfg_p - 2
+    };
 
     // consumer index, for walking clamp -> subtract -> multiply -> select
     let mut uses: Vec<Vec<usize>> = vec![Vec::new(); c.insts.len()];
@@ -700,28 +713,47 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
         v
     };
 
-    let mut fwd: BTreeMap<&str, HloModule> = BTreeMap::new();
-    for (model, art) in [("base", "fwd_cls_b1"), ("base_reg", "fwd_reg_b1")] {
-        if let Ok(sig) = manifest.artifact(art) {
-            let text = std::fs::read_to_string(&sig.file)
-                .with_context(|| format!("reading {art}"))?;
-            // a parse failure is already a TQ100 from pass 1; don't also die
-            if let Ok(m) = parse_module(&text) {
-                fwd.insert(model, m);
+    // every quantized graph shipped per model: batch-1 forward, diagnostic
+    // forward, and (BERT only — no ViT train graphs yet) the QAT
+    // train-step. fp32 train graphs carry no quantizer triple and are
+    // covered by pass 1 alone.
+    let graph_arts: [(&str, &[&str]); 4] = [
+        ("base", &["fwd_cls_b1", "diag_cls_b1", "train_qat_cls_b16"]),
+        ("base_reg", &["fwd_reg_b1", "diag_reg_b1", "train_qat_reg_b16"]),
+        ("vit", &["fwd_vit_cls_b1", "diag_vit_cls_b1"]),
+        ("vit_reg", &["fwd_vit_reg_b1", "diag_vit_reg_b1"]),
+    ];
+    let mut graphs: BTreeMap<&str, Vec<HloModule>> = BTreeMap::new();
+    for (model, arts) in graph_arts {
+        for art in arts {
+            if let Ok(sig) = manifest.artifact(art) {
+                let text = std::fs::read_to_string(&sig.file)
+                    .with_context(|| format!("reading {art}"))?;
+                // a parse failure is already a TQ100 from pass 1; don't
+                // also die
+                if let Ok(m) = parse_module(&text) {
+                    graphs.entry(model).or_default().push(m);
+                }
             }
         }
     }
 
     for spec in &specs {
         for (model, info) in &manifest.models {
+            // a spec only ever runs against its own architecture family's
+            // models/graphs — cross-family lints would flag site tables
+            // the spec never touches
+            if spec.architecture != info.config.architecture() {
+                continue;
+            }
             let prefix = format!("{}/{model}", spec.name);
             let mut local = lint_spec_rules(&spec.policy, info);
             let policy = spec.policy.resolve(info);
             local.extend(lint_policy(&policy, info));
-            if let Some(m) = fwd.get(model.as_str()) {
+            for m in graphs.get(model.as_str()).map_or(&[][..], Vec::as_slice) {
                 local.extend(
                     lint_graph(m, info, &policy)
-                        .with_context(|| format!("linting {prefix}"))?,
+                        .with_context(|| format!("linting {prefix}/{}", m.name))?,
                 );
             }
             for mut d in local {
@@ -764,8 +796,8 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
     use crate::hlo::builder::{GraphBuilder, Op};
-    use crate::hlo::fixture::{build_forward, model_info, FixtureConfig};
-    use crate::model::manifest::{ModelConfig, ModelInfo, SiteSpec};
+    use crate::hlo::fixture::{build_forward, model_info, vit_config, FixtureConfig};
+    use crate::model::manifest::{ArchParams, ModelConfig, ModelInfo, SiteSpec};
     use crate::model::qconfig::SiteCfg;
     use crate::spec::{SiteRule, SiteSelector};
     use crate::util::rng::Rng;
@@ -788,9 +820,7 @@ mod tests {
                 seq: 4,
                 n_out: 3,
                 outlier_dims: vec![1],
-                pad_id: 0,
-                cls_id: 1,
-                sep_id: 2,
+                arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
             },
             params: Vec::new(),
             sites: specs,
@@ -1087,6 +1117,7 @@ mod tests {
                 seq: 3 + rng.below(4),
                 n_out: 2,
                 outlier_dims: vec![0],
+                arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
             };
             let art = build_forward(&cfg, 1, false, &cfg.name).unwrap();
             let m = parse_module(&art.text).unwrap();
@@ -1098,6 +1129,60 @@ mod tests {
                 assert!(d.is_empty(), "cfg {:?}: {d:?}", cfg.name);
             }
         }
+    }
+
+    #[test]
+    fn vit_forward_and_diag_graphs_lint_clean() {
+        // the ViT frontend's lowering carries the same quantizer triple
+        // and residual wiring contract as BERT: both shipped graph kinds
+        // lint clean under fully-quantized policies
+        let vit = vit_config();
+        let info = model_info(&vit);
+        for (name, taps) in [("fwd_vit_cls_b1", false), ("diag_vit_cls_b1", true)] {
+            let art = build_forward(&vit, 1, taps, name).unwrap();
+            let m = parse_module(&art.text).unwrap();
+            crate::hlo::verify(&m).unwrap();
+            for spec in [PolicySpec::uniform(8, 8), PolicySpec::acts_only(8)] {
+                let policy = spec.resolve(&info);
+                let d = lint_graph(&m, &info, &policy).unwrap();
+                assert!(d.is_empty(), "{name}: {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn qat_train_step_graph_lints_clean() {
+        // the train-step layout interleaves Adam moments with the
+        // quantizer state (act_scales, m_scales, v_scales, act_zps,
+        // act_cfg): the triple detector must still find the true scale
+        // source four slots back, and the QDQ/residual checks must hold
+        let base = crate::hlo::fixture::base_config();
+        let art = crate::hlo::train_graph::build_train_step(
+            &base,
+            false,
+            true,
+            16,
+            "train_qat_cls_b16",
+        )
+        .unwrap();
+        let m = parse_module(&art.text).unwrap();
+        let info = model_info(&base);
+        let policy = PolicySpec::uniform(8, 8).resolve(&info);
+        let d = lint_graph(&m, &info, &policy).unwrap();
+        assert!(d.is_empty(), "{d:?}");
+        // the fp32 twin has no quantizer triple and must be rejected, not
+        // silently half-linted
+        let fp = crate::hlo::train_graph::build_train_step(
+            &base,
+            false,
+            false,
+            16,
+            "train_fp32_cls_b16",
+        )
+        .unwrap();
+        let m = parse_module(&fp.text).unwrap();
+        let err = lint_graph(&m, &info, &policy).unwrap_err();
+        assert!(err.to_string().contains("parameter triple"), "{err:#}");
     }
 
     #[test]

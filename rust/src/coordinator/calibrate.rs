@@ -22,13 +22,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use super::Ctx;
+use super::{diag_artifact, example_input_lits, Ctx};
 use crate::data::{self, TaskSpec};
+use crate::model::manifest::Architecture;
 use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
 use crate::model::Params;
 use crate::quant::estimators::RangeTracker;
 use crate::quant::Estimator;
-use crate::runtime::{lit_f32, lit_i32};
 use crate::tensor::Tensor;
 use crate::util::pool::Pool;
 
@@ -78,14 +78,25 @@ pub fn gram_sites(layers: usize) -> Vec<String> {
     v
 }
 
-/// Run calibration for `task` on FP32 `params`.
+/// Run calibration for `task` on FP32 `params` (BERT family).
 pub fn calibrate(
     ctx: &Ctx,
     task: &TaskSpec,
     params: &Params,
     cfg: &CalibCfg,
 ) -> Result<Calibration> {
-    calibrate_with(ctx, task, params, cfg, None)
+    calibrate_with_arch(ctx, task, Architecture::Bert, params, cfg, None)
+}
+
+/// [`calibrate`] against a specific architecture family's diag artifacts.
+pub fn calibrate_arch(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    params: &Params,
+    cfg: &CalibCfg,
+) -> Result<Calibration> {
+    calibrate_with_arch(ctx, task, arch, params, cfg, None)
 }
 
 /// True when a site's resolved config needs retained row samples at
@@ -108,8 +119,21 @@ pub fn calibrate_with(
     cfg: &CalibCfg,
     policy: Option<&QuantPolicy>,
 ) -> Result<Calibration> {
-    let info = ctx.model_info(task)?;
-    let artifact = format!("diag_{}_b1", ctx.head(task));
+    calibrate_with_arch(ctx, task, Architecture::Bert, params, cfg, policy)
+}
+
+/// [`calibrate_with`], architecture-generic: the diag artifact, model
+/// info, and per-example input literals all follow `arch`.
+pub fn calibrate_with_arch(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    params: &Params,
+    cfg: &CalibCfg,
+    policy: Option<&QuantPolicy>,
+) -> Result<Calibration> {
+    let info = ctx.model_info_for(task, arch)?;
+    let artifact = diag_artifact(arch, ctx.head(task));
     let seq = info.config.seq;
     // calibration data comes from the training split (paper: "passing a
     // few batches of calibration data")
@@ -166,11 +190,7 @@ pub fn calibrate_with(
             n_b * cfg.batch_size,
             |k| {
                 let ex = &split.examples[(seq0 + base + k) % split.examples.len()];
-                Ok(vec![
-                    lit_i32(&ex.ids, &[1, seq])?,
-                    lit_i32(&ex.token_type, &[1, seq])?,
-                    lit_f32(&ex.mask, &[1, seq])?,
-                ])
+                example_input_lits(info, ex)
             },
             &ctx.pool,
         )?;
@@ -231,13 +251,9 @@ pub fn run_diag(
     act_cfg: &[f32],
     ex: &data::Example,
 ) -> Result<BTreeMap<String, Tensor>> {
-    let seq = info.config.seq;
     let n_sites = info.sites.len();
     let mut lits = super::static_input_lits(params, act_scales, act_zps, act_cfg, n_sites)?;
-    lits.reserve(3);
-    lits.push(lit_i32(&ex.ids, &[1, seq])?);
-    lits.push(lit_i32(&ex.token_type, &[1, seq])?);
-    lits.push(lit_f32(&ex.mask, &[1, seq])?);
+    lits.extend(example_input_lits(info, ex)?);
     let mut out = ctx.rt.run_lits(artifact, &lits)?;
     // outputs: logits, then taps in site order
     let taps = out.split_off(1);

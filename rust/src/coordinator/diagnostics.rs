@@ -8,12 +8,11 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use super::Ctx;
+use super::{diag_artifact, example_input_lits, Ctx};
 use crate::data::{self, TaskSpec};
-use crate::model::manifest::ModelInfo;
+use crate::model::manifest::{Architecture, ModelInfo};
 use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
 use crate::model::Params;
-use crate::runtime::{lit_f32, lit_i32};
 use crate::tensor::Tensor;
 
 /// Taps for a handful of dev sequences, FP32.
@@ -29,8 +28,19 @@ pub fn collect_taps(
     params: &Params,
     n_seqs: usize,
 ) -> Result<DiagRun> {
-    let info = ctx.model_info(task)?;
-    collect_taps_with(ctx, &format!("diag_{}_b1", ctx.head(task)), info, task, params, n_seqs)
+    collect_taps_arch(ctx, task, Architecture::Bert, params, n_seqs)
+}
+
+/// [`collect_taps`] against a specific architecture family's artifacts.
+pub fn collect_taps_arch(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    params: &Params,
+    n_seqs: usize,
+) -> Result<DiagRun> {
+    let info = ctx.model_info_for(task, arch)?;
+    collect_taps_with(ctx, &diag_artifact(arch, ctx.head(task)), info, task, params, n_seqs)
 }
 
 /// Variant-agnostic tap collection (used for Fig. 9-13 model sweeps where
@@ -54,7 +64,6 @@ pub fn collect_taps_with(
     let split = data::dev_split(task, info.config.seq)?;
     let fp32 = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
     let n = n_seqs.min(split.examples.len());
-    let seq = info.config.seq;
     let static_lits = super::static_input_lits(
         params,
         &fp32.scales,
@@ -66,14 +75,7 @@ pub fn collect_taps_with(
         artifact,
         &static_lits,
         n,
-        |i| {
-            let ex = &split.examples[i];
-            Ok(vec![
-                lit_i32(&ex.ids, &[1, seq])?,
-                lit_i32(&ex.token_type, &[1, seq])?,
-                lit_f32(&ex.mask, &[1, seq])?,
-            ])
-        },
+        |i| example_input_lits(info, &split.examples[i]),
         &ctx.pool,
     )?;
     let mut per_seq = Vec::with_capacity(n);
@@ -157,13 +159,18 @@ pub fn attention_sep_mass(
     let probs = &taps[&format!("layer{layer}.attn_probs")]; // (1, h, T, T)
     let h = info.config.heads;
     let t_len = info.config.seq;
-    let sep_cols: Vec<usize> = ex
-        .ids
-        .iter()
-        .enumerate()
-        .filter(|(_, &id)| id == info.config.sep_id)
-        .map(|(i, _)| i)
-        .collect();
+    // [SEP] is a BERT notion; for architectures without one (ViT) every
+    // head reports zero mass rather than a bogus column
+    let sep_cols: Vec<usize> = match info.config.arch.sep_id() {
+        Some(sep) => ex
+            .ids
+            .iter()
+            .enumerate()
+            .filter(|(_, &id)| id == sep)
+            .map(|(i, _)| i)
+            .collect(),
+        None => Vec::new(),
+    };
     let real_rows: Vec<usize> = ex
         .mask
         .iter()

@@ -10,9 +10,10 @@
 
 use anyhow::Result;
 
-use super::{batch_input_lits, Ctx, EVAL_BATCH};
+use super::{batch_input_lits_for, fwd_artifact, Ctx, EVAL_BATCH};
 use crate::data::{self, Split, TaskKind, TaskSpec};
 use crate::metrics;
+use crate::model::manifest::Architecture;
 use crate::model::qconfig::ActQuantTensors;
 use crate::model::Params;
 
@@ -37,9 +38,22 @@ pub fn evaluate(
     params: &Params,
     act: &ActQuantTensors,
 ) -> Result<f64> {
-    let info = ctx.model_info(task)?;
+    evaluate_arch(ctx, task, Architecture::Bert, params, act)
+}
+
+/// [`evaluate`] against a specific architecture family's artifacts. The
+/// same synthetic dev split drives both families (ViT rasterises the
+/// token ids through the pixel codebook in `batch_input_lits_for`).
+pub fn evaluate_arch(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    params: &Params,
+    act: &ActQuantTensors,
+) -> Result<f64> {
+    let info = ctx.model_info_for(task, arch)?;
     let split = data::dev_split(task, info.config.seq)?;
-    evaluate_split(ctx, task, params, act, &split)
+    evaluate_split_arch(ctx, task, arch, params, act, &split)
 }
 
 /// [`evaluate`] over an explicit example split (exposed so tests and
@@ -52,10 +66,22 @@ pub fn evaluate_split(
     act: &ActQuantTensors,
     split: &Split,
 ) -> Result<f64> {
-    let info = ctx.model_info(task)?;
+    evaluate_split_arch(ctx, task, Architecture::Bert, params, act, split)
+}
+
+/// [`evaluate_split`], architecture-generic.
+pub fn evaluate_split_arch(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    params: &Params,
+    act: &ActQuantTensors,
+    split: &Split,
+) -> Result<f64> {
+    let info = ctx.model_info_for(task, arch)?;
     let head = ctx.head(task);
+    let artifact = fwd_artifact(arch, head, EVAL_BATCH);
     let b = EVAL_BATCH;
-    let artifact = format!("fwd_{head}_b{b}");
     let seq = info.config.seq;
     let n_sites = info.sites.len();
     let n = split.examples.len();
@@ -76,7 +102,7 @@ pub fn evaluate_split(
         &artifact,
         &static_lits,
         n_batches,
-        |bi| batch_input_lits(&data::make_batch(split, bi * b, b, seq)),
+        |bi| batch_input_lits_for(info, &data::make_batch(split, bi * b, b, seq)),
         &ctx.pool,
     )?;
 

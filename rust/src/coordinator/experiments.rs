@@ -19,11 +19,12 @@ use anyhow::{anyhow, Result};
 use super::calibrate::{calibrate, CalibCfg, Calibration};
 use super::diagnostics as diag;
 use super::eval::evaluate;
-use super::train::{finetune, qat, qat_deployed_params, QatCfg, TrainCfg};
+use super::train::{finetune, TrainCfg};
 use super::weights::{quantize_weights, AdaRoundOpts};
 use super::Ctx;
 use crate::data::{TaskSpec, TASKS};
 use crate::metrics::{glue_score, median};
+use crate::model::manifest::Architecture;
 use crate::model::qconfig::{
     assemble_act_tensors, ActQuantTensors, QuantPolicy, SiteCfg, WeightCfg,
 };
@@ -72,11 +73,22 @@ impl ExpOpts {
 
 /// Load (or complain about) the fine-tuned FP32 checkpoint for a task.
 pub fn load_ckpt(ctx: &Ctx, task: &TaskSpec) -> Result<Params> {
-    let path = ctx.ckpt_path(task.name);
+    load_ckpt_arch(ctx, task, Architecture::Bert)
+}
+
+/// [`load_ckpt`] for a specific architecture family (`{task}.ckpt` /
+/// `vit_{task}.ckpt`). ViT checkpoints come from `repro gen-artifacts`;
+/// BERT ones from `repro finetune`.
+pub fn load_ckpt_arch(ctx: &Ctx, task: &TaskSpec, arch: Architecture) -> Result<Params> {
+    let path = ctx.ckpt_path_for(task.name, arch);
     checkpoint::load(&path).map_err(|_| {
         anyhow!(
-            "missing checkpoint {} — run `repro finetune --all` first",
-            path.display()
+            "missing checkpoint {} — run `repro {}` first",
+            path.display(),
+            match arch {
+                Architecture::Bert => "finetune --all",
+                Architecture::Vit => "gen-artifacts",
+            }
         )
     })
 }
@@ -359,90 +371,36 @@ pub fn table6(ctx: &Ctx, opts: &ExpOpts) -> Result<()> {
             .chain(["GLUE"])
             .collect::<Vec<_>>(),
     );
-    // None = the QAT row (trains, so it cannot be a PTQ spec)
-    let rows: Vec<(&str, Option<&str>)> = vec![
-        ("FP32 baseline", Some("fp32")),
-        ("W8A8 PTQ", Some("w8a8")),
-        ("W8A{8,16} MP-PTQ", Some("mixed_precision")),
-        ("W8A8 PEG-PTQ (K=8+P)", Some("peg_k8_permute")),
-        ("W8A8 QAT", None),
+    // every row — including QAT — is a preset spec; run_spec dispatches
+    // the QAT rows to the training pipeline off their `qat` section
+    let rows: Vec<(&str, &str)> = vec![
+        ("FP32 baseline", "fp32"),
+        ("W8A8 PTQ", "w8a8"),
+        ("W8A{8,16} MP-PTQ", "mixed_precision"),
+        ("W8A8 PEG-PTQ (K=8+P)", "peg_k8_permute"),
+        ("W8A8 QAT", "w8a8_qat"),
     ];
     for (label, preset_name) in rows {
         let mut row = vec![label.to_string()];
-        match preset_name {
-            Some(p) => {
-                let spec = presets::preset(p)?
-                    .named(label)
-                    .with_seeds(opts.seeds)
-                    .with_tasks(&task_names);
-                let report = run_spec(ctx, &spec)?;
-                row.extend(report.scores.iter().map(|&s| fmt_score(s)));
-                row.push(fmt_score(report.glue));
-            }
-            None => {
-                let mut scores = Vec::new();
-                for task in &tasks {
-                    let params = load_ckpt(ctx, task)?;
-                    let score = run_qat_eval(ctx, task, &params, 8, 8, opts)?;
-                    println!("  table6 {label:?} {}: {score:.2}", task.name);
-                    row.push(fmt_score(score));
-                    scores.push(score);
-                }
-                row.push(fmt_score(glue_score(&scores)));
-            }
+        let mut spec = presets::preset(preset_name)?.named(label).with_tasks(&task_names);
+        if spec.qat.is_none() {
+            spec = spec.with_seeds(opts.seeds);
         }
+        tune_qat_epochs(&mut spec, opts);
+        let report = run_spec(ctx, &spec)?;
+        row.extend(report.scores.iter().map(|&s| fmt_score(s)));
+        row.push(fmt_score(report.glue));
         table.row(row);
     }
     finish(ctx, "table6", &table)
 }
 
-/// QAT from PTQ init, then deploy-eval (used by Tables 6 & 7).
-pub fn run_qat_eval(
-    ctx: &Ctx,
-    task: &TaskSpec,
-    params: &Params,
-    weight_bits: u32,
-    embed_bits: u32,
-    opts: &ExpOpts,
-) -> Result<f64> {
-    let info = ctx.model_info(task)?;
-    // PTQ init for the activation ranges
-    let calib = calibrate(ctx, task, params, &CalibCfg::default())?;
-    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
-    let cfg = QatCfg {
-        weight_bits,
-        embed_bits,
-        epochs: if opts.quick { 1 } else { 2 },
-        ..Default::default()
-    };
-    let res = qat(ctx, task, params, &act, &cfg)?;
-    let (qp, qact) = qat_deployed_params(info, &res, weight_bits, embed_bits)?;
-    evaluate(ctx, task, &qp, &qact)
-}
-
-/// QAT with activations FP32 (the paper's W4A32 QAT row).
-pub fn run_qat_eval_a32(
-    ctx: &Ctx,
-    task: &TaskSpec,
-    params: &Params,
-    weight_bits: u32,
-    embed_bits: u32,
-    opts: &ExpOpts,
-) -> Result<f64> {
-    let info = ctx.model_info(task)?;
-    let calib = calibrate(ctx, task, params, &CalibCfg::default())?;
-    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
-    let cfg = QatCfg {
-        weight_bits,
-        embed_bits,
-        act_enabled: false,
-        epochs: if opts.quick { 1 } else { 2 },
-        ..Default::default()
-    };
-    let res = qat(ctx, task, params, &act, &cfg)?;
-    let (qp, _) = qat_deployed_params(info, &res, weight_bits, embed_bits)?;
-    let fp32_act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
-    evaluate(ctx, task, &qp, &fp32_act)
+/// Full runs train the QAT rows for 2 epochs (the old hard-coded drivers'
+/// value); `--quick` drops to 1.
+fn tune_qat_epochs(spec: &mut QuantSpec, opts: &ExpOpts) {
+    if let Some(q) = spec.qat.as_mut() {
+        q.epochs = if opts.quick { 1 } else { 2 };
+    }
 }
 
 /// Table 7 (+ Table 12 detail): low-bit weights & token embeddings.
@@ -500,18 +458,17 @@ pub fn table7(ctx: &Ctx, opts: &ExpOpts, detailed: bool) -> Result<()> {
             None => String::new(),
         };
         let scores: Vec<f64> = if r.qat {
-            let mut scores = Vec::new();
-            for task in &tasks {
-                let params = load_ckpt(ctx, task)?;
-                let score = if r.act8 {
-                    run_qat_eval(ctx, task, &params, r.wb, r.eb, opts)?
-                } else {
-                    run_qat_eval_a32(ctx, task, &params, r.wb, r.eb, opts)?
-                };
-                println!("  table7 {:?} {}: {score:.2}", r.label, task.name);
-                scores.push(score);
-            }
-            scores
+            // QAT rows are preset specs too — run_spec dispatches them to
+            // the training pipeline off their `qat` section
+            let preset_name = match (r.act8, r.eb) {
+                (false, _) => "w4a32_qat",
+                (true, 2) => "w4a8_embed2_qat",
+                (true, _) => "w4a8_qat",
+            };
+            let mut spec =
+                presets::preset(preset_name)?.named(r.label).with_tasks(&task_names);
+            tune_qat_epochs(&mut spec, opts);
+            run_spec(ctx, &spec)?.scores
         } else {
             let mut policy = if r.act_off && r.w_off {
                 PolicySpec::fp32()
@@ -574,9 +531,9 @@ pub fn fig2(ctx: &Ctx, _opts: &ExpOpts) -> Result<()> {
             .take(ranges.len())
             .enumerate()
             .map(|(i, &id)| {
-                if id == info.config.sep_id {
+                if info.config.arch.sep_id() == Some(id) {
                     format!("[SEP]{i:>3}")
-                } else if id == info.config.cls_id {
+                } else if info.config.arch.cls_id() == Some(id) {
                     format!("[CLS]{i:>3}")
                 } else {
                     format!("{i:>8}")

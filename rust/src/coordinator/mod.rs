@@ -33,8 +33,8 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::data::{task_spec, Batch, TaskKind, TaskSpec};
-use crate::model::manifest::ModelInfo;
+use crate::data::{pixels_for_ids, task_spec, Batch, TaskKind, TaskSpec};
+use crate::model::manifest::{Architecture, ModelInfo};
 use crate::model::Params;
 use crate::runtime::{lit_f32, lit_i32, Runtime};
 use crate::util::pool::Pool;
@@ -71,7 +71,8 @@ pub fn static_input_lits(
 /// half of the forward-input contract next to [`static_input_lits`] —
 /// dev-set eval and the serving layer assemble batches through this one
 /// builder, which is what makes serve-vs-direct bit-identity structural
-/// (tests/determinism.rs pins it).
+/// (tests/determinism.rs pins it). BERT graphs only; arch-dispatching
+/// callers go through [`batch_input_lits_for`].
 pub fn batch_input_lits(batch: &Batch) -> Result<Vec<xla::Literal>> {
     let (b, seq) = (batch.batch, batch.seq);
     Ok(vec![
@@ -79,6 +80,67 @@ pub fn batch_input_lits(batch: &Batch) -> Result<Vec<xla::Literal>> {
         lit_i32(&batch.token_type, &[b, seq])?,
         lit_f32(&batch.mask, &[b, seq])?,
     ])
+}
+
+/// Architecture-dispatching batch-literal builder: BERT graphs take the
+/// three token tensors; ViT graphs take one pixel tensor, rasterised from
+/// the same token ids through the fixed `data::pixel_codebook`. Keyed off
+/// the manifest's architecture descriptor so calibrate/eval never
+/// hard-code a frontend.
+pub fn batch_input_lits_for(info: &ModelInfo, batch: &Batch) -> Result<Vec<xla::Literal>> {
+    match info.config.architecture() {
+        Architecture::Bert => batch_input_lits(batch),
+        Architecture::Vit => {
+            let pd = info
+                .config
+                .patch_dim()
+                .ok_or_else(|| anyhow::anyhow!("vit model {} lacks a patch size", info.name))?;
+            let px = pixels_for_ids(&batch.ids, pd);
+            Ok(vec![lit_f32(&px, &[batch.batch, batch.seq, pd])?])
+        }
+    }
+}
+
+/// Batch-1 input literals for one example — the batch-1 sibling of
+/// [`batch_input_lits_for`], used by the diag executables (calibration,
+/// diagnostics). Dispatches on the manifest's architecture descriptor.
+pub fn example_input_lits(
+    info: &ModelInfo,
+    ex: &crate::data::Example,
+) -> Result<Vec<xla::Literal>> {
+    let seq = info.config.seq;
+    match info.config.architecture() {
+        Architecture::Bert => Ok(vec![
+            lit_i32(&ex.ids, &[1, seq])?,
+            lit_i32(&ex.token_type, &[1, seq])?,
+            lit_f32(&ex.mask, &[1, seq])?,
+        ]),
+        Architecture::Vit => {
+            let pd = info
+                .config
+                .patch_dim()
+                .ok_or_else(|| anyhow::anyhow!("vit model {} lacks a patch size", info.name))?;
+            Ok(vec![lit_f32(&pixels_for_ids(&ex.ids, pd), &[1, seq, pd])?])
+        }
+    }
+}
+
+/// Artifact name of the batch-`b` forward executable for an architecture
+/// and head kind — the naming contract with `repro gen-artifacts`
+/// (`fwd_cls_b8`, `fwd_vit_cls_b8`, ...).
+pub fn fwd_artifact(arch: Architecture, head: &str, b: usize) -> String {
+    match arch {
+        Architecture::Bert => format!("fwd_{head}_b{b}"),
+        Architecture::Vit => format!("fwd_vit_{head}_b{b}"),
+    }
+}
+
+/// Artifact name of the tapped diagnostic executable (batch 1).
+pub fn diag_artifact(arch: Architecture, head: &str) -> String {
+    match arch {
+        Architecture::Bert => format!("diag_{head}_b1"),
+        Architecture::Vit => format!("diag_vit_{head}_b1"),
+    }
 }
 
 /// Shared context for all pipeline stages.
@@ -118,12 +180,23 @@ impl Ctx {
         }
     }
 
-    /// Model info for a task's head (regression heads have n_out = 1).
+    /// Model info for a task's head (regression heads have n_out = 1),
+    /// BERT family. Arch-generic callers use [`Ctx::model_info_for`].
     pub fn model_info(&self, task: &TaskSpec) -> Result<&ModelInfo> {
-        match task.kind {
-            TaskKind::Regression => self.rt.manifest().model("base_reg"),
-            _ => self.rt.manifest().model("base"),
-        }
+        self.model_info_for(task, Architecture::Bert)
+    }
+
+    /// Model info for a task's head in a given architecture family — the
+    /// manifest naming contract with `repro gen-artifacts` ("base",
+    /// "base_reg", "vit", "vit_reg").
+    pub fn model_info_for(&self, task: &TaskSpec, arch: Architecture) -> Result<&ModelInfo> {
+        let name = match (arch, task.kind) {
+            (Architecture::Bert, TaskKind::Regression) => "base_reg",
+            (Architecture::Bert, _) => "base",
+            (Architecture::Vit, TaskKind::Regression) => "vit_reg",
+            (Architecture::Vit, _) => "vit",
+        };
+        self.rt.manifest().model(name)
     }
 
     pub fn task(&self, name: &str) -> Result<TaskSpec> {
@@ -131,6 +204,15 @@ impl Ctx {
     }
 
     pub fn ckpt_path(&self, task: &str) -> PathBuf {
-        self.ckpt_dir.join(format!("{task}.ckpt"))
+        self.ckpt_path_for(task, Architecture::Bert)
+    }
+
+    /// Checkpoint path for a task in a given architecture family
+    /// (`{task}.ckpt` / `vit_{task}.ckpt` — the gen-artifacts contract).
+    pub fn ckpt_path_for(&self, task: &str, arch: Architecture) -> PathBuf {
+        match arch {
+            Architecture::Bert => self.ckpt_dir.join(format!("{task}.ckpt")),
+            Architecture::Vit => self.ckpt_dir.join(format!("vit_{task}.ckpt")),
+        }
     }
 }

@@ -48,6 +48,7 @@ use super::experiments;
 use super::Ctx;
 use crate::data::TaskSpec;
 use crate::hlo::fixture;
+use crate::model::manifest::Architecture;
 use crate::model::qconfig::{site_lane_params_pool, SiteCfg};
 use crate::model::Params;
 use crate::quant::estimators::{mse_search_pool, RangeTracker};
@@ -67,6 +68,8 @@ use crate::util::rng::Rng;
 /// One cell of the sweep grid.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
+    /// model family the cell runs against (task × architecture × config)
+    pub arch: Architecture,
     pub act_bits: u32,
     pub weight_bits: u32,
     pub granularity: Granularity,
@@ -90,18 +93,27 @@ impl SweepConfig {
             label.push('-');
             label.push_str(range_method_name(self.range_method));
         }
+        // BERT labels stay exactly what pre-architecture-axis sweeps
+        // printed (their cached rows and baselines key off them)
+        if self.arch != Architecture::Bert {
+            label.push('-');
+            label.push_str(self.arch.name());
+        }
         label
     }
 
     /// The cell as a full [`QuantSpec`] on one task — this is what the
     /// runtime-backed pass executes and what `spec_id`-keyed resume and
-    /// baseline diffs hash.
+    /// baseline diffs hash. BERT cells serialize without an architecture
+    /// key, so their spec_ids predate — and survive — the ViT axis.
     pub fn to_spec(&self, task: &str, seeds: usize) -> QuantSpec {
         let mut policy = PolicySpec::uniform(self.weight_bits, self.act_bits);
         policy.default_site.granularity = self.granularity.clone();
         policy.default_site.range_method = self.range_method;
         policy.weights.estimator = self.estimator;
-        let mut spec = QuantSpec::new(&self.label(), policy).with_seeds(seeds.max(1));
+        let mut spec = QuantSpec::new(&self.label(), policy)
+            .with_seeds(seeds.max(1))
+            .with_architecture(self.arch);
         spec.calib.estimator = self.estimator;
         spec.tasks = vec![task.to_string()];
         spec
@@ -135,22 +147,39 @@ pub struct SweepResult {
     pub millis: f64,
 }
 
-/// Total parameter count of the reference fixture architecture at
-/// embedding dim `d` (`d_ff = 2d`, the shipped fixture's ratio). This is
+/// Total parameter count of `arch`'s reference fixture model at
+/// embedding dim `d` (`d_ff = 2d`, the shipped fixtures' ratio). This is
 /// the denominator that puts `peg_overhead` in context: extra PEG
 /// parameters as a fraction of the model they decorate, so the paper's
 /// "overhead is negligible" framing shows up as a number in the table.
-pub fn reference_total_params(d: usize) -> usize {
-    let mut cfg = fixture::base_config();
+/// The count comes from the same `fixture::param_spec` that emits the
+/// manifest, so it is per-model accounting, not a BERT-shaped constant:
+/// a ViT cell is normalised against the ViT parameter budget (patch
+/// projection + positions instead of token/type vocabularies).
+pub fn reference_total_params_arch(d: usize, arch: Architecture) -> usize {
+    let mut cfg = match arch {
+        Architecture::Bert => fixture::base_config(),
+        Architecture::Vit => fixture::vit_config(),
+    };
     cfg.d = d;
     cfg.d_ff = 2 * d;
     fixture::param_spec(&cfg).iter().map(|(_, shape)| shape.iter().product::<usize>()).sum()
 }
 
+/// BERT convenience wrapper for [`reference_total_params_arch`].
+pub fn reference_total_params(d: usize) -> usize {
+    reference_total_params_arch(d, Architecture::Bert)
+}
+
 /// `overhead` extra parameters as a percentage of
-/// [`reference_total_params`] at embedding dim `d`.
+/// [`reference_total_params_arch`] at embedding dim `d`.
+pub fn overhead_pct_arch(overhead: usize, d: usize, arch: Architecture) -> f64 {
+    100.0 * overhead as f64 / reference_total_params_arch(d, arch) as f64
+}
+
+/// BERT convenience wrapper for [`overhead_pct_arch`].
 pub fn overhead_pct(overhead: usize, d: usize) -> f64 {
-    100.0 * overhead as f64 / reference_total_params(d) as f64
+    overhead_pct_arch(overhead, d, Architecture::Bert)
 }
 
 /// Map a group count onto the paper's granularities for embedding dim
@@ -171,11 +200,15 @@ pub fn granularity_for(d: usize, k: usize) -> Result<Granularity> {
     }
 }
 
-/// Cross product of the sweep axes. `mse_tensor` only composes with K=1
+/// Cross product of the sweep axes — task is fixed per invocation, so
+/// this is the architecture × config plane of the task × architecture ×
+/// config grid. `archs` is the outermost axis (a BERT-only grid keeps its
+/// pre-axis cell order). `mse_tensor` only composes with K=1
 /// (per-tensor) cells — ask for `mse_group` on grouped cells instead —
 /// so invalid pairs fail here, before any work is scheduled.
 pub fn grid(
     d: usize,
+    archs: &[Architecture],
     act_bits: &[u32],
     weight_bits: &[u32],
     groups: &[usize],
@@ -183,25 +216,28 @@ pub fn grid(
     range_methods: &[RangeMethod],
 ) -> Result<Vec<SweepConfig>> {
     let mut out = Vec::new();
-    for &ab in act_bits {
-        for &wb in weight_bits {
-            for &k in groups {
-                let gran = granularity_for(d, k)?;
-                for &est in estimators {
-                    for &rm in range_methods {
-                        if rm == RangeMethod::MseTensor && gran != Granularity::PerTensor {
-                            bail!(
-                                "range method mse_tensor needs K=1 (per-tensor); \
-                                 use mse_group for K={k}"
-                            );
+    for &arch in archs {
+        for &ab in act_bits {
+            for &wb in weight_bits {
+                for &k in groups {
+                    let gran = granularity_for(d, k)?;
+                    for &est in estimators {
+                        for &rm in range_methods {
+                            if rm == RangeMethod::MseTensor && gran != Granularity::PerTensor {
+                                bail!(
+                                    "range method mse_tensor needs K=1 (per-tensor); \
+                                     use mse_group for K={k}"
+                                );
+                            }
+                            out.push(SweepConfig {
+                                arch,
+                                act_bits: ab,
+                                weight_bits: wb,
+                                granularity: gran.clone(),
+                                estimator: est,
+                                range_method: rm,
+                            });
                         }
-                        out.push(SweepConfig {
-                            act_bits: ab,
-                            weight_bits: wb,
-                            granularity: gran.clone(),
-                            estimator: est,
-                            range_method: rm,
-                        });
                     }
                 }
             }
@@ -293,7 +329,7 @@ pub fn run_config_offline(
         act_mse,
         weight_mse,
         peg_overhead,
-        peg_overhead_pct: overhead_pct(peg_overhead, d),
+        peg_overhead_pct: overhead_pct_arch(peg_overhead, d, cfg.arch),
         score: None,
         millis: t0.elapsed().as_secs_f64() * 1e3,
     })
@@ -351,15 +387,26 @@ pub fn runtime_scores(
     pool.run(jobs)
 }
 
-/// Consolidated machine-readable report. `d` and `data_seed` identify the
-/// synthetic offline workload — cached rows are only valid against the
-/// same one (see [`parse_results`] / resume in [`cmd_sweep`]).
+/// Canonical workload stamp for an architecture axis: sorted, deduped
+/// family names, comma-joined ("bert", "bert,vit"). Order-insensitive so
+/// `--arch vit,bert` and `--arch bert,vit` name the same workload.
+pub fn arch_stamp(archs: &[Architecture]) -> String {
+    let mut names: Vec<&str> = archs.iter().map(|a| a.name()).collect();
+    names.sort_unstable();
+    names.dedup();
+    names.join(",")
+}
+
+/// Consolidated machine-readable report. `d`, `data_seed` and `archs`
+/// identify the workload — cached rows are only valid against the same
+/// one (see [`parse_results`] / resume in [`cmd_sweep`]).
 pub fn report_json(
     results: &[SweepResult],
     threads: usize,
     total_ms: f64,
     d: usize,
     data_seed: u64,
+    archs: &[Architecture],
 ) -> Json {
     let configs: Vec<Json> = results
         .iter()
@@ -387,17 +434,25 @@ pub fn report_json(
     top.insert("total_ms".to_string(), Json::Num(total_ms));
     top.insert("d".to_string(), Json::Num(d as f64));
     top.insert("data_seed".to_string(), Json::Num(data_seed as f64));
+    top.insert("archs".to_string(), Json::Str(arch_stamp(archs)));
     top.insert("configs".to_string(), Json::Arr(configs));
     Json::Obj(top)
 }
 
 /// The offline act/weight MSEs are computed on the synthetic workload, so
-/// a report is only comparable/resumable against the same `--d`/`--seed`.
-/// Reports written before these fields existed never match.
-pub fn workload_matches(j: &Json, d: usize, data_seed: u64) -> bool {
+/// a report is only comparable/resumable against the same
+/// `--d`/`--seed`/`--arch`. `archs` is an [`arch_stamp`]; reports written
+/// before the architecture axis carry no stamp and read as BERT-only —
+/// they stay valid for BERT sweeps and never match a ViT axis. Reports
+/// from before the workload fields existed never match at all.
+pub fn workload_matches(j: &Json, d: usize, data_seed: u64, archs: &str) -> bool {
     let jd = j.opt("d").and_then(|v| v.as_usize().ok());
     let js = j.opt("data_seed").and_then(|v| v.as_u64().ok());
-    jd == Some(d) && js == Some(data_seed)
+    let ja = j
+        .opt("archs")
+        .and_then(|v| v.as_str().ok().map(str::to_string))
+        .unwrap_or_else(|| Architecture::Bert.name().to_string());
+    jd == Some(d) && js == Some(data_seed) && ja == archs
 }
 
 /// Parse a consolidated report back into per-`spec_id` results (used for
@@ -433,15 +488,92 @@ pub fn parse_results(j: &Json) -> Result<BTreeMap<String, SweepResult>> {
     Ok(out)
 }
 
-fn load_cached(path: &Path, d: usize, data_seed: u64) -> Result<BTreeMap<String, SweepResult>> {
+fn load_cached(
+    path: &Path,
+    d: usize,
+    data_seed: u64,
+    archs: &str,
+) -> Result<BTreeMap<String, SweepResult>> {
     let text = std::fs::read_to_string(path)?;
     let j = Json::parse(&text)?;
-    if !workload_matches(&j, d, data_seed) {
+    if !workload_matches(&j, d, data_seed, archs) {
         // different synthetic workload: the cached offline MSEs don't
         // transfer, so resume from scratch
         return Ok(BTreeMap::new());
     }
     parse_results(&j)
+}
+
+/// Which shard of `n` a cell belongs to: FNV-1a over its `spec_id`, the
+/// same stable content hash that keys resume and baselines. Deterministic
+/// across processes and machines, independent of grid order, and keyed by
+/// the *cell* rather than its index — adding an axis reshuffles indices
+/// but moves no existing cell between shards.
+pub fn shard_of(spec_id: &str, n: usize) -> usize {
+    (crate::spec::fnv1a64(spec_id.as_bytes()) % n.max(1) as u64) as usize
+}
+
+/// Parse a 1-based `--shard i/n` selector.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let parse = || -> Option<(usize, usize)> {
+        let (i, n) = s.split_once('/')?;
+        Some((i.trim().parse().ok()?, n.trim().parse().ok()?))
+    };
+    let (i, n) = parse().ok_or_else(|| anyhow!("--shard wants i/n (e.g. 1/2), got {s:?}"))?;
+    if n == 0 || i == 0 || i > n {
+        bail!("--shard {s}: need 1 <= i <= n");
+    }
+    Ok((i, n))
+}
+
+/// Do two rows describe the same computation outcome? `millis` is
+/// wall-clock noise and excluded; everything else is deterministic.
+fn same_cell(a: &SweepResult, b: &SweepResult) -> bool {
+    a.label == b.label
+        && a.act_bits == b.act_bits
+        && a.weight_bits == b.weight_bits
+        && a.act_mse == b.act_mse
+        && a.weight_mse == b.weight_mse
+        && a.peg_overhead == b.peg_overhead
+        && a.peg_overhead_pct == b.peg_overhead_pct
+        && a.score == b.score
+}
+
+/// Union shard result maps back into grid (`ids`) order. A spec_id
+/// appearing in several shards must agree cell-for-cell (timing aside) —
+/// conflicting duplicates mean the shards were not one partition of one
+/// grid, and merging them would silently pick a winner. A grid cell
+/// missing from every shard is likewise an error, not a hole.
+pub fn merge_results(
+    shards: &[BTreeMap<String, SweepResult>],
+    ids: &[String],
+    labels: &[String],
+) -> Result<Vec<SweepResult>> {
+    let mut merged: BTreeMap<&str, &SweepResult> = BTreeMap::new();
+    for (si, shard) in shards.iter().enumerate() {
+        for (id, r) in shard {
+            if let Some(prev) = merged.get(id.as_str()) {
+                if !same_cell(prev, r) {
+                    bail!(
+                        "--merge: shard {} disagrees with an earlier shard on cell {} \
+                         ({id}) — the shard reports were not produced by one partition \
+                         of one grid",
+                        si + 1,
+                        r.label
+                    );
+                }
+            }
+            merged.insert(id, r);
+        }
+    }
+    ids.iter()
+        .zip(labels)
+        .map(|(id, label)| {
+            merged.get(id.as_str()).map(|r| (*r).clone()).ok_or_else(|| {
+                anyhow!("--merge: grid cell {label} ({id}) missing from every shard report")
+            })
+        })
+        .collect()
 }
 
 /// One line of a `--compare` diff.
@@ -536,13 +668,38 @@ fn parse_range_methods(s: &str) -> Result<Vec<RangeMethod>> {
         .collect()
 }
 
+/// Parse `--arch bert,vit`. Sorted and deduped so the grid order (and the
+/// workload stamp) are independent of how the user spelled the list.
+fn parse_archs(s: &str) -> Result<Vec<Architecture>> {
+    let mut out: Vec<Architecture> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(Architecture::parse)
+        .collect::<Result<_>>()?;
+    out.sort_unstable();
+    out.dedup();
+    if out.is_empty() {
+        bail!("--arch wants a list of architectures (e.g. bert,vit)");
+    }
+    Ok(out)
+}
+
 /// `repro sweep` driver. Runs the offline substrate sweep (skipping
 /// configurations already in `results/sweep.json` by `spec_id` unless
 /// `--fresh`), adds runtime-backed dev scores when artifacts and a
 /// checkpoint are present, writes one consolidated report (md + csv +
 /// json) under results/, and optionally gates on `--compare baseline.json`.
+///
+/// Distribution: `--shard i/n` runs only the cells whose `spec_id` hashes
+/// into shard `i` (see [`shard_of`]) and writes
+/// `results/sweep_shard_{i}of{n}.*` so concurrent shards never clobber
+/// each other; `--merge n` reads the `n` shard reports back, rejects
+/// conflicting or missing cells, and writes the consolidated report a
+/// single unsharded run would have produced (timing columns aside).
 pub fn cmd_sweep(args: &Args) -> Result<()> {
     let d = args.get_usize("d", 128)?;
+    let archs = parse_archs(args.get_or("arch", "bert"))?;
     let act_bits = parse_u32_list(args.get_or("bits", "8,4"))?;
     let weight_bits = parse_u32_list(args.get_or("wbits", "8"))?;
     let groups = parse_usize_list(args.get_or("groups", "1,8"))?;
@@ -553,25 +710,56 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     let task_name = args.get_or("task", "mnli");
     let pool = if threads == 0 { Pool::global().clone() } else { Pool::new(threads) };
 
-    let cfgs = grid(d, &act_bits, &weight_bits, &groups, &estimators, &range_methods)?;
-    if cfgs.is_empty() {
+    let full = grid(d, &archs, &act_bits, &weight_bits, &groups, &estimators, &range_methods)?;
+    if full.is_empty() {
         bail!("sweep grid is empty");
     }
-    // spec_id keys every cell (policy + calibration + seeds + task);
-    // the report's d/data_seed fields additionally guard the offline
-    // workload, so a cached row is only reused for the identical run
+    // spec_id keys every cell (architecture + policy + calibration +
+    // seeds + task); the report's d/data_seed/archs fields additionally
+    // guard the workload, so a cached row is only reused for the
+    // identical run
     let data_seed = args.get_u64("seed", 42)?;
-    let ids: Vec<String> = cfgs
-        .iter()
-        .map(|c| c.to_spec(task_name, seeds).spec_id())
-        .collect();
+    let stamp = arch_stamp(&archs);
+    let full_ids: Vec<String> =
+        full.iter().map(|c| c.to_spec(task_name, seeds).spec_id()).collect();
+
+    let shard = args.get("shard").map(parse_shard).transpose()?;
+    let merge_n = args.get_usize("merge", 0)?;
+    if shard.is_some() && merge_n > 0 {
+        bail!("--shard and --merge are mutually exclusive");
+    }
 
     let results_dir = std::path::PathBuf::from(args.get_or("results", "results"));
-    let sweep_path = results_dir.join("sweep.json");
+    if merge_n > 0 {
+        return merge_and_report(args, &results_dir, merge_n, &full, &full_ids, d, data_seed, &stamp, &pool);
+    }
+
+    // a shard run sees only its own cells, and reads/writes its own
+    // report files — shard reports union back via --merge
+    let (cfgs, ids): (Vec<SweepConfig>, Vec<String>) = match shard {
+        Some((i, n)) => {
+            let kept: Vec<usize> =
+                (0..full.len()).filter(|&x| shard_of(&full_ids[x], n) == i - 1).collect();
+            println!("shard {i}/{n}: {} of {} grid cells", kept.len(), full.len());
+            // an empty shard is a legitimate outcome of the hash
+            // partition on a small grid: it still writes its (empty)
+            // report, because --merge reads all n shard files back
+            (
+                kept.iter().map(|&x| full[x].clone()).collect(),
+                kept.iter().map(|&x| full_ids[x].clone()).collect(),
+            )
+        }
+        None => (full, full_ids),
+    };
+    let stem = match shard {
+        Some((i, n)) => format!("sweep_shard_{i}of{n}"),
+        None => "sweep".to_string(),
+    };
+    let sweep_path = results_dir.join(format!("{stem}.json"));
     let cached: BTreeMap<String, SweepResult> = if args.flag("fresh") {
         BTreeMap::new()
     } else {
-        load_cached(&sweep_path, d, data_seed).unwrap_or_default()
+        load_cached(&sweep_path, d, data_seed, &stamp).unwrap_or_default()
     };
     let mut slots: Vec<Option<SweepResult>> = ids
         .iter()
@@ -582,7 +770,7 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
                 // as 0) or carry stale values; they derive from the cell
                 // itself, so stamp them fresh like spec_id on new rows
                 r.peg_overhead = granularity_overhead_params(d, &cfg.granularity);
-                r.peg_overhead_pct = overhead_pct(r.peg_overhead, d);
+                r.peg_overhead_pct = overhead_pct_arch(r.peg_overhead, d, cfg.arch);
                 r
             })
         })
@@ -639,34 +827,47 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
             )?
             .with_pool(pool.clone());
             let task = ctx.task(task_name)?;
-            match experiments::load_ckpt(&ctx, &task) {
-                Ok(params) => {
-                    let unscored_cfgs: Vec<SweepConfig> =
-                        unscored.iter().map(|&i| cfgs[i].clone()).collect();
-                    let scores =
-                        runtime_scores(&ctx, &task, &params, &unscored_cfgs, seeds, &pool);
-                    for (&slot, s) in unscored.iter().zip(scores) {
-                        match s {
-                            Ok(v) => {
-                                if let Some(r) = slots[slot].as_mut() {
-                                    r.score = Some(v);
+            // each architecture family evaluates against its own
+            // checkpoint; a family whose checkpoint is missing degrades
+            // that family's cells to offline metrics, not the whole sweep
+            for &arch in &archs {
+                let unscored_arch: Vec<usize> =
+                    unscored.iter().copied().filter(|&i| cfgs[i].arch == arch).collect();
+                if unscored_arch.is_empty() {
+                    continue;
+                }
+                match experiments::load_ckpt_arch(&ctx, &task, arch) {
+                    Ok(params) => {
+                        let unscored_cfgs: Vec<SweepConfig> =
+                            unscored_arch.iter().map(|&i| cfgs[i].clone()).collect();
+                        let scores =
+                            runtime_scores(&ctx, &task, &params, &unscored_cfgs, seeds, &pool);
+                        for (&slot, s) in unscored_arch.iter().zip(scores) {
+                            match s {
+                                Ok(v) => {
+                                    if let Some(r) = slots[slot].as_mut() {
+                                        r.score = Some(v);
+                                    }
                                 }
-                            }
-                            Err(e) => {
-                                println!("({}: runtime eval failed — {e})", cfgs[slot].label())
+                                Err(e) => {
+                                    println!(
+                                        "({}: runtime eval failed — {e})",
+                                        cfgs[slot].label()
+                                    )
+                                }
                             }
                         }
                     }
-                    let st = ctx.rt.stats();
-                    if st.interpreted > 0 {
-                        println!(
-                            "(runtime pass executed on the in-repo HLO interpreter: \
-                             {} of {} executions)",
-                            st.interpreted, st.executions
-                        );
-                    }
+                    Err(e) => println!("({}: offline metrics only — {e})", arch.name()),
                 }
-                Err(e) => println!("(offline metrics only — {e})"),
+            }
+            let st = ctx.rt.stats();
+            if st.interpreted > 0 {
+                println!(
+                    "(runtime pass executed on the in-repo HLO interpreter: \
+                     {} of {} executions)",
+                    st.interpreted, st.executions
+                );
             }
         } else {
             println!("(artifacts/manifest.json absent; offline substrate metrics only)");
@@ -697,8 +898,8 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     print!("{}", table.to_console());
     println!("sweep total: {total_ms:.0} ms ({} run, {n_cached} cached)", todo.len());
 
-    write_file(results_dir.join("sweep.md"), &table.to_markdown())?;
-    write_file(results_dir.join("sweep.csv"), &table.to_csv())?;
+    write_file(results_dir.join(format!("{stem}.md")), &table.to_markdown())?;
+    write_file(results_dir.join(format!("{stem}.csv")), &table.to_csv())?;
     // the JSON report keeps cached rows from *other* grids/tasks too, so
     // successive `repro sweep --task ...` invocations accumulate one
     // resumable result store instead of overwriting each other
@@ -710,23 +911,37 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     }
     write_file(
         &sweep_path,
-        &report_json(&store, pool.threads(), total_ms, d, data_seed).to_string(),
+        &report_json(&store, pool.threads(), total_ms, d, data_seed, &archs).to_string(),
     )?;
 
+    compare_gate(args, &results_dir, &results, d, data_seed, &stamp)
+}
+
+/// The `--compare baseline.json` regression gate shared by normal, shard
+/// and merge runs: diff by spec_id, write `sweep_compare.md`, exit
+/// non-zero on any regression or on a vacuous comparison.
+fn compare_gate(
+    args: &Args,
+    results_dir: &Path,
+    results: &[SweepResult],
+    d: usize,
+    data_seed: u64,
+    stamp: &str,
+) -> Result<()> {
     if let Some(baseline_path) = args.get("compare") {
         let score_tol = args.get_f32("tolerance", 0.5)? as f64;
         let mse_rel_tol = args.get_f32("mse-tolerance", 0.10)? as f64;
         let text = std::fs::read_to_string(baseline_path)
             .map_err(|e| anyhow!("cannot read baseline {baseline_path:?}: {e}"))?;
         let bj = Json::parse(&text)?;
-        if !workload_matches(&bj, d, data_seed) {
+        if !workload_matches(&bj, d, data_seed, stamp) {
             bail!(
                 "baseline {baseline_path} was produced with a different offline \
-                 workload (--d/--seed) — compare like-for-like sweeps"
+                 workload (--d/--seed/--arch) — compare like-for-like sweeps"
             );
         }
         let baseline = parse_results(&bj)?;
-        let rows = compare_to_baseline(&results, &baseline, score_tol, mse_rel_tol);
+        let rows = compare_to_baseline(results, &baseline, score_tol, mse_rel_tol);
         let mut diff = Table::new(
             &format!("Sweep vs baseline {baseline_path} (tol {score_tol} pts / {mse_rel_tol} rel MSE)"),
             &["config", "metric", "baseline", "current", "delta", "status"],
@@ -767,6 +982,96 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro sweep --merge n`: union the `n` shard reports of this grid back
+/// into the consolidated `results/sweep.{json,md,csv}` a single unsharded
+/// run would have written. Every shard must have been produced from the
+/// same workload (`--d`/`--seed`/`--arch`) and grid flags; conflicting
+/// duplicate cells and cells missing from every shard are hard errors
+/// (see [`merge_results`]).
+#[allow(clippy::too_many_arguments)]
+fn merge_and_report(
+    args: &Args,
+    results_dir: &Path,
+    merge_n: usize,
+    cfgs: &[SweepConfig],
+    ids: &[String],
+    d: usize,
+    data_seed: u64,
+    stamp: &str,
+    pool: &Pool,
+) -> Result<()> {
+    let mut shards = Vec::with_capacity(merge_n);
+    for i in 1..=merge_n {
+        let p = results_dir.join(format!("sweep_shard_{i}of{merge_n}.json"));
+        let text = std::fs::read_to_string(&p).map_err(|e| {
+            anyhow!("--merge {merge_n}: cannot read shard report {}: {e}", p.display())
+        })?;
+        let j = Json::parse(&text)?;
+        if !workload_matches(&j, d, data_seed, stamp) {
+            bail!(
+                "--merge: shard report {} was produced with a different workload \
+                 (--d/--seed/--arch)",
+                p.display()
+            );
+        }
+        shards.push(parse_results(&j)?);
+    }
+    let labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
+    let results = merge_results(&shards, ids, &labels)?;
+    println!(
+        "merged {merge_n} shard report(s): {} grid cells, {} scored",
+        results.len(),
+        results.iter().filter(|r| r.score.is_some()).count()
+    );
+
+    let mut table = Table::new(
+        &format!("Quantization sweep ({} configs, merged from {merge_n} shards)", results.len()),
+        &["config", "spec_id", "act MSE", "weight MSE", "overhead", "ovh %", "score", "ms"],
+    );
+    for r in &results {
+        table.row(vec![
+            r.label.clone(),
+            r.spec_id.clone(),
+            format!("{:.3e}", r.act_mse),
+            format!("{:.3e}", r.weight_mse),
+            format!("{}", r.peg_overhead),
+            format!("{:.2}", r.peg_overhead_pct),
+            r.score.map(fmt_score).unwrap_or_else(|| "-".to_string()),
+            format!("{:.1}", r.millis),
+        ]);
+    }
+    print!("{}", table.to_console());
+
+    let sweep_path = results_dir.join("sweep.json");
+    // mirror the unsharded store: keep cached rows from other grids/tasks
+    let cached: BTreeMap<String, SweepResult> = if args.flag("fresh") {
+        BTreeMap::new()
+    } else {
+        load_cached(&sweep_path, d, data_seed, stamp).unwrap_or_default()
+    };
+    let archs: Vec<Architecture> = {
+        let mut a: Vec<Architecture> = cfgs.iter().map(|c| c.arch).collect();
+        a.sort_unstable();
+        a.dedup();
+        a
+    };
+    write_file(results_dir.join("sweep.md"), &table.to_markdown())?;
+    write_file(results_dir.join("sweep.csv"), &table.to_csv())?;
+    let mut store = results.clone();
+    for (id, r) in &cached {
+        if !ids.contains(id) {
+            store.push(r.clone());
+        }
+    }
+    let total_ms: f64 = results.iter().map(|r| r.millis).sum();
+    write_file(
+        &sweep_path,
+        &report_json(&store, pool.threads(), total_ms, d, data_seed, &archs).to_string(),
+    )?;
+
+    compare_gate(args, results_dir, &results, d, data_seed, stamp)
+}
+
 #[allow(dead_code)]
 fn assert_shareable() {
     fn is_sync<T: Sync>() {}
@@ -780,10 +1085,13 @@ mod tests {
     use crate::model::manifest::tests::tiny_model_info;
     use crate::model::qconfig::QuantPolicy;
 
+    const BERT: &[Architecture] = &[Architecture::Bert];
+
     #[test]
     fn grid_is_full_cross_product() {
         let cfgs = grid(
             128,
+            BERT,
             &[8, 4],
             &[8],
             &[1, 8, 128],
@@ -793,10 +1101,113 @@ mod tests {
         .unwrap();
         assert_eq!(cfgs.len(), 2 * 1 * 3 * 2 * 2);
         // mse_tensor only composes with per-tensor cells
-        assert!(grid(128, &[8], &[8], &[8], &[Estimator::Mse], &[RangeMethod::MseTensor])
+        assert!(grid(128, BERT, &[8], &[8], &[8], &[Estimator::Mse], &[RangeMethod::MseTensor])
             .is_err());
-        assert!(grid(128, &[8], &[8], &[1], &[Estimator::Mse], &[RangeMethod::MseTensor])
+        assert!(grid(128, BERT, &[8], &[8], &[1], &[Estimator::Mse], &[RangeMethod::MseTensor])
             .is_ok());
+    }
+
+    #[test]
+    fn architecture_axis_crosses_the_grid() {
+        let archs = [Architecture::Bert, Architecture::Vit];
+        let cfgs = grid(
+            128,
+            &archs,
+            &[8],
+            &[8],
+            &[1, 8],
+            &[Estimator::Mse],
+            &[RangeMethod::Auto],
+        )
+        .unwrap();
+        assert_eq!(cfgs.len(), 2 * 2);
+        // arch is the outermost axis: BERT cells first, in pre-axis order
+        assert!(cfgs[..2].iter().all(|c| c.arch == Architecture::Bert));
+        assert!(cfgs[2..].iter().all(|c| c.arch == Architecture::Vit));
+        // BERT labels are exactly the pre-axis labels; ViT cells are marked
+        assert_eq!(cfgs[0].label(), "a8w8-pt-mse");
+        assert_eq!(cfgs[2].label(), "a8w8-pt-mse-vit");
+        // the axis is part of the spec identity (and only for non-BERT)
+        let b = cfgs[0].to_spec("mnli", 1);
+        let v = cfgs[2].to_spec("mnli", 1);
+        assert_ne!(b.spec_id(), v.spec_id());
+        assert!(!b.to_json().to_string().contains("architecture"));
+        assert!(v.to_json().to_string().contains("\"architecture\":\"vit\""));
+    }
+
+    #[test]
+    fn shards_partition_the_grid() {
+        let cfgs = grid(
+            128,
+            &[Architecture::Bert, Architecture::Vit],
+            &[8, 4],
+            &[8],
+            &[1, 8],
+            &[Estimator::CurrentMinMax, Estimator::Mse],
+            &[RangeMethod::Auto],
+        )
+        .unwrap();
+        let ids: Vec<String> = cfgs.iter().map(|c| c.to_spec("mnli", 1).spec_id()).collect();
+        for n in [1usize, 2, 4] {
+            let mut seen = 0;
+            for i in 0..n {
+                let shard: Vec<&String> =
+                    ids.iter().filter(|id| shard_of(id, n) == i).collect();
+                seen += shard.len();
+            }
+            // shards are disjoint by construction (shard_of is a function
+            // of the id); together they must cover the grid exactly
+            assert_eq!(seen, ids.len(), "n={n}");
+        }
+        // assignment is stable — same id, same shard, every time
+        assert_eq!(shard_of(&ids[0], 4), shard_of(&ids[0], 4));
+        assert!(parse_shard("1/2").unwrap() == (1, 2));
+        assert!(parse_shard("2/2").unwrap() == (2, 2));
+        assert!(parse_shard("0/2").is_err());
+        assert!(parse_shard("3/2").is_err());
+        assert!(parse_shard("x").is_err());
+    }
+
+    #[test]
+    fn merge_unions_shards_and_rejects_conflicts() {
+        let mk = |id: &str, score: Option<f64>| SweepResult {
+            label: format!("cfg-{id}"),
+            spec_id: id.to_string(),
+            act_bits: 8,
+            weight_bits: 8,
+            act_mse: 1e-3,
+            weight_mse: 1e-4,
+            peg_overhead: 0,
+            peg_overhead_pct: 0.0,
+            score,
+            millis: 1.0,
+        };
+        let ids = vec!["a".to_string(), "b".to_string()];
+        let labels = vec!["cfg-a".to_string(), "cfg-b".to_string()];
+        let s1: BTreeMap<String, SweepResult> =
+            [("a".to_string(), mk("a", Some(80.0)))].into_iter().collect();
+        let s2: BTreeMap<String, SweepResult> =
+            [("b".to_string(), mk("b", None))].into_iter().collect();
+        let merged = merge_results(&[s1.clone(), s2.clone()], &ids, &labels).unwrap();
+        assert_eq!(merged.len(), 2);
+        // grid order, not shard order
+        assert_eq!(merged[0].spec_id, "a");
+        assert_eq!(merged[0].score, Some(80.0));
+        assert_eq!(merged[1].spec_id, "b");
+        // duplicate ids must agree (timing aside) ...
+        let mut dup = mk("a", Some(80.0));
+        dup.millis = 99.0;
+        let s2_dup: BTreeMap<String, SweepResult> =
+            [("a".to_string(), dup), ("b".to_string(), mk("b", None))].into_iter().collect();
+        assert!(merge_results(&[s1.clone(), s2_dup], &ids, &labels).is_ok());
+        // ... and a conflicting duplicate is an error, not a pick-a-winner
+        let s2_bad: BTreeMap<String, SweepResult> =
+            [("a".to_string(), mk("a", Some(10.0))), ("b".to_string(), mk("b", None))]
+                .into_iter()
+                .collect();
+        assert!(merge_results(&[s1.clone(), s2_bad], &ids, &labels).is_err());
+        // a grid cell no shard ran is a hole, and holes are errors
+        assert!(merge_results(&[s1], &ids, &labels).is_err());
     }
 
     #[test]
@@ -821,6 +1232,7 @@ mod tests {
         let data = synth_data(64, 32, 4, 7);
         let cfgs = grid(
             64,
+            BERT,
             &[8],
             &[8],
             &[1, 64],
@@ -864,12 +1276,31 @@ mod tests {
     }
 
     #[test]
+    fn reference_params_are_per_architecture() {
+        // the ViT fixture has no token/type vocabularies, so the same
+        // overhead normalises against a different (smaller) budget — the
+        // per-model accounting the table's "ovh %" column promises
+        let bert = reference_total_params_arch(128, Architecture::Bert);
+        let vit = reference_total_params_arch(128, Architecture::Vit);
+        assert!(bert > 0 && vit > 0);
+        assert_ne!(bert, vit);
+        assert!(vit < bert, "vit {vit} !< bert {bert}");
+        assert!(
+            overhead_pct_arch(6 * 128, 128, Architecture::Vit)
+                > overhead_pct_arch(6 * 128, 128, Architecture::Bert)
+        );
+        // the BERT wrappers stay the BERT numbers
+        assert_eq!(reference_total_params(128), bert);
+    }
+
+    #[test]
     fn offline_mse_group_cells_run_and_report_overhead() {
         let data = synth_data(64, 32, 4, 7);
         // K=6 does not divide d=64: the near-even uneven-group path runs
         // through the row-sampling per-group search
         let cfgs = grid(
             64,
+            BERT,
             &[8],
             &[8],
             &[1, 6, 64],
@@ -891,6 +1322,7 @@ mod tests {
     fn sweep_labels_are_unique() {
         let cfgs = grid(
             128,
+            &[Architecture::Bert, Architecture::Vit],
             &[8, 4],
             &[8, 4],
             &[1, 8, 128],
@@ -909,6 +1341,7 @@ mod tests {
     fn to_spec_reproduces_the_hard_coded_policy() {
         // the exact QuantPolicy the pre-spec runtime pass built
         let cfg = SweepConfig {
+            arch: Architecture::Bert,
             act_bits: 4,
             weight_bits: 8,
             granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },
@@ -937,6 +1370,7 @@ mod tests {
     fn spec_ids_key_the_whole_cell() {
         let cfgs = grid(
             128,
+            &[Architecture::Bert, Architecture::Vit],
             &[8, 4],
             &[8],
             &[1, 8],
@@ -962,9 +1396,9 @@ mod tests {
     fn report_json_roundtrips() {
         let data = synth_data(32, 16, 2, 1);
         let cfgs =
-            grid(32, &[8], &[4], &[1], &[Estimator::Mse], &[RangeMethod::Auto]).unwrap();
+            grid(32, BERT, &[8], &[4], &[1], &[Estimator::Mse], &[RangeMethod::Auto]).unwrap();
         let res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
-        let j = report_json(&res, 4, 12.5, 32, 1);
+        let j = report_json(&res, 4, 12.5, 32, 1, BERT);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("threads").unwrap().as_usize().unwrap(), 4);
         let arr = parsed.get("configs").unwrap().as_arr().unwrap();
@@ -973,25 +1407,47 @@ mod tests {
             arr[0].get("label").unwrap().as_str().unwrap(),
             res[0].label
         );
-        // the offline workload guards cache reuse across --d/--seed
-        assert!(workload_matches(&parsed, 32, 1));
-        assert!(!workload_matches(&parsed, 64, 1));
-        assert!(!workload_matches(&parsed, 32, 2));
+        // the offline workload guards cache reuse across --d/--seed/--arch
+        assert!(workload_matches(&parsed, 32, 1, "bert"));
+        assert!(!workload_matches(&parsed, 64, 1, "bert"));
+        assert!(!workload_matches(&parsed, 32, 2, "bert"));
+        assert!(!workload_matches(&parsed, 32, 1, "bert,vit"));
         // pre-spec reports (no workload fields) never match
-        assert!(!workload_matches(&Json::parse("{}").unwrap(), 32, 1));
+        assert!(!workload_matches(&Json::parse("{}").unwrap(), 32, 1, "bert"));
+    }
+
+    #[test]
+    fn workload_keys_on_architecture() {
+        // the stamp is order-insensitive and deduped
+        assert_eq!(arch_stamp(&[Architecture::Vit, Architecture::Bert]), "bert,vit");
+        assert_eq!(
+            arch_stamp(&[Architecture::Bert, Architecture::Bert]),
+            "bert"
+        );
+        let j = report_json(&[], 1, 0.0, 32, 1, &[Architecture::Vit, Architecture::Bert]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!(workload_matches(&parsed, 32, 1, "bert,vit"));
+        assert!(!workload_matches(&parsed, 32, 1, "bert"));
+        assert!(!workload_matches(&parsed, 32, 1, "vit"));
+        // reports written before the axis existed read as BERT-only:
+        // still resumable for BERT sweeps, never for a ViT axis
+        let legacy = Json::parse(r#"{"d": 32, "data_seed": 1, "configs": []}"#).unwrap();
+        assert!(workload_matches(&legacy, 32, 1, "bert"));
+        assert!(!workload_matches(&legacy, 32, 1, "bert,vit"));
     }
 
     #[test]
     fn cached_results_roundtrip_by_spec_id() {
         let data = synth_data(32, 16, 2, 1);
         let cfgs =
-            grid(32, &[8, 4], &[4], &[1], &[Estimator::Mse], &[RangeMethod::Auto]).unwrap();
+            grid(32, BERT, &[8, 4], &[4], &[1], &[Estimator::Mse], &[RangeMethod::Auto])
+                .unwrap();
         let mut res = run_offline(&data, &cfgs, &Pool::serial()).unwrap();
         for (r, c) in res.iter_mut().zip(&cfgs) {
             r.spec_id = c.to_spec("mnli", 1).spec_id();
         }
         res[0].score = Some(81.25);
-        let j = report_json(&res, 2, 5.0, 32, 1);
+        let j = report_json(&res, 2, 5.0, 32, 1, BERT);
         let cached = parse_results(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cached.len(), 2);
         let r0 = &cached[&res[0].spec_id];
@@ -1007,6 +1463,7 @@ mod tests {
             1.0,
             32,
             1,
+            BERT,
         );
         assert!(parse_results(&Json::parse(&legacy.to_string()).unwrap())
             .unwrap()

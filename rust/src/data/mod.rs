@@ -319,6 +319,34 @@ fn hash_name(name: &str) -> u64 {
     })
 }
 
+/// Fixed seed of the token-id → pixel-patch codebook. One constant so the
+/// generator-side rasterisation (if any) and the coordinator's
+/// [`pixels_for_ids`] can never drift apart.
+pub const PIXEL_CODEBOOK_SEED: u64 = 0x9121_0007;
+
+/// Deterministic pixel codebook for the ViT frontend: one `patch_dim`-long
+/// row of uniform [-1, 1] pixels per vocabulary id. The ViT fixture has no
+/// tokenizer — the same synthetic examples drive both architectures, and
+/// this fixed map rasterises each token id into one image patch, so every
+/// task/dataset/metric stays shared.
+pub fn pixel_codebook(patch_dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(PIXEL_CODEBOOK_SEED);
+    (0..VOCAB as usize * patch_dim).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// Rasterise flat token ids into flat pixels (`ids.len() * patch_dim`)
+/// through [`pixel_codebook`]. Ids outside the vocabulary (never produced
+/// by the generators) wrap rather than panic.
+pub fn pixels_for_ids(ids: &[i32], patch_dim: usize) -> Vec<f32> {
+    let book = pixel_codebook(patch_dim);
+    let mut out = Vec::with_capacity(ids.len() * patch_dim);
+    for &id in ids {
+        let row = id.rem_euclid(VOCAB) as usize * patch_dim;
+        out.extend_from_slice(&book[row..row + patch_dim]);
+    }
+    out
+}
+
 /// Batch of examples flattened for the runtime.
 #[derive(Debug, Clone)]
 pub struct Batch {
@@ -491,6 +519,24 @@ mod tests {
         let past = make_batch(&split, 12, 4, SEQ);
         assert_eq!(past.real, 0);
         assert!(past.ids.iter().all(|&id| id == PAD_ID));
+    }
+
+    #[test]
+    fn pixel_codebook_is_deterministic_and_bounded() {
+        let pd = 16;
+        let a = pixel_codebook(pd);
+        assert_eq!(a.len(), VOCAB as usize * pd);
+        assert_eq!(a, pixel_codebook(pd));
+        assert!(a.iter().all(|x| (-1.0..=1.0).contains(x)));
+        // distinct ids map to distinct patches
+        assert_ne!(&a[0..pd], &a[pd..2 * pd]);
+        // rasterisation = per-id codebook lookup, wrapping out-of-range ids
+        let px = pixels_for_ids(&[CLS_ID, PAD_ID, VOCAB + CLS_ID], pd);
+        assert_eq!(px.len(), 3 * pd);
+        let row = |id: i32| &a[id as usize * pd..(id as usize + 1) * pd];
+        assert_eq!(&px[0..pd], row(CLS_ID));
+        assert_eq!(&px[pd..2 * pd], row(PAD_ID));
+        assert_eq!(&px[2 * pd..], row(CLS_ID));
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! BERT frontend for the fixture generator: token/position/type
+//! embeddings over integer ids plus the additive PAD attention-mask bias.
+//! Everything downstream of the embedding sum lives in the
+//! architecture-neutral core (`super`).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::super::builder::{GraphBuilder, Op};
+use super::super::DType;
+use super::{sig, FixtureConfig, SigEntry, MASK_BIAS};
+use crate::model::manifest::ArchParams;
+
+/// The fixture "base" model: d = 128 like the real export (integration
+/// tests and PEG group counts depend on it), but 1 layer / seq 24 so the
+/// interpreter evaluates a full dev split in seconds.
+pub fn base_config() -> FixtureConfig {
+    FixtureConfig {
+        name: "base".to_string(),
+        vocab: 64,
+        d: 128,
+        heads: 4,
+        layers: 1,
+        d_ff: 256,
+        seq: 24,
+        n_out: 3,
+        outlier_dims: vec![17, 89, 101],
+        arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+    }
+}
+
+/// Embedding-table parameters (precede the shared `embed.ln.*` entries).
+pub(crate) fn embed_params(cfg: &FixtureConfig) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d;
+    vec![
+        ("embed.tok".into(), vec![cfg.vocab, d]),
+        ("embed.pos".into(), vec![cfg.seq, d]),
+        ("embed.type".into(), vec![2, d]),
+    ]
+}
+
+/// Lower the BERT data inputs and embedding sum. Returns the pre-LN
+/// embedding `[b, t, d]` and the additive attention-mask bias
+/// `[b, h, t, t]` (PAD positions get [`MASK_BIAS`]).
+pub(crate) fn embed(
+    g: &mut GraphBuilder,
+    cfg: &FixtureConfig,
+    b: usize,
+    p: &BTreeMap<String, Op>,
+    inputs: &mut Vec<SigEntry>,
+) -> Result<(Op, Option<Op>)> {
+    let (t, d, h) = (cfg.seq, cfg.d, cfg.heads);
+    let ids = g.param(DType::S32, &[b, t]);
+    inputs.push(sig("input_ids", &[b, t], "i32"));
+    let tt = g.param(DType::S32, &[b, t]);
+    inputs.push(sig("token_type", &[b, t], "i32"));
+    let mask = g.param(DType::F32, &[b, t]);
+    inputs.push(sig("attn_mask", &[b, t], "f32"));
+
+    // embeddings: tok[ids] + pos + type[token_type]
+    let ids_flat = g.reshape(&ids, &[b * t])?;
+    let tok = g.gather_rows(&p["embed.tok"], &ids_flat)?;
+    let tok = g.reshape(&tok, &[b, t, d])?;
+    let pos = g.broadcast(&p["embed.pos"], &[b, t, d], &[1, 2])?;
+    let tt_flat = g.reshape(&tt, &[b * t])?;
+    let typ = g.gather_rows(&p["embed.type"], &tt_flat)?;
+    let typ = g.reshape(&typ, &[b, t, d])?;
+    let x0 = g.add(&tok, &pos)?;
+    let x0 = g.add(&x0, &typ)?;
+
+    // additive attention-mask bias, broadcast to [b, h, t, t]
+    let one = g.const_f32(1.0);
+    let ones = g.splat(&one, &[b, t])?;
+    let inv_mask = g.sub(&ones, &mask)?;
+    let bias2 = g.scale(&inv_mask, MASK_BIAS)?;
+    let bias4 = g.broadcast(&bias2, &[b, h, t, t], &[0, 3])?;
+    Ok((x0, Some(bias4)))
+}

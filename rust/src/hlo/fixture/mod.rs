@@ -1,19 +1,28 @@
 //! `repro gen-artifacts`: a self-consistent fixture `artifacts/`.
 //!
-//! Lowers a shrunk BERT-style encoder (same topology family as
-//! python/compile/model.py: 13 activation-quantizer sites per layer + 4,
-//! runtime-parameterised fake-quant at every site) to HLO text with
-//! [`crate::hlo::builder`], and writes the same `manifest.json` contract
-//! aot.py emits — artifact signatures, model topology, golden fake-quant
-//! vectors. The generated modules execute on the in-repo interpreter (or
-//! a real PJRT client), so integration tests, `repro smoke` and the
-//! sweep's runtime pass run in any container without Python or XLA.
+//! The module is an architecture-neutral core plus per-architecture
+//! frontends: [`bert`] lowers the original token-embedding encoder
+//! (same topology family as python/compile/model.py: 13 activation-
+//! quantizer sites per layer + 4, runtime-parameterised fake-quant at
+//! every site), [`vit`] lowers a ViT-style patch-embed encoder (patch
+//! projection + learned position embeddings feeding the *same*
+//! attention/FFN/residual blocks and site inventory). Both lower to HLO
+//! text with [`crate::hlo::builder`] and share one `manifest.json`
+//! contract — artifact signatures, model topology (including the
+//! `architecture` discriminant), golden fake-quant vectors. The generated
+//! modules execute on the in-repo interpreter (or a real PJRT client), so
+//! integration tests, `repro smoke` and the sweep's runtime pass run in
+//! any container without Python or XLA.
 //!
-//! The fixture model is deliberately small (1 layer, seq 24) so a full
-//! dev-set evaluation interprets in seconds, but keeps `d = 128` and the
-//! per-layer site inventory of the real export so topology-sensitive code
-//! paths (PEG grouping, site families, mixed precision) exercise
-//! realistically. Deterministic: every run emits byte-identical artifacts.
+//! The fixture models are deliberately small (1 layer, short sequences)
+//! so a full dev-set evaluation interprets in seconds, but keep `d = 128`
+//! and the per-layer site inventory of the real export so
+//! topology-sensitive code paths (PEG grouping, site families, mixed
+//! precision) exercise realistically. Deterministic: every run emits
+//! byte-identical artifacts.
+
+pub mod bert;
+pub mod vit;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -24,7 +33,7 @@ use super::builder::{GraphBuilder, Op};
 use super::DType;
 use crate::data::{TaskKind, TASKS};
 use crate::model::checkpoint;
-use crate::model::manifest::{ModelConfig, ModelInfo, ParamSpec, SiteSpec};
+use crate::model::manifest::{ArchParams, Architecture, ModelConfig, ModelInfo, ParamSpec, SiteSpec};
 use crate::model::Params;
 use crate::quant::{qdq_per_lane, QGrid, QParams};
 use crate::tensor::Tensor;
@@ -32,10 +41,15 @@ use crate::util::cli::Args;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
+pub use bert::base_config;
+pub use vit::vit_config;
+
 /// Additive attention-mask bias (mirrors model.py MASK_BIAS).
 pub(crate) const MASK_BIAS: f32 = -30.0;
 
-/// Architecture of the fixture model.
+/// Architecture of the fixture model. `arch` selects the embedding
+/// frontend (and the per-architecture manifest fields); everything from
+/// `embed.ln` through the encoder stack to the pooler/head is shared.
 #[derive(Debug, Clone)]
 pub struct FixtureConfig {
     pub name: String,
@@ -47,35 +61,20 @@ pub struct FixtureConfig {
     pub seq: usize,
     pub n_out: usize,
     pub outlier_dims: Vec<usize>,
+    pub arch: ArchParams,
 }
 
-/// The fixture "base" model: d = 128 like the real export (integration
-/// tests and PEG group counts depend on it), but 1 layer / seq 24 so the
-/// interpreter evaluates a full dev split in seconds.
-pub fn base_config() -> FixtureConfig {
-    FixtureConfig {
-        name: "base".to_string(),
-        vocab: 64,
-        d: 128,
-        heads: 4,
-        layers: 1,
-        d_ff: 256,
-        seq: 24,
-        n_out: 3,
-        outlier_dims: vec![17, 89, 101],
-    }
-}
-
-/// Ordered (name, shape) parameter signature (mirrors model.py).
+/// Ordered (name, shape) parameter signature: per-architecture embedding
+/// parameters, then the shared embed-LN / encoder-layer / pooler / head
+/// inventory (mirrors model.py for the BERT frontend).
 pub fn param_spec(cfg: &FixtureConfig) -> Vec<(String, Vec<usize>)> {
     let d = cfg.d;
-    let mut spec: Vec<(String, Vec<usize>)> = vec![
-        ("embed.tok".into(), vec![cfg.vocab, d]),
-        ("embed.pos".into(), vec![cfg.seq, d]),
-        ("embed.type".into(), vec![2, d]),
-        ("embed.ln.g".into(), vec![d]),
-        ("embed.ln.b".into(), vec![d]),
-    ];
+    let mut spec = match cfg.arch.architecture() {
+        Architecture::Bert => bert::embed_params(cfg),
+        Architecture::Vit => vit::embed_params(cfg),
+    };
+    spec.push(("embed.ln.g".into(), vec![d]));
+    spec.push(("embed.ln.b".into(), vec![d]));
     for i in 0..cfg.layers {
         let p = format!("layer{i}.");
         spec.push((format!("{p}q.w"), vec![d, d]));
@@ -103,7 +102,9 @@ pub fn param_spec(cfg: &FixtureConfig) -> Vec<(String, Vec<usize>)> {
 }
 
 /// Ordered (site, channels) activation-quantizer inventory — 13 per layer
-/// plus 4 (mirrors model.py `site_spec`).
+/// plus 4 (mirrors model.py `site_spec`). The inventory is
+/// architecture-independent: both frontends feed the same encoder stack,
+/// so specs and presets transfer across architectures unchanged.
 pub fn site_spec(cfg: &FixtureConfig) -> Vec<(String, usize)> {
     let d = cfg.d;
     let mut sites: Vec<(String, usize)> =
@@ -130,7 +131,11 @@ pub fn site_spec(cfg: &FixtureConfig) -> Vec<(String, usize)> {
 }
 
 pub(crate) fn wq_spec(cfg: &FixtureConfig) -> Vec<String> {
-    let mut names = vec!["embed.tok".to_string()];
+    let embed_w = match cfg.arch.architecture() {
+        Architecture::Bert => "embed.tok",
+        Architecture::Vit => "embed.patch.w",
+    };
+    let mut names = vec![embed_w.to_string()];
     for i in 0..cfg.layers {
         let p = format!("layer{i}.");
         for w in ["q.w", "k.w", "v.w", "attn_out.w", "ffn1.w", "ffn2.w"] {
@@ -167,9 +172,7 @@ pub fn model_info(cfg: &FixtureConfig) -> ModelInfo {
             seq: cfg.seq,
             n_out: cfg.n_out,
             outlier_dims: cfg.outlier_dims.clone(),
-            pad_id: 0,
-            cls_id: 1,
-            sep_id: 2,
+            arch: cfg.arch.clone(),
         },
         params: param_spec(cfg)
             .into_iter()
@@ -285,6 +288,11 @@ pub(crate) struct Artifact {
 }
 
 /// Lower the forward (or diagnostic) graph for `cfg` at batch size `b`.
+///
+/// The core builds the parameter and quantizer inputs, dispatches to the
+/// architecture frontend for the data inputs + embedding sum (+ optional
+/// additive attention bias), then lowers the shared encoder stack and
+/// pooler/head with the canonical site order.
 pub(crate) fn build_forward(
     cfg: &FixtureConfig,
     b: usize,
@@ -314,12 +322,12 @@ pub(crate) fn build_forward(
     inputs.push(sig("act_zps", &[total], "f32"));
     let act_cfg = g.param(DType::F32, &[n_sites, 3]);
     inputs.push(sig("act_cfg", &[n_sites, 3], "f32"));
-    let ids = g.param(DType::S32, &[b, t]);
-    inputs.push(sig("input_ids", &[b, t], "i32"));
-    let tt = g.param(DType::S32, &[b, t]);
-    inputs.push(sig("token_type", &[b, t], "i32"));
-    let mask = g.param(DType::F32, &[b, t]);
-    inputs.push(sig("attn_mask", &[b, t], "f32"));
+
+    // architecture frontend: data inputs + embedding sum (+ attention bias)
+    let (x0, bias4) = match cfg.arch.architecture() {
+        Architecture::Bert => bert::embed(&mut g, cfg, b, &p, &mut inputs)?,
+        Architecture::Vit => vit::embed(&mut g, cfg, b, &p, &mut inputs)?,
+    };
 
     let mut q = SiteQuant {
         sites,
@@ -332,26 +340,9 @@ pub(crate) fn build_forward(
         act_cfg,
     };
 
-    // embeddings: tok[ids] + pos + type[token_type]
-    let ids_flat = g.reshape(&ids, &[b * t])?;
-    let tok = g.gather_rows(&p["embed.tok"], &ids_flat)?;
-    let tok = g.reshape(&tok, &[b, t, d])?;
-    let pos = g.broadcast(&p["embed.pos"], &[b, t, d], &[1, 2])?;
-    let tt_flat = g.reshape(&tt, &[b * t])?;
-    let typ = g.gather_rows(&p["embed.type"], &tt_flat)?;
-    let typ = g.reshape(&typ, &[b, t, d])?;
-    let x0 = g.add(&tok, &pos)?;
-    let x0 = g.add(&x0, &typ)?;
     let x0 = q.apply(&mut g, "embed_sum", &x0)?;
     let x0 = g.layernorm(&x0, &p["embed.ln.g"], &p["embed.ln.b"])?;
     let mut x = q.apply(&mut g, "embed_ln_out", &x0)?;
-
-    // additive attention-mask bias, broadcast to [b, h, t, t]
-    let one = g.const_f32(1.0);
-    let ones = g.splat(&one, &[b, t])?;
-    let inv_mask = g.sub(&ones, &mask)?;
-    let bias2 = g.scale(&inv_mask, MASK_BIAS)?;
-    let bias4 = g.broadcast(&bias2, &[b, h, t, t], &[0, 3])?;
 
     for i in 0..cfg.layers {
         let pf = format!("layer{i}.");
@@ -370,8 +361,11 @@ pub(crate) fn build_forward(
         let kh = heads(&mut g, &wk)?;
         let vh = heads(&mut g, &wv)?;
         let scores = g.dot_general(&qh, &kh, &[0, 1], &[0, 1], &[3], &[3])?;
-        let scores = g.scale(&scores, 1.0 / (dh as f32).sqrt())?;
-        let scores = g.add(&scores, &bias4)?;
+        let mut scores = g.scale(&scores, 1.0 / (dh as f32).sqrt())?;
+        // BERT masks PAD positions; ViT attends over the full patch grid
+        if let Some(bias4) = &bias4 {
+            scores = g.add(&scores, bias4)?;
+        }
         let scores = q.apply(&mut g, &format!("{pf}attn_scores"), &scores)?;
         let probs = g.softmax(&scores)?;
         let probs = q.apply(&mut g, &format!("{pf}attn_probs"), &probs)?;
@@ -397,7 +391,7 @@ pub(crate) fn build_forward(
         x = q.apply(&mut g, &format!("{pf}ln2_out"), &ln2)?;
     }
 
-    // pooler over the [CLS] position + classification/regression head
+    // pooler over position 0 ([CLS] token / first patch) + head
     let cls = g.slice(&x, &[(0, b), (0, 1), (0, d)])?;
     let cls = g.reshape(&cls, &[b, d])?;
     let pooled = g.matmul_bias(&cls, &p["pool.w"], &p["pool.b"])?;
@@ -520,24 +514,31 @@ fn sig_json(entries: &[SigEntry]) -> Json {
 
 fn model_json(info: &ModelInfo) -> Json {
     let c = &info.config;
+    let mut config_fields = vec![
+        ("name", Json::Str(c.name.clone())),
+        ("architecture", Json::Str(c.architecture().name().to_string())),
+        ("vocab", num(c.vocab)),
+        ("d", num(c.d)),
+        ("heads", num(c.heads)),
+        ("layers", num(c.layers)),
+        ("d_ff", num(c.d_ff)),
+        ("seq", num(c.seq)),
+        ("n_out", num(c.n_out)),
+        ("outlier_dims", num_arr(&c.outlier_dims)),
+    ];
+    match &c.arch {
+        ArchParams::Bert { pad_id, cls_id, sep_id } => {
+            config_fields.push(("pad_id", num(*pad_id as usize)));
+            config_fields.push(("cls_id", num(*cls_id as usize)));
+            config_fields.push(("sep_id", num(*sep_id as usize)));
+        }
+        ArchParams::Vit { patch, img } => {
+            config_fields.push(("patch", num(*patch)));
+            config_fields.push(("img", num(*img)));
+        }
+    }
     obj(vec![
-        (
-            "config",
-            obj(vec![
-                ("name", Json::Str(c.name.clone())),
-                ("vocab", num(c.vocab)),
-                ("d", num(c.d)),
-                ("heads", num(c.heads)),
-                ("layers", num(c.layers)),
-                ("d_ff", num(c.d_ff)),
-                ("seq", num(c.seq)),
-                ("n_out", num(c.n_out)),
-                ("outlier_dims", num_arr(&c.outlier_dims)),
-                ("pad_id", num(c.pad_id as usize)),
-                ("cls_id", num(c.cls_id as usize)),
-                ("sep_id", num(c.sep_id as usize)),
-            ]),
-        ),
+        ("config", obj(config_fields)),
         (
             "params",
             Json::Arr(
@@ -616,14 +617,19 @@ pub fn cmd_gen_artifacts(args: &Args) -> Result<()> {
     generate(Path::new(out), ckpt_dir)
 }
 
-/// Emit the fixture artifact set: HLO modules + manifest.json (+ per-task
-/// deterministic init checkpoints unless `ckpt_dir` is None).
+/// Emit the fixture artifact set for both architecture families: HLO
+/// modules + one manifest.json (+ per-task deterministic init checkpoints
+/// unless `ckpt_dir` is None).
 pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let base = base_config();
     let mut reg = base.clone();
     reg.name = "base_reg".to_string();
     reg.n_out = 1;
+    let vit = vit_config();
+    let mut vit_reg = vit.clone();
+    vit_reg.name = "vit_reg".to_string();
+    vit_reg.n_out = 1;
 
     let mut jobs: Vec<(String, Artifact)> = Vec::new();
     for (head, cfg) in [("cls", &base), ("reg", &reg)] {
@@ -643,6 +649,17 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
                 super::train_graph::build_train_step(cfg, regression, qat, 16, &name)?,
             ));
         }
+    }
+    // ViT family: forward + diag only (the train-graph builder's
+    // gather-based embedding backward is BERT-specific; ViT QAT is a
+    // follow-on once the patch-projection backward lands)
+    for (head, cfg) in [("cls", &vit), ("reg", &vit_reg)] {
+        for b in [1usize, 8] {
+            let name = format!("fwd_vit_{head}_b{b}");
+            jobs.push((name.clone(), build_forward(cfg, b, false, &name)?));
+        }
+        let name = format!("diag_vit_{head}_b1");
+        jobs.push((name.clone(), build_forward(cfg, 1, true, &name)?));
     }
     // parity artifact: the fixture has one lowering, so the "pallas" twin
     // is the same graph (the agreement test then checks interpreter
@@ -683,9 +700,13 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
 
     let base_info = model_info(&base);
     let reg_info = model_info(&reg);
+    let vit_info = model_info(&vit);
+    let vit_reg_info = model_info(&vit_reg);
     let mut models = BTreeMap::new();
     models.insert("base".to_string(), model_json(&base_info));
     models.insert("base_reg".to_string(), model_json(&reg_info));
+    models.insert("vit".to_string(), model_json(&vit_info));
+    models.insert("vit_reg".to_string(), model_json(&vit_reg_info));
 
     let manifest = obj(vec![
         ("artifacts", Json::Obj(artifacts)),
@@ -703,8 +724,16 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
             };
             let params = Params::init(info, 1000 + i as u64);
             checkpoint::save(&params, dir.join(format!("{}.ckpt", task.name)))?;
+            // ViT twin checkpoint for the same task, distinct seed so the
+            // two families never share weights by accident
+            let vinfo = match task.kind {
+                TaskKind::Regression => &vit_reg_info,
+                TaskKind::Classification(_) => &vit_info,
+            };
+            let vparams = Params::init(vinfo, 2000 + i as u64);
+            checkpoint::save(&vparams, dir.join(format!("vit_{}.ckpt", task.name)))?;
         }
-        println!("wrote {} fixture checkpoints to {}", TASKS.len(), dir.display());
+        println!("wrote {} fixture checkpoints to {}", 2 * TASKS.len(), dir.display());
     }
     Ok(())
 }
@@ -727,6 +756,23 @@ mod tests {
             seq: 4,
             n_out: 3,
             outlier_dims: vec![1],
+            arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+        }
+    }
+
+    /// ViT twin of [`micro`]: 2×2 patches over a 4×4 image → seq 4.
+    fn micro_vit() -> FixtureConfig {
+        FixtureConfig {
+            name: "micro_vit".to_string(),
+            vocab: 8,
+            d: 8,
+            heads: 2,
+            layers: 1,
+            d_ff: 16,
+            seq: 4,
+            n_out: 3,
+            outlier_dims: vec![1],
+            arch: ArchParams::Vit { patch: 2, img: 4 },
         }
     }
 
@@ -748,10 +794,20 @@ mod tests {
         }
         vals.push(Value::F32 { dims: vec![n_sites, 3], data: cfg3 });
         let t = cfg.seq;
-        let ids: Vec<i32> = (0..b * t).map(|i| (i % cfg.vocab) as i32).collect();
-        vals.push(Value::S32 { dims: vec![b, t], data: ids });
-        vals.push(Value::S32 { dims: vec![b, t], data: vec![0; b * t] });
-        vals.push(Value::F32 { dims: vec![b, t], data: vec![1.0; b * t] });
+        match cfg.arch.architecture() {
+            Architecture::Bert => {
+                let ids: Vec<i32> = (0..b * t).map(|i| (i % cfg.vocab) as i32).collect();
+                vals.push(Value::S32 { dims: vec![b, t], data: ids });
+                vals.push(Value::S32 { dims: vec![b, t], data: vec![0; b * t] });
+                vals.push(Value::F32 { dims: vec![b, t], data: vec![1.0; b * t] });
+            }
+            Architecture::Vit => {
+                let p = info.config.patch_dim().unwrap();
+                let px: Vec<f32> =
+                    (0..b * t * p).map(|i| ((i % 7) as f32) * 0.3 - 0.9).collect();
+                vals.push(Value::F32 { dims: vec![b, t, p], data: px });
+            }
+        }
         vals
     }
 
@@ -769,6 +825,33 @@ mod tests {
         // fwd signature: params + 3 quant tensors + 3 batch tensors
         let art = build_forward(&base_config(), 1, false, "t").unwrap();
         assert_eq!(art.inputs.len(), info.params.len() + 6);
+    }
+
+    #[test]
+    fn vit_topology_shares_the_site_inventory() {
+        let vit = vit_config();
+        let info = model_info(&vit);
+        assert_eq!(info.config.architecture(), Architecture::Vit);
+        // identical site inventory to the BERT family at the same depth:
+        // specs and presets transfer across architectures unchanged
+        let bert_sites = site_spec(&base_config());
+        assert_eq!(site_spec(&vit), bert_sites);
+        // the patch grid must be consistent with seq
+        let (patch, img) =
+            (info.config.arch.patch().unwrap(), info.config.arch.img().unwrap());
+        assert_eq!(info.config.seq, (img / patch) * (img / patch));
+        // patch projection replaces the three token-embedding tables
+        assert!(info.params.iter().any(|p| p.name == "embed.patch.w"));
+        assert!(info.params.iter().all(|p| p.name != "embed.tok"));
+        assert_eq!(info.wq[0], "embed.patch.w");
+        // fwd signature: params + 3 quant tensors + 1 pixel tensor
+        let art = build_forward(&vit, 1, false, "t").unwrap();
+        assert_eq!(art.inputs.len(), info.params.len() + 4);
+        assert_eq!(art.inputs.last().unwrap().name, "pixels");
+        assert_eq!(
+            art.inputs.last().unwrap().shape,
+            vec![1, info.config.seq, info.config.patch_dim().unwrap()]
+        );
     }
 
     #[test]
@@ -792,22 +875,41 @@ mod tests {
     }
 
     #[test]
-    fn diag_taps_cover_every_site_in_order() {
-        let cfg = micro();
-        let art = build_forward(&cfg, 1, true, "micro_diag").unwrap();
-        let info = model_info(&cfg);
-        assert_eq!(art.outputs.len(), 1 + info.sites.len());
-        for (o, s) in art.outputs[1..].iter().zip(&info.sites) {
-            assert_eq!(o.name, format!("tap.{}", s.name));
-            if s.channels > 1 {
-                assert_eq!(*o.shape.last().unwrap(), s.channels, "{}", s.name);
-            }
-        }
+    fn vit_forward_is_finite_deterministic_and_quant_sensitive() {
+        let cfg = micro_vit();
+        let art = build_forward(&cfg, 2, false, "micro_vit_fwd").unwrap();
         let m = parse_module(&art.text).unwrap();
-        let out = interpret(&m, &forward_inputs(&cfg, 1, 0.0)).unwrap();
-        assert_eq!(out.len(), 1 + info.sites.len());
-        for v in &out {
-            assert!(v.f32s().unwrap().iter().all(|x| x.is_finite()));
+        let run = |enable: f32| -> Vec<f32> {
+            let out = interpret(&m, &forward_inputs(&cfg, 2, enable)).unwrap();
+            out[0].f32s().unwrap().to_vec()
+        };
+        let fp32 = run(0.0);
+        assert_eq!(fp32.len(), 2 * cfg.n_out);
+        assert!(fp32.iter().all(|v| v.is_finite()));
+        assert_eq!(fp32, run(0.0), "interpreter must be deterministic");
+        let crushed = run(1.0);
+        assert!(crushed.iter().all(|v| v.is_finite()));
+        assert_ne!(fp32, crushed);
+    }
+
+    #[test]
+    fn diag_taps_cover_every_site_in_order() {
+        for cfg in [micro(), micro_vit()] {
+            let art = build_forward(&cfg, 1, true, "micro_diag").unwrap();
+            let info = model_info(&cfg);
+            assert_eq!(art.outputs.len(), 1 + info.sites.len(), "{}", cfg.name);
+            for (o, s) in art.outputs[1..].iter().zip(&info.sites) {
+                assert_eq!(o.name, format!("tap.{}", s.name));
+                if s.channels > 1 {
+                    assert_eq!(*o.shape.last().unwrap(), s.channels, "{}", s.name);
+                }
+            }
+            let m = parse_module(&art.text).unwrap();
+            let out = interpret(&m, &forward_inputs(&cfg, 1, 0.0)).unwrap();
+            assert_eq!(out.len(), 1 + info.sites.len());
+            for v in &out {
+                assert!(v.f32s().unwrap().iter().all(|x| x.is_finite()));
+            }
         }
     }
 
@@ -869,9 +971,15 @@ mod tests {
         // micro-speed: no checkpoints in the unit test
         generate(&dir, None).unwrap();
         let manifest = crate::model::manifest::Manifest::load(&dir).unwrap();
-        assert!(manifest.artifacts.len() >= 13);
+        assert!(manifest.artifacts.len() >= 19);
         assert!(manifest.artifact("fwd_cls_b8").is_ok());
         assert!(manifest.artifact("diag_reg_b1").is_ok());
+        // ViT family: forward + diag for both heads
+        for name in
+            ["fwd_vit_cls_b1", "fwd_vit_cls_b8", "fwd_vit_reg_b8", "diag_vit_cls_b1", "diag_vit_reg_b1"]
+        {
+            assert!(manifest.artifact(name).is_ok(), "{name}");
+        }
         // train-step artifacts for both heads and both variants
         for name in
             ["train_fp32_cls_b16", "train_qat_cls_b16", "train_fp32_reg_b16", "train_qat_reg_b16"]
@@ -881,6 +989,9 @@ mod tests {
         }
         assert!(manifest.model("base").is_ok());
         assert!(manifest.model("base_reg").is_ok());
+        let vit = manifest.model("vit").unwrap();
+        assert_eq!(vit.config.architecture(), Architecture::Vit);
+        assert_eq!(manifest.model("vit_reg").unwrap().config.n_out, 1);
         assert!(manifest.golden_fake_quant.is_some());
         // golden gate: every artifact file parses AND passes the static
         // verifier — gen-artifacts must never ship a module the runtime's

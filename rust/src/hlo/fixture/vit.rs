@@ -1,0 +1,77 @@
+//! ViT frontend for the fixture generator: a patch-embed encoder. The
+//! input is a flat pixel-patch tensor `[b, seq, patch*patch]` (the host
+//! side rasterises synthetic examples into patches via
+//! `data::pixels_for_ids`); the embedding is a learned linear patch
+//! projection plus learned position embeddings. Attention runs unmasked —
+//! every patch attends to the full grid — and the pooler reads position 0
+//! (the first patch), mirroring the BERT [CLS] slot so the shared
+//! pooler/head lowering applies unchanged.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::super::builder::{GraphBuilder, Op};
+use super::super::DType;
+use super::{sig, FixtureConfig, SigEntry};
+use crate::model::manifest::ArchParams;
+
+/// The fixture "vit" model: same d/heads/d_ff as the BERT base so PEG
+/// group counts and site families transfer, with a 4×4 patch grid over a
+/// 16×16 image (seq 16). `vocab` sizes the deterministic pixel codebook
+/// the data layer rasterises token ids through.
+pub fn vit_config() -> FixtureConfig {
+    FixtureConfig {
+        name: "vit".to_string(),
+        vocab: 64,
+        d: 128,
+        heads: 4,
+        layers: 1,
+        d_ff: 256,
+        seq: 16,
+        n_out: 3,
+        outlier_dims: vec![17, 89, 101],
+        arch: ArchParams::Vit { patch: 4, img: 16 },
+    }
+}
+
+/// Embedding parameters (precede the shared `embed.ln.*` entries): the
+/// patch projection and learned position embeddings.
+pub(crate) fn embed_params(cfg: &FixtureConfig) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d;
+    let p = cfg.arch.patch().expect("vit config");
+    vec![
+        ("embed.patch.w".into(), vec![p * p, d]),
+        ("embed.patch.b".into(), vec![d]),
+        ("embed.pos".into(), vec![cfg.seq, d]),
+    ]
+}
+
+/// Lower the ViT data input and embedding sum. Returns the pre-LN
+/// embedding `[b, t, d]`; ViT has no attention bias (no PAD positions).
+pub(crate) fn embed(
+    g: &mut GraphBuilder,
+    cfg: &FixtureConfig,
+    b: usize,
+    p: &BTreeMap<String, Op>,
+    inputs: &mut Vec<SigEntry>,
+) -> Result<(Op, Option<Op>)> {
+    let (t, d) = (cfg.seq, cfg.d);
+    let (patch, img) = match cfg.arch {
+        ArchParams::Vit { patch, img } => (patch, img),
+        _ => bail!("vit::embed on a non-ViT config"),
+    };
+    let grid = img / patch;
+    if grid * patch != img || grid * grid != t {
+        bail!("vit config: img {img} / patch {patch} grid inconsistent with seq {t}");
+    }
+    let pd = patch * patch;
+    let pixels = g.param(DType::F32, &[b, t, pd]);
+    inputs.push(sig("pixels", &[b, t, pd], "f32"));
+
+    // patch projection + learned position embeddings
+    let proj = g.matmul_bias(&pixels, &p["embed.patch.w"], &p["embed.patch.b"])?;
+    let pos = g.broadcast(&p["embed.pos"], &[b, t, d], &[1, 2])?;
+    let x0 = g.add(&proj, &pos)?;
+    Ok((x0, None))
+}

@@ -29,9 +29,10 @@
 //! * [`builder`] — emits HLO text (the same dialect the parser reads);
 //!                 used by the fixture generator.
 //! * [`fixture`] — `repro gen-artifacts`: a small self-consistent
-//!                 `artifacts/` (manifest.json + tiny BERT forward/diag
-//!                 modules + kernel graphs + per-task init checkpoints) so
-//!                 integration tests and CI run without `make artifacts`.
+//!                 `artifacts/` (manifest.json + tiny BERT *and* ViT
+//!                 forward/diag modules + kernel graphs + per-task init
+//!                 checkpoints) so integration tests and CI run without
+//!                 `make artifacts`.
 
 pub mod builder;
 pub mod fixture;

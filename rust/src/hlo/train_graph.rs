@@ -490,6 +490,12 @@ pub(crate) fn build_train_step(
     b: usize,
     module: &str,
 ) -> Result<Artifact> {
+    if cfg.arch.architecture() != crate::model::manifest::Architecture::Bert {
+        // the embedding backward below is gather/scatter over token
+        // tables; the ViT patch-projection backward is a follow-on
+        bail!("train-step lowering only supports the BERT frontend (got {})",
+            cfg.arch.architecture().name());
+    }
     let (t, d, h) = (cfg.seq, cfg.d, cfg.heads);
     let dh = d / h;
     if dh * h != d {
@@ -966,6 +972,7 @@ mod tests {
             seq: 4,
             n_out: 3,
             outlier_dims: vec![1],
+            arch: crate::model::manifest::ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
         }
     }
 

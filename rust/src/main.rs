@@ -17,12 +17,16 @@
 //!                                    (emit the fixture artifacts/ + init
 //!                                    checkpoints so every runtime surface
 //!                                    works in-container — see hlo::fixture)
-//!     repro sweep [--bits 8,4] [--wbits 8] [--groups 1,8]
+//!     repro sweep [--arch bert,vit] [--bits 8,4] [--wbits 8] [--groups 1,8]
 //!                 [--range-methods auto,mse_group] [--threads N]
+//!                 [--shard i/n | --merge n]
 //!                 [--fresh] [--compare baseline.json]
-//!                                    (parallel config sweep, resumable by
-//!                                    spec_id; works without artifacts —
-//!                                    see coordinator::sweep)
+//!                                    (parallel task x architecture x config
+//!                                    sweep, resumable by spec_id; --shard
+//!                                    runs one hash-partition of the grid,
+//!                                    --merge unions the shard reports back
+//!                                    into the report an unsharded run
+//!                                    writes — see coordinator::sweep)
 //!     repro lint [--spec FILE.json | --preset NAME] [--json]
 //!                                    (static verifier over every manifest
 //!                                    artifact + quantization-hazard linter
@@ -383,9 +387,9 @@ fn print_help() {
          run --spec FILE.json | --preset NAME [--tasks a,b] [--seeds N] \
          [--dump-spec] [--explain]\n  smoke\n  gen-artifacts [--no-ckpt]\n  \
          lint [--spec FILE.json | --preset NAME] [--json]\n  \
-         sweep [--bits 8,4] [--wbits 8] [--groups 1,8] \
+         sweep [--arch bert,vit] [--bits 8,4] [--wbits 8] [--groups 1,8] \
          [--estimators current,mse] [--range-methods auto,mse_group] \
-         [--threads N] [--task NAME] [--seeds N] \
+         [--threads N] [--task NAME] [--seeds N] [--shard i/n | --merge n] \
          [--fresh] [--compare baseline.json] [--tolerance PTS]\n  \
          serve-bench [--task NAME] [--duration-ms N] [--qps F] \
          [--clients N] [--windows us,us] [--cache-caps n,m] [--depth N] \
@@ -393,7 +397,10 @@ fn print_help() {
          `run` executes one serialized QuantSpec (see DESIGN.md §7); \
          `run --preset NAME --dump-spec > f.json` writes a starting point; \
          `run --preset NAME --explain` prints the resolved per-site policy \
-         (bits, granularity, range_method, PEG overhead).\n\
+         (bits, granularity, range_method, PEG overhead); specs with a \
+         `qat` section (the *_qat presets, Tables 6/7) fine-tune through \
+         the quantized train-step graph before evaluating. The specs/ \
+         directory ships every paper table row as a checked-in spec file.\n\
          presets: {}\n\n\
          flags: --artifacts DIR --ckpt DIR --results DIR --seeds N --quick",
         presets::preset_names().join(" ")

@@ -56,6 +56,87 @@ pub struct SiteSpec {
     pub offset: usize,
 }
 
+/// Model architecture family. The discriminant decides the data-input
+/// contract of the forward/diag executables (token ids + type ids + mask
+/// for BERT; a flat pixel-patch tensor for ViT) and which
+/// per-architecture fields [`ArchParams`] carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Architecture {
+    Bert,
+    Vit,
+}
+
+impl Architecture {
+    pub fn name(self) -> &'static str {
+        match self {
+            Architecture::Bert => "bert",
+            Architecture::Vit => "vit",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Architecture> {
+        match s {
+            "bert" => Ok(Architecture::Bert),
+            "vit" => Ok(Architecture::Vit),
+            other => Err(anyhow!("unknown architecture {other:?} (bert|vit)")),
+        }
+    }
+}
+
+/// Architecture-specific model descriptor fields. BERT models carry the
+/// special token ids its input/diagnostic paths key on; ViT models carry
+/// the patch geometry (`seq = (img/patch)^2`, patch vectors of length
+/// `patch*patch`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArchParams {
+    Bert { pad_id: i32, cls_id: i32, sep_id: i32 },
+    Vit { patch: usize, img: usize },
+}
+
+impl ArchParams {
+    pub fn architecture(&self) -> Architecture {
+        match self {
+            ArchParams::Bert { .. } => Architecture::Bert,
+            ArchParams::Vit { .. } => Architecture::Vit,
+        }
+    }
+
+    pub fn pad_id(&self) -> Option<i32> {
+        match self {
+            ArchParams::Bert { pad_id, .. } => Some(*pad_id),
+            ArchParams::Vit { .. } => None,
+        }
+    }
+
+    pub fn cls_id(&self) -> Option<i32> {
+        match self {
+            ArchParams::Bert { cls_id, .. } => Some(*cls_id),
+            ArchParams::Vit { .. } => None,
+        }
+    }
+
+    pub fn sep_id(&self) -> Option<i32> {
+        match self {
+            ArchParams::Bert { sep_id, .. } => Some(*sep_id),
+            ArchParams::Vit { .. } => None,
+        }
+    }
+
+    pub fn patch(&self) -> Option<usize> {
+        match self {
+            ArchParams::Bert { .. } => None,
+            ArchParams::Vit { patch, .. } => Some(*patch),
+        }
+    }
+
+    pub fn img(&self) -> Option<usize> {
+        match self {
+            ArchParams::Bert { .. } => None,
+            ArchParams::Vit { img, .. } => Some(*img),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
     pub name: String,
@@ -67,9 +148,18 @@ pub struct ModelConfig {
     pub seq: usize,
     pub n_out: usize,
     pub outlier_dims: Vec<usize>,
-    pub pad_id: i32,
-    pub cls_id: i32,
-    pub sep_id: i32,
+    pub arch: ArchParams,
+}
+
+impl ModelConfig {
+    pub fn architecture(&self) -> Architecture {
+        self.arch.architecture()
+    }
+
+    /// Length of one flattened input patch vector (ViT only).
+    pub fn patch_dim(&self) -> Option<usize> {
+        self.arch.patch().map(|p| p * p)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -189,6 +279,23 @@ fn parse_sigs(v: &Json) -> Result<Vec<TensorSig>> {
 
 fn parse_model(m: &Json) -> Result<ModelInfo> {
     let c = m.get("config")?;
+    // "architecture" is optional and defaults to "bert": manifests written
+    // before the discriminant existed stay loadable unchanged
+    let arch_name = match c.opt("architecture") {
+        Some(v) => Architecture::parse(v.as_str()?)?,
+        None => Architecture::Bert,
+    };
+    let arch = match arch_name {
+        Architecture::Bert => ArchParams::Bert {
+            pad_id: c.get("pad_id")?.as_f64()? as i32,
+            cls_id: c.get("cls_id")?.as_f64()? as i32,
+            sep_id: c.get("sep_id")?.as_f64()? as i32,
+        },
+        Architecture::Vit => ArchParams::Vit {
+            patch: c.get("patch")?.as_usize()?,
+            img: c.get("img")?.as_usize()?,
+        },
+    };
     let config = ModelConfig {
         name: c.get("name")?.as_str()?.to_string(),
         vocab: c.get("vocab")?.as_usize()?,
@@ -199,9 +306,7 @@ fn parse_model(m: &Json) -> Result<ModelInfo> {
         seq: c.get("seq")?.as_usize()?,
         n_out: c.get("n_out")?.as_usize()?,
         outlier_dims: c.get("outlier_dims")?.as_usize_vec()?,
-        pad_id: c.get("pad_id")?.as_f64()? as i32,
-        cls_id: c.get("cls_id")?.as_f64()? as i32,
-        sep_id: c.get("sep_id")?.as_f64()? as i32,
+        arch,
     };
     let params = m
         .get("params")?
@@ -266,9 +371,7 @@ pub mod tests {
                 seq: 8,
                 n_out: 3,
                 outlier_dims: vec![1],
-                pad_id: 0,
-                cls_id: 1,
-                sep_id: 2,
+                arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
             },
             params: vec![
                 ParamSpec { name: "embed.tok".into(), shape: vec![16, d] },
@@ -308,8 +411,38 @@ pub mod tests {
         let info = m.model("tiny").unwrap();
         assert_eq!(info.config.d, 8);
         assert_eq!(info.site("embed_sum").unwrap().channels, 8);
+        // no "architecture" key: pre-discriminant manifests default to BERT
+        assert_eq!(info.config.architecture(), Architecture::Bert);
+        assert_eq!(info.config.arch.sep_id(), Some(2));
+        assert_eq!(info.config.arch.patch(), None);
         assert!(m.golden_fake_quant.is_some());
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn parses_vit_model_architecture() {
+        let text = r#"{
+          "artifacts": {},
+          "models": {"vit": {
+            "config": {"name": "vit", "architecture": "vit", "vocab": 64,
+                       "d": 8, "heads": 2, "layers": 1, "d_ff": 16,
+                       "seq": 16, "n_out": 3, "outlier_dims": [1],
+                       "patch": 4, "img": 16},
+            "params": [{"name": "embed.patch.w", "shape": [16, 8]}],
+            "sites": [{"name": "embed_sum", "channels": 8, "offset": 0}],
+            "total_scale_lanes": 8,
+            "wq": ["embed.patch.w"]}}
+        }"#;
+        let m = Manifest::parse(text, PathBuf::from("/tmp/a")).unwrap();
+        let info = m.model("vit").unwrap();
+        assert_eq!(info.config.architecture(), Architecture::Vit);
+        assert_eq!(info.config.arch, ArchParams::Vit { patch: 4, img: 16 });
+        assert_eq!(info.config.patch_dim(), Some(16));
+        assert_eq!(info.config.arch.pad_id(), None);
+        // seq must be consistent with the patch grid
+        assert_eq!(info.config.seq, (16 / 4) * (16 / 4));
+        // an unknown architecture name is an error, not a silent default
+        assert!(Architecture::parse("rnn").is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::model::manifest::ModelInfo;
+use crate::model::manifest::{Architecture, ModelInfo};
 use crate::model::qconfig::{QuantPolicy, SiteCfg, WeightCfg};
 use crate::quant::{Estimator, Granularity, RangeMethod};
 use crate::util::json::{obj, Json};
@@ -228,6 +228,46 @@ impl Default for AdaRoundSpec {
     }
 }
 
+/// QAT settings (paper Tables 6/7), mirroring
+/// `coordinator::train::QatCfg` in serializable form. A spec with
+/// `qat: Some(..)` runs quantization-aware fine-tuning between
+/// calibration and evaluation instead of plain PTQ assembly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QatSpec {
+    /// parameter learning rate
+    pub lr: f32,
+    /// quantizer-scale learning rate (scales learn slower)
+    pub lr_scales: f32,
+    pub epochs: usize,
+    /// train batch size; the fixture lowers train graphs at batch 16
+    pub batch: usize,
+    /// shuffling seed for the train split
+    pub seed: u64,
+    /// weight-quantizer bit-width during and after training
+    pub weight_bits: u32,
+    /// embedding-table override (the paper's 2/4-bit embedding rows)
+    pub embed_bits: u32,
+    /// freeze flag for activation quantizers: false trains/deploys with
+    /// activations in FP32 (the W{n}A32 QAT rows)
+    pub act_enabled: bool,
+}
+
+impl Default for QatSpec {
+    fn default() -> Self {
+        // same defaults as coordinator::train::QatCfg
+        QatSpec {
+            lr: 1e-4,
+            lr_scales: 1e-5,
+            epochs: 1,
+            batch: 16,
+            seed: 1,
+            weight_bits: 8,
+            embed_bits: 8,
+            act_enabled: true,
+        }
+    }
+}
+
 /// One fully-described quantization experiment. See the module docs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantSpec {
@@ -241,6 +281,12 @@ pub struct QuantSpec {
     pub seeds: usize,
     /// eval targets by task name; empty = all benchmark tasks
     pub tasks: Vec<String>,
+    /// model architecture family the spec targets (selects the fixture
+    /// model/artifact/checkpoint family); serialized only when non-BERT
+    /// so pre-existing specs keep their `spec_id`
+    pub architecture: Architecture,
+    /// QAT settings; `None` (omitted in JSON) = plain PTQ
+    pub qat: Option<QatSpec>,
 }
 
 impl QuantSpec {
@@ -252,6 +298,8 @@ impl QuantSpec {
             adaround: AdaRoundSpec::default(),
             seeds: 3,
             tasks: Vec::new(),
+            architecture: Architecture::Bert,
+            qat: None,
         }
     }
 
@@ -285,6 +333,18 @@ impl QuantSpec {
     /// Restrict the eval targets.
     pub fn with_tasks(mut self, tasks: &[String]) -> QuantSpec {
         self.tasks = tasks.to_vec();
+        self
+    }
+
+    /// Target a non-default architecture family.
+    pub fn with_architecture(mut self, arch: Architecture) -> QuantSpec {
+        self.architecture = arch;
+        self
+    }
+
+    /// Run QAT between calibration and evaluation.
+    pub fn with_qat(mut self, qat: QatSpec) -> QuantSpec {
+        self.qat = Some(qat);
         self
     }
 
@@ -322,7 +382,7 @@ impl QuantSpec {
     // -- JSON --------------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("policy", policy_to_json(&self.policy)),
             ("calib", calib_to_json(&self.calib)),
@@ -332,7 +392,21 @@ impl QuantSpec {
                 "tasks",
                 Json::Arr(self.tasks.iter().map(|t| Json::Str(t.clone())).collect()),
             ),
-        ])
+        ];
+        // both fields follow the range_method omission rule: the default
+        // (BERT, no QAT) serializes with NO key, so every pre-existing
+        // spec is byte-identical to what older code wrote and its spec_id
+        // (which keys resumable sweeps and --compare baselines) is stable
+        if self.architecture != Architecture::Bert {
+            fields.push((
+                "architecture",
+                Json::Str(self.architecture.name().to_string()),
+            ));
+        }
+        if let Some(q) = &self.qat {
+            fields.push(("qat", qat_to_json(q)));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<QuantSpec> {
@@ -352,6 +426,16 @@ impl QuantSpec {
                 .iter()
                 .map(|t| Ok(t.as_str()?.to_string()))
                 .collect::<Result<_>>()?,
+            // absent in specs written before the architecture axis / QAT
+            // section existed
+            architecture: match j.opt("architecture") {
+                Some(v) => Architecture::parse(v.as_str()?)?,
+                None => Architecture::Bert,
+            },
+            qat: match j.opt("qat") {
+                Some(v) => Some(qat_from_json(v)?),
+                None => None,
+            },
         })
     }
 
@@ -624,8 +708,35 @@ fn adaround_from_json(j: &Json) -> Result<AdaRoundSpec> {
     })
 }
 
-/// FNV-1a 64-bit — tiny, stable, dependency-free content hash.
-fn fnv1a64(bytes: &[u8]) -> u64 {
+fn qat_to_json(q: &QatSpec) -> Json {
+    obj(vec![
+        ("lr", Json::Num(q.lr as f64)),
+        ("lr_scales", Json::Num(q.lr_scales as f64)),
+        ("epochs", Json::Num(q.epochs as f64)),
+        ("batch", Json::Num(q.batch as f64)),
+        ("seed", Json::Num(q.seed as f64)),
+        ("weight_bits", Json::Num(q.weight_bits as f64)),
+        ("embed_bits", Json::Num(q.embed_bits as f64)),
+        ("act_enabled", Json::Bool(q.act_enabled)),
+    ])
+}
+
+fn qat_from_json(j: &Json) -> Result<QatSpec> {
+    Ok(QatSpec {
+        lr: j.get("lr")?.as_f64()? as f32,
+        lr_scales: j.get("lr_scales")?.as_f64()? as f32,
+        epochs: j.get("epochs")?.as_usize()?,
+        batch: j.get("batch")?.as_usize()?,
+        seed: j.get("seed")?.as_u64()?,
+        weight_bits: check_bits(j.get("weight_bits")?.as_usize()?, "qat")?,
+        embed_bits: check_bits(j.get("embed_bits")?.as_usize()?, "qat")?,
+        act_enabled: j.get("act_enabled")?.as_bool()?,
+    })
+}
+
+/// FNV-1a 64-bit — tiny, stable, dependency-free content hash. Also keys
+/// the sweep's deterministic `--shard i/n` partition (over `spec_id`).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in bytes {
         h ^= b as u64;
@@ -812,6 +923,47 @@ mod tests {
         assert_eq!(auto_json, legacy.to_string());
         let non_auto = SiteCfg { range_method: RangeMethod::MsePerGroup, ..Default::default() };
         assert!(site_cfg_to_json(&non_auto).to_string().contains("mse_group"));
+    }
+
+    #[test]
+    fn architecture_and_qat_codec_roundtrip_and_back_compat() {
+        // the default (BERT, no QAT) serializes with NEITHER key, so every
+        // spec written before the architecture/qat sections existed is
+        // byte-identical to what current code writes — its spec_id (which
+        // keys resumable sweeps and --compare baselines) must not churn
+        let plain = QuantSpec::new("w8a8", PolicySpec::uniform(8, 8));
+        let plain_json = plain.to_json().to_string();
+        assert!(!plain_json.contains("architecture"), "{plain_json}");
+        assert!(!plain_json.contains("qat"), "{plain_json}");
+        let reparsed = QuantSpec::parse(&plain_json).unwrap();
+        assert_eq!(reparsed.architecture, Architecture::Bert);
+        assert!(reparsed.qat.is_none());
+        assert_eq!(reparsed.spec_id(), plain.spec_id());
+
+        // non-default values round-trip and change the identity
+        let vit_qat = QuantSpec::new("w8a8", PolicySpec::uniform(8, 8))
+            .with_architecture(Architecture::Vit)
+            .with_qat(QatSpec { epochs: 2, act_enabled: false, ..Default::default() });
+        let j = vit_qat.to_json().to_string();
+        assert!(j.contains("\"architecture\":\"vit\""), "{j}");
+        assert!(j.contains("\"act_enabled\":false"), "{j}");
+        let rt = QuantSpec::parse(&j).unwrap();
+        assert_eq!(rt.architecture, Architecture::Vit);
+        assert_eq!(rt.qat.as_ref().unwrap().epochs, 2);
+        assert!(!rt.qat.as_ref().unwrap().act_enabled);
+        assert_eq!(rt.spec_id(), vit_qat.spec_id());
+        assert_ne!(vit_qat.spec_id(), plain.spec_id());
+
+        // qat is hashed: same policy, different qat => different spec_id
+        let qat_default = QuantSpec::new("w8a8", PolicySpec::uniform(8, 8))
+            .with_qat(QatSpec::default());
+        assert_ne!(qat_default.spec_id(), plain.spec_id());
+        assert_ne!(qat_default.spec_id(), vit_qat.spec_id());
+
+        // malformed values are rejected
+        assert!(Architecture::parse("rnn").is_err());
+        let bad = j.replace("\"weight_bits\":8", "\"weight_bits\":64");
+        assert!(QuantSpec::parse(&bad).is_err());
     }
 
     #[test]

@@ -7,12 +7,12 @@
 
 use anyhow::{bail, Result};
 
-use super::{AdaRoundSpec, PolicySpec, QuantSpec};
+use super::{AdaRoundSpec, PolicySpec, QatSpec, QuantSpec};
 use crate::model::qconfig::{SiteCfg, WeightCfg};
 use crate::quant::{Estimator, Granularity, RangeMethod};
 
 /// (name, description) for every registered preset.
-pub const PRESETS: [(&str, &str); 15] = [
+pub const PRESETS: [(&str, &str); 19] = [
     ("fp32", "FP32 baseline, no quantization"),
     ("w8a8", "standard W8A8 per-tensor PTQ (Table 1)"),
     ("w32a8", "8-bit activations only, FP32 weights (Table 1)"),
@@ -28,6 +28,10 @@ pub const PRESETS: [(&str, &str); 15] = [
     ("w4a32_adaround", "4-bit AdaRound weights (Table 7)"),
     ("w8a32_embed4", "8-bit weights, 4-bit token embeddings (Table 7)"),
     ("w8a32_embed2", "8-bit weights, 2-bit token embeddings (Table 7)"),
+    ("w8a8_qat", "W8A8 quantization-aware finetuning (Table 6)"),
+    ("w4a32_qat", "W4A32 QAT, activations FP32 (Table 7)"),
+    ("w4a8_qat", "W4A8 QAT (Table 7)"),
+    ("w4a8_embed2_qat", "W4A8 QAT with 2-bit token embeddings (Table 7)"),
 ];
 
 pub fn preset_names() -> Vec<&'static str> {
@@ -52,6 +56,10 @@ pub fn preset(name: &str) -> Result<QuantSpec> {
         "w4a32_adaround" => low_bit_weights("w4a32_adaround", 4, 4, true),
         "w8a32_embed4" => low_bit_weights("w8a32_embed4", 8, 4, false),
         "w8a32_embed2" => low_bit_weights("w8a32_embed2", 8, 2, false),
+        "w8a8_qat" => qat_preset("w8a8_qat", 8, 8, true),
+        "w4a32_qat" => qat_preset("w4a32_qat", 4, 4, false),
+        "w4a8_qat" => qat_preset("w4a8_qat", 4, 4, true),
+        "w4a8_embed2_qat" => qat_preset("w4a8_embed2_qat", 4, 2, true),
         other => bail!(
             "unknown preset {other:?} (available: {})",
             preset_names().join(", ")
@@ -106,6 +114,24 @@ fn low_bit_weights(name: &str, wb: u32, eb: u32, adaround: bool) -> QuantSpec {
         spec.seeds = 1;
     }
     spec
+}
+
+/// Tables 6/7 QAT rows as data: the `qat` section carries the training
+/// hyper-parameters (bit widths, LRs, epochs — what the old hard-coded
+/// `run_qat_eval` drivers passed to `QatCfg`); the policy mirrors the
+/// deployed numeric format for memory accounting and display. Epochs stay
+/// at the `QatSpec` default — the table drivers raise them for full runs.
+/// Single-seed: QAT's own `seed` pins the data order and init.
+fn qat_preset(name: &str, wb: u32, eb: u32, act: bool) -> QuantSpec {
+    let mut policy = if act { PolicySpec::uniform(wb, 8) } else { PolicySpec::weights_only(wb) };
+    policy.weights.estimator = Estimator::Mse;
+    policy.weight_overrides.insert(
+        "embed.tok".to_string(),
+        WeightCfg { bits: eb, estimator: Estimator::Mse, ..Default::default() },
+    );
+    QuantSpec::new(name, policy)
+        .with_qat(QatSpec { weight_bits: wb, embed_bits: eb, act_enabled: act, ..Default::default() })
+        .with_seeds(1)
 }
 
 #[cfg(test)]
@@ -224,6 +250,31 @@ mod tests {
             assert_eq!(back, spec);
         }
         assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn qat_presets_mirror_the_hard_coded_qat_cfg() {
+        use super::super::QatSpec;
+        // (name, weight_bits, embed_bits, act_enabled) — the exact QatCfg
+        // fields the old run_qat_eval{,_a32} drivers hard-coded
+        for (name, wb, eb, act) in [
+            ("w8a8_qat", 8u32, 8u32, true),
+            ("w4a32_qat", 4, 4, false),
+            ("w4a8_qat", 4, 4, true),
+            ("w4a8_embed2_qat", 4, 2, true),
+        ] {
+            let spec = preset(name).unwrap();
+            let q = spec.qat.as_ref().unwrap_or_else(|| panic!("{name}: no qat section"));
+            assert_eq!((q.weight_bits, q.embed_bits, q.act_enabled), (wb, eb, act), "{name}");
+            // training hyper-parameters inherit the QatCfg defaults
+            let d = QatSpec::default();
+            assert_eq!((q.lr, q.lr_scales, q.epochs, q.batch, q.seed), (d.lr, d.lr_scales, d.epochs, d.batch, d.seed), "{name}");
+            assert_eq!(spec.seeds, 1, "{name}");
+        }
+        // non-QAT presets carry no qat section (their spec_ids predate it)
+        for name in ["fp32", "w8a8", "peg_k8_permute", "w4a32"] {
+            assert!(preset(name).unwrap().qat.is_none(), "{name}");
+        }
     }
 
     #[test]

@@ -10,16 +10,20 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use anyhow::bail;
+
 use super::QuantSpec;
-use crate::coordinator::calibrate::{calibrate_with, CalibCfg};
-use crate::coordinator::eval::evaluate;
-use crate::coordinator::experiments::load_ckpt;
+use crate::coordinator::calibrate::{calibrate_with_arch, CalibCfg};
+use crate::coordinator::eval::evaluate_arch;
+use crate::coordinator::experiments::load_ckpt_arch;
+use crate::coordinator::train::{qat, qat_deployed_params, QatCfg};
 use crate::coordinator::weights::{quantize_weights, AdaRoundCfg2, AdaRoundOpts};
-use crate::coordinator::Ctx;
+use crate::coordinator::{fwd_artifact, Ctx};
 use crate::data::{task_spec, TaskSpec, TASKS};
 use crate::metrics::{glue_score, median};
+use crate::model::manifest::Architecture;
 use crate::model::qconfig::{
-    assemble_act_tensors, assemble_act_tensors_pool, ActQuantTensors,
+    assemble_act_tensors, assemble_act_tensors_pool, ActQuantTensors, QuantPolicy,
 };
 use crate::model::Params;
 use crate::util::json::Json;
@@ -70,14 +74,14 @@ pub fn spec_tasks(spec: &QuantSpec) -> Result<Vec<TaskSpec>> {
 }
 
 /// Run a spec end-to-end over its eval targets, loading each task's
-/// fine-tuned checkpoint.
+/// checkpoint for the spec's architecture family.
 pub fn run_spec(ctx: &Ctx, spec: &QuantSpec) -> Result<SpecReport> {
     let tasks = spec_tasks(spec)?;
     let label = spec.display_name();
     let mut names = Vec::with_capacity(tasks.len());
     let mut scores = Vec::with_capacity(tasks.len());
     for task in &tasks {
-        let params = load_ckpt(ctx, task)?;
+        let params = load_ckpt_arch(ctx, task, spec.architecture)?;
         let score = run_spec_on(ctx, spec, task, &params)?;
         println!("  [{label}] {}: {score:.2}", task.name);
         names.push(task.name.to_string());
@@ -102,17 +106,73 @@ pub fn run_spec_on(
     task: &TaskSpec,
     params: &Params,
 ) -> Result<f64> {
+    if spec.qat.is_some() {
+        return run_qat_spec_on(ctx, spec, task, params);
+    }
     if spec.is_fp32() {
         let (qp, act) = assemble_once(ctx, spec, task, params, 0)?;
-        return evaluate(ctx, task, &qp, &act);
+        return evaluate_arch(ctx, task, spec.architecture, &qp, &act);
     }
     let seeds = spec.seeds.max(1);
     let mut scores = Vec::with_capacity(seeds);
     for seed in 0..seeds {
         let (qp, act) = assemble_once(ctx, spec, task, params, seed)?;
-        scores.push(evaluate(ctx, task, &qp, &act)?);
+        scores.push(evaluate_arch(ctx, task, spec.architecture, &qp, &act)?);
     }
     Ok(median(&scores))
+}
+
+/// The QAT pipeline for specs carrying a `qat` section (paper Tables
+/// 6/7): PTQ-init calibration → straight-through QAT → deploy-eval with
+/// the learned quantizers. Reproduces the old hard-coded
+/// `run_qat_eval{,_a32}` drivers exactly: the activation-range init is
+/// always the uniform-8-bit policy (both drivers did this, even for the
+/// W{n}A32 rows), and `act_enabled: false` evaluates under FP32
+/// activations. The train-step artifacts only exist for the BERT
+/// frontend, so ViT QAT is rejected, not silently skipped.
+fn run_qat_spec_on(
+    ctx: &Ctx,
+    spec: &QuantSpec,
+    task: &TaskSpec,
+    params: &Params,
+) -> Result<f64> {
+    let q = spec.qat.as_ref().expect("caller checked spec.qat");
+    if spec.architecture != Architecture::Bert {
+        bail!(
+            "spec {}: QAT requires train-step artifacts, which exist only for the BERT frontend (got {})",
+            spec.display_name(),
+            spec.architecture.name()
+        );
+    }
+    let info = ctx.model_info(task)?;
+    let calib = calibrate_with_arch(
+        ctx,
+        task,
+        spec.architecture,
+        params,
+        &CalibCfg::default(),
+        None,
+    )?;
+    let act = assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers)?;
+    let cfg = QatCfg {
+        lr: q.lr,
+        lr_scales: q.lr_scales,
+        epochs: q.epochs,
+        batch: q.batch,
+        seed: q.seed,
+        weight_bits: q.weight_bits,
+        embed_bits: q.embed_bits,
+        act_enabled: q.act_enabled,
+        ..Default::default()
+    };
+    let res = qat(ctx, task, params, &act, &cfg)?;
+    let (qp, qact) = qat_deployed_params(info, &res, q.weight_bits, q.embed_bits)?;
+    if q.act_enabled {
+        evaluate_arch(ctx, task, spec.architecture, &qp, &qact)
+    } else {
+        let fp32_act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
+        evaluate_arch(ctx, task, spec.architecture, &qp, &fp32_act)
+    }
 }
 
 /// One calibration seed's assembly, without the eval: calibrate →
@@ -129,7 +189,7 @@ pub fn assemble_once(
     params: &Params,
     seed: usize,
 ) -> Result<(Params, ActQuantTensors)> {
-    let info = ctx.model_info(task)?;
+    let info = ctx.model_info_for(task, spec.architecture)?;
     let policy = spec.policy.resolve(info);
     if spec.is_fp32() {
         let act = assemble_act_tensors(info, &policy, &BTreeMap::new())?;
@@ -148,7 +208,8 @@ pub fn assemble_once(
     };
     // the resolved policy rides along so mse_group / mse_tensor sites
     // get row-sampling trackers under any calibration estimator
-    let calib = calibrate_with(ctx, task, params, &calib_cfg, Some(&policy))?;
+    let calib =
+        calibrate_with_arch(ctx, task, spec.architecture, params, &calib_cfg, Some(&policy))?;
     let (qp, _) = quantize_weights(info, params, &policy, Some(&calib), &ada)?;
     let act = assemble_act_tensors_pool(info, &policy, &calib.trackers, &ctx.pool)?;
     Ok((qp, act))
@@ -183,14 +244,14 @@ pub fn assemble_for_serving(
     spec: &QuantSpec,
     task: &TaskSpec,
 ) -> Result<AssembledModel> {
-    let params = load_ckpt(ctx, task)?;
+    let params = load_ckpt_arch(ctx, task, spec.architecture)?;
     let (qp, act) = assemble_once(ctx, spec, task, &params, 0)?;
-    let info = ctx.model_info(task)?;
+    let info = ctx.model_info_for(task, spec.architecture)?;
     let b = crate::coordinator::EVAL_BATCH;
     Ok(AssembledModel {
         spec_id: spec.spec_id(),
         task: task.name.to_string(),
-        artifact: format!("fwd_{}_b{b}", ctx.head(task)),
+        artifact: fwd_artifact(spec.architecture, ctx.head(task), b),
         params: qp,
         act,
         batch: b,

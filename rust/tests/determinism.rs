@@ -24,10 +24,13 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use tq::coordinator::calibrate::{calibrate, calibrate_with, CalibCfg};
-use tq::coordinator::sweep::{grid, run_offline, synth_data};
+use tq::coordinator::calibrate::{calibrate, calibrate_arch, calibrate_with, CalibCfg};
+use tq::coordinator::sweep::{
+    grid, merge_results, report_json, run_offline, shard_of, synth_data,
+};
 use tq::coordinator::{batch_input_lits, diagnostics, eval, Ctx, EVAL_BATCH};
 use tq::data::{make_batch, task_spec, TaskSpec};
+use tq::model::manifest::Architecture;
 use tq::model::qconfig::{
     assemble_act_tensors, assemble_act_tensors_pool, site_lane_params_pool, QuantPolicy,
     SiteCfg,
@@ -239,6 +242,59 @@ fn calibrate_eval_is_parallel_deterministic() {
     assert_eq!(
         runs[0].1, runs[1].1,
         "dev score diverged: {} vs {}",
+        f64::from_bits(runs[0].1),
+        f64::from_bits(runs[1].1)
+    );
+}
+
+/// The same hot-loop contract for the ViT frontend: calibrate → assemble
+/// → evaluate against the `vit`/`vit_reg` artifacts (patch-embed pixels
+/// input instead of token ids) must be bit-identical at 1 and 8 threads.
+/// Skips when the artifacts predate the ViT fixture family.
+#[test]
+fn vit_calibrate_eval_is_parallel_deterministic() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    let mut runs: Vec<(Vec<u32>, u64)> = Vec::new();
+    for threads in [1usize, 8] {
+        let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+            .unwrap()
+            .with_pool(Pool::new(threads));
+        let Ok(info) = ctx.model_info_for(&task, Architecture::Vit) else {
+            eprintln!("SKIP: artifacts lack the vit model (regenerate with `repro gen-artifacts`)");
+            return;
+        };
+        let params = Params::init(info, 23);
+        let cfg = CalibCfg { num_batches: 4, batch_size: 2, ..Default::default() };
+        let calib = calibrate_arch(&ctx, &task, Architecture::Vit, &params, &cfg).unwrap();
+        let mut range_bits = Vec::new();
+        for tr in calib.trackers.values() {
+            let (lo, hi) = tr.lane_ranges();
+            range_bits.extend(bits(&lo));
+            range_bits.extend(bits(&hi));
+        }
+        let act =
+            assemble_act_tensors(info, &QuantPolicy::uniform(8, 8), &calib.trackers).unwrap();
+        let mut split = tq::data::dev_split(&task, info.config.seq).unwrap();
+        split.examples.truncate(20);
+        let score = eval::evaluate_split_arch(
+            &ctx,
+            &task,
+            Architecture::Vit,
+            &params,
+            &act,
+            &split,
+        )
+        .unwrap();
+        runs.push((range_bits, score.to_bits()));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "vit estimator ranges diverged across thread counts");
+    assert_eq!(
+        runs[0].1, runs[1].1,
+        "vit dev score diverged: {} vs {}",
         f64::from_bits(runs[0].1),
         f64::from_bits(runs[1].1)
     );
@@ -458,6 +514,7 @@ fn offline_sweep_is_parallel_deterministic() {
     // MSE search are pinned alongside the classic cells
     let cfgs = grid(
         128,
+        &[Architecture::Bert],
         &[8, 4],
         &[8],
         &[1, 6, 8, 128],
@@ -474,6 +531,59 @@ fn offline_sweep_is_parallel_deterministic() {
         assert_eq!(ra.act_mse.to_bits(), rb.act_mse.to_bits(), "{}", ra.label);
         assert_eq!(ra.weight_mse.to_bits(), rb.weight_mse.to_bits(), "{}", ra.label);
         assert_eq!(ra.peg_overhead, rb.peg_overhead, "{}", ra.label);
+    }
+}
+
+/// Sharded execution is a pure partition: for n ∈ {1, 2, 4}, running each
+/// shard's cells separately and merging the shard maps back must produce
+/// a report byte-identical to the unsharded sweep over the same grid
+/// (timing columns normalised — they are wall-clock, not results). This
+/// is the library-level contract behind `repro sweep --shard i/n` +
+/// `--merge n`.
+#[test]
+fn shard_merge_is_byte_identical_to_unsharded() {
+    let archs = [Architecture::Bert, Architecture::Vit];
+    let data = synth_data(64, 32, 2, 5);
+    let cfgs = grid(
+        64,
+        &archs,
+        &[8, 4],
+        &[8],
+        &[1, 8],
+        &[Estimator::CurrentMinMax, Estimator::Mse],
+        &[RangeMethod::Auto],
+    )
+    .unwrap();
+    let ids: Vec<String> = cfgs.iter().map(|c| c.to_spec("mnli", 1).spec_id()).collect();
+    let labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
+    let pool = Pool::new(2);
+
+    // unsharded reference, timing normalised
+    let mut unsharded = run_offline(&data, &cfgs, &pool).unwrap();
+    for (r, id) in unsharded.iter_mut().zip(&ids) {
+        r.spec_id = id.clone();
+        r.millis = 0.0;
+    }
+    let want = report_json(&unsharded, 2, 0.0, 64, 5, &archs).to_string();
+
+    for n in [1usize, 2, 4] {
+        let mut shards = Vec::new();
+        for i in 0..n {
+            let keep: Vec<usize> =
+                (0..cfgs.len()).filter(|&x| shard_of(&ids[x], n) == i).collect();
+            let shard_cfgs: Vec<_> = keep.iter().map(|&x| cfgs[x].clone()).collect();
+            let mut res = run_offline(&data, &shard_cfgs, &pool).unwrap();
+            let mut map = std::collections::BTreeMap::new();
+            for (r, &x) in res.iter_mut().zip(&keep) {
+                r.spec_id = ids[x].clone();
+                r.millis = 0.0;
+                map.insert(r.spec_id.clone(), r.clone());
+            }
+            shards.push(map);
+        }
+        let merged = merge_results(&shards, &ids, &labels).unwrap();
+        let got = report_json(&merged, 2, 0.0, 64, 5, &archs).to_string();
+        assert_eq!(got, want, "n={n}: merged report diverged from unsharded");
     }
 }
 

@@ -48,6 +48,35 @@ fn manifest_matches_model_topology() {
 }
 
 #[test]
+fn manifest_matches_vit_topology() {
+    let Some(ctx) = ctx() else { return };
+    let Ok(info) = ctx.rt.manifest().model("vit") else {
+        eprintln!("SKIP: manifest has no vit model (regenerate artifacts)");
+        return;
+    };
+    // the site table is architecture-shared: same 13-per-layer + 4 shape
+    assert_eq!(info.sites.len(), 13 * info.config.layers + 4);
+    assert_eq!(info.config.architecture(), tq::model::manifest::Architecture::Vit);
+    // patch geometry: 4x4 patches over a 16px image, flattened to 16-dim
+    // patch vectors over seq = (img/patch)^2 = 16 positions
+    assert_eq!(info.config.patch_dim(), Some(16));
+    assert_eq!(info.config.seq, 16);
+    let mut off = 0;
+    for s in &info.sites {
+        assert_eq!(s.offset, off);
+        off += s.channels;
+    }
+    assert_eq!(off, info.total_scale_lanes);
+    // ViT fwd signature: params + 3 quant tensors + ONE pixels tensor
+    // (no ids/token_type/mask — the frontends diverge at the input layer)
+    let sig = ctx.rt.manifest().artifact("fwd_vit_cls_b8").unwrap();
+    assert_eq!(sig.inputs.len(), info.params.len() + 4);
+    let pixels = sig.inputs.last().unwrap();
+    assert_eq!(pixels.name, "pixels");
+    assert_eq!(pixels.shape, vec![8, info.config.seq, 16]);
+}
+
+#[test]
 fn golden_fake_quant_bit_exact() {
     let Some(ctx) = ctx() else { return };
     let g = ctx.rt.manifest().golden_fake_quant.as_ref().unwrap();
@@ -310,6 +339,7 @@ fn sweep_smoke_two_configs() {
     let data = sweep::synth_data(64, 32, 2, 3);
     let cfgs = sweep::grid(
         64,
+        &[tq::model::manifest::Architecture::Bert],
         &[8],
         &[8],
         &[1, 8],
@@ -325,7 +355,8 @@ fn sweep_smoke_two_configs() {
         assert!(r.weight_mse.is_finite() && r.weight_mse >= 0.0, "{}", r.label);
         assert!(r.score.is_none(), "offline sweep must not fabricate scores");
     }
-    let j = sweep::report_json(&results, 2, 1.0, 64, 3).to_string();
+    let j = sweep::report_json(&results, 2, 1.0, 64, 3, &[tq::model::manifest::Architecture::Bert])
+        .to_string();
     assert!(tq::util::json::Json::parse(&j).is_ok());
 
     // The runtime-backed pass skips gracefully when artifacts are absent.
@@ -347,6 +378,7 @@ fn sweep_smoke_two_configs() {
     // too: calibrate (row-sampling trackers) → per-group search → eval.
     let peg_cfgs = sweep::grid(
         64,
+        &[tq::model::manifest::Architecture::Bert],
         &[8],
         &[8],
         &[6],

@@ -1,0 +1,112 @@
+//! The `specs/` directory contract: every paper table row ships as a
+//! checked-in JSON spec that parses to exactly the builder-constructed
+//! preset, and every `spec_id` is pinned literally — a serialization
+//! change that would silently invalidate cached sweeps, `--compare`
+//! baselines or `--shard` partitions fails here first.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use tq::model::manifest::Architecture;
+use tq::spec::{presets, QuantSpec};
+
+fn specs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs")
+}
+
+fn load(name: &str) -> QuantSpec {
+    let path = specs_dir().join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    QuantSpec::parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e:#}", path.display()))
+}
+
+/// (preset name, pinned spec_id). The hashes are the FNV-1a-64 of each
+/// spec's canonical JSON (minus the cosmetic `name`) as of the PR that
+/// introduced the `specs/` directory; the first 15 predate the
+/// architecture/QAT spec sections and MUST stay stable forever — they key
+/// resumable sweep caches and shard membership on disk.
+const PINNED: [(&str, &str); 19] = [
+    ("fp32", "f3233bd0e72c3350"),
+    ("w8a8", "37410af9dda7ba42"),
+    ("w32a8", "f4ed6664de27f84d"),
+    ("w8a32", "7d876939a1a170e9"),
+    ("mixed_precision", "8b2682861115c15e"),
+    ("peg_k8_permute", "fe2eb2a94bf42bf7"),
+    ("peg_k4_permute", "77fcb6f0c39f9213"),
+    ("peg_k6_permute", "61594a09fd757511"),
+    ("peg_k12_permute", "099f56946742efaa"),
+    ("peg_k6_mse", "f5f8b28f921b9913"),
+    ("w6a32", "49b7ebf8a8fc9fd3"),
+    ("w4a32", "b2d905a4f68ca1c3"),
+    ("w4a32_adaround", "976cb97ced04b0b7"),
+    ("w8a32_embed4", "6b94928fb9c64e87"),
+    ("w8a32_embed2", "4de3296112ea2101"),
+    ("w8a8_qat", "32d74f75d392975d"),
+    ("w4a32_qat", "efd2c267629447f7"),
+    ("w4a8_qat", "d96925deb09128a5"),
+    ("w4a8_embed2_qat", "abf08fc7d3ffe33d"),
+];
+
+/// ViT sweep cells: not presets (no builder counterpart), but their ids
+/// key shard membership the same way, so they are pinned identically.
+const PINNED_VIT: [(&str, &str); 4] = [
+    ("vit_w8a8", "d30a4baf55d0b5c8"),
+    ("vit_w32a8", "b55a2780a07e704b"),
+    ("vit_w8a32", "322b128fdbdecfbf"),
+    ("vit_peg_k8_permute", "799441697ba89a51"),
+];
+
+#[test]
+fn every_preset_has_a_spec_file_with_pinned_id() {
+    assert_eq!(
+        PINNED.len(),
+        presets::preset_names().len(),
+        "preset registry and specs/ pin table diverged"
+    );
+    for (name, want_id) in PINNED {
+        let from_file = load(name);
+        let built = presets::preset(name).unwrap();
+        assert_eq!(from_file, built, "specs/{name}.json != preset({name:?})");
+        assert_eq!(from_file.spec_id(), want_id, "spec_id drifted for {name}");
+        assert_eq!(built.spec_id(), want_id, "builder spec_id drifted for {name}");
+    }
+}
+
+#[test]
+fn vit_cells_parse_target_vit_and_pin_their_ids() {
+    for (name, want_id) in PINNED_VIT {
+        let spec = load(name);
+        assert_eq!(spec.architecture, Architecture::Vit, "{name}");
+        assert_eq!(spec.spec_id(), want_id, "spec_id drifted for {name}");
+        // the canonical form keeps the architecture key (non-default)
+        let canon = spec.to_json().to_string();
+        assert!(canon.contains("\"architecture\":\"vit\""), "{name}: {canon}");
+    }
+}
+
+#[test]
+fn specs_dir_is_exactly_the_pinned_set_and_round_trips() {
+    let mut expect: BTreeSet<String> = PINNED
+        .iter()
+        .chain(PINNED_VIT.iter())
+        .map(|(n, _)| format!("{n}.json"))
+        .collect();
+    let mut ids = BTreeSet::new();
+    for entry in std::fs::read_dir(specs_dir()).unwrap() {
+        let entry = entry.unwrap();
+        let fname = entry.file_name().to_string_lossy().into_owned();
+        assert!(
+            expect.remove(&fname),
+            "unpinned file specs/{fname} — add it to the pin table"
+        );
+        let stem = fname.trim_end_matches(".json");
+        let spec = load(stem);
+        assert_eq!(spec.name, stem, "file name and spec name diverged");
+        assert!(ids.insert(spec.spec_id()), "duplicate spec_id in specs/ ({fname})");
+        // parse -> serialize -> parse is the identity
+        let back = QuantSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec, "round-trip changed specs/{fname}");
+    }
+    assert!(expect.is_empty(), "missing spec files: {expect:?}");
+}
