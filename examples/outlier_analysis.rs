@@ -1,23 +1,34 @@
-//! Outlier analysis (paper §3 / Fig. 2): inspect the FFN input/output
-//! dynamic ranges and the structured outliers in the deepest encoder
-//! layer of a fine-tuned checkpoint.
+//! Outlier analysis (paper §3 / Fig. 2, plus the "Quantizable
+//! Transformers" follow-up): inspect the structured FFN-output outliers
+//! of the vanilla fixture checkpoint, then profile the same activations
+//! with the streaming outlier-statistics pass and compare against the
+//! clipped-softmax / gated-attention variant models, which ship without
+//! installed outliers.
 //!
 //!     cargo run --release --example outlier_analysis [-- <task>]
 
 use anyhow::Result;
 
+use tq::analysis::outlier_stats;
 use tq::coordinator::diagnostics as diag;
-use tq::coordinator::experiments::load_ckpt;
+use tq::coordinator::experiments::load_ckpt_var;
 use tq::coordinator::Ctx;
+use tq::model::manifest::{model_name, Architecture, AttnVariant};
 use tq::report::{bar_chart, bool_heatmap};
 
 fn main() -> Result<()> {
     let task_name = std::env::args().nth(1).unwrap_or_else(|| "mnli".into());
     let ctx = Ctx::new("artifacts", "checkpoints", "results")?;
     let task = ctx.task(&task_name)?;
-    let params = load_ckpt(&ctx, &task)?;
+    let arch = Architecture::Bert;
+
+    // Part 1 — the classic Fig. 2 view of the vanilla checkpoint:
+    // per-token dynamic ranges and the >6σ outlier map in the deepest
+    // encoder layer.
+    let params = load_ckpt_var(&ctx, &task, arch, AttnVariant::Vanilla)?;
     let info = ctx.model_info(&task)?;
     let layer = info.config.layers - 1;
+    let (cls_id, sep_id) = (info.config.arch.cls_id(), info.config.arch.sep_id());
 
     let runs = diag::collect_taps(&ctx, &task, &params, 10)?;
     let ex = &runs.examples[0];
@@ -29,8 +40,8 @@ fn main() -> Result<()> {
         let (lo, hi) = diag::per_token_ranges(&runs.per_seq[0], &site, &ex.mask);
         let ranges: Vec<f32> = lo.iter().zip(&hi).map(|(l, h)| h - l).collect();
         let labels: Vec<String> = ex.ids.iter().take(ranges.len())
-            .map(|&id| if id == info.config.sep_id { "[SEP]".into() }
-                 else if id == info.config.cls_id { "[CLS]".into() }
+            .map(|&id| if Some(id) == sep_id { "[SEP]".into() }
+                 else if Some(id) == cls_id { "[CLS]".into() }
                  else { format!("tok{id}") })
             .collect();
         println!("{}", bar_chart(&ranges, 40, Some(&labels)));
@@ -42,6 +53,37 @@ fn main() -> Result<()> {
 
     let dims = diag::consistent_outlier_dims(&runs, &format!("layer{layer}.ffn_out"), 6);
     println!("consistent outlier dims across 10 sequences: {dims:?}");
-    println!("(installed by the aux loss at dims {:?})", info.config.outlier_dims);
+    println!("(installed in the checkpoint at dims {:?})", info.config.outlier_dims);
+
+    // Part 2 — the streaming outlier-statistics pass (`repro diag
+    // --outliers`): per-site ∞-norm / kurtosis / top-lane concentration,
+    // vanilla vs the outlier-free attention variants.
+    println!("\nper-family outlier profile ({task_name}, 10 seqs):");
+    for variant in [AttnVariant::Vanilla, AttnVariant::ClippedSoftmax, AttnVariant::Gated] {
+        let params = load_ckpt_var(&ctx, &task, arch, variant)?;
+        let run = diag::collect_taps_var(&ctx, &task, arch, variant, &params, 10)?;
+        let stats = outlier_stats(&run)?;
+        let max_inf = stats.values().map(|s| s.inf_norm).fold(0.0f32, f32::max);
+        let max_kurt = stats.values().map(|s| s.kurtosis).fold(0.0, f64::max);
+        let (site, worst) = stats
+            .iter()
+            .max_by(|a, b| a.1.kurtosis.total_cmp(&b.1.kurtosis))
+            .expect("tap sites");
+        println!(
+            "  {:<10} max inf-norm {:8.3}  max kurtosis {:8.2}  worst site {} \
+             (lane {} carries {:.0}% of its energy)",
+            model_name(arch, variant, false),
+            max_inf,
+            max_kurt,
+            site,
+            worst.top_lane,
+            100.0 * worst.top_share
+        );
+    }
+    println!(
+        "\nvanilla >> variants: the clipped-softmax / gated-attention models \
+         quantize to\nper-tensor W8A8 without PEG — sweep the axis with \
+         `repro sweep --variants ...`."
+    );
     Ok(())
 }

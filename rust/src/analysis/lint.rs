@@ -710,18 +710,42 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
         for n in presets::preset_names() {
             v.push(presets::preset(n)?);
         }
+        // presets are all vanilla-BERT; add a W8A8 cell per attention
+        // variant family so the default no-deny gate also walks the
+        // clipped-softmax / gated forward + diag graphs
+        use crate::model::manifest::{Architecture, AttnVariant};
+        for arch in [Architecture::Bert, Architecture::Vit] {
+            for variant in [AttnVariant::ClippedSoftmax, AttnVariant::Gated] {
+                let name = format!("w8a8_{}_{}", arch.name(), variant.tag());
+                v.push(
+                    presets::preset("w8a8")?
+                        .named(&name)
+                        .with_architecture(arch)
+                        .with_variant(variant),
+                );
+            }
+        }
         v
     };
 
     // every quantized graph shipped per model: batch-1 forward, diagnostic
-    // forward, and (BERT only — no ViT train graphs yet) the QAT
+    // forward, and (vanilla BERT only — no other train graphs yet) the QAT
     // train-step. fp32 train graphs carry no quantizer triple and are
-    // covered by pass 1 alone.
-    let graph_arts: [(&str, &[&str]); 4] = [
+    // covered by pass 1 alone. The attention-variant families (clipped
+    // softmax / gated) ship forward + diag per head, like ViT.
+    let graph_arts: [(&str, &[&str]); 12] = [
         ("base", &["fwd_cls_b1", "diag_cls_b1", "train_qat_cls_b16"]),
         ("base_reg", &["fwd_reg_b1", "diag_reg_b1", "train_qat_reg_b16"]),
         ("vit", &["fwd_vit_cls_b1", "diag_vit_cls_b1"]),
         ("vit_reg", &["fwd_vit_reg_b1", "diag_vit_reg_b1"]),
+        ("bert_csoft", &["fwd_csoft_cls_b1", "diag_csoft_cls_b1"]),
+        ("bert_csoft_reg", &["fwd_csoft_reg_b1", "diag_csoft_reg_b1"]),
+        ("bert_gate", &["fwd_gate_cls_b1", "diag_gate_cls_b1"]),
+        ("bert_gate_reg", &["fwd_gate_reg_b1", "diag_gate_reg_b1"]),
+        ("vit_csoft", &["fwd_vit_csoft_cls_b1", "diag_vit_csoft_cls_b1"]),
+        ("vit_csoft_reg", &["fwd_vit_csoft_reg_b1", "diag_vit_csoft_reg_b1"]),
+        ("vit_gate", &["fwd_vit_gate_cls_b1", "diag_vit_gate_cls_b1"]),
+        ("vit_gate_reg", &["fwd_vit_gate_reg_b1", "diag_vit_gate_reg_b1"]),
     ];
     let mut graphs: BTreeMap<&str, Vec<HloModule>> = BTreeMap::new();
     for (model, arts) in graph_arts {
@@ -740,10 +764,12 @@ pub fn cmd_lint(args: &Args) -> Result<()> {
 
     for spec in &specs {
         for (model, info) in &manifest.models {
-            // a spec only ever runs against its own architecture family's
-            // models/graphs — cross-family lints would flag site tables
-            // the spec never touches
-            if spec.architecture != info.config.architecture() {
+            // a spec only ever runs against its own (architecture,
+            // variant) family's models/graphs — cross-family lints would
+            // flag site tables the spec never touches
+            if spec.architecture != info.config.architecture()
+                || spec.variant != info.config.variant
+            {
                 continue;
             }
             let prefix = format!("{}/{model}", spec.name);
@@ -1099,14 +1125,22 @@ mod tests {
 
     #[test]
     fn fixture_forward_graphs_lint_clean_across_topologies() {
-        // property check: for randomized (d, heads, layers, seq), the
-        // fixture lowering verifies AND lints clean under a fully
+        // property check: for randomized (d, heads, layers, seq, variant),
+        // the fixture lowering verifies AND lints clean under a fully
         // quantized policy — i.e. every residual site's operands really
-        // are quantized, at every size
+        // are quantized, at every size and for every attention variant
+        use crate::model::manifest::AttnVariant;
         let mut rng = Rng::new(0xC0FFEE);
-        for trial in 0..4 {
+        for trial in 0..6 {
             let heads = [1, 2, 4][rng.below(3)];
             let d = heads * (2 + rng.below(3));
+            // cycle rather than sample so all three variants are
+            // guaranteed to be exercised
+            let variant = [
+                AttnVariant::Vanilla,
+                AttnVariant::ClippedSoftmax,
+                AttnVariant::Gated,
+            ][trial % 3];
             let cfg = FixtureConfig {
                 name: format!("prop{trial}"),
                 vocab: 8 + rng.below(8),
@@ -1118,6 +1152,7 @@ mod tests {
                 n_out: 2,
                 outlier_dims: vec![0],
                 arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+                variant,
             };
             let art = build_forward(&cfg, 1, false, &cfg.name).unwrap();
             let m = parse_module(&art.text).unwrap();

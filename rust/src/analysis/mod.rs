@@ -10,5 +10,7 @@
 //! calibration run, if at all.
 
 pub mod lint;
+pub mod outliers;
 
 pub use lint::{cmd_lint, lint_graph, lint_policy, lint_spec_rules, Diag, Severity};
+pub use outliers::{cmd_diag, outlier_stats, SiteAccum, SiteStats};

@@ -1,0 +1,472 @@
+//! Outlier observability (DESIGN.md §15): per-site activation statistics
+//! quantifying the paper's Fig. 2 problem — a few embedding dimensions
+//! carry structural outliers that blow up per-tensor quantization ranges
+//! — and the follow-up's fix: clipped-softmax / gated-attention variants
+//! whose activations stay near-Gaussian.
+//!
+//! Three statistics per tap site, streamed over the sequences of a
+//! [`DiagRun`]:
+//! * **∞-norm** — max |x|; the quantity a per-tensor min-max range must
+//!   cover, so it is the direct cost of an outlier.
+//! * **kurtosis** — m₄/m₂² of the whole tap; ≈3 for Gaussian
+//!   activations, ≫3 when a few lanes carry heavy tails.
+//! * **top-lane share** — the largest single embedding lane's fraction
+//!   of the tap's total energy (Σx² per lane); ≈1/d when energy is
+//!   spread, ≈1/k when k outlier lanes dominate.
+//!
+//! Determinism contract: the accumulator keeps raw power sums (n, Σx,
+//! Σx², Σx³, Σx⁴ in f64) and folds elements in strict tensor order, so a
+//! streamed run is *bit-identical* to a one-shot pass over the
+//! concatenated taps (property-tested below), and `repro diag
+//! --outliers` output is bit-identical at any `TQ_THREADS` setting
+//! (tap collection already reassembles in sequence order —
+//! tests/determinism.rs).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::diagnostics::{collect_taps_var, DiagRun};
+use crate::coordinator::experiments::load_ckpt_var;
+use crate::coordinator::Ctx;
+use crate::model::manifest::{model_name, Architecture, AttnVariant};
+use crate::report::{write_file, Table};
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+
+/// Streaming per-site statistics accumulator. Observations fold in
+/// strict element order with f64 power sums, so streaming N tensors and
+/// one-shotting their concatenation produce bit-identical results.
+#[derive(Debug, Clone, Default)]
+pub struct SiteAccum {
+    n: u64,
+    s1: f64,
+    s2: f64,
+    s3: f64,
+    s4: f64,
+    /// max |x| under `f32::total_cmp` — NaN taps surface as a NaN
+    /// ∞-norm deterministically instead of being silently dropped
+    inf_norm: f32,
+    /// per-embedding-lane Σx² (lane = index modulo the last dim)
+    lane_sq: Vec<f64>,
+}
+
+/// Finished statistics for one tap site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteStats {
+    /// elements observed
+    pub n: u64,
+    pub mean: f64,
+    /// max |x| (NaN if the tap contained NaN)
+    pub inf_norm: f32,
+    /// m₄/m₂² (0.0 for empty/constant/non-finite taps)
+    pub kurtosis: f64,
+    /// largest lane's share of total Σx² energy (0.0 when energy is 0)
+    pub top_share: f64,
+    /// index of that lane
+    pub top_lane: usize,
+}
+
+impl SiteAccum {
+    pub fn new() -> SiteAccum {
+        SiteAccum::default()
+    }
+
+    /// Fold one tap tensor in. The lane count is fixed by the first
+    /// observation (the site's embedding dim); later tensors must match.
+    pub fn observe(&mut self, t: &Tensor) -> Result<()> {
+        let lanes = t.last_dim();
+        if lanes == 0 {
+            bail!("outlier accumulator: tensor with zero-length last dim");
+        }
+        if self.lane_sq.is_empty() {
+            self.lane_sq = vec![0.0; lanes];
+        } else if self.lane_sq.len() != lanes {
+            bail!(
+                "outlier accumulator: lane count changed ({} -> {lanes})",
+                self.lane_sq.len()
+            );
+        }
+        for (i, &x) in t.data().iter().enumerate() {
+            let a = x.abs();
+            if a.total_cmp(&self.inf_norm) == std::cmp::Ordering::Greater {
+                self.inf_norm = a;
+            }
+            let x = x as f64;
+            let x2 = x * x;
+            self.s1 += x;
+            self.s2 += x2;
+            self.s3 += x2 * x;
+            self.s4 += x2 * x2;
+            self.lane_sq[i % lanes] += x2;
+            self.n += 1;
+        }
+        Ok(())
+    }
+
+    /// Central moments from the raw power sums. Degenerate inputs
+    /// (empty, constant, NaN/inf sums) yield kurtosis 0.0, never a
+    /// panic — the ∞-norm still flags non-finite taps.
+    pub fn stats(&self) -> SiteStats {
+        if self.n == 0 {
+            return SiteStats {
+                n: 0,
+                mean: 0.0,
+                inf_norm: self.inf_norm,
+                kurtosis: 0.0,
+                top_share: 0.0,
+                top_lane: 0,
+            };
+        }
+        let n = self.n as f64;
+        let mean = self.s1 / n;
+        let m2 = self.s2 / n - mean * mean;
+        let m4 = self.s4 / n - 4.0 * mean * self.s3 / n + 6.0 * mean * mean * self.s2 / n
+            - 3.0 * mean * mean * mean * mean;
+        let kurtosis = if m2 > 0.0 && m2.is_finite() && m4.is_finite() {
+            m4 / (m2 * m2)
+        } else {
+            0.0
+        };
+        let total: f64 = self.lane_sq.iter().sum();
+        let (top_lane, top) = self
+            .lane_sq
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, &v)| (i, v))
+            .unwrap_or((0, 0.0));
+        let top_share = if total > 0.0 && total.is_finite() { top / total } else { 0.0 };
+        SiteStats { n: self.n, mean, inf_norm: self.inf_norm, kurtosis, top_share, top_lane }
+    }
+}
+
+/// Per-site statistics over every sequence of a diag run, streamed in
+/// sequence order then site order (both fixed), keyed by site name.
+pub fn outlier_stats(run: &DiagRun) -> Result<BTreeMap<String, SiteStats>> {
+    let mut accums: BTreeMap<String, SiteAccum> = BTreeMap::new();
+    for taps in &run.per_seq {
+        for (site, t) in taps {
+            accums.entry(site.clone()).or_default().observe(t)?;
+        }
+    }
+    Ok(accums.into_iter().map(|(s, a)| (s, a.stats())).collect())
+}
+
+/// One model family's outlier profile: the per-site stats plus the
+/// headline maxima the CI gate compares across variants.
+pub struct FamilyStats {
+    pub arch: Architecture,
+    pub variant: AttnVariant,
+    pub model: String,
+    pub sites: BTreeMap<String, SiteStats>,
+}
+
+impl FamilyStats {
+    /// Largest per-site kurtosis (NaN-safe: degenerate sites are 0.0).
+    pub fn max_kurtosis(&self) -> f64 {
+        self.sites.values().map(|s| s.kurtosis).fold(0.0, f64::max)
+    }
+
+    /// Largest per-site ∞-norm under `total_cmp` (NaN sorts above +inf,
+    /// so a NaN tap anywhere is visible here).
+    pub fn max_inf_norm(&self) -> f32 {
+        self.sites.values().map(|s| s.inf_norm).fold(0.0f32, |a, b| {
+            if b.total_cmp(&a) == std::cmp::Ordering::Greater {
+                b
+            } else {
+                a
+            }
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let sites: BTreeMap<String, Json> = self
+            .sites
+            .iter()
+            .map(|(name, s)| {
+                (
+                    name.clone(),
+                    obj(vec![
+                        ("n", Json::Num(s.n as f64)),
+                        ("mean", Json::Num(s.mean)),
+                        ("inf_norm", json_f64(s.inf_norm as f64)),
+                        ("kurtosis", json_f64(s.kurtosis)),
+                        ("top_share", Json::Num(s.top_share)),
+                        ("top_lane", Json::Num(s.top_lane as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("arch", Json::Str(self.arch.name().to_string())),
+            ("variant", Json::Str(self.variant.name().to_string())),
+            ("model", Json::Str(self.model.clone())),
+            ("max_kurtosis", json_f64(self.max_kurtosis())),
+            ("max_inf_norm", json_f64(self.max_inf_norm() as f64)),
+            ("sites", Json::Obj(sites)),
+        ])
+    }
+}
+
+/// JSON has no NaN/inf literal; encode them as null so `--json` output
+/// stays machine-parseable even for degenerate taps.
+fn json_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Collect the outlier profile of one (architecture, variant) family.
+pub fn family_stats(
+    ctx: &Ctx,
+    task: &crate::data::TaskSpec,
+    arch: Architecture,
+    variant: AttnVariant,
+    n_seqs: usize,
+) -> Result<FamilyStats> {
+    let params = load_ckpt_var(ctx, task, arch, variant)?;
+    let run = collect_taps_var(ctx, task, arch, variant, &params, n_seqs)?;
+    Ok(FamilyStats {
+        arch,
+        variant,
+        model: model_name(arch, variant, false),
+        sites: outlier_stats(&run)?,
+    })
+}
+
+/// `repro diag --outliers [--json]`: the Fig. 2 comparison as a command —
+/// per-site ∞-norm / kurtosis / top-lane share for the vanilla model
+/// next to the clipped-softmax and gated-attention variants, per
+/// architecture. Table + CSV by default, a single JSON object with
+/// `--json` (CI parses it and gates on vanilla kurtosis > variant
+/// kurtosis). Deterministic at any thread count.
+pub fn cmd_diag(ctx: &Ctx, args: &Args) -> Result<()> {
+    if !args.flag("outliers") {
+        bail!("repro diag: unknown mode — the outlier pass is `repro diag --outliers [--json]`");
+    }
+    let task = ctx.task(args.get_or("task", "sst2"))?;
+    let n_seqs = args.get_usize("seqs", 16)?.max(1);
+    let archs: Vec<Architecture> = match args.get("arch") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(Architecture::parse)
+            .collect::<Result<_>>()?,
+        None => vec![Architecture::Bert, Architecture::Vit],
+    };
+    let variants: Vec<AttnVariant> = match args.get("variants") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(AttnVariant::parse)
+            .collect::<Result<_>>()?,
+        None => vec![AttnVariant::Vanilla, AttnVariant::ClippedSoftmax, AttnVariant::Gated],
+    };
+
+    let mut families = Vec::new();
+    for &arch in &archs {
+        for &variant in &variants {
+            families.push(family_stats(ctx, &task, arch, variant, n_seqs)?);
+        }
+    }
+
+    if args.flag("json") {
+        let out = obj(vec![
+            ("task", Json::Str(task.name.to_string())),
+            ("n_seqs", Json::Num(n_seqs as f64)),
+            (
+                "families",
+                Json::Arr(families.iter().map(|f| f.to_json()).collect()),
+            ),
+        ]);
+        println!("{out}");
+        return Ok(());
+    }
+
+    let mut table = Table::new(
+        &format!("outlier diagnostics (task {}, {n_seqs} seqs)", task.name),
+        &["model", "site", "inf_norm", "kurtosis", "top_share", "top_lane"],
+    );
+    for f in &families {
+        for (site, s) in &f.sites {
+            table.row(vec![
+                f.model.clone(),
+                site.clone(),
+                format!("{:.4}", s.inf_norm),
+                format!("{:.2}", s.kurtosis),
+                format!("{:.4}", s.top_share),
+                format!("{}", s.top_lane),
+            ]);
+        }
+    }
+    print!("{}", table.to_console());
+    let mut summary = Table::new(
+        "per-family maxima (the Fig. 2 gap: vanilla >> variants)",
+        &["model", "max_inf_norm", "max_kurtosis"],
+    );
+    for f in &families {
+        summary.row(vec![
+            f.model.clone(),
+            format!("{:.4}", f.max_inf_norm()),
+            format!("{:.2}", f.max_kurtosis()),
+        ]);
+    }
+    print!("{}", summary.to_console());
+    write_file(ctx.results_dir.join("diag_outliers.csv"), &table.to_csv())?;
+    println!("wrote {}", ctx.results_dir.join("diag_outliers.csv").display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::new(shape.to_vec(), data).unwrap()
+    }
+
+    fn rand_tensors(rng: &mut Rng, n: usize, lanes: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|_| {
+                let rows = rng.range(1, 5);
+                let data: Vec<f32> = (0..rows * lanes)
+                    .map(|_| rng.normal_f32(0.0, 1.0 + 4.0 * rng.f32()))
+                    .collect();
+                tensor(&[1, rows, lanes], data)
+            })
+            .collect()
+    }
+
+    /// The determinism contract: streaming tensor-by-tensor equals a
+    /// one-shot pass over the concatenation, bit for bit.
+    #[test]
+    fn streaming_equals_one_shot_bitwise() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            let lanes = rng.range(2, 9);
+            let parts = rand_tensors(&mut rng, rng.range(1, 6), lanes);
+
+            let mut streamed = SiteAccum::new();
+            for p in &parts {
+                streamed.observe(p).unwrap();
+            }
+
+            let mut all: Vec<f32> = Vec::new();
+            for p in &parts {
+                all.extend_from_slice(p.data());
+            }
+            let rows = all.len() / lanes;
+            let mut one_shot = SiteAccum::new();
+            one_shot.observe(&tensor(&[rows, lanes], all)).unwrap();
+
+            let (a, b) = (streamed.stats(), one_shot.stats());
+            assert_eq!(a.n, b.n, "seed {seed}");
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "seed {seed}");
+            assert_eq!(a.inf_norm.to_bits(), b.inf_norm.to_bits(), "seed {seed}");
+            assert_eq!(a.kurtosis.to_bits(), b.kurtosis.to_bits(), "seed {seed}");
+            assert_eq!(a.top_share.to_bits(), b.top_share.to_bits(), "seed {seed}");
+            assert_eq!(a.top_lane, b.top_lane, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        // constant tensor: zero variance -> kurtosis 0 by convention
+        let mut c = SiteAccum::new();
+        c.observe(&tensor(&[2, 2], vec![3.0; 4])).unwrap();
+        let s = c.stats();
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.inf_norm, 3.0);
+        assert_eq!(s.kurtosis, 0.0);
+        // two lanes, all energy in lane 1
+        let mut a = SiteAccum::new();
+        a.observe(&tensor(&[2, 2], vec![0.0, 2.0, 0.0, -2.0])).unwrap();
+        let s = a.stats();
+        assert_eq!(s.top_lane, 1);
+        assert_eq!(s.top_share, 1.0);
+        assert_eq!(s.inf_norm, 2.0);
+        // symmetric two-point distribution {±1}: kurtosis exactly 1
+        let mut b = SiteAccum::new();
+        b.observe(&tensor(&[2, 2], vec![1.0, -1.0, -1.0, 1.0])).unwrap();
+        assert_eq!(b.stats().kurtosis, 1.0);
+        assert_eq!(b.stats().mean, 0.0);
+    }
+
+    #[test]
+    fn gaussian_kurtosis_is_near_three_and_outliers_inflate_it() {
+        let mut rng = Rng::new(7);
+        let lanes = 64;
+        let clean: Vec<f32> = (0..200 * lanes).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut base = SiteAccum::new();
+        base.observe(&tensor(&[200, lanes], clean.clone())).unwrap();
+        let k0 = base.stats().kurtosis;
+        assert!((k0 - 3.0).abs() < 0.5, "gaussian kurtosis {k0}");
+
+        // inflate one lane the way the fixture's outlier install does
+        let mut spiked = clean;
+        for row in 0..200 {
+            spiked[row * lanes + 17] += 20.0;
+        }
+        let mut hot = SiteAccum::new();
+        hot.observe(&tensor(&[200, lanes], spiked)).unwrap();
+        let s = hot.stats();
+        assert!(s.kurtosis > 10.0, "outlier kurtosis {}", s.kurtosis);
+        assert!(s.kurtosis > k0 * 3.0);
+        assert!(s.inf_norm > 15.0);
+        assert_eq!(s.top_lane, 17);
+        assert!(s.top_share > 0.5, "top share {}", s.top_share);
+    }
+
+    #[test]
+    fn nan_and_inf_are_deterministic_not_panics() {
+        let mut a = SiteAccum::new();
+        a.observe(&tensor(&[1, 4], vec![1.0, f32::NAN, 2.0, -3.0])).unwrap();
+        let s = a.stats();
+        assert!(s.inf_norm.is_nan(), "NaN must surface in the inf-norm");
+        assert_eq!(s.kurtosis, 0.0, "NaN power sums collapse to the 0.0 convention");
+        // deterministic: same input, same bits
+        let mut b = SiteAccum::new();
+        b.observe(&tensor(&[1, 4], vec![1.0, f32::NAN, 2.0, -3.0])).unwrap();
+        assert_eq!(s.inf_norm.to_bits(), b.stats().inf_norm.to_bits());
+
+        let mut c = SiteAccum::new();
+        c.observe(&tensor(&[1, 2], vec![f32::INFINITY, 0.0])).unwrap();
+        let s = c.stats();
+        assert_eq!(s.inf_norm, f32::INFINITY);
+        assert_eq!(s.kurtosis, 0.0);
+        assert_eq!(s.top_share, 0.0, "infinite energy yields no finite share");
+    }
+
+    #[test]
+    fn accumulator_rejects_lane_mismatch_and_empty() {
+        let mut a = SiteAccum::new();
+        a.observe(&tensor(&[1, 4], vec![0.0; 4])).unwrap();
+        assert!(a.observe(&tensor(&[1, 3], vec![0.0; 3])).is_err());
+        assert_eq!(SiteAccum::new().stats().n, 0);
+    }
+
+    #[test]
+    fn outlier_stats_covers_every_site() {
+        let mut per_seq = Vec::new();
+        for i in 0..3 {
+            let mut m = BTreeMap::new();
+            m.insert("a".to_string(), tensor(&[1, 2, 4], vec![i as f32; 8]));
+            m.insert("b".to_string(), tensor(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]));
+            per_seq.push(m);
+        }
+        let run = DiagRun { per_seq, examples: Vec::new() };
+        let stats = outlier_stats(&run).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats["a"].n, 24);
+        assert_eq!(stats["b"].n, 12);
+        assert_eq!(stats["b"].inf_norm, 4.0);
+        assert_eq!(stats["b"].top_lane, 3);
+    }
+}

@@ -22,9 +22,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use super::{diag_artifact, example_input_lits, Ctx};
+use super::{diag_artifact_var, example_input_lits, Ctx};
 use crate::data::{self, TaskSpec};
-use crate::model::manifest::Architecture;
+use crate::model::manifest::{Architecture, AttnVariant};
 use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
 use crate::model::Params;
 use crate::quant::estimators::RangeTracker;
@@ -132,8 +132,25 @@ pub fn calibrate_with_arch(
     cfg: &CalibCfg,
     policy: Option<&QuantPolicy>,
 ) -> Result<Calibration> {
-    let info = ctx.model_info_for(task, arch)?;
-    let artifact = diag_artifact(arch, ctx.head(task));
+    calibrate_with_var(ctx, task, arch, AttnVariant::Vanilla, params, cfg, policy)
+}
+
+/// [`calibrate_with_arch`] for a specific attention variant: the diag
+/// artifact and model info follow the (architecture, variant) family.
+/// The site inventory is family-independent, so the same spec calibrates
+/// any family.
+#[allow(clippy::too_many_arguments)]
+pub fn calibrate_with_var(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    variant: AttnVariant,
+    params: &Params,
+    cfg: &CalibCfg,
+    policy: Option<&QuantPolicy>,
+) -> Result<Calibration> {
+    let info = ctx.model_info_var(task, arch, variant)?;
+    let artifact = diag_artifact_var(arch, variant, ctx.head(task));
     let seq = info.config.seq;
     // calibration data comes from the training split (paper: "passing a
     // few batches of calibration data")

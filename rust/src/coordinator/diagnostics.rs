@@ -8,9 +8,9 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use super::{diag_artifact, example_input_lits, Ctx};
+use super::{diag_artifact_var, example_input_lits, Ctx};
 use crate::data::{self, TaskSpec};
-use crate::model::manifest::{Architecture, ModelInfo};
+use crate::model::manifest::{Architecture, AttnVariant, ModelInfo};
 use crate::model::qconfig::{assemble_act_tensors, QuantPolicy};
 use crate::model::Params;
 use crate::tensor::Tensor;
@@ -39,8 +39,29 @@ pub fn collect_taps_arch(
     params: &Params,
     n_seqs: usize,
 ) -> Result<DiagRun> {
-    let info = ctx.model_info_for(task, arch)?;
-    collect_taps_with(ctx, &diag_artifact(arch, ctx.head(task)), info, task, params, n_seqs)
+    collect_taps_var(ctx, task, arch, AttnVariant::Vanilla, params, n_seqs)
+}
+
+/// [`collect_taps_arch`] for a specific attention variant family — the
+/// artifact and model-info resolution used by `repro diag --outliers`
+/// when comparing vanilla against a clipped-softmax/gated model.
+pub fn collect_taps_var(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    variant: AttnVariant,
+    params: &Params,
+    n_seqs: usize,
+) -> Result<DiagRun> {
+    let info = ctx.model_info_var(task, arch, variant)?;
+    collect_taps_with(
+        ctx,
+        &diag_artifact_var(arch, variant, ctx.head(task)),
+        info,
+        task,
+        params,
+        n_seqs,
+    )
 }
 
 /// Variant-agnostic tap collection (used for Fig. 9-13 model sweeps where

@@ -10,10 +10,10 @@
 
 use anyhow::Result;
 
-use super::{batch_input_lits_for, fwd_artifact, Ctx, EVAL_BATCH};
+use super::{batch_input_lits_for, fwd_artifact_var, Ctx, EVAL_BATCH};
 use crate::data::{self, Split, TaskKind, TaskSpec};
 use crate::metrics;
-use crate::model::manifest::Architecture;
+use crate::model::manifest::{Architecture, AttnVariant};
 use crate::model::qconfig::ActQuantTensors;
 use crate::model::Params;
 
@@ -51,9 +51,21 @@ pub fn evaluate_arch(
     params: &Params,
     act: &ActQuantTensors,
 ) -> Result<f64> {
-    let info = ctx.model_info_for(task, arch)?;
+    evaluate_var(ctx, task, arch, AttnVariant::Vanilla, params, act)
+}
+
+/// [`evaluate_arch`] for a specific attention variant family's artifacts.
+pub fn evaluate_var(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    variant: AttnVariant,
+    params: &Params,
+    act: &ActQuantTensors,
+) -> Result<f64> {
+    let info = ctx.model_info_var(task, arch, variant)?;
     let split = data::dev_split(task, info.config.seq)?;
-    evaluate_split_arch(ctx, task, arch, params, act, &split)
+    evaluate_split_var(ctx, task, arch, variant, params, act, &split)
 }
 
 /// [`evaluate`] over an explicit example split (exposed so tests and
@@ -78,9 +90,23 @@ pub fn evaluate_split_arch(
     act: &ActQuantTensors,
     split: &Split,
 ) -> Result<f64> {
-    let info = ctx.model_info_for(task, arch)?;
+    evaluate_split_var(ctx, task, arch, AttnVariant::Vanilla, params, act, split)
+}
+
+/// [`evaluate_split_arch`] for a specific attention variant family.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_split_var(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    variant: AttnVariant,
+    params: &Params,
+    act: &ActQuantTensors,
+    split: &Split,
+) -> Result<f64> {
+    let info = ctx.model_info_var(task, arch, variant)?;
     let head = ctx.head(task);
-    let artifact = fwd_artifact(arch, head, EVAL_BATCH);
+    let artifact = fwd_artifact_var(arch, variant, head, EVAL_BATCH);
     let b = EVAL_BATCH;
     let seq = info.config.seq;
     let n_sites = info.sites.len();

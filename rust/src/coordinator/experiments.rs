@@ -24,7 +24,7 @@ use super::weights::{quantize_weights, AdaRoundOpts};
 use super::Ctx;
 use crate::data::{TaskSpec, TASKS};
 use crate::metrics::{glue_score, median};
-use crate::model::manifest::Architecture;
+use crate::model::manifest::{Architecture, AttnVariant};
 use crate::model::qconfig::{
     assemble_act_tensors, ActQuantTensors, QuantPolicy, SiteCfg, WeightCfg,
 };
@@ -80,14 +80,27 @@ pub fn load_ckpt(ctx: &Ctx, task: &TaskSpec) -> Result<Params> {
 /// `vit_{task}.ckpt`). ViT checkpoints come from `repro gen-artifacts`;
 /// BERT ones from `repro finetune`.
 pub fn load_ckpt_arch(ctx: &Ctx, task: &TaskSpec, arch: Architecture) -> Result<Params> {
-    let path = ctx.ckpt_path_for(task.name, arch);
+    load_ckpt_var(ctx, task, arch, AttnVariant::Vanilla)
+}
+
+/// [`load_ckpt_arch`] for a specific attention variant
+/// (`csoft_{task}.ckpt`, `vit_gate_{task}.ckpt`, ...). All variant
+/// checkpoints come from `repro gen-artifacts`; only the BERT-vanilla
+/// family is refreshed by `repro finetune`.
+pub fn load_ckpt_var(
+    ctx: &Ctx,
+    task: &TaskSpec,
+    arch: Architecture,
+    variant: AttnVariant,
+) -> Result<Params> {
+    let path = ctx.ckpt_path_var(task.name, arch, variant);
     checkpoint::load(&path).map_err(|_| {
         anyhow!(
             "missing checkpoint {} — run `repro {}` first",
             path.display(),
-            match arch {
-                Architecture::Bert => "finetune --all",
-                Architecture::Vit => "gen-artifacts",
+            match (arch, variant) {
+                (Architecture::Bert, AttnVariant::Vanilla) => "finetune --all",
+                _ => "gen-artifacts",
             }
         )
     })

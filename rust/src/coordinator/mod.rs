@@ -34,7 +34,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::data::{pixels_for_ids, task_spec, Batch, TaskKind, TaskSpec};
-use crate::model::manifest::{Architecture, ModelInfo};
+use crate::model::manifest::{family_prefix, model_name, Architecture, AttnVariant, ModelInfo};
 use crate::model::Params;
 use crate::runtime::{lit_f32, lit_i32, Runtime};
 use crate::util::pool::Pool;
@@ -127,20 +127,31 @@ pub fn example_input_lits(
 
 /// Artifact name of the batch-`b` forward executable for an architecture
 /// and head kind — the naming contract with `repro gen-artifacts`
-/// (`fwd_cls_b8`, `fwd_vit_cls_b8`, ...).
+/// (`fwd_cls_b8`, `fwd_vit_cls_b8`, ...). Vanilla-attention shorthand for
+/// [`fwd_artifact_var`].
 pub fn fwd_artifact(arch: Architecture, head: &str, b: usize) -> String {
-    match arch {
-        Architecture::Bert => format!("fwd_{head}_b{b}"),
-        Architecture::Vit => format!("fwd_vit_{head}_b{b}"),
-    }
+    fwd_artifact_var(arch, AttnVariant::Vanilla, head, b)
+}
+
+/// [`fwd_artifact`] for a specific attention variant: the family prefix
+/// covers both axes (`fwd_csoft_cls_b8`, `fwd_vit_gate_cls_b8`, ...).
+pub fn fwd_artifact_var(
+    arch: Architecture,
+    variant: AttnVariant,
+    head: &str,
+    b: usize,
+) -> String {
+    format!("fwd_{}{head}_b{b}", family_prefix(arch, variant))
 }
 
 /// Artifact name of the tapped diagnostic executable (batch 1).
 pub fn diag_artifact(arch: Architecture, head: &str) -> String {
-    match arch {
-        Architecture::Bert => format!("diag_{head}_b1"),
-        Architecture::Vit => format!("diag_vit_{head}_b1"),
-    }
+    diag_artifact_var(arch, AttnVariant::Vanilla, head)
+}
+
+/// [`diag_artifact`] for a specific attention variant.
+pub fn diag_artifact_var(arch: Architecture, variant: AttnVariant, head: &str) -> String {
+    format!("diag_{}{head}_b1", family_prefix(arch, variant))
 }
 
 /// Shared context for all pipeline stages.
@@ -190,13 +201,20 @@ impl Ctx {
     /// manifest naming contract with `repro gen-artifacts` ("base",
     /// "base_reg", "vit", "vit_reg").
     pub fn model_info_for(&self, task: &TaskSpec, arch: Architecture) -> Result<&ModelInfo> {
-        let name = match (arch, task.kind) {
-            (Architecture::Bert, TaskKind::Regression) => "base_reg",
-            (Architecture::Bert, _) => "base",
-            (Architecture::Vit, TaskKind::Regression) => "vit_reg",
-            (Architecture::Vit, _) => "vit",
-        };
-        self.rt.manifest().model(name)
+        self.model_info_var(task, arch, AttnVariant::Vanilla)
+    }
+
+    /// [`Ctx::model_info_for`] for a specific attention variant
+    /// ("bert_csoft", "vit_gate_reg", ... — see
+    /// [`crate::model::manifest::model_name`]).
+    pub fn model_info_var(
+        &self,
+        task: &TaskSpec,
+        arch: Architecture,
+        variant: AttnVariant,
+    ) -> Result<&ModelInfo> {
+        let regression = matches!(task.kind, TaskKind::Regression);
+        self.rt.manifest().model(&model_name(arch, variant, regression))
     }
 
     pub fn task(&self, name: &str) -> Result<TaskSpec> {
@@ -210,9 +228,18 @@ impl Ctx {
     /// Checkpoint path for a task in a given architecture family
     /// (`{task}.ckpt` / `vit_{task}.ckpt` — the gen-artifacts contract).
     pub fn ckpt_path_for(&self, task: &str, arch: Architecture) -> PathBuf {
-        match arch {
-            Architecture::Bert => self.ckpt_dir.join(format!("{task}.ckpt")),
-            Architecture::Vit => self.ckpt_dir.join(format!("vit_{task}.ckpt")),
-        }
+        self.ckpt_path_var(task, arch, AttnVariant::Vanilla)
+    }
+
+    /// [`Ctx::ckpt_path_for`] for a specific attention variant
+    /// (`csoft_{task}.ckpt`, `vit_gate_{task}.ckpt`, ...).
+    pub fn ckpt_path_var(
+        &self,
+        task: &str,
+        arch: Architecture,
+        variant: AttnVariant,
+    ) -> PathBuf {
+        self.ckpt_dir
+            .join(format!("{}{task}.ckpt", family_prefix(arch, variant)))
     }
 }

@@ -48,7 +48,7 @@ use super::experiments;
 use super::Ctx;
 use crate::data::TaskSpec;
 use crate::hlo::fixture;
-use crate::model::manifest::Architecture;
+use crate::model::manifest::{model_name, Architecture, AttnVariant};
 use crate::model::qconfig::{site_lane_params_pool, SiteCfg};
 use crate::model::Params;
 use crate::quant::estimators::{mse_search_pool, RangeTracker};
@@ -70,6 +70,9 @@ use crate::util::rng::Rng;
 pub struct SweepConfig {
     /// model family the cell runs against (task × architecture × config)
     pub arch: Architecture,
+    /// attention variant of that family (vanilla / clipped softmax /
+    /// gated — the outlier-suppressing model variants)
+    pub variant: AttnVariant,
     pub act_bits: u32,
     pub weight_bits: u32,
     pub granularity: Granularity,
@@ -99,13 +102,20 @@ impl SweepConfig {
             label.push('-');
             label.push_str(self.arch.name());
         }
+        // same rule for the variant axis: vanilla cells keep their
+        // pre-axis labels, variant cells get the short family tag
+        if self.variant != AttnVariant::Vanilla {
+            label.push('-');
+            label.push_str(self.variant.tag());
+        }
         label
     }
 
     /// The cell as a full [`QuantSpec`] on one task — this is what the
     /// runtime-backed pass executes and what `spec_id`-keyed resume and
     /// baseline diffs hash. BERT cells serialize without an architecture
-    /// key, so their spec_ids predate — and survive — the ViT axis.
+    /// key and vanilla cells without a variant key, so their spec_ids
+    /// predate — and survive — both axes.
     pub fn to_spec(&self, task: &str, seeds: usize) -> QuantSpec {
         let mut policy = PolicySpec::uniform(self.weight_bits, self.act_bits);
         policy.default_site.granularity = self.granularity.clone();
@@ -113,7 +123,8 @@ impl SweepConfig {
         policy.weights.estimator = self.estimator;
         let mut spec = QuantSpec::new(&self.label(), policy)
             .with_seeds(seeds.max(1))
-            .with_architecture(self.arch);
+            .with_architecture(self.arch)
+            .with_variant(self.variant);
         spec.calib.estimator = self.estimator;
         spec.tasks = vec![task.to_string()];
         spec
@@ -215,28 +226,48 @@ pub fn grid(
     estimators: &[Estimator],
     range_methods: &[RangeMethod],
 ) -> Result<Vec<SweepConfig>> {
+    grid_var(d, archs, &[AttnVariant::Vanilla], act_bits, weight_bits, groups, estimators, range_methods)
+}
+
+/// [`grid`] with the attention-variant axis exposed: `variants` nests
+/// just inside `archs`, so a vanilla-only grid keeps the exact cell
+/// order [`grid`] always produced.
+#[allow(clippy::too_many_arguments)]
+pub fn grid_var(
+    d: usize,
+    archs: &[Architecture],
+    variants: &[AttnVariant],
+    act_bits: &[u32],
+    weight_bits: &[u32],
+    groups: &[usize],
+    estimators: &[Estimator],
+    range_methods: &[RangeMethod],
+) -> Result<Vec<SweepConfig>> {
     let mut out = Vec::new();
     for &arch in archs {
-        for &ab in act_bits {
-            for &wb in weight_bits {
-                for &k in groups {
-                    let gran = granularity_for(d, k)?;
-                    for &est in estimators {
-                        for &rm in range_methods {
-                            if rm == RangeMethod::MseTensor && gran != Granularity::PerTensor {
-                                bail!(
-                                    "range method mse_tensor needs K=1 (per-tensor); \
-                                     use mse_group for K={k}"
-                                );
+        for &variant in variants {
+            for &ab in act_bits {
+                for &wb in weight_bits {
+                    for &k in groups {
+                        let gran = granularity_for(d, k)?;
+                        for &est in estimators {
+                            for &rm in range_methods {
+                                if rm == RangeMethod::MseTensor && gran != Granularity::PerTensor {
+                                    bail!(
+                                        "range method mse_tensor needs K=1 (per-tensor); \
+                                         use mse_group for K={k}"
+                                    );
+                                }
+                                out.push(SweepConfig {
+                                    arch,
+                                    variant,
+                                    act_bits: ab,
+                                    weight_bits: wb,
+                                    granularity: gran.clone(),
+                                    estimator: est,
+                                    range_method: rm,
+                                });
                             }
-                            out.push(SweepConfig {
-                                arch,
-                                act_bits: ab,
-                                weight_bits: wb,
-                                granularity: gran.clone(),
-                                estimator: est,
-                                range_method: rm,
-                            });
                         }
                     }
                 }
@@ -685,6 +716,23 @@ fn parse_archs(s: &str) -> Result<Vec<Architecture>> {
     Ok(out)
 }
 
+/// Parse `--variants vanilla,clipped_softmax,gated`. Sorted and deduped
+/// like the architecture axis so the grid order is spelling-independent.
+fn parse_variants(s: &str) -> Result<Vec<AttnVariant>> {
+    let mut out: Vec<AttnVariant> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(AttnVariant::parse)
+        .collect::<Result<_>>()?;
+    out.sort_unstable();
+    out.dedup();
+    if out.is_empty() {
+        bail!("--variants wants a list of attention variants (e.g. vanilla,clipped_softmax,gated)");
+    }
+    Ok(out)
+}
+
 /// `repro sweep` driver. Runs the offline substrate sweep (skipping
 /// configurations already in `results/sweep.json` by `spec_id` unless
 /// `--fresh`), adds runtime-backed dev scores when artifacts and a
@@ -700,6 +748,7 @@ fn parse_archs(s: &str) -> Result<Vec<Architecture>> {
 pub fn cmd_sweep(args: &Args) -> Result<()> {
     let d = args.get_usize("d", 128)?;
     let archs = parse_archs(args.get_or("arch", "bert"))?;
+    let variants = parse_variants(args.get_or("variants", "vanilla"))?;
     let act_bits = parse_u32_list(args.get_or("bits", "8,4"))?;
     let weight_bits = parse_u32_list(args.get_or("wbits", "8"))?;
     let groups = parse_usize_list(args.get_or("groups", "1,8"))?;
@@ -710,7 +759,16 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     let task_name = args.get_or("task", "mnli");
     let pool = if threads == 0 { Pool::global().clone() } else { Pool::new(threads) };
 
-    let full = grid(d, &archs, &act_bits, &weight_bits, &groups, &estimators, &range_methods)?;
+    let full = grid_var(
+        d,
+        &archs,
+        &variants,
+        &act_bits,
+        &weight_bits,
+        &groups,
+        &estimators,
+        &range_methods,
+    )?;
     if full.is_empty() {
         bail!("sweep grid is empty");
     }
@@ -827,38 +885,47 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
             )?
             .with_pool(pool.clone());
             let task = ctx.task(task_name)?;
-            // each architecture family evaluates against its own
-            // checkpoint; a family whose checkpoint is missing degrades
-            // that family's cells to offline metrics, not the whole sweep
+            // each (architecture, variant) family evaluates against its
+            // own checkpoint; a family whose checkpoint is missing
+            // degrades that family's cells to offline metrics, not the
+            // whole sweep
             for &arch in &archs {
-                let unscored_arch: Vec<usize> =
-                    unscored.iter().copied().filter(|&i| cfgs[i].arch == arch).collect();
-                if unscored_arch.is_empty() {
-                    continue;
-                }
-                match experiments::load_ckpt_arch(&ctx, &task, arch) {
-                    Ok(params) => {
-                        let unscored_cfgs: Vec<SweepConfig> =
-                            unscored_arch.iter().map(|&i| cfgs[i].clone()).collect();
-                        let scores =
-                            runtime_scores(&ctx, &task, &params, &unscored_cfgs, seeds, &pool);
-                        for (&slot, s) in unscored_arch.iter().zip(scores) {
-                            match s {
-                                Ok(v) => {
-                                    if let Some(r) = slots[slot].as_mut() {
-                                        r.score = Some(v);
+                for &variant in &variants {
+                    let unscored_fam: Vec<usize> = unscored
+                        .iter()
+                        .copied()
+                        .filter(|&i| cfgs[i].arch == arch && cfgs[i].variant == variant)
+                        .collect();
+                    if unscored_fam.is_empty() {
+                        continue;
+                    }
+                    match experiments::load_ckpt_var(&ctx, &task, arch, variant) {
+                        Ok(params) => {
+                            let unscored_cfgs: Vec<SweepConfig> =
+                                unscored_fam.iter().map(|&i| cfgs[i].clone()).collect();
+                            let scores =
+                                runtime_scores(&ctx, &task, &params, &unscored_cfgs, seeds, &pool);
+                            for (&slot, s) in unscored_fam.iter().zip(scores) {
+                                match s {
+                                    Ok(v) => {
+                                        if let Some(r) = slots[slot].as_mut() {
+                                            r.score = Some(v);
+                                        }
                                     }
-                                }
-                                Err(e) => {
-                                    println!(
-                                        "({}: runtime eval failed — {e})",
-                                        cfgs[slot].label()
-                                    )
+                                    Err(e) => {
+                                        println!(
+                                            "({}: runtime eval failed — {e})",
+                                            cfgs[slot].label()
+                                        )
+                                    }
                                 }
                             }
                         }
+                        Err(e) => println!(
+                            "({}: offline metrics only — {e})",
+                            model_name(arch, variant, false)
+                        ),
                     }
-                    Err(e) => println!("({}: offline metrics only — {e})", arch.name()),
                 }
             }
             let st = ctx.rt.stats();
@@ -1136,6 +1203,58 @@ mod tests {
     }
 
     #[test]
+    fn variant_axis_crosses_the_grid() {
+        let variants =
+            [AttnVariant::Vanilla, AttnVariant::ClippedSoftmax, AttnVariant::Gated];
+        let cfgs = grid_var(
+            128,
+            &[Architecture::Bert, Architecture::Vit],
+            &variants,
+            &[8],
+            &[8],
+            &[1],
+            &[Estimator::Mse],
+            &[RangeMethod::Auto],
+        )
+        .unwrap();
+        assert_eq!(cfgs.len(), 2 * 3);
+        // variant nests inside arch; vanilla cells keep pre-axis labels
+        assert_eq!(cfgs[0].label(), "a8w8-pt-mse");
+        assert_eq!(cfgs[1].label(), "a8w8-pt-mse-csoft");
+        assert_eq!(cfgs[2].label(), "a8w8-pt-mse-gate");
+        assert_eq!(cfgs[3].label(), "a8w8-pt-mse-vit");
+        assert_eq!(cfgs[4].label(), "a8w8-pt-mse-vit-csoft");
+        assert_eq!(cfgs[5].label(), "a8w8-pt-mse-vit-gate");
+        // the variant is part of the spec identity, and only when
+        // non-vanilla — vanilla cells keep their pre-axis spec_ids
+        let vanilla = cfgs[0].to_spec("mnli", 1);
+        let csoft = cfgs[1].to_spec("mnli", 1);
+        let gate = cfgs[2].to_spec("mnli", 1);
+        assert!(!vanilla.to_json().to_string().contains("variant"));
+        assert!(csoft.to_json().to_string().contains("\"variant\":\"clipped_softmax\""));
+        assert!(gate.to_json().to_string().contains("\"variant\":\"gated\""));
+        let ids = [vanilla.spec_id(), csoft.spec_id(), gate.spec_id()];
+        assert_ne!(ids[0], ids[1]);
+        assert_ne!(ids[0], ids[2]);
+        assert_ne!(ids[1], ids[2]);
+        // grid() is exactly the vanilla plane of grid_var()
+        let plain = grid(
+            128,
+            &[Architecture::Bert, Architecture::Vit],
+            &[8],
+            &[8],
+            &[1],
+            &[Estimator::Mse],
+            &[RangeMethod::Auto],
+        )
+        .unwrap();
+        assert_eq!(plain.len(), 2);
+        assert_eq!(plain[0].label(), cfgs[0].label());
+        assert_eq!(plain[1].label(), cfgs[3].label());
+        assert!(plain.iter().all(|c| c.variant == AttnVariant::Vanilla));
+    }
+
+    #[test]
     fn shards_partition_the_grid() {
         let cfgs = grid(
             128,
@@ -1342,6 +1461,7 @@ mod tests {
         // the exact QuantPolicy the pre-spec runtime pass built
         let cfg = SweepConfig {
             arch: Architecture::Bert,
+            variant: AttnVariant::Vanilla,
             act_bits: 4,
             weight_bits: 8,
             granularity: Granularity::PerEmbeddingGroup { k: 8, permute: true },

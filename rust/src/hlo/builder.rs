@@ -135,6 +135,11 @@ impl GraphBuilder {
         self.unary("tanh", a)
     }
 
+    /// Elementwise sigmoid (the HLO `logistic` opcode).
+    pub fn logistic(&mut self, a: &Op) -> Op {
+        self.unary("logistic", a)
+    }
+
     pub fn rsqrt(&mut self, a: &Op) -> Op {
         self.unary("rsqrt", a)
     }

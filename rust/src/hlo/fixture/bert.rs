@@ -27,6 +27,7 @@ pub fn base_config() -> FixtureConfig {
         n_out: 3,
         outlier_dims: vec![17, 89, 101],
         arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+        variant: crate::model::manifest::AttnVariant::Vanilla,
     }
 }
 

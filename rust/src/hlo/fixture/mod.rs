@@ -33,7 +33,9 @@ use super::builder::{GraphBuilder, Op};
 use super::DType;
 use crate::data::{TaskKind, TASKS};
 use crate::model::checkpoint;
-use crate::model::manifest::{ArchParams, Architecture, ModelConfig, ModelInfo, ParamSpec, SiteSpec};
+use crate::model::manifest::{
+    ArchParams, Architecture, AttnVariant, ModelConfig, ModelInfo, ParamSpec, SiteSpec,
+};
 use crate::model::Params;
 use crate::quant::{qdq_per_lane, QGrid, QParams};
 use crate::tensor::Tensor;
@@ -46,6 +48,14 @@ pub use vit::vit_config;
 
 /// Additive attention-mask bias (mirrors model.py MASK_BIAS).
 pub(crate) const MASK_BIAS: f32 = -30.0;
+
+/// Clipped-softmax stretch parameters (the follow-up paper's ζ/γ): the
+/// softmax output is mapped through `(ζ−γ)·p + γ` and clamped to [0,1],
+/// so attention probabilities within |γ| of the ends land on *exact* 0
+/// (a head attending to nothing) or exact 1 — the "do nothing" escape
+/// hatch that removes the outlier-generating incentive.
+pub const CSOFT_ZETA: f32 = 1.003;
+pub const CSOFT_GAMMA: f32 = -0.003;
 
 /// Architecture of the fixture model. `arch` selects the embedding
 /// frontend (and the per-architecture manifest fields); everything from
@@ -62,6 +72,8 @@ pub struct FixtureConfig {
     pub n_out: usize,
     pub outlier_dims: Vec<usize>,
     pub arch: ArchParams,
+    /// attention-block variant lowered by [`build_forward`]
+    pub variant: AttnVariant,
 }
 
 /// Ordered (name, shape) parameter signature: per-architecture embedding
@@ -83,6 +95,13 @@ pub fn param_spec(cfg: &FixtureConfig) -> Vec<(String, Vec<usize>)> {
         spec.push((format!("{p}k.b"), vec![d]));
         spec.push((format!("{p}v.w"), vec![d, d]));
         spec.push((format!("{p}v.b"), vec![d]));
+        if cfg.variant == AttnVariant::Gated {
+            // per-head gate projection G(x) = sigmoid(x @ gate.w + gate.b);
+            // tiny [d, heads] — kept fp32 and deliberately out of wq_spec,
+            // like the LayerNorm parameters
+            spec.push((format!("{p}gate.w"), vec![d, cfg.heads]));
+            spec.push((format!("{p}gate.b"), vec![cfg.heads]));
+        }
         spec.push((format!("{p}attn_out.w"), vec![d, d]));
         spec.push((format!("{p}attn_out.b"), vec![d]));
         spec.push((format!("{p}ln1.g"), vec![d]));
@@ -173,6 +192,7 @@ pub fn model_info(cfg: &FixtureConfig) -> ModelInfo {
             n_out: cfg.n_out,
             outlier_dims: cfg.outlier_dims.clone(),
             arch: cfg.arch.clone(),
+            variant: cfg.variant,
         },
         params: param_spec(cfg)
             .into_iter()
@@ -360,6 +380,21 @@ pub(crate) fn build_forward(
         let qh = heads(&mut g, &wq)?;
         let kh = heads(&mut g, &wk)?;
         let vh = heads(&mut g, &wv)?;
+        // gated attention: per-head sigmoid gate from the block input,
+        // G(x) = logistic(x @ gate.w + gate.b) with shape [b, t, h] —
+        // a head whose gate saturates at 0 contributes nothing, so it
+        // never needs the outlier trick to cancel itself
+        let gate = match cfg.variant {
+            AttnVariant::Gated => {
+                let gl = g.matmul_bias(
+                    &x,
+                    &p[&format!("{pf}gate.w")],
+                    &p[&format!("{pf}gate.b")],
+                )?;
+                Some(g.logistic(&gl))
+            }
+            _ => None,
+        };
         let scores = g.dot_general(&qh, &kh, &[0, 1], &[0, 1], &[3], &[3])?;
         let mut scores = g.scale(&scores, 1.0 / (dh as f32).sqrt())?;
         // BERT masks PAD positions; ViT attends over the full patch grid
@@ -368,8 +403,35 @@ pub(crate) fn build_forward(
         }
         let scores = q.apply(&mut g, &format!("{pf}attn_scores"), &scores)?;
         let probs = g.softmax(&scores)?;
+        // clipped softmax: stretch the softmax output to [γ, ζ] and clamp
+        // back to [0,1], so probabilities can hit exact 0/1 without the
+        // extreme score magnitudes the vanilla block needs (its outlier
+        // mechanism)
+        let probs = match cfg.variant {
+            AttnVariant::ClippedSoftmax => {
+                let st = g.scale(&probs, CSOFT_ZETA - CSOFT_GAMMA)?;
+                let st = g.offset(&st, CSOFT_GAMMA)?;
+                let dims = st.dims.clone();
+                let zero = g.const_f32(0.0);
+                let lo = g.splat(&zero, &dims)?;
+                let one = g.const_f32(1.0);
+                let hi = g.splat(&one, &dims)?;
+                g.clamp(&lo, &st, &hi)
+            }
+            _ => probs,
+        };
         let probs = q.apply(&mut g, &format!("{pf}attn_probs"), &probs)?;
         let ctx = g.dot_general(&probs, &vh, &[0, 1], &[0, 1], &[3], &[2])?;
+        // the gate multiplies the per-head context while it is still
+        // [b, h, t, dh], before heads merge back into the model dim
+        let ctx = match &gate {
+            Some(gate) => {
+                let gt = g.transpose(gate, &[0, 2, 1])?;
+                let gb = g.broadcast(&gt, &[b, h, t, dh], &[0, 1, 2])?;
+                g.mul(&ctx, &gb)?
+            }
+            None => ctx,
+        };
         let ctx = g.transpose(&ctx, &[0, 2, 1, 3])?;
         let ctx = g.reshape(&ctx, &[b, t, d])?;
         let ctx = q.apply(&mut g, &format!("{pf}attn_ctx"), &ctx)?;
@@ -537,6 +599,11 @@ fn model_json(info: &ModelInfo) -> Json {
             config_fields.push(("img", num(*img)));
         }
     }
+    // the "variant" key appears only for non-vanilla rows, so vanilla
+    // model rows serialise byte-for-byte as before the variant axis
+    if c.variant != AttnVariant::Vanilla {
+        config_fields.push(("variant", Json::Str(c.variant.name().to_string())));
+    }
     obj(vec![
         ("config", obj(config_fields)),
         (
@@ -609,6 +676,33 @@ fn golden_fake_quant() -> Result<Json> {
 // driver
 // ---------------------------------------------------------------------------
 
+/// Bake Fig. 2-style structured outliers into a vanilla checkpoint: the
+/// config's `outlier_dims` lanes of the *last* layer's FFN-output bias
+/// get large alternating-sign offsets — the deterministic stand-in for
+/// what outlier-prone finetuning produces (cf. `hlo/train_graph.rs`'s
+/// aux loss, which pulls exactly these lanes toward a large target).
+/// Every downstream residual tap (`ffn_out`, `res2_sum`) then carries a
+/// per-tensor range an order of magnitude above the typical lane, which
+/// is what plain per-tensor W8A8 breaks on and PEG / the outlier-free
+/// variants survive. Variant-family configs ship empty `outlier_dims`,
+/// so their checkpoints stay clean — the comparison endpoint.
+pub fn install_outliers(params: &mut Params, info: &ModelInfo) -> Result<()> {
+    if info.config.outlier_dims.is_empty() {
+        return Ok(());
+    }
+    let name = format!("layer{}.ffn2.b", info.config.layers - 1);
+    let t = params.get_mut(&name)?;
+    let data = t.data_mut();
+    for (j, &dim) in info.config.outlier_dims.iter().enumerate() {
+        if dim >= data.len() {
+            bail!("outlier dim {dim} out of range for {name} ({})", data.len());
+        }
+        let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+        data[dim] = sign * (16.0 + 4.0 * j as f32);
+    }
+    Ok(())
+}
+
 /// `repro gen-artifacts [--artifacts DIR] [--ckpt DIR] [--no-ckpt]`
 pub fn cmd_gen_artifacts(args: &Args) -> Result<()> {
     let out = args.get_or("artifacts", "artifacts");
@@ -630,6 +724,26 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
     let mut vit_reg = vit.clone();
     vit_reg.name = "vit_reg".to_string();
     vit_reg.n_out = 1;
+
+    // outlier-aware variant twins of each vanilla family: same topology,
+    // clipped-softmax / gated attention blocks, and *no* outlier dims —
+    // these rows are the clean endpoint `repro diag --outliers` and the
+    // sweep's variant axis compare the vanilla families against
+    let variant_of = |cfg: &FixtureConfig, variant: AttnVariant, regression: bool| {
+        let mut v = cfg.clone();
+        v.name = crate::model::manifest::model_name(cfg.arch.architecture(), variant, regression);
+        v.variant = variant;
+        v.outlier_dims = Vec::new();
+        v
+    };
+    let variant_cfgs: Vec<FixtureConfig> = [(&base, &reg), (&vit, &vit_reg)]
+        .into_iter()
+        .flat_map(|(cls, rg)| {
+            [AttnVariant::ClippedSoftmax, AttnVariant::Gated]
+                .into_iter()
+                .flat_map(move |v| [variant_of(cls, v, false), variant_of(rg, v, true)])
+        })
+        .collect();
 
     let mut jobs: Vec<(String, Artifact)> = Vec::new();
     for (head, cfg) in [("cls", &base), ("reg", &reg)] {
@@ -659,6 +773,18 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
             jobs.push((name.clone(), build_forward(cfg, b, false, &name)?));
         }
         let name = format!("diag_vit_{head}_b1");
+        jobs.push((name.clone(), build_forward(cfg, 1, true, &name)?));
+    }
+    // variant families: forward + diag per head (no train graphs — the
+    // QAT train-step builder lowers the vanilla attention block only)
+    for cfg in &variant_cfgs {
+        let head = if cfg.n_out == 1 { "reg" } else { "cls" };
+        let prefix = crate::model::manifest::family_prefix(cfg.arch.architecture(), cfg.variant);
+        for b in [1usize, 8] {
+            let name = format!("fwd_{prefix}{head}_b{b}");
+            jobs.push((name.clone(), build_forward(cfg, b, false, &name)?));
+        }
+        let name = format!("diag_{prefix}{head}_b1");
         jobs.push((name.clone(), build_forward(cfg, 1, true, &name)?));
     }
     // parity artifact: the fixture has one lowering, so the "pallas" twin
@@ -702,11 +828,15 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
     let reg_info = model_info(&reg);
     let vit_info = model_info(&vit);
     let vit_reg_info = model_info(&vit_reg);
+    let variant_infos: Vec<ModelInfo> = variant_cfgs.iter().map(model_info).collect();
     let mut models = BTreeMap::new();
     models.insert("base".to_string(), model_json(&base_info));
     models.insert("base_reg".to_string(), model_json(&reg_info));
     models.insert("vit".to_string(), model_json(&vit_info));
     models.insert("vit_reg".to_string(), model_json(&vit_reg_info));
+    for info in &variant_infos {
+        models.insert(info.config.name.clone(), model_json(info));
+    }
 
     let manifest = obj(vec![
         ("artifacts", Json::Obj(artifacts)),
@@ -717,23 +847,40 @@ pub fn generate(out_dir: &Path, ckpt_dir: Option<&Path>) -> Result<()> {
     println!("wrote manifest with {} artifacts to {}", jobs.len(), out_dir.display());
 
     if let Some(dir) = ckpt_dir {
-        for (i, task) in TASKS.iter().enumerate() {
-            let info = match task.kind {
-                TaskKind::Regression => &reg_info,
-                TaskKind::Classification(_) => &base_info,
-            };
-            let params = Params::init(info, 1000 + i as u64);
-            checkpoint::save(&params, dir.join(format!("{}.ckpt", task.name)))?;
-            // ViT twin checkpoint for the same task, distinct seed so the
-            // two families never share weights by accident
-            let vinfo = match task.kind {
-                TaskKind::Regression => &vit_reg_info,
-                TaskKind::Classification(_) => &vit_info,
-            };
-            let vparams = Params::init(vinfo, 2000 + i as u64);
-            checkpoint::save(&vparams, dir.join(format!("vit_{}.ckpt", task.name)))?;
+        // every family (arch × variant) gets a per-task checkpoint from a
+        // distinct seed base so families never share weights by accident;
+        // vanilla checkpoints additionally get the structured outliers
+        // baked in (see install_outliers) — the trained endpoint the
+        // variants are compared against
+        let families: Vec<(&ModelInfo, &ModelInfo, String, u64)> = {
+            let mut f = vec![
+                (&base_info, &reg_info, String::new(), 1000u64),
+                (&vit_info, &vit_reg_info, "vit_".to_string(), 2000),
+            ];
+            for (k, pair) in variant_infos.chunks(2).enumerate() {
+                let (cls, rg) = (&pair[0], &pair[1]);
+                let prefix = crate::model::manifest::family_prefix(
+                    cls.config.architecture(),
+                    cls.config.variant,
+                );
+                f.push((cls, rg, prefix, 3000 + 1000 * k as u64));
+            }
+            f
+        };
+        let mut n_ckpts = 0usize;
+        for (cls_info, reg_info, prefix, seed_base) in &families {
+            for (i, task) in TASKS.iter().enumerate() {
+                let info = match task.kind {
+                    TaskKind::Regression => reg_info,
+                    TaskKind::Classification(_) => cls_info,
+                };
+                let mut params = Params::init(info, seed_base + i as u64);
+                install_outliers(&mut params, info)?;
+                checkpoint::save(&params, dir.join(format!("{prefix}{}.ckpt", task.name)))?;
+                n_ckpts += 1;
+            }
         }
-        println!("wrote {} fixture checkpoints to {}", 2 * TASKS.len(), dir.display());
+        println!("wrote {n_ckpts} fixture checkpoints to {}", dir.display());
     }
     Ok(())
 }
@@ -757,6 +904,7 @@ mod tests {
             n_out: 3,
             outlier_dims: vec![1],
             arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+            variant: AttnVariant::Vanilla,
         }
     }
 
@@ -773,6 +921,7 @@ mod tests {
             n_out: 3,
             outlier_dims: vec![1],
             arch: ArchParams::Vit { patch: 2, img: 4 },
+            variant: AttnVariant::Vanilla,
         }
     }
 
@@ -992,6 +1141,44 @@ mod tests {
         let vit = manifest.model("vit").unwrap();
         assert_eq!(vit.config.architecture(), Architecture::Vit);
         assert_eq!(manifest.model("vit_reg").unwrap().config.n_out, 1);
+        // variant families: forward + diag per head, for both
+        // architectures, plus their model rows tagged with the variant
+        for prefix in ["csoft_", "gate_", "vit_csoft_", "vit_gate_"] {
+            for name in [
+                format!("fwd_{prefix}cls_b1"),
+                format!("fwd_{prefix}cls_b8"),
+                format!("diag_{prefix}cls_b1"),
+                format!("fwd_{prefix}reg_b8"),
+                format!("diag_{prefix}reg_b1"),
+            ] {
+                assert!(manifest.artifact(&name).is_ok(), "{name}");
+            }
+        }
+        for (model, variant) in [
+            ("bert_csoft", AttnVariant::ClippedSoftmax),
+            ("bert_gate", AttnVariant::Gated),
+            ("vit_csoft", AttnVariant::ClippedSoftmax),
+            ("vit_gate", AttnVariant::Gated),
+        ] {
+            let info = manifest.model(model).unwrap();
+            assert_eq!(info.config.variant, variant, "{model}");
+            // the clean comparison endpoint: no installed outlier lanes
+            assert!(info.config.outlier_dims.is_empty(), "{model}");
+            let reg = manifest.model(&format!("{model}_reg")).unwrap();
+            assert_eq!(reg.config.n_out, 1, "{model}_reg");
+            assert_eq!(reg.config.variant, variant, "{model}_reg");
+        }
+        // the gated families carry the extra gate parameters; vanilla and
+        // clipped-softmax share the vanilla parameter inventory
+        let n_base = manifest.model("base").unwrap().params.len();
+        assert_eq!(manifest.model("bert_csoft").unwrap().params.len(), n_base);
+        assert!(manifest.model("bert_gate").unwrap().params.len() > n_base);
+        assert!(manifest
+            .model("bert_gate")
+            .unwrap()
+            .params
+            .iter()
+            .any(|p| p.name.contains("gate")));
         assert!(manifest.golden_fake_quant.is_some());
         // golden gate: every artifact file parses AND passes the static
         // verifier — gen-artifacts must never ship a module the runtime's

@@ -32,6 +32,7 @@ pub fn vit_config() -> FixtureConfig {
         n_out: 3,
         outlier_dims: vec![17, 89, 101],
         arch: ArchParams::Vit { patch: 4, img: 16 },
+        variant: crate::model::manifest::AttnVariant::Vanilla,
     }
 }
 

@@ -200,8 +200,8 @@ fn eval_inst(
             let b = operand(comp, env, inst, 1)?;
             binary(op, a, b)
         }
-        "exp" | "exponential" | "tanh" | "rsqrt" | "sqrt" | "log" | "negate" | "abs"
-        | "floor" | "ceil" | "round-nearest-afz" => {
+        "exp" | "exponential" | "tanh" | "logistic" | "rsqrt" | "sqrt" | "log" | "negate"
+        | "abs" | "floor" | "ceil" | "round-nearest-afz" => {
             let x = operand(comp, env, inst, 0)?;
             unary(op, x)
         }
@@ -565,6 +565,7 @@ impl BinOp {
 pub(crate) enum UnOp {
     Exp,
     Tanh,
+    Logistic,
     Rsqrt,
     Sqrt,
     Log,
@@ -580,6 +581,7 @@ impl UnOp {
         Some(match op {
             "exp" | "exponential" => UnOp::Exp,
             "tanh" => UnOp::Tanh,
+            "logistic" => UnOp::Logistic,
             "rsqrt" => UnOp::Rsqrt,
             "sqrt" => UnOp::Sqrt,
             "log" => UnOp::Log,
@@ -597,6 +599,16 @@ impl UnOp {
         match self {
             UnOp::Exp => v.exp(),
             UnOp::Tanh => v.tanh(),
+            // numerically stable two-branch sigmoid: never exponentiates a
+            // large positive argument, so +inf -> 1, -inf -> 0, NaN -> NaN
+            UnOp::Logistic => {
+                if v >= 0.0 {
+                    1.0 / (1.0 + (-v).exp())
+                } else {
+                    let e = v.exp();
+                    e / (1.0 + e)
+                }
+            }
             UnOp::Rsqrt => 1.0 / v.sqrt(),
             UnOp::Sqrt => v.sqrt(),
             UnOp::Log => v.ln(),

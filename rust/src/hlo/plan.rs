@@ -518,8 +518,8 @@ impl Builder<'_> {
                     f32_full(ops[1])?,
                 ))
             }
-            "exp" | "exponential" | "tanh" | "rsqrt" | "sqrt" | "log" | "negate" | "abs"
-            | "floor" | "ceil" | "round-nearest-afz"
+            "exp" | "exponential" | "tanh" | "logistic" | "rsqrt" | "sqrt" | "log" | "negate"
+            | "abs" | "floor" | "ceil" | "round-nearest-afz"
                 if odt == DType::F32 && ops.len() == 1 =>
             {
                 Some(MKind::Un(UnOp::parse(&inst.opcode)?, f32_full(ops[0])?))
@@ -727,8 +727,8 @@ impl Builder<'_> {
                 need(2)?;
                 OpStep::Binary { op: inst.opcode.clone() }
             }
-            "exp" | "exponential" | "tanh" | "rsqrt" | "sqrt" | "log" | "negate" | "abs"
-            | "floor" | "ceil" | "round-nearest-afz" => {
+            "exp" | "exponential" | "tanh" | "logistic" | "rsqrt" | "sqrt" | "log" | "negate"
+            | "abs" | "floor" | "ceil" | "round-nearest-afz" => {
                 need(1)?;
                 OpStep::Unary { op: inst.opcode.clone() }
             }
@@ -1275,6 +1275,84 @@ mod tests {
         let naive = interp::dot_general(&a1, &b1, &[], &[], &[1], &[0]).unwrap();
         let fast = interp::dot_general_fast(&a1, &b1, &[], &[], &[1], &[0]).unwrap();
         assert_bits_eq(&[naive], &[fast]);
+    }
+
+    #[test]
+    fn logistic_matches_naive_incl_extremes() {
+        // the gated-attention sigmoid: both engines share the stable
+        // two-branch kernel, so agreement must be bitwise — including the
+        // saturating tails, signed zero, NaN and ±inf
+        let params = &["%x = f32[10] parameter(0)"];
+        let body = &["ROOT %g = f32[10] logistic(f32[10] %x)"];
+        let x = [
+            f32::NEG_INFINITY,
+            -100.0,
+            -1.0,
+            -0.0,
+            0.0,
+            1.0,
+            100.0,
+            f32::INFINITY,
+            f32::NAN,
+            0.5,
+        ];
+        let out = run_both(params, body, &[f32v(&[10], &x)]).unwrap();
+        let g = out[0].f32s().unwrap();
+        assert_eq!(g[0], 0.0, "logistic(-inf)");
+        assert_eq!(g[7], 1.0, "logistic(+inf)");
+        assert!(g[8].is_nan(), "logistic(NaN)");
+        assert_eq!(g[3], 0.5, "logistic(0)");
+        assert_eq!(g[4], 0.5);
+        // strictly inside (0,1) and monotone on the finite ramp
+        assert!(g[1] > 0.0 && g[1] < g[2] && g[2] < g[3] && g[5] < g[6] && g[6] <= 1.0);
+        // random sweep through the fused-kernel path too
+        let params = &["%x = f32[64] parameter(0)", "%y = f32[64] parameter(1)"];
+        let body = &[
+            "%g = f32[64] logistic(f32[64] %x)",
+            "ROOT %o = f32[64] multiply(f32[64] %g, f32[64] %y)",
+        ];
+        run_both(params, body, &[f32v(&[64], &lcg(64, 31)), f32v(&[64], &lcg(64, 32))])
+            .unwrap();
+    }
+
+    #[test]
+    fn clipped_softmax_clamp_fragment_matches_naive() {
+        // the clipped-softmax epilogue exactly as the fixture lowers it:
+        // clamp(0, (zeta-gamma)*p + gamma, 1) with zeta=1.003,
+        // gamma=-0.003 — probabilities below ~0.003/1.006 clip to exactly
+        // 0, above ~1.003/1.006 to exactly 1
+        let params = &["%p = f32[8] parameter(0)"];
+        let body = &[
+            "%sc = f32[] constant(1.006)",
+            "%scb = f32[8] broadcast(f32[] %sc), dimensions={}",
+            "%m = f32[8] multiply(f32[8] %p, f32[8] %scb)",
+            "%ga = f32[] constant(-0.003)",
+            "%gab = f32[8] broadcast(f32[] %ga), dimensions={}",
+            "%sh = f32[8] add(f32[8] %m, f32[8] %gab)",
+            "%lo = f32[] constant(0)",
+            "%hi = f32[] constant(1)",
+            "ROOT %c = f32[8] clamp(f32[] %lo, f32[8] %sh, f32[] %hi)",
+        ];
+        let p = [0.0, 0.001, 0.01, 0.5, 0.99, 0.999, 1.0, 0.25];
+        let out = run_both(params, body, &[f32v(&[8], &p)]).unwrap();
+        let c = out[0].f32s().unwrap();
+        assert_eq!(c[0], 0.0, "p=0 clips to exactly 0");
+        assert_eq!(c[1], 0.0, "p below gamma crossover clips to 0");
+        assert_eq!(c[6], 1.0, "p=1 clips to exactly 1");
+        assert_eq!(c[5], 1.0, "p above zeta crossover clips to 1");
+        assert!(c[3] > 0.0 && c[3] < 1.0, "mid prob stays strict interior");
+        for (i, v) in c.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "clamp range violated at {i}: {v}");
+        }
+        // NaN / ±inf through the same clamp path: the engines must agree
+        // bitwise on whatever the propagation semantics produce
+        let weird = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.0, 2.0, 0.5, -0.0, 1.0];
+        let out = run_both(params, body, &[f32v(&[8], &weird)]).unwrap();
+        let c = out[0].f32s().unwrap();
+        assert_eq!(c[1], 1.0, "+inf clips to 1");
+        assert_eq!(c[2], 0.0, "-inf clips to 0");
+        assert_eq!(c[3], 0.0, "below-range input clips to 0");
+        assert_eq!(c[4], 1.0, "above-range input clips to 1");
     }
 
     #[test]

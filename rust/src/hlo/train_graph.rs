@@ -973,6 +973,7 @@ mod tests {
             n_out: 3,
             outlier_dims: vec![1],
             arch: crate::model::manifest::ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+            variant: crate::model::manifest::AttnVariant::Vanilla,
         }
     }
 

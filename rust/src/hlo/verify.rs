@@ -186,6 +186,7 @@ const UNARY_OPS: &[&str] = &[
     "exp",
     "exponential",
     "tanh",
+    "logistic",
     "rsqrt",
     "sqrt",
     "log",
@@ -846,6 +847,52 @@ mod tests {
         // constant literal count must match the shape
         reject(&[], &["ROOT %c = f32[3] constant({1, 2})"], "TQ106");
         accept(&[], &["ROOT %c = f32[2] constant({1, 2})"]);
+    }
+
+    #[test]
+    fn attention_variant_fragments_accept_reject() {
+        // the gated-attention epilogue: sigmoid gate broadcast over the
+        // per-head context, elementwise product
+        accept(
+            &["%l = f32[2,4] parameter(0)", "%ctx = f32[2,4,8] parameter(1)"],
+            &[
+                "%g = f32[2,4] logistic(f32[2,4] %l)",
+                "%gb = f32[2,4,8] broadcast(f32[2,4] %g), dimensions={0,1}",
+                "ROOT %o = f32[2,4,8] multiply(f32[2,4,8] %ctx, f32[2,4,8] %gb)",
+            ],
+        );
+        // the clipped-softmax epilogue: affine stretch then clamp to [0,1]
+        accept(
+            &["%p = f32[2,4] parameter(0)"],
+            &[
+                "%sc = f32[] constant(1.006)",
+                "%scb = f32[2,4] broadcast(f32[] %sc), dimensions={}",
+                "%m = f32[2,4] multiply(f32[2,4] %p, f32[2,4] %scb)",
+                "%ga = f32[] constant(-0.003)",
+                "%gab = f32[2,4] broadcast(f32[] %ga), dimensions={}",
+                "%sh = f32[2,4] add(f32[2,4] %m, f32[2,4] %gab)",
+                "%lo = f32[] constant(0)",
+                "%hi = f32[] constant(1)",
+                "ROOT %c = f32[2,4] clamp(f32[] %lo, f32[2,4] %sh, f32[] %hi)",
+            ],
+        );
+        // logistic is real-valued only: s32 gate logits are malformed
+        reject(
+            &["%l = s32[2,4] parameter(0)"],
+            &["ROOT %g = s32[2,4] logistic(s32[2,4] %l)"],
+            "TQ107",
+        );
+        // a gate whose broadcast drops the head axis cannot multiply into
+        // the [b,h,t,dh] context
+        reject(
+            &["%l = f32[2,4] parameter(0)", "%ctx = f32[2,4,8] parameter(1)"],
+            &[
+                "%g = f32[2,4] logistic(f32[2,4] %l)",
+                "%gb = f32[2,4,4] broadcast(f32[2,4] %g), dimensions={0,1}",
+                "ROOT %o = f32[2,4,8] multiply(f32[2,4,8] %ctx, f32[2,4,4] %gb)",
+            ],
+            "TQ106",
+        );
     }
 
     #[test]

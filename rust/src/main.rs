@@ -12,12 +12,20 @@
 //!                                    name the paper's configurations;
 //!                                    --explain prints the resolved
 //!                                    per-site policy without running)
+//!     repro diag --outliers [--task NAME] [--seqs N] [--arch bert,vit]
+//!                 [--variants vanilla,clipped_softmax,gated] [--json]
+//!                                    (per-site activation outlier stats —
+//!                                    inf-norm / kurtosis / top-lane share —
+//!                                    comparing the vanilla model against
+//!                                    the clipped-softmax and gated-attention
+//!                                    variants; see analysis::outliers)
 //!     repro smoke                    (runtime sanity: load + run artifacts)
 //!     repro gen-artifacts [--no-ckpt]
 //!                                    (emit the fixture artifacts/ + init
 //!                                    checkpoints so every runtime surface
 //!                                    works in-container — see hlo::fixture)
-//!     repro sweep [--arch bert,vit] [--bits 8,4] [--wbits 8] [--groups 1,8]
+//!     repro sweep [--arch bert,vit] [--variants vanilla,clipped_softmax,gated]
+//!                 [--bits 8,4] [--wbits 8] [--groups 1,8]
 //!                 [--range-methods auto,mse_group] [--threads N]
 //!                 [--shard i/n | --merge n]
 //!                 [--fresh] [--compare baseline.json]
@@ -127,6 +135,7 @@ fn main() -> Result<()> {
         "fig6" => experiments::fig6(&ctx, &opts)?,
         "fig9" => experiments::fig9(&ctx, &opts)?,
         "hparams" => experiments::hparams(&ctx)?,
+        "diag" => tq::analysis::cmd_diag(&ctx, &args)?,
         "eval" => cmd_eval(&ctx, &args, &opts)?,
         "smoke" => cmd_smoke(&ctx)?,
         other => {
@@ -384,10 +393,13 @@ fn print_help() {
          subcommands:\n  finetune [--tasks a,b] [--epochs N] [--lr F]\n  \
          table1 table2 table4 table5 table6 table7 [--detailed] table12\n  \
          fig2 fig5 fig6 fig9  hparams\n  eval --task NAME\n  \
+         diag --outliers [--task NAME] [--seqs N] [--arch bert,vit] \
+         [--variants vanilla,clipped_softmax,gated] [--json]\n  \
          run --spec FILE.json | --preset NAME [--tasks a,b] [--seeds N] \
          [--dump-spec] [--explain]\n  smoke\n  gen-artifacts [--no-ckpt]\n  \
          lint [--spec FILE.json | --preset NAME] [--json]\n  \
-         sweep [--arch bert,vit] [--bits 8,4] [--wbits 8] [--groups 1,8] \
+         sweep [--arch bert,vit] [--variants vanilla,clipped_softmax,gated] \
+         [--bits 8,4] [--wbits 8] [--groups 1,8] \
          [--estimators current,mse] [--range-methods auto,mse_group] \
          [--threads N] [--task NAME] [--seeds N] [--shard i/n | --merge n] \
          [--fresh] [--compare baseline.json] [--tolerance PTS]\n  \

@@ -83,6 +83,84 @@ impl Architecture {
     }
 }
 
+/// Attention-block variant within an architecture family. The follow-up
+/// paper's outlier-free designs are graph-level changes to the attention
+/// block, orthogonal to the frontend (`Architecture`): clipped softmax
+/// stretches the probabilities to `(ζ−γ)·softmax(x)+γ` and clamps to
+/// [0,1] so heads can emit exact zeros; gated attention multiplies the
+/// per-head context by a learned sigmoid gate `G(x)` so heads can switch
+/// themselves off. `Vanilla` is the absent-tag default everywhere
+/// (manifests, specs), keeping pre-variant artifacts and spec_ids stable.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AttnVariant {
+    #[default]
+    Vanilla,
+    ClippedSoftmax,
+    Gated,
+}
+
+impl AttnVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttnVariant::Vanilla => "vanilla",
+            AttnVariant::ClippedSoftmax => "clipped_softmax",
+            AttnVariant::Gated => "gated",
+        }
+    }
+
+    /// Short tag used in artifact / model / checkpoint names (empty for
+    /// vanilla, whose names predate the variant axis).
+    pub fn tag(self) -> &'static str {
+        match self {
+            AttnVariant::Vanilla => "",
+            AttnVariant::ClippedSoftmax => "csoft",
+            AttnVariant::Gated => "gate",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AttnVariant> {
+        match s {
+            "vanilla" => Ok(AttnVariant::Vanilla),
+            "clipped_softmax" => Ok(AttnVariant::ClippedSoftmax),
+            "gated" => Ok(AttnVariant::Gated),
+            other => Err(anyhow!(
+                "unknown attention variant {other:?} (vanilla|clipped_softmax|gated)"
+            )),
+        }
+    }
+}
+
+/// Family prefix used inside artifact and checkpoint names
+/// (`fwd_{prefix}{head}_b{n}`, `{prefix}{task}.ckpt`). BERT-vanilla names
+/// predate both axes and stay unprefixed; ViT keeps its `vit_` prefix;
+/// variant families append their tag.
+pub fn family_prefix(arch: Architecture, variant: AttnVariant) -> String {
+    let tag = variant.tag();
+    match (arch, tag.is_empty()) {
+        (Architecture::Bert, true) => String::new(),
+        (Architecture::Bert, false) => format!("{tag}_"),
+        (Architecture::Vit, true) => "vit_".to_string(),
+        (Architecture::Vit, false) => format!("vit_{tag}_"),
+    }
+}
+
+/// Manifest model-row name for a family. Vanilla rows keep their legacy
+/// names ("base"/"base_reg", "vit"/"vit_reg"); variant rows are
+/// "bert_csoft", "vit_gate_reg", etc.
+pub fn model_name(arch: Architecture, variant: AttnVariant, regression: bool) -> String {
+    let stem = match (arch, variant) {
+        (Architecture::Bert, AttnVariant::Vanilla) => "base".to_string(),
+        (Architecture::Vit, AttnVariant::Vanilla) => "vit".to_string(),
+        (Architecture::Bert, v) => format!("bert_{}", v.tag()),
+        (Architecture::Vit, v) => format!("vit_{}", v.tag()),
+    };
+    if regression {
+        format!("{stem}_reg")
+    } else {
+        stem
+    }
+}
+
 /// Architecture-specific model descriptor fields. BERT models carry the
 /// special token ids its input/diagnostic paths key on; ViT models carry
 /// the patch geometry (`seq = (img/patch)^2`, patch vectors of length
@@ -149,6 +227,9 @@ pub struct ModelConfig {
     pub n_out: usize,
     pub outlier_dims: Vec<usize>,
     pub arch: ArchParams,
+    /// attention-block variant; `Vanilla` when the manifest carries no
+    /// "variant" key (pre-variant manifests stay loadable unchanged)
+    pub variant: AttnVariant,
 }
 
 impl ModelConfig {
@@ -296,6 +377,11 @@ fn parse_model(m: &Json) -> Result<ModelInfo> {
             img: c.get("img")?.as_usize()?,
         },
     };
+    // "variant" is optional like "architecture": absent reads as vanilla
+    let variant = match c.opt("variant") {
+        Some(v) => AttnVariant::parse(v.as_str()?)?,
+        None => AttnVariant::Vanilla,
+    };
     let config = ModelConfig {
         name: c.get("name")?.as_str()?.to_string(),
         vocab: c.get("vocab")?.as_usize()?,
@@ -307,6 +393,7 @@ fn parse_model(m: &Json) -> Result<ModelInfo> {
         n_out: c.get("n_out")?.as_usize()?,
         outlier_dims: c.get("outlier_dims")?.as_usize_vec()?,
         arch,
+        variant,
     };
     let params = m
         .get("params")?
@@ -372,6 +459,7 @@ pub mod tests {
                 n_out: 3,
                 outlier_dims: vec![1],
                 arch: ArchParams::Bert { pad_id: 0, cls_id: 1, sep_id: 2 },
+                variant: AttnVariant::Vanilla,
             },
             params: vec![
                 ParamSpec { name: "embed.tok".into(), shape: vec![16, d] },
@@ -413,6 +501,8 @@ pub mod tests {
         assert_eq!(info.site("embed_sum").unwrap().channels, 8);
         // no "architecture" key: pre-discriminant manifests default to BERT
         assert_eq!(info.config.architecture(), Architecture::Bert);
+        // no "variant" key: pre-variant manifests default to vanilla
+        assert_eq!(info.config.variant, AttnVariant::Vanilla);
         assert_eq!(info.config.arch.sep_id(), Some(2));
         assert_eq!(info.config.arch.patch(), None);
         assert!(m.golden_fake_quant.is_some());
@@ -443,6 +533,54 @@ pub mod tests {
         assert_eq!(info.config.seq, (16 / 4) * (16 / 4));
         // an unknown architecture name is an error, not a silent default
         assert!(Architecture::parse("rnn").is_err());
+    }
+
+    #[test]
+    fn parses_attention_variant() {
+        let model = |variant_line: &str| {
+            format!(
+                r#"{{
+              "artifacts": {{}},
+              "models": {{"m": {{
+                "config": {{"name": "m", "vocab": 16, "d": 8, "heads": 2,
+                           "layers": 1, "d_ff": 16, "seq": 8, "n_out": 3,
+                           "outlier_dims": [], "pad_id": 0, "cls_id": 1,
+                           "sep_id": 2{variant_line}}},
+                "params": [], "sites": [], "total_scale_lanes": 0,
+                "wq": []}}}}
+            }}"#
+            )
+        };
+        let parse = |line: &str| {
+            Manifest::parse(&model(line), PathBuf::from("/tmp/a"))
+                .map(|m| m.model("m").unwrap().config.variant)
+        };
+        assert_eq!(parse("").unwrap(), AttnVariant::Vanilla);
+        assert_eq!(parse(r#", "variant": "vanilla""#).unwrap(), AttnVariant::Vanilla);
+        assert_eq!(
+            parse(r#", "variant": "clipped_softmax""#).unwrap(),
+            AttnVariant::ClippedSoftmax
+        );
+        assert_eq!(parse(r#", "variant": "gated""#).unwrap(), AttnVariant::Gated);
+        // typo'd tags are an error, not a silent vanilla
+        assert!(parse(r#", "variant": "clipped""#).is_err());
+        // name <-> parse round trip, and the tag contract names are stable
+        for v in [AttnVariant::Vanilla, AttnVariant::ClippedSoftmax, AttnVariant::Gated] {
+            assert_eq!(AttnVariant::parse(v.name()).unwrap(), v);
+        }
+        assert_eq!(AttnVariant::Vanilla.tag(), "");
+        assert_eq!(AttnVariant::ClippedSoftmax.tag(), "csoft");
+        assert_eq!(AttnVariant::Gated.tag(), "gate");
+        // naming contracts: vanilla families keep their legacy names
+        assert_eq!(family_prefix(Architecture::Bert, AttnVariant::Vanilla), "");
+        assert_eq!(family_prefix(Architecture::Bert, AttnVariant::Gated), "gate_");
+        assert_eq!(family_prefix(Architecture::Vit, AttnVariant::Vanilla), "vit_");
+        assert_eq!(family_prefix(Architecture::Vit, AttnVariant::ClippedSoftmax), "vit_csoft_");
+        assert_eq!(model_name(Architecture::Bert, AttnVariant::Vanilla, false), "base");
+        assert_eq!(model_name(Architecture::Bert, AttnVariant::Vanilla, true), "base_reg");
+        assert_eq!(model_name(Architecture::Vit, AttnVariant::Vanilla, false), "vit");
+        assert_eq!(model_name(Architecture::Bert, AttnVariant::ClippedSoftmax, false), "bert_csoft");
+        assert_eq!(model_name(Architecture::Vit, AttnVariant::Gated, true), "vit_gate_reg");
     }
 
     #[test]

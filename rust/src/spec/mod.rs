@@ -29,7 +29,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::model::manifest::{Architecture, ModelInfo};
+use crate::model::manifest::{Architecture, AttnVariant, ModelInfo};
 use crate::model::qconfig::{QuantPolicy, SiteCfg, WeightCfg};
 use crate::quant::{Estimator, Granularity, RangeMethod};
 use crate::util::json::{obj, Json};
@@ -285,6 +285,11 @@ pub struct QuantSpec {
     /// model/artifact/checkpoint family); serialized only when non-BERT
     /// so pre-existing specs keep their `spec_id`
     pub architecture: Architecture,
+    /// attention-block variant the spec targets (vanilla, clipped
+    /// softmax, gated — the outlier-suppressing model variants);
+    /// serialized only when non-vanilla so pre-existing specs keep their
+    /// `spec_id`
+    pub variant: AttnVariant,
     /// QAT settings; `None` (omitted in JSON) = plain PTQ
     pub qat: Option<QatSpec>,
 }
@@ -299,6 +304,7 @@ impl QuantSpec {
             seeds: 3,
             tasks: Vec::new(),
             architecture: Architecture::Bert,
+            variant: AttnVariant::Vanilla,
             qat: None,
         }
     }
@@ -339,6 +345,12 @@ impl QuantSpec {
     /// Target a non-default architecture family.
     pub fn with_architecture(mut self, arch: Architecture) -> QuantSpec {
         self.architecture = arch;
+        self
+    }
+
+    /// Target a non-default attention variant family.
+    pub fn with_variant(mut self, variant: AttnVariant) -> QuantSpec {
+        self.variant = variant;
         self
     }
 
@@ -393,15 +405,19 @@ impl QuantSpec {
                 Json::Arr(self.tasks.iter().map(|t| Json::Str(t.clone())).collect()),
             ),
         ];
-        // both fields follow the range_method omission rule: the default
-        // (BERT, no QAT) serializes with NO key, so every pre-existing
-        // spec is byte-identical to what older code wrote and its spec_id
-        // (which keys resumable sweeps and --compare baselines) is stable
+        // all three fields follow the range_method omission rule: the
+        // default (BERT, vanilla attention, no QAT) serializes with NO
+        // key, so every pre-existing spec is byte-identical to what older
+        // code wrote and its spec_id (which keys resumable sweeps and
+        // --compare baselines) is stable
         if self.architecture != Architecture::Bert {
             fields.push((
                 "architecture",
                 Json::Str(self.architecture.name().to_string()),
             ));
+        }
+        if self.variant != AttnVariant::Vanilla {
+            fields.push(("variant", Json::Str(self.variant.name().to_string())));
         }
         if let Some(q) = &self.qat {
             fields.push(("qat", qat_to_json(q)));
@@ -431,6 +447,11 @@ impl QuantSpec {
             architecture: match j.opt("architecture") {
                 Some(v) => Architecture::parse(v.as_str()?)?,
                 None => Architecture::Bert,
+            },
+            // absent in specs written before the variant axis existed
+            variant: match j.opt("variant") {
+                Some(v) => AttnVariant::parse(v.as_str()?)?,
+                None => AttnVariant::Vanilla,
             },
             qat: match j.opt("qat") {
                 Some(v) => Some(qat_from_json(v)?),
@@ -963,6 +984,50 @@ mod tests {
         // malformed values are rejected
         assert!(Architecture::parse("rnn").is_err());
         let bad = j.replace("\"weight_bits\":8", "\"weight_bits\":64");
+        assert!(QuantSpec::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn variant_codec_roundtrip_and_back_compat() {
+        // vanilla (the default) serializes with NO "variant" key, so every
+        // spec written before the variant axis existed is byte-identical
+        // to what current code writes — its spec_id must not churn
+        let plain = QuantSpec::new("w8a8", PolicySpec::uniform(8, 8));
+        let plain_json = plain.to_json().to_string();
+        assert!(!plain_json.contains("variant"), "{plain_json}");
+        let reparsed = QuantSpec::parse(&plain_json).unwrap();
+        assert_eq!(reparsed.variant, AttnVariant::Vanilla);
+        assert_eq!(reparsed.spec_id(), plain.spec_id());
+
+        // non-default variants round-trip and change the identity
+        for (v, name) in [
+            (AttnVariant::ClippedSoftmax, "clipped_softmax"),
+            (AttnVariant::Gated, "gated"),
+        ] {
+            let spec = QuantSpec::new("w8a8", PolicySpec::uniform(8, 8)).with_variant(v);
+            let j = spec.to_json().to_string();
+            assert!(j.contains(&format!("\"variant\":\"{name}\"")), "{j}");
+            let rt = QuantSpec::parse(&j).unwrap();
+            assert_eq!(rt.variant, v);
+            assert_eq!(rt.spec_id(), spec.spec_id());
+            assert_ne!(spec.spec_id(), plain.spec_id());
+        }
+
+        // the two axes compose: a ViT clipped-softmax spec differs from
+        // both single-axis specs
+        let vit_csoft = QuantSpec::new("w8a8", PolicySpec::uniform(8, 8))
+            .with_architecture(Architecture::Vit)
+            .with_variant(AttnVariant::ClippedSoftmax);
+        let j = vit_csoft.to_json().to_string();
+        assert!(j.contains("\"architecture\":\"vit\""), "{j}");
+        assert!(j.contains("\"variant\":\"clipped_softmax\""), "{j}");
+        let rt = QuantSpec::parse(&j).unwrap();
+        assert_eq!(rt.variant, AttnVariant::ClippedSoftmax);
+        assert_eq!(rt.architecture, Architecture::Vit);
+
+        // malformed variants are rejected
+        assert!(AttnVariant::parse("softclip").is_err());
+        let bad = j.replace("clipped_softmax", "softclip");
         assert!(QuantSpec::parse(&bad).is_err());
     }
 

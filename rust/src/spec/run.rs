@@ -13,15 +13,15 @@ use anyhow::Result;
 use anyhow::bail;
 
 use super::QuantSpec;
-use crate::coordinator::calibrate::{calibrate_with_arch, CalibCfg};
-use crate::coordinator::eval::evaluate_arch;
-use crate::coordinator::experiments::load_ckpt_arch;
+use crate::coordinator::calibrate::{calibrate_with_var, CalibCfg};
+use crate::coordinator::eval::evaluate_var;
+use crate::coordinator::experiments::load_ckpt_var;
 use crate::coordinator::train::{qat, qat_deployed_params, QatCfg};
 use crate::coordinator::weights::{quantize_weights, AdaRoundCfg2, AdaRoundOpts};
-use crate::coordinator::{fwd_artifact, Ctx};
+use crate::coordinator::{fwd_artifact_var, Ctx};
 use crate::data::{task_spec, TaskSpec, TASKS};
 use crate::metrics::{glue_score, median};
-use crate::model::manifest::Architecture;
+use crate::model::manifest::{Architecture, AttnVariant};
 use crate::model::qconfig::{
     assemble_act_tensors, assemble_act_tensors_pool, ActQuantTensors, QuantPolicy,
 };
@@ -81,7 +81,7 @@ pub fn run_spec(ctx: &Ctx, spec: &QuantSpec) -> Result<SpecReport> {
     let mut names = Vec::with_capacity(tasks.len());
     let mut scores = Vec::with_capacity(tasks.len());
     for task in &tasks {
-        let params = load_ckpt_arch(ctx, task, spec.architecture)?;
+        let params = load_ckpt_var(ctx, task, spec.architecture, spec.variant)?;
         let score = run_spec_on(ctx, spec, task, &params)?;
         println!("  [{label}] {}: {score:.2}", task.name);
         names.push(task.name.to_string());
@@ -111,13 +111,13 @@ pub fn run_spec_on(
     }
     if spec.is_fp32() {
         let (qp, act) = assemble_once(ctx, spec, task, params, 0)?;
-        return evaluate_arch(ctx, task, spec.architecture, &qp, &act);
+        return evaluate_var(ctx, task, spec.architecture, spec.variant, &qp, &act);
     }
     let seeds = spec.seeds.max(1);
     let mut scores = Vec::with_capacity(seeds);
     for seed in 0..seeds {
         let (qp, act) = assemble_once(ctx, spec, task, params, seed)?;
-        scores.push(evaluate_arch(ctx, task, spec.architecture, &qp, &act)?);
+        scores.push(evaluate_var(ctx, task, spec.architecture, spec.variant, &qp, &act)?);
     }
     Ok(median(&scores))
 }
@@ -144,11 +144,19 @@ fn run_qat_spec_on(
             spec.architecture.name()
         );
     }
+    if spec.variant != AttnVariant::Vanilla {
+        bail!(
+            "spec {}: QAT requires train-step artifacts, which exist only for the vanilla attention variant (got {})",
+            spec.display_name(),
+            spec.variant.name()
+        );
+    }
     let info = ctx.model_info(task)?;
-    let calib = calibrate_with_arch(
+    let calib = calibrate_with_var(
         ctx,
         task,
         spec.architecture,
+        spec.variant,
         params,
         &CalibCfg::default(),
         None,
@@ -168,10 +176,10 @@ fn run_qat_spec_on(
     let res = qat(ctx, task, params, &act, &cfg)?;
     let (qp, qact) = qat_deployed_params(info, &res, q.weight_bits, q.embed_bits)?;
     if q.act_enabled {
-        evaluate_arch(ctx, task, spec.architecture, &qp, &qact)
+        evaluate_var(ctx, task, spec.architecture, spec.variant, &qp, &qact)
     } else {
         let fp32_act = assemble_act_tensors(info, &QuantPolicy::fp32(), &BTreeMap::new())?;
-        evaluate_arch(ctx, task, spec.architecture, &qp, &fp32_act)
+        evaluate_var(ctx, task, spec.architecture, spec.variant, &qp, &fp32_act)
     }
 }
 
@@ -189,7 +197,7 @@ pub fn assemble_once(
     params: &Params,
     seed: usize,
 ) -> Result<(Params, ActQuantTensors)> {
-    let info = ctx.model_info_for(task, spec.architecture)?;
+    let info = ctx.model_info_var(task, spec.architecture, spec.variant)?;
     let policy = spec.policy.resolve(info);
     if spec.is_fp32() {
         let act = assemble_act_tensors(info, &policy, &BTreeMap::new())?;
@@ -208,8 +216,15 @@ pub fn assemble_once(
     };
     // the resolved policy rides along so mse_group / mse_tensor sites
     // get row-sampling trackers under any calibration estimator
-    let calib =
-        calibrate_with_arch(ctx, task, spec.architecture, params, &calib_cfg, Some(&policy))?;
+    let calib = calibrate_with_var(
+        ctx,
+        task,
+        spec.architecture,
+        spec.variant,
+        params,
+        &calib_cfg,
+        Some(&policy),
+    )?;
     let (qp, _) = quantize_weights(info, params, &policy, Some(&calib), &ada)?;
     let act = assemble_act_tensors_pool(info, &policy, &calib.trackers, &ctx.pool)?;
     Ok((qp, act))
@@ -244,14 +259,14 @@ pub fn assemble_for_serving(
     spec: &QuantSpec,
     task: &TaskSpec,
 ) -> Result<AssembledModel> {
-    let params = load_ckpt_arch(ctx, task, spec.architecture)?;
+    let params = load_ckpt_var(ctx, task, spec.architecture, spec.variant)?;
     let (qp, act) = assemble_once(ctx, spec, task, &params, 0)?;
-    let info = ctx.model_info_for(task, spec.architecture)?;
+    let info = ctx.model_info_var(task, spec.architecture, spec.variant)?;
     let b = crate::coordinator::EVAL_BATCH;
     Ok(AssembledModel {
         spec_id: spec.spec_id(),
         task: task.name.to_string(),
-        artifact: fwd_artifact(spec.architecture, ctx.head(task), b),
+        artifact: fwd_artifact_var(spec.architecture, spec.variant, ctx.head(task), b),
         params: qp,
         act,
         batch: b,

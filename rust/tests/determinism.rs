@@ -30,7 +30,7 @@ use tq::coordinator::sweep::{
 };
 use tq::coordinator::{batch_input_lits, diagnostics, eval, Ctx, EVAL_BATCH};
 use tq::data::{make_batch, task_spec, TaskSpec};
-use tq::model::manifest::Architecture;
+use tq::model::manifest::{Architecture, AttnVariant};
 use tq::model::qconfig::{
     assemble_act_tensors, assemble_act_tensors_pool, site_lane_params_pool, QuantPolicy,
     SiteCfg,
@@ -471,6 +471,67 @@ fn diag_taps_batched_match_serial_run_diag() {
         serial.extend(taps.iter().map(|(s, t)| (s.clone(), bits(t.data()))));
     }
     assert_eq!(batched[0], serial, "batched taps diverged from the serial run_diag loop");
+}
+
+/// The outlier-diagnostics pass (`repro diag --outliers` — streaming
+/// ∞-norm / kurtosis / top-lane stats over batched `collect_taps_var`
+/// tensors) must produce bit-identical statistics on a 1-thread and an
+/// 8-thread `Ctx`, for the vanilla family of both architectures and for
+/// the attention-variant families. Tap collection reassembles in
+/// sequence order and the accumulator folds in strict element order, so
+/// thread count must never leak into a single stat bit.
+#[test]
+fn outlier_stats_are_parallel_deterministic_across_families() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `repro gen-artifacts`)");
+        return;
+    }
+    let task = task_spec("sst2").unwrap();
+    for (arch, variant) in [
+        (Architecture::Bert, AttnVariant::Vanilla),
+        (Architecture::Bert, AttnVariant::ClippedSoftmax),
+        (Architecture::Vit, AttnVariant::Vanilla),
+        (Architecture::Vit, AttnVariant::Gated),
+    ] {
+        let mut per_thread: Vec<Vec<(String, u64, u32, u64, u64, usize)>> = Vec::new();
+        for threads in [1usize, 8] {
+            let ctx = Ctx::new("artifacts", "/tmp/tq_det_ckpt", "/tmp/tq_det_results")
+                .unwrap()
+                .with_pool(Pool::new(threads));
+            let Ok(info) = ctx.model_info_var(&task, arch, variant) else {
+                eprintln!(
+                    "SKIP: artifacts lack the {arch:?}/{variant:?} family \
+                     (regenerate with `repro gen-artifacts`)"
+                );
+                return;
+            };
+            let params = Params::init(info, 37);
+            let run =
+                diagnostics::collect_taps_var(&ctx, &task, arch, variant, &params, 5).unwrap();
+            assert_eq!(run.per_seq.len(), 5);
+            let stats = tq::analysis::outlier_stats(&run).unwrap();
+            assert!(!stats.is_empty(), "{arch:?}/{variant:?}: no tap sites");
+            per_thread.push(
+                stats
+                    .iter()
+                    .map(|(site, s)| {
+                        (
+                            site.clone(),
+                            s.kurtosis.to_bits(),
+                            s.inf_norm.to_bits(),
+                            s.mean.to_bits(),
+                            s.top_share.to_bits(),
+                            s.top_lane,
+                        )
+                    })
+                    .collect(),
+            );
+        }
+        assert_eq!(
+            per_thread[0], per_thread[1],
+            "{arch:?}/{variant:?}: outlier stats diverged across thread counts"
+        );
+    }
 }
 
 /// The persistent pool survives sustained small-batch traffic and

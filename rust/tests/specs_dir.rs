@@ -7,7 +7,7 @@
 use std::collections::BTreeSet;
 use std::path::PathBuf;
 
-use tq::model::manifest::Architecture;
+use tq::model::manifest::{Architecture, AttnVariant};
 use tq::spec::{presets, QuantSpec};
 
 fn specs_dir() -> PathBuf {
@@ -57,6 +57,17 @@ const PINNED_VIT: [(&str, &str); 4] = [
     ("vit_peg_k8_permute", "799441697ba89a51"),
 ];
 
+/// Attention-variant sweep cells (clipped softmax / gated attention, the
+/// outlier-suppressing model variants): W8A8 per-tensor on each variant
+/// family. Like the ViT cells these are not presets, but their ids key
+/// shard membership and `--compare` baselines, so they are pinned.
+const PINNED_VARIANT: [(&str, &str, Architecture, AttnVariant); 4] = [
+    ("csoft_w8a8", "ef4997580d9b8457", Architecture::Bert, AttnVariant::ClippedSoftmax),
+    ("gate_w8a8", "09b88fb708393c04", Architecture::Bert, AttnVariant::Gated),
+    ("vit_csoft_w8a8", "58a6230501c2c391", Architecture::Vit, AttnVariant::ClippedSoftmax),
+    ("vit_gate_w8a8", "3374c1028387e5b6", Architecture::Vit, AttnVariant::Gated),
+];
+
 #[test]
 fn every_preset_has_a_spec_file_with_pinned_id() {
     assert_eq!(
@@ -86,11 +97,38 @@ fn vit_cells_parse_target_vit_and_pin_their_ids() {
 }
 
 #[test]
+fn variant_cells_parse_target_their_family_and_pin_their_ids() {
+    for (name, want_id, arch, variant) in PINNED_VARIANT {
+        let spec = load(name);
+        assert_eq!(spec.architecture, arch, "{name}");
+        assert_eq!(spec.variant, variant, "{name}");
+        assert_eq!(spec.spec_id(), want_id, "spec_id drifted for {name}");
+        // the canonical form keeps the variant key (non-default), and the
+        // policy body is byte-identical to the vanilla w8a8 cell's — only
+        // the model-family keys differ
+        let canon = spec.to_json().to_string();
+        assert!(
+            canon.contains(&format!("\"variant\":\"{}\"", variant.name())),
+            "{name}: {canon}"
+        );
+        let mut vanilla = spec.clone();
+        vanilla.architecture = Architecture::Bert;
+        vanilla.variant = AttnVariant::Vanilla;
+        assert_eq!(
+            vanilla.named("w8a8").spec_id(),
+            "37410af9dda7ba42",
+            "{name}: policy body drifted from the w8a8 baseline"
+        );
+    }
+}
+
+#[test]
 fn specs_dir_is_exactly_the_pinned_set_and_round_trips() {
     let mut expect: BTreeSet<String> = PINNED
         .iter()
         .chain(PINNED_VIT.iter())
         .map(|(n, _)| format!("{n}.json"))
+        .chain(PINNED_VARIANT.iter().map(|(n, _, _, _)| format!("{n}.json")))
         .collect();
     let mut ids = BTreeSet::new();
     for entry in std::fs::read_dir(specs_dir()).unwrap() {
